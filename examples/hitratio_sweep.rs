@@ -1,0 +1,40 @@
+//! Hit-ratio sweep (the Fig 3 / Table 7 series) with CSV output for
+//! plotting: cache size vs hit ratio for LRU and H-SVM-LRU at both block
+//! sizes, plus the per-size improvement ratio.
+//!
+//! Run: `cargo run --release --example hitratio_sweep [seed] > fig3.csv`
+
+use anyhow::Result;
+
+use h_svm_lru::config::SvmConfig;
+use h_svm_lru::experiments::{fig3, table7};
+use h_svm_lru::svm::KernelKind;
+
+fn main() -> Result<()> {
+    h_svm_lru::util::logger::init_from_env();
+    let seed: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20230101);
+    let artifacts = std::path::Path::new("artifacts");
+    let backend = if h_svm_lru::runtime::artifacts::available(artifacts, KernelKind::Rbf) {
+        "hlo"
+    } else {
+        "rust"
+    };
+    let svm_cfg = SvmConfig { backend: backend.into(), ..Default::default() };
+
+    let points = fig3::run(&svm_cfg, seed)?;
+    // CSV to stdout (plot-ready), human tables to stderr.
+    print!("{}", fig3::render(&points).to_csv());
+    eprintln!("{}", fig3::render(&points).render());
+    eprintln!("{}", table7::render(&points).render());
+
+    // Sanity: the paper's qualitative claims.
+    let small64 = points
+        .iter()
+        .find(|p| p.block_size == 64 * 1024 * 1024 && p.cache_blocks == 6)
+        .expect("cache size 6 present");
+    eprintln!(
+        "IR at the smallest cache (paper: largest): {:.1}%",
+        small64.improvement_ratio() * 100.0
+    );
+    Ok(())
+}

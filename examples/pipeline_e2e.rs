@@ -1,0 +1,91 @@
+//! End-to-end driver: the full system on a real small workload.
+//!
+//! Exercises every layer at once:
+//!   * L1/L2 — the AOT-compiled JAX/Pallas SVM (train + predict artifacts),
+//!   * runtime — PJRT CPU execution from the Rust request path,
+//!   * L3 — HDFS + MapReduce simulation, the H-SVM-LRU coordinator,
+//!     workload suites W1–W6 with shared inputs and shuffle pollution.
+//!
+//! Reports the paper's headline metric: normalized run time per workload
+//! under H-NoCache / H-LRU / H-SVM-LRU (Fig 5) plus hit ratios, and the
+//! resulting average improvements. The run is recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example pipeline_e2e`
+//! (add `RUST_LOG=info` for classifier telemetry; pass `rust` as argv[1]
+//! to force the SMO fallback backend).
+
+use anyhow::Result;
+
+use h_svm_lru::config::{ClusterConfig, SvmConfig};
+use h_svm_lru::experiments::fig5;
+use h_svm_lru::experiments::{run_workload, Scenario};
+use h_svm_lru::svm::KernelKind;
+use h_svm_lru::util::table::Table;
+use h_svm_lru::workload::WORKLOADS;
+
+fn main() -> Result<()> {
+    h_svm_lru::util::logger::init_from_env();
+    let backend_arg = std::env::args().nth(1);
+    let artifacts = std::path::Path::new("artifacts");
+    let backend = match backend_arg.as_deref() {
+        Some(b) => b.to_string(),
+        None if h_svm_lru::runtime::artifacts::available(artifacts, KernelKind::Rbf) => {
+            "hlo".to_string()
+        }
+        None => {
+            eprintln!("note: artifacts/ missing, using the rust SMO backend");
+            "rust".to_string()
+        }
+    };
+    let svm_cfg = SvmConfig { backend, ..Default::default() };
+    let scale = 0.05; // Table 8 inputs scaled 1/20 (254-447 GB -> 12-22 GB)
+    let seed = 20230101;
+
+    println!("pipeline_e2e: workloads W1-W6, scale {scale}, svm backend {}", svm_cfg.backend);
+    println!("cluster: 9 DataNodes, 1.5GB cache each, 128MB blocks (Table 6)\n");
+
+    let mut table = Table::new(vec![
+        "workload",
+        "apps",
+        "H-NoCache (s)",
+        "H-LRU (s)",
+        "H-SVM-LRU (s)",
+        "LRU norm",
+        "SVM norm",
+        "SVM hit ratio",
+    ]);
+    let mut points = Vec::new();
+    for def in &WORKLOADS {
+        let cfg = ClusterConfig { seed, ..Default::default() };
+        let nocache = run_workload(def, &cfg, &Scenario::NoCache, &svm_cfg, scale)?;
+        let lru = run_workload(def, &cfg, &Scenario::Policy("lru".into()), &svm_cfg, scale)?;
+        let svm = run_workload(def, &cfg, &Scenario::SvmLru, &svm_cfg, scale)?;
+        let base = nocache.makespan_s.max(1e-9);
+        table.add_row(vec![
+            def.name.to_string(),
+            def.apps.iter().map(|a| a.name()).collect::<Vec<_>>().join("+"),
+            format!("{:.1}", nocache.makespan_s),
+            format!("{:.1}", lru.makespan_s),
+            format!("{:.1}", svm.makespan_s),
+            format!("{:.4}", lru.makespan_s / base),
+            format!("{:.4}", svm.makespan_s / base),
+            format!("{:.3}", svm.hit_ratio),
+        ]);
+        points.push(fig5::WorkloadPoint {
+            name: def.name,
+            nocache_s: nocache.makespan_s,
+            lru_norm: lru.makespan_s / base,
+            svm_lru_norm: svm.makespan_s / base,
+            lru_hit_ratio: lru.hit_ratio,
+            svm_hit_ratio: svm.hit_ratio,
+        });
+    }
+    print!("{}", table.render());
+    let (lru_impr, svm_impr, over) = fig5::summary(&points);
+    println!(
+        "\nheadline: avg improvement vs H-NoCache — H-LRU {lru_impr:.2}%, \
+         H-SVM-LRU {svm_impr:.2}% ({over:.2}% over H-LRU)"
+    );
+    println!("paper:    H-LRU 11.33%, H-SVM-LRU 16.16% (4.83% over H-LRU)");
+    Ok(())
+}

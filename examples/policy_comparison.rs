@@ -1,0 +1,43 @@
+//! Policy-comparison ablation: every replacement strategy from the paper's
+//! Table 1 survey (plus FIFO and H-SVM-LRU itself) replayed over the same
+//! seeded request trace at several cache sizes.
+//!
+//! Run: `cargo run --release --example policy_comparison [seed]`
+
+use anyhow::Result;
+
+use h_svm_lru::config::SvmConfig;
+use h_svm_lru::experiments::policies;
+use h_svm_lru::svm::KernelKind;
+use h_svm_lru::util::table::Table;
+
+fn main() -> Result<()> {
+    h_svm_lru::util::logger::init_from_env();
+    let seed: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(7);
+    let artifacts = std::path::Path::new("artifacts");
+    let backend = if h_svm_lru::runtime::artifacts::available(artifacts, KernelKind::Rbf) {
+        "hlo"
+    } else {
+        "rust"
+    };
+    let svm_cfg = SvmConfig { backend: backend.into(), ..Default::default() };
+
+    for cache_blocks in [6u64, 12, 24] {
+        let results = policies::run(&svm_cfg, seed, cache_blocks)?;
+        let mut t = Table::new(vec!["rank", "policy", "hit ratio", "byte hit", "evictions"]);
+        for (i, r) in results.iter().enumerate() {
+            t.add_row(vec![
+                (i + 1).to_string(),
+                r.policy.clone(),
+                format!("{:.4}", r.hit_ratio),
+                format!("{:.4}", r.byte_hit_ratio),
+                r.evictions.to_string(),
+            ]);
+        }
+        println!("\n=== cache = {cache_blocks} blocks (64MB each), seed {seed} ===");
+        print!("{}", t.render());
+        let hsvm = results.iter().position(|r| r.policy == "h-svm-lru").unwrap() + 1;
+        println!("h-svm-lru rank: {hsvm}/{}", results.len());
+    }
+    Ok(())
+}

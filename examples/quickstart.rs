@@ -1,0 +1,66 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Provisions a one-node cluster, replays the paper's Fig 3 request trace
+//! through LRU and H-SVM-LRU coordinators, and prints the hit ratios.
+//! Uses the AOT HLO artifacts when present (run `make artifacts`), falling
+//! back to the in-process SMO backend otherwise.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use h_svm_lru::config::SvmConfig;
+use h_svm_lru::experiments::common::provision_fig3_cluster;
+use h_svm_lru::experiments::{make_coordinator, replay_trace_two_pass, Scenario};
+use h_svm_lru::svm::KernelKind;
+use h_svm_lru::util::bytes::MB;
+use h_svm_lru::workload::fig3_trace;
+
+fn main() -> Result<()> {
+    h_svm_lru::util::logger::init_from_env();
+
+    // Pick the backend: HLO artifacts if built, else the SMO fallback.
+    let artifacts = std::path::Path::new("artifacts");
+    let backend = if h_svm_lru::runtime::artifacts::available(artifacts, KernelKind::Rbf) {
+        "hlo"
+    } else {
+        eprintln!("note: artifacts/ not found, using --svm-backend rust (run `make artifacts`)");
+        "rust"
+    };
+    let svm_cfg = SvmConfig { backend: backend.into(), ..Default::default() };
+
+    let block_size = 64 * MB;
+    let cache_blocks = 8;
+    let seed = 42;
+    let trace = fig3_trace(block_size, seed);
+    println!(
+        "replaying {} requests (2GB shared input + shuffle pollution), cache = {} blocks",
+        trace.len(),
+        cache_blocks
+    );
+
+    for scenario in [Scenario::Policy("lru".to_string()), Scenario::SvmLru] {
+        let (_cfg, cluster) = provision_fig3_cluster(block_size, cache_blocks, seed);
+        let mut coord = make_coordinator(cluster, &scenario, &svm_cfg)?;
+        let hit_ratio = replay_trace_two_pass(&mut coord, &trace)?;
+        println!(
+            "{:<12} hit ratio {:.4}  (hits {:4}  misses {:4}  evictions {:4})",
+            scenario.label(),
+            hit_ratio,
+            coord.stats.hits,
+            coord.stats.misses,
+            coord.stats.evictions
+        );
+        if scenario == Scenario::SvmLru {
+            let bs = coord.batcher_stats();
+            println!(
+                "  classifier[{}]: {} trainings, {} queries -> {} backend calls",
+                coord.backend_name(),
+                coord.pipeline.trainings,
+                bs.queries,
+                bs.backend_calls
+            );
+        }
+    }
+    Ok(())
+}

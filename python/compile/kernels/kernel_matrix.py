@@ -1,0 +1,127 @@
+"""L1 — Pallas Gram-matrix kernels for the H-SVM-LRU classifier.
+
+The compute hot-spot of the paper's SVM (train *and* predict) is the kernel
+(Gram) matrix K[i, j] = k(x_i, z_j) over the feature vectors of data blocks.
+This module implements it as a tiled Pallas kernel:
+
+  * the inner product block X_tile @ Z_tile^T is MXU-shaped (a small matmul),
+  * the elementwise kernel transform (exp / tanh / identity) is VPU work,
+  * BlockSpec tiles keep one (TM, D) x (TN, D) pair plus the (TM, TN) output
+    tile resident in VMEM.
+
+TPU hardware adaptation (paper is CPU-only; see DESIGN.md §Hardware-Adaptation):
+instead of porting a CPU loop we tile for VMEM and feed the MXU with the
+squared-distance expansion ||x||^2 - 2 x.z + ||z||^2 so the O(TM*TN*D) work is
+a single dot per tile pair.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; real-TPU numbers are estimated analytically in
+DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Kernel-function identifiers (must match rust/src/svm/kernel.rs).
+KERNEL_LINEAR = "linear"
+KERNEL_RBF = "rbf"
+KERNEL_SIGMOID = "sigmoid"
+KERNELS = (KERNEL_LINEAR, KERNEL_RBF, KERNEL_SIGMOID)
+
+# Default tile sizes. TM=TN=128 matches the MXU systolic array edge; for the
+# small shapes used by the AOT artifacts (N=256) this still divides evenly.
+TILE_M = 128
+TILE_N = 128
+
+
+def _apply_kernel_fn(dots, sq_x, sq_z, kind: str, gamma: float, coef0: float):
+    """Elementwise kernel transform applied to a tile of inner products.
+
+    dots: (TM, TN) tile of X @ Z^T
+    sq_x: (TM, 1) tile of ||x||^2,  sq_z: (1, TN) tile of ||z||^2
+    """
+    if kind == KERNEL_LINEAR:
+        return dots
+    if kind == KERNEL_RBF:
+        # ||x - z||^2 = ||x||^2 - 2 x.z + ||z||^2 ; clamp for fp safety.
+        sq_dist = jnp.maximum(sq_x - 2.0 * dots + sq_z, 0.0)
+        return jnp.exp(-gamma * sq_dist)
+    if kind == KERNEL_SIGMOID:
+        return jnp.tanh(gamma * dots + coef0)
+    raise ValueError(f"unknown kernel kind: {kind!r}")
+
+
+def _gram_tile_kernel(x_ref, z_ref, o_ref, *, kind: str, gamma: float,
+                      coef0: float):
+    """Pallas body: one (TM, TN) output tile from (TM, D) and (TN, D) inputs."""
+    x = x_ref[...]  # (TM, D) in VMEM
+    z = z_ref[...]  # (TN, D) in VMEM
+    # MXU-shaped contraction. preferred_element_type pins f32 accumulation so
+    # a bf16 input variant keeps full-precision partial sums.
+    dots = jax.lax.dot_general(
+        x, z,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    sq_x = jnp.sum(x * x, axis=1, keepdims=True)       # (TM, 1), VPU
+    sq_z = jnp.sum(z * z, axis=1, keepdims=True).T     # (1, TN), VPU
+    o_ref[...] = _apply_kernel_fn(dots, sq_x, sq_z, kind, gamma, coef0)
+
+
+def _pick_tile(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (tiles must divide)."""
+    t = min(preferred, dim)
+    while dim % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "gamma", "coef0", "tile_m", "tile_n", "interpret"))
+def gram_matrix(x, z, *, kind: str = KERNEL_RBF, gamma: float = 0.5,
+                coef0: float = 0.0, tile_m: int = TILE_M, tile_n: int = TILE_N,
+                interpret: bool = True):
+    """Compute K[i, j] = k(x_i, z_j) with a tiled Pallas kernel.
+
+    x: (M, D) f32, z: (N, D) f32  ->  (M, N) f32.
+
+    The grid is (M/tm, N/tn); each program reads one row-tile of x and one
+    row-tile of z (both full-D) and writes one output tile. gamma/coef0 are
+    baked as compile-time constants — the AOT artifacts are per-kernel-variant
+    so the request path never passes hyper-parameters.
+    """
+    m, d = x.shape
+    n, d2 = z.shape
+    if d != d2:
+        raise ValueError(f"feature dims differ: {d} vs {d2}")
+    tm = _pick_tile(m, tile_m)
+    tn = _pick_tile(n, tile_n)
+    kernel = functools.partial(
+        _gram_tile_kernel, kind=kind, gamma=float(gamma), coef0=float(coef0))
+    return pl.pallas_call(
+        kernel,
+        grid=(m // tm, n // tn),
+        in_specs=[
+            pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), z.astype(jnp.float32))
+
+
+def vmem_tile_bytes(tile_m: int, tile_n: int, d: int,
+                    dtype_bytes: int = 4) -> int:
+    """VMEM footprint of one program instance (inputs + output tile).
+
+    Used by tests and by DESIGN.md §9 to check the tiles stay far below the
+    ~16 MiB VMEM budget of a TPU core.
+    """
+    return dtype_bytes * (tile_m * d + tile_n * d + tile_m * tile_n)

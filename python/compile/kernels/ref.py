@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the L1 Pallas Gram-matrix kernel.
+
+No pallas, no tiling — the straightforward dense formulas. pytest compares
+kernels.kernel_matrix.gram_matrix against these with assert_allclose, and the
+L2 model can be flipped to the reference path (model.py use_pallas=False) to
+isolate kernel bugs from model bugs.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gram_matrix_ref(x, z, *, kind: str = "rbf", gamma: float = 0.5,
+                    coef0: float = 0.0):
+    """K[i, j] = k(x_i, z_j); x: (M, D), z: (N, D) -> (M, N) f32."""
+    x = x.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    dots = x @ z.T
+    if kind == "linear":
+        return dots
+    if kind == "rbf":
+        sq_x = jnp.sum(x * x, axis=1, keepdims=True)
+        sq_z = jnp.sum(z * z, axis=1, keepdims=True).T
+        sq_dist = jnp.maximum(sq_x - 2.0 * dots + sq_z, 0.0)
+        return jnp.exp(-gamma * sq_dist)
+    if kind == "sigmoid":
+        return jnp.tanh(gamma * dots + coef0)
+    raise ValueError(f"unknown kernel kind: {kind!r}")

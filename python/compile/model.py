@@ -1,0 +1,148 @@
+"""L2 — JAX SVM model (train + predict) for the H-SVM-LRU classifier.
+
+The paper trains a two-class SVM ("reused in the future" vs "not reused") on
+features extracted from the Hadoop job-history server and consults it on every
+cache decision (Algorithm 1). Here the model is written in JAX, with the Gram
+matrix computed by the L1 Pallas kernel, and AOT-lowered by aot.py to HLO text
+that the Rust coordinator executes through PJRT.
+
+Trainer: projected-gradient ascent on the SVM dual with the augmented-kernel
+bias trick.
+
+  maximize  W(a) = sum(a) - 1/2 a^T Q a,   Q = (y y^T) * (K + 1)
+  s.t.      0 <= a_i <= C,   a_i = 0 for padded rows (mask_i = 0)
+
+Adding the constant 1 to the kernel folds the bias into the weight vector
+(standard "augmented" formulation), which removes the sum(a*y) = 0 equality
+constraint, so the feasible set is a box and projection is a clip. The
+per-coordinate step 1/Q_ii preconditions the ascent; a fixed number of
+lax.fori_loop iterations keeps the lowered HLO free of dynamic shapes.
+
+Everything is fixed-shape: N training rows, D features, B query rows; Rust
+pads with mask=0 rows. Hyper-parameters are baked per AOT artifact variant
+(one pair of artifacts per kernel function: linear / rbf / sigmoid), matching
+the paper's Table 5 kernel-selection experiment.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import kernel_matrix as km
+from .kernels.ref import gram_matrix_ref
+
+# AOT artifact shapes (must match rust/src/runtime/artifacts.rs).
+N_TRAIN = 256
+N_FEATURES = 8
+N_PREDICT_BATCH = 64
+
+# Baked hyper-parameters (one artifact family; see aot.py variants).
+DEFAULT_C = 4.0
+DEFAULT_GAMMA = 0.5
+DEFAULT_COEF0 = 0.0
+DEFAULT_ITERS = 300
+
+
+class SvmParams(NamedTuple):
+    """Trained dual parameters, as returned by the train artifact."""
+    alpha: jax.Array  # (N,) box-constrained dual coefficients
+    bias: jax.Array   # () implicit bias sum(alpha * y) from the augmented trick
+
+
+def _gram(x, z, *, kind, gamma, coef0, use_pallas):
+    if use_pallas:
+        return km.gram_matrix(x, z, kind=kind, gamma=gamma, coef0=coef0)
+    return gram_matrix_ref(x, z, kind=kind, gamma=gamma, coef0=coef0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "c", "gamma", "coef0", "iters", "use_pallas"))
+def svm_train(x, y, mask, *, kind: str = "rbf", c: float = DEFAULT_C,
+              gamma: float = DEFAULT_GAMMA, coef0: float = DEFAULT_COEF0,
+              iters: int = DEFAULT_ITERS, use_pallas: bool = True) -> SvmParams:
+    """Train the dual SVM.
+
+    x: (N, D) f32 normalized features; y: (N,) f32 labels in {-1, +1};
+    mask: (N,) f32 in {0, 1}, 0 marks padding rows.
+    Returns SvmParams(alpha (N,), bias ()).
+    """
+    x = x.astype(jnp.float32)
+    mask = mask.astype(jnp.float32)
+    y = y.astype(jnp.float32) * mask
+    k = _gram(x, x, kind=kind, gamma=gamma, coef0=coef0,
+              use_pallas=use_pallas)
+    # Augmented kernel folds the bias in; padded rows are neutralized through
+    # y (zeroed above), so Q has zero rows/cols at padding.
+    q = (y[:, None] * y[None, :]) * (k + 1.0)
+    # Global step from a power-iteration estimate of lambda_max(Q): the dual
+    # objective is a concave quadratic, so ascent with step 1/lambda_max is
+    # monotone (a per-coordinate 1/Q_ii Jacobi step oscillates on the
+    # near-rank-one Q that RBF produces for tightly clustered features).
+    def power_body(_, v):
+        w = q @ v
+        return w / jnp.maximum(jnp.linalg.norm(w), 1e-12)
+
+    v0 = mask / jnp.maximum(jnp.linalg.norm(mask), 1e-12)
+    v = jax.lax.fori_loop(0, 16, power_body, v0)
+    lam_max = jnp.maximum(jnp.vdot(v, q @ v), 1e-6)
+    # Nesterov-accelerated projected gradient (FISTA): the plain 1/lam step
+    # crawls on ill-conditioned Q; acceleration gets within float tolerance
+    # of the optimum in the fixed iteration budget.
+    step = 1.0 / (1.05 * lam_max)
+
+    def body(i, carry):
+        alpha, z_prev, t = carry
+        grad = 1.0 - q @ z_prev
+        alpha_new = jnp.clip(z_prev + step * grad, 0.0, c) * mask
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        z_new = alpha_new + ((t - 1.0) / t_new) * (alpha_new - alpha)
+        return alpha_new, z_new * mask, t_new
+
+    alpha0 = jnp.zeros_like(y)
+    alpha, _, _ = jax.lax.fori_loop(
+        0, iters, body, (alpha0, alpha0, jnp.float32(1.0)))
+    bias = jnp.sum(alpha * y)
+    return SvmParams(alpha=alpha, bias=bias)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "gamma", "coef0", "use_pallas"))
+def svm_predict(q, x, y, alpha, mask, bias, *, kind: str = "rbf",
+                gamma: float = DEFAULT_GAMMA, coef0: float = DEFAULT_COEF0,
+                use_pallas: bool = True):
+    """Decision scores for a batch of queries.
+
+    q: (B, D) queries; x/y/alpha/mask: training set and trained duals;
+    bias: () from svm_train. Returns (B,) f32 scores; class = sign(score),
+    class 1 ("reused in the future") iff score > 0.
+    """
+    q = q.astype(jnp.float32)
+    y = y.astype(jnp.float32) * mask.astype(jnp.float32)
+    kq = _gram(q, x.astype(jnp.float32), kind=kind, gamma=gamma, coef0=coef0,
+               use_pallas=use_pallas)  # (B, N)
+    return kq @ (alpha * y) + bias
+
+
+def train_fn_for_aot(kind: str, *, c: float = DEFAULT_C,
+                     gamma: float = DEFAULT_GAMMA, coef0: float = DEFAULT_COEF0,
+                     iters: int = DEFAULT_ITERS):
+    """Concrete (x, y, mask) -> (alpha, bias) function for jax.jit().lower()."""
+    def fn(x, y, mask):
+        params = svm_train(x, y, mask, kind=kind, c=c, gamma=gamma,
+                           coef0=coef0, iters=iters, use_pallas=True)
+        return (params.alpha, params.bias)
+    return fn
+
+
+def predict_fn_for_aot(kind: str, *, gamma: float = DEFAULT_GAMMA,
+                       coef0: float = DEFAULT_COEF0):
+    """Concrete (q, x, y, alpha, mask, bias) -> (scores,) function for AOT."""
+    def fn(q, x, y, alpha, mask, bias):
+        return (svm_predict(q, x, y, alpha, mask, bias, kind=kind,
+                            gamma=gamma, coef0=coef0, use_pallas=True),)
+    return fn

@@ -1,0 +1,82 @@
+"""AOT pipeline tests: HLO-text emission, manifest, and determinism."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    for kind in ("rbf", "linear"):
+        for stage, lower in (("train", aot.lower_train),
+                             ("predict", aot.lower_predict)):
+            text = aot.to_hlo_text(lower(kind))
+            (out / f"svm_{stage}_{kind}.hlo.txt").write_text(text)
+    aot.write_manifest(str(out))
+    return out
+
+
+def test_hlo_text_structure(emitted):
+    train = (emitted / "svm_train_rbf.hlo.txt").read_text()
+    predict = (emitted / "svm_predict_rbf.hlo.txt").read_text()
+    for text in (train, predict):
+        assert "ENTRY" in text, "not HLO text"
+        assert "HloModule" in text
+    # train: 3 params (x, y, mask); predict: 6 params — count the Arg_k
+    # parameters of the ENTRY computation only (inner while/fusion bodies
+    # have their own numbering).
+    def entry_arity(text):
+        header = next(l for l in text.splitlines() if "entry_computation_layout" in l)
+        sig = header.split("entry_computation_layout={(", 1)[1].split(")->")[0]
+        return sig.count("f32[")
+
+    assert entry_arity(train) == 3
+    assert entry_arity(predict) == 6
+    # fixed shapes baked in
+    assert f"f32[{model.N_TRAIN},{model.N_FEATURES}]" in train
+    assert f"f32[{model.N_PREDICT_BATCH},{model.N_FEATURES}]" in predict
+
+
+def test_emission_is_deterministic():
+    a = aot.to_hlo_text(aot.lower_predict("rbf"))
+    b = aot.to_hlo_text(aot.lower_predict("rbf"))
+    assert a == b
+
+
+def test_kernel_variants_differ():
+    rbf = aot.to_hlo_text(aot.lower_predict("rbf"))
+    lin = aot.to_hlo_text(aot.lower_predict("linear"))
+    assert rbf != lin
+    assert "exponential" in rbf  # RBF exp() survives lowering
+    assert "exponential" not in lin
+
+
+def test_manifest_contents(emitted):
+    text = (emitted / "manifest.txt").read_text()
+    entries = dict(
+        line.split("=", 1) for line in text.splitlines()
+        if line and not line.startswith("#"))
+    assert int(entries["n_train"]) == model.N_TRAIN
+    assert int(entries["n_features"]) == model.N_FEATURES
+    assert int(entries["n_predict_batch"]) == model.N_PREDICT_BATCH
+    assert float(entries["gamma"]) == model.DEFAULT_GAMMA
+    assert "rbf" in entries["kernels"].split(",")
+
+
+def test_cli_emits_all_files(tmp_path):
+    """End-to-end `python -m compile.aot` as the Makefile invokes it."""
+    out = tmp_path / "arts"
+    proc = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--kinds", "rbf"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr
+    assert (out / "svm_train_rbf.hlo.txt").exists()
+    assert (out / "svm_predict_rbf.hlo.txt").exists()
+    assert (out / "manifest.txt").exists()

@@ -1,0 +1,118 @@
+"""L1 tests: Pallas Gram-matrix kernel vs the pure-jnp oracle.
+
+hypothesis sweeps shapes (including tile-divisibility edge cases), dtypes and
+hyper-parameters; every case is checked with assert_allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import kernel_matrix as km
+from compile.kernels.ref import gram_matrix_ref
+
+KINDS = list(km.KERNELS)
+
+
+def rand(shape, seed, dtype=np.float32, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_matches_ref_basic(kind):
+    x, z = rand((32, 8), 1), rand((16, 8), 2)
+    got = km.gram_matrix(x, z, kind=kind)
+    want = gram_matrix_ref(x, z, kind=kind)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_matches_ref_artifact_shapes(kind):
+    """Exactly the shapes baked into the AOT artifacts."""
+    x, q = rand((256, 8), 3), rand((64, 8), 4)
+    np.testing.assert_allclose(
+        km.gram_matrix(x, x, kind=kind), gram_matrix_ref(x, x, kind=kind),
+        rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        km.gram_matrix(q, x, kind=kind), gram_matrix_ref(q, x, kind=kind),
+        rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    n=st.integers(1, 96),
+    d=st.integers(1, 24),
+    kind=st.sampled_from(KINDS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_hypothesis_shapes(m, n, d, kind, seed):
+    """Arbitrary (non-tile-aligned) shapes must still agree with the oracle."""
+    x, z = rand((m, d), seed), rand((n, d), seed + 1)
+    got = km.gram_matrix(x, z, kind=kind)
+    want = gram_matrix_ref(x, z, kind=kind)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    gamma=st.floats(1e-3, 8.0),
+    coef0=st.floats(-2.0, 2.0),
+    kind=st.sampled_from(KINDS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matches_ref_hypothesis_params(gamma, coef0, kind, seed):
+    x, z = rand((40, 8), seed, scale=0.5), rand((24, 8), seed + 7, scale=0.5)
+    got = km.gram_matrix(x, z, kind=kind, gamma=gamma, coef0=coef0)
+    want = gram_matrix_ref(x, z, kind=kind, gamma=gamma, coef0=coef0)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       dtype=st.sampled_from([np.float32, np.float64, np.int32]))
+def test_dtype_coercion(seed, dtype):
+    """Inputs of any numeric dtype are computed in f32 like the oracle."""
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal((16, 8)) * 3).astype(dtype)
+    z = (rng.standard_normal((8, 8)) * 3).astype(dtype)
+    got = km.gram_matrix(x, z, kind="rbf", gamma=0.1)
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(
+        got, gram_matrix_ref(x, z, kind="rbf", gamma=0.1),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_rbf_properties():
+    """RBF Gram: symmetric, unit diagonal, values in (0, 1]."""
+    x = rand((48, 8), 11, scale=0.4)
+    k = np.asarray(km.gram_matrix(x, x, kind="rbf", gamma=0.5))
+    np.testing.assert_allclose(k, k.T, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.diagonal(k), 1.0, rtol=1e-5)
+    assert (k > 0).all() and (k <= 1.0 + 1e-6).all()
+
+
+def test_tile_picker():
+    assert km._pick_tile(256, 128) == 128
+    assert km._pick_tile(100, 128) == 100
+    assert km._pick_tile(96, 128) == 96
+    assert km._pick_tile(7, 4) == 1   # prime: falls back to 1
+    assert km._pick_tile(12, 8) == 6
+
+
+def test_feature_dim_mismatch_raises():
+    with pytest.raises(ValueError, match="feature dims differ"):
+        km.gram_matrix(rand((4, 3), 0), rand((4, 5), 1))
+
+
+def test_unknown_kernel_raises():
+    with pytest.raises(ValueError, match="unknown kernel"):
+        km.gram_matrix(rand((4, 4), 0), rand((4, 4), 1), kind="poly")
+
+
+def test_vmem_budget():
+    """Default tiles stay far below a TPU core's ~16 MiB VMEM."""
+    bytes_used = km.vmem_tile_bytes(km.TILE_M, km.TILE_N, 128)
+    assert bytes_used < 16 * 1024 * 1024 / 8  # < 1/8 of VMEM

@@ -1,0 +1,115 @@
+//! Ablation bench: the design choices DESIGN.md calls out, each measured
+//! against the same Fig 3 trace / cluster scenario.
+//!
+//! 1. kernel function (linear/rbf/sigmoid) -> end-to-end hit ratio,
+//! 2. retrain interval -> hit ratio + training count,
+//! 3. prefetch depth (0/1/2/4) -> hit ratio + prefetch usefulness,
+//! 4. failure rates -> execution overhead under H-SVM-LRU vs LRU.
+
+use h_svm_lru::bench_support::banner;
+use h_svm_lru::config::{ClusterConfig, SvmConfig};
+use h_svm_lru::experiments::common::provision_fig3_cluster;
+use h_svm_lru::experiments::simulate::{self, SimulateConfig};
+use h_svm_lru::experiments::{make_coordinator, replay_trace_two_pass, Scenario};
+use h_svm_lru::mapreduce::FailureModel;
+use h_svm_lru::util::bytes::MB;
+use h_svm_lru::workload::fig3_trace;
+
+const SEED: u64 = 20230101;
+
+fn svm(kernel: &str) -> SvmConfig {
+    SvmConfig { backend: "rust".into(), kernel: kernel.into(), ..Default::default() }
+}
+
+fn kernel_ablation() {
+    banner("ablation 1 — kernel function vs end-to-end hit ratio");
+    let trace = fig3_trace(64 * MB, SEED);
+    for kernel in ["linear", "rbf", "sigmoid"] {
+        let (_c, cluster) = provision_fig3_cluster(64 * MB, 8, SEED);
+        let mut coord = make_coordinator(cluster, &Scenario::SvmLru, &svm(kernel)).unwrap();
+        let hr = replay_trace_two_pass(&mut coord, &trace).unwrap();
+        println!("kernel {kernel:<8} hit ratio {hr:.4}");
+    }
+}
+
+fn retrain_interval_ablation() {
+    banner("ablation 2 — retrain cadence (simulate, 16 jobs)");
+    // The pipeline retrain interval is fixed at coordinator construction;
+    // vary the training signal instead via job count per training epoch
+    // by changing arrival rate (denser arrivals = fewer retrain chances
+    // between jobs).
+    for mean_gap in [5.0, 20.0, 60.0] {
+        let cfg = ClusterConfig { datanodes: 3, replication: 2, ..Default::default() };
+        let sim = SimulateConfig {
+            n_jobs: 16,
+            mean_interarrival_s: mean_gap,
+            seed: SEED,
+            ..Default::default()
+        };
+        let r = simulate::run(&cfg, &Scenario::SvmLru, &svm("rbf"), &sim).unwrap();
+        println!(
+            "arrival gap {mean_gap:>5.0}s  trainings {:>2}  hit ratio {:.4}",
+            r.trainings, r.hit_ratio
+        );
+    }
+}
+
+fn prefetch_ablation() {
+    banner("ablation 3 — prefetch depth (paper §7 future work)");
+    for depth in [0u32, 1, 2, 4] {
+        let cfg = ClusterConfig { datanodes: 3, replication: 2, ..Default::default() };
+        let sim = SimulateConfig {
+            n_jobs: 16,
+            prefetch_depth: depth,
+            seed: SEED,
+            ..Default::default()
+        };
+        let r = simulate::run(&cfg, &Scenario::SvmLru, &svm("rbf"), &sim).unwrap();
+        let useful = r
+            .prefetch_useful
+            .map(|u| format!("{:.0}%", u * 100.0))
+            .unwrap_or_else(|| "-".into());
+        let times: Vec<f64> = r
+            .completed
+            .iter()
+            .map(|j| j.execution_time().as_secs_f64())
+            .collect();
+        println!(
+            "depth {depth}  hit ratio {:.4}  useful {useful:>4}  mean exec {:.1}s",
+            r.hit_ratio,
+            h_svm_lru::util::stats::mean(&times)
+        );
+    }
+}
+
+fn failure_ablation() {
+    banner("ablation 4 — failure injection overhead");
+    for (fail, kill) in [(0.0, 0.0), (0.05, 0.02), (0.15, 0.05)] {
+        let cfg = ClusterConfig { datanodes: 3, replication: 2, ..Default::default() };
+        let sim = SimulateConfig {
+            n_jobs: 12,
+            failures: FailureModel::with_rates(fail, kill, SEED),
+            seed: SEED,
+            ..Default::default()
+        };
+        let r = simulate::run(&cfg, &Scenario::SvmLru, &svm("rbf"), &sim).unwrap();
+        let times: Vec<f64> = r
+            .completed
+            .iter()
+            .map(|j| j.execution_time().as_secs_f64())
+            .collect();
+        println!(
+            "fail {fail:.2}/kill {kill:.2}  attempts lost {:>3}  mean exec {:.1}s  hit ratio {:.4}",
+            r.failed_attempts + r.killed_attempts,
+            h_svm_lru::util::stats::mean(&times),
+            r.hit_ratio
+        );
+    }
+}
+
+fn main() {
+    kernel_ablation();
+    retrain_interval_ablation();
+    prefetch_ablation();
+    failure_ablation();
+}

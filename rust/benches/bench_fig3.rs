@@ -1,0 +1,32 @@
+//! Bench: regenerate the Fig 3 series (hit ratio vs cache size, LRU vs
+//! H-SVM-LRU) and time the full sweep. Prints the paper-style rows.
+
+use h_svm_lru::bench_support::{banner, Bencher};
+use h_svm_lru::config::SvmConfig;
+use h_svm_lru::experiments::fig3;
+
+fn main() {
+    banner("Fig 3 — cache hit ratio vs cache size (LRU vs H-SVM-LRU)");
+    let svm_cfg = SvmConfig { backend: "rust".into(), ..Default::default() };
+    let mut points = Vec::new();
+    let res = Bencher::new(1, 5).run("fig3 full sweep (14 points, 2 policies)", || {
+        points = fig3::run(&svm_cfg, 20230101).expect("fig3");
+    });
+    println!("{}", res.report());
+    print!("{}", fig3::render(&points).render());
+
+    // Paper-shape assertions double as regression checks in bench runs.
+    let ir6 = points
+        .iter()
+        .find(|p| p.cache_blocks == 6 && p.block_size == 64 * 1024 * 1024)
+        .map(|p| p.improvement_ratio())
+        .unwrap_or(0.0);
+    println!(
+        "\nshape check: IR@6 blocks/64MB = {:.1}% (paper: 63.6%, largest of the sweep)",
+        ir6 * 100.0
+    );
+    assert!(
+        points.iter().all(|p| p.svm_lru >= p.lru - 1e-9),
+        "H-SVM-LRU must dominate LRU"
+    );
+}

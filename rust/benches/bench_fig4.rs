@@ -1,0 +1,33 @@
+//! Bench: regenerate Fig 4 (WordCount execution time vs input size under
+//! H-NoCache / H-LRU / H-SVM-LRU) and time the sweep.
+
+use h_svm_lru::bench_support::{banner, Bencher};
+use h_svm_lru::config::SvmConfig;
+use h_svm_lru::experiments::fig4;
+
+fn main() {
+    banner("Fig 4 — job execution time vs input size");
+    let svm_cfg = SvmConfig { backend: "rust".into(), ..Default::default() };
+    let mut points = Vec::new();
+    let res = Bencher::new(1, 3).run("fig4 sweep (10 points x 3 scenarios x 3 seeds)", || {
+        points = fig4::run(&svm_cfg, 20230101).expect("fig4");
+    });
+    println!("{}", res.report());
+    print!("{}", fig4::render(&points).render());
+
+    // Shape checks: caching never loses to NoCache; the gap grows with
+    // input size until the working set exceeds the cache.
+    for p in &points {
+        assert!(p.lru_s <= p.nocache_s * 1.02, "LRU must not lose to NoCache");
+        assert!(p.svm_lru_s <= p.nocache_s * 1.02, "SVM-LRU must not lose to NoCache");
+    }
+    let big: Vec<_> = points
+        .iter()
+        .filter(|p| p.input_bytes >= 16 * 1024 * 1024 * 1024)
+        .collect();
+    assert!(
+        big.iter().all(|p| p.svm_lru_s <= p.lru_s * 1.02),
+        "beyond cache capacity SVM-LRU should dominate LRU"
+    );
+    println!("\nshape check passed: cached <= NoCache everywhere; SVM-LRU <= LRU beyond capacity");
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Fig 5 (normalized run time of workloads W1–W6) and
+//! report the headline improvement numbers next to the paper's.
+
+use h_svm_lru::bench_support::{banner, Bencher};
+use h_svm_lru::config::SvmConfig;
+use h_svm_lru::experiments::fig5;
+
+fn main() {
+    banner("Fig 5 — normalized run time of Table 8 workloads");
+    let svm_cfg = SvmConfig { backend: "rust".into(), ..Default::default() };
+    let mut points = Vec::new();
+    let res = Bencher::new(0, 3).run("fig5 all workloads (6 x 3 scenarios x 5 seeds)", || {
+        points = fig5::run(&svm_cfg, 20230101, fig5::DEFAULT_SCALE).expect("fig5");
+    });
+    println!("{}", res.report());
+    print!("{}", fig5::render(&points).render());
+    let (lru, svm, over) = fig5::summary(&points);
+    println!("\nmeasured: H-LRU {lru:.2}%  H-SVM-LRU {svm:.2}%  (over LRU {over:.2}%)");
+    println!("paper:    H-LRU 11.33%  H-SVM-LRU 16.16%  (over LRU 4.83%)");
+    assert!(svm > lru - 1.0, "H-SVM-LRU should beat H-LRU on average");
+    assert!(lru > 0.0, "caching should beat NoCache");
+}

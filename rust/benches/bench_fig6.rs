@@ -1,0 +1,27 @@
+//! Bench: regenerate Fig 6 (per-application normalized run time inside
+//! each workload under H-SVM-LRU).
+
+use h_svm_lru::bench_support::{banner, Bencher};
+use h_svm_lru::config::SvmConfig;
+use h_svm_lru::experiments::{fig5, fig6};
+
+fn main() {
+    banner("Fig 6 — per-app normalized run time under H-SVM-LRU");
+    let svm_cfg = SvmConfig { backend: "rust".into(), ..Default::default() };
+    let mut points = Vec::new();
+    let res = Bencher::new(0, 3).run("fig6 all workloads", || {
+        points = fig6::run(&svm_cfg, 20230101, fig5::DEFAULT_SCALE).expect("fig6");
+    });
+    println!("{}", res.report());
+    print!("{}", fig6::render(&points).render());
+    let means = fig6::per_app_means(&points);
+    println!("\nper-app means (ascending = best improvement first):");
+    for (app, m) in &means {
+        println!("  {app:<12} {m:.4}");
+    }
+    // Paper shape: multi-stage Join benefits least from input caching.
+    let join = means.iter().find(|(a, _)| a == "Join").map(|(_, m)| *m).unwrap_or(1.0);
+    let grep = means.iter().find(|(a, _)| a == "Grep").map(|(_, m)| *m).unwrap_or(1.0);
+    assert!(join >= grep, "Join ({join:.3}) should benefit less than Grep ({grep:.3})");
+    println!("\nshape check passed: Join benefits least (paper §6.4.2)");
+}

@@ -1,0 +1,38 @@
+//! Micro bench: per-operation latency of every cache replacement policy on
+//! the L3 hot path (access + insert + evict mix). The coordinator calls
+//! these on every block request, so ns/op here bounds request throughput.
+
+use h_svm_lru::bench_support::{banner, black_box, Bencher};
+use h_svm_lru::cache::registry::{make_policy, POLICY_NAMES};
+use h_svm_lru::cache::{AccessContext, BlockCache};
+use h_svm_lru::hdfs::BlockId;
+use h_svm_lru::sim::SimTime;
+
+fn main() {
+    banner("policy micro ops — mixed access workload, 64-block cache");
+    const OPS: u64 = 20_000;
+    const WORKING_SET: u64 = 256;
+    let bench = Bencher::micro();
+    let mut results = Vec::new();
+    for &name in POLICY_NAMES {
+        let res = bench.run_per_op(name, OPS, || {
+            let mut cache = BlockCache::new(make_policy(name).unwrap(), 64);
+            for t in 0..OPS {
+                // Deterministic mixed stream: zipf-ish hot spots + scans.
+                let b = if t % 3 == 0 { t % 8 } else { (t * 7919) % WORKING_SET };
+                let ctx = AccessContext::simple(SimTime(t), 1)
+                    .with_prediction(b < WORKING_SET / 2);
+                black_box(cache.access_or_insert(BlockId(b), &ctx));
+            }
+        });
+        println!("{}", res.report());
+        results.push((name, res.mean));
+    }
+    // The paper's own policy must not be an outlier vs plain LRU.
+    let lru = results.iter().find(|(n, _)| *n == "lru").unwrap().1;
+    let hsvm = results.iter().find(|(n, _)| *n == "h-svm-lru").unwrap().1;
+    println!(
+        "\nh-svm-lru / lru overhead: {:.2}x",
+        hsvm.as_secs_f64() / lru.as_secs_f64()
+    );
+}

@@ -1,0 +1,58 @@
+//! Micro bench: SVM classifier latency — HLO artifacts through PJRT vs the
+//! pure-Rust SMO, for training and batched prediction. This is the L1/L2
+//! compute sitting on the L3 request path; the batcher amortizes the
+//! per-call overhead measured here.
+
+use h_svm_lru::bench_support::{banner, black_box, Bencher};
+use h_svm_lru::runtime::{HloBackend, RustBackend, SvmBackend};
+use h_svm_lru::svm::dataset::Dataset;
+use h_svm_lru::svm::features::N_FEATURES;
+use h_svm_lru::svm::KernelKind;
+use h_svm_lru::util::rng::Pcg64;
+
+fn blobs(n_per: usize, seed: u64) -> Dataset {
+    let mut rng = Pcg64::new(seed, 0);
+    let mut ds = Dataset::new();
+    for _ in 0..n_per {
+        let mut a = [0.0f32; N_FEATURES];
+        let mut b = [0.0f32; N_FEATURES];
+        for k in 0..N_FEATURES {
+            a[k] = rng.gen_normal(0.3, 0.1) as f32;
+            b[k] = rng.gen_normal(0.7, 0.1) as f32;
+        }
+        ds.push(a, true);
+        ds.push(b, false);
+    }
+    ds
+}
+
+fn bench_backend(label: &str, backend: &mut dyn SvmBackend, ds: &Dataset) {
+    let bench = Bencher::new(2, 10);
+    let res = bench.run(&format!("{label}: train (n=256)"), || {
+        backend.train(ds).expect("train");
+    });
+    println!("{}", res.report());
+    let queries: Vec<[f32; N_FEATURES]> = ds.x[..64.min(ds.len())].to_vec();
+    let res = bench.run_per_op(&format!("{label}: predict batch=64"), 64, || {
+        black_box(backend.decision_batch(&queries).expect("predict"));
+    });
+    println!("{}", res.report());
+    let one = &queries[..1];
+    let res = bench.run(&format!("{label}: predict batch=1 (unbatched worst case)"), || {
+        black_box(backend.decision_batch(one).expect("predict"));
+    });
+    println!("{}", res.report());
+}
+
+fn main() {
+    banner("SVM backend latency — PJRT HLO artifacts vs pure-Rust SMO");
+    let ds = blobs(128, 3);
+
+    let mut smo = RustBackend::new(KernelKind::Rbf);
+    bench_backend("rust/smo", &mut smo, &ds);
+
+    match HloBackend::load("artifacts", KernelKind::Rbf) {
+        Ok(mut hlo) => bench_backend("hlo/pjrt", &mut hlo, &ds),
+        Err(e) => println!("(skipping HLO backend: {e:#} — run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,71 @@
+//! Micro bench: discrete-event engine throughput (events/sec) and the
+//! end-to-end simulated-request rate of the coordinator — the L3 capacity
+//! ceiling of the whole system.
+
+use h_svm_lru::bench_support::{banner, black_box, Bencher};
+use h_svm_lru::cache::CacheAffinity;
+use h_svm_lru::config::SvmConfig;
+use h_svm_lru::experiments::common::provision_fig3_cluster;
+use h_svm_lru::experiments::{make_coordinator, Scenario};
+use h_svm_lru::hdfs::{BlockId, BlockKind, DataNodeId};
+use h_svm_lru::mapreduce::{AccessRequest, BlockService};
+use h_svm_lru::sim::{Engine, SimDuration, SimTime};
+use h_svm_lru::util::bytes::MB;
+
+fn bench_engine() {
+    const EVENTS: u64 = 200_000;
+    let res = Bencher::micro().run_per_op("DES engine: schedule+fire chain", EVENTS, || {
+        let mut eng: Engine<u64> = Engine::new();
+        fn chain(eng: &mut Engine<u64>, count: &mut u64) {
+            *count += 1;
+            if *count % 2 == 0 {
+                eng.schedule_in(SimDuration(3), chain);
+            } else {
+                eng.schedule_in(SimDuration(7), chain);
+            }
+        }
+        let mut count = 0u64;
+        eng.schedule_at(SimTime(0), chain);
+        while count < EVENTS && eng.step(&mut count) {}
+        black_box(count);
+    });
+    println!("{}", res.report());
+}
+
+fn bench_request_path(policy: &str) {
+    const REQUESTS: u64 = 10_000;
+    let svm_cfg = SvmConfig { backend: "rust".into(), ..Default::default() };
+    let scenario = match policy {
+        "h-svm-lru" => Scenario::SvmLru,
+        p => Scenario::Policy(p.to_string()),
+    };
+    let res = Bencher::new(1, 5).run_per_op(
+        &format!("coordinator read_block x{REQUESTS} ({policy})"),
+        REQUESTS,
+        || {
+            let (_cfg, cluster) = provision_fig3_cluster(64 * MB, 8, 7);
+            let mut coord = make_coordinator(cluster, &scenario, &svm_cfg).unwrap();
+            let req = AccessRequest {
+                app: "Grep".into(),
+                affinity: CacheAffinity::High,
+                kind: BlockKind::Input,
+                file: 0,
+                file_width: 32,
+                file_complete: false,
+            };
+            for t in 0..REQUESTS {
+                let b = BlockId((t * 31) % 32);
+                black_box(coord.read_block(b, DataNodeId(0), SimTime(t * 100), &req));
+            }
+        },
+    );
+    println!("{}", res.report());
+}
+
+fn main() {
+    banner("sim engine + request path throughput");
+    bench_engine();
+    for policy in ["lru", "h-svm-lru"] {
+        bench_request_path(policy);
+    }
+}

@@ -1,0 +1,30 @@
+//! Bench: regenerate Table 5 (kernel-function evaluation) and the §5.2
+//! cross-validated accuracy; times dataset assembly + 3 kernel trainings.
+
+use h_svm_lru::bench_support::{banner, Bencher};
+use h_svm_lru::config::SvmConfig;
+use h_svm_lru::experiments::table5;
+use h_svm_lru::svm::KernelKind;
+
+fn main() {
+    banner("Table 5 — SVM kernel-function evaluation");
+    let svm_cfg = SvmConfig { backend: "rust".into(), ..Default::default() };
+    let mut evals = Vec::new();
+    let res = Bencher::new(0, 3).run("table5 (dataset + 3 kernels, 75/25 split)", || {
+        evals = table5::run(&svm_cfg, 20230101).expect("table5");
+    });
+    println!("{}", res.report());
+    print!("{}", table5::render(&evals).render());
+
+    let cv = table5::cross_validated_accuracy(&svm_cfg, 20230101, 4).expect("cv");
+    println!("\n4-fold CV accuracy (rbf): {cv:.3}  (paper: ~0.83)");
+
+    let acc = |k: KernelKind| evals.iter().find(|e| e.kernel == k).unwrap().test_accuracy;
+    println!(
+        "accuracies: linear {:.2}  rbf {:.2}  sigmoid {:.2}  (paper: 0.71 / 0.85 / 0.57)",
+        acc(KernelKind::Linear),
+        acc(KernelKind::Rbf),
+        acc(KernelKind::Sigmoid)
+    );
+    assert!(acc(KernelKind::Rbf) >= acc(KernelKind::Sigmoid), "RBF must beat sigmoid");
+}

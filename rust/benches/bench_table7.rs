@@ -1,0 +1,37 @@
+//! Bench: regenerate Table 7 (improvement ratio of H-SVM-LRU over LRU per
+//! cache size, from the Fig 3 series).
+
+use h_svm_lru::bench_support::{banner, Bencher};
+use h_svm_lru::config::SvmConfig;
+use h_svm_lru::experiments::table7;
+
+fn main() {
+    banner("Table 7 — improvement ratio of H-SVM-LRU over LRU");
+    let svm_cfg = SvmConfig { backend: "rust".into(), ..Default::default() };
+    let mut points = Vec::new();
+    let res = Bencher::new(0, 3).run("table7 (fig3 sweep + IR derivation)", || {
+        points = table7::run(&svm_cfg, 20230101).expect("table7");
+    });
+    println!("{}", res.report());
+    print!("{}", table7::render(&points).render());
+
+    // Paper shape: the improvement is largest for small caches and small
+    // blocks ("H-SVM-LRU is suitable for small cache size").
+    let ir = |blocks: u64, bs: u64| {
+        points
+            .iter()
+            .find(|p| p.cache_blocks == blocks && p.block_size == bs)
+            .map(|p| p.improvement_ratio())
+            .unwrap_or(0.0)
+    };
+    let mb = 1024 * 1024;
+    let small = ir(6, 64 * mb);
+    let large = ir(24, 64 * mb);
+    println!(
+        "\nshape check: IR small cache {:.1}% vs large cache {:.1}% (paper: 63.6% -> 7.9%)",
+        small * 100.0,
+        large * 100.0
+    );
+    assert!(small > large, "IR must shrink as the cache grows");
+    assert!(ir(6, 64 * mb) > ir(6, 128 * mb), "64MB blocks show larger IR (paper)");
+}

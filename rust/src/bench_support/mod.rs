@@ -1,0 +1,134 @@
+//! In-crate benchmark harness (the offline cache has no `criterion`).
+//!
+//! `cargo bench` runs each `rust/benches/*.rs` binary with `harness =
+//! false`; they use this module for warmup + repeated timing, robust
+//! statistics and aligned reporting. End-to-end benches (one per paper
+//! table/figure) print the paper-style rows next to the wall-clock cost of
+//! regenerating them; micro benches report ns/op.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{percentile, Welford};
+
+/// One benchmark measurement series.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u64,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}  min {:>12?}  (±{:?})",
+            self.name, self.iterations, self.mean, self.p50, self.p95, self.min, self.std_dev
+        )
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Bencher {
+    /// Warmup iterations (not recorded).
+    pub warmup: u32,
+    /// Measured iterations.
+    pub iterations: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 2, iterations: 10 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: u32, iterations: u32) -> Self {
+        assert!(iterations > 0);
+        Bencher { warmup, iterations }
+    }
+
+    /// Fast harness for micro benches: many iterations, batched timing.
+    pub fn micro() -> Self {
+        Bencher { warmup: 3, iterations: 30 }
+    }
+
+    /// Time `f` (called once per iteration).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut w = Welford::new();
+        let mut samples = Vec::with_capacity(self.iterations as usize);
+        for _ in 0..self.iterations {
+            let t0 = Instant::now();
+            f();
+            let dt = t0.elapsed();
+            w.push(dt.as_secs_f64());
+            samples.push(dt.as_secs_f64());
+        }
+        BenchResult {
+            name: name.to_string(),
+            iterations: self.iterations as u64,
+            mean: Duration::from_secs_f64(w.mean()),
+            std_dev: Duration::from_secs_f64(w.std_dev()),
+            min: Duration::from_secs_f64(samples.iter().copied().fold(f64::INFINITY, f64::min)),
+            p50: Duration::from_secs_f64(percentile(&samples, 50.0)),
+            p95: Duration::from_secs_f64(percentile(&samples, 95.0)),
+        }
+    }
+
+    /// Time `f` where each call performs `ops` homogeneous operations;
+    /// reports per-op latency in the result name.
+    pub fn run_per_op<F: FnMut()>(&self, name: &str, ops: u64, mut f: F) -> BenchResult {
+        let res = self.run(name, &mut f);
+        let per_op = res.mean.as_nanos() as f64 / ops as f64;
+        BenchResult { name: format!("{name} [{per_op:.0} ns/op]"), ..res }
+    }
+}
+
+/// Standard bench banner.
+pub fn banner(title: &str) {
+    println!("\n================================================================");
+    println!("bench: {title}");
+    println!("================================================================");
+}
+
+/// `black_box` without nightly: defeat the optimizer via a volatile read.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleepless_work() {
+        let b = Bencher::new(1, 5);
+        let mut acc = 0u64;
+        let r = b.run("sum", || {
+            acc = black_box((0..10_000u64).sum());
+        });
+        assert_eq!(r.iterations, 5);
+        assert!(r.mean.as_nanos() > 0);
+        assert!(r.min <= r.mean);
+        assert!(r.p50 <= r.p95);
+        assert!(r.report().contains("sum"));
+    }
+
+    #[test]
+    fn per_op_annotation() {
+        let b = Bencher::new(0, 3);
+        let r = b.run_per_op("op", 1000, || {
+            black_box((0..1000u64).product::<u64>());
+        });
+        assert!(r.name.contains("ns/op"));
+    }
+}

@@ -1,0 +1,132 @@
+//! Cache-affinity-aware replacement (paper §3.1 / [13]): the caching
+//! *benefit* of a block is the product of the application's cache affinity
+//! and the block's access frequency. The block with the lowest benefit is
+//! evicted; ties fall back to LRU — exactly the strategy's description.
+
+use std::collections::HashMap;
+
+use crate::hdfs::BlockId;
+use crate::sim::SimTime;
+
+use super::{AccessContext, CachePolicy};
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    frequency: u64,
+    affinity: f64,
+    /// LRU sequence for the tiebreak.
+    lru_seq: u64,
+}
+
+#[derive(Debug, Default)]
+pub struct AffinityAware {
+    entries: HashMap<BlockId, Entry>,
+    seq: u64,
+}
+
+impl AffinityAware {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn benefit(e: &Entry) -> f64 {
+        e.affinity * e.frequency as f64
+    }
+
+    pub fn benefit_of(&self, block: BlockId) -> Option<f64> {
+        self.entries.get(&block).map(Self::benefit)
+    }
+}
+
+impl CachePolicy for AffinityAware {
+    fn name(&self) -> &'static str {
+        "affinity-aware"
+    }
+
+    fn on_hit(&mut self, block: BlockId, ctx: &AccessContext) {
+        self.seq += 1;
+        let seq = self.seq;
+        let e = self.entries.get_mut(&block).expect("hit on untracked block");
+        e.frequency += 1;
+        // The benefit reflects the affinity of the latest requesting app.
+        e.affinity = ctx.affinity.weight();
+        e.lru_seq = seq;
+    }
+
+    fn on_insert(&mut self, block: BlockId, ctx: &AccessContext) {
+        debug_assert!(!self.entries.contains_key(&block), "double insert");
+        self.seq += 1;
+        self.entries.insert(
+            block,
+            Entry { frequency: 1, affinity: ctx.affinity.weight(), lru_seq: self.seq },
+        );
+    }
+
+    fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
+        self.entries
+            .iter()
+            .min_by(|(ba, ea), (bb, eb)| {
+                Self::benefit(ea)
+                    .partial_cmp(&Self::benefit(eb))
+                    .unwrap()
+                    .then(ea.lru_seq.cmp(&eb.lru_seq))
+                    .then(ba.cmp(bb))
+            })
+            .map(|(b, _)| *b)
+    }
+
+    fn on_evict(&mut self, block: BlockId) {
+        self.entries.remove(&block);
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CacheAffinity;
+
+    fn ctx(aff: CacheAffinity) -> AccessContext {
+        let mut c = AccessContext::simple(SimTime(0), 1);
+        c.affinity = aff;
+        c
+    }
+
+    #[test]
+    fn low_affinity_low_frequency_evicted_first() {
+        let mut p = AffinityAware::new();
+        p.on_insert(BlockId(1), &ctx(CacheAffinity::High));
+        p.on_insert(BlockId(2), &ctx(CacheAffinity::Low));
+        p.on_insert(BlockId(3), &ctx(CacheAffinity::High));
+        p.on_hit(BlockId(1), &ctx(CacheAffinity::High));
+        // benefits: 1 -> 2.0, 2 -> 0.25, 3 -> 1.0
+        assert_eq!(p.choose_victim(SimTime(1)), Some(BlockId(2)));
+    }
+
+    #[test]
+    fn equal_benefit_falls_back_to_lru() {
+        let mut p = AffinityAware::new();
+        p.on_insert(BlockId(1), &ctx(CacheAffinity::Medium));
+        p.on_insert(BlockId(2), &ctx(CacheAffinity::Medium));
+        p.on_hit(BlockId(1), &ctx(CacheAffinity::Medium));
+        p.on_hit(BlockId(2), &ctx(CacheAffinity::Medium));
+        // Equal benefit (2 accesses, medium) -> LRU: block 1 is older.
+        assert_eq!(p.choose_victim(SimTime(1)), Some(BlockId(1)));
+    }
+
+    #[test]
+    fn frequency_raises_benefit() {
+        let mut p = AffinityAware::new();
+        p.on_insert(BlockId(1), &ctx(CacheAffinity::Low));
+        for _ in 0..10 {
+            p.on_hit(BlockId(1), &ctx(CacheAffinity::Low));
+        }
+        p.on_insert(BlockId(2), &ctx(CacheAffinity::Medium));
+        // 1: 11 * 0.25 = 2.75 vs 2: 1 * 0.5 = 0.5
+        assert_eq!(p.choose_victim(SimTime(1)), Some(BlockId(2)));
+        assert!((p.benefit_of(BlockId(1)).unwrap() - 2.75).abs() < 1e-12);
+    }
+}

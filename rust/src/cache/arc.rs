@@ -1,0 +1,209 @@
+//! Modified ARC (collaborative caching, paper §3.1 / [10]): the cache is
+//! split into a *recent* list (T1, seen once) and a *frequent* list (T2,
+//! seen again), each shadowed by a ghost history (B1/B2) holding references
+//! to evicted blocks. A hit in a ghost list adapts the target size `p` of
+//! the recent region and promotes the block on re-insertion.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::hdfs::BlockId;
+use crate::sim::SimTime;
+
+use super::{AccessContext, CachePolicy};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum List {
+    Recent,   // T1
+    Frequent, // T2
+}
+
+#[derive(Debug)]
+pub struct ModifiedArc {
+    t1: VecDeque<BlockId>,
+    t2: VecDeque<BlockId>,
+    where_is: HashMap<BlockId, List>,
+    /// Ghost histories (most recent at the back), bounded by `ghost_cap`.
+    b1: VecDeque<BlockId>,
+    b2: VecDeque<BlockId>,
+    ghost_cap: usize,
+    /// Adaptive target for |T1| (in blocks).
+    p: f64,
+}
+
+impl ModifiedArc {
+    pub fn new(ghost_cap: usize) -> Self {
+        ModifiedArc {
+            t1: VecDeque::new(),
+            t2: VecDeque::new(),
+            where_is: HashMap::new(),
+            b1: VecDeque::new(),
+            b2: VecDeque::new(),
+            ghost_cap: ghost_cap.max(1),
+            p: 0.0,
+        }
+    }
+
+    fn ghost_remove(list: &mut VecDeque<BlockId>, block: BlockId) -> bool {
+        if let Some(pos) = list.iter().position(|&b| b == block) {
+            list.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn ghost_push(list: &mut VecDeque<BlockId>, cap: usize, block: BlockId) {
+        list.push_back(block);
+        while list.len() > cap {
+            list.pop_front();
+        }
+    }
+
+    pub fn recent_len(&self) -> usize {
+        self.t1.len()
+    }
+
+    pub fn frequent_len(&self) -> usize {
+        self.t2.len()
+    }
+
+    pub fn target_recent(&self) -> f64 {
+        self.p
+    }
+}
+
+impl CachePolicy for ModifiedArc {
+    fn name(&self) -> &'static str {
+        "modified-arc"
+    }
+
+    fn on_hit(&mut self, block: BlockId, _ctx: &AccessContext) {
+        // Any cache hit promotes to the MRU end of the frequent list.
+        match self.where_is.get(&block) {
+            Some(List::Recent) => {
+                Self::ghost_remove(&mut self.t1, block);
+            }
+            Some(List::Frequent) => {
+                Self::ghost_remove(&mut self.t2, block);
+            }
+            None => panic!("hit on untracked block"),
+        }
+        self.t2.push_back(block);
+        self.where_is.insert(block, List::Frequent);
+    }
+
+    fn on_insert(&mut self, block: BlockId, _ctx: &AccessContext) {
+        debug_assert!(!self.where_is.contains_key(&block), "double insert");
+        let total = (self.t1.len() + self.t2.len()).max(1) as f64;
+        // Ghost hits adapt p and steer the block into the frequent list.
+        if Self::ghost_remove(&mut self.b1, block) {
+            let delta = (self.b2.len().max(1) as f64 / self.b1.len().max(1) as f64).max(1.0);
+            self.p = (self.p + delta).min(total);
+            self.t2.push_back(block);
+            self.where_is.insert(block, List::Frequent);
+        } else if Self::ghost_remove(&mut self.b2, block) {
+            let delta = (self.b1.len().max(1) as f64 / self.b2.len().max(1) as f64).max(1.0);
+            self.p = (self.p - delta).max(0.0);
+            self.t2.push_back(block);
+            self.where_is.insert(block, List::Frequent);
+        } else {
+            self.t1.push_back(block);
+            self.where_is.insert(block, List::Recent);
+        }
+    }
+
+    fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
+        // Evict from T1 while it exceeds the target p, otherwise from T2;
+        // victims are the LRU (front) entries.
+        if !self.t1.is_empty() && (self.t1.len() as f64 > self.p || self.t2.is_empty()) {
+            self.t1.front().copied()
+        } else {
+            self.t2.front().copied().or_else(|| self.t1.front().copied())
+        }
+    }
+
+    fn on_evict(&mut self, block: BlockId) {
+        match self.where_is.remove(&block) {
+            Some(List::Recent) => {
+                Self::ghost_remove(&mut self.t1, block);
+                Self::ghost_push(&mut self.b1, self.ghost_cap, block);
+            }
+            Some(List::Frequent) => {
+                Self::ghost_remove(&mut self.t2, block);
+                Self::ghost_push(&mut self.b2, self.ghost_cap, block);
+            }
+            None => {}
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.where_is.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> AccessContext {
+        AccessContext::simple(SimTime(0), 1)
+    }
+
+    #[test]
+    fn hit_promotes_to_frequent() {
+        let mut p = ModifiedArc::new(16);
+        p.on_insert(BlockId(1), &ctx());
+        assert_eq!(p.recent_len(), 1);
+        p.on_hit(BlockId(1), &ctx());
+        assert_eq!(p.recent_len(), 0);
+        assert_eq!(p.frequent_len(), 1);
+    }
+
+    #[test]
+    fn victim_prefers_recent_list() {
+        let mut p = ModifiedArc::new(16);
+        p.on_insert(BlockId(1), &ctx());
+        p.on_insert(BlockId(2), &ctx());
+        p.on_hit(BlockId(1), &ctx()); // 1 -> T2
+        assert_eq!(p.choose_victim(SimTime(0)), Some(BlockId(2)));
+    }
+
+    #[test]
+    fn ghost_hit_adapts_and_promotes() {
+        let mut p = ModifiedArc::new(16);
+        p.on_insert(BlockId(1), &ctx());
+        p.on_evict(BlockId(1)); // 1 lands in B1
+        let p_before = p.target_recent();
+        p.on_insert(BlockId(1), &ctx()); // ghost hit in B1
+        assert!(p.target_recent() > p_before, "p should grow on B1 hit");
+        assert_eq!(p.frequent_len(), 1, "ghost hit goes straight to T2");
+    }
+
+    #[test]
+    fn ghost_lists_are_bounded() {
+        let mut p = ModifiedArc::new(4);
+        for i in 0..20 {
+            p.on_insert(BlockId(i), &ctx());
+            p.on_evict(BlockId(i));
+        }
+        assert_eq!(p.len(), 0);
+        assert!(p.b1.len() <= 4);
+    }
+
+    #[test]
+    fn drain_all() {
+        let mut p = ModifiedArc::new(8);
+        for i in 0..6 {
+            p.on_insert(BlockId(i), &ctx());
+        }
+        p.on_hit(BlockId(0), &ctx());
+        p.on_hit(BlockId(3), &ctx());
+        let mut evicted = Vec::new();
+        while let Some(v) = p.choose_victim(SimTime(0)) {
+            p.on_evict(v);
+            evicted.push(v);
+        }
+        assert_eq!(evicted.len(), 6);
+        assert_eq!(p.len(), 0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Block-goodness-aware replacement (paper §3.1 / [12]): each cached block
+//! carries a *block goodness* (BG) value combining its access count with the
+//! cache affinity of the MapReduce application(s) reading it. The victim is
+//! the block with the lowest BG; ties go to the oldest access time.
+
+use std::collections::HashMap;
+
+use crate::hdfs::BlockId;
+use crate::sim::SimTime;
+
+use super::{AccessContext, CachePolicy};
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    accesses: u64,
+    /// Highest affinity weight among apps that touched the block.
+    affinity: f64,
+    last_access: SimTime,
+}
+
+impl Entry {
+    fn goodness(&self) -> f64 {
+        self.accesses as f64 * self.affinity
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct BlockGoodness {
+    entries: HashMap<BlockId, Entry>,
+}
+
+impl BlockGoodness {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn goodness_of(&self, block: BlockId) -> Option<f64> {
+        self.entries.get(&block).map(Entry::goodness)
+    }
+}
+
+impl CachePolicy for BlockGoodness {
+    fn name(&self) -> &'static str {
+        "block-goodness"
+    }
+
+    fn on_hit(&mut self, block: BlockId, ctx: &AccessContext) {
+        let e = self.entries.get_mut(&block).expect("hit on untracked block");
+        e.accesses += 1;
+        e.affinity = e.affinity.max(ctx.affinity.weight());
+        e.last_access = ctx.time;
+    }
+
+    fn on_insert(&mut self, block: BlockId, ctx: &AccessContext) {
+        debug_assert!(!self.entries.contains_key(&block), "double insert");
+        self.entries.insert(
+            block,
+            Entry { accesses: 1, affinity: ctx.affinity.weight(), last_access: ctx.time },
+        );
+    }
+
+    fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
+        self.entries
+            .iter()
+            .min_by(|(ba, ea), (bb, eb)| {
+                ea.goodness()
+                    .partial_cmp(&eb.goodness())
+                    .unwrap()
+                    .then(ea.last_access.cmp(&eb.last_access))
+                    .then(ba.cmp(bb))
+            })
+            .map(|(b, _)| *b)
+    }
+
+    fn on_evict(&mut self, block: BlockId) {
+        self.entries.remove(&block);
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::CacheAffinity;
+
+    fn ctx(t: u64, aff: CacheAffinity) -> AccessContext {
+        let mut c = AccessContext::simple(SimTime(t), 1);
+        c.affinity = aff;
+        c
+    }
+
+    #[test]
+    fn lowest_goodness_is_victim() {
+        let mut p = BlockGoodness::new();
+        p.on_insert(BlockId(1), &ctx(1, CacheAffinity::High));
+        p.on_insert(BlockId(2), &ctx(2, CacheAffinity::Low));
+        p.on_insert(BlockId(3), &ctx(3, CacheAffinity::High));
+        p.on_hit(BlockId(3), &ctx(4, CacheAffinity::High));
+        // BG: 1 -> 1.0, 2 -> 0.25, 3 -> 2.0
+        assert_eq!(p.choose_victim(SimTime(5)), Some(BlockId(2)));
+        assert!((p.goodness_of(BlockId(3)).unwrap() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tie_broken_by_oldest_access() {
+        let mut p = BlockGoodness::new();
+        p.on_insert(BlockId(1), &ctx(1, CacheAffinity::Medium));
+        p.on_insert(BlockId(2), &ctx(2, CacheAffinity::Medium));
+        // Equal BG -> the oldest access time (block 1) is discarded first,
+        // exactly the paper's tiebreak.
+        assert_eq!(p.choose_victim(SimTime(3)), Some(BlockId(1)));
+    }
+
+    #[test]
+    fn affinity_upgrades_stick() {
+        let mut p = BlockGoodness::new();
+        p.on_insert(BlockId(1), &ctx(1, CacheAffinity::Low));
+        p.on_hit(BlockId(1), &ctx(2, CacheAffinity::High));
+        p.on_hit(BlockId(1), &ctx(3, CacheAffinity::Low));
+        // affinity keeps the max seen (1.0); 3 accesses -> BG = 3.0
+        assert!((p.goodness_of(BlockId(1)).unwrap() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,135 @@
+//! EXD — Exponential-Decay scoring (Big SQL adaptive caching, §3.1 / [11]):
+//! each block keeps a single score updated at access time as
+//! `score = 1 + score_old * exp(-beta * (t - t_last))`. Only the last access
+//! time is stored. `beta` trades frequency (small beta) against recency
+//! (large beta); the victim is the block with the lowest current score.
+
+use std::collections::HashMap;
+
+use crate::hdfs::BlockId;
+use crate::sim::SimTime;
+
+use super::{AccessContext, CachePolicy};
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    score: f64,
+    last: SimTime,
+}
+
+#[derive(Debug)]
+pub struct Exd {
+    beta: f64,
+    entries: HashMap<BlockId, Entry>,
+}
+
+impl Exd {
+    /// `beta` in 1/seconds; EXD's adaptive variant tunes this online, here
+    /// it is a constructor parameter (the ablation bench sweeps it).
+    pub fn new(beta: f64) -> Self {
+        assert!(beta > 0.0, "beta must be positive");
+        Exd { beta, entries: HashMap::new() }
+    }
+
+    fn decayed_score(&self, e: &Entry, now: SimTime) -> f64 {
+        let dt = e.last.duration_until(now).as_secs_f64();
+        e.score * (-self.beta * dt).exp()
+    }
+
+    pub fn score_of(&self, block: BlockId, now: SimTime) -> Option<f64> {
+        self.entries.get(&block).map(|e| self.decayed_score(e, now))
+    }
+}
+
+impl CachePolicy for Exd {
+    fn name(&self) -> &'static str {
+        "exd"
+    }
+
+    fn on_hit(&mut self, block: BlockId, ctx: &AccessContext) {
+        let beta = self.beta;
+        let e = self.entries.get_mut(&block).expect("hit on untracked block");
+        let dt = e.last.duration_until(ctx.time).as_secs_f64();
+        e.score = 1.0 + e.score * (-beta * dt).exp();
+        e.last = ctx.time;
+    }
+
+    fn on_insert(&mut self, block: BlockId, ctx: &AccessContext) {
+        debug_assert!(!self.entries.contains_key(&block), "double insert");
+        self.entries.insert(block, Entry { score: 1.0, last: ctx.time });
+    }
+
+    fn choose_victim(&mut self, now: SimTime) -> Option<BlockId> {
+        self.entries
+            .iter()
+            .min_by(|(ba, ea), (bb, eb)| {
+                self.decayed_score(ea, now)
+                    .partial_cmp(&self.decayed_score(eb, now))
+                    .unwrap()
+                    .then(ba.cmp(bb))
+            })
+            .map(|(b, _)| *b)
+    }
+
+    fn on_evict(&mut self, block: BlockId) {
+        self.entries.remove(&block);
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(t_secs: f64) -> AccessContext {
+        AccessContext::simple(SimTime::from_secs_f64(t_secs), 1)
+    }
+
+    #[test]
+    fn frequent_block_outscores_single_access() {
+        let mut p = Exd::new(0.01);
+        p.on_insert(BlockId(1), &ctx(0.0));
+        p.on_insert(BlockId(2), &ctx(0.0));
+        for t in [1.0, 2.0, 3.0] {
+            p.on_hit(BlockId(1), &ctx(t));
+        }
+        assert_eq!(p.choose_victim(SimTime::from_secs_f64(4.0)), Some(BlockId(2)));
+        let s1 = p.score_of(BlockId(1), SimTime::from_secs_f64(4.0)).unwrap();
+        let s2 = p.score_of(BlockId(2), SimTime::from_secs_f64(4.0)).unwrap();
+        assert!(s1 > 3.0 && s2 < 1.0, "s1={s1} s2={s2}");
+    }
+
+    #[test]
+    fn large_beta_decays_to_pure_recency() {
+        let mut p = Exd::new(100.0);
+        p.on_insert(BlockId(1), &ctx(0.0));
+        for t in [0.1, 0.2, 0.3] {
+            p.on_hit(BlockId(1), &ctx(t));
+        }
+        p.on_insert(BlockId(2), &ctx(5.0));
+        // With aggressive decay, old frequency is worthless: block 1's
+        // score at t=10 is ~0 while block 2's is larger.
+        let s1 = p.score_of(BlockId(1), SimTime::from_secs_f64(10.0)).unwrap();
+        let s2 = p.score_of(BlockId(2), SimTime::from_secs_f64(10.0)).unwrap();
+        assert!(s2 > s1);
+        assert_eq!(p.choose_victim(SimTime::from_secs_f64(10.0)), Some(BlockId(1)));
+    }
+
+    #[test]
+    fn score_is_time_invariant_in_ranking_for_equal_last() {
+        // Two blocks last touched at the same time keep their order as the
+        // clock advances (decay is monotone).
+        let mut p = Exd::new(0.5);
+        p.on_insert(BlockId(1), &ctx(0.0));
+        p.on_insert(BlockId(2), &ctx(0.0));
+        p.on_hit(BlockId(1), &ctx(1.0));
+        p.on_hit(BlockId(2), &ctx(1.0));
+        p.on_hit(BlockId(1), &ctx(2.0));
+        for t in [3.0, 10.0, 100.0] {
+            assert_eq!(p.choose_victim(SimTime::from_secs_f64(t)), Some(BlockId(2)));
+        }
+    }
+}

@@ -1,0 +1,74 @@
+//! FIFO — insertion order, no recency update. Sanity baseline for the
+//! policy-comparison ablation (not in the paper's survey, but the natural
+//! lower bound for ordered policies).
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::hdfs::BlockId;
+use crate::sim::SimTime;
+
+use super::{AccessContext, CachePolicy};
+
+#[derive(Debug, Default)]
+pub struct Fifo {
+    order: BTreeMap<i64, BlockId>,
+    index: HashMap<BlockId, i64>,
+    next: i64,
+}
+
+impl Fifo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl CachePolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn on_hit(&mut self, _block: BlockId, _ctx: &AccessContext) {
+        // FIFO ignores recency.
+    }
+
+    fn on_insert(&mut self, block: BlockId, _ctx: &AccessContext) {
+        debug_assert!(!self.index.contains_key(&block), "double insert");
+        let key = self.next;
+        self.next += 1;
+        self.order.insert(key, block);
+        self.index.insert(block, key);
+    }
+
+    fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
+        self.order.values().next().copied()
+    }
+
+    fn on_evict(&mut self, block: BlockId) {
+        if let Some(key) = self.index.remove(&block) {
+            self.order.remove(&key);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_in_insertion_order_despite_hits() {
+        let mut p = Fifo::new();
+        let c = AccessContext::simple(SimTime(0), 1);
+        for i in 0..3 {
+            p.on_insert(BlockId(i), &c);
+        }
+        p.on_hit(BlockId(0), &c); // no effect
+        assert_eq!(p.choose_victim(SimTime(1)), Some(BlockId(0)));
+        p.on_evict(BlockId(0));
+        assert_eq!(p.choose_victim(SimTime(2)), Some(BlockId(1)));
+        assert_eq!(p.len(), 2);
+    }
+}

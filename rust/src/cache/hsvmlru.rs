@@ -1,0 +1,259 @@
+//! H-SVM-LRU — the paper's contribution (Algorithm 1).
+//!
+//! The LRU stack is split into two regions. The *unused region* sits at the
+//! top (eviction end) and holds blocks the SVM classified as "not reused in
+//! the future"; the *reused region* sits at the bottom and holds predicted-
+//! reused blocks in LRU order. Semantics, straight from Algorithm 1:
+//!
+//! * GetCache (hit): class 1 -> move to the bottom of the cache;
+//!   class 0 -> move to the *top* ("to remove it immediately").
+//! * PutCache (miss): evict from the top when full; class 1 -> insert at the
+//!   bottom; class 0 -> insert at the *end of the unused data list* (or the
+//!   top when no unused blocks exist).
+//! * When every block has the same (reused) class the policy degenerates to
+//!   plain LRU — the paper's own consistency claim, property-tested in
+//!   rust/tests/property_cache.rs.
+//!
+//! The SVM prediction arrives via `AccessContext::predicted_reuse`, filled
+//! by the coordinator (HLO-artifact predictor or the Rust SMO fallback).
+//! An absent prediction (classifier not yet trained) behaves like class 1,
+//! i.e. plain LRU.
+
+use std::collections::BTreeMap;
+
+use crate::util::fasthash::IdHashMap;
+
+use crate::hdfs::BlockId;
+use crate::sim::SimTime;
+
+use super::{AccessContext, CachePolicy};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Region {
+    /// Predicted not-reused: the top of the cache, evicted first.
+    Unused,
+    /// Predicted reused: the bottom, LRU-ordered, protected.
+    Reused,
+}
+
+#[derive(Debug, Default)]
+pub struct HSvmLru {
+    unused: BTreeMap<i64, BlockId>,
+    reused: BTreeMap<i64, BlockId>,
+    index: IdHashMap<BlockId, (Region, i64)>,
+    /// Monotone counters for back-of-region keys; front inserts mirror them.
+    next_hi: i64,
+    next_lo: i64,
+}
+
+impl HSvmLru {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn detach(&mut self, block: BlockId) {
+        if let Some((region, key)) = self.index.remove(&block) {
+            match region {
+                Region::Unused => self.unused.remove(&key),
+                Region::Reused => self.reused.remove(&key),
+            };
+        }
+    }
+
+    fn push_back(&mut self, region: Region, block: BlockId) {
+        let key = self.next_hi;
+        self.next_hi += 1;
+        match region {
+            Region::Unused => self.unused.insert(key, block),
+            Region::Reused => self.reused.insert(key, block),
+        };
+        self.index.insert(block, (region, key));
+    }
+
+    fn push_front_unused(&mut self, block: BlockId) {
+        self.next_lo -= 1;
+        let key = self.next_lo;
+        self.unused.insert(key, block);
+        self.index.insert(block, (Region::Unused, key));
+    }
+
+    fn classify(ctx: &AccessContext) -> bool {
+        // None = classifier not deployed yet -> treat as reused (plain LRU).
+        ctx.predicted_reuse.unwrap_or(true)
+    }
+
+    /// Eviction order (first = next victim): whole unused region, then the
+    /// reused region in LRU order. Diagnostic/test helper.
+    pub fn eviction_order(&self) -> Vec<BlockId> {
+        self.unused
+            .values()
+            .chain(self.reused.values())
+            .copied()
+            .collect()
+    }
+
+    pub fn n_unused(&self) -> usize {
+        self.unused.len()
+    }
+
+    pub fn n_reused(&self) -> usize {
+        self.reused.len()
+    }
+}
+
+impl CachePolicy for HSvmLru {
+    fn name(&self) -> &'static str {
+        "h-svm-lru"
+    }
+
+    fn on_hit(&mut self, block: BlockId, ctx: &AccessContext) {
+        debug_assert!(self.index.contains_key(&block), "hit on untracked block");
+        self.detach(block);
+        if Self::classify(ctx) {
+            // Reused class: move to the bottom of the cache.
+            self.push_back(Region::Reused, block);
+        } else {
+            // Unused class: move to the top for immediate removal.
+            self.push_front_unused(block);
+        }
+    }
+
+    fn on_insert(&mut self, block: BlockId, ctx: &AccessContext) {
+        debug_assert!(!self.index.contains_key(&block), "double insert");
+        if Self::classify(ctx) {
+            self.push_back(Region::Reused, block);
+        } else {
+            // "insert at the end of the unused data list"; with no unused
+            // blocks this lands at the top of the cache, as in Algorithm 1.
+            self.push_back(Region::Unused, block);
+        }
+    }
+
+    fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
+        // Victim = top of the cache: the unused region drains first.
+        self.unused
+            .values()
+            .next()
+            .or_else(|| self.reused.values().next())
+            .copied()
+    }
+
+    fn on_evict(&mut self, block: BlockId) {
+        self.detach(block);
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(t: u64, reuse: bool) -> AccessContext {
+        AccessContext::simple(SimTime(t), 1).with_prediction(reuse)
+    }
+
+    #[test]
+    fn unused_class_evicted_before_reused() {
+        let mut p = HSvmLru::new();
+        p.on_insert(BlockId(1), &ctx(1, true));
+        p.on_insert(BlockId(2), &ctx(2, false));
+        p.on_insert(BlockId(3), &ctx(3, true));
+        // 2 is the only unused block -> first victim despite being newer.
+        assert_eq!(p.choose_victim(SimTime(4)), Some(BlockId(2)));
+        p.on_evict(BlockId(2));
+        // then the LRU of the reused region.
+        assert_eq!(p.choose_victim(SimTime(5)), Some(BlockId(1)));
+    }
+
+    #[test]
+    fn hit_with_class0_moves_to_top() {
+        let mut p = HSvmLru::new();
+        p.on_insert(BlockId(1), &ctx(1, false));
+        p.on_insert(BlockId(2), &ctx(2, false));
+        // Hit on 2 reclassified unused: moves to the very top, ahead of 1.
+        p.on_hit(BlockId(2), &ctx(3, false));
+        assert_eq!(p.choose_victim(SimTime(4)), Some(BlockId(2)));
+    }
+
+    #[test]
+    fn insert_class0_goes_to_end_of_unused_list() {
+        let mut p = HSvmLru::new();
+        p.on_insert(BlockId(1), &ctx(1, false));
+        p.on_insert(BlockId(2), &ctx(2, false));
+        p.on_insert(BlockId(3), &ctx(3, true));
+        // Eviction order: old unused (1), newer unused (2), then reused (3).
+        assert_eq!(
+            p.eviction_order(),
+            vec![BlockId(1), BlockId(2), BlockId(3)]
+        );
+    }
+
+    #[test]
+    fn all_reused_degenerates_to_lru() {
+        let mut p = HSvmLru::new();
+        for i in 0..4 {
+            p.on_insert(BlockId(i), &ctx(i, true));
+        }
+        p.on_hit(BlockId(0), &ctx(10, true));
+        assert_eq!(
+            p.eviction_order(),
+            vec![BlockId(1), BlockId(2), BlockId(3), BlockId(0)]
+        );
+        assert_eq!(p.n_unused(), 0);
+    }
+
+    #[test]
+    fn missing_prediction_behaves_like_lru() {
+        let mut p = HSvmLru::new();
+        let plain = |t: u64| AccessContext::simple(SimTime(t), 1);
+        p.on_insert(BlockId(1), &plain(1));
+        p.on_insert(BlockId(2), &plain(2));
+        p.on_hit(BlockId(1), &plain(3));
+        assert_eq!(p.choose_victim(SimTime(4)), Some(BlockId(2)));
+        assert_eq!(p.n_reused(), 2);
+    }
+
+    #[test]
+    fn paper_fig2_worked_example() {
+        // The Fig 2 request sequence with classes:
+        // (DB1,0)(DB2,1)(DB3,1)(DB4,1)(DB5,0)(DB6,0)(DB7,0)(DB2,0)(DB8,1)(DB3,1)
+        // Capacity: 5 equal blocks. LRU evicts DB2 and DB3 before their
+        // reuse; H-SVM-LRU must keep both cached (the paper's point).
+        use super::super::{lru::Lru, BlockCache};
+        let seq: [(u64, bool); 10] = [
+            (1, false),
+            (2, true),
+            (3, true),
+            (4, true),
+            (5, false),
+            (6, false),
+            (7, false),
+            (2, false),
+            (8, true),
+            (3, true),
+        ];
+        let run = |policy: Box<dyn CachePolicy>| -> (u32, Vec<bool>) {
+            let mut cache = BlockCache::new(policy, 5);
+            let mut hits = 0;
+            let mut hit_seq = Vec::new();
+            for (t, (b, class)) in seq.iter().enumerate() {
+                let c = ctx(t as u64, *class);
+                let o = cache.access_or_insert(BlockId(*b), &c);
+                hits += o.hit as u32;
+                hit_seq.push(o.hit);
+            }
+            (hits, hit_seq)
+        };
+        let (lru_hits, _) = run(Box::new(Lru::new()));
+        let (svm_hits, svm_seq) = run(Box::new(HSvmLru::new()));
+        // LRU: DB2 and DB3 already evicted when re-requested -> both miss.
+        assert_eq!(lru_hits, 0);
+        // H-SVM-LRU: the reused-class blocks survive -> both re-requests hit.
+        assert_eq!(svm_hits, 2);
+        assert!(svm_seq[7], "DB2 re-request must hit");
+        assert!(svm_seq[9], "DB3 re-request must hit");
+    }
+}

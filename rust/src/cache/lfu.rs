@@ -1,0 +1,114 @@
+//! LFU — least frequently used, ties broken by least-recent access.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::hdfs::BlockId;
+use crate::sim::SimTime;
+
+use super::{AccessContext, CachePolicy};
+
+#[derive(Debug, Default)]
+pub struct Lfu {
+    /// (frequency, last-access seq) -> block; victim = first entry.
+    order: BTreeMap<(u64, i64), BlockId>,
+    index: HashMap<BlockId, (u64, i64)>,
+    seq: i64,
+}
+
+impl Lfu {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn bump(&mut self, block: BlockId, add: u64) {
+        let (freq, old_seq) = self.index.remove(&block).unwrap_or((0, 0));
+        if freq > 0 || old_seq != 0 {
+            self.order.remove(&(freq, old_seq));
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        let entry = (freq + add, seq);
+        self.order.insert(entry, block);
+        self.index.insert(block, entry);
+    }
+
+    pub fn frequency(&self, block: BlockId) -> u64 {
+        self.index.get(&block).map(|(f, _)| *f).unwrap_or(0)
+    }
+}
+
+impl CachePolicy for Lfu {
+    fn name(&self) -> &'static str {
+        "lfu"
+    }
+
+    fn on_hit(&mut self, block: BlockId, _ctx: &AccessContext) {
+        debug_assert!(self.index.contains_key(&block));
+        self.bump(block, 1);
+    }
+
+    fn on_insert(&mut self, block: BlockId, _ctx: &AccessContext) {
+        debug_assert!(!self.index.contains_key(&block), "double insert");
+        self.bump(block, 1);
+    }
+
+    fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
+        self.order.values().next().copied()
+    }
+
+    fn on_evict(&mut self, block: BlockId) {
+        if let Some(entry) = self.index.remove(&block) {
+            self.order.remove(&entry);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c() -> AccessContext {
+        AccessContext::simple(SimTime(0), 1)
+    }
+
+    #[test]
+    fn evicts_least_frequent() {
+        let mut p = Lfu::new();
+        for i in 0..3 {
+            p.on_insert(BlockId(i), &c());
+        }
+        p.on_hit(BlockId(0), &c());
+        p.on_hit(BlockId(0), &c());
+        p.on_hit(BlockId(2), &c());
+        assert_eq!(p.frequency(BlockId(0)), 3);
+        assert_eq!(p.choose_victim(SimTime(1)), Some(BlockId(1)));
+    }
+
+    #[test]
+    fn tie_broken_by_recency() {
+        let mut p = Lfu::new();
+        p.on_insert(BlockId(1), &c());
+        p.on_insert(BlockId(2), &c());
+        // Both freq 1; block 1 was touched longer ago.
+        assert_eq!(p.choose_victim(SimTime(1)), Some(BlockId(1)));
+        p.on_hit(BlockId(1), &c());
+        p.on_hit(BlockId(2), &c());
+        // Now both freq 2, block 1 again older.
+        assert_eq!(p.choose_victim(SimTime(2)), Some(BlockId(1)));
+    }
+
+    #[test]
+    fn evict_then_reinsert_resets_frequency() {
+        let mut p = Lfu::new();
+        p.on_insert(BlockId(1), &c());
+        p.on_hit(BlockId(1), &c());
+        p.on_evict(BlockId(1));
+        assert_eq!(p.len(), 0);
+        p.on_insert(BlockId(1), &c());
+        assert_eq!(p.frequency(BlockId(1)), 1);
+    }
+}

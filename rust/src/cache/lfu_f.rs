@@ -1,0 +1,121 @@
+//! LFU-F (PacMan): frequency-based eviction aimed at cluster efficiency,
+//! preferring incomplete files and using the same window-based aging pass
+//! as LIFE to avoid cache pollution (paper §3.1 / [8]).
+
+use std::collections::HashMap;
+
+use crate::hdfs::BlockId;
+use crate::sim::{SimDuration, SimTime};
+
+use super::{AccessContext, CachePolicy};
+
+#[derive(Debug, Clone)]
+struct Entry {
+    complete: bool,
+    last_access: SimTime,
+    accesses: u64,
+}
+
+#[derive(Debug)]
+pub struct LfuF {
+    entries: HashMap<BlockId, Entry>,
+    window: SimDuration,
+}
+
+impl LfuF {
+    pub fn new(window: SimDuration) -> Self {
+        LfuF { entries: HashMap::new(), window }
+    }
+}
+
+impl CachePolicy for LfuF {
+    fn name(&self) -> &'static str {
+        "lfu-f"
+    }
+
+    fn on_hit(&mut self, block: BlockId, ctx: &AccessContext) {
+        let e = self.entries.get_mut(&block).expect("hit on untracked block");
+        e.accesses += 1;
+        e.last_access = ctx.time;
+        e.complete = ctx.file_complete;
+    }
+
+    fn on_insert(&mut self, block: BlockId, ctx: &AccessContext) {
+        debug_assert!(!self.entries.contains_key(&block), "double insert");
+        self.entries.insert(
+            block,
+            Entry { complete: ctx.file_complete, last_access: ctx.time, accesses: 1 },
+        );
+    }
+
+    fn choose_victim(&mut self, now: SimTime) -> Option<BlockId> {
+        if self.entries.is_empty() {
+            return None;
+        }
+        // Window aging first (same anti-pollution pass as LIFE).
+        let aged = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.last_access.duration_until(now) >= self.window)
+            .min_by_key(|(b, e)| (e.accesses, e.last_access, **b));
+        if let Some((b, _)) = aged {
+            return Some(*b);
+        }
+        // LFU-F proper: incomplete files first, then least frequent access.
+        self.entries
+            .iter()
+            .min_by_key(|(b, e)| (e.complete, e.accesses, e.last_access, **b))
+            .map(|(b, _)| *b)
+    }
+
+    fn on_evict(&mut self, block: BlockId) {
+        self.entries.remove(&block);
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(t: u64, complete: bool) -> AccessContext {
+        let mut c = AccessContext::simple(SimTime(t), 1);
+        c.file_complete = complete;
+        c
+    }
+
+    #[test]
+    fn evicts_least_frequent() {
+        let mut p = LfuF::new(SimDuration(1_000_000));
+        p.on_insert(BlockId(1), &ctx(1, false));
+        p.on_insert(BlockId(2), &ctx(2, false));
+        p.on_hit(BlockId(1), &ctx(3, false));
+        assert_eq!(p.choose_victim(SimTime(4)), Some(BlockId(2)));
+    }
+
+    #[test]
+    fn incomplete_prioritized_over_frequency() {
+        let mut p = LfuF::new(SimDuration(1_000_000));
+        p.on_insert(BlockId(1), &ctx(1, true)); // complete, freq 1
+        p.on_insert(BlockId(2), &ctx(2, false)); // incomplete, freq 3
+        p.on_hit(BlockId(2), &ctx(3, false));
+        p.on_hit(BlockId(2), &ctx(4, false));
+        assert_eq!(p.choose_victim(SimTime(5)), Some(BlockId(2)));
+    }
+
+    #[test]
+    fn aged_blocks_evicted_first() {
+        let mut p = LfuF::new(SimDuration(100));
+        p.on_insert(BlockId(1), &ctx(0, false));
+        p.on_insert(BlockId(2), &ctx(0, false));
+        for t in [50, 90, 130, 170] {
+            p.on_hit(BlockId(2), &ctx(t, false));
+        }
+        p.on_hit(BlockId(1), &ctx(60, false));
+        // At t=200, block 1 (last access 60) is outside the window.
+        assert_eq!(p.choose_victim(SimTime(200)), Some(BlockId(1)));
+    }
+}

@@ -1,0 +1,153 @@
+//! LIFE (PacMan): evict blocks of the file with the *largest wave-width*,
+//! preferring incomplete files, with a window-based aging pass to curb
+//! cache pollution. Reduces average completion time for parallel jobs with
+//! the all-or-nothing property (paper §3.1 / [8]).
+
+use std::collections::HashMap;
+
+use crate::hdfs::BlockId;
+use crate::sim::{SimDuration, SimTime};
+
+use super::{AccessContext, CachePolicy};
+
+#[derive(Debug, Clone)]
+struct Entry {
+    file: u64,
+    width: u32,
+    complete: bool,
+    last_access: SimTime,
+    accesses: u64,
+}
+
+#[derive(Debug)]
+pub struct Life {
+    entries: HashMap<BlockId, Entry>,
+    /// Aging window: blocks untouched for longer are eviction candidates
+    /// regardless of wave-width (the PacMan anti-pollution mechanism).
+    window: SimDuration,
+}
+
+impl Life {
+    pub fn new(window: SimDuration) -> Self {
+        Life { entries: HashMap::new(), window }
+    }
+
+    fn record(&mut self, block: BlockId, ctx: &AccessContext, fresh: bool) {
+        let e = self.entries.entry(block).or_insert(Entry {
+            file: ctx.file,
+            width: ctx.file_width,
+            complete: ctx.file_complete,
+            last_access: ctx.time,
+            accesses: 0,
+        });
+        e.file = ctx.file;
+        e.width = ctx.file_width;
+        e.complete = ctx.file_complete;
+        e.last_access = ctx.time;
+        if fresh {
+            e.accesses = 1;
+        } else {
+            e.accesses += 1;
+        }
+    }
+}
+
+impl CachePolicy for Life {
+    fn name(&self) -> &'static str {
+        "life"
+    }
+
+    fn on_hit(&mut self, block: BlockId, ctx: &AccessContext) {
+        self.record(block, ctx, false);
+    }
+
+    fn on_insert(&mut self, block: BlockId, ctx: &AccessContext) {
+        debug_assert!(!self.entries.contains_key(&block), "double insert");
+        self.record(block, ctx, true);
+    }
+
+    fn choose_victim(&mut self, now: SimTime) -> Option<BlockId> {
+        if self.entries.is_empty() {
+            return None;
+        }
+        // Aging pass first: among blocks outside the access window pick the
+        // least-accessed one ("the one with the least number of accesses").
+        let aged = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.last_access.duration_until(now) >= self.window)
+            .min_by_key(|(b, e)| (e.accesses, e.last_access, **b));
+        if let Some((b, _)) = aged {
+            return Some(*b);
+        }
+        // Otherwise LIFE proper: incomplete files first, then the file with
+        // the largest wave-width; oldest access breaks ties.
+        self.entries
+            .iter()
+            .min_by_key(|(b, e)| (e.complete, std::cmp::Reverse(e.width), e.last_access, **b))
+            .map(|(b, _)| *b)
+    }
+
+    fn on_evict(&mut self, block: BlockId) {
+        self.entries.remove(&block);
+    }
+
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(t: u64, file: u64, width: u32, complete: bool) -> AccessContext {
+        let mut c = AccessContext::simple(SimTime(t), 1);
+        c.file = file;
+        c.file_width = width;
+        c.file_complete = complete;
+        c
+    }
+
+    fn policy() -> Life {
+        Life::new(SimDuration(1000))
+    }
+
+    #[test]
+    fn evicts_largest_wave_width() {
+        let mut p = policy();
+        p.on_insert(BlockId(1), &ctx(1, 10, 2, false));
+        p.on_insert(BlockId(2), &ctx(2, 20, 8, false));
+        p.on_insert(BlockId(3), &ctx(3, 30, 4, false));
+        assert_eq!(p.choose_victim(SimTime(10)), Some(BlockId(2)));
+    }
+
+    #[test]
+    fn incomplete_files_evicted_before_complete() {
+        let mut p = policy();
+        p.on_insert(BlockId(1), &ctx(1, 10, 8, true));
+        p.on_insert(BlockId(2), &ctx(2, 20, 2, false));
+        // Despite the smaller width, the incomplete file goes first.
+        assert_eq!(p.choose_victim(SimTime(10)), Some(BlockId(2)));
+    }
+
+    #[test]
+    fn window_aging_overrides_width() {
+        let mut p = policy();
+        p.on_insert(BlockId(1), &ctx(0, 10, 8, false));
+        p.on_insert(BlockId(2), &ctx(0, 20, 2, false));
+        p.on_hit(BlockId(1), &ctx(2000, 10, 8, false));
+        // Block 2 fell out of the window -> evicted first even though
+        // block 1's file has the larger wave-width.
+        assert_eq!(p.choose_victim(SimTime(2100)), Some(BlockId(2)));
+    }
+
+    #[test]
+    fn evict_removes_tracking() {
+        let mut p = policy();
+        p.on_insert(BlockId(1), &ctx(1, 1, 1, false));
+        p.on_evict(BlockId(1));
+        assert_eq!(p.len(), 0);
+        assert_eq!(p.choose_victim(SimTime(2)), None);
+    }
+}

@@ -1,0 +1,116 @@
+//! Classic LRU — the paper's baseline (H-LRU scenario).
+//!
+//! Implemented as the "ordered dictionary" the paper describes (§4.2): an
+//! order index (monotone counter -> block) plus a reverse map. Victim = the
+//! least recently used block (the "top" of the paper's cache picture).
+
+use std::collections::BTreeMap;
+
+use crate::util::fasthash::IdHashMap;
+
+use crate::hdfs::BlockId;
+use crate::sim::SimTime;
+
+use super::{AccessContext, CachePolicy};
+
+#[derive(Debug, Default)]
+pub struct Lru {
+    /// order key -> block, ascending = least recently used first.
+    order: BTreeMap<i64, BlockId>,
+    /// block -> its current order key.
+    index: IdHashMap<BlockId, i64>,
+    next: i64,
+}
+
+impl Lru {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn touch(&mut self, block: BlockId) {
+        if let Some(old) = self.index.remove(&block) {
+            self.order.remove(&old);
+        }
+        let key = self.next;
+        self.next += 1;
+        self.order.insert(key, block);
+        self.index.insert(block, key);
+    }
+
+    /// Eviction order, least-recently-used first (test/diagnostic helper).
+    pub fn eviction_order(&self) -> Vec<BlockId> {
+        self.order.values().copied().collect()
+    }
+}
+
+impl CachePolicy for Lru {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn on_hit(&mut self, block: BlockId, _ctx: &AccessContext) {
+        debug_assert!(self.index.contains_key(&block), "hit on untracked block");
+        self.touch(block);
+    }
+
+    fn on_insert(&mut self, block: BlockId, _ctx: &AccessContext) {
+        debug_assert!(!self.index.contains_key(&block), "double insert");
+        self.touch(block);
+    }
+
+    fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
+        self.order.values().next().copied()
+    }
+
+    fn on_evict(&mut self, block: BlockId) {
+        if let Some(key) = self.index.remove(&block) {
+            self.order.remove(&key);
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(t: u64) -> AccessContext {
+        AccessContext::simple(SimTime(t), 1)
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut lru = Lru::new();
+        for i in 0..3 {
+            lru.on_insert(BlockId(i), &ctx(i));
+        }
+        lru.on_hit(BlockId(0), &ctx(10)); // 0 becomes MRU
+        assert_eq!(lru.choose_victim(SimTime(11)), Some(BlockId(1)));
+        lru.on_evict(BlockId(1));
+        assert_eq!(lru.choose_victim(SimTime(12)), Some(BlockId(2)));
+        assert_eq!(lru.len(), 2);
+    }
+
+    #[test]
+    fn eviction_order_tracks_recency() {
+        let mut lru = Lru::new();
+        for i in 0..4 {
+            lru.on_insert(BlockId(i), &ctx(i));
+        }
+        lru.on_hit(BlockId(1), &ctx(5));
+        assert_eq!(
+            lru.eviction_order(),
+            vec![BlockId(0), BlockId(2), BlockId(3), BlockId(1)]
+        );
+    }
+
+    #[test]
+    fn empty_has_no_victim() {
+        let mut lru = Lru::new();
+        assert_eq!(lru.choose_victim(SimTime(0)), None);
+        assert!(lru.is_empty());
+    }
+}

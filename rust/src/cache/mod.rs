@@ -1,0 +1,304 @@
+//! Cache replacement policies.
+//!
+//! `CachePolicy` is the pluggable eviction-order interface; `BlockCache`
+//! owns capacity accounting and drives a policy. Implemented policies (the
+//! paper's Table 1 survey plus the contribution itself):
+//!
+//! | module            | strategy |
+//! |-------------------|----------|
+//! | `lru`             | classic LRU (the paper's baseline) |
+//! | `hsvmlru`         | **H-SVM-LRU** — Algorithm 1, class-aware LRU |
+//! | `fifo`            | insertion order (sanity baseline) |
+//! | `lfu`             | least frequently used |
+//! | `life`            | PacMan LIFE: largest wave-width first |
+//! | `lfu_f`           | PacMan LFU-F: window-aged frequency |
+//! | `wsclock`         | EDACHE WSClock: ref-bit clock with age threshold |
+//! | `arc`             | Modified ARC: recent/frequent + ghost histories |
+//! | `slru_k`          | Selective LRU-K |
+//! | `exd`             | Exponential-Decay score |
+//! | `block_goodness`  | block-goodness (affinity x access count) |
+//! | `affinity_aware`  | cache-affinity-aware caching benefit |
+//! | `autocache`       | AutoCache-style probability score + watermarks |
+
+pub mod affinity_aware;
+pub mod arc;
+pub mod autocache;
+pub mod block_goodness;
+pub mod exd;
+pub mod fifo;
+pub mod hsvmlru;
+pub mod life;
+pub mod lfu;
+pub mod lfu_f;
+pub mod lru;
+pub mod registry;
+pub mod slru_k;
+pub mod wsclock;
+
+use crate::util::fasthash::IdHashMap;
+
+use crate::hdfs::{BlockId, BlockKind};
+use crate::sim::SimTime;
+
+/// Cache affinity of the requesting application (paper §6.4.2, from [12]):
+/// how much the application benefits from cached data.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum CacheAffinity {
+    Low,
+    Medium,
+    High,
+}
+
+impl CacheAffinity {
+    /// Numeric weight used by affinity-driven policies and the SVM features.
+    pub fn weight(self) -> f64 {
+        match self {
+            CacheAffinity::Low => 0.25,
+            CacheAffinity::Medium => 0.5,
+            CacheAffinity::High => 1.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CacheAffinity::Low => "low",
+            CacheAffinity::Medium => "medium",
+            CacheAffinity::High => "high",
+        }
+    }
+}
+
+/// Per-access context handed to policies (the features different strategies
+/// key on; unneeded fields are ignored by simpler policies).
+#[derive(Debug, Clone)]
+pub struct AccessContext {
+    pub time: SimTime,
+    pub size: u64,
+    pub kind: BlockKind,
+    /// Owning file and its "wave width" (blocks processed concurrently —
+    /// LIFE/LFU-F eviction criterion).
+    pub file: u64,
+    pub file_width: u32,
+    /// Whether all tasks reading this file have completed.
+    pub file_complete: bool,
+    /// Cache affinity of the application issuing the access.
+    pub affinity: CacheAffinity,
+    /// SVM-predicted class: Some(true) = "reused in the future".
+    /// Filled by the coordinator for H-SVM-LRU (and AutoCache's score).
+    pub predicted_reuse: Option<bool>,
+}
+
+impl AccessContext {
+    /// A minimal context for unit tests and trace replay.
+    pub fn simple(time: SimTime, size: u64) -> Self {
+        AccessContext {
+            time,
+            size,
+            kind: BlockKind::Input,
+            file: 0,
+            file_width: 1,
+            file_complete: false,
+            affinity: CacheAffinity::Medium,
+            predicted_reuse: None,
+        }
+    }
+
+    pub fn with_prediction(mut self, reuse: bool) -> Self {
+        self.predicted_reuse = Some(reuse);
+        self
+    }
+}
+
+/// Eviction-order policy. The `BlockCache` guarantees the call protocol:
+/// `on_insert` for blocks not present, `on_hit` for present blocks,
+/// `choose_victim`/`on_evict` pairs while space is needed.
+pub trait CachePolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// A cached block was accessed again.
+    fn on_hit(&mut self, block: BlockId, ctx: &AccessContext);
+
+    /// A block was inserted into the cache.
+    fn on_insert(&mut self, block: BlockId, ctx: &AccessContext);
+
+    /// Pick the next victim (must be a currently tracked block). The policy
+    /// must NOT forget the block yet — `on_evict` confirms.
+    fn choose_victim(&mut self, now: SimTime) -> Option<BlockId>;
+
+    /// The chosen victim (or an externally uncached block) left the cache.
+    fn on_evict(&mut self, block: BlockId);
+
+    /// Number of tracked blocks (must equal the cache's block count).
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether the policy admits this block at all (selective insertion —
+    /// SLRU-K/AutoCache decline some inserts). Default: admit everything.
+    fn admits(&self, _block: BlockId, _ctx: &AccessContext) -> bool {
+        true
+    }
+}
+
+/// Outcome of a cache access through `BlockCache::access_or_insert`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AccessOutcome {
+    pub hit: bool,
+    /// Blocks evicted to make room (empty on hits).
+    pub evicted: Vec<BlockId>,
+    /// Whether the block is cached after the access (false when the policy
+    /// declined admission or the block exceeds capacity).
+    pub inserted: bool,
+}
+
+/// Capacity-accounted cache driving a `CachePolicy`.
+pub struct BlockCache {
+    policy: Box<dyn CachePolicy>,
+    capacity: u64,
+    used: u64,
+    sizes: IdHashMap<BlockId, u64>,
+}
+
+impl BlockCache {
+    pub fn new(policy: Box<dyn CachePolicy>, capacity: u64) -> Self {
+        BlockCache { policy, capacity, used: 0, sizes: IdHashMap::default() }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity - self.used
+    }
+
+    pub fn len(&self) -> usize {
+        self.sizes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sizes.is_empty()
+    }
+
+    pub fn contains(&self, block: BlockId) -> bool {
+        self.sizes.contains_key(&block)
+    }
+
+    pub fn cached_blocks(&self) -> Vec<BlockId> {
+        let mut v: Vec<BlockId> = self.sizes.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The full access path: hit (policy notified) or miss + insertion with
+    /// evictions as needed. Mirrors GetCache/PutCache at the cache level.
+    pub fn access_or_insert(&mut self, block: BlockId, ctx: &AccessContext) -> AccessOutcome {
+        if self.sizes.contains_key(&block) {
+            self.policy.on_hit(block, ctx);
+            debug_assert_eq!(self.policy.len(), self.sizes.len());
+            return AccessOutcome { hit: true, evicted: Vec::new(), inserted: true };
+        }
+        let evicted = self.insert(block, ctx);
+        let inserted = self.sizes.contains_key(&block);
+        AccessOutcome { hit: false, evicted, inserted }
+    }
+
+    /// Insert a missing block, evicting per policy until it fits. Returns
+    /// the evicted blocks. Oversized or policy-declined blocks are skipped.
+    pub fn insert(&mut self, block: BlockId, ctx: &AccessContext) -> Vec<BlockId> {
+        assert!(!self.sizes.contains_key(&block), "insert of cached block");
+        let mut evicted = Vec::new();
+        if ctx.size > self.capacity || !self.policy.admits(block, ctx) {
+            return evicted;
+        }
+        while self.used + ctx.size > self.capacity {
+            match self.policy.choose_victim(ctx.time) {
+                Some(victim) => {
+                    self.policy.on_evict(victim);
+                    let size = self.sizes.remove(&victim).expect("victim not in cache");
+                    self.used -= size;
+                    evicted.push(victim);
+                }
+                None => return evicted, // policy refuses to evict
+            }
+        }
+        self.policy.on_insert(block, ctx);
+        self.sizes.insert(block, ctx.size);
+        self.used += ctx.size;
+        debug_assert_eq!(self.policy.len(), self.sizes.len());
+        evicted
+    }
+
+    /// Externally remove a block (user uncache directive).
+    pub fn remove(&mut self, block: BlockId) -> bool {
+        match self.sizes.remove(&block) {
+            Some(size) => {
+                self.used -= size;
+                self.policy.on_evict(block);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::lru::Lru;
+    use super::*;
+
+    fn ctx(t: u64, size: u64) -> AccessContext {
+        AccessContext::simple(SimTime(t), size)
+    }
+
+    #[test]
+    fn hit_miss_and_eviction_accounting() {
+        let mut cache = BlockCache::new(Box::new(Lru::new()), 300);
+        let o = cache.access_or_insert(BlockId(1), &ctx(1, 100));
+        assert!(!o.hit && o.inserted && o.evicted.is_empty());
+        let o = cache.access_or_insert(BlockId(2), &ctx(2, 100));
+        assert!(!o.hit);
+        let o = cache.access_or_insert(BlockId(1), &ctx(3, 100));
+        assert!(o.hit);
+        // 3rd distinct block fits exactly; 4th forces the LRU victim (2).
+        cache.access_or_insert(BlockId(3), &ctx(4, 100));
+        let o = cache.access_or_insert(BlockId(4), &ctx(5, 100));
+        assert_eq!(o.evicted, vec![BlockId(2)]);
+        assert_eq!(cache.used(), 300);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn oversized_block_is_not_cached() {
+        let mut cache = BlockCache::new(Box::new(Lru::new()), 100);
+        let o = cache.access_or_insert(BlockId(1), &ctx(1, 500));
+        assert!(!o.hit && !o.inserted);
+        assert_eq!(cache.used(), 0);
+    }
+
+    #[test]
+    fn remove_frees_space() {
+        let mut cache = BlockCache::new(Box::new(Lru::new()), 100);
+        cache.access_or_insert(BlockId(1), &ctx(1, 60));
+        assert!(cache.remove(BlockId(1)));
+        assert!(!cache.remove(BlockId(1)));
+        assert_eq!(cache.used(), 0);
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn affinity_weights_ordered() {
+        assert!(CacheAffinity::High.weight() > CacheAffinity::Medium.weight());
+        assert!(CacheAffinity::Medium.weight() > CacheAffinity::Low.weight());
+    }
+}

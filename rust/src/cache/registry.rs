@@ -1,0 +1,92 @@
+//! Policy registry: construct any implemented policy by name (CLI,
+//! experiments and the policy-comparison ablation all go through here).
+
+use crate::sim::SimDuration;
+
+use super::affinity_aware::AffinityAware;
+use super::arc::ModifiedArc;
+use super::autocache::AutoCache;
+use super::block_goodness::BlockGoodness;
+use super::exd::Exd;
+use super::fifo::Fifo;
+use super::hsvmlru::HSvmLru;
+use super::life::Life;
+use super::lfu::Lfu;
+use super::lfu_f::LfuF;
+use super::lru::Lru;
+use super::slru_k::SlruK;
+use super::wsclock::WsClock;
+use super::CachePolicy;
+
+/// All registered policy names, in presentation order.
+pub const POLICY_NAMES: &[&str] = &[
+    "lru",
+    "h-svm-lru",
+    "fifo",
+    "lfu",
+    "life",
+    "lfu-f",
+    "wsclock",
+    "modified-arc",
+    "slru-k",
+    "exd",
+    "block-goodness",
+    "affinity-aware",
+    "autocache",
+];
+
+/// Instantiate a policy by name with its default parameters.
+pub fn make_policy(name: &str) -> Option<Box<dyn CachePolicy>> {
+    let window = SimDuration::from_secs_f64(120.0);
+    let tau = SimDuration::from_secs_f64(60.0);
+    Some(match name {
+        "lru" => Box::new(Lru::new()),
+        "h-svm-lru" => Box::new(HSvmLru::new()),
+        "fifo" => Box::new(Fifo::new()),
+        "lfu" => Box::new(Lfu::new()),
+        "life" => Box::new(Life::new(window)),
+        "lfu-f" => Box::new(LfuF::new(window)),
+        "wsclock" => Box::new(WsClock::new(tau)),
+        "modified-arc" => Box::new(ModifiedArc::new(64)),
+        "slru-k" => Box::new(SlruK::new(2)),
+        "exd" => Box::new(Exd::new(0.01)),
+        "block-goodness" => Box::new(BlockGoodness::new()),
+        "affinity-aware" => Box::new(AffinityAware::new()),
+        "autocache" => Box::new(AutoCache::new()),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::{AccessContext, BlockCache};
+    use crate::hdfs::BlockId;
+    use crate::sim::SimTime;
+
+    #[test]
+    fn every_registered_name_constructs() {
+        for name in POLICY_NAMES {
+            let p = make_policy(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(&p.name(), name);
+        }
+        assert!(make_policy("nonsense").is_none());
+    }
+
+    #[test]
+    fn every_policy_survives_a_generic_workout() {
+        // 200 accesses over 50 blocks against a 10-block cache: the cache
+        // invariants must hold for every policy.
+        for name in POLICY_NAMES {
+            let mut cache = BlockCache::new(make_policy(name).unwrap(), 10);
+            for t in 0..200u64 {
+                let b = BlockId((t * 7 + t * t % 13) % 50);
+                let ctx = AccessContext::simple(SimTime(t), 1)
+                    .with_prediction(t % 3 == 0);
+                cache.access_or_insert(b, &ctx);
+                assert!(cache.used() <= cache.capacity(), "{name} overflow");
+                assert_eq!(cache.used(), cache.len() as u64, "{name} accounting");
+            }
+        }
+    }
+}

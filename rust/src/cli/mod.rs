@@ -1,0 +1,213 @@
+//! Command-line interface (no `clap` offline — a small hand-rolled parser).
+//!
+//! ```text
+//! repro <subcommand> [flags]
+//!
+//! Subcommands:
+//!   quickstart          tiny end-to-end demo
+//!   fig3                hit ratio vs cache size (Fig 3)
+//!   table7              improvement ratios (Table 7)
+//!   fig4                exec time vs input size (Fig 4)
+//!   fig5                workload normalized run times (Fig 5)
+//!   fig6                per-app normalized run times (Fig 6)
+//!   table5 [--cv]       kernel-function comparison (Table 5)
+//!   policies            all-policy ablation on the Fig 3 trace
+//!   all                 run every experiment in sequence
+//!
+//! Common flags:
+//!   --svm-backend hlo|rust     classifier backend (default hlo)
+//!   --artifacts DIR            AOT artifacts directory (default artifacts)
+//!   --kernel linear|rbf|sigmoid（default rbf)
+//!   --seed N                   simulation seed
+//!   --scale F                  workload scale for fig5/fig6 (default 0.05)
+//!   --csv                      emit CSV instead of aligned tables
+//!   --config FILE              TOML config file
+//!   --log-level LEVEL          off|error|warn|info|debug|trace
+//! ```
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SvmConfig;
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Cli {
+    pub command: String,
+    pub flags: HashMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Cli {
+    /// Parse `args` (without argv[0]). Flags take a value (`--seed 7`),
+    /// switches don't (`--csv`).
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        let mut command = String::new();
+        let mut flags = HashMap::new();
+        let mut switches = Vec::new();
+        let valued = [
+            "--svm-backend",
+            "--artifacts",
+            "--kernel",
+            "--seed",
+            "--scale",
+            "--config",
+            "--log-level",
+            "--cache-blocks",
+            "--workload",
+            "--policy",
+            "--repetitions",
+            "--input-gb",
+        ];
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if valued.contains(&a.as_str()) {
+                    let v = args
+                        .get(i + 1)
+                        .with_context(|| format!("flag {a} needs a value"))?;
+                    flags.insert(name.to_string(), v.clone());
+                    i += 2;
+                } else {
+                    switches.push(name.to_string());
+                    i += 1;
+                }
+            } else if command.is_empty() {
+                command = a.clone();
+                i += 1;
+            } else {
+                bail!("unexpected argument {a:?}");
+            }
+        }
+        if command.is_empty() {
+            command = "help".to_string();
+        }
+        Ok(Cli { command, flags, switches })
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn seed(&self) -> Result<u64> {
+        match self.flag("seed") {
+            Some(s) => s.parse().context("bad --seed"),
+            None => Ok(20230101),
+        }
+    }
+
+    pub fn scale(&self) -> Result<f64> {
+        match self.flag("scale") {
+            Some(s) => {
+                let v: f64 = s.parse().context("bad --scale")?;
+                if v <= 0.0 {
+                    bail!("--scale must be positive");
+                }
+                Ok(v)
+            }
+            None => Ok(crate::experiments::fig5::DEFAULT_SCALE),
+        }
+    }
+
+    /// Build the SVM config from flags (+ optional config file).
+    pub fn svm_config(&self) -> Result<SvmConfig> {
+        let mut cfg = SvmConfig::default();
+        if let Some(path) = self.flag("config") {
+            let (_cluster, svm) = crate::config::load(Some(path))?;
+            cfg = svm;
+        }
+        if let Some(b) = self.flag("svm-backend") {
+            cfg.backend = b.to_string();
+        }
+        if let Some(d) = self.flag("artifacts") {
+            cfg.artifacts_dir = d.to_string();
+        }
+        if let Some(k) = self.flag("kernel") {
+            cfg.kernel = k.to_string();
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+pub const HELP: &str = "\
+h-svm-lru repro — Hadoop-oriented SVM-LRU cache replacement (cs.DC 2023)
+
+USAGE: repro <subcommand> [flags]
+
+SUBCOMMANDS
+  quickstart   tiny end-to-end demo (trace replay, LRU vs H-SVM-LRU)
+  fig3         cache hit ratio vs cache size            (paper Fig 3)
+  table7       improvement ratio of H-SVM-LRU over LRU  (paper Table 7)
+  fig4         WordCount exec time vs input size        (paper Fig 4)
+  fig5         normalized run time of workloads W1-W6   (paper Fig 5)
+  fig6         per-app normalized run time              (paper Fig 6)
+  table5       SVM kernel comparison [--cv for k-fold]  (paper Table 5)
+  policies     all-policy ablation over the Fig 3 trace (Table 1 survey)
+  simulate     DES cluster simulation: Poisson arrivals, heartbeats,
+               [--policy P] [--failures] [--prefetch]
+  all          every experiment in sequence
+
+FLAGS
+  --svm-backend hlo|rust   classifier backend (default: hlo; rust = SMO)
+  --artifacts DIR          AOT artifact dir (default: artifacts)
+  --kernel K               linear|rbf|sigmoid (default: rbf)
+  --seed N                 simulation seed
+  --scale F                workload scale for fig5/fig6 (default 0.05)
+  --cache-blocks N         cache size for `policies` (default 8)
+  --csv                    CSV output
+  --config FILE            TOML config file
+  --log-level L            off|error|warn|info|debug|trace
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Cli {
+        Cli::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let cli = parse(&["fig3", "--seed", "7", "--csv", "--svm-backend", "rust"]);
+        assert_eq!(cli.command, "fig3");
+        assert_eq!(cli.seed().unwrap(), 7);
+        assert!(cli.switch("csv"));
+        assert_eq!(cli.flag("svm-backend"), Some("rust"));
+    }
+
+    #[test]
+    fn svm_config_from_flags() {
+        let cli = parse(&["fig3", "--svm-backend", "rust", "--kernel", "linear"]);
+        let cfg = cli.svm_config().unwrap();
+        assert_eq!(cfg.backend, "rust");
+        assert_eq!(cfg.kernel, "linear");
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Cli::parse(&["fig3".to_string(), "--seed".to_string()]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_scale_rejected() {
+        let cli = parse(&["fig5", "--scale", "-1"]);
+        assert!(cli.scale().is_err());
+        let cli = parse(&["fig5"]);
+        assert!(cli.scale().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn empty_args_is_help() {
+        let cli = Cli::parse(&[]).unwrap();
+        assert_eq!(cli.command, "help");
+    }
+}

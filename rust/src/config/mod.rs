@@ -1,0 +1,349 @@
+//! Typed configuration for the simulated cluster and experiments.
+//!
+//! Defaults mirror the paper's testbed (§6.1, Table 6): 1 NameNode +
+//! 9 DataNodes on 10 GbE, HDD storage, 1.5 GB cache per DataNode,
+//! replication 3, 64/128 MB blocks, speculative execution off.
+//! Values can be overridden from a TOML-subset file (`config::toml`) or CLI
+//! flags; every field is validated before a simulation starts.
+
+pub mod toml;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::bytes::{self, GB, MB};
+
+/// Disk (HDD) service model for a DataNode.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiskModel {
+    /// Sequential read bandwidth in bytes/sec (paper: 1 TB HDD, ~120 MB/s).
+    pub read_bandwidth_bps: f64,
+    /// Per-request positioning latency in seconds (seek + rotational).
+    pub seek_latency_s: f64,
+}
+
+impl Default for DiskModel {
+    fn default() -> Self {
+        DiskModel { read_bandwidth_bps: 120.0 * MB as f64, seek_latency_s: 0.008 }
+    }
+}
+
+/// Network model between nodes in the same rack (paper: 10 GbE switch).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkModel {
+    pub bandwidth_bps: f64,
+    pub rtt_s: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        NetworkModel { bandwidth_bps: 1.25 * GB as f64, rtt_s: 0.0002 }
+    }
+}
+
+/// Memory (off-heap cache) read model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemoryModel {
+    pub read_bandwidth_bps: f64,
+    pub access_latency_s: f64,
+}
+
+impl Default for MemoryModel {
+    fn default() -> Self {
+        MemoryModel { read_bandwidth_bps: 8.0 * GB as f64, access_latency_s: 0.000_05 }
+    }
+}
+
+/// Whole-cluster configuration (Table 6 defaults).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of DataNodes (paper: 9, plus one NameNode).
+    pub datanodes: usize,
+    /// dfs.replication (paper: 3).
+    pub replication: usize,
+    /// dfs.blocksize in bytes (paper: 64 MB or 128 MB).
+    pub block_size: u64,
+    /// Off-heap cache capacity per DataNode in bytes (paper: 1.5 GB).
+    pub cache_capacity_per_node: u64,
+    /// Map container memory (mapreduce.map.memory.mb) — bounds map slots.
+    pub map_memory_mb: u64,
+    /// Reduce container memory (mapreduce.reduce.memory.mb).
+    pub reduce_memory_mb: u64,
+    /// Physical memory per node available to containers.
+    pub node_memory_mb: u64,
+    /// CPU cores per node (i7-6700: 4 cores / 8 threads).
+    pub cores_per_node: usize,
+    /// DataNode heartbeat (and cache report) interval in seconds.
+    pub heartbeat_interval_s: f64,
+    /// Speculative execution (paper disables it).
+    pub speculative_execution: bool,
+    pub disk: DiskModel,
+    pub network: NetworkModel,
+    pub memory: MemoryModel,
+    /// RNG seed for the whole simulation.
+    pub seed: u64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            datanodes: 9,
+            replication: 3,
+            block_size: 128 * MB,
+            cache_capacity_per_node: (1.5 * GB as f64) as u64,
+            map_memory_mb: 1024,
+            reduce_memory_mb: 2048,
+            node_memory_mb: 16 * 1024,
+            cores_per_node: 4,
+            heartbeat_interval_s: 3.0,
+            speculative_execution: false,
+            disk: DiskModel::default(),
+            network: NetworkModel::default(),
+            memory: MemoryModel::default(),
+            seed: 20230101,
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// Map task slots per node, bounded by container memory and cores.
+    pub fn map_slots_per_node(&self) -> usize {
+        let by_mem = (self.node_memory_mb / self.map_memory_mb.max(1)) as usize;
+        by_mem.min(self.cores_per_node * 2).max(1)
+    }
+
+    /// Reduce task slots per node.
+    pub fn reduce_slots_per_node(&self) -> usize {
+        let by_mem = (self.node_memory_mb / self.reduce_memory_mb.max(1)) as usize;
+        by_mem.min(self.cores_per_node).max(1)
+    }
+
+    /// Cache capacity per node measured in whole blocks.
+    pub fn cache_blocks_per_node(&self) -> u64 {
+        self.cache_capacity_per_node / self.block_size.max(1)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.datanodes == 0 {
+            bail!("datanodes must be > 0");
+        }
+        if self.replication == 0 || self.replication > self.datanodes {
+            bail!(
+                "replication {} must be in 1..={}",
+                self.replication,
+                self.datanodes
+            );
+        }
+        if self.block_size == 0 {
+            bail!("block_size must be > 0");
+        }
+        if self.disk.read_bandwidth_bps <= 0.0
+            || self.network.bandwidth_bps <= 0.0
+            || self.memory.read_bandwidth_bps <= 0.0
+        {
+            bail!("bandwidths must be positive");
+        }
+        if self.heartbeat_interval_s <= 0.0 {
+            bail!("heartbeat interval must be positive");
+        }
+        Ok(())
+    }
+
+    /// Apply overrides from a parsed TOML document ([cluster] section).
+    pub fn apply_toml(&mut self, doc: &toml::Document) -> Result<()> {
+        if let Some(v) = doc.get_i64("cluster.datanodes") {
+            self.datanodes = v as usize;
+        }
+        if let Some(v) = doc.get_i64("cluster.replication") {
+            self.replication = v as usize;
+        }
+        if let Some(v) = doc.get_str("cluster.block_size") {
+            self.block_size = bytes::parse_bytes(v)
+                .with_context(|| format!("bad cluster.block_size {v:?}"))?;
+        }
+        if let Some(v) = doc.get_str("cluster.cache_capacity_per_node") {
+            self.cache_capacity_per_node = bytes::parse_bytes(v)
+                .with_context(|| format!("bad cluster.cache_capacity_per_node {v:?}"))?;
+        }
+        if let Some(v) = doc.get_i64("cluster.map_memory_mb") {
+            self.map_memory_mb = v as u64;
+        }
+        if let Some(v) = doc.get_i64("cluster.reduce_memory_mb") {
+            self.reduce_memory_mb = v as u64;
+        }
+        if let Some(v) = doc.get_i64("cluster.node_memory_mb") {
+            self.node_memory_mb = v as u64;
+        }
+        if let Some(v) = doc.get_i64("cluster.cores_per_node") {
+            self.cores_per_node = v as usize;
+        }
+        if let Some(v) = doc.get_f64("cluster.heartbeat_interval_s") {
+            self.heartbeat_interval_s = v;
+        }
+        if let Some(v) = doc.get_bool("cluster.speculative_execution") {
+            self.speculative_execution = v;
+        }
+        if let Some(v) = doc.get_f64("cluster.disk.read_bandwidth_mbps") {
+            self.disk.read_bandwidth_bps = v * MB as f64;
+        }
+        if let Some(v) = doc.get_f64("cluster.disk.seek_latency_ms") {
+            self.disk.seek_latency_s = v / 1000.0;
+        }
+        if let Some(v) = doc.get_f64("cluster.network.bandwidth_gbps") {
+            self.network.bandwidth_bps = v * GB as f64 / 8.0;
+        }
+        if let Some(v) = doc.get_f64("cluster.memory.read_bandwidth_gbps") {
+            self.memory.read_bandwidth_bps = v * GB as f64;
+        }
+        if let Some(v) = doc.get_i64("cluster.seed") {
+            self.seed = v as u64;
+        }
+        self.validate()
+    }
+}
+
+/// SVM classifier configuration for the coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SvmConfig {
+    /// "hlo" (PJRT artifacts) or "rust" (in-process SMO reference).
+    pub backend: String,
+    /// Directory holding the AOT artifacts.
+    pub artifacts_dir: String,
+    /// Kernel function variant (linear | rbf | sigmoid).
+    pub kernel: String,
+    /// Retrain after this many new labeled history samples.
+    pub retrain_interval: usize,
+    /// Minimum samples before the first training round.
+    pub min_train_samples: usize,
+}
+
+impl Default for SvmConfig {
+    fn default() -> Self {
+        SvmConfig {
+            backend: "hlo".into(),
+            artifacts_dir: "artifacts".into(),
+            kernel: "rbf".into(),
+            retrain_interval: 128,
+            min_train_samples: 32,
+        }
+    }
+}
+
+impl SvmConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !matches!(self.backend.as_str(), "hlo" | "rust") {
+            bail!("svm backend must be 'hlo' or 'rust', got {:?}", self.backend);
+        }
+        if !matches!(self.kernel.as_str(), "linear" | "rbf" | "sigmoid") {
+            bail!("svm kernel must be linear|rbf|sigmoid, got {:?}", self.kernel);
+        }
+        if self.min_train_samples == 0 {
+            bail!("min_train_samples must be > 0");
+        }
+        Ok(())
+    }
+
+    pub fn apply_toml(&mut self, doc: &toml::Document) -> Result<()> {
+        if let Some(v) = doc.get_str("svm.backend") {
+            self.backend = v.to_string();
+        }
+        if let Some(v) = doc.get_str("svm.artifacts_dir") {
+            self.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = doc.get_str("svm.kernel") {
+            self.kernel = v.to_string();
+        }
+        if let Some(v) = doc.get_i64("svm.retrain_interval") {
+            self.retrain_interval = v as usize;
+        }
+        if let Some(v) = doc.get_i64("svm.min_train_samples") {
+            self.min_train_samples = v as usize;
+        }
+        self.validate()
+    }
+}
+
+/// Load both configs from an optional TOML file path.
+pub fn load(path: Option<&str>) -> Result<(ClusterConfig, SvmConfig)> {
+    let mut cluster = ClusterConfig::default();
+    let mut svm = SvmConfig::default();
+    if let Some(path) = path {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config file {path:?}"))?;
+        let doc = toml::Document::parse(&text)?;
+        cluster.apply_toml(&doc)?;
+        svm.apply_toml(&doc)?;
+    }
+    Ok((cluster, svm))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.datanodes, 9);
+        assert_eq!(c.replication, 3);
+        assert_eq!(c.block_size, 128 * MB);
+        assert_eq!(c.cache_blocks_per_node(), 12); // 1.5GB / 128MB
+        assert!(!c.speculative_execution);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn cache_blocks_for_64mb() {
+        let c = ClusterConfig { block_size: 64 * MB, ..Default::default() };
+        assert_eq!(c.cache_blocks_per_node(), 24); // 1.5GB / 64MB
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let doc = toml::Document::parse(
+            r#"
+[cluster]
+datanodes = 4
+block_size = "64MB"
+cache_capacity_per_node = "768MB"
+seed = 7
+[cluster.disk]
+read_bandwidth_mbps = 90.0
+[svm]
+backend = "rust"
+kernel = "linear"
+"#,
+        )
+        .unwrap();
+        let mut c = ClusterConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.datanodes, 4);
+        assert_eq!(c.block_size, 64 * MB);
+        assert_eq!(c.cache_blocks_per_node(), 12);
+        assert_eq!(c.seed, 7);
+        assert!((c.disk.read_bandwidth_bps - 90.0 * MB as f64).abs() < 1.0);
+        let mut s = SvmConfig::default();
+        s.apply_toml(&doc).unwrap();
+        assert_eq!(s.backend, "rust");
+        assert_eq!(s.kernel, "linear");
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = ClusterConfig { datanodes: 0, ..Default::default() };
+        assert!(c.validate().is_err());
+        c.datanodes = 2;
+        c.replication = 3;
+        assert!(c.validate().is_err());
+        let s = SvmConfig { backend: "gpu".into(), ..Default::default() };
+        assert!(s.validate().is_err());
+        let s = SvmConfig { kernel: "poly".into(), ..Default::default() };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn slots_derived_from_memory() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.map_slots_per_node(), 8); // min(16G/1G, 2*4cores)
+        assert_eq!(c.reduce_slots_per_node(), 4); // min(16G/2G, 4cores)
+    }
+}

@@ -1,0 +1,301 @@
+//! TOML-subset parser (no `serde`/`toml` offline — see DESIGN.md §2).
+//!
+//! Supports the subset our config files use: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / integer / float /
+//! boolean / homogeneous-array values, `#` comments, and blank lines.
+//! Unsupported TOML (multi-line strings, dates, inline tables) is rejected
+//! with a line-numbered error.
+
+use std::collections::BTreeMap;
+
+use thiserror::Error;
+
+/// A parsed TOML-subset value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    String(String),
+    Integer(i64),
+    Float(f64),
+    Boolean(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::String(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Integer(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Integers widen to floats on request.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Integer(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Boolean(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(xs) => Some(xs),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Error)]
+pub enum TomlError {
+    #[error("line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+}
+
+fn err(line: usize, msg: impl Into<String>) -> TomlError {
+    TomlError::Parse { line, msg: msg.into() }
+}
+
+/// Parsed document: dotted-path key -> value ("section.key").
+#[derive(Debug, Clone, Default)]
+pub struct Document {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Self, TomlError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| err(lineno, "unterminated section header"))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(err(lineno, "empty section name"));
+                }
+                if name.starts_with('[') {
+                    return Err(err(lineno, "array-of-tables is not supported"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, format!("expected key = value, got {line:?}")))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            if entries.insert(path.clone(), value).is_some() {
+                return Err(err(lineno, format!("duplicate key {path:?}")));
+            }
+        }
+        Ok(Document { entries })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+
+    pub fn get_i64(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_i64)
+    }
+
+    pub fn get_f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_f64)
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    /// All keys under `section.` (one level or deeper).
+    pub fn section_keys<'a>(&'a self, section: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let prefix = format!("{section}.");
+        self.entries
+            .keys()
+            .filter(move |k| k.starts_with(&prefix))
+            .map(String::as_str)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a basic string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<Value, TomlError> {
+    if text.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| err(lineno, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(err(lineno, "embedded quotes are not supported"));
+        }
+        return Ok(Value::String(inner.to_string()));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = split_array_items(inner, lineno)?
+            .into_iter()
+            .map(|item| parse_value(item.trim(), lineno))
+            .collect::<Result<Vec<_>, _>>()?;
+        return Ok(Value::Array(items));
+    }
+    match text {
+        "true" => return Ok(Value::Boolean(true)),
+        "false" => return Ok(Value::Boolean(false)),
+        _ => {}
+    }
+    if !text.contains('.') && !text.contains('e') && !text.contains('E') {
+        if let Ok(i) = text.replace('_', "").parse::<i64>() {
+            return Ok(Value::Integer(i));
+        }
+    }
+    if let Ok(f) = text.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(lineno, format!("cannot parse value {text:?}")))
+}
+
+fn split_array_items(inner: &str, lineno: usize) -> Result<Vec<&str>, TomlError> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in inner.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => {
+                depth = depth
+                    .checked_sub(1)
+                    .ok_or_else(|| err(lineno, "unbalanced brackets"))?;
+            }
+            ',' if !in_str && depth == 0 => {
+                items.push(&inner[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        return Err(err(lineno, "unterminated string in array"));
+    }
+    items.push(&inner[start..]);
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = Document::parse(
+            r#"
+# cluster
+top = "level"
+[cluster]
+datanodes = 9
+block_size = "128MB"   # trailing comment
+fast = true
+ratio = 1.5
+sizes = [6, 8, 10]
+names = ["a", "b"]
+[cluster.disk]
+bandwidth = 100.0
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("top"), Some("level"));
+        assert_eq!(doc.get_i64("cluster.datanodes"), Some(9));
+        assert_eq!(doc.get_str("cluster.block_size"), Some("128MB"));
+        assert_eq!(doc.get_bool("cluster.fast"), Some(true));
+        assert_eq!(doc.get_f64("cluster.ratio"), Some(1.5));
+        assert_eq!(doc.get_f64("cluster.disk.bandwidth"), Some(100.0));
+        let arr = doc.get("cluster.sizes").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].as_i64(), Some(6));
+    }
+
+    #[test]
+    fn integer_widens_to_float() {
+        let doc = Document::parse("x = 3").unwrap();
+        assert_eq!(doc.get_f64("x"), Some(3.0));
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(Document::parse("a = 1\na = 2").is_err());
+        assert!(Document::parse("novalue =").is_err());
+        assert!(Document::parse("[unterminated").is_err());
+        assert!(Document::parse("x = \"open").is_err());
+        assert!(Document::parse("x = [1, 2").is_err());
+        assert!(Document::parse("just a line").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_is_kept() {
+        let doc = Document::parse(r##"x = "a # b""##).unwrap();
+        assert_eq!(doc.get_str("x"), Some("a # b"));
+    }
+
+    #[test]
+    fn section_keys_iterates() {
+        let doc = Document::parse("[s]\na = 1\nb = 2\n[t]\nc = 3").unwrap();
+        let keys: Vec<_> = doc.section_keys("s").collect();
+        assert_eq!(keys, vec!["s.a", "s.b"]);
+    }
+}

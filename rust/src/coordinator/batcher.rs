@@ -1,0 +1,226 @@
+//! Prediction micro-batching + class caching.
+//!
+//! Algorithm 1 consults the SVM on *every* cache decision. Calling the
+//! PJRT executable per block would put an artifact invocation on each
+//! request; instead the coordinator:
+//!
+//! 1. caches the predicted class per block, invalidating when the block's
+//!    feature state drifts (its access count changes — frequency and
+//!    recency are the live features), and
+//! 2. batches cold predictions: queries accumulate into the artifact's
+//!    native batch width before one `decision_batch` call scores them all
+//!    (the vLLM-router-style amortization; see DESIGN.md §8).
+
+use crate::util::fasthash::IdHashMap;
+
+use anyhow::Result;
+
+use crate::hdfs::BlockId;
+use crate::runtime::SvmBackend;
+use crate::svm::features::FeatureVec;
+
+/// Cached prediction: class + the access-count stamp it was computed at.
+#[derive(Debug, Clone, Copy)]
+struct CachedClass {
+    reused: bool,
+    stamp: u64,
+}
+
+/// Batching predictor with a per-block class cache.
+pub struct PredictionBatcher {
+    cache: IdHashMap<BlockId, CachedClass>,
+    /// Pending cold queries (block, stamp, features).
+    pending: Vec<(BlockId, u64, FeatureVec)>,
+    /// Flush threshold = artifact batch width.
+    batch_width: usize,
+    pub stats: BatcherStats,
+}
+
+/// Telemetry for the perf pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatcherStats {
+    pub queries: u64,
+    pub class_cache_hits: u64,
+    pub backend_calls: u64,
+    pub predictions_scored: u64,
+}
+
+impl PredictionBatcher {
+    pub fn new(batch_width: usize) -> Self {
+        PredictionBatcher {
+            cache: IdHashMap::default(),
+            pending: Vec::new(),
+            batch_width: batch_width.max(1),
+            stats: BatcherStats::default(),
+        }
+    }
+
+    /// Predict the class of one block, given its current feature vector and
+    /// an access-count stamp. Uses the class cache when the stamp matches;
+    /// otherwise queues the query and flushes a full batch through the
+    /// backend synchronously (the caller needs the answer now — pending
+    /// entries ride along in the same call).
+    pub fn predict(
+        &mut self,
+        backend: &mut dyn SvmBackend,
+        block: BlockId,
+        stamp: u64,
+        features: FeatureVec,
+    ) -> Result<bool> {
+        self.stats.queries += 1;
+        if let Some(c) = self.cache.get(&block) {
+            if c.stamp == stamp {
+                self.stats.class_cache_hits += 1;
+                return Ok(c.reused);
+            }
+        }
+        self.pending.push((block, stamp, features));
+        self.flush(backend)?;
+        Ok(self.cache.get(&block).expect("flush populated cache").reused)
+    }
+
+    /// Score everything pending in batch_width chunks.
+    pub fn flush(&mut self, backend: &mut dyn SvmBackend) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        let pending = std::mem::take(&mut self.pending);
+        for chunk in pending.chunks(self.batch_width) {
+            let queries: Vec<FeatureVec> = chunk.iter().map(|(_, _, f)| *f).collect();
+            let scores = backend.decision_batch(&queries)?;
+            self.stats.backend_calls += 1;
+            self.stats.predictions_scored += scores.len() as u64;
+            for ((block, stamp, _), score) in chunk.iter().zip(scores) {
+                self.cache
+                    .insert(*block, CachedClass { reused: score > 0.0, stamp: *stamp });
+            }
+        }
+        Ok(())
+    }
+
+    /// Queue a prediction without needing the answer immediately (prefetch
+    /// for blocks we expect to decide on soon).
+    pub fn prefetch(&mut self, block: BlockId, stamp: u64, features: FeatureVec) {
+        let fresh = self
+            .cache
+            .get(&block)
+            .map(|c| c.stamp == stamp)
+            .unwrap_or(false);
+        if !fresh && !self.pending.iter().any(|(b, s, _)| *b == block && *s == stamp) {
+            self.pending.push((block, stamp, features));
+        }
+    }
+
+    /// Invalidate all cached classes (after retraining).
+    pub fn invalidate_all(&mut self) {
+        self.cache.clear();
+        self.pending.clear();
+    }
+
+    pub fn cached_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::features::N_FEATURES;
+
+    /// A backend that classifies by feature[0] > 0.5 and counts calls.
+    struct FakeBackend {
+        calls: u64,
+    }
+
+    impl SvmBackend for FakeBackend {
+        fn name(&self) -> &'static str {
+            "fake"
+        }
+        fn train(&mut self, _ds: &crate::svm::Dataset) -> Result<()> {
+            Ok(())
+        }
+        fn decision_batch(&mut self, q: &[FeatureVec]) -> Result<Vec<f32>> {
+            self.calls += 1;
+            Ok(q.iter().map(|f| f[0] - 0.5).collect())
+        }
+        fn is_trained(&self) -> bool {
+            true
+        }
+    }
+
+    fn fv(v: f32) -> FeatureVec {
+        let mut f = [0.0f32; N_FEATURES];
+        f[0] = v;
+        f
+    }
+
+    #[test]
+    fn class_cache_avoids_backend_calls() {
+        let mut be = FakeBackend { calls: 0 };
+        let mut batcher = PredictionBatcher::new(8);
+        let b = BlockId(1);
+        assert!(batcher.predict(&mut be, b, 0, fv(0.9)).unwrap());
+        assert_eq!(be.calls, 1);
+        // Same stamp: served from the class cache.
+        for _ in 0..10 {
+            assert!(batcher.predict(&mut be, b, 0, fv(0.9)).unwrap());
+        }
+        assert_eq!(be.calls, 1);
+        assert_eq!(batcher.stats.class_cache_hits, 10);
+        // New stamp: re-scored.
+        assert!(!batcher.predict(&mut be, b, 1, fv(0.1)).unwrap());
+        assert_eq!(be.calls, 2);
+    }
+
+    #[test]
+    fn prefetch_batches_ride_along() {
+        let mut be = FakeBackend { calls: 0 };
+        let mut batcher = PredictionBatcher::new(8);
+        for i in 0..5 {
+            batcher.prefetch(BlockId(i), 0, fv(0.8));
+        }
+        assert_eq!(batcher.pending_len(), 5);
+        // One predict triggers a single backend call scoring all 6.
+        assert!(batcher.predict(&mut be, BlockId(9), 0, fv(0.7)).unwrap());
+        assert_eq!(be.calls, 1);
+        assert_eq!(batcher.stats.predictions_scored, 6);
+        // The prefetched classes are now cached.
+        assert!(batcher.predict(&mut be, BlockId(3), 0, fv(0.8)).unwrap());
+        assert_eq!(be.calls, 1);
+    }
+
+    #[test]
+    fn oversized_pending_splits_into_chunks() {
+        let mut be = FakeBackend { calls: 0 };
+        let mut batcher = PredictionBatcher::new(4);
+        for i in 0..9 {
+            batcher.prefetch(BlockId(i), 0, fv(0.6));
+        }
+        batcher.flush(&mut be).unwrap();
+        assert_eq!(be.calls, 3, "9 queries / width 4 = 3 calls");
+        assert_eq!(batcher.cached_len(), 9);
+    }
+
+    #[test]
+    fn invalidate_clears_state() {
+        let mut be = FakeBackend { calls: 0 };
+        let mut batcher = PredictionBatcher::new(4);
+        batcher.predict(&mut be, BlockId(0), 0, fv(0.9)).unwrap();
+        batcher.prefetch(BlockId(1), 0, fv(0.9));
+        batcher.invalidate_all();
+        assert_eq!(batcher.cached_len(), 0);
+        assert_eq!(batcher.pending_len(), 0);
+    }
+
+    #[test]
+    fn duplicate_prefetch_is_deduped() {
+        let mut batcher = PredictionBatcher::new(4);
+        batcher.prefetch(BlockId(1), 0, fv(0.5));
+        batcher.prefetch(BlockId(1), 0, fv(0.5));
+        assert_eq!(batcher.pending_len(), 1);
+    }
+}

@@ -1,0 +1,755 @@
+//! The centralized cache coordinator — the paper's Algorithm 1 running on
+//! the NameNode.
+//!
+//! The coordinator owns the per-DataNode off-heap caches (the NameNode is
+//! the single decision point; DataNodes only execute cache/uncache
+//! commands), the replacement policy instances, the SVM classifier
+//! (batched through `PredictionBatcher`) and the online training pipeline.
+//!
+//! Request flow (`read_block`, called by the MapReduce scheduler):
+//!
+//! 1. look the block up in the cache metadata — **GetCache** on a hit:
+//!    classify the block, move it within the LRU stack per its class, and
+//!    serve from memory (plus a network hop when remote);
+//! 2. otherwise **PutCache**: serve from the first disk replica, then cache
+//!    the block on that DataNode, evicting per policy when space is needed.
+//!
+//! Labels for online training are *retrospective*: a block's features at
+//! access time become a positive sample when the block is re-accessed, and
+//! a negative sample when no reuse happens within a window — exactly the
+//! "reused in the future or not" semantics without an oracle. Trace replay
+//! (`handle_trace_request`) can instead use the request-awareness labels
+//! carried by the trace (§5.1 scenario 1).
+
+use std::collections::HashMap;
+
+use crate::util::fasthash::IdHashMap;
+
+use anyhow::Result;
+
+use crate::cache::registry::make_policy;
+use crate::cache::{AccessContext, BlockCache, CacheAffinity};
+use crate::hdfs::{classify, service_time, BlockId, BlockKind, BlockLocation, DataNodeId, ReadSource};
+use crate::mapreduce::{AccessRequest, BlockRead, BlockService};
+use crate::runtime::SvmBackend;
+use crate::sim::{SimDuration, SimTime};
+use crate::svm::features::{BlockStatsTracker, FeatureVec};
+use crate::workload::{BlockRequest, Cluster};
+
+use super::batcher::PredictionBatcher;
+use super::prefetcher::Prefetcher;
+use super::training_pipeline::TrainingPipeline;
+
+/// Coordinator operating mode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CacheMode {
+    /// H-NoCache baseline: every read goes to disk.
+    NoCache,
+    /// In-memory caching with the named replacement policy.
+    Cached { policy: String },
+}
+
+/// Aggregated request-path statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CoordinatorStats {
+    pub requests: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub bytes_requested: u64,
+    pub bytes_from_cache: u64,
+    pub evictions: u64,
+    pub insertions: u64,
+}
+
+impl CoordinatorStats {
+    pub fn hit_ratio(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.requests as f64
+        }
+    }
+
+    pub fn byte_hit_ratio(&self) -> f64 {
+        if self.bytes_requested == 0 {
+            0.0
+        } else {
+            self.bytes_from_cache as f64 / self.bytes_requested as f64
+        }
+    }
+}
+
+/// A pending retrospective label: features at the time of an access.
+#[derive(Debug, Clone, Copy)]
+struct PendingLabel {
+    features: FeatureVec,
+    at: SimTime,
+}
+
+/// The coordinator.
+pub struct CacheCoordinator {
+    pub cluster: Cluster,
+    mode: CacheMode,
+    /// One cache (policy instance) per DataNode; empty in NoCache mode.
+    caches: Vec<BlockCache>,
+    backend: Option<Box<dyn SvmBackend>>,
+    batcher: PredictionBatcher,
+    pub pipeline: TrainingPipeline,
+    pub tracker: BlockStatsTracker,
+    pub stats: CoordinatorStats,
+    /// Whether the active policy consumes SVM predictions.
+    svm_enabled: bool,
+    pending_labels: IdHashMap<BlockId, PendingLabel>,
+    /// Reuse window for retrospective negative labels.
+    label_window: SimDuration,
+    requests_since_sweep: u64,
+    app_ids: HashMap<String, u64>,
+    /// Unique suffix for per-run shuffle file names.
+    intermediate_seq: u64,
+    /// Optional SVM-gated sequential prefetcher (paper §7 future work).
+    prefetcher: Option<Prefetcher>,
+}
+
+impl CacheCoordinator {
+    /// Create a coordinator. `backend` is required when the policy is
+    /// "h-svm-lru" (or any predictor-consuming policy) and ignored for
+    /// NoCache.
+    pub fn new(
+        cluster: Cluster,
+        mode: CacheMode,
+        backend: Option<Box<dyn SvmBackend>>,
+    ) -> Result<Self> {
+        let (caches, svm_enabled) = match &mode {
+            CacheMode::NoCache => (Vec::new(), false),
+            CacheMode::Cached { policy } => {
+                let caches = (0..cluster.cfg.datanodes)
+                    .map(|_| {
+                        let p = make_policy(policy)
+                            .ok_or_else(|| anyhow::anyhow!("unknown policy {policy:?}"))?;
+                        Ok(BlockCache::new(p, cluster.cfg.cache_capacity_per_node))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let uses_svm = matches!(policy.as_str(), "h-svm-lru" | "autocache");
+                (caches, uses_svm)
+            }
+        };
+        if svm_enabled && backend.is_none() {
+            anyhow::bail!("policy requires an SVM backend but none was provided");
+        }
+        let batch_width = 64;
+        let block_size = cluster.cfg.block_size;
+        Ok(CacheCoordinator {
+            cluster,
+            mode,
+            caches,
+            backend,
+            batcher: PredictionBatcher::new(batch_width),
+            pipeline: TrainingPipeline::new(32, 128),
+            tracker: BlockStatsTracker::new(block_size),
+            stats: CoordinatorStats::default(),
+            svm_enabled,
+            pending_labels: IdHashMap::default(),
+            label_window: SimDuration::from_secs_f64(180.0),
+            requests_since_sweep: 0,
+            app_ids: HashMap::new(),
+            intermediate_seq: 0,
+            prefetcher: None,
+        })
+    }
+
+    /// Enable sequential prefetching `depth` blocks ahead (classifier-gated
+    /// when the policy is SVM-driven; unconditional otherwise).
+    pub fn with_prefetch(mut self, depth: u32) -> Self {
+        if !matches!(self.mode, CacheMode::NoCache) {
+            self.prefetcher = Some(Prefetcher::new(depth));
+        }
+        self
+    }
+
+    pub fn prefetch_stats(&self) -> Option<super::prefetcher::PrefetchStats> {
+        self.prefetcher.as_ref().map(|p| p.stats)
+    }
+
+    pub fn mode(&self) -> &CacheMode {
+        &self.mode
+    }
+
+    pub fn policy_name(&self) -> &str {
+        match &self.mode {
+            CacheMode::NoCache => "no-cache",
+            CacheMode::Cached { policy } => policy,
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.as_ref().map(|b| b.name()).unwrap_or("none")
+    }
+
+    pub fn batcher_stats(&self) -> super::batcher::BatcherStats {
+        self.batcher.stats
+    }
+
+    fn app_id(&mut self, app: &str) -> u64 {
+        let next = self.app_ids.len() as u64;
+        *self.app_ids.entry(app.to_string()).or_insert(next)
+    }
+
+    /// SVM class for a block, or None when the classifier isn't ready.
+    fn predict_class(
+        &mut self,
+        block: BlockId,
+        features: FeatureVec,
+    ) -> Option<bool> {
+        if !self.svm_enabled {
+            return None;
+        }
+        let backend = self.backend.as_mut()?;
+        if !backend.is_trained() {
+            return None;
+        }
+        // Quantized feature stamp: the class cache stays valid while the
+        // block's frequency bucket is unchanged (the log-scaled frequency
+        // feature moves between buckets, recency rarely flips the class).
+        // Re-scoring per access costs a PJRT call; per bucket it's ~free.
+        let accesses = self.tracker.accesses(block);
+        let stamp = if accesses < 4 { accesses } else { 63 - accesses.leading_zeros() as u64 + 4 };
+        match self
+            .batcher
+            .predict(backend.as_mut(), block, stamp, features)
+        {
+            Ok(class) => Some(class),
+            Err(e) => {
+                log::warn!("prediction failed, falling back to LRU: {e:#}");
+                None
+            }
+        }
+    }
+
+    /// Retrospective labeling: the current access proves the *previous*
+    /// access's features led to reuse.
+    fn observe_reuse(&mut self, block: BlockId, features: FeatureVec, now: SimTime) {
+        if let Some(prev) = self.pending_labels.insert(block, PendingLabel { features, at: now })
+        {
+            self.pipeline.observe(prev.features, true);
+        }
+        self.requests_since_sweep += 1;
+        if self.requests_since_sweep >= 64 {
+            self.sweep_stale_labels(now);
+        }
+    }
+
+    /// Expire pending observations: no reuse within the window = negative.
+    pub fn sweep_stale_labels(&mut self, now: SimTime) {
+        self.requests_since_sweep = 0;
+        let window = self.label_window;
+        let expired: Vec<BlockId> = self
+            .pending_labels
+            .iter()
+            .filter(|(_, p)| p.at.duration_until(now) >= window)
+            .map(|(&b, _)| b)
+            .collect();
+        for b in expired {
+            if let Some(p) = self.pending_labels.remove(&b) {
+                self.pipeline.observe(p.features, false);
+            }
+        }
+    }
+
+    /// End-of-workload label flush: every block whose last observation was
+    /// never followed by a re-access is a negative sample — Table 4 row 10
+    /// ("job Succeeded -> not reused"); positives were already emitted on
+    /// re-access. Used by the offline training pass of the experiments.
+    pub fn flush_labels_as_negative(&mut self) {
+        for (_, p) in std::mem::take(&mut self.pending_labels) {
+            self.pipeline.observe(p.features, false);
+        }
+    }
+
+    /// Force a training round on everything observed so far (the paper's
+    /// offline training on job history before evaluation).
+    pub fn train_now(&mut self) -> Result<bool> {
+        let Some(backend) = self.backend.as_mut() else {
+            return Ok(false);
+        };
+        let trained = self.pipeline.train_now(backend.as_mut())?;
+        if trained {
+            self.batcher.invalidate_all();
+        }
+        Ok(trained)
+    }
+
+    /// Retrain the classifier if due; invalidates cached classes when a new
+    /// model is deployed.
+    pub fn maybe_retrain(&mut self) -> Result<bool> {
+        let Some(backend) = self.backend.as_mut() else {
+            return Ok(false);
+        };
+        let trained = self.pipeline.maybe_train(backend.as_mut())?;
+        if trained {
+            self.batcher.invalidate_all();
+        }
+        Ok(trained)
+    }
+
+    fn build_ctx(
+        &mut self,
+        block: BlockId,
+        size: u64,
+        kind: BlockKind,
+        affinity: CacheAffinity,
+        req_file: u64,
+        file_width: u32,
+        file_complete: bool,
+        now: SimTime,
+    ) -> AccessContext {
+        let features = self.tracker.features(block, kind, size, affinity, now);
+        let predicted = self.predict_class(block, features);
+        AccessContext {
+            time: now,
+            size,
+            kind,
+            file: req_file,
+            file_width,
+            file_complete,
+            affinity,
+            predicted_reuse: predicted,
+        }
+    }
+
+    /// Core Algorithm 1 step for one request. Returns (source, serving DN).
+    fn access(
+        &mut self,
+        block: BlockId,
+        reader: DataNodeId,
+        _now: SimTime,
+        ctx: AccessContext,
+    ) -> (ReadSource, DataNodeId) {
+        self.stats.requests += 1;
+        self.stats.bytes_requested += ctx.size;
+
+        if matches!(self.mode, CacheMode::NoCache) {
+            self.stats.misses += 1;
+            let dn = self
+                .cluster
+                .namenode
+                .replicas_of(block)
+                .first()
+                .copied()
+                .unwrap_or(reader);
+            let (source, dn) = classify(BlockLocation::OnDisk(dn), reader);
+            return (source, dn);
+        }
+
+        match self.cluster.namenode.locate(block) {
+            Some(BlockLocation::Cached(dn)) => {
+                // ---- GetCache: cache hit ----
+                self.stats.hits += 1;
+                self.stats.bytes_from_cache += ctx.size;
+                let outcome = self.caches[dn.0 as usize].access_or_insert(block, &ctx);
+                debug_assert!(outcome.hit, "cache metadata said cached");
+                classify(BlockLocation::Cached(dn), reader)
+            }
+            Some(BlockLocation::OnDisk(dn)) => {
+                // ---- PutCache: cache miss ----
+                self.stats.misses += 1;
+                let evicted = self.caches[dn.0 as usize].insert(block, &ctx);
+                for victim in &evicted {
+                    self.stats.evictions += 1;
+                    self.cluster.datanodes[dn.0 as usize].uncache_block(*victim);
+                    self.cluster.namenode.note_uncached(*victim);
+                }
+                if self.caches[dn.0 as usize].contains(block) {
+                    self.stats.insertions += 1;
+                    let ok = self.cluster.datanodes[dn.0 as usize].cache_block(block, ctx.size);
+                    debug_assert!(ok, "DataNode rejected a coordinated cache command");
+                    self.cluster.namenode.note_cached(block, dn);
+                }
+                classify(BlockLocation::OnDisk(dn), reader)
+            }
+            None => {
+                // Unknown block (not registered): treat as a remote disk read.
+                self.stats.misses += 1;
+                classify(BlockLocation::OnDisk(reader), reader)
+            }
+        }
+    }
+
+    /// Replay one trace request (Fig 3 / Table 7 path). Uses the trace's
+    /// request-awareness ground truth for training labels. Returns hit?
+    pub fn handle_trace_request(&mut self, req: &BlockRequest) -> Result<bool> {
+        let features =
+            self.tracker
+                .features(req.block, req.kind, req.size, req.affinity, req.time);
+        // Request-awareness scenario: the label is known at request time.
+        self.pipeline.observe(features, req.reused_later);
+        let ctx = self.build_ctx(
+            req.block,
+            req.size,
+            req.kind,
+            req.affinity,
+            req.block.0, // trace blocks are their own files
+            1,
+            false,
+            req.time,
+        );
+        let reader = self
+            .cluster
+            .namenode
+            .replicas_of(req.block)
+            .first()
+            .copied()
+            .unwrap_or(DataNodeId(0));
+        let (source, _) = self.access(req.block, reader, req.time, ctx);
+        self.tracker.record_access(req.block, 0, req.time);
+        self.maybe_retrain()?;
+        Ok(source.is_cache())
+    }
+
+    /// Prefetch pass: propose the next sequential blocks of the file being
+    /// scanned, admit them through the classifier, and stage them in the
+    /// cache off the critical path (background disk reads).
+    fn run_prefetch(&mut self, block: BlockId, req: &AccessRequest, now: SimTime) {
+        if self.prefetcher.is_none() {
+            return;
+        }
+        let Some(info) = self.cluster.namenode.block_info(block).cloned() else {
+            return;
+        };
+        let file_blocks: Vec<BlockId> =
+            self.cluster.namenode.files.blocks_of(info.file).to_vec();
+        let proposals = self
+            .prefetcher
+            .as_mut()
+            .expect("checked above")
+            .observe(info.file, info.index);
+        for idx in proposals {
+            let Some(&next) = file_blocks.get(idx as usize) else { continue };
+            if self.cluster.namenode.is_cached(next) {
+                continue;
+            }
+            let size = self
+                .cluster
+                .namenode
+                .block_info(next)
+                .map(|b| b.size)
+                .unwrap_or(self.cluster.cfg.block_size);
+            let features = self.tracker.features(next, info.kind, size, req.affinity, now);
+            // Classifier gate: only stage blocks predicted to be reused.
+            // Without a trained model, prefetch optimistically (sequential
+            // scans are the common case the heuristic already filtered).
+            if self.predict_class(next, features) == Some(false) {
+                continue;
+            }
+            let Some(BlockLocation::OnDisk(dn)) = self.cluster.namenode.locate(next) else {
+                continue;
+            };
+            let ctx = AccessContext {
+                time: now,
+                size,
+                kind: info.kind,
+                file: req.file,
+                file_width: req.file_width,
+                file_complete: false,
+                affinity: req.affinity,
+                predicted_reuse: Some(true),
+            };
+            let evicted = self.caches[dn.0 as usize].insert(next, &ctx);
+            for victim in &evicted {
+                self.stats.evictions += 1;
+                self.cluster.datanodes[dn.0 as usize].uncache_block(*victim);
+                self.cluster.namenode.note_uncached(*victim);
+                if let Some(pf) = self.prefetcher.as_mut() {
+                    pf.note_evicted(*victim);
+                }
+            }
+            if self.caches[dn.0 as usize].contains(next) {
+                self.stats.insertions += 1;
+                let ok = self.cluster.datanodes[dn.0 as usize].cache_block(next, size);
+                debug_assert!(ok, "DataNode rejected prefetch cache command");
+                self.cluster.namenode.note_cached(next, dn);
+                // The staging read occupies the disk in the background
+                // (off the requester's critical path).
+                let pure = service_time(&self.cluster.cfg, ReadSource::DiskLocal, size);
+                self.cluster.datanodes[dn.0 as usize].disk.acquire(now, pure);
+                if let Some(pf) = self.prefetcher.as_mut() {
+                    pf.note_inserted(next);
+                }
+            }
+        }
+    }
+
+    /// DataNode heartbeat processing: reconcile cache reports (paper §4.1).
+    pub fn process_cache_reports(&mut self) -> usize {
+        let mut fixes = 0;
+        for dn in &self.cluster.datanodes {
+            let report = dn.cache_report();
+            fixes += self.cluster.namenode.apply_cache_report(dn.id, &report);
+        }
+        fixes
+    }
+
+    /// Reset the caches and counters while keeping the trained classifier:
+    /// the measurement pass of a two-pass experiment (offline training on
+    /// history, then a cold-cache measured replay — the paper trains on
+    /// ALOJA before measuring, §5.1/§6).
+    pub fn reset_for_measurement(&mut self) {
+        for (dn, cache) in self.cluster.datanodes.iter_mut().zip(&mut self.caches) {
+            for block in cache.cached_blocks() {
+                cache.remove(block);
+                dn.uncache_block(block);
+                self.cluster.namenode.note_uncached(block);
+            }
+            dn.disk.reset();
+            dn.nic.reset();
+        }
+        self.stats = CoordinatorStats::default();
+        self.tracker.reset();
+        self.pending_labels.clear();
+        self.batcher.invalidate_all();
+        self.requests_since_sweep = 0;
+    }
+
+    /// Total bytes currently cached across DataNodes.
+    pub fn cached_bytes(&self) -> u64 {
+        self.caches.iter().map(|c| c.used()).sum()
+    }
+
+    pub fn cached_blocks(&self) -> usize {
+        self.caches.iter().map(|c| c.len()).sum()
+    }
+}
+
+impl BlockService for CacheCoordinator {
+    fn read_block(
+        &mut self,
+        block: BlockId,
+        reader: DataNodeId,
+        now: SimTime,
+        req: &AccessRequest,
+    ) -> BlockRead {
+        let size = self.block_size(block);
+        let features = self.tracker.features(block, req.kind, size, req.affinity, now);
+        // Label collection only matters when a classifier can consume it.
+        if self.backend.is_some() {
+            self.observe_reuse(block, features, now);
+        }
+        let ctx = self.build_ctx(
+            block,
+            size,
+            req.kind,
+            req.affinity,
+            req.file,
+            req.file_width,
+            req.file_complete,
+            now,
+        );
+        let (source, serving_dn) = self.access(block, reader, now, ctx);
+        if source.is_cache() {
+            if let Some(pf) = self.prefetcher.as_mut() {
+                pf.note_hit(block);
+            }
+        }
+        let app_id = self.app_id(&req.app);
+        self.tracker.record_access(block, app_id, now);
+        self.run_prefetch(block, req, now);
+        if let Err(e) = self.maybe_retrain() {
+            log::warn!("retraining failed: {e:#}");
+        }
+
+        // Service time with queueing on the serving node's resources.
+        let pure = service_time(&self.cluster.cfg, source, size);
+        let completion = match source {
+            ReadSource::DiskLocal | ReadSource::DiskRemote => {
+                let (_, end) =
+                    self.cluster.datanodes[serving_dn.0 as usize].disk.acquire(now, pure);
+                end
+            }
+            ReadSource::CacheRemote => {
+                let (_, end) =
+                    self.cluster.datanodes[serving_dn.0 as usize].nic.acquire(now, pure);
+                end
+            }
+            ReadSource::CacheLocal => now + pure,
+        };
+        BlockRead { completion, source }
+    }
+
+    fn preferred_node(&self, block: BlockId) -> Option<DataNodeId> {
+        match self.cluster.namenode.locate(block)? {
+            BlockLocation::Cached(dn) | BlockLocation::OnDisk(dn) => Some(dn),
+        }
+    }
+
+    fn replica_nodes(&self, block: BlockId) -> Vec<DataNodeId> {
+        self.cluster.namenode.replicas_of(block).to_vec()
+    }
+
+    fn block_size(&self, block: BlockId) -> u64 {
+        self.cluster
+            .namenode
+            .block_info(block)
+            .map(|b| b.size)
+            .unwrap_or(self.cluster.cfg.block_size)
+    }
+
+    fn register_intermediate(&mut self, job: crate::mapreduce::JobId, bytes: u64) -> Vec<BlockId> {
+        if bytes == 0 {
+            return Vec::new();
+        }
+        // Registered in every mode so all scenarios pay identical shuffle
+        // I/O costs; only the *caching* of these blocks differs (H-NoCache
+        // reads them from disk every time).
+        self.intermediate_seq += 1;
+        let name = format!("shuffle/{job}/{}", self.intermediate_seq);
+        let fid = self.cluster.add_intermediate(&name, bytes);
+        self.cluster.namenode.files.blocks_of(fid).to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::runtime::RustBackend;
+    use crate::svm::KernelKind;
+    use crate::util::bytes::{GB, MB};
+
+    fn small_cluster(policy: &str, cache_blocks: u64) -> CacheCoordinator {
+        let cfg = ClusterConfig {
+            datanodes: 1,
+            replication: 1,
+            block_size: 128 * MB,
+            cache_capacity_per_node: cache_blocks * 128 * MB,
+            ..Default::default()
+        };
+        let mut cluster = Cluster::provision(&cfg);
+        cluster.add_input("data", 2 * GB);
+        let backend: Option<Box<dyn SvmBackend>> = if policy == "h-svm-lru" {
+            Some(Box::new(RustBackend::new(KernelKind::Rbf)))
+        } else {
+            None
+        };
+        CacheCoordinator::new(
+            cluster,
+            CacheMode::Cached { policy: policy.to_string() },
+            backend,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn miss_then_hit() {
+        let mut c = small_cluster("lru", 4);
+        let req = AccessRequest {
+            app: "Grep".into(),
+            affinity: CacheAffinity::High,
+            kind: BlockKind::Input,
+            file: 0,
+            file_width: 4,
+            file_complete: false,
+        };
+        let b = BlockId(0);
+        let r1 = c.read_block(b, DataNodeId(0), SimTime(0), &req);
+        assert!(!r1.source.is_cache());
+        let r2 = c.read_block(b, DataNodeId(0), SimTime(1_000_000), &req);
+        assert!(r2.source.is_cache());
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 1);
+        assert!((c.stats.hit_ratio() - 0.5).abs() < 1e-12);
+        // The DataNode actually holds the cached block; metadata agrees.
+        assert!(c.cluster.datanodes[0].is_cached(b));
+        assert!(c.cluster.namenode.is_cached(b));
+        assert_eq!(c.process_cache_reports(), 0, "metadata already consistent");
+    }
+
+    #[test]
+    fn eviction_updates_datanode_and_namenode() {
+        let mut c = small_cluster("lru", 2);
+        let req = AccessRequest {
+            app: "Sort".into(),
+            affinity: CacheAffinity::Low,
+            kind: BlockKind::Input,
+            file: 0,
+            file_width: 4,
+            file_complete: false,
+        };
+        for i in 0..3 {
+            c.read_block(BlockId(i), DataNodeId(0), SimTime(i * 1000), &req);
+        }
+        // Capacity 2: the LRU victim (block 0) must be fully uncached.
+        assert_eq!(c.stats.evictions, 1);
+        assert!(!c.cluster.datanodes[0].is_cached(BlockId(0)));
+        assert!(!c.cluster.namenode.is_cached(BlockId(0)));
+        assert_eq!(c.cached_blocks(), 2);
+        assert!(c.cached_bytes() <= c.cluster.cfg.cache_capacity_per_node);
+    }
+
+    #[test]
+    fn nocache_mode_never_hits() {
+        let cfg = ClusterConfig { datanodes: 2, replication: 1, ..Default::default() };
+        let mut cluster = Cluster::provision(&cfg);
+        cluster.add_input("data", GB);
+        let mut c = CacheCoordinator::new(cluster, CacheMode::NoCache, None).unwrap();
+        let req = AccessRequest {
+            app: "WordCount".into(),
+            affinity: CacheAffinity::Medium,
+            kind: BlockKind::Input,
+            file: 0,
+            file_width: 1,
+            file_complete: false,
+        };
+        for t in 0..10u64 {
+            let r = c.read_block(BlockId(0), DataNodeId(0), SimTime(t * 100), &req);
+            assert!(!r.source.is_cache());
+        }
+        assert_eq!(c.stats.hits, 0);
+        assert_eq!(c.stats.hit_ratio(), 0.0);
+    }
+
+    #[test]
+    fn hsvmlru_requires_backend() {
+        let cfg = ClusterConfig::default();
+        let cluster = Cluster::provision(&cfg);
+        let r = CacheCoordinator::new(
+            cluster,
+            CacheMode::Cached { policy: "h-svm-lru".into() },
+            None,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn trace_replay_trains_classifier() {
+        let mut c = small_cluster("h-svm-lru", 4);
+        let trace = crate::workload::fig3_trace(128 * MB, 11);
+        for req in &trace {
+            c.handle_trace_request(req).unwrap();
+        }
+        assert!(c.pipeline.trainings > 0, "classifier should have trained");
+        assert!(c.stats.hits > 0);
+        let bs = c.batcher_stats();
+        assert!(bs.queries > 0);
+        assert!(
+            bs.class_cache_hits + bs.predictions_scored >= bs.queries,
+            "every query answered"
+        );
+    }
+
+    #[test]
+    fn disk_reads_queue_on_the_spindle() {
+        let mut c = small_cluster("lru", 2);
+        let req = AccessRequest {
+            app: "Sort".into(),
+            affinity: CacheAffinity::Low,
+            kind: BlockKind::Input,
+            file: 0,
+            file_width: 4,
+            file_complete: false,
+        };
+        // Two distinct blocks at the same instant: second queues behind the
+        // first on the single disk.
+        let r1 = c.read_block(BlockId(0), DataNodeId(0), SimTime(0), &req);
+        let r2 = c.read_block(BlockId(1), DataNodeId(0), SimTime(0), &req);
+        assert!(r2.completion > r1.completion);
+    }
+}

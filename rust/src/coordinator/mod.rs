@@ -1,0 +1,19 @@
+//! The paper's L3 contribution: centralized, SVM-informed cache
+//! coordination on the NameNode.
+//!
+//! * `cache_coordinator` — Algorithm 1 (GetCache/PutCache) over the
+//!   simulated cluster, implementing `mapreduce::BlockService` for the
+//!   request path.
+//! * `batcher` — per-block class caching + micro-batched PJRT predictions.
+//! * `training_pipeline` — labeled-sample accumulation and periodic
+//!   retraining (both §5.1 label scenarios).
+
+pub mod batcher;
+pub mod cache_coordinator;
+pub mod prefetcher;
+pub mod training_pipeline;
+
+pub use batcher::{BatcherStats, PredictionBatcher};
+pub use cache_coordinator::{CacheCoordinator, CacheMode, CoordinatorStats};
+pub use prefetcher::{PrefetchStats, Prefetcher};
+pub use training_pipeline::TrainingPipeline;

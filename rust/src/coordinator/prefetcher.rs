@@ -1,0 +1,177 @@
+//! SVM-gated sequential prefetching — the paper's stated future work
+//! (§7: "extend intelligent caching by applying machine learning
+//! techniques to prefetch requested data from HDFS").
+//!
+//! MapReduce tasks scan input files block-by-block, so a read of block
+//! `i` of a file strongly predicts reads of `i+1..i+depth`. The prefetcher
+//! tracks per-file progress and proposes the next blocks; the coordinator
+//! only caches a proposal when the SVM classifies it as "reused in the
+//! future" — the same classifier that drives replacement gates admission,
+//! keeping pollution out of the prefetch path too.
+
+use crate::hdfs::BlockId;
+use crate::util::fasthash::IdHashMap;
+
+/// Per-file sequential-scan detector state.
+#[derive(Debug, Clone, Copy)]
+struct FileScan {
+    /// Highest block index observed.
+    last_index: u32,
+    /// Consecutive in-order observations (confidence).
+    streak: u32,
+}
+
+/// Prefetch statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefetchStats {
+    /// Proposals emitted to the coordinator.
+    pub proposed: u64,
+    /// Proposals the classifier admitted and the cache accepted.
+    pub inserted: u64,
+    /// Hits on blocks that were in cache because of a prefetch.
+    pub useful_hits: u64,
+}
+
+/// Sequential prefetcher.
+#[derive(Debug)]
+pub struct Prefetcher {
+    /// Blocks ahead of the scan front to propose.
+    depth: u32,
+    /// In-order observations required before prefetching starts.
+    min_streak: u32,
+    scans: IdHashMap<u64, FileScan>,
+    /// Blocks currently cached due to prefetch (for usefulness tracking).
+    prefetched: IdHashMap<BlockId, ()>,
+    pub stats: PrefetchStats,
+}
+
+impl Prefetcher {
+    pub fn new(depth: u32) -> Self {
+        Prefetcher {
+            depth,
+            min_streak: 2,
+            scans: IdHashMap::default(),
+            prefetched: IdHashMap::default(),
+            stats: PrefetchStats::default(),
+        }
+    }
+
+    pub fn depth(&self) -> u32 {
+        self.depth
+    }
+
+    /// Record an access to `(file, index)`; returns the block indexes to
+    /// prefetch (empty until a sequential streak is established).
+    pub fn observe(&mut self, file: u64, index: u32) -> Vec<u32> {
+        let scan = self.scans.entry(file).or_insert(FileScan { last_index: index, streak: 0 });
+        if index == scan.last_index + 1 || (index == scan.last_index && scan.streak == 0) {
+            scan.streak += 1;
+        } else if index > scan.last_index {
+            scan.streak = 1;
+        } else {
+            // Backward/random access: lose confidence.
+            scan.streak = scan.streak.saturating_sub(1);
+        }
+        scan.last_index = scan.last_index.max(index);
+        if scan.streak < self.min_streak {
+            return Vec::new();
+        }
+        let from = scan.last_index + 1;
+        let proposals: Vec<u32> = (from..from + self.depth).collect();
+        self.stats.proposed += proposals.len() as u64;
+        proposals
+    }
+
+    /// The coordinator confirms it cached a proposed block.
+    pub fn note_inserted(&mut self, block: BlockId) {
+        self.stats.inserted += 1;
+        self.prefetched.insert(block, ());
+    }
+
+    /// A cache hit landed; credit the prefetcher if it staged the block.
+    /// Returns true when the hit was prefetch-induced (first use only).
+    pub fn note_hit(&mut self, block: BlockId) -> bool {
+        if self.prefetched.remove(&block).is_some() {
+            self.stats.useful_hits += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A block left the cache; it can no longer claim prefetch credit.
+    pub fn note_evicted(&mut self, block: BlockId) {
+        self.prefetched.remove(&block);
+    }
+
+    /// Fraction of prefetched blocks that produced a hit before eviction.
+    pub fn usefulness(&self) -> f64 {
+        if self.stats.inserted == 0 {
+            0.0
+        } else {
+            self.stats.useful_hits as f64 / self.stats.inserted as f64
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.scans.clear();
+        self.prefetched.clear();
+        self.stats = PrefetchStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_scan_triggers_prefetch() {
+        let mut p = Prefetcher::new(2);
+        assert!(p.observe(1, 0).is_empty(), "no confidence yet");
+        let proposals = p.observe(1, 1);
+        assert_eq!(proposals, vec![2, 3], "streak of 2 -> prefetch ahead");
+        let proposals = p.observe(1, 2);
+        assert_eq!(proposals, vec![3, 4]);
+    }
+
+    #[test]
+    fn random_access_suppresses_prefetch() {
+        let mut p = Prefetcher::new(2);
+        p.observe(1, 5);
+        assert!(p.observe(1, 1).is_empty(), "backward jump");
+        assert!(p.observe(1, 3).is_empty(), "still below streak");
+    }
+
+    #[test]
+    fn files_tracked_independently() {
+        let mut p = Prefetcher::new(1);
+        p.observe(1, 0);
+        p.observe(2, 7);
+        assert_eq!(p.observe(1, 1), vec![2]);
+        assert_eq!(p.observe(2, 8), vec![9]);
+    }
+
+    #[test]
+    fn usefulness_accounting() {
+        let mut p = Prefetcher::new(1);
+        p.note_inserted(BlockId(10));
+        p.note_inserted(BlockId(11));
+        assert!(p.note_hit(BlockId(10)));
+        assert!(!p.note_hit(BlockId(10)), "credit only once");
+        assert!(!p.note_hit(BlockId(99)), "unprefetched block");
+        p.note_evicted(BlockId(11));
+        assert!(!p.note_hit(BlockId(11)), "evicted before use");
+        assert!((p.usefulness() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut p = Prefetcher::new(2);
+        p.observe(1, 0);
+        p.observe(1, 1);
+        p.note_inserted(BlockId(2));
+        p.reset();
+        assert_eq!(p.stats.proposed, 0);
+        assert!(p.observe(1, 5).is_empty());
+    }
+}

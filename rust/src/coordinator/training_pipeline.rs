@@ -1,0 +1,213 @@
+//! Online training pipeline: labeled samples -> preprocessing -> backend
+//! training -> classifier deployment (§5 of the paper, end to end).
+//!
+//! Two label sources are supported, matching §5.1's two scenarios:
+//! * **request awareness** — the replayed trace knows each request's
+//!   ground-truth future reuse (`BlockRequest::reused_later`); samples are
+//!   (features-at-request-time, reused_later).
+//! * **non-request awareness** — Table 4 labels derived from job-history
+//!   records (`svm::labeling::label_record`), with features from the
+//!   block-stats tracker at observation time.
+
+use anyhow::Result;
+
+use crate::runtime::SvmBackend;
+use crate::svm::dataset::Dataset;
+use crate::svm::features::FeatureVec;
+
+/// Accumulates labeled samples and retrains the backend periodically.
+pub struct TrainingPipeline {
+    buffer: Dataset,
+    /// Running positive count — `has_both_classes` must be O(1), it sits
+    /// on the per-request path (see EXPERIMENTS.md §Perf).
+    n_positive: usize,
+    /// Sliding-window cap: beyond this the oldest half is dropped so the
+    /// model tracks recent behaviour and memory stays bounded.
+    max_samples: usize,
+    /// First training at `min_samples`; retrain every `retrain_interval`
+    /// new samples after that.
+    min_samples: usize,
+    retrain_interval: usize,
+    samples_at_last_train: usize,
+    pub trainings: u64,
+}
+
+impl TrainingPipeline {
+    pub fn new(min_samples: usize, retrain_interval: usize) -> Self {
+        TrainingPipeline {
+            buffer: Dataset::new(),
+            n_positive: 0,
+            max_samples: 8192,
+            min_samples: min_samples.max(2),
+            retrain_interval: retrain_interval.max(1),
+            samples_at_last_train: 0,
+            trainings: 0,
+        }
+    }
+
+    /// Add one labeled observation.
+    pub fn observe(&mut self, features: FeatureVec, reused: bool) {
+        self.buffer.push(features, reused);
+        self.n_positive += reused as usize;
+        if self.buffer.len() > self.max_samples {
+            // Drop the oldest half (sliding window over recent behaviour).
+            let keep_from = self.buffer.len() / 2;
+            self.n_positive = self.buffer.y[keep_from..]
+                .iter()
+                .filter(|&&y| y > 0.0)
+                .count();
+            self.buffer.x.drain(..keep_from);
+            self.buffer.y.drain(..keep_from);
+            self.samples_at_last_train =
+                self.samples_at_last_train.saturating_sub(keep_from);
+        }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.buffer.len()
+    }
+
+    /// Both classes present? (An SVM needs two classes to train.) O(1).
+    pub fn has_both_classes(&self) -> bool {
+        self.n_positive > 0 && self.n_positive < self.buffer.len()
+    }
+
+    fn due(&self) -> bool {
+        let n = self.buffer.len();
+        if !self.has_both_classes() {
+            return false;
+        }
+        if self.trainings == 0 {
+            n >= self.min_samples
+        } else {
+            n >= self.samples_at_last_train + self.retrain_interval
+        }
+    }
+
+    /// Train if due. Returns true when a (re)training happened.
+    pub fn maybe_train(&mut self, backend: &mut dyn SvmBackend) -> Result<bool> {
+        if !self.due() {
+            return Ok(false);
+        }
+        let mut ds = self.buffer.clone();
+        ds.preprocess();
+        if ds.is_empty() {
+            return Ok(false);
+        }
+        backend.train(&ds)?;
+        self.trainings += 1;
+        self.samples_at_last_train = self.buffer.len();
+        log::debug!(
+            "svm retrained: samples={} positives={} trainings={}",
+            ds.len(),
+            ds.n_positive(),
+            self.trainings
+        );
+        Ok(true)
+    }
+
+    /// Force a training round regardless of schedule (used by the CLI).
+    pub fn train_now(&mut self, backend: &mut dyn SvmBackend) -> Result<bool> {
+        if !self.has_both_classes() {
+            return Ok(false);
+        }
+        let mut ds = self.buffer.clone();
+        ds.preprocess();
+        backend.train(&ds)?;
+        self.trainings += 1;
+        self.samples_at_last_train = self.buffer.len();
+        Ok(true)
+    }
+
+    /// The accumulated dataset (evaluation / Table 5 reuse).
+    pub fn dataset(&self) -> &Dataset {
+        &self.buffer
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::features::N_FEATURES;
+
+    struct CountingBackend {
+        trainings: u64,
+    }
+
+    impl SvmBackend for CountingBackend {
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+        fn train(&mut self, ds: &Dataset) -> Result<()> {
+            assert!(!ds.is_empty());
+            self.trainings += 1;
+            Ok(())
+        }
+        fn decision_batch(&mut self, q: &[FeatureVec]) -> Result<Vec<f32>> {
+            Ok(vec![0.0; q.len()])
+        }
+        fn is_trained(&self) -> bool {
+            self.trainings > 0
+        }
+    }
+
+    fn fv(i: usize) -> FeatureVec {
+        let mut f = [0.0f32; N_FEATURES];
+        f[0] = (i % 10) as f32 / 10.0;
+        f
+    }
+
+    #[test]
+    fn first_training_waits_for_min_samples() {
+        let mut be = CountingBackend { trainings: 0 };
+        let mut tp = TrainingPipeline::new(10, 5);
+        for i in 0..9 {
+            tp.observe(fv(i), i % 2 == 0);
+            assert!(!tp.maybe_train(&mut be).unwrap());
+        }
+        tp.observe(fv(9), false);
+        assert!(tp.maybe_train(&mut be).unwrap());
+        assert_eq!(be.trainings, 1);
+    }
+
+    #[test]
+    fn retrains_on_interval() {
+        let mut be = CountingBackend { trainings: 0 };
+        let mut tp = TrainingPipeline::new(4, 6);
+        for i in 0..4 {
+            tp.observe(fv(i), i % 2 == 0);
+        }
+        assert!(tp.maybe_train(&mut be).unwrap());
+        // 5 more samples: not due yet (interval 6).
+        for i in 4..9 {
+            tp.observe(fv(i), i % 2 == 0);
+            assert!(!tp.maybe_train(&mut be).unwrap());
+        }
+        tp.observe(fv(9), true);
+        assert!(tp.maybe_train(&mut be).unwrap());
+        assert_eq!(be.trainings, 2);
+        assert_eq!(tp.trainings, 2);
+    }
+
+    #[test]
+    fn single_class_never_trains() {
+        let mut be = CountingBackend { trainings: 0 };
+        let mut tp = TrainingPipeline::new(2, 2);
+        for i in 0..50 {
+            tp.observe(fv(i), true);
+        }
+        assert!(!tp.maybe_train(&mut be).unwrap());
+        assert!(!tp.train_now(&mut be).unwrap());
+        assert_eq!(be.trainings, 0);
+    }
+
+    #[test]
+    fn train_now_forces() {
+        let mut be = CountingBackend { trainings: 0 };
+        let mut tp = TrainingPipeline::new(1000, 1000);
+        tp.observe(fv(0), true);
+        tp.observe(fv(1), false);
+        assert!(tp.train_now(&mut be).unwrap());
+        assert_eq!(be.trainings, 1);
+    }
+}

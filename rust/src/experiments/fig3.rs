@@ -1,0 +1,112 @@
+//! Fig 3 — cache hit ratio vs cache size, LRU vs H-SVM-LRU, for 64 MB and
+//! 128 MB blocks over a 2 GB input (and Table 7's improvement ratios,
+//! derived from the same series).
+
+use anyhow::Result;
+
+use crate::config::SvmConfig;
+use crate::util::bytes::MB;
+use crate::util::table::{fmt_f, fmt_pct, Table};
+use crate::workload::fig3_trace;
+
+use super::common::{make_coordinator, replay_trace_two_pass, Scenario};
+
+/// One measured point.
+#[derive(Debug, Clone)]
+pub struct HitRatioPoint {
+    pub block_size: u64,
+    pub cache_blocks: u64,
+    pub lru: f64,
+    pub svm_lru: f64,
+}
+
+impl HitRatioPoint {
+    /// Table 7's IR: relative improvement of H-SVM-LRU over LRU.
+    pub fn improvement_ratio(&self) -> f64 {
+        if self.lru == 0.0 {
+            0.0
+        } else {
+            (self.svm_lru - self.lru) / self.lru
+        }
+    }
+}
+
+/// Cache sizes the paper sweeps per block size (Fig 3): 6–24 blocks for
+/// 64 MB, 6–12 for 128 MB.
+pub fn cache_sizes_for(block_size: u64) -> Vec<u64> {
+    if block_size >= 128 * MB {
+        (6..=12).step_by(2).collect()
+    } else {
+        (6..=24).step_by(2).collect()
+    }
+}
+
+/// Run the full Fig 3 sweep.
+pub fn run(svm_cfg: &SvmConfig, seed: u64) -> Result<Vec<HitRatioPoint>> {
+    let mut points = Vec::new();
+    for block_size in [64 * MB, 128 * MB] {
+        let trace = fig3_trace(block_size, seed);
+        for cache_blocks in cache_sizes_for(block_size) {
+            let mut ratios = [0.0f64; 2];
+            for (i, scenario) in [
+                Scenario::Policy("lru".to_string()),
+                Scenario::SvmLru,
+            ]
+            .iter()
+            .enumerate()
+            {
+                let (_cfg, cluster) =
+                    super::common::provision_fig3_cluster(block_size, cache_blocks, seed);
+                let mut coord = make_coordinator(cluster, scenario, svm_cfg)?;
+                ratios[i] = replay_trace_two_pass(&mut coord, &trace)?;
+            }
+            points.push(HitRatioPoint {
+                block_size,
+                cache_blocks,
+                lru: ratios[0],
+                svm_lru: ratios[1],
+            });
+        }
+    }
+    Ok(points)
+}
+
+/// Render the Fig 3 series as a table.
+pub fn render(points: &[HitRatioPoint]) -> Table {
+    let mut t = Table::new(vec![
+        "block size",
+        "cache size (blocks)",
+        "LRU hit ratio",
+        "H-SVM-LRU hit ratio",
+        "IR",
+    ]);
+    for p in points {
+        t.add_row(vec![
+            crate::util::bytes::format_bytes(p.block_size),
+            p.cache_blocks.to_string(),
+            fmt_f(p.lru, 4),
+            fmt_f(p.svm_lru, 4),
+            fmt_pct(p.improvement_ratio()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_ranges_match_paper() {
+        assert_eq!(cache_sizes_for(64 * MB), vec![6, 8, 10, 12, 14, 16, 18, 20, 22, 24]);
+        assert_eq!(cache_sizes_for(128 * MB), vec![6, 8, 10, 12]);
+    }
+
+    #[test]
+    fn improvement_ratio_math() {
+        let p = HitRatioPoint { block_size: 64 * MB, cache_blocks: 6, lru: 0.22, svm_lru: 0.36 };
+        assert!((p.improvement_ratio() - (0.36 - 0.22) / 0.22).abs() < 1e-12);
+        let z = HitRatioPoint { block_size: 64 * MB, cache_blocks: 6, lru: 0.0, svm_lru: 0.1 };
+        assert_eq!(z.improvement_ratio(), 0.0);
+    }
+}

@@ -1,0 +1,116 @@
+//! Fig 4 — WordCount job execution time vs input data size under
+//! H-NoCache / H-LRU / H-SVM-LRU, for 64 MB and 128 MB blocks.
+//!
+//! Protocol per §6.2: each configuration runs the application five times
+//! and reports the average execution time (later repetitions benefit from
+//! the warmed cache, as on the paper's testbed).
+
+use anyhow::Result;
+
+use crate::config::{ClusterConfig, SvmConfig};
+use crate::util::bytes::{format_bytes, GB, MB};
+use crate::util::stats::mean;
+use crate::util::table::{fmt_f, Table};
+use crate::workload::App;
+
+use super::common::{run_repeated_job, Scenario};
+
+/// One measured point: mean exec time (s) per scenario.
+#[derive(Debug, Clone)]
+pub struct ExecTimePoint {
+    pub block_size: u64,
+    pub input_bytes: u64,
+    pub nocache_s: f64,
+    pub lru_s: f64,
+    pub svm_lru_s: f64,
+}
+
+/// Input sizes swept (the interesting regime brackets the 13.5 GB total
+/// cache capacity of the paper's cluster: 9 x 1.5 GB).
+pub fn input_sizes() -> Vec<u64> {
+    vec![2 * GB, 4 * GB, 8 * GB, 16 * GB, 24 * GB]
+}
+
+pub const REPETITIONS: usize = 5;
+
+/// Run the Fig 4 sweep.
+pub fn run(svm_cfg: &SvmConfig, seed: u64) -> Result<Vec<ExecTimePoint>> {
+    let mut points = Vec::new();
+    for block_size in [64 * MB, 128 * MB] {
+        for input in input_sizes() {
+            let mut times = [0.0f64; 3];
+            // Average over placement seeds as well as the five in-run
+            // repetitions (the paper's protocol).
+            const SEEDS: u64 = 3;
+            for s in 0..SEEDS {
+                let cfg = ClusterConfig { block_size, seed: seed + s, ..Default::default() };
+                for (i, scenario) in [
+                    Scenario::NoCache,
+                    Scenario::Policy("lru".to_string()),
+                    Scenario::SvmLru,
+                ]
+                .iter()
+                .enumerate()
+                {
+                    let reps = run_repeated_job(
+                        App::WordCount,
+                        input,
+                        &cfg,
+                        scenario,
+                        svm_cfg,
+                        REPETITIONS,
+                    )?;
+                    times[i] += mean(&reps) / SEEDS as f64;
+                }
+            }
+            points.push(ExecTimePoint {
+                block_size,
+                input_bytes: input,
+                nocache_s: times[0],
+                lru_s: times[1],
+                svm_lru_s: times[2],
+            });
+        }
+    }
+    Ok(points)
+}
+
+pub fn render(points: &[ExecTimePoint]) -> Table {
+    let mut t = Table::new(vec![
+        "block size",
+        "input size",
+        "H-NoCache (s)",
+        "H-LRU (s)",
+        "H-SVM-LRU (s)",
+        "SVM-LRU vs LRU",
+    ]);
+    for p in points {
+        let delta = if p.lru_s > 0.0 {
+            format!("{:+.2}%", (p.svm_lru_s - p.lru_s) / p.lru_s * 100.0)
+        } else {
+            "N/A".to_string()
+        };
+        t.add_row(vec![
+            format_bytes(p.block_size),
+            format_bytes(p.input_bytes),
+            fmt_f(p.nocache_s, 1),
+            fmt_f(p.lru_s, 1),
+            fmt_f(p.svm_lru_s, 1),
+            delta,
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_sizes_bracket_cache_capacity() {
+        let total_cache = 9.0 * 1.5 * GB as f64;
+        let sizes = input_sizes();
+        assert!(sizes.iter().any(|&s| (s as f64) < total_cache));
+        assert!(sizes.iter().any(|&s| (s as f64) > total_cache));
+    }
+}

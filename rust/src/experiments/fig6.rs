@@ -1,0 +1,117 @@
+//! Fig 6 — per-application normalized run time inside each workload under
+//! H-SVM-LRU (normalized to the same app in the H-NoCache run).
+//!
+//! Paper shape: I/O-intensive apps (Grep, Sort) improve most; multi-stage
+//! Join benefits least (its later stages read the previous stage's output,
+//! which input caching cannot serve).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::config::{ClusterConfig, SvmConfig};
+use crate::util::table::{fmt_f, Table};
+use crate::workload::WORKLOADS;
+
+use super::common::{run_workload, Scenario};
+
+/// Normalized per-app run times for one workload.
+#[derive(Debug, Clone)]
+pub struct AppBreakdown {
+    pub workload: &'static str,
+    /// (app name with position suffix when repeated, normalized run time)
+    pub apps: Vec<(String, f64)>,
+}
+
+pub fn run(svm_cfg: &SvmConfig, seed: u64, scale: f64) -> Result<Vec<AppBreakdown>> {
+    WORKLOADS
+        .iter()
+        .map(|def| {
+            // Average each app's normalized time over several seeded runs
+            // (the paper's five repetitions).
+            let mut acc: Vec<(String, f64)> = Vec::new();
+            let runs_per_point = super::fig5::RUNS_PER_POINT;
+            for s in 0..runs_per_point {
+                let cfg = ClusterConfig { seed: seed + s, ..Default::default() };
+                let nocache = run_workload(def, &cfg, &Scenario::NoCache, svm_cfg, scale)?;
+                let svm = run_workload(def, &cfg, &Scenario::SvmLru, svm_cfg, scale)?;
+                let mut seen: HashMap<String, usize> = HashMap::new();
+                for (i, (base, with_svm)) in
+                    nocache.runs.iter().zip(&svm.runs).enumerate()
+                {
+                    let n = seen.entry(base.spec.app.clone()).or_insert(0);
+                    *n += 1;
+                    let label = if *n > 1 {
+                        format!("{}#{n}", base.spec.app)
+                    } else {
+                        base.spec.app.clone()
+                    };
+                    let norm = with_svm.execution_time().as_secs_f64()
+                        / base.execution_time().as_secs_f64().max(1e-9);
+                    if s == 0 {
+                        acc.push((label, norm));
+                    } else {
+                        acc[i].1 += norm;
+                    }
+                }
+            }
+            for (_, v) in acc.iter_mut() {
+                *v /= runs_per_point as f64;
+            }
+            Ok(AppBreakdown { workload: def.name, apps: acc })
+        })
+        .collect()
+}
+
+/// Mean normalized run time per application name across workloads.
+pub fn per_app_means(points: &[AppBreakdown]) -> Vec<(String, f64)> {
+    let mut acc: HashMap<String, (f64, usize)> = HashMap::new();
+    for bd in points {
+        for (name, norm) in &bd.apps {
+            let base = name.split('#').next().unwrap_or(name).to_string();
+            let e = acc.entry(base).or_insert((0.0, 0));
+            e.0 += norm;
+            e.1 += 1;
+        }
+    }
+    let mut out: Vec<(String, f64)> = acc
+        .into_iter()
+        .map(|(k, (sum, n))| (k, sum / n as f64))
+        .collect();
+    out.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    out
+}
+
+pub fn render(points: &[AppBreakdown]) -> Table {
+    let mut t = Table::new(vec!["workload", "application", "normalized run time"]);
+    for bd in points {
+        for (app, norm) in &bd.apps {
+            t.add_row(vec![bd.workload.to_string(), app.clone(), fmt_f(*norm, 4)]);
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn per_app_means_aggregates_suffixed_names() {
+        let points = vec![
+            AppBreakdown {
+                workload: "W3",
+                apps: vec![
+                    ("Grep".to_string(), 0.8),
+                    ("Grep#2".to_string(), 0.6),
+                    ("Sort".to_string(), 0.9),
+                ],
+            },
+        ];
+        let means = per_app_means(&points);
+        let grep = means.iter().find(|(n, _)| n == "Grep").unwrap();
+        assert!((grep.1 - 0.7).abs() < 1e-12);
+        // Sorted ascending: best improvement first.
+        assert_eq!(means[0].0, "Grep");
+    }
+}

@@ -1,0 +1,23 @@
+//! Experiment drivers — one module per paper artifact (see DESIGN.md §5):
+//!
+//! | module    | regenerates |
+//! |-----------|-------------|
+//! | `fig3`    | Fig 3: hit ratio vs cache size (LRU vs H-SVM-LRU) |
+//! | `table7`  | Table 7: improvement ratios from the Fig 3 series |
+//! | `fig4`    | Fig 4: WordCount exec time vs input size, 3 scenarios |
+//! | `fig5`    | Fig 5: normalized run time of workloads W1–W6 |
+//! | `fig6`    | Fig 6: per-app normalized run time under H-SVM-LRU |
+//! | `table5`  | Table 5: kernel-function confusion-matrix comparison |
+//! | `policies`| Table 1 ablation: all 13 policies on one trace |
+
+pub mod common;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod policies;
+pub mod simulate;
+pub mod table5;
+pub mod table7;
+
+pub use common::{make_coordinator, replay_trace_two_pass, run_repeated_job, run_workload, Scenario, WorkloadRun};

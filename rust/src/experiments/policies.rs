@@ -1,0 +1,84 @@
+//! Policy-comparison ablation (beyond the paper): every implemented
+//! replacement strategy from the Table 1 survey replayed over the same
+//! Fig 3 trace — hit ratio, byte hit ratio and evictions side by side.
+
+use anyhow::Result;
+
+use crate::cache::registry::POLICY_NAMES;
+use crate::config::SvmConfig;
+use crate::util::bytes::MB;
+use crate::util::table::{fmt_f, Table};
+
+use super::common::{make_coordinator, replay_trace_two_pass, Scenario};
+
+/// One policy's trace-replay result.
+#[derive(Debug, Clone)]
+pub struct PolicyResult {
+    pub policy: String,
+    pub hit_ratio: f64,
+    pub byte_hit_ratio: f64,
+    pub evictions: u64,
+}
+
+/// Replay the Fig 3 trace over every registered policy.
+pub fn run(svm_cfg: &SvmConfig, seed: u64, cache_blocks: u64) -> Result<Vec<PolicyResult>> {
+    let block_size = 64 * MB;
+    let trace = crate::workload::fig3_trace(block_size, seed);
+    let mut out = Vec::new();
+    for &name in POLICY_NAMES {
+        let (_cfg, cluster) =
+            super::common::provision_fig3_cluster(block_size, cache_blocks, seed);
+        let scenario = if name == "h-svm-lru" {
+            Scenario::SvmLru
+        } else {
+            Scenario::Policy(name.to_string())
+        };
+        let mut coord = make_coordinator(cluster, &scenario, svm_cfg)?;
+        let hit_ratio = replay_trace_two_pass(&mut coord, &trace)?;
+        out.push(PolicyResult {
+            policy: name.to_string(),
+            hit_ratio,
+            byte_hit_ratio: coord.stats.byte_hit_ratio(),
+            evictions: coord.stats.evictions,
+        });
+    }
+    out.sort_by(|a, b| b.hit_ratio.partial_cmp(&a.hit_ratio).unwrap());
+    Ok(out)
+}
+
+pub fn render(results: &[PolicyResult]) -> Table {
+    let mut t = Table::new(vec!["policy", "hit ratio", "byte hit ratio", "evictions"]);
+    for r in results {
+        t.add_row(vec![
+            r.policy.clone(),
+            fmt_f(r.hit_ratio, 4),
+            fmt_f(r.byte_hit_ratio, 4),
+            r.evictions.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_covers_every_policy() {
+        let svm_cfg = SvmConfig { backend: "rust".into(), ..Default::default() };
+        let results = run(&svm_cfg, 3, 8).unwrap();
+        assert_eq!(results.len(), POLICY_NAMES.len());
+        for r in &results {
+            assert!(
+                (0.0..=1.0).contains(&r.hit_ratio),
+                "{}: bad hit ratio {}",
+                r.policy,
+                r.hit_ratio
+            );
+        }
+        // Sorted descending.
+        for w in results.windows(2) {
+            assert!(w[0].hit_ratio >= w[1].hit_ratio);
+        }
+    }
+}

@@ -1,0 +1,182 @@
+//! Table 5 — SVM kernel-function selection: precision / recall / F1 per
+//! class plus accuracy for linear, RBF and sigmoid kernels; and the §5.2
+//! cross-validated accuracy (the paper reports 83%, RBF winning with 0.85
+//! test accuracy and sigmoid collapsing to F1 = 0 on class 1).
+//!
+//! The dataset is the classifier's real operating distribution: features
+//! and request-awareness labels collected by replaying the Fig 3 trace
+//! through the coordinator (the ALOJA substitution, DESIGN.md §2),
+//! split 75/25 like the paper.
+
+use anyhow::Result;
+
+use crate::config::SvmConfig;
+use crate::coordinator::CacheMode;
+use crate::runtime::{make_backend, SvmBackend};
+use crate::svm::dataset::Dataset;
+use crate::svm::eval::{evaluate, ConfusionMatrix};
+use crate::svm::KernelKind;
+use crate::util::bytes::MB;
+use crate::util::rng::Pcg64;
+use crate::util::table::{fmt_f, Table};
+
+use super::common::make_coordinator;
+
+/// One kernel's Table 5 row block.
+#[derive(Debug, Clone)]
+pub struct KernelEval {
+    pub kernel: KernelKind,
+    pub cm: ConfusionMatrix,
+    pub test_accuracy: f64,
+}
+
+/// Assemble the operating dataset from *both* §5.1 scenarios:
+///
+/// 1. request awareness — the Fig 3 trace replay with its ground-truth
+///    labels (clean), and
+/// 2. non-request awareness — retrospective labels collected while running
+///    Table 8 workloads (noisy: the label derives from observed job/task
+///    fate per Table 4, not from an oracle).
+///
+/// The mix reflects the paper's ALOJA-derived dataset, where labels are
+/// imperfect and the kernel choice matters.
+pub fn build_dataset(svm_cfg: &SvmConfig, seed: u64) -> Result<Dataset> {
+    let collector_cfg = SvmConfig { backend: "rust".into(), ..svm_cfg.clone() };
+
+    // Scenario 1: trace replay with request-awareness labels.
+    let (_cfg, cluster) = super::common::provision_fig3_cluster(64 * MB, 12, seed);
+    let mut coord = make_coordinator(
+        cluster,
+        &super::common::Scenario::SvmLru,
+        &collector_cfg,
+    )?;
+    debug_assert!(matches!(coord.mode(), CacheMode::Cached { .. }));
+    for req in crate::workload::fig3_trace(64 * MB, seed) {
+        coord.handle_trace_request(&req)?;
+    }
+    let mut ds = coord.pipeline.dataset().clone();
+
+    // Scenario 2: workload runs with retrospective (Table 4) labels.
+    for (i, def) in crate::workload::WORKLOADS.iter().enumerate().take(3) {
+        let cfg = crate::config::ClusterConfig {
+            seed: seed + i as u64,
+            ..Default::default()
+        };
+        let mut cluster = crate::workload::Cluster::provision(&cfg);
+        let jobs = crate::workload::instantiate(def, &mut cluster, 0.02, 0);
+        let mut coord = make_coordinator(
+            cluster,
+            &super::common::Scenario::SvmLru,
+            &collector_cfg,
+        )?;
+        let cfg_ref = coord.cluster.cfg.clone();
+        let scheduler = crate::mapreduce::Scheduler::new(&cfg_ref);
+        scheduler.run_jobs(&jobs, &mut coord, crate::sim::SimTime::ZERO);
+        coord.flush_labels_as_negative();
+        let wds = coord.pipeline.dataset().clone();
+        ds.x.extend(wds.x);
+        ds.y.extend(wds.y);
+    }
+    ds.preprocess();
+    Ok(ds)
+}
+
+/// Evaluate all three kernels on a 75/25 split of the dataset.
+pub fn run(svm_cfg: &SvmConfig, seed: u64) -> Result<Vec<KernelEval>> {
+    let ds = build_dataset(svm_cfg, seed)?;
+    let (train, test) = ds.split(0.75, &mut Pcg64::new(seed, 0x7AB5));
+    let mut out = Vec::new();
+    for kind in [KernelKind::Linear, KernelKind::Rbf, KernelKind::Sigmoid] {
+        let mut backend = backend_for(svm_cfg, kind)?;
+        backend.train(&train)?;
+        let scores = backend.decision_batch(&test.x)?;
+        let mut i = 0;
+        let cm = evaluate(&test, |_| {
+            let c = scores[i] > 0.0;
+            i += 1;
+            c
+        });
+        out.push(KernelEval { kernel: kind, cm, test_accuracy: cm.accuracy() });
+    }
+    Ok(out)
+}
+
+/// §5.2 cross-validated accuracy for the chosen (RBF) kernel.
+pub fn cross_validated_accuracy(svm_cfg: &SvmConfig, seed: u64, k: usize) -> Result<f64> {
+    let ds = build_dataset(svm_cfg, seed)?;
+    let folds = ds.k_folds(k, &mut Pcg64::new(seed, 0xCF));
+    let mut correct = 0u64;
+    let mut total = 0u64;
+    for (train, test) in folds {
+        let mut backend = backend_for(svm_cfg, KernelKind::Rbf)?;
+        backend.train(&train)?;
+        let scores = backend.decision_batch(&test.x)?;
+        for (s, &y) in scores.iter().zip(&test.y) {
+            correct += ((*s > 0.0) == (y > 0.0)) as u64;
+            total += 1;
+        }
+    }
+    Ok(correct as f64 / total.max(1) as f64)
+}
+
+fn backend_for(svm_cfg: &SvmConfig, kind: KernelKind) -> Result<Box<dyn SvmBackend>> {
+    let cfg = SvmConfig { kernel: kind.name().to_string(), ..svm_cfg.clone() };
+    make_backend(&cfg)
+}
+
+/// Paper layout: per kernel, class-0 and class-1 rows.
+pub fn render(evals: &[KernelEval]) -> Table {
+    let mut t = Table::new(vec![
+        "Kernel function",
+        "class",
+        "Precision",
+        "Recall",
+        "F1-score",
+        "Accuracy",
+    ]);
+    for e in evals {
+        let name = e.kernel.name();
+        t.add_row(vec![
+            name.to_string(),
+            "0".to_string(),
+            fmt_f(e.cm.precision_neg(), 2),
+            fmt_f(e.cm.recall_neg(), 2),
+            fmt_f(e.cm.f1_neg(), 2),
+            fmt_f(e.test_accuracy, 2),
+        ]);
+        t.add_row(vec![
+            String::new(),
+            "1".to_string(),
+            fmt_f(e.cm.precision_pos(), 2),
+            fmt_f(e.cm.recall_pos(), 2),
+            fmt_f(e.cm.f1_pos(), 2),
+            String::new(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_has_both_classes_and_volume() {
+        let svm_cfg = SvmConfig { backend: "rust".into(), ..Default::default() };
+        let ds = build_dataset(&svm_cfg, 5).unwrap();
+        assert!(ds.len() > 100, "dataset too small: {}", ds.len());
+        let pos = ds.n_positive();
+        assert!(pos > 0 && pos < ds.len(), "one-class dataset");
+    }
+
+    #[test]
+    fn rbf_beats_sigmoid_like_the_paper() {
+        let svm_cfg = SvmConfig { backend: "rust".into(), ..Default::default() };
+        let evals = run(&svm_cfg, 5).unwrap();
+        let get = |k: KernelKind| evals.iter().find(|e| e.kernel == k).unwrap();
+        let rbf = get(KernelKind::Rbf).test_accuracy;
+        let sig = get(KernelKind::Sigmoid).test_accuracy;
+        assert!(rbf >= sig, "rbf {rbf} should be >= sigmoid {sig}");
+        assert!(rbf > 0.6, "rbf accuracy too low: {rbf}");
+    }
+}

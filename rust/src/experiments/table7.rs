@@ -1,0 +1,60 @@
+//! Table 7 — improvement ratio (IR) of H-SVM-LRU over LRU per cache size,
+//! derived from the Fig 3 sweep (the paper derives it the same way).
+
+use anyhow::Result;
+
+use crate::config::SvmConfig;
+use crate::util::bytes::MB;
+use crate::util::table::{fmt_pct, Table};
+
+use super::fig3::{self, HitRatioPoint};
+
+/// Run (or reuse) the Fig 3 sweep and render Table 7.
+pub fn run(svm_cfg: &SvmConfig, seed: u64) -> Result<Vec<HitRatioPoint>> {
+    fig3::run(svm_cfg, seed)
+}
+
+/// Paper layout: one row per cache size, IR columns for 64 MB and 128 MB.
+pub fn render(points: &[HitRatioPoint]) -> Table {
+    let mut t = Table::new(vec![
+        "Cache size",
+        "IR (64 MB blocks)",
+        "IR (128 MB blocks)",
+    ]);
+    let sizes: Vec<u64> = {
+        let mut v: Vec<u64> = points.iter().map(|p| p.cache_blocks).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    for size in sizes {
+        let ir = |bs: u64| -> String {
+            points
+                .iter()
+                .find(|p| p.block_size == bs && p.cache_blocks == size)
+                .map(|p| fmt_pct(p.improvement_ratio()))
+                .unwrap_or_else(|| "N/A".to_string())
+        };
+        t.add_row(vec![size.to_string(), ir(64 * MB), ir(128 * MB)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_includes_na_for_missing_128mb_sizes() {
+        let points = vec![
+            HitRatioPoint { block_size: 64 * MB, cache_blocks: 6, lru: 0.2, svm_lru: 0.3 },
+            HitRatioPoint { block_size: 64 * MB, cache_blocks: 14, lru: 0.4, svm_lru: 0.5 },
+            HitRatioPoint { block_size: 128 * MB, cache_blocks: 6, lru: 0.3, svm_lru: 0.4 },
+        ];
+        let s = table7::render(&points).render();
+        assert!(s.contains("N/A"), "cache size 14 has no 128MB point:\n{s}");
+        assert!(s.contains("50.00%"), "IR 0.2->0.3 is 50%:\n{s}");
+    }
+
+    use super::super::table7;
+}

@@ -1,0 +1,83 @@
+//! Data blocks and node identifiers.
+
+use std::fmt;
+
+/// A unique HDFS block id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct BlockId(pub u64);
+
+impl fmt::Display for BlockId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "blk_{}", self.0)
+    }
+}
+
+/// A DataNode id (the paper's cluster has 9; NameNode is separate).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct DataNodeId(pub u32);
+
+impl fmt::Display for DataNodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "dn{}", self.0)
+    }
+}
+
+/// Data category of a block — the "type" feature of Table 2: input of a Map
+/// task, intermediate (shuffle) data, or output of a Reduce task.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BlockKind {
+    Input,
+    Intermediate,
+    Output,
+}
+
+impl BlockKind {
+    /// One-hot encoding used in the SVM feature vector.
+    pub fn one_hot(self) -> [f32; 3] {
+        match self {
+            BlockKind::Input => [1.0, 0.0, 0.0],
+            BlockKind::Intermediate => [0.0, 1.0, 0.0],
+            BlockKind::Output => [0.0, 0.0, 1.0],
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BlockKind::Input => "input",
+            BlockKind::Intermediate => "intermediate",
+            BlockKind::Output => "output",
+        }
+    }
+}
+
+/// Immutable block descriptor held in NameNode block metadata.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockInfo {
+    pub id: BlockId,
+    /// Owning file id (see hdfs::file).
+    pub file: u64,
+    /// Block index within the file.
+    pub index: u32,
+    pub size: u64,
+    pub kind: BlockKind,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        assert_eq!(BlockId(7).to_string(), "blk_7");
+        assert_eq!(DataNodeId(3).to_string(), "dn3");
+    }
+
+    #[test]
+    fn one_hot_is_exclusive() {
+        for kind in [BlockKind::Input, BlockKind::Intermediate, BlockKind::Output] {
+            let oh = kind.one_hot();
+            assert_eq!(oh.iter().sum::<f32>(), 1.0);
+        }
+        assert_ne!(BlockKind::Input.one_hot(), BlockKind::Output.one_hot());
+    }
+}

@@ -1,0 +1,155 @@
+//! DataNode: local block storage plus an off-heap block cache.
+//!
+//! The DataNode executes cache/uncache commands piggybacked on heartbeats
+//! (per the paper's §2: the NameNode manages DataNode caches centrally) and
+//! reports its cached blocks back with a periodic *cache report*.
+
+use std::collections::{BTreeSet, HashMap};
+
+use crate::sim::Resource;
+
+use super::block::{BlockId, DataNodeId};
+
+/// Off-heap cache state on one DataNode.
+#[derive(Debug)]
+pub struct DataNode {
+    pub id: DataNodeId,
+    /// Blocks stored on local disk (replica placement).
+    stored: BTreeSet<BlockId>,
+    /// Blocks currently in the off-heap cache, with their sizes.
+    cached: HashMap<BlockId, u64>,
+    cache_used: u64,
+    cache_capacity: u64,
+    /// Disk service queue (one spindle).
+    pub disk: Resource,
+    /// NIC service queue.
+    pub nic: Resource,
+}
+
+impl DataNode {
+    pub fn new(id: DataNodeId, cache_capacity: u64) -> Self {
+        DataNode {
+            id,
+            stored: BTreeSet::new(),
+            cached: HashMap::new(),
+            cache_used: 0,
+            cache_capacity,
+            disk: Resource::new(format!("{id}/disk"), 1),
+            nic: Resource::new(format!("{id}/nic"), 1),
+        }
+    }
+
+    // ---- replica storage ----
+
+    pub fn store_block(&mut self, block: BlockId) {
+        self.stored.insert(block);
+    }
+
+    pub fn has_block(&self, block: BlockId) -> bool {
+        self.stored.contains(&block)
+    }
+
+    pub fn n_stored(&self) -> usize {
+        self.stored.len()
+    }
+
+    // ---- off-heap cache ----
+
+    pub fn cache_capacity(&self) -> u64 {
+        self.cache_capacity
+    }
+
+    pub fn cache_used(&self) -> u64 {
+        self.cache_used
+    }
+
+    pub fn cache_free(&self) -> u64 {
+        self.cache_capacity - self.cache_used
+    }
+
+    pub fn is_cached(&self, block: BlockId) -> bool {
+        self.cached.contains_key(&block)
+    }
+
+    pub fn n_cached(&self) -> usize {
+        self.cached.len()
+    }
+
+    /// Execute a cache command. Fails (returns false) if the block is not
+    /// stored locally or space is insufficient — the NameNode must evict
+    /// first; the DataNode never chooses victims itself.
+    pub fn cache_block(&mut self, block: BlockId, size: u64) -> bool {
+        if !self.stored.contains(&block) || self.cached.contains_key(&block) {
+            return false;
+        }
+        if size > self.cache_free() {
+            return false;
+        }
+        self.cached.insert(block, size);
+        self.cache_used += size;
+        true
+    }
+
+    /// Execute an uncache command. Returns the freed size.
+    pub fn uncache_block(&mut self, block: BlockId) -> Option<u64> {
+        let size = self.cached.remove(&block)?;
+        self.cache_used -= size;
+        Some(size)
+    }
+
+    /// The periodic cache report: all blocks cached on this DataNode.
+    pub fn cache_report(&self) -> Vec<BlockId> {
+        let mut blocks: Vec<BlockId> = self.cached.keys().copied().collect();
+        blocks.sort_unstable();
+        blocks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MB;
+
+    fn dn() -> DataNode {
+        let mut d = DataNode::new(DataNodeId(0), 256 * MB);
+        for i in 0..8 {
+            d.store_block(BlockId(i));
+        }
+        d
+    }
+
+    #[test]
+    fn cache_respects_capacity() {
+        let mut d = dn();
+        assert!(d.cache_block(BlockId(0), 128 * MB));
+        assert!(d.cache_block(BlockId(1), 128 * MB));
+        assert!(!d.cache_block(BlockId(2), MB), "full cache must reject");
+        assert_eq!(d.cache_used(), 256 * MB);
+        assert_eq!(d.cache_free(), 0);
+    }
+
+    #[test]
+    fn cannot_cache_foreign_or_duplicate_blocks() {
+        let mut d = dn();
+        assert!(!d.cache_block(BlockId(99), MB), "not stored locally");
+        assert!(d.cache_block(BlockId(3), MB));
+        assert!(!d.cache_block(BlockId(3), MB), "already cached");
+    }
+
+    #[test]
+    fn uncache_frees_space() {
+        let mut d = dn();
+        d.cache_block(BlockId(0), 100 * MB);
+        assert_eq!(d.uncache_block(BlockId(0)), Some(100 * MB));
+        assert_eq!(d.uncache_block(BlockId(0)), None);
+        assert_eq!(d.cache_used(), 0);
+    }
+
+    #[test]
+    fn cache_report_lists_cached_blocks() {
+        let mut d = dn();
+        d.cache_block(BlockId(4), MB);
+        d.cache_block(BlockId(2), MB);
+        assert_eq!(d.cache_report(), vec![BlockId(2), BlockId(4)]);
+    }
+}

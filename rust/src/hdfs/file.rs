@@ -1,0 +1,150 @@
+//! DFS files: named byte ranges split into fixed-size blocks.
+
+use std::collections::BTreeMap;
+
+use super::block::{BlockId, BlockInfo, BlockKind};
+
+/// A file registered in the namespace.
+#[derive(Debug, Clone)]
+pub struct DfsFile {
+    pub id: u64,
+    pub name: String,
+    pub size: u64,
+    pub kind: BlockKind,
+    pub blocks: Vec<BlockId>,
+}
+
+/// Namespace: files and their block layout. Owned by the NameNode.
+#[derive(Debug, Default)]
+pub struct FileRegistry {
+    next_file: u64,
+    next_block: u64,
+    files: BTreeMap<u64, DfsFile>,
+    blocks: BTreeMap<BlockId, BlockInfo>,
+    by_name: BTreeMap<String, u64>,
+}
+
+impl FileRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create a file of `size` bytes split into `block_size` blocks (the
+    /// last block may be short). Returns the file id.
+    pub fn create_file(
+        &mut self,
+        name: impl Into<String>,
+        size: u64,
+        block_size: u64,
+        kind: BlockKind,
+    ) -> u64 {
+        assert!(block_size > 0, "zero block size");
+        let name = name.into();
+        assert!(
+            !self.by_name.contains_key(&name),
+            "file {name:?} already exists"
+        );
+        let id = self.next_file;
+        self.next_file += 1;
+        let n_blocks = size.div_ceil(block_size).max(1);
+        let mut blocks = Vec::with_capacity(n_blocks as usize);
+        for i in 0..n_blocks {
+            let bid = BlockId(self.next_block);
+            self.next_block += 1;
+            let bsize = if i == n_blocks - 1 && size % block_size != 0 && size > 0 {
+                size % block_size
+            } else {
+                block_size.min(size.max(1))
+            };
+            self.blocks.insert(
+                bid,
+                BlockInfo { id: bid, file: id, index: i as u32, size: bsize, kind },
+            );
+            blocks.push(bid);
+        }
+        self.by_name.insert(name.clone(), id);
+        self.files.insert(id, DfsFile { id, name, size, kind, blocks });
+        id
+    }
+
+    pub fn file(&self, id: u64) -> Option<&DfsFile> {
+        self.files.get(&id)
+    }
+
+    pub fn file_by_name(&self, name: &str) -> Option<&DfsFile> {
+        self.by_name.get(name).and_then(|id| self.files.get(id))
+    }
+
+    pub fn block(&self, id: BlockId) -> Option<&BlockInfo> {
+        self.blocks.get(&id)
+    }
+
+    pub fn blocks_of(&self, file: u64) -> &[BlockId] {
+        self.files.get(&file).map(|f| f.blocks.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn n_files(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn iter_blocks(&self) -> impl Iterator<Item = &BlockInfo> {
+        self.blocks.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MB;
+
+    #[test]
+    fn splits_into_blocks() {
+        let mut reg = FileRegistry::new();
+        let id = reg.create_file("input.txt", 300 * MB, 128 * MB, BlockKind::Input);
+        let f = reg.file(id).unwrap();
+        assert_eq!(f.blocks.len(), 3);
+        let sizes: Vec<u64> = f.blocks.iter().map(|b| reg.block(*b).unwrap().size).collect();
+        assert_eq!(sizes, vec![128 * MB, 128 * MB, 44 * MB]);
+        assert_eq!(reg.block(f.blocks[2]).unwrap().index, 2);
+    }
+
+    #[test]
+    fn exact_multiple_has_full_blocks() {
+        let mut reg = FileRegistry::new();
+        let id = reg.create_file("x", 256 * MB, 128 * MB, BlockKind::Input);
+        let sizes: Vec<u64> = reg.blocks_of(id).iter().map(|b| reg.block(*b).unwrap().size).collect();
+        assert_eq!(sizes, vec![128 * MB, 128 * MB]);
+    }
+
+    #[test]
+    fn tiny_file_gets_one_block() {
+        let mut reg = FileRegistry::new();
+        let id = reg.create_file("tiny", 5, 128 * MB, BlockKind::Output);
+        let blocks = reg.blocks_of(id);
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(reg.block(blocks[0]).unwrap().size, 5);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        let mut reg = FileRegistry::new();
+        reg.create_file("a", MB, MB, BlockKind::Input);
+        reg.create_file("b", MB, MB, BlockKind::Intermediate);
+        assert_eq!(reg.file_by_name("b").unwrap().kind, BlockKind::Intermediate);
+        assert!(reg.file_by_name("c").is_none());
+        assert_eq!(reg.n_files(), 2);
+        assert_eq!(reg.n_blocks(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "already exists")]
+    fn duplicate_name_panics() {
+        let mut reg = FileRegistry::new();
+        reg.create_file("a", MB, MB, BlockKind::Input);
+        reg.create_file("a", MB, MB, BlockKind::Input);
+    }
+}

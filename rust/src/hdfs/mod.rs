@@ -1,0 +1,25 @@
+//! Simulated HDFS with centralized cache management (Hadoop ≥ 2.3 semantics).
+//!
+//! * `block` / `file` — blocks, files, and the namespace registry.
+//! * `topology` — balanced replica placement (single rack, like the paper's
+//!   testbed).
+//! * `namenode` — block metadata + cache metadata, cache-report
+//!   reconciliation; the central decision point the H-SVM-LRU coordinator
+//!   plugs into.
+//! * `datanode` — replica store + off-heap cache that executes NameNode
+//!   cache/uncache commands.
+//! * `reader` — service-time model for cache/disk, local/remote reads.
+
+pub mod block;
+pub mod datanode;
+pub mod file;
+pub mod namenode;
+pub mod reader;
+pub mod topology;
+
+pub use block::{BlockId, BlockInfo, BlockKind, DataNodeId};
+pub use datanode::DataNode;
+pub use file::{DfsFile, FileRegistry};
+pub use namenode::{BlockLocation, NameNode};
+pub use reader::{classify, service_time, ReadSource};
+pub use topology::Placement;

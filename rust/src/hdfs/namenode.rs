@@ -1,0 +1,203 @@
+//! NameNode: block metadata + cache metadata, exactly the two maps the paper
+//! describes (§4.1): *block metadata* maps a block to the DataNodes holding
+//! replicas; *cache metadata* maps a block to the DataNode caching it.
+//!
+//! The NameNode is the single decision point for caching (centralized cache
+//! management): DataNodes only execute cache/uncache commands and confirm via
+//! cache reports.
+
+use std::collections::HashMap;
+
+use super::block::{BlockId, BlockInfo, DataNodeId};
+use super::datanode::DataNode;
+use super::file::FileRegistry;
+use super::topology::Placement;
+use crate::util::rng::Pcg64;
+
+/// Where a block can be served from, as resolved by the NameNode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockLocation {
+    /// Cache hit: block cached on this DataNode.
+    Cached(DataNodeId),
+    /// Cache miss: replica on disk of this DataNode (first replica per §4.1).
+    OnDisk(DataNodeId),
+}
+
+/// The NameNode.
+#[derive(Debug)]
+pub struct NameNode {
+    pub files: FileRegistry,
+    /// block metadata: replicas per block.
+    replicas: HashMap<BlockId, Vec<DataNodeId>>,
+    /// cache metadata: caching DataNode per block.
+    cache_map: HashMap<BlockId, DataNodeId>,
+    placement: Placement,
+}
+
+impl NameNode {
+    pub fn new(n_datanodes: usize, replication: usize, rng: Pcg64) -> Self {
+        NameNode {
+            files: FileRegistry::new(),
+            replicas: HashMap::new(),
+            cache_map: HashMap::new(),
+            placement: Placement::new(n_datanodes, replication, rng),
+        }
+    }
+
+    /// Register a new file: split into blocks and place replicas on
+    /// datanodes (also updates the DataNode stores).
+    pub fn register_file(
+        &mut self,
+        name: impl Into<String>,
+        size: u64,
+        block_size: u64,
+        kind: super::block::BlockKind,
+        datanodes: &mut [DataNode],
+    ) -> u64 {
+        let fid = self.files.create_file(name, size, block_size, kind);
+        let blocks: Vec<BlockId> = self.files.blocks_of(fid).to_vec();
+        for bid in blocks {
+            let nodes = self.placement.place();
+            for dn in &nodes {
+                datanodes[dn.0 as usize].store_block(bid);
+            }
+            self.replicas.insert(bid, nodes);
+        }
+        fid
+    }
+
+    pub fn block_info(&self, id: BlockId) -> Option<&BlockInfo> {
+        self.files.block(id)
+    }
+
+    /// Resolve a block per the paper's query flow: cache metadata first,
+    /// then the *first* replica from block metadata ("we choose the first
+    /// one to reduce search time").
+    pub fn locate(&self, block: BlockId) -> Option<BlockLocation> {
+        if let Some(&dn) = self.cache_map.get(&block) {
+            return Some(BlockLocation::Cached(dn));
+        }
+        self.replicas
+            .get(&block)
+            .and_then(|r| r.first())
+            .map(|&dn| BlockLocation::OnDisk(dn))
+    }
+
+    pub fn replicas_of(&self, block: BlockId) -> &[DataNodeId] {
+        self.replicas.get(&block).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    pub fn is_cached(&self, block: BlockId) -> bool {
+        self.cache_map.contains_key(&block)
+    }
+
+    pub fn cached_on(&self, block: BlockId) -> Option<DataNodeId> {
+        self.cache_map.get(&block).copied()
+    }
+
+    pub fn n_cached(&self) -> usize {
+        self.cache_map.len()
+    }
+
+    /// Record a successful cache command (NameNode-side metadata update;
+    /// confirmed later by the DataNode cache report).
+    pub fn note_cached(&mut self, block: BlockId, dn: DataNodeId) {
+        self.cache_map.insert(block, dn);
+    }
+
+    /// Record an uncache.
+    pub fn note_uncached(&mut self, block: BlockId) {
+        self.cache_map.remove(&block);
+    }
+
+    /// Apply a DataNode cache report: reconcile cache metadata with the
+    /// ground truth on that node (handles lost/failed cache commands).
+    /// Returns the number of corrections made.
+    pub fn apply_cache_report(&mut self, dn: DataNodeId, cached: &[BlockId]) -> usize {
+        let mut fixes = 0;
+        // Blocks the report says are cached but metadata doesn't know about.
+        for &b in cached {
+            if self.cache_map.get(&b) != Some(&dn) {
+                self.cache_map.insert(b, dn);
+                fixes += 1;
+            }
+        }
+        // Blocks metadata attributes to dn that the report no longer lists.
+        let stale: Vec<BlockId> = self
+            .cache_map
+            .iter()
+            .filter(|(b, &node)| node == dn && !cached.contains(b))
+            .map(|(&b, _)| b)
+            .collect();
+        for b in stale {
+            self.cache_map.remove(&b);
+            fixes += 1;
+        }
+        fixes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdfs::block::BlockKind;
+    use crate::util::bytes::MB;
+
+    fn cluster() -> (NameNode, Vec<DataNode>) {
+        let nn = NameNode::new(3, 2, Pcg64::new(1, 0));
+        let dns = (0..3)
+            .map(|i| DataNode::new(DataNodeId(i), 256 * MB))
+            .collect();
+        (nn, dns)
+    }
+
+    #[test]
+    fn register_places_replicas() {
+        let (mut nn, mut dns) = cluster();
+        let fid = nn.register_file("f", 256 * MB, 128 * MB, BlockKind::Input, &mut dns);
+        let blocks = nn.files.blocks_of(fid).to_vec();
+        assert_eq!(blocks.len(), 2);
+        for b in &blocks {
+            let reps = nn.replicas_of(*b);
+            assert_eq!(reps.len(), 2);
+            for dn in reps {
+                assert!(dns[dn.0 as usize].has_block(*b));
+            }
+        }
+    }
+
+    #[test]
+    fn locate_prefers_cache() {
+        let (mut nn, mut dns) = cluster();
+        let fid = nn.register_file("f", 128 * MB, 128 * MB, BlockKind::Input, &mut dns);
+        let b = nn.files.blocks_of(fid)[0];
+        let first_replica = nn.replicas_of(b)[0];
+        assert_eq!(nn.locate(b), Some(BlockLocation::OnDisk(first_replica)));
+        nn.note_cached(b, first_replica);
+        assert_eq!(nn.locate(b), Some(BlockLocation::Cached(first_replica)));
+        nn.note_uncached(b);
+        assert_eq!(nn.locate(b), Some(BlockLocation::OnDisk(first_replica)));
+    }
+
+    #[test]
+    fn locate_unknown_block_is_none() {
+        let (nn, _) = cluster();
+        assert_eq!(nn.locate(BlockId(999)), None);
+    }
+
+    #[test]
+    fn cache_report_reconciles() {
+        let (mut nn, mut dns) = cluster();
+        let fid = nn.register_file("f", 384 * MB, 128 * MB, BlockKind::Input, &mut dns);
+        let blocks: Vec<BlockId> = nn.files.blocks_of(fid).to_vec();
+        let dn = DataNodeId(0);
+        // Metadata thinks b0 is cached on dn, but the report lists only b1.
+        nn.note_cached(blocks[0], dn);
+        let fixes = nn.apply_cache_report(dn, &[blocks[1]]);
+        assert_eq!(fixes, 2);
+        assert!(!nn.is_cached(blocks[0]));
+        assert_eq!(nn.cached_on(blocks[1]), Some(dn));
+        // A matching report makes no corrections.
+        assert_eq!(nn.apply_cache_report(dn, &[blocks[1]]), 0);
+    }
+}

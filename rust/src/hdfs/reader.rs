@@ -1,0 +1,120 @@
+//! Block read cost model: where a read is served from determines its
+//! service time. This is the I/O half of the paper's execution-time claim —
+//! cache reads at memory bandwidth vs disk reads at HDD bandwidth (plus a
+//! network hop when the reader's container is not co-located with the data).
+
+use crate::config::ClusterConfig;
+use crate::sim::SimDuration;
+
+use super::block::DataNodeId;
+use super::namenode::BlockLocation;
+
+/// Source a block read was served from (metrics dimension).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadSource {
+    CacheLocal,
+    CacheRemote,
+    DiskLocal,
+    DiskRemote,
+}
+
+impl ReadSource {
+    pub fn is_cache(self) -> bool {
+        matches!(self, ReadSource::CacheLocal | ReadSource::CacheRemote)
+    }
+}
+
+/// Classify a resolved location relative to the task's node.
+pub fn classify(location: BlockLocation, reader_node: DataNodeId) -> (ReadSource, DataNodeId) {
+    match location {
+        BlockLocation::Cached(dn) if dn == reader_node => (ReadSource::CacheLocal, dn),
+        BlockLocation::Cached(dn) => (ReadSource::CacheRemote, dn),
+        BlockLocation::OnDisk(dn) if dn == reader_node => (ReadSource::DiskLocal, dn),
+        BlockLocation::OnDisk(dn) => (ReadSource::DiskRemote, dn),
+    }
+}
+
+/// Pure service-time of reading `size` bytes from `source` (excluding
+/// queueing, which the DataNode's `Resource`s add).
+pub fn service_time(cfg: &ClusterConfig, source: ReadSource, size: u64) -> SimDuration {
+    let transfer = |bw_bps: f64| size as f64 / bw_bps;
+    let seconds = match source {
+        ReadSource::CacheLocal => cfg.memory.access_latency_s + transfer(cfg.memory.read_bandwidth_bps),
+        ReadSource::CacheRemote => {
+            // memory read on the remote node + network transfer
+            cfg.memory.access_latency_s
+                + transfer(cfg.memory.read_bandwidth_bps)
+                + cfg.network.rtt_s
+                + transfer(cfg.network.bandwidth_bps)
+        }
+        ReadSource::DiskLocal => cfg.disk.seek_latency_s + transfer(cfg.disk.read_bandwidth_bps),
+        ReadSource::DiskRemote => {
+            cfg.disk.seek_latency_s
+                + transfer(cfg.disk.read_bandwidth_bps)
+                + cfg.network.rtt_s
+                + transfer(cfg.network.bandwidth_bps)
+        }
+    };
+    SimDuration::from_secs_f64(seconds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdfs::block::DataNodeId;
+    use crate::util::bytes::MB;
+
+    #[test]
+    fn classify_matrix() {
+        let me = DataNodeId(1);
+        let other = DataNodeId(2);
+        assert_eq!(
+            classify(BlockLocation::Cached(me), me).0,
+            ReadSource::CacheLocal
+        );
+        assert_eq!(
+            classify(BlockLocation::Cached(other), me).0,
+            ReadSource::CacheRemote
+        );
+        assert_eq!(
+            classify(BlockLocation::OnDisk(me), me).0,
+            ReadSource::DiskLocal
+        );
+        assert_eq!(
+            classify(BlockLocation::OnDisk(other), me).0,
+            ReadSource::DiskRemote
+        );
+    }
+
+    #[test]
+    fn cache_reads_are_much_faster_than_disk() {
+        let cfg = ClusterConfig::default();
+        let size = 128 * MB;
+        let cache = service_time(&cfg, ReadSource::CacheLocal, size);
+        let disk = service_time(&cfg, ReadSource::DiskLocal, size);
+        assert!(
+            disk.as_secs_f64() / cache.as_secs_f64() > 10.0,
+            "disk {disk} should dwarf cache {cache}"
+        );
+    }
+
+    #[test]
+    fn remote_adds_network_cost() {
+        let cfg = ClusterConfig::default();
+        let size = 128 * MB;
+        let local = service_time(&cfg, ReadSource::CacheLocal, size);
+        let remote = service_time(&cfg, ReadSource::CacheRemote, size);
+        assert!(remote > local);
+        let expected_extra = cfg.network.rtt_s + size as f64 / cfg.network.bandwidth_bps;
+        let got_extra = remote.as_secs_f64() - local.as_secs_f64();
+        assert!((got_extra - expected_extra).abs() < 1e-6);
+    }
+
+    #[test]
+    fn is_cache_flag() {
+        assert!(ReadSource::CacheLocal.is_cache());
+        assert!(ReadSource::CacheRemote.is_cache());
+        assert!(!ReadSource::DiskLocal.is_cache());
+        assert!(!ReadSource::DiskRemote.is_cache());
+    }
+}

@@ -1,0 +1,81 @@
+//! Replica placement. The paper's cluster is a single rack, so placement is
+//! load-balanced random: each block's `replication` replicas go to distinct
+//! DataNodes, chosen to even out per-node block counts (HDFS's default
+//! balancing behaviour without rack topology).
+
+use crate::util::rng::Pcg64;
+
+use super::block::DataNodeId;
+
+/// Chooses DataNodes for new block replicas.
+#[derive(Debug)]
+pub struct Placement {
+    n_nodes: usize,
+    replication: usize,
+    /// Blocks placed per node — kept balanced.
+    load: Vec<u64>,
+    rng: Pcg64,
+}
+
+impl Placement {
+    pub fn new(n_nodes: usize, replication: usize, rng: Pcg64) -> Self {
+        assert!(replication >= 1 && replication <= n_nodes, "bad replication");
+        Placement { n_nodes, replication, load: vec![0; n_nodes], rng }
+    }
+
+    /// Pick `replication` distinct DataNodes for one block: the least-loaded
+    /// nodes, ties broken randomly (deterministic under the seed).
+    pub fn place(&mut self) -> Vec<DataNodeId> {
+        let mut order: Vec<usize> = (0..self.n_nodes).collect();
+        self.rng.shuffle(&mut order);
+        order.sort_by_key(|&i| self.load[i]); // stable sort keeps the shuffle as tiebreak
+        let chosen: Vec<DataNodeId> = order[..self.replication]
+            .iter()
+            .map(|&i| {
+                self.load[i] += 1;
+                DataNodeId(i as u32)
+            })
+            .collect();
+        chosen
+    }
+
+    pub fn per_node_load(&self) -> &[u64] {
+        &self.load
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replicas_are_distinct() {
+        let mut p = Placement::new(9, 3, Pcg64::new(1, 0));
+        for _ in 0..100 {
+            let nodes = p.place();
+            assert_eq!(nodes.len(), 3);
+            let mut uniq = nodes.clone();
+            uniq.sort();
+            uniq.dedup();
+            assert_eq!(uniq.len(), 3);
+        }
+    }
+
+    #[test]
+    fn load_stays_balanced() {
+        let mut p = Placement::new(9, 3, Pcg64::new(2, 0));
+        for _ in 0..300 {
+            p.place();
+        }
+        let load = p.per_node_load();
+        let min = *load.iter().min().unwrap();
+        let max = *load.iter().max().unwrap();
+        assert!(max - min <= 1, "unbalanced: {load:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "bad replication")]
+    fn replication_larger_than_cluster_panics() {
+        Placement::new(2, 3, Pcg64::new(0, 0));
+    }
+}

@@ -1,0 +1,37 @@
+//! # h-svm-lru
+//!
+//! A reproduction of *"Hadoop-Oriented SVM-LRU (H-SVM-LRU): An Intelligent
+//! Cache Replacement Algorithm to Improve MapReduce Performance"* (Ghazali,
+//! Adabi, Rezaee, Down, Movaghar — cs.DC 2023) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: a discrete-event simulated
+//!   HDFS + MapReduce cluster with centralized cache management, 13 cache
+//!   replacement policies (the paper's contribution plus its whole related-
+//!   work table), the SVM training pipeline, and the experiment/bench
+//!   drivers that regenerate every table and figure of the paper.
+//! * **L2 (python/compile/model.py)** — the SVM train/predict compute graph
+//!   in JAX, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — the Gram-matrix Pallas kernel the L2
+//!   model calls.
+//!
+//! At runtime the Rust coordinator executes the AOT artifacts through the
+//! PJRT CPU client (`runtime`); Python never runs on the request path.
+//!
+//! See DESIGN.md for the architecture and the per-experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cache;
+pub mod config;
+pub mod hdfs;
+pub mod sim;
+pub mod util;
+pub mod mapreduce;
+pub mod workload;
+pub mod runtime;
+pub mod svm;
+pub mod coordinator;
+pub mod experiments;
+pub mod cli;
+pub mod bench_support;
+pub mod testkit;

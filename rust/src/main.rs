@@ -1,0 +1,197 @@
+//! `repro` — the leader entrypoint: runs the paper's experiments over the
+//! simulated cluster, executing the AOT-compiled JAX/Pallas SVM through
+//! PJRT (or the pure-Rust SMO fallback with `--svm-backend rust`).
+
+use anyhow::Result;
+
+use h_svm_lru::cli::{Cli, HELP};
+use h_svm_lru::experiments::{fig3, fig4, fig5, fig6, policies, table5, table7};
+use h_svm_lru::util::logger;
+use h_svm_lru::util::table::Table;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn emit(title: &str, table: &Table, csv: bool) {
+    if csv {
+        print!("{}", table.to_csv());
+    } else {
+        println!("\n=== {title} ===");
+        print!("{}", table.render());
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = Cli::parse(args)?;
+    match cli.flag("log-level").and_then(logger::parse_level) {
+        Some(level) => logger::init(level),
+        None => logger::init_from_env(),
+    }
+    let csv = cli.switch("csv");
+    match cli.command.as_str() {
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "quickstart" => quickstart(&cli),
+        "fig3" => {
+            let points = fig3::run(&cli.svm_config()?, cli.seed()?)?;
+            emit("Fig 3: cache hit ratio vs cache size", &fig3::render(&points), csv);
+            Ok(())
+        }
+        "table7" => {
+            let points = table7::run(&cli.svm_config()?, cli.seed()?)?;
+            emit(
+                "Table 7: improvement ratio of H-SVM-LRU over LRU",
+                &table7::render(&points),
+                csv,
+            );
+            Ok(())
+        }
+        "fig4" => {
+            let points = fig4::run(&cli.svm_config()?, cli.seed()?)?;
+            emit("Fig 4: job execution time vs input size", &fig4::render(&points), csv);
+            Ok(())
+        }
+        "fig5" => {
+            let points = fig5::run(&cli.svm_config()?, cli.seed()?, cli.scale()?)?;
+            emit("Fig 5: normalized run time per workload", &fig5::render(&points), csv);
+            let (lru, svm, over) = fig5::summary(&points);
+            println!(
+                "\navg improvement vs H-NoCache: H-LRU {lru:.2}%  H-SVM-LRU {svm:.2}%  \
+                 (H-SVM-LRU over H-LRU: {over:.2}%)"
+            );
+            println!("paper: H-LRU 11.33%, H-SVM-LRU 16.16% (4.83% over H-LRU)");
+            Ok(())
+        }
+        "fig6" => {
+            let points = fig6::run(&cli.svm_config()?, cli.seed()?, cli.scale()?)?;
+            emit("Fig 6: per-app normalized run time (H-SVM-LRU)", &fig6::render(&points), csv);
+            let mut t = Table::new(vec!["application", "mean normalized run time"]);
+            for (app, norm) in fig6::per_app_means(&points) {
+                t.add_row(vec![app, format!("{norm:.4}")]);
+            }
+            emit("Fig 6 summary: per-app means", &t, csv);
+            Ok(())
+        }
+        "table5" => {
+            let svm_cfg = cli.svm_config()?;
+            let evals = table5::run(&svm_cfg, cli.seed()?)?;
+            emit("Table 5: kernel-function evaluation", &table5::render(&evals), csv);
+            if cli.switch("cv") {
+                let acc = table5::cross_validated_accuracy(&svm_cfg, cli.seed()?, 4)?;
+                println!("\n4-fold cross-validated accuracy (rbf): {acc:.3} (paper: ~0.83)");
+            }
+            Ok(())
+        }
+        "simulate" => {
+            use h_svm_lru::experiments::simulate::{self, SimulateConfig};
+            use h_svm_lru::experiments::Scenario;
+            use h_svm_lru::mapreduce::FailureModel;
+            let svm_cfg = cli.svm_config()?;
+            let (cluster_cfg, _) = h_svm_lru::config::load(cli.flag("config"))?;
+            let policy = cli.flag("policy").unwrap_or("h-svm-lru").to_string();
+            let scenario = match policy.as_str() {
+                "none" | "no-cache" => Scenario::NoCache,
+                "h-svm-lru" => Scenario::SvmLru,
+                p => Scenario::Policy(p.to_string()),
+            };
+            let mut sim = SimulateConfig { seed: cli.seed()?, ..Default::default() };
+            if cli.switch("failures") {
+                sim.failures = FailureModel::with_rates(0.08, 0.03, cli.seed()?);
+            }
+            if cli.switch("prefetch") {
+                sim.prefetch_depth = 2;
+            }
+            let report = simulate::run(&cluster_cfg, &scenario, &svm_cfg, &sim)?;
+            println!("\n=== cluster simulation ({}) ===", scenario.label());
+            println!("jobs completed     {}", report.completed.len());
+            println!("sim time           {}", report.sim_end);
+            println!("events fired       {}", report.events_fired);
+            println!("hit ratio          {:.4}", report.hit_ratio);
+            println!("byte hit ratio     {:.4}", report.byte_hit_ratio);
+            println!("heartbeats         {}", report.heartbeats);
+            println!("metadata fixes     {}", report.metadata_fixes);
+            println!("svm trainings      {}", report.trainings);
+            println!("failed attempts    {}", report.failed_attempts);
+            println!("killed attempts    {}", report.killed_attempts);
+            if let Some(u) = report.prefetch_useful {
+                println!("prefetch useful    {:.2}%", u * 100.0);
+            }
+            let times: Vec<f64> = report
+                .completed
+                .iter()
+                .map(|r| r.execution_time().as_secs_f64())
+                .collect();
+            println!(
+                "job exec time      mean {:.1}s  p95 {:.1}s",
+                h_svm_lru::util::stats::mean(&times),
+                h_svm_lru::util::stats::percentile(&times, 95.0)
+            );
+            Ok(())
+        }
+        "policies" => {
+            let blocks: u64 = cli.flag("cache-blocks").map(|s| s.parse()).transpose()?.unwrap_or(8);
+            let results = policies::run(&cli.svm_config()?, cli.seed()?, blocks)?;
+            emit(
+                &format!("Policy ablation (cache = {blocks} blocks of 64MB)"),
+                &policies::render(&results),
+                csv,
+            );
+            Ok(())
+        }
+        "all" => {
+            for sub in ["fig3", "table7", "fig4", "fig5", "fig6", "table5", "policies"] {
+                let mut sub_args = vec![sub.to_string()];
+                sub_args.extend(args.iter().skip(1).cloned());
+                run(&sub_args)?;
+            }
+            Ok(())
+        }
+        other => {
+            anyhow::bail!("unknown subcommand {other:?}\n\n{HELP}");
+        }
+    }
+}
+
+/// A 30-second tour: replay the Fig 3 trace at one cache size and print
+/// LRU vs H-SVM-LRU hit ratios plus classifier stats.
+fn quickstart(cli: &Cli) -> Result<()> {
+    use h_svm_lru::experiments::{make_coordinator, replay_trace_two_pass, Scenario};
+    use h_svm_lru::util::bytes::MB;
+    use h_svm_lru::workload::fig3_trace;
+
+    let svm_cfg = cli.svm_config()?;
+    let seed = cli.seed()?;
+    println!("h-svm-lru quickstart: 2GB input, 8-block cache, 64MB blocks");
+    println!("svm backend: {} / kernel {}", svm_cfg.backend, svm_cfg.kernel);
+    let trace = fig3_trace(64 * MB, seed);
+    println!("trace: {} requests over 32 distinct blocks", trace.len());
+    for scenario in [Scenario::Policy("lru".to_string()), Scenario::SvmLru] {
+        let (_cfg, cluster) =
+            h_svm_lru::experiments::common::provision_fig3_cluster(64 * MB, 8, seed);
+        let mut coord = make_coordinator(cluster, &scenario, &svm_cfg)?;
+        let hit_ratio = replay_trace_two_pass(&mut coord, &trace)?;
+        println!(
+            "{:<12} hit ratio {:.4}   (hits {} / misses {} / evictions {})",
+            scenario.label(),
+            hit_ratio,
+            coord.stats.hits,
+            coord.stats.misses,
+            coord.stats.evictions,
+        );
+        if scenario == Scenario::SvmLru {
+            let bs = coord.batcher_stats();
+            println!(
+                "  classifier: {} trainings, {} queries, {} class-cache hits, {} PJRT calls",
+                coord.pipeline.trainings, bs.queries, bs.class_cache_hits, bs.backend_calls
+            );
+        }
+    }
+    Ok(())
+}

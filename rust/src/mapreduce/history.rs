@@ -1,0 +1,217 @@
+//! Job History Server — the training-data source (§5.1, Table 3).
+//!
+//! Hadoop's history server exposes per-job and per-task state over REST;
+//! the paper extracts its SVM training features from exactly these records.
+//! Our simulated server stores `HistoryRecord`s with the Table 3 schema and
+//! additionally emits *snapshots* of a job at several points of its
+//! lifecycle (New -> Initiated -> Running(p%) -> terminal), because the
+//! Table 4 labeling rules are defined over in-flight states, not just
+//! completed jobs.
+
+use crate::cache::CacheAffinity;
+use crate::sim::{SimDuration, SimTime};
+
+use super::job::{JobId, JobStatus};
+use super::scheduler::JobRun;
+use super::task::{TaskKind, TaskStatus};
+
+/// One Table 3 record: a (job, task-type) state observation.
+#[derive(Debug, Clone)]
+pub struct HistoryRecord {
+    pub job: JobId,
+    pub job_name: String,
+    pub maps_total: usize,
+    pub maps_completed: usize,
+    pub reduces_total: usize,
+    pub reduces_completed: usize,
+    pub job_status: JobStatus,
+    pub affinity: CacheAffinity,
+    pub start_time: SimTime,
+    pub finish_time: Option<SimTime>,
+    pub task_kind: TaskKind,
+    pub task_status: TaskStatus,
+    pub avg_map_time: SimDuration,
+    pub avg_reduce_time: SimDuration,
+    /// Task progress in [0, 1].
+    pub progress: f64,
+}
+
+/// The simulated job-history server.
+#[derive(Debug, Default)]
+pub struct HistoryServer {
+    records: Vec<HistoryRecord>,
+}
+
+impl HistoryServer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, rec: HistoryRecord) {
+        self.records.push(rec);
+    }
+
+    pub fn records(&self) -> &[HistoryRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.records.clear();
+    }
+
+    /// Ingest a completed `JobRun`, emitting lifecycle snapshots:
+    /// * New / Initiated (queue + scheduling states),
+    /// * Running at 25/50/75% map progress (map running, reduce waiting),
+    /// * Running with maps done (reduce running),
+    /// * the terminal state.
+    pub fn ingest(&mut self, run: &JobRun) {
+        let spec = &run.spec;
+        let base = HistoryRecord {
+            job: spec.id,
+            job_name: spec.app.clone(),
+            maps_total: spec.n_maps(),
+            maps_completed: 0,
+            reduces_total: spec.n_reduces,
+            reduces_completed: 0,
+            job_status: JobStatus::New,
+            affinity: spec.affinity,
+            start_time: run.start,
+            finish_time: None,
+            task_kind: TaskKind::Map,
+            task_status: TaskStatus::New,
+            avg_map_time: SimDuration::ZERO,
+            avg_reduce_time: SimDuration::ZERO,
+            progress: 0.0,
+        };
+
+        // queued
+        self.push(base.clone());
+        // initiated / scheduling
+        self.push(HistoryRecord {
+            job_status: JobStatus::Initiated,
+            task_status: TaskStatus::Scheduled,
+            ..base.clone()
+        });
+        // running map snapshots
+        for pct in [0.25, 0.5, 0.75] {
+            let done = ((spec.n_maps() as f64) * pct) as usize;
+            self.push(HistoryRecord {
+                job_status: JobStatus::Running,
+                maps_completed: done,
+                task_kind: TaskKind::Map,
+                task_status: TaskStatus::Running,
+                avg_map_time: run.avg_map_time(),
+                progress: pct,
+                ..base.clone()
+            });
+        }
+        // maps finished, reduces running
+        self.push(HistoryRecord {
+            job_status: JobStatus::Running,
+            maps_completed: run.maps_completed(),
+            task_kind: TaskKind::Reduce,
+            task_status: TaskStatus::Running,
+            avg_map_time: run.avg_map_time(),
+            avg_reduce_time: run.avg_reduce_time(),
+            progress: 0.5,
+            ..base.clone()
+        });
+        // terminal
+        self.push(HistoryRecord {
+            job_status: run.status,
+            maps_completed: run.maps_completed(),
+            reduces_completed: run.reduces_completed(),
+            task_kind: TaskKind::Reduce,
+            task_status: match run.status {
+                JobStatus::Succeeded => TaskStatus::Succeeded,
+                JobStatus::Failed => TaskStatus::Failed,
+                JobStatus::Killed => TaskStatus::Killed,
+                _ => TaskStatus::Running,
+            },
+            finish_time: Some(run.finish),
+            avg_map_time: run.avg_map_time(),
+            avg_reduce_time: run.avg_reduce_time(),
+            progress: 1.0,
+            ..base
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdfs::BlockId;
+    use crate::mapreduce::job::JobSpec;
+    use crate::mapreduce::task::Task;
+
+    fn fake_run() -> JobRun {
+        let spec = JobSpec {
+            id: JobId(3),
+            app: "Grep".into(),
+            affinity: CacheAffinity::High,
+            input_blocks: vec![BlockId(0), BlockId(1)],
+            n_reduces: 1,
+            map_cpu_s_per_mb: 0.005,
+            reduce_cpu_s_per_mb: 0.002,
+            shuffle_ratio: 0.05,
+            stages: 1,
+        };
+        let mut tasks = vec![
+            Task::map(spec.id, 0, BlockId(0)),
+            Task::map(spec.id, 1, BlockId(1)),
+            Task::reduce(spec.id, 0),
+        ];
+        for (i, t) in tasks.iter_mut().enumerate() {
+            t.status = TaskStatus::Succeeded;
+            t.start = Some(SimTime((i as u64) * 100));
+            t.finish = Some(SimTime((i as u64) * 100 + 50));
+        }
+        JobRun {
+            spec,
+            status: JobStatus::Succeeded,
+            start: SimTime::ZERO,
+            finish: SimTime(1000),
+            tasks,
+            cache_hits: 1,
+            cache_misses: 1,
+            bytes_from_cache: 64,
+            bytes_from_disk: 64,
+            failed_attempts: 0,
+            killed_attempts: 0,
+        }
+    }
+
+    #[test]
+    fn ingest_emits_lifecycle_snapshots() {
+        let mut hs = HistoryServer::new();
+        hs.ingest(&fake_run());
+        assert_eq!(hs.len(), 7);
+        let states: Vec<JobStatus> = hs.records().iter().map(|r| r.job_status).collect();
+        assert_eq!(states[0], JobStatus::New);
+        assert_eq!(states[1], JobStatus::Initiated);
+        assert!(states[2..6].iter().all(|s| *s == JobStatus::Running));
+        assert_eq!(states[6], JobStatus::Succeeded);
+        let last = &hs.records()[6];
+        assert_eq!(last.maps_completed, 2);
+        assert_eq!(last.reduces_completed, 1);
+        assert!(last.finish_time.is_some());
+        assert!(last.avg_map_time > SimDuration::ZERO);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut hs = HistoryServer::new();
+        hs.ingest(&fake_run());
+        assert!(!hs.is_empty());
+        hs.clear();
+        assert!(hs.is_empty());
+    }
+}

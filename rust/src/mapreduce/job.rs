@@ -1,0 +1,105 @@
+//! Jobs and their lifecycle states (the paper's Table 3/4 state machine).
+
+use crate::cache::CacheAffinity;
+use crate::hdfs::BlockId;
+
+/// Job lifecycle states — "valid values of job state" from Table 3.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum JobStatus {
+    New,
+    Initiated,
+    Running,
+    Succeeded,
+    Failed,
+    Killed,
+    Error,
+}
+
+impl JobStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            JobStatus::New => "new",
+            JobStatus::Initiated => "initiated",
+            JobStatus::Running => "running",
+            JobStatus::Succeeded => "succeeded",
+            JobStatus::Failed => "failed",
+            JobStatus::Killed => "killed",
+            JobStatus::Error => "error",
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            JobStatus::Succeeded | JobStatus::Failed | JobStatus::Killed | JobStatus::Error
+        )
+    }
+}
+
+/// A unique job id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u64);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job_{}", self.0)
+    }
+}
+
+/// A runnable MapReduce job: one map task per input block, `n_reduces`
+/// reduce tasks fed by the shuffle.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    pub id: JobId,
+    /// Application name (WordCount, Sort, Grep, Join, Aggregation).
+    pub app: String,
+    pub affinity: CacheAffinity,
+    /// Input blocks (map task inputs).
+    pub input_blocks: Vec<BlockId>,
+    pub n_reduces: usize,
+    /// CPU seconds per MB of input for a map task.
+    pub map_cpu_s_per_mb: f64,
+    /// CPU seconds per MB of shuffled data for a reduce task.
+    pub reduce_cpu_s_per_mb: f64,
+    /// Intermediate-data volume as a fraction of input volume.
+    pub shuffle_ratio: f64,
+    /// For multi-stage apps (Join): number of chained MapReduce stages.
+    pub stages: usize,
+}
+
+impl JobSpec {
+    pub fn n_maps(&self) -> usize {
+        self.input_blocks.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn terminal_states() {
+        assert!(JobStatus::Succeeded.is_terminal());
+        assert!(JobStatus::Failed.is_terminal());
+        assert!(!JobStatus::Running.is_terminal());
+        assert!(!JobStatus::New.is_terminal());
+        assert_eq!(JobStatus::Initiated.name(), "initiated");
+    }
+
+    #[test]
+    fn job_shape() {
+        let job = JobSpec {
+            id: JobId(1),
+            app: "WordCount".into(),
+            affinity: CacheAffinity::Medium,
+            input_blocks: vec![BlockId(0), BlockId(1), BlockId(2)],
+            n_reduces: 2,
+            map_cpu_s_per_mb: 0.01,
+            reduce_cpu_s_per_mb: 0.005,
+            shuffle_ratio: 0.4,
+            stages: 1,
+        };
+        assert_eq!(job.n_maps(), 3);
+        assert_eq!(job.id.to_string(), "job_1");
+    }
+}

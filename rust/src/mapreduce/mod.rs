@@ -1,0 +1,18 @@
+//! Simulated MapReduce engine: jobs, tasks, the wave scheduler and the
+//! job-history server the SVM trains from.
+//!
+//! * `job` / `task` — specs and the Table 3/4 state machines.
+//! * `scheduler` — wave-based slot scheduling with data-local placement;
+//!   block reads flow through a pluggable `BlockService` (the cache
+//!   coordinator at runtime).
+//! * `history` — Table 3 records + lifecycle snapshots for SVM labeling.
+
+pub mod history;
+pub mod job;
+pub mod scheduler;
+pub mod task;
+
+pub use history::{HistoryRecord, HistoryServer};
+pub use job::{JobId, JobSpec, JobStatus};
+pub use scheduler::{AccessRequest, BlockRead, BlockService, FailureModel, JobRun, Scheduler};
+pub use task::{Task, TaskKind, TaskStatus};

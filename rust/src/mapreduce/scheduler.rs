@@ -1,0 +1,676 @@
+//! Wave-based MapReduce scheduler over the simulated cluster.
+//!
+//! Jobs are decomposed into map tasks (one per input block) and reduce
+//! tasks. Map slots and reduce slots per node come from the container
+//! memory configuration (Table 6). Concurrent jobs share the slot pool in
+//! round-robin order — the paper's fig 5/6 workloads assume "an equal share
+//! of cluster resources" for the four applications of a workload.
+//!
+//! Placement is data-local with a bounded locality delay (HDFS-style): a
+//! task prefers the replica/cached node unless a remote slot frees much
+//! earlier. Block reads go through a pluggable `BlockService` — the cache
+//! coordinator on the request path, or a no-cache stub for the H-NoCache
+//! baseline.
+
+use std::collections::VecDeque;
+
+use crate::cache::CacheAffinity;
+use crate::config::ClusterConfig;
+use crate::hdfs::{BlockId, BlockKind, DataNodeId, ReadSource};
+use crate::sim::{SimDuration, SimTime};
+use crate::util::bytes::MB;
+
+use super::job::{JobId, JobSpec, JobStatus};
+use super::task::{Task, TaskKind, TaskStatus};
+
+/// What a task tells the block service about itself (feature context).
+#[derive(Debug, Clone)]
+pub struct AccessRequest {
+    pub app: String,
+    pub affinity: CacheAffinity,
+    pub kind: BlockKind,
+    pub file: u64,
+    pub file_width: u32,
+    pub file_complete: bool,
+}
+
+/// Result of a block read issued through the service.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockRead {
+    /// Absolute completion time (includes queueing on node resources).
+    pub completion: SimTime,
+    pub source: ReadSource,
+}
+
+/// The request-path interface between the scheduler and the cache layer.
+pub trait BlockService {
+    /// Read `block` from `reader`'s perspective starting at `now`.
+    fn read_block(
+        &mut self,
+        block: BlockId,
+        reader: DataNodeId,
+        now: SimTime,
+        req: &AccessRequest,
+    ) -> BlockRead;
+
+    /// Which node can serve the block fastest right now (placement hint).
+    fn preferred_node(&self, block: BlockId) -> Option<DataNodeId>;
+
+    /// Replica nodes of the block (for data-local placement).
+    fn replica_nodes(&self, block: BlockId) -> Vec<DataNodeId>;
+
+    /// Block size lookup.
+    fn block_size(&self, block: BlockId) -> u64;
+
+    /// Register a job's intermediate (shuffle) data of `bytes` total and
+    /// return its blocks. Hadoop ≥ 2.3's in-memory cache "can cache both
+    /// input and intermediate data" (paper §2) — intermediate blocks flow
+    /// through the same cache and are the main cache-pollution source
+    /// H-SVM-LRU targets (read once by reduces, never again). The no-cache
+    /// baseline returns no blocks (shuffle stays off the cache path).
+    fn register_intermediate(&mut self, _job: JobId, _bytes: u64) -> Vec<BlockId> {
+        Vec::new()
+    }
+}
+
+/// Completed-job record used by metrics and the history server.
+#[derive(Debug, Clone)]
+pub struct JobRun {
+    pub spec: JobSpec,
+    pub status: JobStatus,
+    pub start: SimTime,
+    pub finish: SimTime,
+    pub tasks: Vec<Task>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub bytes_from_cache: u64,
+    pub bytes_from_disk: u64,
+    /// Injected-failure telemetry (FailureModel).
+    pub failed_attempts: u64,
+    pub killed_attempts: u64,
+}
+
+impl JobRun {
+    pub fn execution_time(&self) -> SimDuration {
+        self.finish - self.start
+    }
+
+    pub fn maps_completed(&self) -> usize {
+        self.tasks
+            .iter()
+            .filter(|t| t.kind == TaskKind::Map && t.status == TaskStatus::Succeeded)
+            .count()
+    }
+
+    pub fn reduces_completed(&self) -> usize {
+        self.tasks
+            .iter()
+            .filter(|t| t.kind == TaskKind::Reduce && t.status == TaskStatus::Succeeded)
+            .count()
+    }
+
+    pub fn avg_map_time(&self) -> SimDuration {
+        self.avg_task_time(TaskKind::Map)
+    }
+
+    pub fn avg_reduce_time(&self) -> SimDuration {
+        self.avg_task_time(TaskKind::Reduce)
+    }
+
+    fn avg_task_time(&self, kind: TaskKind) -> SimDuration {
+        let times: Vec<u64> = self
+            .tasks
+            .iter()
+            .filter(|t| t.kind == kind)
+            .filter_map(|t| t.duration().map(|d| d.micros()))
+            .collect();
+        if times.is_empty() {
+            SimDuration::ZERO
+        } else {
+            SimDuration::from_micros(times.iter().sum::<u64>() / times.len() as u64)
+        }
+    }
+}
+
+/// One map/reduce slot on a node.
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    node: DataNodeId,
+    free_at: SimTime,
+}
+
+/// Slot pool with earliest-free queries.
+#[derive(Debug)]
+struct SlotPool {
+    slots: Vec<Slot>,
+}
+
+impl SlotPool {
+    fn new(cfg: &ClusterConfig, per_node: usize) -> Self {
+        let mut slots = Vec::with_capacity(cfg.datanodes * per_node);
+        for n in 0..cfg.datanodes {
+            for _ in 0..per_node {
+                slots.push(Slot { node: DataNodeId(n as u32), free_at: SimTime::ZERO });
+            }
+        }
+        SlotPool { slots }
+    }
+
+    fn earliest(&self) -> (usize, Slot) {
+        let (i, s) = self
+            .slots
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, s)| (s.free_at, *i))
+            .expect("empty slot pool");
+        (i, *s)
+    }
+
+    /// Earliest slot on one of `nodes`; None when `nodes` is empty.
+    fn earliest_on(&self, nodes: &[DataNodeId]) -> Option<(usize, Slot)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| nodes.contains(&s.node))
+            .min_by_key(|(i, s)| (s.free_at, *i))
+            .map(|(i, s)| (i, *s))
+    }
+
+    fn occupy(&mut self, idx: usize, until: SimTime) {
+        self.slots[idx].free_at = until;
+    }
+}
+
+/// Failure-injection model. The paper's Table 4 labeling rules cover
+/// failed and killed (speculative) tasks — rows 6-9 only fire when tasks
+/// can actually fail, so the simulator injects failures per attempt.
+#[derive(Debug, Clone)]
+pub struct FailureModel {
+    /// Probability a map attempt fails (input re-read required, row 6).
+    pub map_fail_prob: f64,
+    /// Probability a map attempt is killed for speculative re-execution
+    /// (row 8: the killed task's input will be read again elsewhere).
+    pub map_kill_prob: f64,
+    /// Attempts per task before the job gives up (Hadoop default: 4).
+    pub max_attempts: u32,
+    pub seed: u64,
+}
+
+impl Default for FailureModel {
+    fn default() -> Self {
+        FailureModel { map_fail_prob: 0.0, map_kill_prob: 0.0, max_attempts: 4, seed: 0xFA11 }
+    }
+}
+
+impl FailureModel {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn with_rates(map_fail_prob: f64, map_kill_prob: f64, seed: u64) -> Self {
+        FailureModel { map_fail_prob, map_kill_prob, max_attempts: 4, seed }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.map_fail_prob > 0.0 || self.map_kill_prob > 0.0
+    }
+}
+
+/// Scheduler for a batch of concurrent jobs.
+pub struct Scheduler<'a> {
+    cfg: &'a ClusterConfig,
+    /// Locality delay: how much later a local slot may free and still be
+    /// preferred over a remote one.
+    locality_delay: SimDuration,
+    failures: FailureModel,
+}
+
+impl<'a> Scheduler<'a> {
+    pub fn new(cfg: &'a ClusterConfig) -> Self {
+        Scheduler {
+            cfg,
+            locality_delay: SimDuration::from_secs_f64(3.0),
+            failures: FailureModel::none(),
+        }
+    }
+
+    /// Enable failure injection (speculative execution stays off per
+    /// Table 6; kills model externally-triggered re-execution).
+    pub fn with_failures(mut self, failures: FailureModel) -> Self {
+        self.failures = failures;
+        self
+    }
+
+    /// Run `jobs` concurrently from `start`, sharing slots round-robin.
+    /// Returns one `JobRun` per job (same order).
+    pub fn run_jobs(
+        &self,
+        jobs: &[JobSpec],
+        svc: &mut dyn BlockService,
+        start: SimTime,
+    ) -> Vec<JobRun> {
+        let mut map_slots = SlotPool::new(self.cfg, self.cfg.map_slots_per_node());
+        let mut reduce_slots = SlotPool::new(self.cfg, self.cfg.reduce_slots_per_node());
+
+        struct JobState {
+            spec: JobSpec,
+            pending_maps: VecDeque<usize>,
+            tasks: Vec<Task>,
+            maps_done: usize,
+            map_barrier: SimTime,
+            hits: u64,
+            misses: u64,
+            bytes_cache: u64,
+            bytes_disk: u64,
+            attempts: Vec<u32>,
+            failed_attempts: u64,
+            killed_attempts: u64,
+        }
+
+        let mut failure_rng = crate::util::rng::Pcg64::new(self.failures.seed, 0xDEAD);
+
+        let mut states: Vec<JobState> = jobs
+            .iter()
+            .map(|spec| {
+                let mut tasks = Vec::with_capacity(spec.n_maps() + spec.n_reduces);
+                for (i, &b) in spec.input_blocks.iter().enumerate() {
+                    tasks.push(Task::map(spec.id, i, b));
+                }
+                for i in 0..spec.n_reduces {
+                    tasks.push(Task::reduce(spec.id, i));
+                }
+                JobState {
+                    pending_maps: (0..jobs_n_maps(spec)).collect(),
+                    attempts: vec![0; spec.n_maps()],
+                    spec: spec.clone(),
+                    tasks,
+                    maps_done: 0,
+                    map_barrier: start,
+                    hits: 0,
+                    misses: 0,
+                    bytes_cache: 0,
+                    bytes_disk: 0,
+                    failed_attempts: 0,
+                    killed_attempts: 0,
+                }
+            })
+            .collect();
+
+        // ---- map phase: round-robin across jobs for fair sharing ----
+        let mut remaining: usize = states.iter().map(|s| s.pending_maps.len()).sum();
+        let mut cursor = 0usize;
+        while remaining > 0 {
+            // next job with pending maps
+            while states[cursor % states.len()].pending_maps.is_empty() {
+                cursor += 1;
+            }
+            let ji = cursor % states.len();
+            cursor += 1;
+            let task_idx = states[ji].pending_maps.pop_front().unwrap();
+            remaining -= 1;
+
+            let block = states[ji].tasks[task_idx].input.expect("map without input");
+            let size = svc.block_size(block);
+
+            // Placement: prefer the cached node, then a replica, with a
+            // bounded locality delay against the globally earliest slot.
+            let mut candidates: Vec<DataNodeId> = Vec::new();
+            if let Some(n) = svc.preferred_node(block) {
+                candidates.push(n);
+            }
+            for n in svc.replica_nodes(block) {
+                if !candidates.contains(&n) {
+                    candidates.push(n);
+                }
+            }
+            let (global_idx, global_slot) = map_slots.earliest();
+            let (slot_idx, slot) = match map_slots.earliest_on(&candidates) {
+                Some((li, ls))
+                    if ls.free_at <= global_slot.free_at + self.locality_delay =>
+                {
+                    (li, ls)
+                }
+                _ => (global_idx, global_slot),
+            };
+
+            let task_start = slot.free_at.max(start);
+            let req = AccessRequest {
+                app: states[ji].spec.app.clone(),
+                affinity: states[ji].spec.affinity,
+                kind: BlockKind::Input,
+                file: block_file_hint(&states[ji].spec),
+                file_width: states[ji].spec.n_maps() as u32,
+                file_complete: states[ji].maps_done + 1 == states[ji].spec.n_maps(),
+            };
+            let read = svc.read_block(block, slot.node, task_start, &req);
+            let cpu = SimDuration::from_secs_f64(
+                size as f64 / MB as f64 * states[ji].spec.map_cpu_s_per_mb,
+            );
+
+            // Failure injection (Table 4 rows 6/8): a failed attempt dies
+            // mid-compute (half the CPU burned); a killed attempt is
+            // re-executed elsewhere. Both re-enqueue the task, re-reading
+            // the input — exactly the cache-relevant behaviour.
+            states[ji].attempts[task_idx] += 1;
+            let attempt = states[ji].attempts[task_idx];
+            let outcome = if self.failures.enabled()
+                && attempt < self.failures.max_attempts
+            {
+                if failure_rng.gen_bool(self.failures.map_fail_prob) {
+                    Some(TaskStatus::Failed)
+                } else if failure_rng.gen_bool(self.failures.map_kill_prob) {
+                    Some(TaskStatus::Killed)
+                } else {
+                    None
+                }
+            } else {
+                None
+            };
+
+            if let Some(status) = outcome {
+                let abort = read.completion
+                    + SimDuration::from_micros(cpu.micros() / 2);
+                map_slots.occupy(slot_idx, abort);
+                let st = &mut states[ji];
+                match status {
+                    TaskStatus::Failed => st.failed_attempts += 1,
+                    _ => st.killed_attempts += 1,
+                }
+                // The attempt still consumed I/O.
+                if read.source.is_cache() {
+                    st.hits += 1;
+                    st.bytes_cache += size;
+                } else {
+                    st.misses += 1;
+                    st.bytes_disk += size;
+                }
+                st.pending_maps.push_back(task_idx);
+                remaining += 1;
+                continue;
+            }
+
+            let finish = read.completion + cpu;
+            map_slots.occupy(slot_idx, finish);
+
+            let st = &mut states[ji];
+            let t = &mut st.tasks[task_idx];
+            t.status = TaskStatus::Succeeded;
+            t.node = Some(slot.node);
+            t.start = Some(task_start);
+            t.finish = Some(finish);
+            st.maps_done += 1;
+            st.map_barrier = st.map_barrier.max(finish);
+            if read.source.is_cache() {
+                st.hits += 1;
+                st.bytes_cache += size;
+            } else {
+                st.misses += 1;
+                st.bytes_disk += size;
+            }
+        }
+
+        // ---- shuffle + reduce phase (and extra stages for Join-likes) ----
+        states
+            .into_iter()
+            .map(|mut st| {
+                let spec = st.spec.clone();
+                let total_input: u64 = spec
+                    .input_blocks
+                    .iter()
+                    .map(|&b| svc.block_size(b))
+                    .sum();
+                let shuffle_bytes = (total_input as f64 * spec.shuffle_ratio) as u64;
+                let per_reduce = shuffle_bytes / spec.n_reduces.max(1) as u64;
+
+                // Intermediate data rides the cache path when the service
+                // supports it (HDFS ≥ 2.3 caches intermediate data too).
+                let inter_blocks = svc.register_intermediate(spec.id, shuffle_bytes);
+
+                let mut job_end = st.map_barrier;
+                let reduce_indices: Vec<usize> = st
+                    .tasks
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, t)| t.kind == TaskKind::Reduce)
+                    .map(|(i, _)| i)
+                    .collect();
+                for (r, idx) in reduce_indices.into_iter().enumerate() {
+                    let (slot_idx, slot) = reduce_slots.earliest();
+                    let rstart = slot.free_at.max(st.map_barrier);
+                    let mut cursor = rstart;
+                    if inter_blocks.is_empty() {
+                        // Analytic shuffle: map outputs are read from the
+                        // mappers' disks and cross the network — the same
+                        // costs the cache-path shuffle pays on a miss.
+                        let shuffle_s = self.cfg.disk.seek_latency_s
+                            + per_reduce as f64 / self.cfg.disk.read_bandwidth_bps
+                            + per_reduce as f64 / self.cfg.network.bandwidth_bps
+                            + self.cfg.network.rtt_s * spec.n_maps().max(1) as f64;
+                        cursor = cursor + SimDuration::from_secs_f64(shuffle_s);
+                    } else {
+                        // Shuffle through the cache: this reduce fetches its
+                        // share of the intermediate blocks.
+                        let req = AccessRequest {
+                            app: spec.app.clone(),
+                            affinity: spec.affinity,
+                            kind: BlockKind::Intermediate,
+                            file: u64::MAX - spec.id.0, // per-job shuffle file
+                            file_width: spec.n_reduces as u32,
+                            file_complete: false,
+                        };
+                        for b in inter_blocks
+                            .iter()
+                            .skip(r)
+                            .step_by(spec.n_reduces.max(1))
+                        {
+                            let node = st.tasks[idx]
+                                .node
+                                .or_else(|| svc.preferred_node(*b))
+                                .unwrap_or(crate::hdfs::DataNodeId(0));
+                            let read = svc.read_block(*b, node, cursor, &req);
+                            cursor = read.completion;
+                        }
+                    }
+                    let cpu_s = per_reduce as f64 / MB as f64 * spec.reduce_cpu_s_per_mb;
+                    // output write-back to HDFS (local disk, replication
+                    // pipeline overlaps — first copy dominates)
+                    let write_s = per_reduce as f64 / self.cfg.disk.read_bandwidth_bps;
+                    let finish = cursor + SimDuration::from_secs_f64(cpu_s + write_s);
+                    reduce_slots.occupy(slot_idx, finish);
+                    let t = &mut st.tasks[idx];
+                    t.status = TaskStatus::Succeeded;
+                    t.node = Some(slot.node);
+                    t.start = Some(rstart);
+                    t.finish = Some(finish);
+                    job_end = job_end.max(finish);
+                }
+
+                // Multi-stage applications (Join): each extra stage re-reads
+                // the previous stage's output from disk — exactly why the
+                // paper finds Join benefits least from input caching.
+                for _ in 1..spec.stages {
+                    let stage_bytes = shuffle_bytes.max(1);
+                    let read_s = self.cfg.disk.seek_latency_s
+                        + stage_bytes as f64 / self.cfg.disk.read_bandwidth_bps;
+                    let cpu_s =
+                        stage_bytes as f64 / MB as f64 * spec.map_cpu_s_per_mb;
+                    let slots_total = self.cfg.datanodes * self.cfg.map_slots_per_node();
+                    let parallel = slots_total.max(1) as f64;
+                    job_end = job_end
+                        + SimDuration::from_secs_f64((read_s + cpu_s) / parallel.min(4.0));
+                }
+
+                JobRun {
+                    spec,
+                    status: JobStatus::Succeeded,
+                    start,
+                    finish: job_end,
+                    tasks: st.tasks,
+                    cache_hits: st.hits,
+                    cache_misses: st.misses,
+                    bytes_from_cache: st.bytes_cache,
+                    bytes_from_disk: st.bytes_disk,
+                    failed_attempts: st.failed_attempts,
+                    killed_attempts: st.killed_attempts,
+                }
+            })
+            .collect()
+    }
+}
+
+fn jobs_n_maps(spec: &JobSpec) -> usize {
+    spec.n_maps()
+}
+
+/// Stable per-job file grouping hint for policy features: all input blocks
+/// of a job belong to the same logical input file set.
+fn block_file_hint(spec: &JobSpec) -> u64 {
+    spec.input_blocks.first().map(|b| b.0).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hdfs::reader;
+
+    /// A no-cache service: every read is a local/remote disk read.
+    pub struct NoCacheService {
+        pub cfg: ClusterConfig,
+        pub sizes: std::collections::HashMap<BlockId, u64>,
+        pub replicas: std::collections::HashMap<BlockId, Vec<DataNodeId>>,
+    }
+
+    impl BlockService for NoCacheService {
+        fn read_block(
+            &mut self,
+            block: BlockId,
+            reader_node: DataNodeId,
+            now: SimTime,
+            _req: &AccessRequest,
+        ) -> BlockRead {
+            let nodes = &self.replicas[&block];
+            let source = if nodes.contains(&reader_node) {
+                ReadSource::DiskLocal
+            } else {
+                ReadSource::DiskRemote
+            };
+            let d = reader::service_time(&self.cfg, source, self.sizes[&block]);
+            BlockRead { completion: now + d, source }
+        }
+
+        fn preferred_node(&self, block: BlockId) -> Option<DataNodeId> {
+            self.replicas[&block].first().copied()
+        }
+
+        fn replica_nodes(&self, block: BlockId) -> Vec<DataNodeId> {
+            self.replicas[&block].clone()
+        }
+
+        fn block_size(&self, block: BlockId) -> u64 {
+            self.sizes[&block]
+        }
+    }
+
+    fn setup(n_blocks: u64) -> (ClusterConfig, NoCacheService, JobSpec) {
+        let cfg = ClusterConfig { datanodes: 3, replication: 2, ..Default::default() };
+        let mut sizes = std::collections::HashMap::new();
+        let mut replicas = std::collections::HashMap::new();
+        for i in 0..n_blocks {
+            sizes.insert(BlockId(i), 64 * MB);
+            replicas.insert(
+                BlockId(i),
+                vec![DataNodeId((i % 3) as u32), DataNodeId(((i + 1) % 3) as u32)],
+            );
+        }
+        let spec = JobSpec {
+            id: JobId(0),
+            app: "WordCount".into(),
+            affinity: CacheAffinity::Medium,
+            input_blocks: (0..n_blocks).map(BlockId).collect(),
+            n_reduces: 2,
+            map_cpu_s_per_mb: 0.02,
+            reduce_cpu_s_per_mb: 0.01,
+            shuffle_ratio: 0.3,
+            stages: 1,
+        };
+        let svc = NoCacheService { cfg: cfg.clone(), sizes, replicas };
+        (cfg, svc, spec)
+    }
+
+    #[test]
+    fn job_completes_all_tasks() {
+        let (cfg, mut svc, spec) = setup(12);
+        let sched = Scheduler::new(&cfg);
+        let runs = sched.run_jobs(&[spec], &mut svc, SimTime::ZERO);
+        assert_eq!(runs.len(), 1);
+        let run = &runs[0];
+        assert_eq!(run.status, JobStatus::Succeeded);
+        assert_eq!(run.maps_completed(), 12);
+        assert_eq!(run.reduces_completed(), 2);
+        assert!(run.finish > run.start);
+        assert_eq!(run.cache_hits, 0, "no-cache service can't hit");
+        assert_eq!(run.cache_misses, 12);
+        assert!(run.avg_map_time() > SimDuration::ZERO);
+        assert!(run.avg_reduce_time() > SimDuration::ZERO);
+    }
+
+    #[test]
+    fn more_blocks_take_longer() {
+        let (cfg, mut svc_small, small) = setup(6);
+        let sched = Scheduler::new(&cfg);
+        let t_small = sched.run_jobs(&[small], &mut svc_small, SimTime::ZERO)[0]
+            .execution_time();
+        let (_, mut svc_big, big) = setup(48);
+        let t_big = sched.run_jobs(&[big], &mut svc_big, SimTime::ZERO)[0].execution_time();
+        assert!(t_big > t_small, "{t_big} <= {t_small}");
+    }
+
+    #[test]
+    fn concurrent_jobs_share_slots_fairly() {
+        let (cfg, mut svc, spec) = setup(24);
+        let mut spec_b = spec.clone();
+        spec_b.id = JobId(1);
+        let sched = Scheduler::new(&cfg);
+        let runs = sched.run_jobs(&[spec, spec_b], &mut svc, SimTime::ZERO);
+        // Fair round-robin: both jobs read the same blocks, finish close
+        // together rather than strictly serialized.
+        let t0 = runs[0].execution_time().as_secs_f64();
+        let t1 = runs[1].execution_time().as_secs_f64();
+        assert!((t0 - t1).abs() / t0.max(t1) < 0.5, "t0={t0} t1={t1}");
+    }
+
+    #[test]
+    fn multi_stage_jobs_take_longer() {
+        let (cfg, mut svc, mut spec) = setup(12);
+        let sched = Scheduler::new(&cfg);
+        let single = sched.run_jobs(&[spec.clone()], &mut svc, SimTime::ZERO)[0]
+            .execution_time();
+        spec.stages = 3;
+        let (_, mut svc2, _) = setup(12);
+        let multi = sched.run_jobs(&[spec], &mut svc2, SimTime::ZERO)[0].execution_time();
+        assert!(multi > single);
+    }
+
+    #[test]
+    fn tasks_start_after_job_start() {
+        let (cfg, mut svc, spec) = setup(6);
+        let sched = Scheduler::new(&cfg);
+        let start = SimTime::from_secs_f64(100.0);
+        let run = &sched.run_jobs(&[spec], &mut svc, start)[0];
+        for t in &run.tasks {
+            assert!(t.start.unwrap() >= start);
+            assert!(t.finish.unwrap() >= t.start.unwrap());
+        }
+        // reduces start only after every map finished (shuffle barrier)
+        let map_end = run
+            .tasks
+            .iter()
+            .filter(|t| t.kind == TaskKind::Map)
+            .map(|t| t.finish.unwrap())
+            .max()
+            .unwrap();
+        for t in run.tasks.iter().filter(|t| t.kind == TaskKind::Reduce) {
+            assert!(t.start.unwrap() >= map_end);
+        }
+    }
+}

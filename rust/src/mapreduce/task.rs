@@ -1,0 +1,128 @@
+//! Map/Reduce tasks and their lifecycle states (Table 3/4).
+
+use crate::hdfs::{BlockId, DataNodeId};
+use crate::sim::SimTime;
+
+use super::job::JobId;
+
+/// Task kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    Map,
+    Reduce,
+}
+
+impl TaskKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskKind::Map => "map",
+            TaskKind::Reduce => "reduce",
+        }
+    }
+}
+
+/// Task lifecycle states — Table 3: New, Scheduled, Running, Succeeded,
+/// Failed, Killed (the labeling guidelines of Table 4 additionally use a
+/// "Waiting" phase for reduces which maps to `New` here + the shuffle
+/// barrier).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TaskStatus {
+    New,
+    Scheduled,
+    Running,
+    Succeeded,
+    Failed,
+    Killed,
+}
+
+impl TaskStatus {
+    pub fn name(self) -> &'static str {
+        match self {
+            TaskStatus::New => "new",
+            TaskStatus::Scheduled => "scheduled",
+            TaskStatus::Running => "running",
+            TaskStatus::Succeeded => "succeeded",
+            TaskStatus::Failed => "failed",
+            TaskStatus::Killed => "killed",
+        }
+    }
+
+    pub fn is_terminal(self) -> bool {
+        matches!(self, TaskStatus::Succeeded | TaskStatus::Failed | TaskStatus::Killed)
+    }
+}
+
+/// A task instance tracked by the scheduler.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub job: JobId,
+    pub kind: TaskKind,
+    pub index: usize,
+    pub status: TaskStatus,
+    /// The input block (map tasks only).
+    pub input: Option<BlockId>,
+    /// Node the task was placed on (once scheduled).
+    pub node: Option<DataNodeId>,
+    pub start: Option<SimTime>,
+    pub finish: Option<SimTime>,
+}
+
+impl Task {
+    pub fn map(job: JobId, index: usize, input: BlockId) -> Self {
+        Task {
+            job,
+            kind: TaskKind::Map,
+            index,
+            status: TaskStatus::New,
+            input: Some(input),
+            node: None,
+            start: None,
+            finish: None,
+        }
+    }
+
+    pub fn reduce(job: JobId, index: usize) -> Self {
+        Task {
+            job,
+            kind: TaskKind::Reduce,
+            index,
+            status: TaskStatus::New,
+            input: None,
+            node: None,
+            start: None,
+            finish: None,
+        }
+    }
+
+    pub fn duration(&self) -> Option<crate::sim::SimDuration> {
+        match (self.start, self.finish) {
+            (Some(s), Some(f)) => Some(f - s),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_and_duration() {
+        let mut t = Task::map(JobId(0), 0, BlockId(5));
+        assert_eq!(t.status, TaskStatus::New);
+        assert_eq!(t.duration(), None);
+        t.status = TaskStatus::Running;
+        t.start = Some(SimTime(100));
+        t.finish = Some(SimTime(250));
+        t.status = TaskStatus::Succeeded;
+        assert!(t.status.is_terminal());
+        assert_eq!(t.duration().unwrap().micros(), 150);
+    }
+
+    #[test]
+    fn reduce_has_no_input_block() {
+        let t = Task::reduce(JobId(0), 3);
+        assert_eq!(t.input, None);
+        assert_eq!(t.kind.name(), "reduce");
+    }
+}

@@ -1,0 +1,143 @@
+//! AOT artifact discovery: locate `artifacts/*.hlo.txt` and parse
+//! `manifest.txt` (the key=value file `python -m compile.aot` writes).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::svm::KernelKind;
+
+/// Parsed artifact manifest: the shapes and hyper-parameters baked into
+/// the HLO (must match what the Rust side pads/feeds).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    pub n_train: usize,
+    pub n_features: usize,
+    pub n_predict_batch: usize,
+    pub c: f32,
+    pub gamma: f32,
+    pub coef0: f32,
+    pub iters: usize,
+    pub kernels: Vec<String>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut kv = HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("bad manifest line {line:?}"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<&String> {
+            kv.get(k).with_context(|| format!("manifest missing key {k:?}"))
+        };
+        Ok(Manifest {
+            n_train: get("n_train")?.parse()?,
+            n_features: get("n_features")?.parse()?,
+            n_predict_batch: get("n_predict_batch")?.parse()?,
+            c: get("c")?.parse()?,
+            gamma: get("gamma")?.parse()?,
+            coef0: get("coef0")?.parse()?,
+            iters: get("iters")?.parse()?,
+            kernels: get("kernels")?.split(',').map(str::to_string).collect(),
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Manifest::parse(&text)
+    }
+
+    /// Validate consistency with the Rust-side constants.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_features != crate::svm::N_FEATURES {
+            bail!(
+                "artifact n_features {} != crate N_FEATURES {}",
+                self.n_features,
+                crate::svm::N_FEATURES
+            );
+        }
+        if self.n_train == 0 || self.n_predict_batch == 0 {
+            bail!("degenerate artifact shapes");
+        }
+        Ok(())
+    }
+}
+
+/// Paths to one kernel variant's artifacts.
+#[derive(Debug, Clone)]
+pub struct ArtifactPaths {
+    pub train: PathBuf,
+    pub predict: PathBuf,
+}
+
+/// Resolve the artifact pair for a kernel kind under `dir`.
+pub fn paths_for(dir: &Path, kind: KernelKind) -> ArtifactPaths {
+    ArtifactPaths {
+        train: dir.join(format!("svm_train_{}.hlo.txt", kind.name())),
+        predict: dir.join(format!("svm_predict_{}.hlo.txt", kind.name())),
+    }
+}
+
+/// True when all artifacts for `kind` exist under `dir`.
+pub fn available(dir: &Path, kind: KernelKind) -> bool {
+    let p = paths_for(dir, kind);
+    p.train.exists() && p.predict.exists() && dir.join("manifest.txt").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# comment
+n_train=256
+n_features=8
+n_predict_batch=64
+c=4.0
+gamma=0.5
+coef0=0.0
+iters=300
+kernels=linear,rbf,sigmoid
+";
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.n_train, 256);
+        assert_eq!(m.n_features, 8);
+        assert_eq!(m.n_predict_batch, 64);
+        assert_eq!(m.gamma, 0.5);
+        assert_eq!(m.kernels, vec!["linear", "rbf", "sigmoid"]);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn missing_key_errors() {
+        assert!(Manifest::parse("n_train=4").is_err());
+    }
+
+    #[test]
+    fn wrong_feature_count_fails_validation() {
+        let text = SAMPLE.replace("n_features=8", "n_features=5");
+        let m = Manifest::parse(&text).unwrap();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn path_layout() {
+        let p = paths_for(Path::new("artifacts"), KernelKind::Rbf);
+        assert!(p.train.ends_with("svm_train_rbf.hlo.txt"));
+        assert!(p.predict.ends_with("svm_predict_rbf.hlo.txt"));
+        assert!(!available(Path::new("/nonexistent"), KernelKind::Rbf));
+    }
+}

@@ -1,0 +1,283 @@
+//! Unified classifier backend: the AOT HLO artifacts via PJRT (production
+//! path) or the in-process SMO reference (fallback / cross-validation).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SvmConfig;
+use crate::svm::dataset::{pad, Dataset};
+use crate::svm::features::{FeatureVec, N_FEATURES};
+use crate::svm::kernel::{KernelKind, KernelParams};
+use crate::svm::smo::{self, SmoConfig, SmoModel};
+
+use super::artifacts::{self, Manifest};
+use super::pjrt::{F32Input, HloExecutable, PjrtRuntime};
+
+/// A trainable batch classifier (decision scores; class 1 iff score > 0).
+///
+/// Not `Send`: the PJRT client/executable handles are `Rc`-based in the
+/// `xla` crate, and the coordinator is single-threaded by design (the DES
+/// owns time).
+pub trait SvmBackend {
+    fn name(&self) -> &'static str;
+
+    /// (Re)train on a labeled dataset.
+    fn train(&mut self, ds: &Dataset) -> Result<()>;
+
+    /// Decision scores for a batch of feature vectors.
+    fn decision_batch(&mut self, queries: &[FeatureVec]) -> Result<Vec<f32>>;
+
+    fn is_trained(&self) -> bool;
+}
+
+/// Convenience: predicted classes.
+pub fn predict_batch(backend: &mut dyn SvmBackend, queries: &[FeatureVec]) -> Result<Vec<bool>> {
+    Ok(backend
+        .decision_batch(queries)?
+        .into_iter()
+        .map(|s| s > 0.0)
+        .collect())
+}
+
+// ---------------------------------------------------------------- HLO path
+
+/// Trained dual state kept on the Rust side between artifact calls.
+struct HloModelState {
+    x: Vec<f32>,     // [n_train * d]
+    y: Vec<f32>,     // [n_train]
+    mask: Vec<f32>,  // [n_train]
+    alpha: Vec<f32>, // [n_train]
+    bias: f32,
+}
+
+/// The production backend: `svm_train_<k>.hlo.txt` + `svm_predict_<k>.hlo.txt`
+/// compiled once and executed through the PJRT CPU client.
+pub struct HloBackend {
+    runtime: PjrtRuntime,
+    train_exe: HloExecutable,
+    predict_exe: HloExecutable,
+    manifest: Manifest,
+    kind: KernelKind,
+    state: Option<HloModelState>,
+}
+
+impl HloBackend {
+    pub fn load(artifacts_dir: &str, kind: KernelKind) -> Result<Self> {
+        let dir = PathBuf::from(artifacts_dir);
+        if !artifacts::available(&dir, kind) {
+            bail!(
+                "artifacts for kernel {:?} not found in {dir:?} — run `make artifacts`",
+                kind.name()
+            );
+        }
+        let manifest = Manifest::load(&dir)?;
+        manifest.validate()?;
+        if !manifest.kernels.iter().any(|k| k == kind.name()) {
+            bail!("manifest does not list kernel {:?}", kind.name());
+        }
+        let runtime = PjrtRuntime::cpu()?;
+        let paths = artifacts::paths_for(&dir, kind);
+        let train_exe = runtime.load_hlo_text(&paths.train)?;
+        let predict_exe = runtime.load_hlo_text(&paths.predict)?;
+        log::info!(
+            "HLO backend up: kernel={} n_train={} batch={} platform={}",
+            kind.name(),
+            manifest.n_train,
+            manifest.n_predict_batch,
+            runtime.platform_name()
+        );
+        Ok(HloBackend { runtime, train_exe, predict_exe, manifest, kind, state: None })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn kind(&self) -> KernelKind {
+        self.kind
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.runtime.platform_name()
+    }
+}
+
+impl SvmBackend for HloBackend {
+    fn name(&self) -> &'static str {
+        "hlo"
+    }
+
+    fn train(&mut self, ds: &Dataset) -> Result<()> {
+        anyhow::ensure!(!ds.is_empty(), "empty training set");
+        let n = self.manifest.n_train;
+        // Balanced subsample if the dataset exceeds the artifact capacity.
+        let mut rng = crate::util::rng::Pcg64::new(0x7EA1, ds.len() as u64);
+        let ds = ds.truncate_balanced(n, &mut rng);
+        let p = pad(&ds, n);
+        let outputs = self
+            .train_exe
+            .run_f32(&[
+                F32Input { data: &p.x, dims: &[n as i64, N_FEATURES as i64] },
+                F32Input { data: &p.y, dims: &[n as i64] },
+                F32Input { data: &p.mask, dims: &[n as i64] },
+            ])
+            .context("running train artifact")?;
+        anyhow::ensure!(outputs.len() == 2, "train artifact returned {} outputs", outputs.len());
+        let alpha = outputs[0].clone();
+        let bias = outputs[1][0];
+        anyhow::ensure!(alpha.len() == n, "alpha length mismatch");
+        anyhow::ensure!(
+            alpha.iter().all(|a| a.is_finite()) && bias.is_finite(),
+            "non-finite training result"
+        );
+        self.state = Some(HloModelState { x: p.x, y: p.y, mask: p.mask, alpha, bias });
+        Ok(())
+    }
+
+    fn decision_batch(&mut self, queries: &[FeatureVec]) -> Result<Vec<f32>> {
+        let state = self.state.as_ref().context("HLO backend not trained")?;
+        let b = self.manifest.n_predict_batch;
+        let n = self.manifest.n_train;
+        let mut scores = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(b) {
+            let mut q = vec![0.0f32; b * N_FEATURES];
+            for (i, fv) in chunk.iter().enumerate() {
+                q[i * N_FEATURES..(i + 1) * N_FEATURES].copy_from_slice(fv);
+            }
+            let outputs = self
+                .predict_exe
+                .run_f32(&[
+                    F32Input { data: &q, dims: &[b as i64, N_FEATURES as i64] },
+                    F32Input { data: &state.x, dims: &[n as i64, N_FEATURES as i64] },
+                    F32Input { data: &state.y, dims: &[n as i64] },
+                    F32Input { data: &state.alpha, dims: &[n as i64] },
+                    F32Input { data: &state.mask, dims: &[n as i64] },
+                    F32Input { data: &[state.bias], dims: &[] },
+                ])
+                .context("running predict artifact")?;
+            scores.extend_from_slice(&outputs[0][..chunk.len()]);
+        }
+        Ok(scores)
+    }
+
+    fn is_trained(&self) -> bool {
+        self.state.is_some()
+    }
+}
+
+// --------------------------------------------------------------- Rust path
+
+/// The in-process SMO fallback (`svm.backend = "rust"`).
+pub struct RustBackend {
+    params: KernelParams,
+    cfg: SmoConfig,
+    model: Option<SmoModel>,
+    /// Cap the training-set size like the HLO path caps at n_train.
+    max_train: usize,
+}
+
+impl RustBackend {
+    pub fn new(kind: KernelKind) -> Self {
+        RustBackend {
+            params: KernelParams::new(kind),
+            cfg: SmoConfig::default(),
+            model: None,
+            max_train: 256,
+        }
+    }
+}
+
+impl SvmBackend for RustBackend {
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+
+    fn train(&mut self, ds: &Dataset) -> Result<()> {
+        anyhow::ensure!(!ds.is_empty(), "empty training set");
+        let mut rng = crate::util::rng::Pcg64::new(0x7EA2, ds.len() as u64);
+        let ds = ds.truncate_balanced(self.max_train, &mut rng);
+        self.model = Some(smo::train(&ds, self.params, &self.cfg));
+        Ok(())
+    }
+
+    fn decision_batch(&mut self, queries: &[FeatureVec]) -> Result<Vec<f32>> {
+        let model = self.model.as_ref().context("Rust backend not trained")?;
+        Ok(queries.iter().map(|q| model.decision(q)).collect())
+    }
+
+    fn is_trained(&self) -> bool {
+        self.model.is_some()
+    }
+}
+
+/// Build the configured backend ("hlo" or "rust").
+pub fn make_backend(cfg: &SvmConfig) -> Result<Box<dyn SvmBackend>> {
+    cfg.validate()?;
+    let kind = KernelKind::from_name(&cfg.kernel).context("bad kernel name")?;
+    match cfg.backend.as_str() {
+        "hlo" => Ok(Box::new(HloBackend::load(&cfg.artifacts_dir, kind)?)),
+        "rust" => Ok(Box::new(RustBackend::new(kind))),
+        other => bail!("unknown svm backend {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob_dataset(n: usize) -> Dataset {
+        let mut rng = crate::util::rng::Pcg64::new(5, 0);
+        let mut ds = Dataset::new();
+        for _ in 0..n {
+            let mut a = [0.0f32; N_FEATURES];
+            let mut b = [0.0f32; N_FEATURES];
+            for k in 0..N_FEATURES {
+                a[k] = rng.gen_normal(0.25, 0.08) as f32;
+                b[k] = rng.gen_normal(0.75, 0.08) as f32;
+            }
+            ds.push(a, true);
+            ds.push(b, false);
+        }
+        ds
+    }
+
+    #[test]
+    fn rust_backend_trains_and_predicts() {
+        let mut be = RustBackend::new(KernelKind::Rbf);
+        assert!(!be.is_trained());
+        assert!(be.decision_batch(&[[0.5; N_FEATURES]]).is_err());
+        let ds = blob_dataset(50);
+        be.train(&ds).unwrap();
+        assert!(be.is_trained());
+        let classes = predict_batch(&mut be, &ds.x).unwrap();
+        let acc = classes
+            .iter()
+            .zip(&ds.y)
+            .filter(|(c, &y)| **c == (y > 0.0))
+            .count() as f64
+            / ds.len() as f64;
+        assert!(acc > 0.95, "acc={acc}");
+    }
+
+    #[test]
+    fn make_backend_rejects_bad_config() {
+        let cfg = SvmConfig { backend: "gpu".into(), ..Default::default() };
+        assert!(make_backend(&cfg).is_err());
+        let cfg = SvmConfig {
+            backend: "hlo".into(),
+            artifacts_dir: "/definitely/missing".into(),
+            ..Default::default()
+        };
+        assert!(make_backend(&cfg).is_err());
+    }
+
+    #[test]
+    fn rust_backend_via_factory() {
+        let cfg = SvmConfig { backend: "rust".into(), ..Default::default() };
+        let mut be = make_backend(&cfg).unwrap();
+        assert_eq!(be.name(), "rust");
+        be.train(&blob_dataset(20)).unwrap();
+        assert!(be.is_trained());
+    }
+}

@@ -1,0 +1,18 @@
+//! Runtime: executes the AOT-compiled JAX/Pallas SVM from the Rust request
+//! path through the PJRT C API (`xla` crate).
+//!
+//! * `pjrt` — client + executable wrappers (HLO text -> compile -> run).
+//! * `artifacts` — artifact discovery and manifest validation.
+//! * `backend` — the `SvmBackend` abstraction: `hlo` (production) or
+//!   `rust` (in-process SMO fallback and numerics cross-check).
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! only consumer of its outputs.
+
+pub mod artifacts;
+pub mod backend;
+pub mod pjrt;
+
+pub use artifacts::Manifest;
+pub use backend::{make_backend, predict_batch, HloBackend, RustBackend, SvmBackend};
+pub use pjrt::{F32Input, HloExecutable, PjrtRuntime};

@@ -1,0 +1,126 @@
+//! PJRT executor: load HLO-text artifacts, compile once per process, run
+//! from the request path.
+//!
+//! Follows the reference wiring in /opt/xla-example/load_hlo: text (not
+//! serialized proto) is the interchange format because jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the HLO text
+//! parser reassigns ids.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A compiled HLO executable plus its client handle.
+pub struct HloExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+/// Process-wide PJRT CPU client (one per process; executables share it).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::debug!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<HloExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(HloExecutable {
+            exe,
+            name: path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+        })
+    }
+}
+
+/// An f32 input buffer: data plus its logical dims.
+#[derive(Debug, Clone)]
+pub struct F32Input<'a> {
+    pub data: &'a [f32],
+    pub dims: &'a [i64],
+}
+
+impl HloExecutable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with f32 inputs; returns the flattened f32 outputs of the
+    /// result tuple (jax lowering uses return_tuple=True).
+    pub fn run_f32(&self, inputs: &[F32Input<'_>]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            let expected: i64 = inp.dims.iter().product();
+            anyhow::ensure!(
+                expected == inp.data.len() as i64,
+                "{}: input dims {:?} != data len {}",
+                self.name,
+                inp.dims,
+                inp.data.len()
+            );
+            let lit = xla::Literal::vec1(inp.data);
+            let lit = if inp.dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(inp.dims)
+                    .with_context(|| format!("reshape to {:?}", inp.dims))?
+            };
+            literals.push(lit);
+        }
+        // Scalars () need an explicit reshape to rank 0.
+        for (lit, inp) in literals.iter_mut().zip(inputs) {
+            if inp.dims.is_empty() {
+                *lit = lit.reshape(&[]).context("reshape to scalar")?;
+            }
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = out.to_tuple().context("untupling result")?;
+        parts
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-dependent tests live in rust/tests/integration_runtime.rs (they
+    // need `make artifacts`). Here we only check input validation logic
+    // that doesn't require a client.
+    use super::*;
+
+    #[test]
+    fn f32input_shape_math() {
+        let data = [1.0f32, 2.0, 3.0, 4.0];
+        let inp = F32Input { data: &data, dims: &[2, 2] };
+        let expected: i64 = inp.dims.iter().product();
+        assert_eq!(expected, 4);
+    }
+}

@@ -1,0 +1,199 @@
+//! Discrete-event engine: a time-ordered queue of closures over a state `S`.
+//!
+//! Events scheduled for the same tick fire in schedule order (a monotone
+//! sequence number breaks ties), which makes whole simulations bit-for-bit
+//! reproducible for a given seed.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::time::{SimDuration, SimTime};
+
+/// An event callback: gets the engine (to schedule more events) and the
+/// simulation state.
+pub type EventFn<S> = Box<dyn FnOnce(&mut Engine<S>, &mut S)>;
+
+struct Scheduled<S> {
+    at: SimTime,
+    seq: u64,
+    f: EventFn<S>,
+}
+
+impl<S> PartialEq for Scheduled<S> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+
+impl<S> Eq for Scheduled<S> {}
+
+impl<S> PartialOrd for Scheduled<S> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<S> Ord for Scheduled<S> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want the earliest first.
+        (other.at, other.seq).cmp(&(self.at, self.seq))
+    }
+}
+
+/// The discrete-event engine.
+pub struct Engine<S> {
+    now: SimTime,
+    seq: u64,
+    fired: u64,
+    queue: BinaryHeap<Scheduled<S>>,
+}
+
+impl<S> Default for Engine<S> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<S> Engine<S> {
+    pub fn new() -> Self {
+        Engine { now: SimTime::ZERO, seq: 0, fired: 0, queue: BinaryHeap::new() }
+    }
+
+    /// Current simulated time.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events fired so far (bench/diagnostic metric).
+    pub fn events_fired(&self) -> u64 {
+        self.fired
+    }
+
+    /// Pending event count.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Schedule an event `delay` after now.
+    pub fn schedule_in<F>(&mut self, delay: SimDuration, f: F)
+    where
+        F: FnOnce(&mut Engine<S>, &mut S) + 'static,
+    {
+        self.schedule_at(self.now + delay, f);
+    }
+
+    /// Schedule an event at an absolute time (must not be in the past).
+    pub fn schedule_at<F>(&mut self, at: SimTime, f: F)
+    where
+        F: FnOnce(&mut Engine<S>, &mut S) + 'static,
+    {
+        assert!(at >= self.now, "scheduling into the past: {at} < {}", self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Scheduled { at, seq, f: Box::new(f) });
+    }
+
+    /// Run until the queue drains. Returns the final simulated time.
+    pub fn run(&mut self, state: &mut S) -> SimTime {
+        while self.step(state) {}
+        self.now
+    }
+
+    /// Run until the queue drains or `deadline` is reached (events at the
+    /// deadline still fire).
+    pub fn run_until(&mut self, state: &mut S, deadline: SimTime) -> SimTime {
+        while let Some(next) = self.queue.peek() {
+            if next.at > deadline {
+                self.now = deadline;
+                return self.now;
+            }
+            self.step(state);
+        }
+        self.now
+    }
+
+    /// Fire the single earliest event; false when the queue is empty.
+    pub fn step(&mut self, state: &mut S) -> bool {
+        match self.queue.pop() {
+            Some(ev) => {
+                debug_assert!(ev.at >= self.now, "event queue time travel");
+                self.now = ev.at;
+                self.fired += 1;
+                (ev.f)(self, state);
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_in_time_order() {
+        let mut eng: Engine<Vec<u32>> = Engine::new();
+        let mut order = Vec::new();
+        eng.schedule_at(SimTime(30), |_, s: &mut Vec<u32>| s.push(3));
+        eng.schedule_at(SimTime(10), |_, s| s.push(1));
+        eng.schedule_at(SimTime(20), |_, s| s.push(2));
+        eng.run(&mut order);
+        assert_eq!(order, vec![1, 2, 3]);
+        assert_eq!(eng.now(), SimTime(30));
+        assert_eq!(eng.events_fired(), 3);
+    }
+
+    #[test]
+    fn same_tick_fires_in_schedule_order() {
+        let mut eng: Engine<Vec<u32>> = Engine::new();
+        let mut order = Vec::new();
+        for i in 0..10 {
+            eng.schedule_at(SimTime(5), move |_, s: &mut Vec<u32>| s.push(i));
+        }
+        eng.run(&mut order);
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn events_can_schedule_events() {
+        // A chain of events, each scheduling the next.
+        fn chain(eng: &mut Engine<u64>, state: &mut u64) {
+            *state += 1;
+            if *state < 100 {
+                eng.schedule_in(SimDuration(7), chain);
+            }
+        }
+        let mut eng = Engine::new();
+        let mut count = 0u64;
+        eng.schedule_at(SimTime(0), chain);
+        eng.run(&mut count);
+        assert_eq!(count, 100);
+        assert_eq!(eng.now(), SimTime(99 * 7));
+    }
+
+    #[test]
+    fn run_until_stops_at_deadline() {
+        let mut eng: Engine<Vec<u64>> = Engine::new();
+        let mut seen = Vec::new();
+        for t in [10u64, 20, 30, 40] {
+            eng.schedule_at(SimTime(t), move |_, s: &mut Vec<u64>| s.push(t));
+        }
+        eng.run_until(&mut seen, SimTime(25));
+        assert_eq!(seen, vec![10, 20]);
+        assert_eq!(eng.now(), SimTime(25));
+        assert_eq!(eng.pending(), 2);
+        eng.run(&mut seen);
+        assert_eq!(seen, vec![10, 20, 30, 40]);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduling into the past")]
+    fn past_scheduling_panics() {
+        let mut eng: Engine<()> = Engine::new();
+        eng.schedule_at(SimTime(10), |eng, _| {
+            eng.schedule_at(SimTime(5), |_, _| {});
+        });
+        eng.run(&mut ());
+    }
+}

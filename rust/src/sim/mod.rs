@@ -1,0 +1,15 @@
+//! Discrete-event simulation core.
+//!
+//! The paper's testbed is a physical 10-node Hadoop cluster; we reproduce
+//! its behaviour with a deterministic DES (see DESIGN.md §2): `time` defines
+//! integer-microsecond simulated time, `engine` the event queue, and
+//! `resource` FIFO multi-server resources used to model disks, NICs and CPU
+//! slots on each node.
+
+pub mod engine;
+pub mod resource;
+pub mod time;
+
+pub use engine::Engine;
+pub use resource::Resource;
+pub use time::{SimDuration, SimTime};

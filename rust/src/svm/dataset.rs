@@ -1,0 +1,217 @@
+//! Labeled datasets: assembly, preprocessing, splits and padding to the
+//! fixed shapes the AOT artifacts expect (§5.1 "Dataset preprocessing").
+
+use crate::util::rng::Pcg64;
+
+use super::features::{FeatureVec, N_FEATURES};
+
+/// A labeled training set. Labels are +1 ("reused in the future") or -1.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub x: Vec<FeatureVec>,
+    pub y: Vec<f32>,
+}
+
+impl Dataset {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: FeatureVec, reused: bool) {
+        self.x.push(x);
+        self.y.push(if reused { 1.0 } else { -1.0 });
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+
+    pub fn n_positive(&self) -> usize {
+        self.y.iter().filter(|&&v| v > 0.0).count()
+    }
+
+    /// Preprocessing per §5.1: drop rows with non-finite values (irrelevant
+    /// data elimination) and clip features into [0, 1] (normalization).
+    pub fn preprocess(&mut self) {
+        let mut keep = Vec::with_capacity(self.len());
+        for (x, y) in self.x.iter().zip(&self.y) {
+            if x.iter().all(|v| v.is_finite()) && y.is_finite() {
+                let mut clipped = *x;
+                for v in clipped.iter_mut() {
+                    *v = v.clamp(0.0, 1.0);
+                }
+                keep.push((clipped, *y));
+            }
+        }
+        self.x = keep.iter().map(|(x, _)| *x).collect();
+        self.y = keep.iter().map(|(_, y)| *y).collect();
+    }
+
+    /// Shuffled train/test split (the paper uses 75/25).
+    pub fn split(&self, train_fraction: f64, rng: &mut Pcg64) -> (Dataset, Dataset) {
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        let n_train = ((self.len() as f64) * train_fraction).round() as usize;
+        let mut train = Dataset::new();
+        let mut test = Dataset::new();
+        for (k, &i) in idx.iter().enumerate() {
+            let target = if k < n_train { &mut train } else { &mut test };
+            target.x.push(self.x[i]);
+            target.y.push(self.y[i]);
+        }
+        (train, test)
+    }
+
+    /// `k`-fold cross-validation index sets: returns (train, test) pairs.
+    pub fn k_folds(&self, k: usize, rng: &mut Pcg64) -> Vec<(Dataset, Dataset)> {
+        assert!(k >= 2, "need at least 2 folds");
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        (0..k)
+            .map(|fold| {
+                let mut train = Dataset::new();
+                let mut test = Dataset::new();
+                for (pos, &i) in idx.iter().enumerate() {
+                    let target = if pos % k == fold { &mut test } else { &mut train };
+                    target.x.push(self.x[i]);
+                    target.y.push(self.y[i]);
+                }
+                (train, test)
+            })
+            .collect()
+    }
+
+    /// Subsample down to `max` rows, keeping class balance where possible.
+    pub fn truncate_balanced(&self, max: usize, rng: &mut Pcg64) -> Dataset {
+        if self.len() <= max {
+            return self.clone();
+        }
+        let pos: Vec<usize> = (0..self.len()).filter(|&i| self.y[i] > 0.0).collect();
+        let neg: Vec<usize> = (0..self.len()).filter(|&i| self.y[i] <= 0.0).collect();
+        let take_pos = (max / 2).min(pos.len());
+        let take_neg = (max - take_pos).min(neg.len());
+        let take_pos = (max - take_neg).min(pos.len()); // rebalance leftovers
+        let mut chosen: Vec<usize> = Vec::with_capacity(max);
+        let mut pos = pos;
+        let mut neg = neg;
+        rng.shuffle(&mut pos);
+        rng.shuffle(&mut neg);
+        chosen.extend(&pos[..take_pos]);
+        chosen.extend(&neg[..take_neg]);
+        chosen.sort_unstable();
+        let mut out = Dataset::new();
+        for i in chosen {
+            out.x.push(self.x[i]);
+            out.y.push(self.y[i]);
+        }
+        out
+    }
+}
+
+/// A dataset padded to the artifact shape: N rows with a validity mask.
+#[derive(Debug, Clone)]
+pub struct PaddedDataset {
+    /// Row-major [n_rows * N_FEATURES].
+    pub x: Vec<f32>,
+    pub y: Vec<f32>,
+    pub mask: Vec<f32>,
+    pub n_rows: usize,
+    pub n_real: usize,
+}
+
+/// Pad (or truncate) to exactly `n_rows` rows for the fixed-shape HLO.
+pub fn pad(ds: &Dataset, n_rows: usize) -> PaddedDataset {
+    let n_real = ds.len().min(n_rows);
+    let mut x = vec![0.0f32; n_rows * N_FEATURES];
+    let mut y = vec![0.0f32; n_rows];
+    let mut mask = vec![0.0f32; n_rows];
+    for i in 0..n_real {
+        x[i * N_FEATURES..(i + 1) * N_FEATURES].copy_from_slice(&ds.x[i]);
+        y[i] = ds.y[i];
+        mask[i] = 1.0;
+    }
+    PaddedDataset { x, y, mask, n_rows, n_real }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n_pos: usize, n_neg: usize) -> Dataset {
+        let mut ds = Dataset::new();
+        for i in 0..n_pos {
+            ds.push([0.2 + 0.001 * i as f32; N_FEATURES], true);
+        }
+        for i in 0..n_neg {
+            ds.push([0.8 - 0.001 * i as f32; N_FEATURES], false);
+        }
+        ds
+    }
+
+    #[test]
+    fn split_preserves_rows() {
+        let ds = toy(30, 50);
+        let (train, test) = ds.split(0.75, &mut Pcg64::new(1, 0));
+        assert_eq!(train.len(), 60);
+        assert_eq!(test.len(), 20);
+        assert_eq!(train.n_positive() + test.n_positive(), 30);
+    }
+
+    #[test]
+    fn preprocess_drops_bad_rows_and_clips() {
+        let mut ds = toy(2, 2);
+        ds.push([f32::NAN; N_FEATURES], true);
+        let mut over = [1.7f32; N_FEATURES];
+        over[0] = -0.5;
+        ds.push(over, false);
+        ds.preprocess();
+        assert_eq!(ds.len(), 5, "NaN row dropped, clipped row kept");
+        for x in &ds.x {
+            assert!(x.iter().all(|v| (0.0..=1.0).contains(v)));
+        }
+    }
+
+    #[test]
+    fn k_folds_partition() {
+        let ds = toy(20, 20);
+        let folds = ds.k_folds(4, &mut Pcg64::new(2, 0));
+        assert_eq!(folds.len(), 4);
+        let total_test: usize = folds.iter().map(|(_, t)| t.len()).sum();
+        assert_eq!(total_test, 40, "each row tested exactly once");
+        for (train, test) in &folds {
+            assert_eq!(train.len() + test.len(), 40);
+        }
+    }
+
+    #[test]
+    fn pad_shapes_and_mask() {
+        let ds = toy(3, 2);
+        let p = pad(&ds, 8);
+        assert_eq!(p.x.len(), 8 * N_FEATURES);
+        assert_eq!(p.mask, vec![1.0, 1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(p.n_real, 5);
+        // padded labels are zero
+        assert_eq!(p.y[5..], [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pad_truncates_overlong() {
+        let ds = toy(10, 10);
+        let p = pad(&ds, 4);
+        assert_eq!(p.n_real, 4);
+        assert_eq!(p.mask.iter().sum::<f32>(), 4.0);
+    }
+
+    #[test]
+    fn truncate_balanced_keeps_both_classes() {
+        let ds = toy(100, 10);
+        let out = ds.truncate_balanced(20, &mut Pcg64::new(3, 0));
+        assert_eq!(out.len(), 20);
+        assert!(out.n_positive() >= 10, "positives fill spare negative slots");
+        assert!(out.len() - out.n_positive() == 10);
+    }
+}

@@ -1,0 +1,177 @@
+//! Classifier evaluation: confusion matrix, precision/recall/F1/accuracy
+//! (the §5.2 metrics behind Table 5) and k-fold cross-validation.
+
+use crate::util::rng::Pcg64;
+
+use super::dataset::Dataset;
+
+/// Binary confusion matrix. "Positive" = class 1 = reused in the future.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ConfusionMatrix {
+    pub tp: u64,
+    pub fp: u64,
+    pub tn: u64,
+    pub fn_: u64,
+}
+
+impl ConfusionMatrix {
+    pub fn record(&mut self, actual: bool, predicted: bool) {
+        match (actual, predicted) {
+            (true, true) => self.tp += 1,
+            (false, true) => self.fp += 1,
+            (false, false) => self.tn += 1,
+            (true, false) => self.fn_ += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.tp + self.fp + self.tn + self.fn_
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.total() == 0 {
+            return 0.0;
+        }
+        (self.tp + self.tn) as f64 / self.total() as f64
+    }
+
+    /// Precision for the positive class (Table 5's "1" rows).
+    pub fn precision_pos(&self) -> f64 {
+        safe_div(self.tp as f64, (self.tp + self.fp) as f64)
+    }
+
+    pub fn recall_pos(&self) -> f64 {
+        safe_div(self.tp as f64, (self.tp + self.fn_) as f64)
+    }
+
+    pub fn f1_pos(&self) -> f64 {
+        harmonic(self.precision_pos(), self.recall_pos())
+    }
+
+    /// Precision for the negative class (Table 5's "0" rows).
+    pub fn precision_neg(&self) -> f64 {
+        safe_div(self.tn as f64, (self.tn + self.fn_) as f64)
+    }
+
+    pub fn recall_neg(&self) -> f64 {
+        safe_div(self.tn as f64, (self.tn + self.fp) as f64)
+    }
+
+    pub fn f1_neg(&self) -> f64 {
+        harmonic(self.precision_neg(), self.recall_neg())
+    }
+}
+
+fn safe_div(a: f64, b: f64) -> f64 {
+    if b == 0.0 {
+        0.0
+    } else {
+        a / b
+    }
+}
+
+fn harmonic(p: f64, r: f64) -> f64 {
+    if p + r == 0.0 {
+        0.0
+    } else {
+        2.0 * p * r / (p + r)
+    }
+}
+
+/// Evaluate a predictor over a labeled dataset.
+pub fn evaluate<F: FnMut(&[f32]) -> bool>(ds: &Dataset, mut predict: F) -> ConfusionMatrix {
+    let mut cm = ConfusionMatrix::default();
+    for (x, &y) in ds.x.iter().zip(&ds.y) {
+        cm.record(y > 0.0, predict(x));
+    }
+    cm
+}
+
+/// k-fold cross-validated accuracy: `train_fn(train) -> predictor`.
+pub fn cross_validate<M, F>(
+    ds: &Dataset,
+    k: usize,
+    seed: u64,
+    mut train_fn: M,
+) -> f64
+where
+    M: FnMut(&Dataset) -> F,
+    F: FnMut(&[f32]) -> bool,
+{
+    let folds = ds.k_folds(k, &mut Pcg64::new(seed, 0xCF));
+    let mut correct = 0u64;
+    let mut total = 0u64;
+    for (train, test) in folds {
+        let mut predictor = train_fn(&train);
+        let cm = evaluate(&test, &mut predictor);
+        correct += cm.tp + cm.tn;
+        total += cm.total();
+    }
+    safe_div(correct as f64, total as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::features::N_FEATURES;
+
+    #[test]
+    fn confusion_matrix_counts() {
+        let mut cm = ConfusionMatrix::default();
+        // 3 TP, 1 FP, 4 TN, 2 FN
+        for _ in 0..3 {
+            cm.record(true, true);
+        }
+        cm.record(false, true);
+        for _ in 0..4 {
+            cm.record(false, false);
+        }
+        for _ in 0..2 {
+            cm.record(true, false);
+        }
+        assert_eq!(cm.total(), 10);
+        assert!((cm.accuracy() - 0.7).abs() < 1e-12);
+        assert!((cm.precision_pos() - 0.75).abs() < 1e-12);
+        assert!((cm.recall_pos() - 0.6).abs() < 1e-12);
+        assert!((cm.f1_pos() - 2.0 * 0.75 * 0.6 / 1.35).abs() < 1e-12);
+        assert!((cm.precision_neg() - 4.0 / 6.0).abs() < 1e-12);
+        assert!((cm.recall_neg() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_matrix_is_zero_not_nan() {
+        let cm = ConfusionMatrix::default();
+        assert_eq!(cm.accuracy(), 0.0);
+        assert_eq!(cm.precision_pos(), 0.0);
+        assert_eq!(cm.f1_pos(), 0.0);
+    }
+
+    #[test]
+    fn evaluate_perfect_predictor() {
+        let mut ds = Dataset::new();
+        for i in 0..10 {
+            ds.push([i as f32 / 10.0; N_FEATURES], i % 2 == 0);
+        }
+        let labels: Vec<bool> = ds.y.iter().map(|&y| y > 0.0).collect();
+        let mut i = 0;
+        let cm = evaluate(&ds, |_| {
+            let r = labels[i];
+            i += 1;
+            r
+        });
+        assert_eq!(cm.accuracy(), 1.0);
+    }
+
+    #[test]
+    fn cross_validation_runs_all_folds() {
+        let mut ds = Dataset::new();
+        for i in 0..40 {
+            // Feature 0 alone decides the label: trivially learnable.
+            let mut x = [0.0f32; N_FEATURES];
+            x[0] = if i % 2 == 0 { 0.9 } else { 0.1 };
+            ds.push(x, i % 2 == 0);
+        }
+        let acc = cross_validate(&ds, 4, 1, |_train| |x: &[f32]| x[0] > 0.5);
+        assert_eq!(acc, 1.0);
+    }
+}

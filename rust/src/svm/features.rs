@@ -1,0 +1,187 @@
+//! SVM feature extraction — the request-awareness scenario of §5.1/Table 2.
+//!
+//! Feature vector layout (D = 8, matches python/compile/model.N_FEATURES):
+//!
+//! | idx | feature                       | source            |
+//! |-----|-------------------------------|-------------------|
+//! | 0-2 | block type one-hot            | Table 2 "Type"    |
+//! | 3   | size (normalized)             | Table 2 "Size"    |
+//! | 4   | recency (decayed age)         | Table 2 "Recency" |
+//! | 5   | frequency (log-scaled)        | Table 2 "Frequency" |
+//! | 6   | requesting app cache affinity | Table 3 extension |
+//! | 7   | share degree (distinct apps)  | §6.4.2 sharing    |
+//!
+//! `BlockStatsTracker` maintains the per-block running state (last access,
+//! access count, distinct requesting apps) the features are computed from.
+
+use std::collections::HashSet;
+
+use crate::util::fasthash::IdHashMap;
+
+use crate::cache::CacheAffinity;
+use crate::hdfs::{BlockId, BlockKind};
+use crate::sim::SimTime;
+
+/// Number of features (must equal the AOT artifacts' N_FEATURES).
+pub const N_FEATURES: usize = 8;
+
+/// A normalized feature vector.
+pub type FeatureVec = [f32; N_FEATURES];
+
+/// Per-block running statistics.
+#[derive(Debug, Clone)]
+struct BlockStats {
+    last_access: SimTime,
+    accesses: u64,
+    apps: HashSet<u64>,
+}
+
+/// Tracks block access statistics and derives normalized features.
+#[derive(Debug)]
+pub struct BlockStatsTracker {
+    stats: IdHashMap<BlockId, BlockStats>,
+    /// Normalization reference: block size considered "large" (1.0).
+    pub max_block_size: u64,
+    /// Recency half-life in seconds for the decayed-age feature.
+    pub recency_half_life_s: f64,
+    /// Frequency scale: log1p(freq) / log1p(freq_scale) saturates at 1.
+    pub freq_scale: f64,
+}
+
+impl BlockStatsTracker {
+    pub fn new(max_block_size: u64) -> Self {
+        BlockStatsTracker {
+            stats: IdHashMap::default(),
+            max_block_size: max_block_size.max(1),
+            recency_half_life_s: 120.0,
+            freq_scale: 32.0,
+        }
+    }
+
+    /// Record an access by `app_id` at `now`. Call *after* computing the
+    /// pre-access features so the current request does not leak into them.
+    pub fn record_access(&mut self, block: BlockId, app_id: u64, now: SimTime) {
+        let e = self.stats.entry(block).or_insert(BlockStats {
+            last_access: now,
+            accesses: 0,
+            apps: HashSet::new(),
+        });
+        e.last_access = now;
+        e.accesses += 1;
+        e.apps.insert(app_id);
+    }
+
+    pub fn accesses(&self, block: BlockId) -> u64 {
+        self.stats.get(&block).map(|s| s.accesses).unwrap_or(0)
+    }
+
+    /// Build the (normalized) feature vector for a request.
+    pub fn features(
+        &self,
+        block: BlockId,
+        kind: BlockKind,
+        size: u64,
+        affinity: CacheAffinity,
+        now: SimTime,
+    ) -> FeatureVec {
+        let one_hot = kind.one_hot();
+        let size_f = (size as f64 / self.max_block_size as f64).min(1.0) as f32;
+        let (recency, freq, share) = match self.stats.get(&block) {
+            Some(s) => {
+                let age = s.last_access.duration_until(now).as_secs_f64();
+                let recency = 0.5f64.powf(age / self.recency_half_life_s) as f32;
+                let freq = ((s.accesses as f64).ln_1p() / (self.freq_scale).ln_1p())
+                    .min(1.0) as f32;
+                let share = (s.apps.len() as f32 / 4.0).min(1.0);
+                (recency, freq, share)
+            }
+            None => (0.0, 0.0, 0.0),
+        };
+        [
+            one_hot[0],
+            one_hot[1],
+            one_hot[2],
+            size_f,
+            recency,
+            freq,
+            affinity.weight() as f32,
+            share,
+        ]
+    }
+
+    pub fn reset(&mut self) {
+        self.stats.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MB;
+
+    #[test]
+    fn fresh_block_has_zero_history_features() {
+        let tr = BlockStatsTracker::new(128 * MB);
+        let f = tr.features(
+            BlockId(1),
+            BlockKind::Input,
+            64 * MB,
+            CacheAffinity::High,
+            SimTime::ZERO,
+        );
+        assert_eq!(&f[0..3], &[1.0, 0.0, 0.0]);
+        assert!((f[3] - 0.5).abs() < 1e-6); // 64/128
+        assert_eq!(f[4], 0.0); // no recency
+        assert_eq!(f[5], 0.0); // no frequency
+        assert_eq!(f[6], 1.0); // high affinity
+        assert_eq!(f[7], 0.0); // no sharing
+    }
+
+    #[test]
+    fn features_respond_to_history() {
+        let mut tr = BlockStatsTracker::new(128 * MB);
+        let b = BlockId(2);
+        for (t, app) in [(0.0, 1u64), (10.0, 2), (20.0, 3)] {
+            tr.record_access(b, app, SimTime::from_secs_f64(t));
+        }
+        let f = tr.features(
+            b,
+            BlockKind::Intermediate,
+            128 * MB,
+            CacheAffinity::Low,
+            SimTime::from_secs_f64(21.0),
+        );
+        assert!(f[4] > 0.9, "recent access -> recency near 1, got {}", f[4]);
+        assert!(f[5] > 0.3, "3 accesses -> nonzero freq, got {}", f[5]);
+        assert!((f[7] - 0.75).abs() < 1e-6, "3 distinct apps / 4");
+        assert_eq!(tr.accesses(b), 3);
+        // Features are bounded.
+        for v in f {
+            assert!((0.0..=1.0).contains(&v), "feature {v} out of range");
+        }
+    }
+
+    #[test]
+    fn recency_decays() {
+        let mut tr = BlockStatsTracker::new(128 * MB);
+        tr.record_access(BlockId(1), 0, SimTime::ZERO);
+        let f_soon = tr.features(
+            BlockId(1), BlockKind::Input, MB, CacheAffinity::Medium,
+            SimTime::from_secs_f64(1.0),
+        );
+        let f_late = tr.features(
+            BlockId(1), BlockKind::Input, MB, CacheAffinity::Medium,
+            SimTime::from_secs_f64(1200.0),
+        );
+        assert!(f_soon[4] > f_late[4]);
+        assert!(f_late[4] < 0.01);
+    }
+
+    #[test]
+    fn reset_clears_history() {
+        let mut tr = BlockStatsTracker::new(MB);
+        tr.record_access(BlockId(1), 0, SimTime::ZERO);
+        tr.reset();
+        assert_eq!(tr.accesses(BlockId(1)), 0);
+    }
+}

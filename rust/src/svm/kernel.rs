@@ -1,0 +1,114 @@
+//! Kernel functions for the pure-Rust SVM (mirrors the L1 Pallas kernels —
+//! same formulas, same hyper-parameter semantics; cross-validated against
+//! the HLO artifacts in rust/tests/integration_runtime.rs).
+
+/// Kernel function family (the paper evaluates these three in Table 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    Linear,
+    Rbf,
+    Sigmoid,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Linear => "linear",
+            KernelKind::Rbf => "rbf",
+            KernelKind::Sigmoid => "sigmoid",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<KernelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "linear" => Some(KernelKind::Linear),
+            "rbf" => Some(KernelKind::Rbf),
+            "sigmoid" => Some(KernelKind::Sigmoid),
+            _ => None,
+        }
+    }
+}
+
+/// Kernel hyper-parameters (must match the values baked into the AOT
+/// artifacts — `runtime::artifacts::Manifest` checks this at load time).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelParams {
+    pub kind: KernelKind,
+    pub gamma: f32,
+    pub coef0: f32,
+}
+
+impl KernelParams {
+    pub fn new(kind: KernelKind) -> Self {
+        KernelParams { kind, gamma: 0.5, coef0: 0.0 }
+    }
+
+    /// k(x, z) for two feature vectors.
+    #[inline]
+    pub fn eval(&self, x: &[f32], z: &[f32]) -> f32 {
+        debug_assert_eq!(x.len(), z.len());
+        match self.kind {
+            KernelKind::Linear => dot(x, z),
+            KernelKind::Rbf => {
+                let mut sq = 0.0f32;
+                for (a, b) in x.iter().zip(z) {
+                    let d = a - b;
+                    sq += d * d;
+                }
+                (-self.gamma * sq.max(0.0)).exp()
+            }
+            KernelKind::Sigmoid => (self.gamma * dot(x, z) + self.coef0).tanh(),
+        }
+    }
+}
+
+#[inline]
+fn dot(x: &[f32], z: &[f32]) -> f32 {
+    x.iter().zip(z).map(|(a, b)| a * b).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_is_dot() {
+        let p = KernelParams::new(KernelKind::Linear);
+        assert_eq!(p.eval(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn rbf_properties() {
+        let p = KernelParams::new(KernelKind::Rbf);
+        let x = [0.3, 0.7, 0.1];
+        // k(x, x) = 1, symmetric, in (0, 1]
+        assert!((p.eval(&x, &x) - 1.0).abs() < 1e-6);
+        let z = [0.5, 0.2, 0.9];
+        let kxz = p.eval(&x, &z);
+        assert!((kxz - p.eval(&z, &x)).abs() < 1e-7);
+        assert!(kxz > 0.0 && kxz < 1.0);
+    }
+
+    #[test]
+    fn rbf_matches_hand_calc() {
+        let p = KernelParams { kind: KernelKind::Rbf, gamma: 0.5, coef0: 0.0 };
+        // ||x - z||^2 = 0.25 -> exp(-0.125)
+        let k = p.eval(&[0.5], &[0.0]);
+        assert!((k - (-0.125f32).exp()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sigmoid_matches_hand_calc() {
+        let p = KernelParams { kind: KernelKind::Sigmoid, gamma: 2.0, coef0: 0.5 };
+        let k = p.eval(&[1.0, 0.0], &[0.5, 0.3]);
+        assert!((k - (2.0f32 * 0.5 + 0.5).tanh()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for kind in [KernelKind::Linear, KernelKind::Rbf, KernelKind::Sigmoid] {
+            assert_eq!(KernelKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(KernelKind::from_name("poly"), None);
+    }
+}

@@ -1,0 +1,138 @@
+//! Target-label generation for the non-request-awareness scenario —
+//! Table 4's guidelines, implemented row by row.
+//!
+//! Given a job-status / map-task-status / reduce-task-status triple, the
+//! rules decide whether the *input of the Map task* and the *input of the
+//! Reduce task* (the map outputs) will be reused.
+
+use crate::mapreduce::job::JobStatus;
+use crate::mapreduce::task::TaskStatus;
+
+/// Labels for one history observation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Labels {
+    /// Will the Map task's input data be reused?
+    pub map_input_reused: bool,
+    /// Will the Reduce task's input (the map outputs) be reused?
+    pub reduce_input_reused: bool,
+}
+
+impl Labels {
+    const NOT: Labels = Labels { map_input_reused: false, reduce_input_reused: false };
+}
+
+/// Table 4, one arm per row. `reduce_status = None` encodes the "Waiting"
+/// phase (reduces not yet schedulable).
+pub fn label(
+    job: JobStatus,
+    map: TaskStatus,
+    reduce: Option<TaskStatus>,
+) -> Labels {
+    use JobStatus as J;
+    use TaskStatus as T;
+    // Row 12: job-status has higher priority than task status.
+    if matches!(job, J::Failed | J::Killed | J::Error) {
+        return Labels::NOT;
+    }
+    match (job, map, reduce) {
+        // Row 1: job waiting in the queue.
+        (J::New, _, _) => Labels::NOT,
+        // Row 2: scheduled maps, reduces waiting — map outputs not yet
+        // generated, map inputs will be read.
+        (J::Initiated, T::Scheduled | T::New, None) => {
+            Labels { map_input_reused: true, reduce_input_reused: false }
+        }
+        (J::Initiated, _, _) => Labels::NOT,
+        // Row 3: maps running, reduces waiting.
+        (J::Running, T::Running, None) => {
+            Labels { map_input_reused: true, reduce_input_reused: false }
+        }
+        // Rows 4/5: maps done, reduces scheduling/running — the reduce
+        // input (map output) is what gets reused now.
+        (J::Running, T::Succeeded, Some(T::Scheduled) | Some(T::Running) | Some(T::New)) => {
+            Labels { map_input_reused: false, reduce_input_reused: true }
+        }
+        // Row 6: failed map cannot generate intermediate data.
+        (J::Running, T::Failed, _) => Labels::NOT,
+        // Row 7: reduce failed, the job cannot continue.
+        (J::Running, T::Succeeded, Some(T::Failed)) => Labels::NOT,
+        // Row 8: killed map may re-execute elsewhere (speculative) — its
+        // input will be read again.
+        (J::Running, T::Killed, None) => {
+            Labels { map_input_reused: true, reduce_input_reused: false }
+        }
+        // Row 9: killed reduce may re-execute — map outputs reused.
+        (J::Running, T::Succeeded, Some(T::Killed)) => {
+            Labels { map_input_reused: false, reduce_input_reused: true }
+        }
+        // Anything else mid-run without clearer evidence: conservative.
+        (J::Running, _, _) => Labels::NOT,
+        // Row 10: completed job; repetitive-job relationships are out of
+        // scope for the paper.
+        (J::Succeeded, _, _) => Labels::NOT,
+        // Terminal rows already handled above.
+        (J::Failed | J::Killed | J::Error, _, _) => Labels::NOT,
+    }
+}
+
+/// Convenience: label a history record (map vs reduce observation).
+pub fn label_record(rec: &crate::mapreduce::HistoryRecord) -> Labels {
+    use crate::mapreduce::task::TaskKind;
+    match rec.task_kind {
+        TaskKind::Map => {
+            // Observation of the map phase: reduces are still waiting.
+            label(rec.job_status, rec.task_status, None)
+        }
+        TaskKind::Reduce => label(rec.job_status, TaskStatus::Succeeded, Some(rec.task_status)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use JobStatus as J;
+    use TaskStatus as T;
+
+    #[test]
+    fn table4_rows() {
+        // Row 1: New/New/New -> not / not
+        assert_eq!(label(J::New, T::New, None), Labels::NOT);
+        // Row 2: Initiated/Scheduling/Waiting -> reused / not
+        let l = label(J::Initiated, T::Scheduled, None);
+        assert!(l.map_input_reused && !l.reduce_input_reused);
+        // Row 3: Running/Running/Waiting -> reused / not
+        let l = label(J::Running, T::Running, None);
+        assert!(l.map_input_reused && !l.reduce_input_reused);
+        // Row 4: Running/Succeeded/Scheduling -> not / reused
+        let l = label(J::Running, T::Succeeded, Some(T::Scheduled));
+        assert!(!l.map_input_reused && l.reduce_input_reused);
+        // Row 5: Running/Succeeded/Running -> not / reused
+        let l = label(J::Running, T::Succeeded, Some(T::Running));
+        assert!(!l.map_input_reused && l.reduce_input_reused);
+        // Row 6: Running/Failed/Waiting -> not / not
+        assert_eq!(label(J::Running, T::Failed, None), Labels::NOT);
+        // Row 7: Running/Succeeded/Failed -> not / not
+        assert_eq!(label(J::Running, T::Succeeded, Some(T::Failed)), Labels::NOT);
+        // Row 8: Running/Killed/Waiting -> reused / not (speculative)
+        let l = label(J::Running, T::Killed, None);
+        assert!(l.map_input_reused && !l.reduce_input_reused);
+        // Row 9: Running/Succeeded/Killed -> not / reused (speculative)
+        let l = label(J::Running, T::Succeeded, Some(T::Killed));
+        assert!(!l.map_input_reused && l.reduce_input_reused);
+        // Row 10: Succeeded -> not / not
+        assert_eq!(label(J::Succeeded, T::Succeeded, Some(T::Succeeded)), Labels::NOT);
+        // Row 11/12: Failed job dominates any task status.
+        assert_eq!(label(J::Failed, T::Succeeded, Some(T::Running)), Labels::NOT);
+        assert_eq!(label(J::Killed, T::Running, None), Labels::NOT);
+    }
+
+    #[test]
+    fn job_status_priority_over_tasks() {
+        // Even "promising" task states are overruled by a failed job.
+        for map in [T::New, T::Scheduled, T::Running, T::Succeeded] {
+            for reduce in [None, Some(T::Running), Some(T::Scheduled)] {
+                assert_eq!(label(J::Error, map, reduce), Labels::NOT);
+            }
+        }
+    }
+}

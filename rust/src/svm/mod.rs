@@ -1,0 +1,21 @@
+//! The SVM layer on the Rust side: feature extraction (Table 2/3), label
+//! generation (Table 4), dataset handling, kernels, the pure-Rust SMO
+//! reference trainer, and the evaluation metrics behind Table 5.
+//!
+//! The production classifier path runs through `crate::runtime` (AOT HLO
+//! artifacts via PJRT); this module provides the shared types plus the
+//! `rust` fallback backend.
+
+pub mod dataset;
+pub mod eval;
+pub mod features;
+pub mod kernel;
+pub mod labeling;
+pub mod smo;
+
+pub use dataset::{pad, Dataset, PaddedDataset};
+pub use eval::{cross_validate, evaluate, ConfusionMatrix};
+pub use features::{BlockStatsTracker, FeatureVec, N_FEATURES};
+pub use kernel::{KernelKind, KernelParams};
+pub use labeling::{label, label_record, Labels};
+pub use smo::{train as smo_train, SmoConfig, SmoModel};

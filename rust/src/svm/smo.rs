@@ -1,0 +1,253 @@
+//! Pure-Rust SVM trained with simplified SMO (Platt's sequential minimal
+//! optimization, simplified working-set selection).
+//!
+//! This is the reference/fallback classifier: it cross-validates the HLO
+//! artifacts' numerics in integration tests and serves as the
+//! `--svm-backend rust` implementation so every experiment runs even
+//! without `make artifacts`.
+
+use crate::util::rng::Pcg64;
+
+use super::dataset::Dataset;
+use super::kernel::KernelParams;
+
+/// Trained SVM model (dual form).
+#[derive(Debug, Clone)]
+pub struct SmoModel {
+    pub params: KernelParams,
+    pub support_x: Vec<Vec<f32>>,
+    pub support_y: Vec<f32>,
+    pub alpha: Vec<f32>,
+    pub bias: f32,
+}
+
+impl SmoModel {
+    /// Decision score; class "reused" iff score > 0.
+    pub fn decision(&self, x: &[f32]) -> f32 {
+        let mut s = self.bias;
+        for ((sx, sy), a) in self
+            .support_x
+            .iter()
+            .zip(&self.support_y)
+            .zip(&self.alpha)
+        {
+            if *a != 0.0 {
+                s += a * sy * self.params.eval(sx, x);
+            }
+        }
+        s
+    }
+
+    pub fn predict(&self, x: &[f32]) -> bool {
+        self.decision(x) > 0.0
+    }
+
+    pub fn n_support(&self) -> usize {
+        self.alpha.iter().filter(|&&a| a > 1e-7).count()
+    }
+}
+
+/// SMO hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct SmoConfig {
+    pub c: f32,
+    pub tol: f32,
+    pub max_passes: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for SmoConfig {
+    fn default() -> Self {
+        SmoConfig { c: 4.0, tol: 1e-3, max_passes: 8, max_iters: 20_000, seed: 7 }
+    }
+}
+
+/// Train with simplified SMO.
+pub fn train(ds: &Dataset, params: KernelParams, cfg: &SmoConfig) -> SmoModel {
+    let n = ds.len();
+    assert!(n > 0, "empty training set");
+    let x: Vec<Vec<f32>> = ds.x.iter().map(|v| v.to_vec()).collect();
+    let y = ds.y.clone();
+    // Precompute the Gram matrix (n <= a few hundred on our path).
+    let mut k = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in i..n {
+            let v = params.eval(&x[i], &x[j]);
+            k[i * n + j] = v;
+            k[j * n + i] = v;
+        }
+    }
+    let mut alpha = vec![0.0f32; n];
+    let mut b = 0.0f32;
+    let mut rng = Pcg64::new(cfg.seed, 0x5A0);
+    let f = |alpha: &[f32], b: f32, k: &[f32], idx: usize| -> f32 {
+        let mut s = b;
+        for j in 0..n {
+            if alpha[j] != 0.0 {
+                s += alpha[j] * y[j] * k[idx * n + j];
+            }
+        }
+        s
+    };
+
+    let mut passes = 0usize;
+    let mut iters = 0usize;
+    while passes < cfg.max_passes && iters < cfg.max_iters {
+        let mut changed = 0usize;
+        for i in 0..n {
+            iters += 1;
+            let ei = f(&alpha, b, &k, i) - y[i];
+            let violates = (y[i] * ei < -cfg.tol && alpha[i] < cfg.c)
+                || (y[i] * ei > cfg.tol && alpha[i] > 0.0);
+            if !violates {
+                continue;
+            }
+            // Pick j != i at random (simplified SMO heuristic).
+            let mut j = rng.gen_range(n as u64 - 1) as usize;
+            if j >= i {
+                j += 1;
+            }
+            let ej = f(&alpha, b, &k, j) - y[j];
+            let (ai_old, aj_old) = (alpha[i], alpha[j]);
+            let (lo, hi) = if (y[i] - y[j]).abs() > 1e-6 {
+                (
+                    (aj_old - ai_old).max(0.0),
+                    (cfg.c + aj_old - ai_old).min(cfg.c),
+                )
+            } else {
+                (
+                    (ai_old + aj_old - cfg.c).max(0.0),
+                    (ai_old + aj_old).min(cfg.c),
+                )
+            };
+            if hi - lo < 1e-9 {
+                // Empty or degenerate box (float error can make hi < lo).
+                continue;
+            }
+            let eta = 2.0 * k[i * n + j] - k[i * n + i] - k[j * n + j];
+            if eta >= 0.0 {
+                continue; // non-PSD direction (possible for sigmoid); skip
+            }
+            let mut aj = aj_old - y[j] * (ei - ej) / eta;
+            aj = aj.clamp(lo, hi);
+            if (aj - aj_old).abs() < 1e-6 {
+                continue;
+            }
+            let ai = ai_old + y[i] * y[j] * (aj_old - aj);
+            alpha[i] = ai;
+            alpha[j] = aj;
+            // Bias update (Platt's rules).
+            let b1 = b - ei
+                - y[i] * (ai - ai_old) * k[i * n + i]
+                - y[j] * (aj - aj_old) * k[i * n + j];
+            let b2 = b - ej
+                - y[i] * (ai - ai_old) * k[i * n + j]
+                - y[j] * (aj - aj_old) * k[j * n + j];
+            b = if ai > 0.0 && ai < cfg.c {
+                b1
+            } else if aj > 0.0 && aj < cfg.c {
+                b2
+            } else {
+                0.5 * (b1 + b2)
+            };
+            changed += 1;
+        }
+        if changed == 0 {
+            passes += 1;
+        } else {
+            passes = 0;
+        }
+    }
+
+    SmoModel { params, support_x: x, support_y: y, alpha, bias: b }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::svm::features::N_FEATURES;
+    use crate::svm::kernel::KernelKind;
+
+    fn blobs(n_per: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg64::new(seed, 0);
+        let mut ds = Dataset::new();
+        for _ in 0..n_per {
+            let mut a = [0.0f32; N_FEATURES];
+            let mut b = [0.0f32; N_FEATURES];
+            for k in 0..N_FEATURES {
+                a[k] = rng.gen_normal(0.25, 0.08) as f32;
+                b[k] = rng.gen_normal(0.75, 0.08) as f32;
+            }
+            ds.push(a, true);
+            ds.push(b, false);
+        }
+        ds
+    }
+
+    #[test]
+    fn separable_blobs_rbf() {
+        let ds = blobs(40, 1);
+        let model = train(&ds, KernelParams::new(KernelKind::Rbf), &SmoConfig::default());
+        let acc = ds
+            .x
+            .iter()
+            .zip(&ds.y)
+            .filter(|(x, &y)| model.predict(x.as_slice()) == (y > 0.0))
+            .count() as f64
+            / ds.len() as f64;
+        assert!(acc >= 0.99, "acc={acc}");
+        assert!(model.n_support() > 0);
+    }
+
+    #[test]
+    fn separable_blobs_linear() {
+        let ds = blobs(40, 2);
+        let model = train(&ds, KernelParams::new(KernelKind::Linear), &SmoConfig::default());
+        let acc = ds
+            .x
+            .iter()
+            .zip(&ds.y)
+            .filter(|(x, &y)| model.predict(x.as_slice()) == (y > 0.0))
+            .count() as f64
+            / ds.len() as f64;
+        assert!(acc >= 0.95, "acc={acc}");
+    }
+
+    #[test]
+    fn dual_feasibility() {
+        let ds = blobs(30, 3);
+        let cfg = SmoConfig::default();
+        let model = train(&ds, KernelParams::new(KernelKind::Rbf), &cfg);
+        for &a in &model.alpha {
+            assert!(a >= -1e-6 && a <= cfg.c + 1e-6, "alpha {a} out of box");
+        }
+        // KKT complementary slackness (loosely): sum alpha_i y_i ~ 0
+        let s: f32 = model
+            .alpha
+            .iter()
+            .zip(&model.support_y)
+            .map(|(a, y)| a * y)
+            .sum();
+        assert!(s.abs() < 1.0, "sum alpha*y = {s}");
+    }
+
+    #[test]
+    fn single_class_degenerates_gracefully() {
+        let mut ds = Dataset::new();
+        for i in 0..10 {
+            ds.push([0.1 * i as f32 / 10.0; N_FEATURES], true);
+        }
+        let model = train(&ds, KernelParams::new(KernelKind::Rbf), &SmoConfig::default());
+        assert!(model.decision(&[0.05; N_FEATURES]).is_finite());
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let ds = blobs(20, 4);
+        let m1 = train(&ds, KernelParams::new(KernelKind::Rbf), &SmoConfig::default());
+        let m2 = train(&ds, KernelParams::new(KernelKind::Rbf), &SmoConfig::default());
+        assert_eq!(m1.alpha, m2.alpha);
+        assert_eq!(m1.bias, m2.bias);
+    }
+}

@@ -1,0 +1,204 @@
+//! Mini property-testing framework (no `proptest` in the offline cache).
+//!
+//! `forall` runs a property over N seeded random cases; on failure it
+//! re-runs the shrink candidates produced by the case's `Shrink`
+//! implementation (smaller vectors / values) until a minimal failing case
+//! is found, then panics with the seed and the shrunken case so the
+//! failure is reproducible.
+
+use crate::util::rng::Pcg64;
+
+/// A generator of random test cases.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value;
+
+    /// Shrink candidates, largest reduction first. Default: none.
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: u32,
+    pub seed: u64,
+    pub max_shrink_steps: u32,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, seed: 0x9E3779B9, max_shrink_steps: 200 }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases from `gen`. Panics with a
+/// minimal counterexample on failure.
+pub fn forall<G, P>(cfg: &Config, gen: &G, mut prop: P)
+where
+    G: Gen,
+    P: FnMut(&G::Value) -> Result<(), String>,
+{
+    let mut rng = Pcg64::new(cfg.seed, 0x7E57);
+    for case_idx in 0..cfg.cases {
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            // Shrink.
+            let mut best = value.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for candidate in gen.shrink(&best) {
+                    steps += 1;
+                    if let Err(m) = prop(&candidate) {
+                        best = candidate;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case_idx}, seed {:#x}): {best_msg}\nminimal case: {best:?}",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Generator: vectors of `u64` in [0, max_value) with length in
+/// [min_len, max_len]. Shrinks by halving length and zeroing values.
+#[derive(Debug, Clone)]
+pub struct VecU64Gen {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub max_value: u64,
+}
+
+impl Gen for VecU64Gen {
+    type Value = Vec<u64>;
+
+    fn generate(&self, rng: &mut Pcg64) -> Vec<u64> {
+        let len = self.min_len
+            + rng.gen_range((self.max_len - self.min_len + 1) as u64) as usize;
+        (0..len).map(|_| rng.gen_range(self.max_value.max(1))).collect()
+    }
+
+    fn shrink(&self, value: &Vec<u64>) -> Vec<Vec<u64>> {
+        let mut out = Vec::new();
+        if value.len() > self.min_len {
+            // Drop the second half / first half.
+            let keep = (value.len() / 2).max(self.min_len);
+            out.push(value[..keep].to_vec());
+            out.push(value[value.len() - keep..].to_vec());
+        }
+        // Halve all values.
+        if value.iter().any(|&v| v > 0) {
+            out.push(value.iter().map(|&v| v / 2).collect());
+        }
+        out
+    }
+}
+
+/// Generator: (sequence of ops over a keyspace, capacity) for cache
+/// property tests. Ops are (key, predicted_reuse).
+#[derive(Debug, Clone)]
+pub struct CacheOpsGen {
+    pub max_ops: usize,
+    pub keyspace: u64,
+    pub max_capacity: u64,
+}
+
+impl Gen for CacheOpsGen {
+    type Value = (Vec<(u64, bool)>, u64);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        let len = 1 + rng.gen_range(self.max_ops as u64) as usize;
+        let capacity = 1 + rng.gen_range(self.max_capacity);
+        let ops = (0..len)
+            .map(|_| (rng.gen_range(self.keyspace.max(1)), rng.gen_bool(0.5)))
+            .collect();
+        (ops, capacity)
+    }
+
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let (ops, cap) = value;
+        let mut out = Vec::new();
+        if ops.len() > 1 {
+            out.push((ops[..ops.len() / 2].to_vec(), *cap));
+            out.push((ops[ops.len() / 2..].to_vec(), *cap));
+            let mut dropped = ops.clone();
+            dropped.remove(ops.len() / 2);
+            out.push((dropped, *cap));
+        }
+        if *cap > 1 {
+            out.push((ops.clone(), cap / 2));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let gen = VecU64Gen { min_len: 0, max_len: 16, max_value: 100 };
+        let mut count = 0;
+        forall(&Config { cases: 50, ..Default::default() }, &gen, |v| {
+            count += 1;
+            if v.iter().sum::<u64>() > u64::MAX / 2 {
+                Err("overflow".into())
+            } else {
+                Ok(())
+            }
+        });
+        assert!(count >= 50);
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let gen = VecU64Gen { min_len: 0, max_len: 32, max_value: 1000 };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            forall(&Config::default(), &gen, |v| {
+                // Fails whenever any element >= 500.
+                if v.iter().any(|&x| x >= 500) {
+                    Err(format!("has large element: {v:?}"))
+                } else {
+                    Ok(())
+                }
+            });
+        }));
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().expect("panic message"),
+            Ok(()) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("minimal case"), "{msg}");
+        // The shrunken case should be small (few elements).
+        let tail = msg.split("minimal case: ").nth(1).unwrap();
+        let elems = tail.matches(',').count() + 1;
+        assert!(elems <= 8, "did not shrink well: {tail}");
+    }
+
+    #[test]
+    fn cache_ops_gen_produces_valid_cases() {
+        let gen = CacheOpsGen { max_ops: 50, keyspace: 10, max_capacity: 8 };
+        let mut rng = Pcg64::new(1, 0);
+        for _ in 0..20 {
+            let (ops, cap) = gen.generate(&mut rng);
+            assert!(!ops.is_empty());
+            assert!(cap >= 1 && cap <= 8);
+            assert!(ops.iter().all(|(k, _)| *k < 10));
+            // Shrinks stay valid.
+            for (sops, scap) in gen.shrink(&(ops.clone(), cap)) {
+                assert!(scap >= 1);
+                assert!(sops.len() <= ops.len());
+            }
+        }
+    }
+}

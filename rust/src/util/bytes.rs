@@ -1,0 +1,80 @@
+//! Byte-size parsing/formatting ("64MB", "1.5GB") for configs and reports.
+
+pub const KB: u64 = 1024;
+pub const MB: u64 = 1024 * KB;
+pub const GB: u64 = 1024 * MB;
+pub const TB: u64 = 1024 * GB;
+
+/// Parse a human byte size: optional fraction + unit (B/KB/MB/GB/TB, case
+/// insensitive, optional 'iB'). Bare numbers are bytes.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !(c.is_ascii_digit() || c == '.'))
+        .unwrap_or(s.len());
+    let (num, unit) = s.split_at(split);
+    let value: f64 = num.parse().ok()?;
+    if !value.is_finite() || value < 0.0 {
+        return None;
+    }
+    let unit = unit.trim().to_ascii_uppercase();
+    let mult = match unit.as_str() {
+        "" | "B" => 1,
+        "K" | "KB" | "KIB" => KB,
+        "M" | "MB" | "MIB" => MB,
+        "G" | "GB" | "GIB" => GB,
+        "T" | "TB" | "TIB" => TB,
+        _ => return None,
+    };
+    Some((value * mult as f64).round() as u64)
+}
+
+/// Format bytes with a binary unit and 2 significant decimals.
+pub fn format_bytes(n: u64) -> String {
+    let (value, unit) = if n >= TB {
+        (n as f64 / TB as f64, "TB")
+    } else if n >= GB {
+        (n as f64 / GB as f64, "GB")
+    } else if n >= MB {
+        (n as f64 / MB as f64, "MB")
+    } else if n >= KB {
+        (n as f64 / KB as f64, "KB")
+    } else {
+        (n as f64, "B")
+    };
+    if (value - value.round()).abs() < 1e-9 {
+        format!("{}{}", value.round() as u64, unit)
+    } else {
+        format!("{value:.2}{unit}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_units() {
+        assert_eq!(parse_bytes("64MB"), Some(64 * MB));
+        assert_eq!(parse_bytes("128 mb"), Some(128 * MB));
+        assert_eq!(parse_bytes("1.5GB"), Some((1.5 * GB as f64) as u64));
+        assert_eq!(parse_bytes("2GiB"), Some(2 * GB));
+        assert_eq!(parse_bytes("512"), Some(512));
+        assert_eq!(parse_bytes("0B"), Some(0));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert_eq!(parse_bytes("MB"), None);
+        assert_eq!(parse_bytes("12XB"), None);
+        assert_eq!(parse_bytes("-5MB"), None);
+        assert_eq!(parse_bytes(""), None);
+    }
+
+    #[test]
+    fn formats_round_trip() {
+        assert_eq!(format_bytes(64 * MB), "64MB");
+        assert_eq!(format_bytes(3 * GB / 2), "1.50GB");
+        assert_eq!(format_bytes(12), "12B");
+    }
+}

@@ -1,0 +1,102 @@
+//! Minimal `log` facade backend (the offline cache has `log` but no
+//! env_logger/tracing). Level comes from `RUST_LOG` (error|warn|info|debug|
+//! trace) or the CLI `--log-level` flag.
+
+use std::io::Write;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+
+static LOGGER: SimpleLogger = SimpleLogger;
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(3); // Info
+
+struct SimpleLogger;
+
+fn level_to_u8(level: Level) -> u8 {
+    match level {
+        Level::Error => 1,
+        Level::Warn => 2,
+        Level::Info => 3,
+        Level::Debug => 4,
+        Level::Trace => 5,
+    }
+}
+
+impl Log for SimpleLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        level_to_u8(metadata.level()) <= MAX_LEVEL.load(Ordering::Relaxed)
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let mut stderr = std::io::stderr().lock();
+        let _ = writeln!(
+            stderr,
+            "[{:5}] {}: {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Parse a level name; `None` for unknown names.
+pub fn parse_level(s: &str) -> Option<LevelFilter> {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+/// Install the logger (idempotent) and set the level.
+pub fn init(level: LevelFilter) {
+    let as_u8 = match level {
+        LevelFilter::Off => 0,
+        LevelFilter::Error => 1,
+        LevelFilter::Warn => 2,
+        LevelFilter::Info => 3,
+        LevelFilter::Debug => 4,
+        LevelFilter::Trace => 5,
+    };
+    MAX_LEVEL.store(as_u8, Ordering::Relaxed);
+    // set_logger fails when called twice; that's fine.
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+/// Init from RUST_LOG if present, else Info.
+pub fn init_from_env() {
+    let level = std::env::var("RUST_LOG")
+        .ok()
+        .and_then(|v| parse_level(&v))
+        .unwrap_or(LevelFilter::Info);
+    init(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_levels() {
+        assert_eq!(parse_level("info"), Some(LevelFilter::Info));
+        assert_eq!(parse_level("TRACE"), Some(LevelFilter::Trace));
+        assert_eq!(parse_level("bogus"), None);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init(LevelFilter::Warn);
+        init(LevelFilter::Info);
+        log::info!("logger smoke test");
+    }
+}

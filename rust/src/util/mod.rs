@@ -1,0 +1,13 @@
+//! Shared utilities: deterministic RNG, statistics, logging, byte-size
+//! parsing, and plain-text table rendering.
+//!
+//! The offline crate registry only ships `xla`/`anyhow`/`thiserror`/`log`
+//! and friends, so the pieces a production service would usually pull from
+//! `rand`, `env_logger`, `humansize` or `comfy-table` live here instead.
+
+pub mod bytes;
+pub mod fasthash;
+pub mod logger;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,169 @@
+//! HiBench-like application models (paper §6.1).
+//!
+//! The five applications the paper evaluates, with the resource profiles
+//! its text describes: WordCount (CPU-intensive), Sort (I/O-bound), Grep
+//! (mixed), Join (multi-stage), Aggregation (Hive aggregation query); and
+//! the cache-affinity classes of §6.4.2: low (Sort), medium (WordCount,
+//! Join), high (Grep, Aggregation).
+
+use crate::cache::CacheAffinity;
+use crate::hdfs::BlockId;
+use crate::mapreduce::job::{JobId, JobSpec};
+
+/// The evaluated applications.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum App {
+    WordCount,
+    Sort,
+    Grep,
+    Join,
+    Aggregation,
+}
+
+pub const ALL_APPS: [App; 5] =
+    [App::WordCount, App::Sort, App::Grep, App::Join, App::Aggregation];
+
+impl App {
+    pub fn name(self) -> &'static str {
+        match self {
+            App::WordCount => "WordCount",
+            App::Sort => "Sort",
+            App::Grep => "Grep",
+            App::Join => "Join",
+            App::Aggregation => "Aggregation",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<App> {
+        match s.to_ascii_lowercase().as_str() {
+            "wordcount" => Some(App::WordCount),
+            "sort" => Some(App::Sort),
+            "grep" => Some(App::Grep),
+            "join" => Some(App::Join),
+            "aggregation" => Some(App::Aggregation),
+            _ => None,
+        }
+    }
+
+    /// Cache affinity classes from §6.4.2.
+    pub fn affinity(self) -> CacheAffinity {
+        match self {
+            App::Sort => CacheAffinity::Low,
+            App::WordCount | App::Join => CacheAffinity::Medium,
+            App::Grep | App::Aggregation => CacheAffinity::High,
+        }
+    }
+
+    /// CPU seconds per MB of input in the map phase. WordCount is
+    /// CPU-intensive; Sort does almost no per-record compute; Grep is a
+    /// scan with matching cost; Join/Aggregation sit between.
+    pub fn map_cpu_s_per_mb(self) -> f64 {
+        match self {
+            App::WordCount => 0.035,
+            App::Sort => 0.004,
+            App::Grep => 0.010,
+            App::Join => 0.018,
+            App::Aggregation => 0.015,
+        }
+    }
+
+    /// CPU seconds per MB of shuffled data in the reduce phase.
+    pub fn reduce_cpu_s_per_mb(self) -> f64 {
+        match self {
+            App::WordCount => 0.008,
+            App::Sort => 0.012,
+            App::Grep => 0.002,
+            App::Join => 0.015,
+            App::Aggregation => 0.010,
+        }
+    }
+
+    /// Intermediate-data volume as a fraction of the input volume.
+    /// Sort shuffles everything; Grep's matches are tiny; WordCount's
+    /// combiner compresses heavily.
+    pub fn shuffle_ratio(self) -> f64 {
+        match self {
+            App::WordCount => 0.15,
+            App::Sort => 1.0,
+            App::Grep => 0.02,
+            App::Join => 0.6,
+            App::Aggregation => 0.25,
+        }
+    }
+
+    /// Chained MapReduce stages (Join is the paper's multi-stage example).
+    pub fn stages(self) -> usize {
+        match self {
+            App::Join => 2,
+            _ => 1,
+        }
+    }
+
+    /// Reduce-task count heuristic for an input of `n_blocks`.
+    pub fn n_reduces(self, n_blocks: usize) -> usize {
+        match self {
+            App::Grep => 1,
+            App::Sort => (n_blocks / 4).clamp(1, 16),
+            _ => (n_blocks / 8).clamp(1, 8),
+        }
+    }
+
+    /// Build a `JobSpec` over concrete input blocks.
+    pub fn job(self, id: JobId, input_blocks: Vec<BlockId>) -> JobSpec {
+        let n = input_blocks.len();
+        JobSpec {
+            id,
+            app: self.name().to_string(),
+            affinity: self.affinity(),
+            input_blocks,
+            n_reduces: self.n_reduces(n),
+            map_cpu_s_per_mb: self.map_cpu_s_per_mb(),
+            reduce_cpu_s_per_mb: self.reduce_cpu_s_per_mb(),
+            shuffle_ratio: self.shuffle_ratio(),
+            stages: self.stages(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affinity_classes_match_paper() {
+        assert_eq!(App::Sort.affinity(), CacheAffinity::Low);
+        assert_eq!(App::WordCount.affinity(), CacheAffinity::Medium);
+        assert_eq!(App::Join.affinity(), CacheAffinity::Medium);
+        assert_eq!(App::Grep.affinity(), CacheAffinity::High);
+        assert_eq!(App::Aggregation.affinity(), CacheAffinity::High);
+    }
+
+    #[test]
+    fn resource_profiles_are_sane() {
+        // WordCount is the most CPU-intensive; Sort the least.
+        assert!(App::WordCount.map_cpu_s_per_mb() > App::Grep.map_cpu_s_per_mb());
+        assert!(App::Grep.map_cpu_s_per_mb() > App::Sort.map_cpu_s_per_mb());
+        // Sort is IO-bound: shuffles everything.
+        assert_eq!(App::Sort.shuffle_ratio(), 1.0);
+        assert!(App::Grep.shuffle_ratio() < 0.1);
+        // Join is the only multi-stage app.
+        assert_eq!(App::Join.stages(), 2);
+        assert_eq!(App::WordCount.stages(), 1);
+    }
+
+    #[test]
+    fn job_construction() {
+        let job = App::Grep.job(JobId(1), vec![BlockId(0), BlockId(1)]);
+        assert_eq!(job.app, "Grep");
+        assert_eq!(job.n_maps(), 2);
+        assert_eq!(job.n_reduces, 1);
+    }
+
+    #[test]
+    fn name_round_trip() {
+        for app in ALL_APPS {
+            assert_eq!(App::from_name(app.name()), Some(app));
+        }
+        assert_eq!(App::from_name("bogus"), None);
+    }
+}

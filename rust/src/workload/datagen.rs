@@ -1,0 +1,108 @@
+//! Synthetic dataset registration — the stand-in for the paper's Gutenberg
+//! corpus and HiBench's random text generator (see DESIGN.md §2: only block
+//! counts, sizes and sharing structure matter to the cache layer).
+
+use crate::config::ClusterConfig;
+use crate::hdfs::{BlockKind, DataNode, DataNodeId, NameNode};
+use crate::util::rng::Pcg64;
+
+/// A freshly provisioned simulated cluster.
+pub struct Cluster {
+    pub cfg: ClusterConfig,
+    pub namenode: NameNode,
+    pub datanodes: Vec<DataNode>,
+}
+
+impl Cluster {
+    /// Build a cluster per the config: one NameNode, `datanodes` DataNodes
+    /// with the configured off-heap cache capacity.
+    pub fn provision(cfg: &ClusterConfig) -> Self {
+        cfg.validate().expect("invalid cluster config");
+        let mut seed_rng = Pcg64::new(cfg.seed, 0xC1);
+        let namenode = NameNode::new(cfg.datanodes, cfg.replication, seed_rng.fork(1));
+        let datanodes = (0..cfg.datanodes)
+            .map(|i| DataNode::new(DataNodeId(i as u32), cfg.cache_capacity_per_node))
+            .collect();
+        Cluster { cfg: cfg.clone(), namenode, datanodes }
+    }
+
+    /// Register an input dataset of `size` bytes under `name`. Returns the
+    /// file id.
+    pub fn add_input(&mut self, name: &str, size: u64) -> u64 {
+        self.namenode.register_file(
+            name,
+            size,
+            self.cfg.block_size,
+            BlockKind::Input,
+            &mut self.datanodes,
+        )
+    }
+
+    /// Register an intermediate dataset (shuffle spill / multi-stage).
+    pub fn add_intermediate(&mut self, name: &str, size: u64) -> u64 {
+        self.namenode.register_file(
+            name,
+            size,
+            self.cfg.block_size,
+            BlockKind::Intermediate,
+            &mut self.datanodes,
+        )
+    }
+
+    /// Total cache capacity across DataNodes.
+    pub fn total_cache_capacity(&self) -> u64 {
+        self.datanodes.iter().map(|d| d.cache_capacity()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::{GB, MB};
+
+    #[test]
+    fn provision_matches_config() {
+        let cfg = ClusterConfig::default();
+        let cluster = Cluster::provision(&cfg);
+        assert_eq!(cluster.datanodes.len(), 9);
+        assert_eq!(
+            cluster.total_cache_capacity(),
+            9 * (1.5 * GB as f64) as u64
+        );
+    }
+
+    #[test]
+    fn add_input_registers_blocks_and_replicas() {
+        let cfg = ClusterConfig { block_size: 64 * MB, ..Default::default() };
+        let mut cluster = Cluster::provision(&cfg);
+        let fid = cluster.add_input("corpus", 2 * GB);
+        let blocks = cluster.namenode.files.blocks_of(fid);
+        assert_eq!(blocks.len(), 32);
+        // Every block has `replication` replicas stored on real DataNodes.
+        for &b in blocks {
+            let reps = cluster.namenode.replicas_of(b);
+            assert_eq!(reps.len(), 3);
+            for dn in reps {
+                assert!(cluster.datanodes[dn.0 as usize].has_block(b));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_placement_for_seed() {
+        let cfg = ClusterConfig::default();
+        let mut a = Cluster::provision(&cfg);
+        let mut b = Cluster::provision(&cfg);
+        let fa = a.add_input("x", GB);
+        let fb = b.add_input("x", GB);
+        for (&ba, &bb) in a
+            .namenode
+            .files
+            .blocks_of(fa)
+            .iter()
+            .zip(b.namenode.files.blocks_of(fb))
+        {
+            assert_eq!(a.namenode.replicas_of(ba), b.namenode.replicas_of(bb));
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Workload models: the five HiBench-like applications the paper evaluates,
+//! synthetic dataset registration, seeded block-request traces (Fig 3), and
+//! the Table 8 workload suites (Fig 5/6).
+
+pub mod apps;
+pub mod datagen;
+pub mod suites;
+pub mod trace;
+
+pub use apps::{App, ALL_APPS};
+pub use datagen::Cluster;
+pub use suites::{instantiate, workload_by_name, WorkloadDef, WORKLOADS};
+pub use trace::{fig3_trace, generate as generate_trace, BlockRequest, TraceConfig};

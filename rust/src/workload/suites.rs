@@ -1,0 +1,172 @@
+//! The paper's Table 8 workloads: six mixes of four concurrent MapReduce
+//! applications with shared inputs.
+//!
+//! Sharing structure from §6.4.2: Grep, WordCount and Sort read the same
+//! random-text input; Aggregation and Join share their (Hive) input.
+//! Input sizes are the paper's, scaled by `scale` (the default 1/100 turns
+//! 257 GB workloads into ~2.6 GB simulations that finish in seconds while
+//! preserving block-level sharing).
+
+use crate::hdfs::BlockId;
+use crate::mapreduce::job::{JobId, JobSpec};
+use crate::util::bytes::GB;
+
+use super::apps::App;
+use super::datagen::Cluster;
+
+/// One Table 8 row.
+#[derive(Debug, Clone)]
+pub struct WorkloadDef {
+    pub name: &'static str,
+    pub apps: [App; 4],
+    /// Paper's total input size in GB (Table 8's "Input data size").
+    pub input_gb: f64,
+}
+
+/// Table 8, verbatim.
+pub const WORKLOADS: [WorkloadDef; 6] = [
+    WorkloadDef {
+        name: "W1",
+        apps: [App::Aggregation, App::Grep, App::Join, App::WordCount],
+        input_gb: 257.3,
+    },
+    WorkloadDef {
+        name: "W2",
+        apps: [App::Aggregation, App::Grep, App::Sort, App::WordCount],
+        input_gb: 262.9,
+    },
+    WorkloadDef {
+        name: "W3",
+        apps: [App::Aggregation, App::WordCount, App::Grep, App::Grep],
+        input_gb: 376.2,
+    },
+    WorkloadDef {
+        name: "W4",
+        apps: [App::Aggregation, App::Sort, App::Grep, App::Grep],
+        input_gb: 446.7,
+    },
+    WorkloadDef {
+        name: "W5",
+        apps: [App::Grep, App::Grep, App::Sort, App::WordCount],
+        input_gb: 254.3,
+    },
+    WorkloadDef {
+        name: "W6",
+        apps: [App::Aggregation, App::Grep, App::Join, App::Sort],
+        input_gb: 377.1,
+    },
+];
+
+pub fn workload_by_name(name: &str) -> Option<&'static WorkloadDef> {
+    WORKLOADS.iter().find(|w| w.name.eq_ignore_ascii_case(name))
+}
+
+/// Instantiate a workload on a cluster: registers the shared input files
+/// and returns one `JobSpec` per application.
+///
+/// Text-population apps (Grep/WordCount/Sort) share the "text" input;
+/// Hive apps (Aggregation/Join) share the "hive" input. The paper's total
+/// input size is split between the two populations in proportion to how
+/// many apps use each.
+pub fn instantiate(
+    def: &WorkloadDef,
+    cluster: &mut Cluster,
+    scale: f64,
+    job_id_base: u64,
+) -> Vec<JobSpec> {
+    assert!(scale > 0.0, "scale must be positive");
+    let total_bytes = (def.input_gb * scale * GB as f64) as u64;
+    let n_text = def
+        .apps
+        .iter()
+        .filter(|a| matches!(a, App::Grep | App::WordCount | App::Sort))
+        .count();
+    let n_hive = 4 - n_text;
+    let text_bytes =
+        (total_bytes as f64 * n_text as f64 / 4.0) as u64;
+    let hive_bytes = total_bytes - text_bytes;
+
+    let text_file = if n_text > 0 {
+        Some(cluster.add_input(&format!("{}/text", def.name), text_bytes.max(1)))
+    } else {
+        None
+    };
+    let hive_file = if n_hive > 0 {
+        Some(cluster.add_input(&format!("{}/hive", def.name), hive_bytes.max(1)))
+    } else {
+        None
+    };
+
+    def.apps
+        .iter()
+        .enumerate()
+        .map(|(i, app)| {
+            let file = match app {
+                App::Grep | App::WordCount | App::Sort => text_file.unwrap(),
+                App::Join | App::Aggregation => hive_file.unwrap(),
+            };
+            let blocks: Vec<BlockId> = cluster.namenode.files.blocks_of(file).to_vec();
+            app.job(JobId(job_id_base + i as u64), blocks)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    #[test]
+    fn table8_shapes() {
+        assert_eq!(WORKLOADS.len(), 6);
+        assert_eq!(workload_by_name("w3").unwrap().apps[1], App::WordCount);
+        assert!(workload_by_name("w9").is_none());
+        // W4 is the largest workload in the paper.
+        let max = WORKLOADS
+            .iter()
+            .max_by(|a, b| a.input_gb.partial_cmp(&b.input_gb).unwrap())
+            .unwrap();
+        assert_eq!(max.name, "W4");
+    }
+
+    #[test]
+    fn instantiate_shares_inputs() {
+        let cfg = ClusterConfig::default();
+        let mut cluster = Cluster::provision(&cfg);
+        let jobs = instantiate(&WORKLOADS[4], &mut cluster, 0.01, 0); // W5
+        assert_eq!(jobs.len(), 4);
+        // W5 = Grep, Grep, Sort, WordCount: all four share the text input.
+        let first = &jobs[0].input_blocks;
+        for job in &jobs[1..] {
+            assert_eq!(&job.input_blocks, first, "W5 apps must share input");
+        }
+    }
+
+    #[test]
+    fn instantiate_splits_text_and_hive() {
+        let cfg = ClusterConfig::default();
+        let mut cluster = Cluster::provision(&cfg);
+        let jobs = instantiate(&WORKLOADS[0], &mut cluster, 0.01, 10); // W1
+        // W1 = Aggregation, Grep, Join, WordCount.
+        let agg = &jobs[0];
+        let grep = &jobs[1];
+        let join = &jobs[2];
+        let wc = &jobs[3];
+        assert_eq!(agg.input_blocks, join.input_blocks, "hive apps share");
+        assert_eq!(grep.input_blocks, wc.input_blocks, "text apps share");
+        assert_ne!(agg.input_blocks, grep.input_blocks);
+        assert_eq!(jobs[0].id, JobId(10));
+    }
+
+    #[test]
+    fn scale_controls_block_count() {
+        let cfg = ClusterConfig::default();
+        let mut c1 = Cluster::provision(&cfg);
+        let mut c2 = Cluster::provision(&cfg);
+        let j1 = instantiate(&WORKLOADS[0], &mut c1, 0.005, 0);
+        let j2 = instantiate(&WORKLOADS[0], &mut c2, 0.02, 0);
+        let b1: usize = j1.iter().map(|j| j.n_maps()).sum();
+        let b2: usize = j2.iter().map(|j| j.n_maps()).sum();
+        assert!(b2 > b1);
+    }
+}

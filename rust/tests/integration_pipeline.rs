@@ -1,0 +1,197 @@
+//! Full-pipeline integration: cluster provisioning -> MapReduce scheduling
+//! -> coordinator (Algorithm 1) -> metrics, across all three §6.4
+//! scenarios, using the pure-Rust backend (HLO-path coverage lives in
+//! integration_runtime.rs, which needs `make artifacts`).
+
+use h_svm_lru::config::{ClusterConfig, SvmConfig};
+use h_svm_lru::coordinator::{CacheCoordinator, CacheMode};
+use h_svm_lru::experiments::{run_repeated_job, run_workload, Scenario};
+use h_svm_lru::mapreduce::{JobId, Scheduler};
+use h_svm_lru::util::bytes::GB;
+use h_svm_lru::workload::{instantiate, App, Cluster, WORKLOADS};
+
+fn svm_rust() -> SvmConfig {
+    SvmConfig { backend: "rust".into(), ..Default::default() }
+}
+
+#[test]
+fn workload_pipeline_end_to_end() {
+    let cfg = ClusterConfig::default(); // the paper's 9-node testbed
+    let run = run_workload(&WORKLOADS[0], &cfg, &Scenario::SvmLru, &svm_rust(), 0.02)
+        .expect("W1 under H-SVM-LRU");
+    assert_eq!(run.runs.len(), 4);
+    for job in &run.runs {
+        assert_eq!(job.maps_completed(), job.spec.n_maps());
+        assert_eq!(job.reduces_completed(), job.spec.n_reduces);
+        assert!(job.finish > job.start);
+    }
+    assert!(run.hit_ratio > 0.0, "shared inputs must produce hits");
+}
+
+#[test]
+fn three_scenarios_order_correctly() {
+    // H-SVM-LRU <= H-LRU <= H-NoCache on a workload with heavy sharing and
+    // pollution (W3: Aggregation + WordCount + Grep + Grep).
+    let cfg = ClusterConfig::default();
+    let scale = 0.05;
+    let nocache = run_workload(&WORKLOADS[2], &cfg, &Scenario::NoCache, &svm_rust(), scale)
+        .unwrap()
+        .makespan_s;
+    let lru = run_workload(
+        &WORKLOADS[2],
+        &cfg,
+        &Scenario::Policy("lru".into()),
+        &svm_rust(),
+        scale,
+    )
+    .unwrap()
+    .makespan_s;
+    let svm = run_workload(&WORKLOADS[2], &cfg, &Scenario::SvmLru, &svm_rust(), scale)
+        .unwrap()
+        .makespan_s;
+    assert!(lru < nocache, "caching must help W3: lru {lru} vs nocache {nocache}");
+    assert!(svm < nocache, "svm-lru must help W3: {svm} vs {nocache}");
+    assert!(
+        svm <= lru * 1.05,
+        "svm-lru should not lose to lru on W3: {svm} vs {lru}"
+    );
+}
+
+#[test]
+fn repeated_runs_warm_the_cache() {
+    let cfg = ClusterConfig::default();
+    let times = run_repeated_job(
+        App::WordCount,
+        4 * GB,
+        &cfg,
+        &Scenario::Policy("lru".into()),
+        &svm_rust(),
+        5,
+    )
+    .unwrap();
+    assert_eq!(times.len(), 5);
+    let cold = times[0];
+    let warm = times[4];
+    assert!(warm < cold, "warm run {warm} should beat cold {cold}");
+}
+
+#[test]
+fn coordinator_metadata_stays_consistent_under_load() {
+    // After a full workload, DataNode ground truth must match NameNode
+    // cache metadata exactly (cache reports find nothing to fix).
+    let cfg = ClusterConfig::default();
+    let mut cluster = Cluster::provision(&cfg);
+    let jobs = instantiate(&WORKLOADS[4], &mut cluster, 0.02, 0);
+    let mut coord = CacheCoordinator::new(
+        cluster,
+        CacheMode::Cached { policy: "lru".into() },
+        None,
+    )
+    .unwrap();
+    let cfg_ref = coord.cluster.cfg.clone();
+    let scheduler = Scheduler::new(&cfg_ref);
+    scheduler.run_jobs(&jobs, &mut coord, h_svm_lru::sim::SimTime::ZERO);
+    assert!(coord.stats.requests > 0);
+    assert_eq!(coord.process_cache_reports(), 0, "metadata drift detected");
+    // Occupancy within bounds on every node.
+    for dn in &coord.cluster.datanodes {
+        assert!(dn.cache_used() <= dn.cache_capacity());
+    }
+}
+
+#[test]
+fn history_feeds_labeling_pipeline() {
+    use h_svm_lru::mapreduce::HistoryServer;
+    use h_svm_lru::svm::label_record;
+
+    let cfg = ClusterConfig::default();
+    let mut cluster = Cluster::provision(&cfg);
+    let jobs = instantiate(&WORKLOADS[0], &mut cluster, 0.01, 0);
+    let mut coord =
+        CacheCoordinator::new(cluster, CacheMode::Cached { policy: "lru".into() }, None)
+            .unwrap();
+    let cfg_ref = coord.cluster.cfg.clone();
+    let scheduler = Scheduler::new(&cfg_ref);
+    let runs = scheduler.run_jobs(&jobs, &mut coord, h_svm_lru::sim::SimTime::ZERO);
+
+    let mut history = HistoryServer::new();
+    for run in &runs {
+        history.ingest(run);
+    }
+    assert_eq!(history.len(), 7 * runs.len());
+    // Table 4 labels apply to every record; both classes appear.
+    let labels: Vec<_> = history.records().iter().map(label_record).collect();
+    assert!(labels.iter().any(|l| l.map_input_reused || l.reduce_input_reused));
+    assert!(labels.iter().any(|l| !l.map_input_reused && !l.reduce_input_reused));
+}
+
+#[test]
+fn multi_job_fairness() {
+    // Two identical jobs sharing the cluster finish within 2x of each
+    // other (round-robin slot sharing).
+    let cfg = ClusterConfig::default();
+    let mut cluster = Cluster::provision(&cfg);
+    let fid = cluster.add_input("shared", 2 * GB);
+    let blocks: Vec<_> = cluster.namenode.files.blocks_of(fid).to_vec();
+    let jobs = vec![
+        App::Grep.job(JobId(0), blocks.clone()),
+        App::Grep.job(JobId(1), blocks),
+    ];
+    let mut coord =
+        CacheCoordinator::new(cluster, CacheMode::Cached { policy: "lru".into() }, None)
+            .unwrap();
+    let cfg_ref = coord.cluster.cfg.clone();
+    let scheduler = Scheduler::new(&cfg_ref);
+    let runs = scheduler.run_jobs(&jobs, &mut coord, h_svm_lru::sim::SimTime::ZERO);
+    let t0 = runs[0].execution_time().as_secs_f64();
+    let t1 = runs[1].execution_time().as_secs_f64();
+    assert!(t0 / t1 < 2.0 && t1 / t0 < 2.0, "unfair: {t0} vs {t1}");
+}
+
+#[test]
+fn shipped_config_file_loads() {
+    let (cluster, svm) = h_svm_lru::config::load(Some("configs/cluster.toml")).unwrap();
+    assert_eq!(cluster.datanodes, 9);
+    assert_eq!(cluster.cache_blocks_per_node(), 12);
+    assert!(!cluster.speculative_execution);
+    assert_eq!(svm.kernel, "rbf");
+}
+
+#[test]
+fn prefetching_improves_repeat_scans() {
+    // Same Poisson scenario with and without the SVM-gated prefetcher:
+    // sequential scans should hit more with it on (ablation 3's claim).
+    use h_svm_lru::experiments::simulate::{self, SimulateConfig};
+    let cfg = ClusterConfig { datanodes: 3, replication: 2, ..Default::default() };
+    let base = SimulateConfig { n_jobs: 12, seed: 21, ..Default::default() };
+    let off = simulate::run(&cfg, &Scenario::SvmLru, &svm_rust(), &base).unwrap();
+    let on = simulate::run(
+        &cfg,
+        &Scenario::SvmLru,
+        &svm_rust(),
+        &SimulateConfig { prefetch_depth: 2, ..base },
+    )
+    .unwrap();
+    assert!(
+        on.hit_ratio >= off.hit_ratio,
+        "prefetch should not hurt: {} vs {}",
+        on.hit_ratio,
+        off.hit_ratio
+    );
+}
+
+#[test]
+fn failure_injection_keeps_metadata_consistent() {
+    use h_svm_lru::experiments::simulate::{self, SimulateConfig};
+    use h_svm_lru::mapreduce::FailureModel;
+    let cfg = ClusterConfig { datanodes: 3, replication: 2, ..Default::default() };
+    let sim = SimulateConfig {
+        n_jobs: 10,
+        failures: FailureModel::with_rates(0.2, 0.05, 3),
+        ..Default::default()
+    };
+    let report = simulate::run(&cfg, &Scenario::Policy("lru".into()), &svm_rust(), &sim).unwrap();
+    assert_eq!(report.completed.len(), 10);
+    assert!(report.failed_attempts + report.killed_attempts > 0);
+    assert_eq!(report.metadata_fixes, 0, "heartbeat reconciliation found drift");
+}

@@ -1,0 +1,118 @@
+//! Runtime integration: the AOT HLO artifacts (L1 Pallas kernel + L2 JAX
+//! model) executed through PJRT from Rust, cross-validated against the
+//! pure-Rust SMO reference.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use h_svm_lru::runtime::{predict_batch, HloBackend, RustBackend, SvmBackend};
+use h_svm_lru::svm::dataset::Dataset;
+use h_svm_lru::svm::features::N_FEATURES;
+use h_svm_lru::svm::KernelKind;
+use h_svm_lru::util::rng::Pcg64;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string());
+    if h_svm_lru::runtime::artifacts::available(std::path::Path::new(&dir), KernelKind::Rbf) {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not found in {dir:?} — run `make artifacts`");
+        None
+    }
+}
+
+fn blobs(n_per: usize, seed: u64, centers: (f64, f64)) -> Dataset {
+    let mut rng = Pcg64::new(seed, 0);
+    let mut ds = Dataset::new();
+    for _ in 0..n_per {
+        let mut a = [0.0f32; N_FEATURES];
+        let mut b = [0.0f32; N_FEATURES];
+        for k in 0..N_FEATURES {
+            a[k] = rng.gen_normal(centers.0, 0.08) as f32;
+            b[k] = rng.gen_normal(centers.1, 0.08) as f32;
+        }
+        ds.push(a, true);
+        ds.push(b, false);
+    }
+    ds
+}
+
+#[test]
+fn hlo_backend_trains_and_classifies() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut be = HloBackend::load(&dir, KernelKind::Rbf).expect("load artifacts");
+    assert!(!be.is_trained());
+    let ds = blobs(80, 3, (0.25, 0.75));
+    be.train(&ds).expect("train via PJRT");
+    assert!(be.is_trained());
+    let classes = predict_batch(&mut be, &ds.x).expect("predict via PJRT");
+    let acc = classes
+        .iter()
+        .zip(&ds.y)
+        .filter(|(c, &y)| **c == (y > 0.0))
+        .count() as f64
+        / ds.len() as f64;
+    assert!(acc >= 0.99, "HLO backend accuracy {acc}");
+}
+
+#[test]
+fn hlo_and_smo_agree_on_classes() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Overlapping blobs: a harder problem where the decision boundary
+    // matters; the two independent implementations must still agree on the
+    // vast majority of points.
+    let train = blobs(100, 7, (0.35, 0.65));
+    let test = blobs(60, 8, (0.35, 0.65));
+    let mut hlo = HloBackend::load(&dir, KernelKind::Rbf).unwrap();
+    let mut smo = RustBackend::new(KernelKind::Rbf);
+    hlo.train(&train).unwrap();
+    smo.train(&train).unwrap();
+    let ch = predict_batch(&mut hlo, &test.x).unwrap();
+    let cs = predict_batch(&mut smo, &test.x).unwrap();
+    let agree = ch.iter().zip(&cs).filter(|(a, b)| a == b).count() as f64 / ch.len() as f64;
+    assert!(agree >= 0.9, "HLO/SMO class agreement only {agree}");
+    // And both should actually be good classifiers here.
+    let acc_h = ch.iter().zip(&test.y).filter(|(c, &y)| **c == (y > 0.0)).count() as f64
+        / test.len() as f64;
+    assert!(acc_h >= 0.85, "HLO acc {acc_h}");
+}
+
+#[test]
+fn all_three_kernel_artifacts_load_and_run() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = blobs(60, 9, (0.25, 0.75));
+    for kind in [KernelKind::Linear, KernelKind::Rbf, KernelKind::Sigmoid] {
+        let mut be = HloBackend::load(&dir, kind)
+            .unwrap_or_else(|e| panic!("loading {}: {e:#}", kind.name()));
+        be.train(&ds).unwrap_or_else(|e| panic!("training {}: {e:#}", kind.name()));
+        let scores = be.decision_batch(&ds.x[..10]).unwrap();
+        assert_eq!(scores.len(), 10);
+        assert!(scores.iter().all(|s| s.is_finite()), "{} scores finite", kind.name());
+    }
+}
+
+#[test]
+fn predict_batches_larger_than_artifact_width() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut be = HloBackend::load(&dir, KernelKind::Rbf).unwrap();
+    let ds = blobs(80, 4, (0.25, 0.75));
+    be.train(&ds).unwrap();
+    // 160 queries vs batch width 64: chunking must preserve order.
+    let scores = be.decision_batch(&ds.x).unwrap();
+    assert_eq!(scores.len(), ds.len());
+    let acc = scores
+        .iter()
+        .zip(&ds.y)
+        .filter(|(s, &y)| (**s > 0.0) == (y > 0.0))
+        .count() as f64
+        / ds.len() as f64;
+    assert!(acc >= 0.99, "chunked predict accuracy {acc}");
+}
+
+#[test]
+fn manifest_matches_crate_constants() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = h_svm_lru::runtime::Manifest::load(std::path::Path::new(&dir)).unwrap();
+    m.validate().unwrap();
+    assert_eq!(m.n_features, N_FEATURES);
+    assert!(m.kernels.len() >= 3);
+}

@@ -1,0 +1,177 @@
+//! Property tests over the cache layer: invariants that must hold for
+//! every policy on every op sequence.
+
+use h_svm_lru::cache::hsvmlru::HSvmLru;
+use h_svm_lru::cache::lru::Lru;
+use h_svm_lru::cache::registry::{make_policy, POLICY_NAMES};
+use h_svm_lru::cache::{AccessContext, BlockCache};
+use h_svm_lru::hdfs::BlockId;
+use h_svm_lru::sim::SimTime;
+use h_svm_lru::testkit::{forall, CacheOpsGen, Config};
+
+fn ctx(t: u64, reuse: bool) -> AccessContext {
+    AccessContext::simple(SimTime(t), 1).with_prediction(reuse)
+}
+
+/// Replay ops; check occupancy, accounting and hit+miss bookkeeping.
+fn invariants_hold(policy: &str, ops: &[(u64, bool)], capacity: u64) -> Result<(), String> {
+    let mut cache = BlockCache::new(make_policy(policy).unwrap(), capacity);
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    for (t, (key, reuse)) in ops.iter().enumerate() {
+        let c = ctx(t as u64, *reuse);
+        let before = cache.contains(BlockId(*key));
+        let out = cache.access_or_insert(BlockId(*key), &c);
+        if out.hit != before {
+            return Err(format!("{policy}: hit flag disagrees with contains()"));
+        }
+        if out.hit {
+            hits += 1;
+        } else {
+            misses += 1;
+        }
+        if cache.used() > cache.capacity() {
+            return Err(format!(
+                "{policy}: occupancy {} exceeds capacity {}",
+                cache.used(),
+                cache.capacity()
+            ));
+        }
+        if cache.used() != cache.len() as u64 {
+            return Err(format!("{policy}: byte accounting broken (unit blocks)"));
+        }
+        for evicted in &out.evicted {
+            if cache.contains(*evicted) {
+                return Err(format!("{policy}: evicted block {evicted} still cached"));
+            }
+        }
+    }
+    if hits + misses != ops.len() as u64 {
+        return Err(format!("{policy}: hits+misses != requests"));
+    }
+    Ok(())
+}
+
+#[test]
+fn all_policies_uphold_cache_invariants() {
+    let gen = CacheOpsGen { max_ops: 300, keyspace: 40, max_capacity: 12 };
+    for &policy in POLICY_NAMES {
+        forall(&Config { cases: 30, seed: 0xCAFE + policy.len() as u64, ..Default::default() },
+               &gen,
+               |(ops, cap)| invariants_hold(policy, ops, *cap));
+    }
+}
+
+#[test]
+fn lru_stack_property() {
+    // LRU inclusion: a cache of capacity c+1 always contains the cache of
+    // capacity c (classic stack property) under the same request stream.
+    let gen = CacheOpsGen { max_ops: 200, keyspace: 30, max_capacity: 10 };
+    forall(&Config { cases: 40, ..Default::default() }, &gen, |(ops, cap)| {
+        let mut small = BlockCache::new(Box::new(Lru::new()), *cap);
+        let mut large = BlockCache::new(Box::new(Lru::new()), cap + 1);
+        for (t, (key, _)) in ops.iter().enumerate() {
+            let c = AccessContext::simple(SimTime(t as u64), 1);
+            small.access_or_insert(BlockId(*key), &c);
+            large.access_or_insert(BlockId(*key), &c);
+            for b in small.cached_blocks() {
+                if !large.contains(b) {
+                    return Err(format!(
+                        "stack property violated: {b} in cap={} but not cap={}",
+                        cap,
+                        cap + 1
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hsvmlru_with_all_reused_equals_lru() {
+    // The paper's own claim: if every block is classified "reused", the
+    // policy is identical to LRU — same hits, same evictions, same order.
+    let gen = CacheOpsGen { max_ops: 300, keyspace: 25, max_capacity: 8 };
+    forall(&Config { cases: 60, ..Default::default() }, &gen, |(ops, cap)| {
+        let mut lru = BlockCache::new(Box::new(Lru::new()), *cap);
+        let mut hsvm = BlockCache::new(Box::new(HSvmLru::new()), *cap);
+        for (t, (key, _)) in ops.iter().enumerate() {
+            let c = ctx(t as u64, true); // all class 1
+            let a = lru.access_or_insert(BlockId(*key), &c);
+            let b = hsvm.access_or_insert(BlockId(*key), &c);
+            if a.hit != b.hit {
+                return Err(format!("hit divergence at op {t}"));
+            }
+            if a.evicted != b.evicted {
+                return Err(format!(
+                    "eviction divergence at op {t}: lru {:?} vs h-svm-lru {:?}",
+                    a.evicted, b.evicted
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hsvmlru_never_evicts_reused_while_unused_present() {
+    let gen = CacheOpsGen { max_ops: 300, keyspace: 40, max_capacity: 10 };
+    forall(&Config { cases: 40, ..Default::default() }, &gen, |(ops, cap)| {
+        let mut policy = HSvmLru::new();
+        let mut cache_members: std::collections::HashMap<BlockId, bool> =
+            std::collections::HashMap::new();
+        use h_svm_lru::cache::CachePolicy;
+        for (t, (key, reuse)) in ops.iter().enumerate() {
+            let b = BlockId(*key);
+            let c = ctx(t as u64, *reuse);
+            if cache_members.contains_key(&b) {
+                policy.on_hit(b, &c);
+                cache_members.insert(b, *reuse);
+            } else {
+                if cache_members.len() as u64 >= *cap {
+                    let victim = policy.choose_victim(SimTime(t as u64)).unwrap();
+                    // Invariant: while any unused-class block is cached, the
+                    // victim must be unused-class.
+                    let any_unused = cache_members.values().any(|r| !*r);
+                    let victim_reused = cache_members[&victim];
+                    if any_unused && victim_reused {
+                        return Err(format!(
+                            "evicted reused block {victim} while unused blocks were cached"
+                        ));
+                    }
+                    policy.on_evict(victim);
+                    cache_members.remove(&victim);
+                }
+                policy.on_insert(b, &c);
+                cache_members.insert(b, *reuse);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn eviction_totals_match_insertions() {
+    // Conservation: insertions - evictions == final occupancy.
+    let gen = CacheOpsGen { max_ops: 400, keyspace: 60, max_capacity: 16 };
+    for &policy in POLICY_NAMES {
+        forall(&Config { cases: 15, seed: 0xBEEF, ..Default::default() }, &gen, |(ops, cap)| {
+            let mut cache = BlockCache::new(make_policy(policy).unwrap(), *cap);
+            let mut inserted = 0i64;
+            let mut evicted = 0i64;
+            for (t, (key, reuse)) in ops.iter().enumerate() {
+                let out = cache.access_or_insert(BlockId(*key), &ctx(t as u64, *reuse));
+                inserted += (!out.hit && out.inserted) as i64;
+                evicted += out.evicted.len() as i64;
+            }
+            if inserted - evicted != cache.len() as i64 {
+                return Err(format!(
+                    "{policy}: {inserted} - {evicted} != {}",
+                    cache.len()
+                ));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,190 @@
+//! Property tests over the DES core and the cluster substrate.
+
+use h_svm_lru::config::ClusterConfig;
+use h_svm_lru::hdfs::{DataNode, DataNodeId, NameNode, Placement};
+use h_svm_lru::sim::{Engine, Resource, SimDuration, SimTime};
+use h_svm_lru::testkit::{forall, Config, Gen, VecU64Gen};
+use h_svm_lru::util::bytes::MB;
+use h_svm_lru::util::rng::Pcg64;
+
+#[test]
+fn engine_time_never_goes_backwards() {
+    let gen = VecU64Gen { min_len: 1, max_len: 200, max_value: 10_000 };
+    forall(&Config { cases: 50, ..Default::default() }, &gen, |delays| {
+        let mut eng: Engine<Vec<u64>> = Engine::new();
+        for &d in delays {
+            eng.schedule_at(SimTime(d), move |eng, log: &mut Vec<u64>| {
+                log.push(eng.now().micros());
+            });
+        }
+        let mut log = Vec::new();
+        eng.run(&mut log);
+        if log.len() != delays.len() {
+            return Err("event lost".into());
+        }
+        for w in log.windows(2) {
+            if w[0] > w[1] {
+                return Err(format!("time travel: {} then {}", w[0], w[1]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engine_fires_exactly_once_per_event() {
+    let gen = VecU64Gen { min_len: 0, max_len: 300, max_value: 1000 };
+    forall(&Config { cases: 40, ..Default::default() }, &gen, |delays| {
+        let mut eng: Engine<u64> = Engine::new();
+        for &d in delays {
+            eng.schedule_at(SimTime(d), |_, count: &mut u64| *count += 1);
+        }
+        let mut count = 0u64;
+        eng.run(&mut count);
+        if count != delays.len() as u64 {
+            return Err(format!("{count} fires for {} events", delays.len()));
+        }
+        if eng.pending() != 0 {
+            return Err("queue not drained".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn resource_serves_fifo_without_overlap() {
+    // On a single server, grants must be non-overlapping and ordered.
+    let gen = VecU64Gen { min_len: 1, max_len: 100, max_value: 500 };
+    forall(&Config { cases: 50, ..Default::default() }, &gen, |services| {
+        let mut disk = Resource::new("disk", 1);
+        let mut last_end = SimTime::ZERO;
+        let mut busy_sum = 0u64;
+        for (i, &svc) in services.iter().enumerate() {
+            let now = SimTime(i as u64); // requests arrive in time order
+            let (start, end) = disk.acquire(now, SimDuration(svc));
+            if start < now {
+                return Err("service started before request".into());
+            }
+            if start < last_end {
+                return Err("overlapping grants on a single server".into());
+            }
+            if (end - start) != SimDuration(svc) {
+                return Err("service time not honored".into());
+            }
+            last_end = end;
+            busy_sum += svc;
+        }
+        if disk.busy_time() != SimDuration(busy_sum) {
+            return Err("busy accounting broken".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn multi_server_capacity_is_respected() {
+    // With c servers and all requests at t=0, max concurrency == c and
+    // total completion time >= sum/c.
+    let gen = VecU64Gen { min_len: 1, max_len: 64, max_value: 200 };
+    forall(&Config { cases: 40, ..Default::default() }, &gen, |services| {
+        for servers in [1usize, 2, 4] {
+            let mut cpu = Resource::new("cpu", servers);
+            let mut intervals = Vec::new();
+            for &svc in services {
+                let (s, e) = cpu.acquire(SimTime::ZERO, SimDuration(svc + 1));
+                intervals.push((s.micros(), e.micros()));
+            }
+            // Check concurrency at every start point.
+            for &(t, _) in &intervals {
+                let overlapping = intervals
+                    .iter()
+                    .filter(|&&(s, e)| s <= t && t < e)
+                    .count();
+                if overlapping > servers {
+                    return Err(format!(
+                        "{overlapping} concurrent services on {servers} servers"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Generator for cluster shapes.
+struct ClusterGen;
+
+impl Gen for ClusterGen {
+    type Value = (usize, usize, u64);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        let nodes = 1 + rng.gen_range(12) as usize;
+        let repl = 1 + rng.gen_range((nodes as u64).min(4)) as usize;
+        let blocks = 1 + rng.gen_range(100);
+        (nodes, repl, blocks)
+    }
+}
+
+#[test]
+fn replica_placement_invariants() {
+    forall(&Config { cases: 60, ..Default::default() }, &ClusterGen, |&(nodes, repl, blocks)| {
+        let mut p = Placement::new(nodes, repl, Pcg64::new(1, 2));
+        for _ in 0..blocks {
+            let chosen = p.place();
+            if chosen.len() != repl {
+                return Err("wrong replica count".into());
+            }
+            let mut uniq: Vec<_> = chosen.clone();
+            uniq.sort();
+            uniq.dedup();
+            if uniq.len() != repl {
+                return Err("duplicate replica nodes".into());
+            }
+        }
+        let load = p.per_node_load();
+        let min = load.iter().min().unwrap();
+        let max = load.iter().max().unwrap();
+        if max - min > 1 {
+            return Err(format!("unbalanced placement: {load:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn namenode_cache_report_reconciliation_is_idempotent() {
+    let gen = VecU64Gen { min_len: 1, max_len: 40, max_value: 40 };
+    forall(&Config { cases: 40, ..Default::default() }, &gen, |cached_ids| {
+        let cfg = ClusterConfig {
+            datanodes: 3,
+            replication: 1,
+            block_size: 64 * MB,
+            ..Default::default()
+        };
+        let mut nn = NameNode::new(3, 1, Pcg64::new(9, 9));
+        let mut dns: Vec<DataNode> = (0..3)
+            .map(|i| DataNode::new(DataNodeId(i), cfg.cache_capacity_per_node))
+            .collect();
+        nn.register_file("f", 40 * 64 * MB, 64 * MB, h_svm_lru::hdfs::BlockKind::Input, &mut dns);
+        // Cache some blocks on their replica nodes (ground truth).
+        for &id in cached_ids {
+            let b = h_svm_lru::hdfs::BlockId(id % 40);
+            if let Some(&dn) = nn.replicas_of(b).first() {
+                dns[dn.0 as usize].cache_block(b, 64 * MB);
+            }
+        }
+        // Reports reconcile metadata; a second pass must be a no-op.
+        let mut first = 0;
+        for dn in &dns {
+            first += nn.apply_cache_report(dn.id, &dn.cache_report());
+        }
+        let mut second = 0;
+        for dn in &dns {
+            second += nn.apply_cache_report(dn.id, &dn.cache_report());
+        }
+        if second != 0 {
+            return Err(format!("reconciliation not idempotent: {first} then {second}"));
+        }
+        Ok(())
+    });
+}

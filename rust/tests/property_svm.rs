@@ -1,0 +1,225 @@
+//! Property tests over the SVM layer: SMO dual feasibility, feature
+//! normalization, labeling totality, dataset plumbing.
+
+use h_svm_lru::cache::CacheAffinity;
+use h_svm_lru::hdfs::{BlockId, BlockKind};
+use h_svm_lru::mapreduce::job::JobStatus;
+use h_svm_lru::mapreduce::task::TaskStatus;
+use h_svm_lru::sim::SimTime;
+use h_svm_lru::svm::dataset::{pad, Dataset};
+use h_svm_lru::svm::features::{BlockStatsTracker, N_FEATURES};
+use h_svm_lru::svm::kernel::{KernelKind, KernelParams};
+use h_svm_lru::svm::labeling::label;
+use h_svm_lru::svm::smo::{train, SmoConfig};
+use h_svm_lru::testkit::{forall, Config, Gen};
+use h_svm_lru::util::bytes::MB;
+use h_svm_lru::util::rng::Pcg64;
+
+/// Generator: random two-class datasets with varying separation.
+struct DatasetGen;
+
+impl Gen for DatasetGen {
+    type Value = (Vec<([f32; N_FEATURES], bool)>, u64);
+
+    fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+        let n_per = 5 + rng.gen_range(40) as usize;
+        let gap = rng.gen_f64_range(0.05, 0.5);
+        let sigma = rng.gen_f64_range(0.02, 0.15);
+        let mut rows = Vec::new();
+        for _ in 0..n_per {
+            let mut a = [0.0f32; N_FEATURES];
+            let mut b = [0.0f32; N_FEATURES];
+            for k in 0..N_FEATURES {
+                a[k] = rng.gen_normal(0.5 - gap, sigma) as f32;
+                b[k] = rng.gen_normal(0.5 + gap, sigma) as f32;
+            }
+            rows.push((a, true));
+            rows.push((b, false));
+        }
+        (rows, rng.next_u64())
+    }
+
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let (rows, seed) = value;
+        if rows.len() > 4 {
+            vec![(rows[..rows.len() / 2].to_vec(), *seed)]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[test]
+fn smo_dual_feasibility_on_random_datasets() {
+    forall(&Config { cases: 25, ..Default::default() }, &DatasetGen, |(rows, _)| {
+        let mut ds = Dataset::new();
+        for (x, y) in rows {
+            ds.push(*x, *y);
+        }
+        let cfg = SmoConfig::default();
+        for kind in [KernelKind::Linear, KernelKind::Rbf] {
+            let model = train(&ds, KernelParams::new(kind), &cfg);
+            for &a in &model.alpha {
+                if !(-1e-5..=cfg.c + 1e-5).contains(&a) {
+                    return Err(format!("{kind:?}: alpha {a} outside [0, C]"));
+                }
+            }
+            if !model.bias.is_finite() {
+                return Err(format!("{kind:?}: non-finite bias"));
+            }
+            // Decisions must be finite for arbitrary queries.
+            let s = model.decision(&[0.5; N_FEATURES]);
+            if !s.is_finite() {
+                return Err(format!("{kind:?}: non-finite decision {s}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn smo_learns_separable_data() {
+    forall(&Config { cases: 15, seed: 0x51, ..Default::default() }, &DatasetGen, |(rows, _)| {
+        // Only check well-separated datasets (gap baked into generator can
+        // be small; filter by empirical margin).
+        let mean_pos: f32 = rows.iter().filter(|(_, y)| *y).map(|(x, _)| x[0]).sum::<f32>()
+            / rows.iter().filter(|(_, y)| *y).count() as f32;
+        let mean_neg: f32 = rows.iter().filter(|(_, y)| !*y).map(|(x, _)| x[0]).sum::<f32>()
+            / rows.iter().filter(|(_, y)| !*y).count() as f32;
+        if (mean_pos - mean_neg).abs() < 0.3 {
+            return Ok(()); // not separable enough to assert accuracy
+        }
+        let mut ds = Dataset::new();
+        for (x, y) in rows {
+            ds.push(*x, *y);
+        }
+        let model = train(&ds, KernelParams::new(KernelKind::Rbf), &SmoConfig::default());
+        let acc = rows
+            .iter()
+            .filter(|(x, y)| model.predict(x) == *y)
+            .count() as f64
+            / rows.len() as f64;
+        if acc < 0.9 {
+            return Err(format!("separable data but acc={acc}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn features_always_normalized() {
+    // Whatever the access history, every feature stays in [0, 1].
+    struct HistoryGen;
+    impl Gen for HistoryGen {
+        type Value = Vec<(u64, u64, u64)>; // (block, app, time_ms)
+        fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+            let n = rng.gen_range(200) as usize;
+            let mut t = 0u64;
+            (0..n)
+                .map(|_| {
+                    t += rng.gen_range(10_000);
+                    (rng.gen_range(20), rng.gen_range(6), t)
+                })
+                .collect()
+        }
+    }
+    forall(&Config { cases: 40, ..Default::default() }, &HistoryGen, |history| {
+        let mut tracker = BlockStatsTracker::new(128 * MB);
+        for &(block, app, t_ms) in history {
+            let now = SimTime(t_ms * 1000);
+            for kind in [BlockKind::Input, BlockKind::Intermediate, BlockKind::Output] {
+                for aff in [CacheAffinity::Low, CacheAffinity::Medium, CacheAffinity::High] {
+                    let f = tracker.features(BlockId(block), kind, 64 * MB, aff, now);
+                    for (i, v) in f.iter().enumerate() {
+                        if !(0.0..=1.0).contains(v) || !v.is_finite() {
+                            return Err(format!("feature {i} = {v} out of [0,1]"));
+                        }
+                    }
+                }
+            }
+            tracker.record_access(BlockId(block), app, now);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn labeling_is_total_and_consistent() {
+    // Every (job, map, reduce) state combination must label without panic,
+    // and terminal/failed jobs always produce (false, false).
+    let jobs = [
+        JobStatus::New,
+        JobStatus::Initiated,
+        JobStatus::Running,
+        JobStatus::Succeeded,
+        JobStatus::Failed,
+        JobStatus::Killed,
+        JobStatus::Error,
+    ];
+    let tasks = [
+        TaskStatus::New,
+        TaskStatus::Scheduled,
+        TaskStatus::Running,
+        TaskStatus::Succeeded,
+        TaskStatus::Failed,
+        TaskStatus::Killed,
+    ];
+    for job in jobs {
+        for map in tasks {
+            for reduce in std::iter::once(None).chain(tasks.into_iter().map(Some)) {
+                let l = label(job, map, reduce);
+                if matches!(job, JobStatus::Failed | JobStatus::Killed | JobStatus::Error)
+                    && (l.map_input_reused || l.reduce_input_reused)
+                {
+                    panic!("failed job must not mark reuse: {job:?} {map:?} {reduce:?}");
+                }
+                if job == JobStatus::Succeeded && (l.map_input_reused || l.reduce_input_reused) {
+                    panic!("completed job must not mark reuse (Table 4 row 10)");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn padding_roundtrip_preserves_rows() {
+    struct SizeGen;
+    impl Gen for SizeGen {
+        type Value = (usize, usize);
+        fn generate(&self, rng: &mut Pcg64) -> Self::Value {
+            (rng.gen_range(300) as usize, 1 + rng.gen_range(300) as usize)
+        }
+    }
+    forall(&Config { cases: 60, ..Default::default() }, &SizeGen, |&(rows, pad_to)| {
+        let mut ds = Dataset::new();
+        for i in 0..rows {
+            ds.push([i as f32 / 300.0; N_FEATURES], i % 3 == 0);
+        }
+        let p = pad(&ds, pad_to);
+        let expect_real = rows.min(pad_to);
+        if p.n_real != expect_real {
+            return Err(format!("n_real {} != {expect_real}", p.n_real));
+        }
+        if p.mask.iter().map(|&m| m as usize).sum::<usize>() != expect_real {
+            return Err("mask sum mismatch".into());
+        }
+        // Real rows round-trip bit-exactly.
+        for i in 0..expect_real {
+            let row = &p.x[i * N_FEATURES..(i + 1) * N_FEATURES];
+            if row != ds.x[i] {
+                return Err(format!("row {i} corrupted"));
+            }
+            let want_y = ds.y[i];
+            if p.y[i] != want_y {
+                return Err(format!("label {i} corrupted"));
+            }
+        }
+        // Padding rows are inert.
+        for i in expect_real..pad_to {
+            if p.y[i] != 0.0 || p.mask[i] != 0.0 {
+                return Err("padding not neutral".into());
+            }
+        }
+        Ok(())
+    });
+}
