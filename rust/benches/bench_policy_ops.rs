@@ -4,9 +4,51 @@
 
 use h_svm_lru::bench_support::{banner, black_box, Bencher};
 use h_svm_lru::cache::registry::{make_policy, POLICY_NAMES};
+use h_svm_lru::cache::sharded::{shard_of, ShardedCache};
 use h_svm_lru::cache::{AccessContext, BlockCache};
 use h_svm_lru::hdfs::BlockId;
+use h_svm_lru::sim::parallel::run_sharded;
 use h_svm_lru::sim::SimTime;
+
+/// Baseline perf trajectory point: 1-shard vs 8-shard throughput with 8
+/// worker threads hammering the same front. One shard serializes every
+/// access on a single lock; eight shards give each worker a private lock,
+/// so the ratio is the headroom sharding buys future scaling PRs.
+fn bench_sharded() {
+    banner("sharded front — 8 workers, 1 vs 8 shards (lru, 64-block cache)");
+    const OPS_PER_WORKER: u64 = 10_000;
+    const WORKERS: usize = 8;
+    const WORKING_SET: u64 = 256;
+    let bench = Bencher::new(2, 10);
+    let mut throughput = Vec::new();
+    for shards in [1usize, 8] {
+        let res = bench.run_per_op(
+            &format!("lru x{shards} shard(s), {WORKERS} threads"),
+            OPS_PER_WORKER * WORKERS as u64,
+            || {
+                let cache = ShardedCache::from_registry("lru", shards, 64).unwrap();
+                run_sharded(WORKERS, |w| {
+                    // Each worker walks its own slice of the keyspace so the
+                    // stream is identical regardless of the shard count.
+                    for t in 0..OPS_PER_WORKER {
+                        let b = BlockId((w as u64 * 7919 + t * 31) % WORKING_SET);
+                        let ctx = AccessContext::simple(SimTime(t), 1)
+                            .with_prediction(shard_of(b, 2) == 0);
+                        black_box(cache.access_or_insert(b, &ctx));
+                    }
+                });
+            },
+        );
+        println!("{}", res.report());
+        throughput.push((shards, res.mean));
+    }
+    let one = throughput[0].1.as_secs_f64();
+    let eight = throughput[1].1.as_secs_f64();
+    println!(
+        "\n8-shard speedup over 1-shard: {:.2}x (contended lock vs per-shard locks)",
+        one / eight.max(1e-12)
+    );
+}
 
 fn main() {
     banner("policy micro ops — mixed access workload, 64-block cache");
@@ -35,4 +77,6 @@ fn main() {
         "\nh-svm-lru / lru overhead: {:.2}x",
         hsvm.as_secs_f64() / lru.as_secs_f64()
     );
+
+    bench_sharded();
 }

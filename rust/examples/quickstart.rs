@@ -1,0 +1,55 @@
+//! 30-second tour (no AOT artifacts needed): replay the Fig 3 pollution
+//! trace at one cache size and print LRU vs H-SVM-LRU hit ratios plus
+//! classifier stats. CI runs this as a smoke test for the user-facing API.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use h_svm_lru::config::SvmConfig;
+use h_svm_lru::experiments::common::provision_fig3_cluster;
+use h_svm_lru::experiments::{make_coordinator, replay_trace_two_pass, Scenario};
+use h_svm_lru::util::bytes::MB;
+use h_svm_lru::workload::fig3_trace;
+
+fn main() -> Result<()> {
+    let svm_cfg = SvmConfig { backend: "rust".into(), ..Default::default() };
+    let seed = 20230101;
+    println!("h-svm-lru quickstart: 2GB input, 8-block cache, 64MB blocks");
+    println!("svm backend: {} / kernel {}", svm_cfg.backend, svm_cfg.kernel);
+    let trace = fig3_trace(64 * MB, seed);
+    println!("trace: {} requests over 32 hot blocks + pollution stream", trace.len());
+
+    let mut ratios = Vec::new();
+    for scenario in [Scenario::Policy("lru".to_string()), Scenario::SvmLru] {
+        let (_cfg, cluster) = provision_fig3_cluster(64 * MB, 8, seed);
+        let mut coord = make_coordinator(cluster, &scenario, &svm_cfg)?;
+        let hit_ratio = replay_trace_two_pass(&mut coord, &trace)?;
+        println!(
+            "{:<12} hit ratio {:.4}   (hits {} / misses {} / evictions {})",
+            scenario.label(),
+            hit_ratio,
+            coord.stats.hits,
+            coord.stats.misses,
+            coord.stats.evictions,
+        );
+        if scenario == Scenario::SvmLru {
+            let bs = coord.batcher_stats();
+            println!(
+                "  classifier: {} trainings, {} queries, {} class-cache hits, {} backend calls",
+                coord.pipeline.trainings, bs.queries, bs.class_cache_hits, bs.backend_calls
+            );
+        }
+        ratios.push(hit_ratio);
+    }
+    anyhow::ensure!(
+        ratios[1] >= ratios[0],
+        "H-SVM-LRU ({:.4}) must not lose to LRU ({:.4}) on the pollution trace",
+        ratios[1],
+        ratios[0]
+    );
+    println!("\nOK: H-SVM-LRU dominates LRU on the cache-pollution trace.");
+    Ok(())
+}

@@ -32,8 +32,11 @@ pub mod lfu;
 pub mod lfu_f;
 pub mod lru;
 pub mod registry;
+pub mod sharded;
 pub mod slru_k;
 pub mod wsclock;
+
+pub use sharded::{shard_of, ShardStats, ShardedCache};
 
 use crate::util::fasthash::IdHashMap;
 

@@ -1,0 +1,375 @@
+//! Sharded concurrent cache front.
+//!
+//! A `ShardedCache` partitions the block id space across N independently
+//! locked shards, each a full [`BlockCache`] wrapping its own
+//! [`CachePolicy`] instance from the registry (LRU, H-SVM-LRU, ARC, LFU,
+//! …). Blocks are routed with the same Fibonacci-mix hash the rest of the
+//! crate uses for id keys ([`crate::util::fasthash`]), so the sequential
+//! ids the NameNode hands out spread uniformly.
+//!
+//! Design rules:
+//!
+//! * **shards = 1 is the identity.** Every block maps to shard 0 and the
+//!   wrapped policy sees exactly the request stream a bare `BlockCache`
+//!   would — hit/miss/eviction parity is property-tested in
+//!   rust/tests/property_sharded.rs.
+//! * **No cross-shard locking.** Each access touches exactly one shard's
+//!   `Mutex`; per-shard [`ShardStats`] accumulate under that same lock and
+//!   are merged on demand, so shard workers on `std::thread::scope` never
+//!   contend on a shared counter (see `sim::parallel` and
+//!   `experiments::sharded_replay`).
+//! * **Exact capacity split.** Total capacity divides across shards with
+//!   the remainder going to the first shards, so the shard capacities sum
+//!   to the configured total and the multi-shard occupancy invariant
+//!   `used() <= capacity()` holds by construction.
+
+use std::hash::Hasher;
+use std::sync::Mutex;
+
+use crate::hdfs::BlockId;
+use crate::util::fasthash::IdHasher;
+
+use super::registry::make_policy;
+use super::{AccessContext, AccessOutcome, BlockCache, CachePolicy};
+
+/// Route a block to its shard: high bits of the Fibonacci id mix, so
+/// sequential NameNode ids land on different shards than a plain modulo
+/// would give and the distribution stays uniform for any shard count.
+pub fn shard_of(block: BlockId, n_shards: usize) -> usize {
+    if n_shards <= 1 {
+        return 0;
+    }
+    let mut h = IdHasher::default();
+    h.write_u64(block.0);
+    ((h.finish() >> 32) as usize) % n_shards
+}
+
+/// Per-shard access counters; merged across shards (and across DataNodes by
+/// the coordinator) with [`ShardStats::merge`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    pub requests: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub insertions: u64,
+}
+
+impl ShardStats {
+    pub fn merge(&mut self, other: &ShardStats) {
+        self.requests += other.requests;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.insertions += other.insertions;
+    }
+
+    pub fn hit_ratio(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.requests as f64
+        }
+    }
+}
+
+struct Shard {
+    cache: BlockCache,
+    stats: ShardStats,
+}
+
+/// N independently locked [`BlockCache`] shards behind one front.
+///
+/// All methods take `&self`: the per-shard `Mutex` provides interior
+/// mutability, which is what lets trace replay share one `ShardedCache`
+/// across scoped worker threads without `unsafe`.
+pub struct ShardedCache {
+    shards: Vec<Mutex<Shard>>,
+    capacity: u64,
+}
+
+impl ShardedCache {
+    /// Build from one policy instance per shard (the shard count is
+    /// `policies.len()`). Total capacity is split evenly with the remainder
+    /// on the first shards so the per-shard capacities sum exactly.
+    pub fn new(policies: Vec<Box<dyn CachePolicy>>, total_capacity: u64) -> Self {
+        assert!(!policies.is_empty(), "sharded cache needs at least one shard");
+        let n = policies.len() as u64;
+        let base = total_capacity / n;
+        let rem = total_capacity % n;
+        let shards = policies
+            .into_iter()
+            .enumerate()
+            .map(|(i, policy)| {
+                let cap = base + u64::from((i as u64) < rem);
+                Mutex::new(Shard {
+                    cache: BlockCache::new(policy, cap),
+                    stats: ShardStats::default(),
+                })
+            })
+            .collect();
+        ShardedCache { shards, capacity: total_capacity }
+    }
+
+    /// Build `n_shards` shards of the registry policy `name` (None for an
+    /// unknown policy name).
+    pub fn from_registry(name: &str, n_shards: usize, total_capacity: u64) -> Option<Self> {
+        let policies = (0..n_shards.max(1))
+            .map(|_| make_policy(name))
+            .collect::<Option<Vec<_>>>()?;
+        Some(Self::new(policies, total_capacity))
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    /// Shard index this block routes to.
+    pub fn shard_of(&self, block: BlockId) -> usize {
+        shard_of(block, self.shards.len())
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.shards[0].lock().expect("shard poisoned").cache.policy_name()
+    }
+
+    /// The full access path on the owning shard: hit (policy notified) or
+    /// miss + insertion with evictions as needed. Stats accumulate on the
+    /// same shard under the same lock.
+    pub fn access_or_insert(&self, block: BlockId, ctx: &AccessContext) -> AccessOutcome {
+        let mut shard = self.shard(block);
+        let outcome = shard.cache.access_or_insert(block, ctx);
+        shard.stats.requests += 1;
+        if outcome.hit {
+            shard.stats.hits += 1;
+        } else {
+            shard.stats.misses += 1;
+            shard.stats.insertions += u64::from(outcome.inserted);
+        }
+        shard.stats.evictions += outcome.evicted.len() as u64;
+        outcome
+    }
+
+    /// Insert a missing block on its shard, evicting per policy until it
+    /// fits. Returns the evicted blocks (all from the same shard). Counts
+    /// as a missed request, so `stats().hit_ratio()` stays meaningful for
+    /// callers (like the coordinator) that route misses here instead of
+    /// through `access_or_insert`.
+    pub fn insert(&self, block: BlockId, ctx: &AccessContext) -> Vec<BlockId> {
+        let mut shard = self.shard(block);
+        let evicted = shard.cache.insert(block, ctx);
+        shard.stats.requests += 1;
+        shard.stats.misses += 1;
+        shard.stats.evictions += evicted.len() as u64;
+        shard.stats.insertions += u64::from(shard.cache.contains(block));
+        evicted
+    }
+
+    /// Externally remove a block (user uncache directive).
+    pub fn remove(&self, block: BlockId) -> bool {
+        self.shard(block).cache.remove(block)
+    }
+
+    pub fn contains(&self, block: BlockId) -> bool {
+        self.shard(block).cache.contains(block)
+    }
+
+    /// Bytes cached across all shards.
+    pub fn used(&self) -> u64 {
+        self.fold(0u64, |acc, s| acc + s.cache.used())
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity - self.used()
+    }
+
+    /// Blocks cached across all shards.
+    pub fn len(&self) -> usize {
+        self.fold(0usize, |acc, s| acc + s.cache.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// All cached blocks, merged across shards and sorted by id.
+    pub fn cached_blocks(&self) -> Vec<BlockId> {
+        let mut all = self.fold(Vec::new(), |mut acc, s| {
+            acc.extend(s.cache.cached_blocks());
+            acc
+        });
+        all.sort_unstable();
+        all
+    }
+
+    /// Merged access counters across all shards.
+    pub fn stats(&self) -> ShardStats {
+        self.fold(ShardStats::default(), |mut acc, s| {
+            acc.merge(&s.stats);
+            acc
+        })
+    }
+
+    /// Per-shard counters, in shard order.
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("shard poisoned").stats)
+            .collect()
+    }
+
+    /// Counters of one shard.
+    pub fn stats_of(&self, shard: usize) -> ShardStats {
+        self.shards[shard].lock().expect("shard poisoned").stats
+    }
+
+    /// Zero the access counters on every shard (cached contents stay).
+    pub fn reset_stats(&self) {
+        for s in &self.shards {
+            s.lock().expect("shard poisoned").stats = ShardStats::default();
+        }
+    }
+
+    fn shard(&self, block: BlockId) -> std::sync::MutexGuard<'_, Shard> {
+        self.shards[self.shard_of(block)].lock().expect("shard poisoned")
+    }
+
+    fn fold<T, F: FnMut(T, &Shard) -> T>(&self, init: T, mut f: F) -> T {
+        let mut acc = init;
+        for s in &self.shards {
+            let guard = s.lock().expect("shard poisoned");
+            acc = f(acc, &guard);
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lru::Lru;
+    use super::*;
+    use crate::sim::SimTime;
+
+    fn ctx(t: u64, size: u64) -> AccessContext {
+        AccessContext::simple(SimTime(t), size)
+    }
+
+    fn lru_shards(n: usize) -> Vec<Box<dyn CachePolicy>> {
+        (0..n).map(|_| Box::new(Lru::new()) as Box<dyn CachePolicy>).collect()
+    }
+
+    #[test]
+    fn single_shard_matches_bare_block_cache() {
+        let mut bare = BlockCache::new(Box::new(Lru::new()), 3);
+        let sharded = ShardedCache::new(lru_shards(1), 3);
+        for t in 0..200u64 {
+            let b = BlockId((t * 7 + t % 5) % 11);
+            let c = ctx(t, 1);
+            let a = bare.access_or_insert(b, &c);
+            let s = sharded.access_or_insert(b, &c);
+            assert_eq!(a, s, "divergence at t={t}");
+        }
+        assert_eq!(bare.cached_blocks(), sharded.cached_blocks());
+        assert_eq!(bare.used(), sharded.used());
+    }
+
+    #[test]
+    fn capacity_splits_exactly() {
+        let sharded = ShardedCache::new(lru_shards(3), 10);
+        assert_eq!(sharded.capacity(), 10);
+        // Fill the whole keyspace; occupancy can never exceed the total.
+        for t in 0..500u64 {
+            sharded.access_or_insert(BlockId(t), &ctx(t, 1));
+            assert!(sharded.used() <= sharded.capacity());
+        }
+        let stats = sharded.stats();
+        assert_eq!(stats.requests, 500);
+        assert_eq!(stats.hits + stats.misses, stats.requests);
+        // Conservation: what came in and never left is still cached.
+        assert_eq!(stats.insertions - stats.evictions, sharded.len() as u64);
+    }
+
+    #[test]
+    fn routing_is_stable_and_partitioned() {
+        let sharded = ShardedCache::new(lru_shards(4), 64);
+        for id in 0..256u64 {
+            let b = BlockId(id);
+            let s = sharded.shard_of(b);
+            assert_eq!(s, shard_of(b, 4));
+            assert!(s < 4);
+            sharded.access_or_insert(b, &ctx(id, 1));
+        }
+        // Fibonacci mix must actually spread sequential ids.
+        let per_shard = sharded.shard_stats();
+        assert!(per_shard.iter().all(|s| s.requests > 0), "{per_shard:?}");
+    }
+
+    #[test]
+    fn stats_merge_counts_all_shards() {
+        let sharded = ShardedCache::new(lru_shards(2), 4);
+        for t in 0..10u64 {
+            sharded.access_or_insert(BlockId(t % 3), &ctx(t, 1));
+        }
+        let merged = sharded.stats();
+        let by_hand = sharded
+            .shard_stats()
+            .iter()
+            .fold(ShardStats::default(), |mut acc, s| {
+                acc.merge(s);
+                acc
+            });
+        assert_eq!(merged, by_hand);
+        sharded.reset_stats();
+        assert_eq!(sharded.stats(), ShardStats::default());
+        assert!(!sharded.is_empty(), "reset_stats must keep contents");
+    }
+
+    #[test]
+    fn remove_and_contains_route_consistently() {
+        let sharded = ShardedCache::new(lru_shards(4), 16);
+        sharded.access_or_insert(BlockId(9), &ctx(0, 1));
+        assert!(sharded.contains(BlockId(9)));
+        assert!(sharded.remove(BlockId(9)));
+        assert!(!sharded.remove(BlockId(9)));
+        assert!(!sharded.contains(BlockId(9)));
+        assert_eq!(sharded.used(), 0);
+    }
+
+    #[test]
+    fn registry_constructor_rejects_unknown_policy() {
+        assert!(ShardedCache::from_registry("nonsense", 2, 8).is_none());
+        let c = ShardedCache::from_registry("h-svm-lru", 2, 8).unwrap();
+        assert_eq!(c.n_shards(), 2);
+        assert_eq!(c.policy_name(), "h-svm-lru");
+    }
+
+    #[test]
+    fn concurrent_shard_workers_do_not_interfere() {
+        // Each worker replays only blocks that route to its shard; totals
+        // must equal the sequential sum (the no-data-races smoke test).
+        let n = 4usize;
+        let sharded = ShardedCache::new(lru_shards(n), 8 * n as u64);
+        let ids: Vec<BlockId> = (0..400u64).map(BlockId).collect();
+        std::thread::scope(|scope| {
+            for w in 0..n {
+                let sharded = &sharded;
+                let ids = &ids;
+                scope.spawn(move || {
+                    for (t, &b) in ids.iter().enumerate() {
+                        if shard_of(b, n) == w {
+                            sharded.access_or_insert(b, &ctx(t as u64, 1));
+                        }
+                    }
+                });
+            }
+        });
+        let stats = sharded.stats();
+        assert_eq!(stats.requests, 400);
+        assert_eq!(stats.hits + stats.misses, 400);
+        assert!(sharded.used() <= sharded.capacity());
+    }
+}

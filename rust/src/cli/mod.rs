@@ -59,6 +59,7 @@ impl Cli {
             "--policy",
             "--repetitions",
             "--input-gb",
+            "--shards",
         ];
         let mut i = 0;
         while i < args.len() {
@@ -99,6 +100,22 @@ impl Cli {
         match self.flag("seed") {
             Some(s) => s.parse().context("bad --seed"),
             None => Ok(20230101),
+        }
+    }
+
+    /// Cache shard count (`--shards`), defaulting to `fallback`. Bounded:
+    /// each shard is a policy instance and (during replay) a worker thread.
+    pub fn shards(&self, fallback: usize) -> Result<usize> {
+        const MAX_SHARDS: usize = 1024;
+        match self.flag("shards") {
+            Some(s) => {
+                let v: usize = s.parse().context("bad --shards")?;
+                if !(1..=MAX_SHARDS).contains(&v) {
+                    bail!("--shards must be in 1..={MAX_SHARDS}, got {v}");
+                }
+                Ok(v)
+            }
+            None => Ok(fallback),
         }
     }
 
@@ -151,7 +168,9 @@ SUBCOMMANDS
   table5       SVM kernel comparison [--cv for k-fold]  (paper Table 5)
   policies     all-policy ablation over the Fig 3 trace (Table 1 survey)
   simulate     DES cluster simulation: Poisson arrivals, heartbeats,
-               [--policy P] [--failures] [--prefetch]
+               [--policy P] [--failures] [--prefetch] [--shards N]
+  sharded      shard-parallel trace replay sweep (1..N shards on scoped
+               threads) [--policy P] [--shards N] [--cache-blocks N]
   all          every experiment in sequence
 
 FLAGS
@@ -160,7 +179,8 @@ FLAGS
   --kernel K               linear|rbf|sigmoid (default: rbf)
   --seed N                 simulation seed
   --scale F                workload scale for fig5/fig6 (default 0.05)
-  --cache-blocks N         cache size for `policies` (default 8)
+  --cache-blocks N         cache size for `policies`/`sharded` (default 8)
+  --shards N               cache shards per node / replay workers
   --csv                    CSV output
   --config FILE            TOML config file
   --log-level L            off|error|warn|info|debug|trace
@@ -203,6 +223,16 @@ mod tests {
         assert!(cli.scale().is_err());
         let cli = parse(&["fig5"]);
         assert!(cli.scale().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn shards_flag_parses_and_validates() {
+        let cli = parse(&["sharded", "--shards", "8"]);
+        assert_eq!(cli.shards(1).unwrap(), 8);
+        assert_eq!(parse(&["sharded"]).shards(4).unwrap(), 4);
+        assert!(parse(&["sharded", "--shards", "0"]).shards(1).is_err());
+        assert!(parse(&["sharded", "--shards", "x"]).shards(1).is_err());
+        assert!(parse(&["sharded", "--shards", "200000"]).shards(1).is_err());
     }
 
     #[test]

@@ -64,6 +64,9 @@ pub struct ClusterConfig {
     pub block_size: u64,
     /// Off-heap cache capacity per DataNode in bytes (paper: 1.5 GB).
     pub cache_capacity_per_node: u64,
+    /// Independently locked cache shards per DataNode (1 = the paper's
+    /// single LRU stack; more enables concurrent shard replay).
+    pub cache_shards: usize,
     /// Map container memory (mapreduce.map.memory.mb) — bounds map slots.
     pub map_memory_mb: u64,
     /// Reduce container memory (mapreduce.reduce.memory.mb).
@@ -90,6 +93,7 @@ impl Default for ClusterConfig {
             replication: 3,
             block_size: 128 * MB,
             cache_capacity_per_node: (1.5 * GB as f64) as u64,
+            cache_shards: 1,
             map_memory_mb: 1024,
             reduce_memory_mb: 2048,
             node_memory_mb: 16 * 1024,
@@ -136,6 +140,9 @@ impl ClusterConfig {
         if self.block_size == 0 {
             bail!("block_size must be > 0");
         }
+        if self.cache_shards == 0 {
+            bail!("cache_shards must be > 0");
+        }
         if self.disk.read_bandwidth_bps <= 0.0
             || self.network.bandwidth_bps <= 0.0
             || self.memory.read_bandwidth_bps <= 0.0
@@ -163,6 +170,12 @@ impl ClusterConfig {
         if let Some(v) = doc.get_str("cluster.cache_capacity_per_node") {
             self.cache_capacity_per_node = bytes::parse_bytes(v)
                 .with_context(|| format!("bad cluster.cache_capacity_per_node {v:?}"))?;
+        }
+        if let Some(v) = doc.get_i64("cluster.cache_shards") {
+            if v <= 0 {
+                bail!("cluster.cache_shards must be positive, got {v}");
+            }
+            self.cache_shards = v as usize;
         }
         if let Some(v) = doc.get_i64("cluster.map_memory_mb") {
             self.map_memory_mb = v as u64;
@@ -338,6 +351,20 @@ kernel = "linear"
         assert!(s.validate().is_err());
         let s = SvmConfig { kernel: "poly".into(), ..Default::default() };
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn cache_shards_validated_and_overridable() {
+        let c = ClusterConfig { cache_shards: 0, ..Default::default() };
+        assert!(c.validate().is_err());
+        assert_eq!(ClusterConfig::default().cache_shards, 1);
+        let doc = toml::Document::parse("[cluster]\ncache_shards = 8").unwrap();
+        let mut c = ClusterConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.cache_shards, 8);
+        // A negative count must be a config error, not a usize wraparound.
+        let doc = toml::Document::parse("[cluster]\ncache_shards = -1").unwrap();
+        assert!(ClusterConfig::default().apply_toml(&doc).is_err());
     }
 
     #[test]

@@ -9,6 +9,8 @@
 //! | `fig6`    | Fig 6: per-app normalized run time under H-SVM-LRU |
 //! | `table5`  | Table 5: kernel-function confusion-matrix comparison |
 //! | `policies`| Table 1 ablation: all 13 policies on one trace |
+//! | `sharded_replay` | shard-parallel trace replay on scoped workers |
+//! | `simulate`| DES cluster scenario: arrivals, heartbeats, retraining |
 
 pub mod common;
 pub mod fig3;
@@ -16,6 +18,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod policies;
+pub mod sharded_replay;
 pub mod simulate;
 pub mod table5;
 pub mod table7;

@@ -1,0 +1,264 @@
+//! Shard-parallel trace replay: the Fig 3 request stream partitioned across
+//! the shards of a [`ShardedCache`] and replayed on `std::thread::scope`
+//! workers — the concurrent-workload harness behind `repro sharded` and the
+//! `bench_sharded` throughput case.
+//!
+//! Two-phase design keeps the batched SVM inference per-shard-safe:
+//!
+//! 1. **Classify (single-threaded).** Walk the trace once, training the
+//!    in-process SMO backend on the request-awareness labels (§5.1
+//!    scenario 1) and batch-scoring every request's feature vector. The
+//!    backend is never shared across threads — predictions come out as a
+//!    plain `Vec<Option<bool>>`.
+//! 2. **Replay (shard-parallel).** Partition request indices by
+//!    `shard_of(block, n)` and hand each shard's slice — in original trace
+//!    order — to its own scoped worker. Workers touch only their shard's
+//!    lock, so with one shard the replay is bit-identical to the sequential
+//!    path (property-tested in rust/tests/property_sharded.rs).
+
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cache::sharded::{shard_of, ShardStats, ShardedCache};
+use crate::cache::AccessContext;
+use crate::runtime::{RustBackend, SvmBackend};
+use crate::sim::parallel::run_sharded;
+use crate::svm::features::BlockStatsTracker;
+use crate::svm::KernelKind;
+use crate::util::table::{fmt_f, Table};
+use crate::workload::BlockRequest;
+
+/// Outcome of one shard-parallel replay.
+#[derive(Debug, Clone)]
+pub struct ShardedReplayReport {
+    pub policy: String,
+    pub shards: usize,
+    /// Merged counters (hit ratio of the whole replay).
+    pub stats: ShardStats,
+    /// Per-shard counters, in shard order.
+    pub per_shard: Vec<ShardStats>,
+    /// Wall-clock time of the parallel replay phase only.
+    pub wall: Duration,
+}
+
+impl ShardedReplayReport {
+    pub fn requests_per_sec(&self) -> f64 {
+        self.stats.requests as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Phase 1: single-threaded classifier pass. Trains the SMO fallback on the
+/// trace's request-awareness labels, then batch-scores every request's
+/// feature vector (chunks of `batch`). Returns one prediction per request;
+/// all `None` when the trace is single-class (classifier untrainable).
+pub fn classify_trace(
+    trace: &[BlockRequest],
+    kernel: KernelKind,
+    batch: usize,
+) -> Result<Vec<Option<bool>>> {
+    let mut backend = RustBackend::new(kernel);
+    let block_size = trace.iter().map(|r| r.size).max().unwrap_or(1);
+
+    // Training pass: features at access time, labeled by the ground truth.
+    let mut tracker = BlockStatsTracker::new(block_size);
+    let mut dataset = crate::svm::Dataset::new();
+    let mut features = Vec::with_capacity(trace.len());
+    for req in trace {
+        let f = tracker.features(req.block, req.kind, req.size, req.affinity, req.time);
+        dataset.push(f, req.reused_later);
+        features.push(f);
+        tracker.record_access(req.block, 0, req.time);
+    }
+    if dataset.n_positive() == 0 || dataset.n_positive() == dataset.len() {
+        return Ok(vec![None; trace.len()]);
+    }
+    backend.train(&dataset).context("training classifier pass")?;
+
+    // Scoring pass: batch through the backend, never from a worker thread.
+    let mut classes = Vec::with_capacity(trace.len());
+    for chunk in features.chunks(batch.max(1)) {
+        let scores = backend
+            .decision_batch(chunk)
+            .context("scoring classifier pass")?;
+        classes.extend(scores.into_iter().map(|s| Some(s > 0.0)));
+    }
+    Ok(classes)
+}
+
+/// Phase 2: replay `trace` against `cache`, one scoped worker per shard.
+/// `classes[i]` is the prediction attached to request `i` (pass an empty
+/// slice to replay without predictions). Each worker sees its shard's
+/// requests in original trace order.
+pub fn replay_on_shards(
+    cache: &ShardedCache,
+    trace: &[BlockRequest],
+    classes: &[Option<bool>],
+) -> Vec<ShardStats> {
+    let n = cache.n_shards();
+    let mut partitions: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, req) in trace.iter().enumerate() {
+        partitions[shard_of(req.block, n)].push(i);
+    }
+    run_sharded(n, |w| {
+        for &i in &partitions[w] {
+            let req = &trace[i];
+            let ctx = AccessContext {
+                time: req.time,
+                size: req.size,
+                kind: req.kind,
+                file: req.block.0, // trace blocks are their own files
+                file_width: 1,
+                file_complete: false,
+                affinity: req.affinity,
+                predicted_reuse: classes.get(i).copied().flatten(),
+            };
+            cache.access_or_insert(req.block, &ctx);
+        }
+        cache.stats_of(w)
+    })
+}
+
+/// Replay `trace` with precomputed predictions on a fresh `shards`-way
+/// cache and report merged + per-shard stats with the replay wall time.
+pub fn run_with_classes(
+    policy: &str,
+    shards: usize,
+    capacity: u64,
+    trace: &[BlockRequest],
+    classes: &[Option<bool>],
+) -> Result<ShardedReplayReport> {
+    let cache = ShardedCache::from_registry(policy, shards, capacity)
+        .with_context(|| format!("unknown policy {policy:?}"))?;
+    let t0 = Instant::now();
+    let per_shard = replay_on_shards(&cache, trace, classes);
+    let wall = t0.elapsed();
+    let mut stats = ShardStats::default();
+    for s in &per_shard {
+        stats.merge(s);
+    }
+    Ok(ShardedReplayReport {
+        policy: policy.to_string(),
+        shards: cache.n_shards(),
+        stats,
+        per_shard,
+        wall,
+    })
+}
+
+/// Full pipeline for one shard count: classify once, then replay.
+pub fn run(
+    policy: &str,
+    shards: usize,
+    capacity: u64,
+    trace: &[BlockRequest],
+) -> Result<ShardedReplayReport> {
+    let classes = classify_trace(trace, KernelKind::Rbf, 64)?;
+    run_with_classes(policy, shards, capacity, trace, &classes)
+}
+
+/// Sweep several shard counts over the same trace. The classifier pass
+/// runs once — predictions do not depend on the shard count — so the sweep
+/// cost is dominated by the replays themselves.
+pub fn run_sweep(
+    policy: &str,
+    shard_counts: &[usize],
+    capacity: u64,
+    trace: &[BlockRequest],
+) -> Result<Vec<ShardedReplayReport>> {
+    let classes = classify_trace(trace, KernelKind::Rbf, 64)?;
+    shard_counts
+        .iter()
+        .map(|&n| run_with_classes(policy, n, capacity, trace, &classes))
+        .collect()
+}
+
+/// Render a shard-count sweep as a table (the `repro sharded` output).
+pub fn render(reports: &[ShardedReplayReport]) -> Table {
+    let mut t = Table::new(vec![
+        "policy",
+        "shards",
+        "hit ratio",
+        "evictions",
+        "replay wall (ms)",
+        "req/s",
+    ]);
+    for r in reports {
+        t.add_row(vec![
+            r.policy.clone(),
+            r.shards.to_string(),
+            fmt_f(r.stats.hit_ratio(), 4),
+            r.stats.evictions.to_string(),
+            fmt_f(r.wall.as_secs_f64() * 1e3, 2),
+            format!("{:.0}", r.requests_per_sec()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MB;
+    use crate::workload::fig3_trace;
+
+    #[test]
+    fn classifier_pass_labels_every_request() {
+        let trace = fig3_trace(64 * MB, 3);
+        let classes = classify_trace(&trace, KernelKind::Rbf, 64).unwrap();
+        assert_eq!(classes.len(), trace.len());
+        assert!(classes.iter().any(|c| c.is_some()), "mixed trace must train");
+        // Both classes must be predicted somewhere on the pollution trace.
+        assert!(classes.iter().any(|c| *c == Some(true)));
+        assert!(classes.iter().any(|c| *c == Some(false)));
+    }
+
+    #[test]
+    fn one_shard_replay_matches_sequential_replay() {
+        let trace = fig3_trace(64 * MB, 5);
+        let classes = classify_trace(&trace, KernelKind::Rbf, 64).unwrap();
+        // Sequential ground truth.
+        let seq = ShardedCache::from_registry("h-svm-lru", 1, 8 * 64 * MB).unwrap();
+        for (i, req) in trace.iter().enumerate() {
+            let ctx = AccessContext {
+                time: req.time,
+                size: req.size,
+                kind: req.kind,
+                file: req.block.0,
+                file_width: 1,
+                file_complete: false,
+                affinity: req.affinity,
+                predicted_reuse: classes[i],
+            };
+            seq.access_or_insert(req.block, &ctx);
+        }
+        let report = run("h-svm-lru", 1, 8 * 64 * MB, &trace).unwrap();
+        assert_eq!(report.stats, seq.stats());
+        assert_eq!(report.per_shard.len(), 1);
+    }
+
+    #[test]
+    fn multi_shard_sweep_counts_every_request() {
+        let trace = fig3_trace(64 * MB, 7);
+        // 16 blocks of capacity: at 8 shards every shard still holds 2
+        // blocks, enough for the Zipf-hot inputs to produce hits.
+        let reports = run_sweep("lru", &[2, 4, 8], 16 * 64 * MB, &trace).unwrap();
+        assert_eq!(reports.len(), 3);
+        for (report, &shards) in reports.iter().zip(&[2usize, 4, 8]) {
+            assert_eq!(report.shards, shards);
+            assert_eq!(report.stats.requests, trace.len() as u64);
+            assert_eq!(
+                report.stats.hits + report.stats.misses,
+                report.stats.requests
+            );
+            assert!(report.per_shard.iter().all(|s| s.requests > 0));
+            assert!(report.stats.hit_ratio() > 0.0);
+        }
+    }
+
+    #[test]
+    fn unknown_policy_errors() {
+        let trace = fig3_trace(64 * MB, 3);
+        assert!(run("nonsense", 2, 8 * 64 * MB, &trace).is_err());
+    }
+}

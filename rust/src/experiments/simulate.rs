@@ -252,6 +252,21 @@ mod tests {
     }
 
     #[test]
+    fn sharded_simulation_completes_and_stays_consistent() {
+        let cfg = ClusterConfig {
+            datanodes: 3,
+            replication: 2,
+            cache_shards: 4,
+            ..Default::default()
+        };
+        let sim = SimulateConfig { n_jobs: 8, ..Default::default() };
+        let report = run(&cfg, &Scenario::Policy("lru".into()), &svm_rust(), &sim).unwrap();
+        assert_eq!(report.completed.len(), 8);
+        assert_eq!(report.metadata_fixes, 0, "sharded caches must not drift metadata");
+        assert!(report.hit_ratio > 0.0);
+    }
+
+    #[test]
     fn deterministic_for_seed() {
         let cfg = ClusterConfig { datanodes: 3, replication: 2, ..Default::default() };
         let sim = SimulateConfig { n_jobs: 6, ..Default::default() };

@@ -19,7 +19,7 @@ pub struct Placement {
 
 impl Placement {
     pub fn new(n_nodes: usize, replication: usize, rng: Pcg64) -> Self {
-        assert!(replication >= 1 && replication <= n_nodes, "bad replication");
+        assert!((1..=n_nodes).contains(&replication), "bad replication");
         Placement { n_nodes, replication, load: vec![0; n_nodes], rng }
     }
 
@@ -29,14 +29,13 @@ impl Placement {
         let mut order: Vec<usize> = (0..self.n_nodes).collect();
         self.rng.shuffle(&mut order);
         order.sort_by_key(|&i| self.load[i]); // stable sort keeps the shuffle as tiebreak
-        let chosen: Vec<DataNodeId> = order[..self.replication]
+        order[..self.replication]
             .iter()
             .map(|&i| {
                 self.load[i] += 1;
                 DataNodeId(i as u32)
             })
-            .collect();
-        chosen
+            .collect()
     }
 
     pub fn per_node_load(&self) -> &[u64] {

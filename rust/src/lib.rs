@@ -8,8 +8,10 @@
 //! * **L3 (this crate)** — the coordinator: a discrete-event simulated
 //!   HDFS + MapReduce cluster with centralized cache management, 13 cache
 //!   replacement policies (the paper's contribution plus its whole related-
-//!   work table), the SVM training pipeline, and the experiment/bench
-//!   drivers that regenerate every table and figure of the paper.
+//!   work table) behind a sharded concurrent cache front
+//!   ([`cache::ShardedCache`]), the SVM training pipeline, and the
+//!   experiment/bench drivers that regenerate every table and figure of
+//!   the paper.
 //! * **L2 (python/compile/model.py)** — the SVM train/predict compute graph
 //!   in JAX, AOT-lowered to HLO text at build time.
 //! * **L1 (python/compile/kernels/)** — the Gram-matrix Pallas kernel the L2

@@ -94,13 +94,14 @@ fn run(args: &[String]) -> Result<()> {
             use h_svm_lru::experiments::Scenario;
             use h_svm_lru::mapreduce::FailureModel;
             let svm_cfg = cli.svm_config()?;
-            let (cluster_cfg, _) = h_svm_lru::config::load(cli.flag("config"))?;
+            let (mut cluster_cfg, _) = h_svm_lru::config::load(cli.flag("config"))?;
             let policy = cli.flag("policy").unwrap_or("h-svm-lru").to_string();
             let scenario = match policy.as_str() {
                 "none" | "no-cache" => Scenario::NoCache,
                 "h-svm-lru" => Scenario::SvmLru,
                 p => Scenario::Policy(p.to_string()),
             };
+            cluster_cfg.cache_shards = cli.shards(cluster_cfg.cache_shards)?;
             let mut sim = SimulateConfig { seed: cli.seed()?, ..Default::default() };
             if cli.switch("failures") {
                 sim.failures = FailureModel::with_rates(0.08, 0.03, cli.seed()?);
@@ -110,6 +111,7 @@ fn run(args: &[String]) -> Result<()> {
             }
             let report = simulate::run(&cluster_cfg, &scenario, &svm_cfg, &sim)?;
             println!("\n=== cluster simulation ({}) ===", scenario.label());
+            println!("cache shards       {}", cluster_cfg.cache_shards);
             println!("jobs completed     {}", report.completed.len());
             println!("sim time           {}", report.sim_end);
             println!("events fired       {}", report.events_fired);
@@ -133,6 +135,44 @@ fn run(args: &[String]) -> Result<()> {
                 h_svm_lru::util::stats::mean(&times),
                 h_svm_lru::util::stats::percentile(&times, 95.0)
             );
+            Ok(())
+        }
+        "sharded" => {
+            use h_svm_lru::experiments::sharded_replay;
+            use h_svm_lru::util::bytes::MB;
+            let max_shards = cli.shards(8)?;
+            let blocks: u64 =
+                cli.flag("cache-blocks").map(|s| s.parse()).transpose()?.unwrap_or(8);
+            let policy = cli.flag("policy").unwrap_or("h-svm-lru").to_string();
+            let block_size = 64 * MB;
+            let trace = h_svm_lru::workload::fig3_trace(block_size, cli.seed()?);
+            // Doubling sweep, always ending on the requested count (so
+            // --shards 6 actually runs 1, 2, 4, 6).
+            let mut counts = Vec::new();
+            let mut shards = 1usize;
+            while shards < max_shards {
+                counts.push(shards);
+                shards *= 2;
+            }
+            counts.push(max_shards);
+            let reports =
+                sharded_replay::run_sweep(&policy, &counts, blocks * block_size, &trace)?;
+            emit(
+                &format!(
+                    "Shard-parallel replay ({policy}, {} requests, cache = {blocks} \
+                     blocks of 64MB)",
+                    trace.len()
+                ),
+                &sharded_replay::render(&reports),
+                csv,
+            );
+            if let (Some(first), Some(last)) = (reports.first(), reports.last()) {
+                println!(
+                    "\nreplay speedup {}-shard over 1-shard: {:.2}x",
+                    last.shards,
+                    last.requests_per_sec() / first.requests_per_sec().max(1e-12)
+                );
+            }
             Ok(())
         }
         "policies" => {

@@ -5,54 +5,12 @@
 //! serialized proto) is the interchange format because jax >= 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the HLO text
 //! parser reassigns ids.
-
-use std::path::Path;
-
-use anyhow::{Context, Result};
-
-/// A compiled HLO executable plus its client handle.
-pub struct HloExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    name: String,
-}
-
-/// Process-wide PJRT CPU client (one per process; executables share it).
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-}
-
-impl PjrtRuntime {
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        log::debug!(
-            "PJRT client up: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(PjrtRuntime { client })
-    }
-
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO text file.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<HloExecutable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {path:?}"))?;
-        Ok(HloExecutable {
-            exe,
-            name: path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
-        })
-    }
-}
+//!
+//! The real client lives behind the `pjrt` cargo feature because the `xla`
+//! crate is not in the offline registry (see rust/Cargo.toml). Without the
+//! feature this module compiles a stub with the identical API whose
+//! constructors return a descriptive error, so `HloBackend::load` fails
+//! cleanly and callers fall back to `--svm-backend rust`.
 
 /// An f32 input buffer: data plus its logical dims.
 #[derive(Debug, Clone)]
@@ -61,53 +19,158 @@ pub struct F32Input<'a> {
     pub dims: &'a [i64],
 }
 
-impl HloExecutable {
-    pub fn name(&self) -> &str {
-        &self.name
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::path::Path;
+
+    use anyhow::{Context, Result};
+
+    use super::F32Input;
+
+    /// A compiled HLO executable plus its client handle.
+    pub struct HloExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        name: String,
     }
 
-    /// Execute with f32 inputs; returns the flattened f32 outputs of the
-    /// result tuple (jax lowering uses return_tuple=True).
-    pub fn run_f32(&self, inputs: &[F32Input<'_>]) -> Result<Vec<Vec<f32>>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for inp in inputs {
-            let expected: i64 = inp.dims.iter().product();
-            anyhow::ensure!(
-                expected == inp.data.len() as i64,
-                "{}: input dims {:?} != data len {}",
-                self.name,
-                inp.dims,
-                inp.data.len()
+    /// Process-wide PJRT CPU client (one per process; executables share it).
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+    }
+
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            log::debug!(
+                "PJRT client up: platform={} devices={}",
+                client.platform_name(),
+                client.device_count()
             );
-            let lit = xla::Literal::vec1(inp.data);
-            let lit = if inp.dims.len() == 1 {
-                lit
-            } else {
-                lit.reshape(inp.dims)
-                    .with_context(|| format!("reshape to {:?}", inp.dims))?
-            };
-            literals.push(lit);
+            Ok(PjrtRuntime { client })
         }
-        // Scalars () need an explicit reshape to rank 0.
-        for (lit, inp) in literals.iter_mut().zip(inputs) {
-            if inp.dims.is_empty() {
-                *lit = lit.reshape(&[]).context("reshape to scalar")?;
+
+        pub fn platform_name(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO text file.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<HloExecutable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path:?}"))?;
+            Ok(HloExecutable {
+                exe,
+                name: path
+                    .file_name()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_default(),
+            })
+        }
+    }
+
+    impl HloExecutable {
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        /// Execute with f32 inputs; returns the flattened f32 outputs of the
+        /// result tuple (jax lowering uses return_tuple=True).
+        pub fn run_f32(&self, inputs: &[F32Input<'_>]) -> Result<Vec<Vec<f32>>> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for inp in inputs {
+                let expected: i64 = inp.dims.iter().product();
+                anyhow::ensure!(
+                    expected == inp.data.len() as i64,
+                    "{}: input dims {:?} != data len {}",
+                    self.name,
+                    inp.dims,
+                    inp.data.len()
+                );
+                let lit = xla::Literal::vec1(inp.data);
+                let lit = if inp.dims.len() == 1 {
+                    lit
+                } else {
+                    lit.reshape(inp.dims)
+                        .with_context(|| format!("reshape to {:?}", inp.dims))?
+                };
+                literals.push(lit);
             }
+            // Scalars () need an explicit reshape to rank 0.
+            for (lit, inp) in literals.iter_mut().zip(inputs) {
+                if inp.dims.is_empty() {
+                    *lit = lit.reshape(&[]).context("reshape to scalar")?;
+                }
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {}", self.name))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            let parts = out.to_tuple().context("untupling result")?;
+            parts
+                .into_iter()
+                .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
+                .collect()
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let parts = out.to_tuple().context("untupling result")?;
-        parts
-            .into_iter()
-            .map(|lit| lit.to_vec::<f32>().context("reading f32 output"))
-            .collect()
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::Path;
+
+    use anyhow::{bail, Result};
+
+    use super::F32Input;
+
+    const UNAVAILABLE: &str = "PJRT support is not compiled in — rebuild with \
+         `--features pjrt` (requires the `xla` dependency; see rust/Cargo.toml) \
+         or run with `--svm-backend rust`";
+
+    /// Stub standing in for the compiled-HLO executable handle.
+    pub struct HloExecutable {
+        name: String,
+    }
+
+    /// Stub standing in for the process-wide PJRT CPU client.
+    pub struct PjrtRuntime {
+        _private: (),
+    }
+
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<Self> {
+            bail!(UNAVAILABLE)
+        }
+
+        pub fn platform_name(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load_hlo_text(&self, _path: &Path) -> Result<HloExecutable> {
+            bail!(UNAVAILABLE)
+        }
+    }
+
+    impl HloExecutable {
+        pub fn name(&self) -> &str {
+            &self.name
+        }
+
+        pub fn run_f32(&self, _inputs: &[F32Input<'_>]) -> Result<Vec<Vec<f32>>> {
+            bail!("{UNAVAILABLE} (executable {:?})", self.name)
+        }
+    }
+}
+
+pub use imp::{HloExecutable, PjrtRuntime};
 
 #[cfg(test)]
 mod tests {
@@ -122,5 +185,12 @@ mod tests {
         let inp = F32Input { data: &data, dims: &[2, 2] };
         let expected: i64 = inp.dims.iter().product();
         assert_eq!(expected, 4);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = PjrtRuntime::cpu().expect_err("stub must not construct");
+        assert!(err.to_string().contains("pjrt"), "{err:#}");
     }
 }

@@ -7,9 +7,11 @@
 //! slots on each node.
 
 pub mod engine;
+pub mod parallel;
 pub mod resource;
 pub mod time;
 
 pub use engine::Engine;
+pub use parallel::run_sharded;
 pub use resource::Resource;
 pub use time::{SimDuration, SimTime};

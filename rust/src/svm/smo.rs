@@ -220,7 +220,7 @@ mod tests {
         let cfg = SmoConfig::default();
         let model = train(&ds, KernelParams::new(KernelKind::Rbf), &cfg);
         for &a in &model.alpha {
-            assert!(a >= -1e-6 && a <= cfg.c + 1e-6, "alpha {a} out of box");
+            assert!((-1e-6..=cfg.c + 1e-6).contains(&a), "alpha {a} out of box");
         }
         // KKT complementary slackness (loosely): sum alpha_i y_i ~ 0
         let s: f32 = model

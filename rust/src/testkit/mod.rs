@@ -192,7 +192,7 @@ mod tests {
         for _ in 0..20 {
             let (ops, cap) = gen.generate(&mut rng);
             assert!(!ops.is_empty());
-            assert!(cap >= 1 && cap <= 8);
+            assert!((1..=8).contains(&cap));
             assert!(ops.iter().all(|(k, _)| *k < 10));
             // Shrinks stay valid.
             for (sops, scap) in gen.shrink(&(ops.clone(), cap)) {

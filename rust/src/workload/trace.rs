@@ -70,7 +70,7 @@ impl Default for TraceConfig {
 /// drawn from a Zipf distribution.
 pub fn generate(cfg: &TraceConfig) -> Vec<BlockRequest> {
     assert!(cfg.hot_blocks > 0 && cfg.requests > 0, "empty trace config");
-    let mut rng = Pcg64::new(cfg.seed, 0xF16_3);
+    let mut rng = Pcg64::new(cfg.seed, 0xF163);
     let zipf = Zipf::new(cfg.hot_blocks, cfg.zipf_s);
     // Hot blocks get ids [0, hot); cold blocks [hot, hot + cold).
     let affinities = [CacheAffinity::Low, CacheAffinity::Medium, CacheAffinity::High];

@@ -1,0 +1,193 @@
+//! Property tests for the sharded cache front: shard-count-1 parity with
+//! the bare wrapped policy, multi-shard capacity/accounting invariants, and
+//! sequential-vs-parallel replay equivalence.
+
+use h_svm_lru::cache::registry::{make_policy, POLICY_NAMES};
+use h_svm_lru::cache::sharded::{shard_of, ShardStats, ShardedCache};
+use h_svm_lru::cache::{AccessContext, BlockCache};
+use h_svm_lru::hdfs::BlockId;
+use h_svm_lru::sim::parallel::run_sharded;
+use h_svm_lru::sim::SimTime;
+use h_svm_lru::testkit::{forall, CacheOpsGen, Config};
+
+fn ctx(t: u64, reuse: bool) -> AccessContext {
+    AccessContext::simple(SimTime(t), 1).with_prediction(reuse)
+}
+
+fn sharded(policy: &str, shards: usize, capacity: u64) -> ShardedCache {
+    ShardedCache::from_registry(policy, shards, capacity)
+        .unwrap_or_else(|| panic!("{policy} missing from registry"))
+}
+
+/// Shards = 1 must behave identically to the bare wrapped policy: same hit
+/// flags, same eviction sequences, same final contents — for every policy
+/// on every op sequence.
+#[test]
+fn one_shard_equals_bare_policy_for_every_policy() {
+    let gen = CacheOpsGen { max_ops: 250, keyspace: 40, max_capacity: 12 };
+    for &policy in POLICY_NAMES {
+        forall(
+            &Config { cases: 20, seed: 0x5AD + policy.len() as u64, ..Default::default() },
+            &gen,
+            |(ops, cap)| {
+                let mut bare = BlockCache::new(make_policy(policy).unwrap(), *cap);
+                let front = sharded(policy, 1, *cap);
+                for (t, (key, reuse)) in ops.iter().enumerate() {
+                    let c = ctx(t as u64, *reuse);
+                    let a = bare.access_or_insert(BlockId(*key), &c);
+                    let b = front.access_or_insert(BlockId(*key), &c);
+                    if a != b {
+                        return Err(format!(
+                            "{policy}: outcome divergence at op {t}: {a:?} vs {b:?}"
+                        ));
+                    }
+                }
+                if bare.cached_blocks() != front.cached_blocks() {
+                    return Err(format!("{policy}: final contents diverge"));
+                }
+                if bare.used() != front.used() {
+                    return Err(format!("{policy}: occupancy diverges"));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// Multi-shard invariants: total occupancy bounded by total capacity, block
+/// counts and stats consistent, every block on the shard the hash says.
+#[test]
+fn multi_shard_capacity_and_accounting_invariants() {
+    let gen = CacheOpsGen { max_ops: 300, keyspace: 60, max_capacity: 16 };
+    for shards in [2usize, 3, 8] {
+        forall(
+            &Config { cases: 25, seed: 0x8A2D + shards as u64, ..Default::default() },
+            &gen,
+            |(ops, cap)| {
+                let front = sharded("lru", shards, *cap);
+                for (t, (key, reuse)) in ops.iter().enumerate() {
+                    front.access_or_insert(BlockId(*key), &ctx(t as u64, *reuse));
+                    if front.used() > front.capacity() {
+                        return Err(format!(
+                            "occupancy {} exceeds capacity {}",
+                            front.used(),
+                            front.capacity()
+                        ));
+                    }
+                    if front.used() != front.len() as u64 {
+                        return Err("byte accounting broken (unit blocks)".into());
+                    }
+                }
+                let stats = front.stats();
+                if stats.requests != ops.len() as u64 {
+                    return Err(format!(
+                        "{} requests counted for {} ops",
+                        stats.requests,
+                        ops.len()
+                    ));
+                }
+                if stats.hits + stats.misses != stats.requests {
+                    return Err("hits + misses != requests".into());
+                }
+                if stats.insertions < stats.evictions {
+                    return Err("evicted more than inserted".into());
+                }
+                if stats.insertions - stats.evictions != front.len() as u64 {
+                    return Err(format!(
+                        "conservation broken: {} - {} != {}",
+                        stats.insertions,
+                        stats.evictions,
+                        front.len()
+                    ));
+                }
+                for b in front.cached_blocks() {
+                    if front.shard_of(b) != shard_of(b, shards) {
+                        return Err(format!("{b} routed inconsistently"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// Replaying a stream sequentially through the sharded front must be
+/// indistinguishable from partitioning it by shard and replaying each
+/// partition on its own scoped worker thread (shards are independent, and
+/// each worker preserves its shard's request order).
+#[test]
+fn parallel_shard_replay_matches_sequential_replay() {
+    let gen = CacheOpsGen { max_ops: 400, keyspace: 50, max_capacity: 16 };
+    for shards in [2usize, 4] {
+        forall(
+            &Config { cases: 20, seed: 0x9A7A + shards as u64, ..Default::default() },
+            &gen,
+            |(ops, cap)| {
+                let sequential = sharded("h-svm-lru", shards, *cap);
+                for (t, (key, reuse)) in ops.iter().enumerate() {
+                    sequential.access_or_insert(BlockId(*key), &ctx(t as u64, *reuse));
+                }
+
+                let parallel = sharded("h-svm-lru", shards, *cap);
+                let mut parts: Vec<Vec<usize>> = vec![Vec::new(); shards];
+                for (i, (key, _)) in ops.iter().enumerate() {
+                    parts[shard_of(BlockId(*key), shards)].push(i);
+                }
+                let per_shard: Vec<ShardStats> = run_sharded(shards, |w| {
+                    for &i in &parts[w] {
+                        let (key, reuse) = ops[i];
+                        parallel.access_or_insert(BlockId(key), &ctx(i as u64, reuse));
+                    }
+                    parallel.stats_of(w)
+                });
+
+                let mut merged = ShardStats::default();
+                for s in &per_shard {
+                    merged.merge(s);
+                }
+                if merged != parallel.stats() {
+                    return Err("worker-returned stats disagree with merged stats".into());
+                }
+                if sequential.stats() != parallel.stats() {
+                    return Err(format!(
+                        "sequential {:?} vs parallel {:?}",
+                        sequential.stats(),
+                        parallel.stats()
+                    ));
+                }
+                if sequential.cached_blocks() != parallel.cached_blocks() {
+                    return Err("final cache contents diverge".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// The shard router: total (every block routed), stable, in range, and
+/// degenerate for a single shard.
+#[test]
+fn shard_routing_is_total_stable_and_uniformish() {
+    for n in [1usize, 2, 3, 8, 16] {
+        let mut counts = vec![0u64; n];
+        for id in 0..4096u64 {
+            let s = shard_of(BlockId(id), n);
+            assert!(s < n, "shard {s} out of range for n={n}");
+            assert_eq!(s, shard_of(BlockId(id), n), "routing must be stable");
+            counts[s] += 1;
+        }
+        if n == 1 {
+            assert_eq!(counts[0], 4096);
+        } else {
+            // Fibonacci mix over sequential ids: no shard may be starved or
+            // hold a wildly disproportionate share.
+            let expect = 4096 / n as u64;
+            for (s, &c) in counts.iter().enumerate() {
+                assert!(
+                    c > expect / 2 && c < expect * 2,
+                    "shard {s}/{n} holds {c} of 4096 (expect ~{expect})"
+                );
+            }
+        }
+    }
+}
