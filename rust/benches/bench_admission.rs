@@ -1,0 +1,59 @@
+//! Admission-layer hot-path cost: the frequency sketch + doorkeeper sit on
+//! every request of every shard, so their per-op overhead over the bare
+//! `always` path bounds what admission control may cost at scale. 8-shard
+//! concurrent replay (one scoped worker per shard's keyspace slice),
+//! admission on/off, for the LRU baseline and the paper's H-SVM-LRU.
+
+use h_svm_lru::bench_support::{banner, black_box, Bencher};
+use h_svm_lru::cache::sharded::{shard_of, ShardedCache};
+use h_svm_lru::cache::AccessContext;
+use h_svm_lru::hdfs::BlockId;
+use h_svm_lru::sim::parallel::run_sharded;
+use h_svm_lru::sim::SimTime;
+
+const OPS_PER_WORKER: u64 = 10_000;
+const WORKERS: usize = 8;
+const SHARDS: usize = 8;
+const WORKING_SET: u64 = 256;
+
+fn replay(cache: &ShardedCache) {
+    run_sharded(WORKERS, |w| {
+        // Each worker owns a disjoint block range, so no two workers ever
+        // touch the same block and the stream content is identical across
+        // admission policies; residual contention is only shard-routing
+        // overlap, the same for every policy under test.
+        for t in 0..OPS_PER_WORKER {
+            let b = BlockId(w as u64 * WORKING_SET + (t * 31) % WORKING_SET);
+            let ctx = AccessContext::simple(SimTime(t), 1)
+                .with_prediction(shard_of(b, 2) == 0);
+            black_box(cache.access_or_insert(b, &ctx));
+        }
+    });
+}
+
+fn main() {
+    banner("admission hot path — 8 workers, 8 shards, 64-block cache");
+    let bench = Bencher::new(2, 10);
+    let ops = OPS_PER_WORKER * WORKERS as u64;
+    let mut baseline = None;
+    for policy in ["lru", "h-svm-lru"] {
+        for admission in ["always", "tinylfu", "ghost", "svm"] {
+            let res = bench.run_per_op(&format!("{policy} + {admission}"), ops, || {
+                let cache =
+                    ShardedCache::from_registry_with_admission(policy, admission, SHARDS, 64)
+                        .unwrap();
+                replay(&cache);
+                black_box(cache.hit_ratio());
+            });
+            println!("{}", res.report());
+            if admission == "always" {
+                baseline = Some(res.mean);
+            } else if let Some(base) = baseline {
+                println!(
+                    "    {admission} / always overhead: {:.2}x",
+                    res.mean.as_secs_f64() / base.as_secs_f64().max(1e-12)
+                );
+            }
+        }
+    }
+}

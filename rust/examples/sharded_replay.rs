@@ -38,7 +38,7 @@ fn main() -> Result<()> {
     }
     println!(
         "\nOK: every shard count replayed the full trace (1-shard hit ratio {:.4}).",
-        one.stats.hit_ratio()
+        one.hit_ratio()
     );
     Ok(())
 }

@@ -1,0 +1,251 @@
+//! Approximate frequency estimation for TinyLFU admission: a 4-bit
+//! Count-Min sketch with periodic halving (the "aging" that keeps the
+//! estimate tracking *recent* popularity) and a doorkeeper Bloom filter
+//! that absorbs the long tail of once-seen blocks so they never occupy
+//! sketch counters.
+//!
+//! Both structures hash the raw block id with the same Fibonacci
+//! multiplicative mix the rest of the crate uses
+//! ([`crate::util::fasthash`]), re-seeded per row/probe, so the estimate is
+//! deterministic for a given request stream — experiment runs stay
+//! bit-for-bit reproducible.
+
+use crate::hdfs::BlockId;
+
+/// Per-row hash seeds (odd constants; splitmix64-style increments).
+const ROW_SEEDS: [u64; 4] = [
+    0x9E37_79B9_7F4A_7C15,
+    0xBF58_476D_1CE4_E5B9,
+    0x94D0_49BB_1331_11EB,
+    0xD6E8_FEB8_6659_FD93,
+];
+
+#[inline]
+fn mix(id: u64, seed: u64) -> u64 {
+    let mut h = id.wrapping_add(seed).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    h ^= h >> 32;
+    h = h.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    h ^ (h >> 29)
+}
+
+/// A Count-Min sketch of 4-bit saturating counters, 4 rows deep.
+///
+/// Counters saturate at 15; when the number of recorded increments reaches
+/// the sample period every counter is halved (and the caller is told, so it
+/// can reset its doorkeeper). Until a halving happens the estimate never
+/// underestimates the true count below saturation — property-tested in
+/// rust/tests/property_admission.rs.
+#[derive(Debug, Clone)]
+pub struct FrequencySketch {
+    /// 4 rows × `width` 4-bit counters, 16 counters per word.
+    table: Vec<u64>,
+    /// Counters per row (power of two).
+    width: usize,
+    /// Increments recorded since the last halving.
+    additions: u64,
+    /// Halve all counters once `additions` reaches this.
+    sample_size: u64,
+}
+
+impl FrequencySketch {
+    /// Sketch sized for roughly `capacity` distinct hot blocks. Width is
+    /// rounded up to a power of two; the sample period is 10× the width
+    /// (the TinyLFU paper's W = 10·C).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let width = capacity.max(16).next_power_of_two();
+        FrequencySketch {
+            table: vec![0u64; (4 * width).div_ceil(16)],
+            width,
+            additions: 0,
+            sample_size: 10 * width as u64,
+        }
+    }
+
+    /// Counter index of `id` in `row`.
+    #[inline]
+    fn index(&self, id: u64, row: usize) -> usize {
+        let h = mix(id, ROW_SEEDS[row]) as usize;
+        row * self.width + (h & (self.width - 1))
+    }
+
+    #[inline]
+    fn get(&self, counter: usize) -> u8 {
+        let word = self.table[counter / 16];
+        ((word >> ((counter % 16) * 4)) & 0xF) as u8
+    }
+
+    #[inline]
+    fn bump(&mut self, counter: usize) {
+        let shift = (counter % 16) * 4;
+        let word = &mut self.table[counter / 16];
+        if ((*word >> shift) & 0xF) < 15 {
+            *word += 1u64 << shift;
+        }
+    }
+
+    /// Record one access. Returns `true` when the record triggered the
+    /// periodic halving (callers reset their doorkeeper on that signal).
+    pub fn increment(&mut self, block: BlockId) -> bool {
+        for row in 0..4 {
+            let idx = self.index(block.0, row);
+            self.bump(idx);
+        }
+        self.additions += 1;
+        if self.additions >= self.sample_size {
+            self.halve();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Estimated access count of `block` (min over rows; ≤ 15).
+    pub fn estimate(&self, block: BlockId) -> u32 {
+        (0..4)
+            .map(|row| self.get(self.index(block.0, row)) as u32)
+            .min()
+            .expect("4 rows")
+    }
+
+    /// Halve every counter in place — the aging step. Shifting the packed
+    /// word right by one moves each counter's low bit into its neighbour's
+    /// top bit; masking with 0x7777… clears those borrowed bits.
+    pub fn halve(&mut self) {
+        for word in &mut self.table {
+            *word = (*word >> 1) & 0x7777_7777_7777_7777;
+        }
+        self.additions = 0;
+    }
+
+    /// Increments recorded since the last halving.
+    pub fn additions(&self) -> u64 {
+        self.additions
+    }
+
+    /// Counters per row.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+}
+
+/// A small Bloom filter guarding the sketch: the first access of a block
+/// only sets doorkeeper bits, so one-hit wonders (the pollution stream
+/// itself) never consume sketch counters. Cleared on every sketch halving.
+///
+/// Bloom guarantees: no false negatives ever; false positives possible.
+/// After [`Doorkeeper::clear`] the filter is empty, so it cannot carry
+/// stale admissions across a reset (property-tested).
+#[derive(Debug, Clone)]
+pub struct Doorkeeper {
+    bits: Vec<u64>,
+    /// Bit-index mask (power-of-two bit count - 1).
+    mask: u64,
+}
+
+impl Doorkeeper {
+    /// Filter with roughly `capacity` expected members (8 bits per member,
+    /// 3 probes: ~3% false-positive rate at full load).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let bits = (8 * capacity.max(16)).next_power_of_two();
+        Doorkeeper { bits: vec![0u64; bits / 64], mask: bits as u64 - 1 }
+    }
+
+    #[inline]
+    fn probes(&self, id: u64) -> [u64; 3] {
+        [
+            mix(id, ROW_SEEDS[0]) & self.mask,
+            mix(id, ROW_SEEDS[1]) & self.mask,
+            mix(id, ROW_SEEDS[2]) & self.mask,
+        ]
+    }
+
+    /// Insert `block`; returns `true` if it was not already present (i.e.
+    /// at least one probe bit was newly set).
+    pub fn insert(&mut self, block: BlockId) -> bool {
+        let mut newly = false;
+        for bit in self.probes(block.0) {
+            let word = &mut self.bits[(bit / 64) as usize];
+            let mask = 1u64 << (bit % 64);
+            newly |= *word & mask == 0;
+            *word |= mask;
+        }
+        newly
+    }
+
+    pub fn contains(&self, block: BlockId) -> bool {
+        self.probes(block.0)
+            .iter()
+            .all(|&bit| self.bits[(bit / 64) as usize] & (1u64 << (bit % 64)) != 0)
+    }
+
+    /// Forget everything (paired with the sketch's halving).
+    pub fn clear(&mut self) {
+        self.bits.fill(0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sketch_counts_and_saturates() {
+        let mut s = FrequencySketch::with_capacity(64);
+        assert_eq!(s.estimate(BlockId(1)), 0);
+        for _ in 0..5 {
+            s.increment(BlockId(1));
+        }
+        assert!(s.estimate(BlockId(1)) >= 5);
+        for _ in 0..100 {
+            s.increment(BlockId(2));
+        }
+        assert_eq!(s.estimate(BlockId(2)), 15, "counters saturate at 15");
+    }
+
+    #[test]
+    fn halving_ages_counters() {
+        let mut s = FrequencySketch::with_capacity(64);
+        for _ in 0..8 {
+            s.increment(BlockId(3));
+        }
+        let before = s.estimate(BlockId(3));
+        s.halve();
+        assert_eq!(s.estimate(BlockId(3)), before / 2);
+        assert_eq!(s.additions(), 0);
+    }
+
+    #[test]
+    fn sample_period_triggers_reset() {
+        let mut s = FrequencySketch::with_capacity(16);
+        let period = 10 * s.width() as u64;
+        let mut resets = 0;
+        for i in 0..2 * period {
+            if s.increment(BlockId(i % 7)) {
+                resets += 1;
+            }
+        }
+        assert_eq!(resets, 2, "one halving per full sample period");
+    }
+
+    #[test]
+    fn doorkeeper_has_no_false_negatives_and_clears() {
+        let mut d = Doorkeeper::with_capacity(128);
+        for id in 0..100u64 {
+            assert!(d.insert(BlockId(id)) || d.contains(BlockId(id)));
+        }
+        for id in 0..100u64 {
+            assert!(d.contains(BlockId(id)), "false negative for {id}");
+        }
+        d.clear();
+        for id in 0..100u64 {
+            assert!(!d.contains(BlockId(id)), "stale bit for {id} after clear");
+        }
+    }
+
+    #[test]
+    fn doorkeeper_insert_reports_novelty() {
+        let mut d = Doorkeeper::with_capacity(128);
+        assert!(d.insert(BlockId(42)));
+        assert!(!d.insert(BlockId(42)), "second insert is not novel");
+    }
+}

@@ -1,0 +1,213 @@
+//! Ghost-cache probation admission: a block must prove reuse before it may
+//! occupy real capacity.
+//!
+//! A bounded LRU "ghost" holds only block *ids* — candidates the admission
+//! layer turned away and victims the replacement policy evicted. A miss
+//! whose id is still in the ghost is a re-reference within the observation
+//! window and is admitted (and leaves the ghost); a first sighting is
+//! recorded and rejected. Single-pass pollution never re-references, so it
+//! never graduates out of the ghost — the 2Q/ARC ghost-history idea applied
+//! as pure admission control.
+
+use std::collections::VecDeque;
+
+use crate::hdfs::BlockId;
+use crate::util::fasthash::IdHashMap;
+
+use super::super::AccessContext;
+use super::AdmissionPolicy;
+
+/// Bounded LRU set of block ids with O(1) touch via stamped lazy deletion:
+/// the map holds each member's latest stamp, the queue holds (id, stamp)
+/// entries in insertion order, and entries whose stamp is stale are dropped
+/// when they surface at the front.
+#[derive(Debug, Default)]
+struct GhostLru {
+    stamps: IdHashMap<BlockId, u64>,
+    queue: VecDeque<(BlockId, u64)>,
+    seq: u64,
+    capacity: usize,
+}
+
+impl GhostLru {
+    fn new(capacity: usize) -> Self {
+        GhostLru { capacity: capacity.max(1), ..Default::default() }
+    }
+
+    /// Insert or refresh `block` as most-recently-seen, evicting the least
+    /// recently seen member when over capacity.
+    fn record(&mut self, block: BlockId) {
+        self.seq += 1;
+        self.stamps.insert(block, self.seq);
+        self.queue.push_back((block, self.seq));
+        while self.stamps.len() > self.capacity {
+            let (b, s) = self.queue.pop_front().expect("members imply queue entries");
+            if self.stamps.get(&b) == Some(&s) {
+                self.stamps.remove(&b);
+            }
+        }
+        // Drain stale fronts eagerly so the queue stays near `len()`.
+        while let Some(&(b, s)) = self.queue.front() {
+            if self.stamps.get(&b) == Some(&s) {
+                break;
+            }
+            self.queue.pop_front();
+        }
+        // A live front entry can shield stale entries behind it from the
+        // drain above (e.g. one never-re-referenced probation member while
+        // admissions keep removing stamps mid-queue). Compact whenever
+        // stale entries dominate: `retain` keeps order and runs at most
+        // once per `capacity` pushes, so it amortizes to O(1) per record.
+        if self.queue.len() > 2 * self.capacity {
+            let stamps = &self.stamps;
+            self.queue.retain(|(b, s)| stamps.get(b) == Some(s));
+        }
+    }
+
+    /// Remove `block`; true if it was a member.
+    fn remove(&mut self, block: BlockId) -> bool {
+        self.stamps.remove(&block).is_some()
+    }
+
+    fn contains(&self, block: BlockId) -> bool {
+        self.stamps.contains_key(&block)
+    }
+
+    fn len(&self) -> usize {
+        self.stamps.len()
+    }
+}
+
+/// Ghost-LRU probation admission.
+pub struct GhostProbation {
+    ghost: GhostLru,
+}
+
+impl GhostProbation {
+    /// Ghost history of at most `capacity` block ids.
+    pub fn new(capacity: usize) -> Self {
+        GhostProbation { ghost: GhostLru::new(capacity) }
+    }
+
+    /// Current ghost members (ids on probation or recently evicted).
+    pub fn len(&self) -> usize {
+        self.ghost.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ghost.len() == 0
+    }
+
+    /// Maximum ghost members — `len() <= capacity()` always holds
+    /// (property-tested in rust/tests/property_admission.rs).
+    pub fn capacity(&self) -> usize {
+        self.ghost.capacity
+    }
+
+    pub fn contains(&self, block: BlockId) -> bool {
+        self.ghost.contains(block)
+    }
+}
+
+impl AdmissionPolicy for GhostProbation {
+    fn name(&self) -> &'static str {
+        "ghost"
+    }
+
+    fn on_access(&mut self, _block: BlockId, _ctx: &AccessContext) {}
+
+    fn admit(
+        &mut self,
+        candidate: BlockId,
+        _ctx: &AccessContext,
+        _victim: &mut dyn FnMut() -> Option<BlockId>,
+    ) -> bool {
+        if self.ghost.remove(candidate) {
+            // Re-referenced while remembered: proven reuse, admit.
+            true
+        } else {
+            // First sighting: put it on probation instead of in the cache.
+            self.ghost.record(candidate);
+            false
+        }
+    }
+
+    fn on_evict(&mut self, block: BlockId) {
+        self.ghost.record(block);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+
+    fn ctx() -> AccessContext {
+        AccessContext::simple(SimTime(0), 1)
+    }
+
+    fn admit(g: &mut GhostProbation, id: u64) -> bool {
+        let mut no_victim = || None::<BlockId>;
+        g.admit(BlockId(id), &ctx(), &mut no_victim)
+    }
+
+    #[test]
+    fn first_sighting_rejected_re_reference_admitted() {
+        let mut g = GhostProbation::new(8);
+        assert!(!admit(&mut g, 1), "probation first");
+        assert!(g.contains(BlockId(1)));
+        assert!(admit(&mut g, 1), "re-reference admits");
+        assert!(!g.contains(BlockId(1)), "admission consumes the ghost entry");
+    }
+
+    #[test]
+    fn evicted_blocks_get_a_second_chance() {
+        let mut g = GhostProbation::new(8);
+        g.on_evict(BlockId(9));
+        assert!(admit(&mut g, 9));
+    }
+
+    #[test]
+    fn ghost_capacity_is_bounded_lru() {
+        let mut g = GhostProbation::new(3);
+        for id in 0..10u64 {
+            assert!(!admit(&mut g, id));
+            assert!(g.len() <= g.capacity());
+        }
+        // Only the 3 most recent survive; old probation entries expired.
+        assert!(!g.contains(BlockId(0)));
+        assert!(g.contains(BlockId(9)));
+        assert!(!admit(&mut g, 0), "expired probation restarts");
+    }
+
+    #[test]
+    fn stale_queue_entries_are_compacted() {
+        // One never-re-referenced probation member sits live at the queue
+        // front while admission pairs keep stranding stale entries behind
+        // it; compaction must keep the queue bounded by the capacity.
+        let mut g = GhostProbation::new(8);
+        assert!(!admit(&mut g, 999_999));
+        for id in 0..10_000u64 {
+            assert!(!admit(&mut g, id), "first sighting rejected");
+            assert!(admit(&mut g, id), "re-reference admitted");
+        }
+        assert!(g.len() <= g.capacity());
+        assert!(
+            g.ghost.queue.len() <= 2 * g.capacity(),
+            "queue grew to {} entries for {} members",
+            g.ghost.queue.len(),
+            g.len()
+        );
+    }
+
+    #[test]
+    fn touching_refreshes_recency() {
+        let mut g = GhostProbation::new(2);
+        assert!(!admit(&mut g, 1));
+        assert!(!admit(&mut g, 2));
+        g.on_evict(BlockId(1)); // refresh 1 as most recent
+        assert!(!admit(&mut g, 3)); // evicts 2, not 1
+        assert!(g.contains(BlockId(1)));
+        assert!(!g.contains(BlockId(2)));
+    }
+}

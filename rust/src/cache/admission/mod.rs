@@ -1,0 +1,191 @@
+//! Cache admission control — stop pollution *before* it costs an eviction.
+//!
+//! The paper's §4 defines cache pollution as single-pass blocks ("data
+//! without further use", e.g. MapReduce intermediate/shuffle spills) pushing
+//! blocks with future reuse out of the limited off-heap cache. H-SVM-LRU
+//! attacks pollution at *eviction* time by keeping predicted-reuse blocks
+//! out of the victim pool; this module attacks it one step earlier, at
+//! *insert* time: a pluggable [`AdmissionPolicy`] sits in front of every
+//! replacement policy and may refuse to cache a missing block at all, so a
+//! scan flood never displaces the working set in the first place.
+//!
+//! Implemented admission strategies (constructible by name through
+//! [`make_admission`]):
+//!
+//! | name      | strategy |
+//! |-----------|----------|
+//! | `always`  | [`AlwaysAdmit`] — admit everything (the pre-admission behaviour, bit-identical default) |
+//! | `tinylfu` | [`TinyLfu`] — 4-bit Count-Min frequency sketch + doorkeeper Bloom filter; admit only if the candidate's estimated frequency beats the eviction victim's |
+//! | `ghost`   | [`GhostProbation`] — ghost LRU of recently seen/evicted ids; admit on re-reference |
+//! | `svm`     | [`SvmAdmit`] — the deployed SVM classifier's reuse prediction, consulted at insert time |
+//!
+//! The cache layer guarantees the call protocol: [`AdmissionPolicy::on_access`]
+//! once per request (hit or miss), [`AdmissionPolicy::admit`] once per
+//! candidate insert that passed the capacity/policy pre-checks, and
+//! [`AdmissionPolicy::on_evict`] whenever a block leaves the cache. Every
+//! shard of a [`ShardedCache`](crate::cache::ShardedCache) owns its own
+//! instance, so admission state is updated under the shard lock the access
+//! already holds and the hot path stays lock-free across shards.
+
+pub mod frequency;
+pub mod ghost;
+pub mod svm_admit;
+pub mod tinylfu;
+
+pub use frequency::{Doorkeeper, FrequencySketch};
+pub use ghost::GhostProbation;
+pub use svm_admit::SvmAdmit;
+pub use tinylfu::TinyLfu;
+
+use crate::hdfs::BlockId;
+
+use super::AccessContext;
+
+/// Insert-time admission decision layer in front of a replacement policy.
+///
+/// Implementations must be cheap: `on_access` sits on the per-request hot
+/// path of every shard.
+pub trait AdmissionPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Every cache request for `block` — hit, miss or prefetch staging —
+    /// exactly once. Frequency-learning admissions build their estimate
+    /// here; stateless ones ignore it.
+    fn on_access(&mut self, block: BlockId, ctx: &AccessContext);
+
+    /// Decide whether a missing `candidate` may enter the cache. `victim`
+    /// lazily peeks the eviction victim the insert would displace: it
+    /// returns `None` when the cache still has room (nobody is displaced),
+    /// and calling it may advance the wrapped policy's victim-selection
+    /// state — implementations that don't compare against the victim MUST
+    /// NOT call it, which is what keeps [`AlwaysAdmit`] bit-identical to the
+    /// pre-admission cache.
+    fn admit(
+        &mut self,
+        candidate: BlockId,
+        ctx: &AccessContext,
+        victim: &mut dyn FnMut() -> Option<BlockId>,
+    ) -> bool;
+
+    /// When one insert must displace *several* blocks, every victim past
+    /// the first is offered here before it is evicted: may `candidate`
+    /// displace `victim` too? Must be a pure comparison (no admission
+    /// bookkeeping — [`AdmissionPolicy::admit`] already ran for this
+    /// candidate). Returning `false` aborts the insert, keeping `victim`
+    /// cached. Default: yes, evict freely — only frequency-duel admissions
+    /// compare per victim.
+    fn admit_over(&mut self, _candidate: BlockId, _ctx: &AccessContext, _victim: BlockId) -> bool {
+        true
+    }
+
+    /// `block` left the cache (policy eviction or external uncache).
+    fn on_evict(&mut self, block: BlockId);
+}
+
+/// Admission counters kept by the owning cache. `admitted` counts inserts
+/// the admission layer allowed end to end (through every per-victim duel);
+/// `rejected` counts candidates it vetoed — at the gate or against a later
+/// victim. Oversized blocks, inserts the replacement policy itself declined
+/// and inserts the policy refused to make room for are counted in neither
+/// bucket.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmissionStats {
+    pub admitted: u64,
+    pub rejected: u64,
+}
+
+impl AdmissionStats {
+    pub fn merge(&mut self, other: &AdmissionStats) {
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+    }
+
+    /// Fraction of admission decisions that were rejections.
+    pub fn reject_ratio(&self) -> f64 {
+        let total = self.admitted + self.rejected;
+        if total == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / total as f64
+        }
+    }
+}
+
+/// Admit everything — the exact pre-admission behaviour. `on_access` and
+/// `on_evict` are no-ops and `admit` never touches the victim probe, so a
+/// cache built with this policy is bit-identical to one built before the
+/// admission layer existed (property-tested in
+/// rust/tests/property_admission.rs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AlwaysAdmit;
+
+impl AdmissionPolicy for AlwaysAdmit {
+    fn name(&self) -> &'static str {
+        "always"
+    }
+
+    fn on_access(&mut self, _block: BlockId, _ctx: &AccessContext) {}
+
+    fn admit(
+        &mut self,
+        _candidate: BlockId,
+        _ctx: &AccessContext,
+        _victim: &mut dyn FnMut() -> Option<BlockId>,
+    ) -> bool {
+        true
+    }
+
+    fn on_evict(&mut self, _block: BlockId) {}
+}
+
+/// All registered admission-policy names, in presentation order.
+pub const ADMISSION_NAMES: &[&str] = &["always", "tinylfu", "ghost", "svm"];
+
+/// Instantiate an admission policy by name with its default parameters.
+pub fn make_admission(name: &str) -> Option<Box<dyn AdmissionPolicy>> {
+    Some(match name {
+        "always" => Box::new(AlwaysAdmit),
+        "tinylfu" => Box::new(TinyLfu::with_capacity(1024)),
+        "ghost" => Box::new(GhostProbation::new(1024)),
+        "svm" => Box::new(SvmAdmit),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+
+    #[test]
+    fn every_registered_name_constructs() {
+        for name in ADMISSION_NAMES {
+            let a = make_admission(name).unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(&a.name(), name);
+        }
+        assert!(make_admission("nonsense").is_none());
+    }
+
+    #[test]
+    fn always_admits_without_probing_the_victim() {
+        let mut a = AlwaysAdmit;
+        let ctx = AccessContext::simple(SimTime(0), 1);
+        let mut probed = false;
+        let mut probe = || {
+            probed = true;
+            Some(BlockId(7))
+        };
+        assert!(a.admit(BlockId(1), &ctx, &mut probe));
+        assert!(!probed, "always must never consult the victim");
+    }
+
+    #[test]
+    fn stats_merge_and_ratio() {
+        let mut a = AdmissionStats { admitted: 3, rejected: 1 };
+        let b = AdmissionStats { admitted: 1, rejected: 3 };
+        a.merge(&b);
+        assert_eq!(a, AdmissionStats { admitted: 4, rejected: 4 });
+        assert!((a.reject_ratio() - 0.5).abs() < 1e-12);
+        assert_eq!(AdmissionStats::default().reject_ratio(), 0.0);
+    }
+}

@@ -1,0 +1,60 @@
+//! SVM-predicted admission: the trained classifier's "reused in the
+//! future" decision, applied at insert time instead of (or in addition to)
+//! eviction time.
+//!
+//! The coordinator already batch-scores every request and stamps the class
+//! into [`AccessContext::predicted_reuse`] before the cache sees it (the
+//! same deployment the H-SVM-LRU eviction policy consumes, batched through
+//! `coordinator::batcher` and retrained by `coordinator::training_pipeline`)
+//! — so this policy is a pure read of that prediction. A block the model
+//! expects never to be re-read is refused outright; while no model is
+//! deployed yet (`predicted_reuse == None`) everything is admitted, which
+//! keeps cold-start behaviour identical to `always`.
+
+use crate::hdfs::BlockId;
+
+use super::super::AccessContext;
+use super::AdmissionPolicy;
+
+/// Admit iff the deployed classifier does not predict "no future reuse".
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SvmAdmit;
+
+impl AdmissionPolicy for SvmAdmit {
+    fn name(&self) -> &'static str {
+        "svm"
+    }
+
+    fn on_access(&mut self, _block: BlockId, _ctx: &AccessContext) {}
+
+    fn admit(
+        &mut self,
+        _candidate: BlockId,
+        ctx: &AccessContext,
+        _victim: &mut dyn FnMut() -> Option<BlockId>,
+    ) -> bool {
+        ctx.predicted_reuse != Some(false)
+    }
+
+    fn on_evict(&mut self, _block: BlockId) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+
+    fn admit_with(prediction: Option<bool>) -> bool {
+        let mut ctx = AccessContext::simple(SimTime(0), 1);
+        ctx.predicted_reuse = prediction;
+        let mut no_victim = || None::<BlockId>;
+        SvmAdmit.admit(BlockId(1), &ctx, &mut no_victim)
+    }
+
+    #[test]
+    fn follows_the_classifier() {
+        assert!(admit_with(Some(true)), "predicted reuse is admitted");
+        assert!(!admit_with(Some(false)), "predicted pollution is refused");
+        assert!(admit_with(None), "no deployed model admits everything");
+    }
+}

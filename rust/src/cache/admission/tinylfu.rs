@@ -1,0 +1,125 @@
+//! TinyLFU admission: admit a candidate only if its estimated access
+//! frequency beats the eviction victim it would displace.
+//!
+//! The estimator is the 4-bit Count-Min sketch + doorkeeper of
+//! [`frequency`](super::frequency); every request feeds it (first sighting
+//! goes to the doorkeeper, repeats into the sketch), and the periodic
+//! sketch halving clears the doorkeeper so the whole estimate ages
+//! together. A scan flood therefore shows up as estimate ≈ 1 while the
+//! resident working set accumulates higher counts — the flood loses every
+//! admission duel and the working set stays cached.
+
+use crate::hdfs::BlockId;
+
+use super::super::AccessContext;
+use super::frequency::{Doorkeeper, FrequencySketch};
+use super::AdmissionPolicy;
+
+/// TinyLFU frequency-duel admission.
+pub struct TinyLfu {
+    sketch: FrequencySketch,
+    doorkeeper: Doorkeeper,
+}
+
+impl TinyLfu {
+    /// Estimator sized for roughly `capacity` distinct hot blocks.
+    pub fn with_capacity(capacity: usize) -> Self {
+        TinyLfu {
+            sketch: FrequencySketch::with_capacity(capacity),
+            doorkeeper: Doorkeeper::with_capacity(capacity),
+        }
+    }
+
+    /// Combined frequency estimate: sketch count plus the doorkeeper bit.
+    pub fn estimate(&self, block: BlockId) -> u32 {
+        self.sketch.estimate(block) + u32::from(self.doorkeeper.contains(block))
+    }
+}
+
+impl AdmissionPolicy for TinyLfu {
+    fn name(&self) -> &'static str {
+        "tinylfu"
+    }
+
+    fn on_access(&mut self, block: BlockId, _ctx: &AccessContext) {
+        // First sighting stops at the doorkeeper; repeats count in the
+        // sketch, whose periodic halving also resets the doorkeeper.
+        if !self.doorkeeper.insert(block) && self.sketch.increment(block) {
+            self.doorkeeper.clear();
+        }
+    }
+
+    fn admit(
+        &mut self,
+        candidate: BlockId,
+        _ctx: &AccessContext,
+        victim: &mut dyn FnMut() -> Option<BlockId>,
+    ) -> bool {
+        match victim() {
+            // Room available (or the policy refuses to evict): nobody is
+            // displaced, so there is no duel to lose.
+            None => true,
+            Some(v) => self.estimate(candidate) > self.estimate(v),
+        }
+    }
+
+    fn admit_over(&mut self, candidate: BlockId, _ctx: &AccessContext, victim: BlockId) -> bool {
+        // A multi-eviction insert must beat EVERY block it displaces, not
+        // just the first — otherwise a mid-frequency candidate could ride
+        // one cheap victory into evicting a hot block duel-free.
+        self.estimate(candidate) > self.estimate(victim)
+    }
+
+    fn on_evict(&mut self, _block: BlockId) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimTime;
+
+    fn ctx() -> AccessContext {
+        AccessContext::simple(SimTime(0), 1)
+    }
+
+    #[test]
+    fn frequent_candidate_beats_rare_victim() {
+        let mut t = TinyLfu::with_capacity(64);
+        for _ in 0..4 {
+            t.on_access(BlockId(1), &ctx());
+        }
+        t.on_access(BlockId(2), &ctx());
+        assert!(t.estimate(BlockId(1)) > t.estimate(BlockId(2)));
+        let mut victim = || Some(BlockId(2));
+        assert!(t.admit(BlockId(1), &ctx(), &mut victim));
+        let mut victim = || Some(BlockId(1));
+        assert!(!t.admit(BlockId(2), &ctx(), &mut victim), "rare loses the duel");
+    }
+
+    #[test]
+    fn equal_frequency_rejects_the_candidate() {
+        // Ties keep the incumbent: churn needs strict evidence.
+        let mut t = TinyLfu::with_capacity(64);
+        t.on_access(BlockId(1), &ctx());
+        t.on_access(BlockId(2), &ctx());
+        let mut victim = || Some(BlockId(1));
+        assert!(!t.admit(BlockId(2), &ctx(), &mut victim));
+    }
+
+    #[test]
+    fn admits_freely_while_there_is_room() {
+        let mut t = TinyLfu::with_capacity(64);
+        let mut no_victim = || None::<BlockId>;
+        assert!(t.admit(BlockId(99), &ctx(), &mut no_victim));
+    }
+
+    #[test]
+    fn first_access_lands_in_doorkeeper_only() {
+        let mut t = TinyLfu::with_capacity(64);
+        t.on_access(BlockId(5), &ctx());
+        assert_eq!(t.sketch.estimate(BlockId(5)), 0, "first hit is doorkeeper-only");
+        assert_eq!(t.estimate(BlockId(5)), 1);
+        t.on_access(BlockId(5), &ctx());
+        assert_eq!(t.estimate(BlockId(5)), 2);
+    }
+}

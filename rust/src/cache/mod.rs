@@ -19,7 +19,14 @@
 //! | `block_goodness`  | block-goodness (affinity x access count) |
 //! | `affinity_aware`  | cache-affinity-aware caching benefit |
 //! | `autocache`       | AutoCache-style probability score + watermarks |
+//!
+//! In front of any policy sits an [`admission`] layer
+//! ([`admission::AdmissionPolicy`]): insert-time pollution control that can
+//! refuse to cache a block at all (`always` / `tinylfu` / `ghost` / `svm`).
+//! The default `always` admits everything and is bit-identical to a cache
+//! without the layer.
 
+pub mod admission;
 pub mod affinity_aware;
 pub mod arc;
 pub mod autocache;
@@ -36,6 +43,7 @@ pub mod sharded;
 pub mod slru_k;
 pub mod wsclock;
 
+pub use admission::{AdmissionPolicy, AdmissionStats, AlwaysAdmit};
 pub use sharded::{shard_of, ShardStats, ShardedCache};
 
 use crate::util::fasthash::IdHashMap;
@@ -156,9 +164,13 @@ pub struct AccessOutcome {
     pub inserted: bool,
 }
 
-/// Capacity-accounted cache driving a `CachePolicy`.
+/// Capacity-accounted cache driving a `CachePolicy`, guarded by an
+/// [`AdmissionPolicy`] (default [`AlwaysAdmit`], which is bit-identical to
+/// having no admission layer at all).
 pub struct BlockCache {
     policy: Box<dyn CachePolicy>,
+    admission: Box<dyn AdmissionPolicy>,
+    admission_stats: AdmissionStats,
     capacity: u64,
     used: u64,
     sizes: IdHashMap<BlockId, u64>,
@@ -166,11 +178,40 @@ pub struct BlockCache {
 
 impl BlockCache {
     pub fn new(policy: Box<dyn CachePolicy>, capacity: u64) -> Self {
-        BlockCache { policy, capacity, used: 0, sizes: IdHashMap::default() }
+        Self::with_admission(policy, Box::new(AlwaysAdmit), capacity)
+    }
+
+    /// A cache whose inserts are gated by `admission`.
+    pub fn with_admission(
+        policy: Box<dyn CachePolicy>,
+        admission: Box<dyn AdmissionPolicy>,
+        capacity: u64,
+    ) -> Self {
+        BlockCache {
+            policy,
+            admission,
+            admission_stats: AdmissionStats::default(),
+            capacity,
+            used: 0,
+            sizes: IdHashMap::default(),
+        }
     }
 
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
+    }
+
+    pub fn admission_name(&self) -> &'static str {
+        self.admission.name()
+    }
+
+    /// Admission decisions made so far (admitted vs rejected inserts).
+    pub fn admission_stats(&self) -> AdmissionStats {
+        self.admission_stats
+    }
+
+    pub fn reset_admission_stats(&mut self) {
+        self.admission_stats = AdmissionStats::default();
     }
 
     pub fn capacity(&self) -> u64 {
@@ -207,6 +248,7 @@ impl BlockCache {
     /// evictions as needed. Mirrors GetCache/PutCache at the cache level.
     pub fn access_or_insert(&mut self, block: BlockId, ctx: &AccessContext) -> AccessOutcome {
         if self.sizes.contains_key(&block) {
+            self.admission.on_access(block, ctx);
             self.policy.on_hit(block, ctx);
             debug_assert_eq!(self.policy.len(), self.sizes.len());
             return AccessOutcome { hit: true, evicted: Vec::new(), inserted: true };
@@ -217,24 +259,64 @@ impl BlockCache {
     }
 
     /// Insert a missing block, evicting per policy until it fits. Returns
-    /// the evicted blocks. Oversized or policy-declined blocks are skipped.
+    /// the evicted blocks. Oversized, policy-declined or admission-refused
+    /// blocks are skipped.
     pub fn insert(&mut self, block: BlockId, ctx: &AccessContext) -> Vec<BlockId> {
         assert!(!self.sizes.contains_key(&block), "insert of cached block");
+        self.admission.on_access(block, ctx);
         let mut evicted = Vec::new();
         if ctx.size > self.capacity || !self.policy.admits(block, ctx) {
             return evicted;
         }
-        while self.used + ctx.size > self.capacity {
-            match self.policy.choose_victim(ctx.time) {
-                Some(victim) => {
-                    self.policy.on_evict(victim);
-                    let size = self.sizes.remove(&victim).expect("victim not in cache");
-                    self.used -= size;
-                    evicted.push(victim);
+        // Admission gate. The victim probe is lazy: it only runs (and only
+        // advances the policy's victim-selection state) when the admission
+        // policy actually compares against a victim, and only when the
+        // insert would displace someone — `AlwaysAdmit` never triggers it,
+        // keeping the default path bit-identical to the pre-admission cache.
+        let mut peeked: Option<BlockId> = None;
+        let needs_evict = self.used + ctx.size > self.capacity;
+        {
+            let policy = &mut self.policy;
+            let peeked = &mut peeked;
+            let mut probe = move || {
+                if !needs_evict {
+                    return None;
                 }
-                None => return evicted, // policy refuses to evict
+                if peeked.is_none() {
+                    *peeked = policy.choose_victim(ctx.time);
+                }
+                *peeked
+            };
+            if !self.admission.admit(block, ctx, &mut probe) {
+                self.admission_stats.rejected += 1;
+                return evicted;
             }
         }
+        while self.used + ctx.size > self.capacity {
+            // Consume the admission probe's victim first so the policy is
+            // asked exactly once per eviction; it was already dueled inside
+            // `admit`. Every further victim gets its own duel — a
+            // multi-eviction insert must beat each block it displaces.
+            let victim = match peeked.take() {
+                Some(victim) => victim,
+                None => match self.policy.choose_victim(ctx.time) {
+                    Some(victim) => {
+                        if !self.admission.admit_over(block, ctx, victim) {
+                            self.admission_stats.rejected += 1;
+                            return evicted;
+                        }
+                        victim
+                    }
+                    None => return evicted, // policy refuses to evict
+                },
+            };
+            self.policy.on_evict(victim);
+            self.admission.on_evict(victim);
+            let size = self.sizes.remove(&victim).expect("victim not in cache");
+            self.used -= size;
+            evicted.push(victim);
+        }
+        self.admission_stats.admitted += 1;
         self.policy.on_insert(block, ctx);
         self.sizes.insert(block, ctx.size);
         self.used += ctx.size;
@@ -248,6 +330,7 @@ impl BlockCache {
             Some(size) => {
                 self.used -= size;
                 self.policy.on_evict(block);
+                self.admission.on_evict(block);
                 true
             }
             None => false,
@@ -297,6 +380,72 @@ mod tests {
         assert!(!cache.remove(BlockId(1)));
         assert_eq!(cache.used(), 0);
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn admission_gate_refuses_and_counts() {
+        let mut cache = BlockCache::with_admission(
+            Box::new(Lru::new()),
+            admission::make_admission("ghost").unwrap(),
+            300,
+        );
+        assert_eq!(cache.admission_name(), "ghost");
+        // First sighting: probation, not cached.
+        let o = cache.access_or_insert(BlockId(1), &ctx(1, 100));
+        assert!(!o.hit && !o.inserted);
+        assert_eq!(cache.admission_stats(), AdmissionStats { admitted: 0, rejected: 1 });
+        // Re-reference: admitted and cached.
+        let o = cache.access_or_insert(BlockId(1), &ctx(2, 100));
+        assert!(!o.hit && o.inserted);
+        assert_eq!(cache.admission_stats(), AdmissionStats { admitted: 1, rejected: 1 });
+        assert!(cache.access_or_insert(BlockId(1), &ctx(3, 100)).hit);
+        cache.reset_admission_stats();
+        assert_eq!(cache.admission_stats(), AdmissionStats::default());
+    }
+
+    #[test]
+    fn tinylfu_duel_protects_the_hot_set() {
+        let mut cache = BlockCache::with_admission(
+            Box::new(Lru::new()),
+            admission::make_admission("tinylfu").unwrap(),
+            2,
+        );
+        // Two hot blocks, re-accessed: high estimated frequency.
+        for t in 0..6u64 {
+            cache.access_or_insert(BlockId(t % 2), &ctx(t, 1));
+        }
+        assert_eq!(cache.len(), 2);
+        // A one-pass scan block loses the frequency duel with the victim.
+        let o = cache.access_or_insert(BlockId(99), &ctx(10, 1));
+        assert!(!o.inserted && o.evicted.is_empty(), "scan must not displace hot");
+        assert!(cache.contains(BlockId(0)) && cache.contains(BlockId(1)));
+        assert_eq!(cache.admission_stats().rejected, 1);
+    }
+
+    #[test]
+    fn tinylfu_duels_every_victim_of_a_multi_eviction_insert() {
+        let mut cache = BlockCache::with_admission(
+            Box::new(Lru::new()),
+            admission::make_admission("tinylfu").unwrap(),
+            4,
+        );
+        // X: hot, size 2 (insert + 3 more accesses). Y: cold, size 2.
+        cache.access_or_insert(BlockId(1), &ctx(1, 2)); // X
+        cache.access_or_insert(BlockId(2), &ctx(2, 2)); // Y
+        for t in 3..6u64 {
+            cache.access_or_insert(BlockId(1), &ctx(t, 2)); // X hits
+        }
+        // Candidate C (size 4, seen twice) beats cold Y but must ALSO beat
+        // hot X to displace both — it loses that second duel, so the
+        // insert aborts and the hot block survives.
+        cache.access_or_insert(BlockId(3), &ctx(10, 4)); // C: estimate -> 1, gate-rejected
+        let o = cache.access_or_insert(BlockId(3), &ctx(11, 4)); // C: estimate 2 > Y's 1
+        assert!(!o.inserted, "C must not displace the hot block");
+        assert_eq!(o.evicted, vec![BlockId(2)], "C won only the duel against Y");
+        assert!(cache.contains(BlockId(1)), "hot block survives the second duel");
+        assert!(!cache.contains(BlockId(3)));
+        // X and Y's own inserts were admitted; C was vetoed twice.
+        assert_eq!(cache.admission_stats(), AdmissionStats { admitted: 2, rejected: 2 });
     }
 
     #[test]

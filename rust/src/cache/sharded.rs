@@ -29,6 +29,7 @@ use std::sync::Mutex;
 use crate::hdfs::BlockId;
 use crate::util::fasthash::IdHasher;
 
+use super::admission::{make_admission, AdmissionPolicy, AlwaysAdmit};
 use super::registry::make_policy;
 use super::{AccessContext, AccessOutcome, BlockCache, CachePolicy};
 
@@ -53,6 +54,12 @@ pub struct ShardStats {
     pub misses: u64,
     pub evictions: u64,
     pub insertions: u64,
+    /// Candidate inserts the admission layer allowed (see
+    /// [`crate::cache::admission::AdmissionStats`]; always 0-rejected under
+    /// the default `always` admission).
+    pub admitted: u64,
+    /// Candidate inserts the admission layer refused.
+    pub rejected: u64,
 }
 
 impl ShardStats {
@@ -62,6 +69,8 @@ impl ShardStats {
         self.misses += other.misses;
         self.evictions += other.evictions;
         self.insertions += other.insertions;
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
     }
 
     pub fn hit_ratio(&self) -> f64 {
@@ -93,17 +102,38 @@ impl ShardedCache {
     /// `policies.len()`). Total capacity is split evenly with the remainder
     /// on the first shards so the per-shard capacities sum exactly.
     pub fn new(policies: Vec<Box<dyn CachePolicy>>, total_capacity: u64) -> Self {
+        let admissions = policies
+            .iter()
+            .map(|_| Box::new(AlwaysAdmit) as Box<dyn AdmissionPolicy>)
+            .collect();
+        Self::with_admission(policies, admissions, total_capacity)
+    }
+
+    /// Build with one admission-policy instance per shard (paired with
+    /// `policies` by index). Per-shard admission state lives behind the
+    /// shard's own lock, so the hot path stays lock-free across shards.
+    pub fn with_admission(
+        policies: Vec<Box<dyn CachePolicy>>,
+        admissions: Vec<Box<dyn AdmissionPolicy>>,
+        total_capacity: u64,
+    ) -> Self {
         assert!(!policies.is_empty(), "sharded cache needs at least one shard");
+        assert_eq!(
+            policies.len(),
+            admissions.len(),
+            "one admission policy per shard"
+        );
         let n = policies.len() as u64;
         let base = total_capacity / n;
         let rem = total_capacity % n;
         let shards = policies
             .into_iter()
+            .zip(admissions)
             .enumerate()
-            .map(|(i, policy)| {
+            .map(|(i, (policy, admission))| {
                 let cap = base + u64::from((i as u64) < rem);
                 Mutex::new(Shard {
-                    cache: BlockCache::new(policy, cap),
+                    cache: BlockCache::with_admission(policy, admission, cap),
                     stats: ShardStats::default(),
                 })
             })
@@ -114,10 +144,24 @@ impl ShardedCache {
     /// Build `n_shards` shards of the registry policy `name` (None for an
     /// unknown policy name).
     pub fn from_registry(name: &str, n_shards: usize, total_capacity: u64) -> Option<Self> {
-        let policies = (0..n_shards.max(1))
-            .map(|_| make_policy(name))
+        Self::from_registry_with_admission(name, "always", n_shards, total_capacity)
+    }
+
+    /// Build `n_shards` shards of the registry policy `name`, each guarded
+    /// by its own instance of the registry admission policy `admission`
+    /// (None when either name is unknown).
+    pub fn from_registry_with_admission(
+        name: &str,
+        admission: &str,
+        n_shards: usize,
+        total_capacity: u64,
+    ) -> Option<Self> {
+        let n = n_shards.max(1);
+        let policies = (0..n).map(|_| make_policy(name)).collect::<Option<Vec<_>>>()?;
+        let admissions = (0..n)
+            .map(|_| make_admission(admission))
             .collect::<Option<Vec<_>>>()?;
-        Some(Self::new(policies, total_capacity))
+        Some(Self::with_admission(policies, admissions, total_capacity))
     }
 
     pub fn n_shards(&self) -> usize {
@@ -137,6 +181,10 @@ impl ShardedCache {
         self.shards[0].lock().expect("shard poisoned").cache.policy_name()
     }
 
+    pub fn admission_name(&self) -> &'static str {
+        self.shards[0].lock().expect("shard poisoned").cache.admission_name()
+    }
+
     /// The full access path on the owning shard: hit (policy notified) or
     /// miss + insertion with evictions as needed. Stats accumulate on the
     /// same shard under the same lock.
@@ -151,6 +199,7 @@ impl ShardedCache {
             shard.stats.insertions += u64::from(outcome.inserted);
         }
         shard.stats.evictions += outcome.evicted.len() as u64;
+        Self::sync_admission(&mut shard);
         outcome
     }
 
@@ -166,7 +215,16 @@ impl ShardedCache {
         shard.stats.misses += 1;
         shard.stats.evictions += evicted.len() as u64;
         shard.stats.insertions += u64::from(shard.cache.contains(block));
+        Self::sync_admission(&mut shard);
         evicted
+    }
+
+    /// Mirror the shard cache's admission counters into the shard stats so
+    /// per-shard and merged stats always carry them.
+    fn sync_admission(shard: &mut Shard) {
+        let a = shard.cache.admission_stats();
+        shard.stats.admitted = a.admitted;
+        shard.stats.rejected = a.rejected;
     }
 
     /// Externally remove a block (user uncache directive).
@@ -214,6 +272,12 @@ impl ShardedCache {
         })
     }
 
+    /// Hit ratio computed from the merged counters — THE hit-ratio of a
+    /// sharded replay (callers must not recompute it from per-shard parts).
+    pub fn hit_ratio(&self) -> f64 {
+        self.stats().hit_ratio()
+    }
+
     /// Per-shard counters, in shard order.
     pub fn shard_stats(&self) -> Vec<ShardStats> {
         self.shards
@@ -227,10 +291,13 @@ impl ShardedCache {
         self.shards[shard].lock().expect("shard poisoned").stats
     }
 
-    /// Zero the access counters on every shard (cached contents stay).
+    /// Zero the access counters on every shard (cached contents and learned
+    /// admission state stay).
     pub fn reset_stats(&self) {
         for s in &self.shards {
-            s.lock().expect("shard poisoned").stats = ShardStats::default();
+            let mut shard = s.lock().expect("shard poisoned");
+            shard.stats = ShardStats::default();
+            shard.cache.reset_admission_stats();
         }
     }
 
@@ -345,6 +412,38 @@ mod tests {
         let c = ShardedCache::from_registry("h-svm-lru", 2, 8).unwrap();
         assert_eq!(c.n_shards(), 2);
         assert_eq!(c.policy_name(), "h-svm-lru");
+        assert_eq!(c.admission_name(), "always");
+    }
+
+    #[test]
+    fn registry_constructor_rejects_unknown_admission() {
+        assert!(ShardedCache::from_registry_with_admission("lru", "nonsense", 2, 8).is_none());
+        let c = ShardedCache::from_registry_with_admission("lru", "tinylfu", 2, 8).unwrap();
+        assert_eq!(c.admission_name(), "tinylfu");
+    }
+
+    #[test]
+    fn admission_counters_flow_into_merged_stats() {
+        // Ghost probation: every first sighting is refused, the second
+        // admits — both outcomes must show up in the merged counters.
+        let c = ShardedCache::from_registry_with_admission("lru", "ghost", 2, 8).unwrap();
+        for round in 0..2u64 {
+            for id in 0..6u64 {
+                c.access_or_insert(BlockId(id), &ctx(round * 6 + id, 1));
+            }
+        }
+        let stats = c.stats();
+        assert_eq!(stats.rejected, 6, "first sightings on probation");
+        assert_eq!(stats.admitted, 6, "re-references admitted");
+        assert_eq!(stats.insertions, 6);
+        let by_hand = c.shard_stats().iter().fold(ShardStats::default(), |mut acc, s| {
+            acc.merge(s);
+            acc
+        });
+        assert_eq!(stats, by_hand, "per-shard admission counters must merge");
+        assert_eq!(c.hit_ratio(), stats.hit_ratio());
+        c.reset_stats();
+        assert_eq!(c.stats(), ShardStats::default());
     }
 
     #[test]

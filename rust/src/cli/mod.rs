@@ -60,6 +60,7 @@ impl Cli {
             "--repetitions",
             "--input-gb",
             "--shards",
+            "--admission",
         ];
         let mut i = 0;
         while i < args.len() {
@@ -171,6 +172,9 @@ SUBCOMMANDS
                [--policy P] [--failures] [--prefetch] [--shards N]
   sharded      shard-parallel trace replay sweep (1..N shards on scoped
                threads) [--policy P] [--shards N] [--cache-blocks N]
+  admission    eviction × admission sweep over the Fig 3 trace and the
+               scan-storm pollution adversary [--smoke] [--shards N]
+               [--cache-blocks N]
   all          every experiment in sequence
 
 FLAGS
@@ -181,6 +185,8 @@ FLAGS
   --scale F                workload scale for fig5/fig6 (default 0.05)
   --cache-blocks N         cache size for `policies`/`sharded` (default 8)
   --shards N               cache shards per node / replay workers
+  --admission A            always|tinylfu|ghost|svm admission for `simulate`
+  --smoke                  `admission`: lru + h-svm-lru only (CI smoke)
   --csv                    CSV output
   --config FILE            TOML config file
   --log-level L            off|error|warn|info|debug|trace
@@ -223,6 +229,16 @@ mod tests {
         assert!(cli.scale().is_err());
         let cli = parse(&["fig5"]);
         assert!(cli.scale().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn admission_flag_is_valued_and_smoke_is_a_switch() {
+        let cli = parse(&["simulate", "--admission", "tinylfu"]);
+        assert_eq!(cli.flag("admission"), Some("tinylfu"));
+        let cli = parse(&["admission", "--smoke"]);
+        assert_eq!(cli.command, "admission");
+        assert!(cli.switch("smoke"));
+        assert!(Cli::parse(&["simulate".into(), "--admission".into()]).is_err());
     }
 
     #[test]

@@ -67,6 +67,10 @@ pub struct ClusterConfig {
     /// Independently locked cache shards per DataNode (1 = the paper's
     /// single LRU stack; more enables concurrent shard replay).
     pub cache_shards: usize,
+    /// Insert-time admission policy in front of every shard's replacement
+    /// policy: "always" (default, the paper's behaviour), "tinylfu",
+    /// "ghost" or "svm" (see `cache::admission`).
+    pub cache_admission: String,
     /// Map container memory (mapreduce.map.memory.mb) — bounds map slots.
     pub map_memory_mb: u64,
     /// Reduce container memory (mapreduce.reduce.memory.mb).
@@ -94,6 +98,7 @@ impl Default for ClusterConfig {
             block_size: 128 * MB,
             cache_capacity_per_node: (1.5 * GB as f64) as u64,
             cache_shards: 1,
+            cache_admission: "always".into(),
             map_memory_mb: 1024,
             reduce_memory_mb: 2048,
             node_memory_mb: 16 * 1024,
@@ -143,6 +148,13 @@ impl ClusterConfig {
         if self.cache_shards == 0 {
             bail!("cache_shards must be > 0");
         }
+        if crate::cache::admission::make_admission(&self.cache_admission).is_none() {
+            bail!(
+                "cache admission must be one of {:?}, got {:?}",
+                crate::cache::admission::ADMISSION_NAMES,
+                self.cache_admission
+            );
+        }
         if self.disk.read_bandwidth_bps <= 0.0
             || self.network.bandwidth_bps <= 0.0
             || self.memory.read_bandwidth_bps <= 0.0
@@ -176,6 +188,9 @@ impl ClusterConfig {
                 bail!("cluster.cache_shards must be positive, got {v}");
             }
             self.cache_shards = v as usize;
+        }
+        if let Some(v) = doc.get_str("cluster.admission") {
+            self.cache_admission = v.to_string();
         }
         if let Some(v) = doc.get_i64("cluster.map_memory_mb") {
             self.map_memory_mb = v as u64;
@@ -364,6 +379,19 @@ kernel = "linear"
         assert_eq!(c.cache_shards, 8);
         // A negative count must be a config error, not a usize wraparound.
         let doc = toml::Document::parse("[cluster]\ncache_shards = -1").unwrap();
+        assert!(ClusterConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn cache_admission_validated_and_overridable() {
+        assert_eq!(ClusterConfig::default().cache_admission, "always");
+        let c = ClusterConfig { cache_admission: "lfu".into(), ..Default::default() };
+        assert!(c.validate().is_err(), "unknown admission must be rejected");
+        let doc = toml::Document::parse("[cluster]\nadmission = \"tinylfu\"").unwrap();
+        let mut c = ClusterConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.cache_admission, "tinylfu");
+        let doc = toml::Document::parse("[cluster]\nadmission = \"nonsense\"").unwrap();
         assert!(ClusterConfig::default().apply_toml(&doc).is_err());
     }
 

@@ -27,9 +27,12 @@ use crate::util::fasthash::IdHashMap;
 
 use anyhow::Result;
 
+use crate::cache::admission::make_admission;
 use crate::cache::registry::make_policy;
 use crate::cache::{AccessContext, CacheAffinity, ShardStats, ShardedCache};
-use crate::hdfs::{classify, service_time, BlockId, BlockKind, BlockLocation, DataNodeId, ReadSource};
+use crate::hdfs::{
+    classify, service_time, BlockId, BlockKind, BlockLocation, DataNodeId, ReadSource,
+};
 use crate::mapreduce::{AccessRequest, BlockRead, BlockService};
 use crate::runtime::SvmBackend;
 use crate::sim::{SimDuration, SimTime};
@@ -124,6 +127,7 @@ impl CacheCoordinator {
             CacheMode::NoCache => (Vec::new(), false),
             CacheMode::Cached { policy } => {
                 let shards = cluster.cfg.cache_shards.max(1);
+                let admission = cluster.cfg.cache_admission.as_str();
                 let caches = (0..cluster.cfg.datanodes)
                     .map(|_| {
                         let policies = (0..shards)
@@ -133,18 +137,29 @@ impl CacheCoordinator {
                                 })
                             })
                             .collect::<Result<Vec<_>>>()?;
-                        Ok(ShardedCache::new(
+                        let admissions = (0..shards)
+                            .map(|_| {
+                                make_admission(admission).ok_or_else(|| {
+                                    anyhow::anyhow!("unknown admission policy {admission:?}")
+                                })
+                            })
+                            .collect::<Result<Vec<_>>>()?;
+                        Ok(ShardedCache::with_admission(
                             policies,
+                            admissions,
                             cluster.cfg.cache_capacity_per_node,
                         ))
                     })
                     .collect::<Result<Vec<_>>>()?;
-                let uses_svm = matches!(policy.as_str(), "h-svm-lru" | "autocache");
+                // The SVM must score requests when either the eviction
+                // policy or the admission layer consumes predictions.
+                let uses_svm =
+                    matches!(policy.as_str(), "h-svm-lru" | "autocache") || admission == "svm";
                 (caches, uses_svm)
             }
         };
         if svm_enabled && backend.is_none() {
-            anyhow::bail!("policy requires an SVM backend but none was provided");
+            anyhow::bail!("policy or admission requires an SVM backend but none was provided");
         }
         let batch_width = 64;
         let block_size = cluster.cfg.block_size;
@@ -193,6 +208,11 @@ impl CacheCoordinator {
 
     pub fn backend_name(&self) -> &'static str {
         self.backend.as_ref().map(|b| b.name()).unwrap_or("none")
+    }
+
+    /// Active admission policy ("none" in NoCache mode).
+    pub fn admission_name(&self) -> &'static str {
+        self.caches.first().map(|c| c.admission_name()).unwrap_or("none")
     }
 
     pub fn batcher_stats(&self) -> super::batcher::BatcherStats {
@@ -812,6 +832,63 @@ mod tests {
         c.reset_for_measurement();
         assert_eq!(c.cache_stats(), ShardStats::default());
         assert_eq!(c.cached_blocks(), 0);
+    }
+
+    #[test]
+    fn ghost_admission_keeps_metadata_consistent() {
+        let cfg = ClusterConfig {
+            datanodes: 1,
+            replication: 1,
+            block_size: 128 * MB,
+            cache_capacity_per_node: 4 * 128 * MB,
+            cache_admission: "ghost".into(),
+            ..Default::default()
+        };
+        let mut cluster = Cluster::provision(&cfg);
+        cluster.add_input("data", 2 * GB);
+        let mut c = CacheCoordinator::new(
+            cluster,
+            CacheMode::Cached { policy: "lru".to_string() },
+            None,
+        )
+        .unwrap();
+        assert_eq!(c.admission_name(), "ghost");
+        let req = AccessRequest {
+            app: "Grep".into(),
+            affinity: CacheAffinity::High,
+            kind: BlockKind::Input,
+            file: 0,
+            file_width: 4,
+            file_complete: false,
+        };
+        let b = BlockId(0);
+        // 1st read: probation — the block must NOT be cached anywhere.
+        let r1 = c.read_block(b, DataNodeId(0), SimTime(0), &req);
+        assert!(!r1.source.is_cache());
+        assert!(!c.cluster.datanodes[0].is_cached(b));
+        assert!(!c.cluster.namenode.is_cached(b));
+        // 2nd read: re-reference admits; 3rd read is a cache hit.
+        let r2 = c.read_block(b, DataNodeId(0), SimTime(1_000), &req);
+        assert!(!r2.source.is_cache());
+        assert!(c.cluster.datanodes[0].is_cached(b));
+        let r3 = c.read_block(b, DataNodeId(0), SimTime(2_000), &req);
+        assert!(r3.source.is_cache());
+        let cs = c.cache_stats();
+        assert_eq!(cs.rejected, 1);
+        assert_eq!(cs.admitted, 1);
+        assert_eq!(c.process_cache_reports(), 0, "admission must not drift metadata");
+    }
+
+    #[test]
+    fn svm_admission_requires_backend() {
+        let cfg = ClusterConfig { cache_admission: "svm".into(), ..Default::default() };
+        let cluster = Cluster::provision(&cfg);
+        let r = CacheCoordinator::new(
+            cluster,
+            CacheMode::Cached { policy: "lru".into() },
+            None,
+        );
+        assert!(r.is_err(), "svm admission without a backend must fail");
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Admission-control sweep: every eviction policy crossed with every
+//! admission policy, replayed over the Fig 3 trace and the scan-storm
+//! pollution adversary — the `repro admission` driver.
+//!
+//! The classifier pass runs once per trace (predictions depend on neither
+//! the eviction policy nor the admission policy), then each (policy,
+//! admission) cell replays the identical request stream on a fresh cache.
+//! The `always` column is the pre-admission behaviour, so any improvement
+//! in the other columns is attributable to admission control alone.
+
+use anyhow::Result;
+
+use crate::cache::admission::ADMISSION_NAMES;
+use crate::cache::registry::POLICY_NAMES;
+use crate::svm::KernelKind;
+use crate::util::table::{fmt_f, Table};
+use crate::workload::BlockRequest;
+
+use super::sharded_replay::{classify_trace, run_with_admission, ShardedReplayReport};
+
+/// One eviction policy's replays across every admission policy, in
+/// [`AdmissionSweep::admissions`] order.
+#[derive(Debug, Clone)]
+pub struct AdmissionRow {
+    pub policy: String,
+    pub cells: Vec<ShardedReplayReport>,
+}
+
+impl AdmissionRow {
+    /// Hit-ratio gain of the best admission policy over `always`.
+    pub fn best_gain(&self) -> f64 {
+        let always = self.hit_ratio_of("always").unwrap_or(0.0);
+        self.cells
+            .iter()
+            .map(|c| c.hit_ratio() - always)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn hit_ratio_of(&self, admission: &str) -> Option<f64> {
+        self.cells
+            .iter()
+            .find(|c| c.admission == admission)
+            .map(|c| c.hit_ratio())
+    }
+}
+
+/// The full policy × admission matrix for one trace.
+#[derive(Debug, Clone)]
+pub struct AdmissionSweep {
+    /// Trace label ("fig3" / "scan-storm").
+    pub trace: String,
+    pub admissions: Vec<String>,
+    pub rows: Vec<AdmissionRow>,
+}
+
+/// Replay `trace` for every (policy, admission) pair. The classifier pass
+/// runs once; every cell replays the identical stream with the identical
+/// predictions on a fresh `shards`-way cache of `capacity` bytes.
+pub fn run_matrix(
+    trace_name: &str,
+    policies: &[&str],
+    admissions: &[&str],
+    shards: usize,
+    capacity: u64,
+    trace: &[BlockRequest],
+) -> Result<AdmissionSweep> {
+    let classes = classify_trace(trace, KernelKind::Rbf, 64)?;
+    let mut rows = Vec::with_capacity(policies.len());
+    for &policy in policies {
+        let cells = admissions
+            .iter()
+            .map(|&adm| run_with_admission(policy, adm, shards, capacity, trace, &classes))
+            .collect::<Result<Vec<_>>>()?;
+        rows.push(AdmissionRow { policy: policy.to_string(), cells });
+    }
+    Ok(AdmissionSweep {
+        trace: trace_name.to_string(),
+        admissions: admissions.iter().map(|s| s.to_string()).collect(),
+        rows,
+    })
+}
+
+/// The default full sweep: all 13 eviction policies × all 4 admission
+/// policies; `smoke` restricts to lru + h-svm-lru (the CI entry point).
+pub fn default_policies(smoke: bool) -> Vec<&'static str> {
+    if smoke {
+        vec!["lru", "h-svm-lru"]
+    } else {
+        POLICY_NAMES.to_vec()
+    }
+}
+
+/// All registered admission policies, in presentation order.
+pub fn default_admissions() -> Vec<&'static str> {
+    ADMISSION_NAMES.to_vec()
+}
+
+/// Hit-ratio matrix: one row per eviction policy, one column per admission
+/// policy, plus the best gain over `always`.
+pub fn render_hit_ratios(sweep: &AdmissionSweep) -> Table {
+    let mut header = vec!["policy".to_string()];
+    header.extend(sweep.admissions.iter().cloned());
+    header.push("best gain".to_string());
+    let mut t = Table::new(header);
+    for row in &sweep.rows {
+        let mut cells = vec![row.policy.clone()];
+        cells.extend(row.cells.iter().map(|c| fmt_f(c.hit_ratio(), 4)));
+        cells.push(format!("{:+.4}", row.best_gain()));
+        t.add_row(cells);
+    }
+    t
+}
+
+/// Admission-decision matrix: rejected inserts per (policy, admission)
+/// cell — how aggressively each admission policy filtered the stream.
+pub fn render_rejections(sweep: &AdmissionSweep) -> Table {
+    let mut header = vec!["policy".to_string()];
+    header.extend(sweep.admissions.iter().cloned());
+    let mut t = Table::new(header);
+    for row in &sweep.rows {
+        let mut cells = vec![row.policy.clone()];
+        cells.extend(row.cells.iter().map(|c| c.stats.rejected.to_string()));
+        t.add_row(cells);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::MB;
+    use crate::workload::{fig3_trace, scan_storm_trace};
+
+    const BLOCK: u64 = 64 * MB;
+
+    #[test]
+    fn matrix_covers_every_cell() {
+        let trace = scan_storm_trace(BLOCK, 7);
+        let sweep = run_matrix(
+            "scan-storm",
+            &["lru", "fifo"],
+            &default_admissions(),
+            2,
+            8 * BLOCK,
+            &trace,
+        )
+        .unwrap();
+        assert_eq!(sweep.rows.len(), 2);
+        for row in &sweep.rows {
+            assert_eq!(row.cells.len(), ADMISSION_NAMES.len());
+            for cell in &row.cells {
+                assert_eq!(cell.stats.requests, trace.len() as u64);
+                assert_eq!(cell.stats.hits + cell.stats.misses, cell.stats.requests);
+            }
+        }
+        let t = render_hit_ratios(&sweep);
+        assert_eq!(t.n_rows(), 2);
+        assert_eq!(render_rejections(&sweep).n_rows(), 2);
+    }
+
+    /// The acceptance criterion of the subsystem: on the scan-storm trace,
+    /// frequency- and SVM-gated admission beat admit-everything for plain
+    /// LRU (pollution stopped at insert time, not eviction time).
+    #[test]
+    fn admission_beats_always_on_scan_storm_for_lru() {
+        let trace = scan_storm_trace(BLOCK, 11);
+        let sweep = run_matrix(
+            "scan-storm",
+            &["lru"],
+            &default_admissions(),
+            1,
+            8 * BLOCK,
+            &trace,
+        )
+        .unwrap();
+        let row = &sweep.rows[0];
+        let always = row.hit_ratio_of("always").unwrap();
+        let tinylfu = row.hit_ratio_of("tinylfu").unwrap();
+        let ghost = row.hit_ratio_of("ghost").unwrap();
+        let svm = row.hit_ratio_of("svm").unwrap();
+        assert!(
+            tinylfu > always,
+            "tinylfu {tinylfu:.4} must beat always {always:.4}"
+        );
+        assert!(ghost > always, "ghost {ghost:.4} must beat always {always:.4}");
+        assert!(svm > always, "svm {svm:.4} must beat always {always:.4}");
+        // The flood must actually be filtered, not just reordered.
+        let rejected = row
+            .cells
+            .iter()
+            .find(|c| c.admission == "tinylfu")
+            .unwrap()
+            .stats
+            .rejected;
+        assert!(rejected > 0, "tinylfu must reject part of the flood");
+    }
+
+    /// `always` must be bit-identical to the pre-admission replay path.
+    #[test]
+    fn always_column_matches_plain_replay() {
+        let trace = fig3_trace(BLOCK, 5);
+        let classes = classify_trace(&trace, KernelKind::Rbf, 64).unwrap();
+        let plain =
+            super::super::sharded_replay::run_with_classes("lru", 2, 8 * BLOCK, &trace, &classes)
+                .unwrap();
+        let sweep =
+            run_matrix("fig3", &["lru"], &["always"], 2, 8 * BLOCK, &trace).unwrap();
+        let cell = &sweep.rows[0].cells[0];
+        assert_eq!(cell.stats, plain.stats);
+        assert_eq!(cell.per_shard, plain.per_shard);
+        assert_eq!(cell.stats.rejected, 0, "always never rejects");
+        assert_eq!(cell.stats.admitted, cell.stats.insertions);
+    }
+}

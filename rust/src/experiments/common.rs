@@ -41,13 +41,17 @@ pub fn make_coordinator(
     match scenario {
         Scenario::NoCache => CacheCoordinator::new(cluster, CacheMode::NoCache, None),
         Scenario::Policy(p) => {
-            // Predictor-consuming non-SVM policies (autocache) get the
-            // fallback backend so they can run without artifacts.
-            let backend: Option<Box<dyn SvmBackend>> = if p == "autocache" {
-                Some(Box::new(RustBackend::new(KernelKind::Rbf)))
-            } else {
-                None
-            };
+            // SVM admission scores requests like H-SVM-LRU does, so it gets
+            // the *configured* backend; predictor-consuming non-SVM policies
+            // (autocache) keep the fallback so they run without artifacts.
+            let backend: Option<Box<dyn SvmBackend>> =
+                if cluster.cfg.cache_admission == "svm" {
+                    Some(make_backend(svm_cfg)?)
+                } else if p == "autocache" {
+                    Some(Box::new(RustBackend::new(KernelKind::Rbf)))
+                } else {
+                    None
+                };
             CacheCoordinator::new(cluster, CacheMode::Cached { policy: p.clone() }, backend)
         }
         Scenario::SvmLru => {

@@ -11,7 +11,9 @@
 //! | `policies`| Table 1 ablation: all 13 policies on one trace |
 //! | `sharded_replay` | shard-parallel trace replay on scoped workers |
 //! | `simulate`| DES cluster scenario: arrivals, heartbeats, retraining |
+//! | `admission` | eviction-policy × admission-policy sweep (pollution control) |
 
+pub mod admission;
 pub mod common;
 pub mod fig3;
 pub mod fig4;

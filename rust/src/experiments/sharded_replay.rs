@@ -33,6 +33,8 @@ use crate::workload::BlockRequest;
 #[derive(Debug, Clone)]
 pub struct ShardedReplayReport {
     pub policy: String,
+    /// Admission policy in front of every shard ("always" = none).
+    pub admission: String,
     pub shards: usize,
     /// Merged counters (hit ratio of the whole replay).
     pub stats: ShardStats,
@@ -45,6 +47,12 @@ pub struct ShardedReplayReport {
 impl ShardedReplayReport {
     pub fn requests_per_sec(&self) -> f64 {
         self.stats.requests as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Hit ratio of the whole replay, from the merged counters (the one
+    /// place it is computed — callers must not rederive it per shard).
+    pub fn hit_ratio(&self) -> f64 {
+        self.stats.hit_ratio()
     }
 }
 
@@ -128,8 +136,22 @@ pub fn run_with_classes(
     trace: &[BlockRequest],
     classes: &[Option<bool>],
 ) -> Result<ShardedReplayReport> {
-    let cache = ShardedCache::from_registry(policy, shards, capacity)
-        .with_context(|| format!("unknown policy {policy:?}"))?;
+    run_with_admission(policy, "always", shards, capacity, trace, classes)
+}
+
+/// Like [`run_with_classes`] but with an admission policy from
+/// `cache::admission` in front of every shard (the `repro admission`
+/// sweep path; `"always"` is exactly [`run_with_classes`]).
+pub fn run_with_admission(
+    policy: &str,
+    admission: &str,
+    shards: usize,
+    capacity: u64,
+    trace: &[BlockRequest],
+    classes: &[Option<bool>],
+) -> Result<ShardedReplayReport> {
+    let cache = ShardedCache::from_registry_with_admission(policy, admission, shards, capacity)
+        .with_context(|| format!("unknown policy {policy:?} or admission {admission:?}"))?;
     let t0 = Instant::now();
     let per_shard = replay_on_shards(&cache, trace, classes);
     let wall = t0.elapsed();
@@ -139,6 +161,7 @@ pub fn run_with_classes(
     }
     Ok(ShardedReplayReport {
         policy: policy.to_string(),
+        admission: admission.to_string(),
         shards: cache.n_shards(),
         stats,
         per_shard,
@@ -187,7 +210,7 @@ pub fn render(reports: &[ShardedReplayReport]) -> Table {
         t.add_row(vec![
             r.policy.clone(),
             r.shards.to_string(),
-            fmt_f(r.stats.hit_ratio(), 4),
+            fmt_f(r.hit_ratio(), 4),
             r.stats.evictions.to_string(),
             fmt_f(r.wall.as_secs_f64() * 1e3, 2),
             format!("{:.0}", r.requests_per_sec()),

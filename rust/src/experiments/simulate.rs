@@ -267,6 +267,41 @@ mod tests {
     }
 
     #[test]
+    fn tinylfu_admission_simulation_completes_and_stays_consistent() {
+        let cfg = ClusterConfig {
+            datanodes: 3,
+            replication: 2,
+            cache_admission: "tinylfu".into(),
+            ..Default::default()
+        };
+        let sim = SimulateConfig { n_jobs: 8, ..Default::default() };
+        let report = run(&cfg, &Scenario::Policy("lru".into()), &svm_rust(), &sim).unwrap();
+        assert_eq!(report.completed.len(), 8);
+        assert_eq!(report.metadata_fixes, 0, "admission must not drift metadata");
+        // With identical arrivals the admission layer can only change cache
+        // placement, never lose work.
+        for job in &report.completed {
+            assert_eq!(job.maps_completed(), job.spec.n_maps());
+        }
+    }
+
+    #[test]
+    fn svm_admission_simulation_trains_and_completes() {
+        let cfg = ClusterConfig {
+            datanodes: 3,
+            replication: 2,
+            cache_admission: "svm".into(),
+            ..Default::default()
+        };
+        let sim = SimulateConfig { n_jobs: 12, seed: 5, ..Default::default() };
+        // Plain LRU eviction + SVM admission: the classifier's second
+        // deployment point must run end to end on the fallback backend.
+        let report = run(&cfg, &Scenario::Policy("lru".into()), &svm_rust(), &sim).unwrap();
+        assert_eq!(report.completed.len(), 12);
+        assert!(report.trainings > 0, "svm admission must train the classifier");
+    }
+
+    #[test]
     fn deterministic_for_seed() {
         let cfg = ClusterConfig { datanodes: 3, replication: 2, ..Default::default() };
         let sim = SimulateConfig { n_jobs: 6, ..Default::default() };

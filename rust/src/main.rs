@@ -102,6 +102,10 @@ fn run(args: &[String]) -> Result<()> {
                 p => Scenario::Policy(p.to_string()),
             };
             cluster_cfg.cache_shards = cli.shards(cluster_cfg.cache_shards)?;
+            if let Some(adm) = cli.flag("admission") {
+                cluster_cfg.cache_admission = adm.to_string();
+                cluster_cfg.validate()?;
+            }
             let mut sim = SimulateConfig { seed: cli.seed()?, ..Default::default() };
             if cli.switch("failures") {
                 sim.failures = FailureModel::with_rates(0.08, 0.03, cli.seed()?);
@@ -112,6 +116,9 @@ fn run(args: &[String]) -> Result<()> {
             let report = simulate::run(&cluster_cfg, &scenario, &svm_cfg, &sim)?;
             println!("\n=== cluster simulation ({}) ===", scenario.label());
             println!("cache shards       {}", cluster_cfg.cache_shards);
+            if cluster_cfg.cache_admission != "always" {
+                println!("cache admission    {}", cluster_cfg.cache_admission);
+            }
             println!("jobs completed     {}", report.completed.len());
             println!("sim time           {}", report.sim_end);
             println!("events fired       {}", report.events_fired);
@@ -172,6 +179,58 @@ fn run(args: &[String]) -> Result<()> {
                     last.shards,
                     last.requests_per_sec() / first.requests_per_sec().max(1e-12)
                 );
+            }
+            Ok(())
+        }
+        "admission" => {
+            use h_svm_lru::experiments::admission;
+            use h_svm_lru::util::bytes::MB;
+            let shards = cli.shards(1)?;
+            let blocks: u64 =
+                cli.flag("cache-blocks").map(|s| s.parse()).transpose()?.unwrap_or(8);
+            let smoke = cli.switch("smoke");
+            let seed = cli.seed()?;
+            let block_size = 64 * MB;
+            let policies = admission::default_policies(smoke);
+            let admissions = admission::default_admissions();
+            let traces = [
+                ("fig3", h_svm_lru::workload::fig3_trace(block_size, seed)),
+                ("scan-storm", h_svm_lru::workload::scan_storm_trace(block_size, seed)),
+            ];
+            for (name, trace) in &traces {
+                let sweep = admission::run_matrix(
+                    name,
+                    &policies,
+                    &admissions,
+                    shards,
+                    blocks * block_size,
+                    trace,
+                )?;
+                emit(
+                    &format!(
+                        "Admission sweep on {name} ({} requests, cache = {blocks} blocks \
+                         of 64MB, {shards} shard(s)) — hit ratios",
+                        trace.len()
+                    ),
+                    &admission::render_hit_ratios(&sweep),
+                    csv,
+                );
+                emit(
+                    &format!("Admission sweep on {name} — rejected inserts"),
+                    &admission::render_rejections(&sweep),
+                    csv,
+                );
+                if *name == "scan-storm" {
+                    if let Some(lru) = sweep.rows.iter().find(|r| r.policy == "lru") {
+                        let always = lru.hit_ratio_of("always").unwrap_or(0.0);
+                        let tinylfu = lru.hit_ratio_of("tinylfu").unwrap_or(0.0);
+                        let svm = lru.hit_ratio_of("svm").unwrap_or(0.0);
+                        println!(
+                            "\nscan-storm, plain LRU: always {always:.4} -> tinylfu \
+                             {tinylfu:.4}, svm {svm:.4} (pollution stopped at insert time)"
+                        );
+                    }
+                }
             }
             Ok(())
         }

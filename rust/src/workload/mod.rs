@@ -10,4 +10,6 @@ pub mod trace;
 pub use apps::{App, ALL_APPS};
 pub use datagen::Cluster;
 pub use suites::{instantiate, workload_by_name, WorkloadDef, WORKLOADS};
-pub use trace::{fig3_trace, generate as generate_trace, BlockRequest, TraceConfig};
+pub use trace::{
+    fig3_trace, generate as generate_trace, scan_storm_trace, BlockRequest, TraceConfig,
+};

@@ -64,6 +64,18 @@ impl Default for TraceConfig {
     }
 }
 
+/// Ground-truth future reuse by backward scan: `reused[i]` is true iff
+/// `blocks[i]` appears again after position `i`.
+fn future_reuse(blocks: &[BlockId]) -> Vec<bool> {
+    let mut seen = std::collections::HashSet::new();
+    let mut reused = vec![false; blocks.len()];
+    for (i, b) in blocks.iter().enumerate().rev() {
+        reused[i] = seen.contains(b);
+        seen.insert(*b);
+    }
+    reused
+}
+
 /// Generate a trace. Cold (single-pass, intermediate-data) blocks are dealt
 /// out sequentially — each appears exactly once, a sustained pollution
 /// stream like MapReduce shuffle spills; hot (shared input) blocks are
@@ -91,12 +103,7 @@ pub fn generate(cfg: &TraceConfig) -> Vec<BlockRequest> {
         raw.push((block, is_cold, affinity, t));
     }
     // Backward scan for ground-truth reuse.
-    let mut seen = std::collections::HashSet::new();
-    let mut reused = vec![false; raw.len()];
-    for (i, (block, _, _, _)) in raw.iter().enumerate().rev() {
-        reused[i] = seen.contains(block);
-        seen.insert(*block);
-    }
+    let reused = future_reuse(&raw.iter().map(|(b, ..)| *b).collect::<Vec<_>>());
     raw.into_iter()
         .zip(reused)
         .map(|((block, is_cold, affinity, secs), reused_later)| BlockRequest {
@@ -131,6 +138,60 @@ pub fn fig3_trace(block_size: u64, seed: u64) -> Vec<BlockRequest> {
         mean_interarrival_s: 0.2,
         seed,
     })
+}
+
+/// Number of hot (repeatedly re-read) blocks in [`scan_storm_trace`].
+pub const SCAN_STORM_HOT_BLOCKS: usize = 6;
+
+/// The canonical cache-pollution adversary: a sustained sequential-scan
+/// flood interleaved with a small hot set (§4's pollution definition,
+/// weaponized). Every round shuffles accesses to the `SCAN_STORM_HOT_BLOCKS`
+/// hot input blocks between a burst of fresh, strictly sequential scan
+/// blocks that are never requested again. The scan burst alone exceeds the
+/// experiments' default 8-block cache, so a recency-only LRU with
+/// admit-everything evicts the entire hot set every round and hits almost
+/// never — while a frequency/ghost/SVM admission layer refuses the flood
+/// and keeps the hot set resident. This is the trace the `repro admission`
+/// sweep must win on.
+pub fn scan_storm_trace(block_size: u64, seed: u64) -> Vec<BlockRequest> {
+    const ROUNDS: usize = 64;
+    const SCANS_PER_ROUND: usize = 10;
+    let hot = SCAN_STORM_HOT_BLOCKS;
+    let mut rng = Pcg64::new(seed, 0x5C4A);
+    let mut next_scan = hot as u64;
+    // (block, is_scan) per request; hot and scan slots interleave in a
+    // seeded shuffled order so neither stream forms one contiguous run.
+    let mut raw: Vec<(BlockId, bool)> = Vec::with_capacity(ROUNDS * (hot + SCANS_PER_ROUND));
+    for _ in 0..ROUNDS {
+        let mut slots: Vec<Option<usize>> = (0..hot).map(Some).collect();
+        slots.resize(hot + SCANS_PER_ROUND, None);
+        rng.shuffle(&mut slots);
+        for slot in slots {
+            match slot {
+                Some(h) => raw.push((BlockId(h as u64), false)),
+                None => {
+                    raw.push((BlockId(next_scan), true));
+                    next_scan += 1;
+                }
+            }
+        }
+    }
+    let reused = future_reuse(&raw.iter().map(|(b, _)| *b).collect::<Vec<_>>());
+    let mut t = 0.0f64;
+    raw.into_iter()
+        .zip(reused)
+        .map(|((block, is_scan), reused_later)| {
+            t += rng.gen_exp(1.0 / 0.1);
+            BlockRequest {
+                time: SimTime::from_secs_f64(t),
+                block,
+                size: block_size,
+                kind: if is_scan { BlockKind::Intermediate } else { BlockKind::Input },
+                affinity: if is_scan { CacheAffinity::Low } else { CacheAffinity::High },
+                reused_later,
+            }
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -175,6 +236,48 @@ mod tests {
         let trace = generate(&TraceConfig::default());
         for w in trace.windows(2) {
             assert!(w[0].time <= w[1].time);
+        }
+    }
+
+    #[test]
+    fn scan_storm_is_deterministic_and_labeled() {
+        let a = scan_storm_trace(64 * MB, 9);
+        let b = scan_storm_trace(64 * MB, 9);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!((x.block, x.time, x.reused_later), (y.block, y.time, y.reused_later));
+        }
+        for w in a.windows(2) {
+            assert!(w[0].time <= w[1].time);
+        }
+        for (i, req) in a.iter().enumerate() {
+            let actually = a[i + 1..].iter().any(|r| r.block == req.block);
+            assert_eq!(req.reused_later, actually, "ground truth at {i}");
+        }
+    }
+
+    #[test]
+    fn scan_storm_scans_are_single_pass_and_dominate() {
+        let trace = scan_storm_trace(64 * MB, 4);
+        let hot = SCAN_STORM_HOT_BLOCKS as u64;
+        let mut scan_counts = std::collections::HashMap::new();
+        let mut hot_requests = 0usize;
+        for req in &trace {
+            if req.block.0 < hot {
+                hot_requests += 1;
+                assert_eq!(req.kind, BlockKind::Input);
+            } else {
+                *scan_counts.entry(req.block).or_insert(0u32) += 1;
+                assert_eq!(req.kind, BlockKind::Intermediate);
+            }
+        }
+        assert!(scan_counts.values().all(|&n| n == 1), "scans must be single-pass");
+        assert!(scan_counts.len() > trace.len() / 2, "the flood must dominate");
+        assert!(hot_requests > 0);
+        // Every hot block is re-read many times (the protected working set).
+        for h in 0..hot {
+            let n = trace.iter().filter(|r| r.block == BlockId(h)).count();
+            assert!(n >= 32, "hot block {h} requested only {n} times");
         }
     }
 

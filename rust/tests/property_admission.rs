@@ -1,0 +1,245 @@
+//! Property tests for the admission subsystem: the Count-Min sketch never
+//! underestimates, the doorkeeper reset is sound (no stale membership),
+//! `always` admission is bit-identical to the pre-admission cache for every
+//! replacement policy, the ghost cache respects its capacity bound, and
+//! every (policy, admission) pairing preserves the cache invariants.
+
+use h_svm_lru::cache::admission::{
+    make_admission, Doorkeeper, FrequencySketch, GhostProbation, ADMISSION_NAMES,
+};
+use h_svm_lru::cache::registry::{make_policy, POLICY_NAMES};
+use h_svm_lru::cache::{AccessContext, AdmissionPolicy, BlockCache, ShardedCache};
+use h_svm_lru::hdfs::BlockId;
+use h_svm_lru::sim::SimTime;
+use h_svm_lru::testkit::{forall, CacheOpsGen, Config, Gen, VecU64Gen};
+
+fn ctx(t: u64, reuse: bool) -> AccessContext {
+    AccessContext::simple(SimTime(t), 1).with_prediction(reuse)
+}
+
+/// A Count-Min sketch may overestimate (hash collisions) but must never
+/// underestimate a key's true count below the 4-bit saturation point.
+#[test]
+fn sketch_never_underestimates() {
+    let gen = VecU64Gen { min_len: 1, max_len: 400, max_value: 64 };
+    forall(&Config { cases: 60, seed: 0xC0DE, ..Default::default() }, &gen, |ids| {
+        // Sample period far above the op count: no halving mid-property.
+        let mut sketch = FrequencySketch::with_capacity(256);
+        let mut truth = std::collections::HashMap::new();
+        for &id in ids {
+            sketch.increment(BlockId(id));
+            *truth.entry(id).or_insert(0u32) += 1;
+        }
+        for (&id, &count) in &truth {
+            let est = sketch.estimate(BlockId(id));
+            if est < count.min(15) {
+                return Err(format!(
+                    "estimate {est} underestimates true count {count} for id {id}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Halving must age every estimate downward, never upward — the aged
+/// estimate still never underestimates the halved true count.
+#[test]
+fn sketch_halving_is_monotone_and_sound() {
+    let gen = VecU64Gen { min_len: 1, max_len: 300, max_value: 32 };
+    forall(&Config { cases: 40, seed: 0xA6E, ..Default::default() }, &gen, |ids| {
+        let mut sketch = FrequencySketch::with_capacity(128);
+        let mut truth = std::collections::HashMap::new();
+        for &id in ids {
+            sketch.increment(BlockId(id));
+            *truth.entry(id).or_insert(0u32) += 1;
+        }
+        let before: Vec<(u64, u32)> =
+            truth.keys().map(|&id| (id, sketch.estimate(BlockId(id)))).collect();
+        sketch.halve();
+        for (id, est_before) in before {
+            let est_after = sketch.estimate(BlockId(id));
+            if est_after != est_before / 2 {
+                return Err(format!(
+                    "halving {est_before} gave {est_after} for id {id}"
+                ));
+            }
+            let count = truth[&id];
+            if est_after < (count.min(15)) / 2 {
+                return Err(format!(
+                    "aged estimate {est_after} underestimates {count}/2 for id {id}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Doorkeeper soundness: no false negatives while members are live, and a
+/// reset leaves no stale membership behind (so a cleared doorkeeper can
+/// never inflate a frequency estimate with pre-reset history).
+#[test]
+fn doorkeeper_reset_preserves_admission_soundness() {
+    let gen = VecU64Gen { min_len: 1, max_len: 200, max_value: 10_000 };
+    forall(&Config { cases: 60, seed: 0xD00A, ..Default::default() }, &gen, |ids| {
+        let mut dk = Doorkeeper::with_capacity(256);
+        for &id in ids {
+            dk.insert(BlockId(id));
+        }
+        for &id in ids {
+            if !dk.contains(BlockId(id)) {
+                return Err(format!("false negative for {id}"));
+            }
+        }
+        dk.clear();
+        for &id in ids {
+            if dk.contains(BlockId(id)) {
+                return Err(format!("stale membership for {id} after reset"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// `always` admission must be bit-identical to a cache built without the
+/// admission layer, for every replacement policy on every op sequence:
+/// same outcomes, same eviction order, same final contents, zero rejects.
+#[test]
+fn always_admission_is_bit_identical_for_every_policy() {
+    let gen = CacheOpsGen { max_ops: 250, keyspace: 40, max_capacity: 12 };
+    for &policy in POLICY_NAMES {
+        forall(
+            &Config { cases: 15, seed: 0xADA + policy.len() as u64, ..Default::default() },
+            &gen,
+            |(ops, cap)| {
+                let mut bare = BlockCache::new(make_policy(policy).unwrap(), *cap);
+                let mut gated = BlockCache::with_admission(
+                    make_policy(policy).unwrap(),
+                    make_admission("always").unwrap(),
+                    *cap,
+                );
+                for (t, (key, reuse)) in ops.iter().enumerate() {
+                    let c = ctx(t as u64, *reuse);
+                    let a = bare.access_or_insert(BlockId(*key), &c);
+                    let b = gated.access_or_insert(BlockId(*key), &c);
+                    if a != b {
+                        return Err(format!(
+                            "{policy}: divergence at op {t}: {a:?} vs {b:?}"
+                        ));
+                    }
+                }
+                if bare.cached_blocks() != gated.cached_blocks() {
+                    return Err(format!("{policy}: final contents diverge"));
+                }
+                if gated.admission_stats().rejected != 0 {
+                    return Err(format!("{policy}: always admission rejected something"));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// The ghost history never exceeds its configured capacity, whatever the
+/// mix of probation inserts, admissions and evictions.
+#[test]
+fn ghost_capacity_invariant_holds() {
+    let gen = VecU64Gen { min_len: 1, max_len: 500, max_value: 200 };
+    for capacity in [1usize, 3, 16, 64] {
+        forall(
+            &Config { cases: 30, seed: 0x6057 + capacity as u64, ..Default::default() },
+            &gen,
+            |ids| {
+                let mut g = GhostProbation::new(capacity);
+                let mut no_victim = || None::<BlockId>;
+                for (i, &id) in ids.iter().enumerate() {
+                    // Alternate the two ghost entry points.
+                    if i % 3 == 0 {
+                        g.on_evict(BlockId(id));
+                    } else {
+                        let c = ctx(i as u64, false);
+                        g.admit(BlockId(id), &c, &mut no_victim);
+                    }
+                    if g.len() > g.capacity() {
+                        return Err(format!(
+                            "ghost holds {} of {} after {} ops",
+                            g.len(),
+                            g.capacity(),
+                            i + 1
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// Whatever the (eviction policy, admission policy) pairing, the cache
+/// invariants hold: occupancy bounded, accounting exact, counters
+/// consistent, admission decisions summing into the stats.
+#[test]
+fn every_policy_admission_pairing_preserves_invariants() {
+    let gen = CacheOpsGen { max_ops: 200, keyspace: 50, max_capacity: 10 };
+    for &admission in ADMISSION_NAMES {
+        for &policy in ["lru", "h-svm-lru", "wsclock", "modified-arc"].iter() {
+            forall(
+                &Config {
+                    cases: 10,
+                    seed: 0xF00 + admission.len() as u64 + policy.len() as u64,
+                    ..Default::default()
+                },
+                &gen,
+                |(ops, cap)| {
+                    let front =
+                        ShardedCache::from_registry_with_admission(policy, admission, 2, *cap)
+                            .unwrap();
+                    for (t, (key, reuse)) in ops.iter().enumerate() {
+                        front.access_or_insert(BlockId(*key), &ctx(t as u64, *reuse));
+                        if front.used() > front.capacity() {
+                            return Err(format!(
+                                "{policy}+{admission}: occupancy {} over {}",
+                                front.used(),
+                                front.capacity()
+                            ));
+                        }
+                    }
+                    let s = front.stats();
+                    if s.hits + s.misses != s.requests {
+                        return Err(format!("{policy}+{admission}: hits+misses != requests"));
+                    }
+                    if s.requests != ops.len() as u64 {
+                        return Err(format!("{policy}+{admission}: request count off"));
+                    }
+                    if s.insertions < s.evictions
+                        || s.insertions - s.evictions != front.len() as u64
+                    {
+                        return Err(format!("{policy}+{admission}: conservation broken"));
+                    }
+                    if s.insertions > s.admitted {
+                        return Err(format!(
+                            "{policy}+{admission}: {} inserts but only {} admitted",
+                            s.insertions, s.admitted
+                        ));
+                    }
+                    if s.admitted + s.rejected > s.misses {
+                        return Err(format!(
+                            "{policy}+{admission}: more decisions than misses"
+                        ));
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+}
+
+/// Seeded generator reused across the suite — kept here so the admission
+/// properties shrink the same way the sharded ones do.
+#[test]
+fn generators_produce_shrinkable_cases() {
+    let gen = CacheOpsGen { max_ops: 20, keyspace: 8, max_capacity: 4 };
+    let mut rng = h_svm_lru::util::rng::Pcg64::new(7, 0);
+    let case = gen.generate(&mut rng);
+    assert!(!gen.shrink(&case).is_empty() || case.0.len() <= 1);
+}
