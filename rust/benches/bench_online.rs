@@ -1,0 +1,131 @@
+//! Online-learning hot-path costs: what the concurrent replay pays for a
+//! live classifier instead of a frozen one.
+//!
+//! * **snapshot read** — `SnapshotReader::predict` on an unchanged model
+//!   (one atomic load + the kernel evaluation) vs. the raw
+//!   `SmoModel::decision` floor;
+//! * **publish latency** — `SnapshotCell::publish` (model clone into a
+//!   fresh `Arc` + version bump under the slot lock);
+//! * **sample throughput** — emit → bounded channel → trainer drain with
+//!   on-cadence SMO retraining, end to end;
+//! * **replay** — the 8-shard fig3 replay, frozen vs. online.
+//!
+//! Flags: `--json` writes BENCH_online.json (machine-readable record for
+//! the perf trajectory; see `bench_support::write_json`), `--quick`
+//! drops to CI-smoke iteration counts.
+
+use std::sync::Arc;
+
+use h_svm_lru::bench_support::{banner, black_box, write_json, Bencher};
+use h_svm_lru::coordinator::online::{
+    sample_channel, trainer_loop, SnapshotCell, TrainerConfig,
+};
+use h_svm_lru::coordinator::TrainingPipeline;
+use h_svm_lru::experiments::online_sharded::{pretrain_model, run_online, TrainerMode};
+use h_svm_lru::runtime::RustBackend;
+use h_svm_lru::svm::features::N_FEATURES;
+use h_svm_lru::svm::KernelKind;
+use h_svm_lru::util::bytes::MB;
+use h_svm_lru::workload::fig3_trace;
+
+const BLOCK: u64 = 64 * MB;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json = args.iter().any(|a| a == "--json");
+    let quick = args.iter().any(|a| a == "--quick");
+
+    banner("online learning — snapshot reads, publish latency, samples/sec");
+    let bench = if quick { Bencher::new(1, 3) } else { Bencher::new(2, 10) };
+    let mut results = Vec::new();
+
+    let trace = fig3_trace(BLOCK, 7);
+    let model = pretrain_model(&trace, KernelKind::Rbf)
+        .expect("pretraining fig3")
+        .expect("fig3 trace is two-class");
+    let features = [0.3f32; N_FEATURES];
+
+    // Snapshot-read overhead: reader vs. the raw-model floor.
+    const READS: u64 = 100_000;
+    let cell = Arc::new(SnapshotCell::new());
+    cell.publish(model.clone());
+    let mut reader = cell.reader();
+    let r = bench.run_per_op("snapshot read + predict (unchanged model)", READS, || {
+        for _ in 0..READS {
+            black_box(reader.predict(&features));
+        }
+    });
+    println!("{}", r.report());
+    results.push(r);
+    let r = bench.run_per_op("raw SmoModel::decision (floor)", READS, || {
+        for _ in 0..READS {
+            black_box(model.decision(&features));
+        }
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // Publish latency: clone + Arc swap + version bump per publish.
+    const PUBLISHES: u64 = 256;
+    let r = bench.run_per_op("snapshot publish (clone + swap)", PUBLISHES, || {
+        for _ in 0..PUBLISHES {
+            black_box(cell.publish(model.clone()));
+        }
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // Sample throughput: emit -> channel -> trainer drain with retrains.
+    let samples: u64 = if quick { 512 } else { 2048 };
+    let r = bench.run_per_op(
+        &format!("sample channel + trainer drain ({samples} samples)"),
+        samples,
+        || {
+            let (tx, rx) = sample_channel(8192);
+            let cell = Arc::new(SnapshotCell::new());
+            let trainer_cell = Arc::clone(&cell);
+            let trainer = std::thread::spawn(move || {
+                let mut backend = RustBackend::new(KernelKind::Rbf);
+                let mut pipeline = TrainingPipeline::new(64, 256);
+                trainer_loop(rx, &mut backend, &mut pipeline, &trainer_cell)
+                    .expect("trainer loop")
+            });
+            for i in 0..samples {
+                let mut f = [0.0f32; N_FEATURES];
+                let reused = i % 2 == 0;
+                f[0] = if reused { 0.2 } else { 0.8 };
+                tx.emit(f, reused);
+            }
+            drop(tx);
+            let report = trainer.join().expect("trainer thread");
+            black_box(report.publishes);
+        },
+    );
+    println!("{}", r.report());
+    results.push(r);
+
+    // End to end: the 8-shard fig3 replay, frozen vs. live trainer.
+    for mode in [TrainerMode::Frozen, TrainerMode::Online] {
+        let r = bench.run(&format!("fig3 8-shard h-svm-lru replay, {}", mode.label()), || {
+            let report = run_online(
+                "h-svm-lru",
+                8,
+                8 * BLOCK,
+                &trace,
+                mode,
+                KernelKind::Rbf,
+                TrainerConfig::default(),
+            )
+            .expect("online replay");
+            black_box(report.hit_ratio());
+        });
+        println!("{}", r.report());
+        results.push(r);
+    }
+
+    if json {
+        let path = "BENCH_online.json";
+        write_json(path, "online", &results).expect("writing bench json");
+        println!("\nwrote {path} ({} results)", results.len());
+    }
+}

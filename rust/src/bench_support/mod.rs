@@ -29,6 +29,49 @@ impl BenchResult {
             self.name, self.iterations, self.mean, self.p50, self.p95, self.min, self.std_dev
         )
     }
+
+    /// One machine-readable JSON object (hand-rolled — no serde offline).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"name\":\"{}\",\"iterations\":{},\"mean_ns\":{},\"std_dev_ns\":{},\
+             \"min_ns\":{},\"p50_ns\":{},\"p95_ns\":{}}}",
+            json_escape(&self.name),
+            self.iterations,
+            self.mean.as_nanos(),
+            self.std_dev.as_nanos(),
+            self.min.as_nanos(),
+            self.p50.as_nanos(),
+            self.p95.as_nanos(),
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Serialize a bench run as one JSON document (`{"suite":…,"results":[…]}`).
+pub fn results_to_json(suite: &str, results: &[BenchResult]) -> String {
+    let rows: Vec<String> = results.iter().map(BenchResult::to_json).collect();
+    format!(
+        "{{\"suite\":\"{}\",\"results\":[{}]}}\n",
+        json_escape(suite),
+        rows.join(",")
+    )
+}
+
+/// Write the machine-readable bench record (the `--json` flag of the
+/// bench drivers) so the perf trajectory is tracked in CI artifacts.
+pub fn write_json(path: &str, suite: &str, results: &[BenchResult]) -> std::io::Result<()> {
+    std::fs::write(path, results_to_json(suite, results))
 }
 
 /// Harness configuration.
@@ -130,5 +173,19 @@ mod tests {
             black_box((0..1000u64).product::<u64>());
         });
         assert!(r.name.contains("ns/op"));
+    }
+
+    #[test]
+    fn json_emission_is_well_formed() {
+        let b = Bencher::new(0, 2);
+        let r = b.run("a \"quoted\" name", || {
+            black_box((0..100u64).sum::<u64>());
+        });
+        let doc = results_to_json("online", &[r.clone(), r]);
+        assert!(doc.starts_with("{\"suite\":\"online\",\"results\":["));
+        assert!(doc.trim_end().ends_with("]}"));
+        assert!(doc.contains("\\\"quoted\\\""), "quotes escaped: {doc}");
+        assert!(doc.contains("\"mean_ns\":"));
+        assert_eq!(doc.matches("\"iterations\":2").count(), 2);
     }
 }

@@ -62,6 +62,10 @@ impl Cli {
             "--shards",
             "--admission",
         ];
+        // Known valueless switches. Anything else starting with `--` is a
+        // typo and must exit non-zero — previously it was collected as a
+        // never-read switch and the run silently proceeded without it.
+        let known_switches = ["--csv", "--cv", "--failures", "--prefetch", "--smoke", "--help"];
         let mut i = 0;
         while i < args.len() {
             let a = &args[i];
@@ -72,9 +76,11 @@ impl Cli {
                         .with_context(|| format!("flag {a} needs a value"))?;
                     flags.insert(name.to_string(), v.clone());
                     i += 2;
-                } else {
+                } else if known_switches.contains(&a.as_str()) {
                     switches.push(name.to_string());
                     i += 1;
+                } else {
+                    bail!("unknown flag {a:?} (see `repro help`)");
                 }
             } else if command.is_empty() {
                 command = a.clone();
@@ -118,6 +124,20 @@ impl Cli {
             }
             None => Ok(fallback),
         }
+    }
+
+    /// The `--policy` flag (defaulting to `fallback`), validated against
+    /// the policy registry — a typo'd name exits non-zero up front instead
+    /// of silently falling through to a later (or no) failure.
+    pub fn policy(&self, fallback: &str) -> Result<String> {
+        let name = self.flag("policy").unwrap_or(fallback);
+        if crate::cache::registry::make_policy(name).is_none() {
+            bail!(
+                "unknown policy {name:?}; known policies: {}",
+                crate::cache::registry::POLICY_NAMES.join(", ")
+            );
+        }
+        Ok(name.to_string())
     }
 
     pub fn scale(&self) -> Result<f64> {
@@ -175,6 +195,10 @@ SUBCOMMANDS
   admission    eviction × admission sweep over the Fig 3 trace and the
                scan-storm pollution adversary [--smoke] [--shards N]
                [--cache-blocks N]
+  online       frozen vs. online-learning shard-parallel replay: shard
+               workers stream labeled samples to a background trainer
+               that publishes classifier snapshots mid-trace
+               [--policy P] [--shards N] [--cache-blocks N] [--smoke]
   all          every experiment in sequence
 
 FLAGS
@@ -186,7 +210,8 @@ FLAGS
   --cache-blocks N         cache size for `policies`/`sharded` (default 8)
   --shards N               cache shards per node / replay workers
   --admission A            always|tinylfu|ghost|svm admission for `simulate`
-  --smoke                  `admission`: lru + h-svm-lru only (CI smoke)
+  --smoke                  `admission`/`online`: reduced CI sweep with
+                           parity + publish assertions
   --csv                    CSV output
   --config FILE            TOML config file
   --log-level L            off|error|warn|info|debug|trace
@@ -255,5 +280,26 @@ mod tests {
     fn empty_args_is_help() {
         let cli = Cli::parse(&[]).unwrap();
         assert_eq!(cli.command, "help");
+    }
+
+    #[test]
+    fn unknown_switch_is_rejected() {
+        let r = Cli::parse(&["sharded".to_string(), "--smok".to_string()]);
+        assert!(r.is_err(), "typo'd switch must not be silently swallowed");
+        let r = Cli::parse(&["fig3".to_string(), "--verbose".to_string()]);
+        assert!(r.is_err());
+        // Known switches still parse.
+        assert!(Cli::parse(&["fig3".to_string(), "--csv".to_string()]).is_ok());
+    }
+
+    #[test]
+    fn policy_flag_is_validated() {
+        let cli = parse(&["sharded", "--policy", "h-svm-lru"]);
+        assert_eq!(cli.policy("lru").unwrap(), "h-svm-lru");
+        assert_eq!(parse(&["sharded"]).policy("lru").unwrap(), "lru");
+        let cli = parse(&["sharded", "--policy", "lr"]);
+        let err = cli.policy("lru").unwrap_err().to_string();
+        assert!(err.contains("unknown policy"), "{err}");
+        assert!(err.contains("h-svm-lru"), "error lists known names: {err}");
     }
 }

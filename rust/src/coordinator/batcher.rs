@@ -11,6 +11,8 @@
 //!    native batch width before one `decision_batch` call scores them all
 //!    (the vLLM-router-style amortization; see DESIGN.md §8).
 
+use std::collections::VecDeque;
+
 use crate::util::fasthash::IdHashMap;
 
 use anyhow::Result;
@@ -19,16 +21,37 @@ use crate::hdfs::BlockId;
 use crate::runtime::SvmBackend;
 use crate::svm::features::FeatureVec;
 
-/// Cached prediction: class + the access-count stamp it was computed at.
+/// Default bound on the per-block class cache. Entries for evicted blocks
+/// are dropped eagerly ([`PredictionBatcher::invalidate`]); the bound caps
+/// whatever survives on long traces with huge keyspaces.
+pub const DEFAULT_CLASS_CACHE_CAPACITY: usize = 4096;
+
+/// Cached prediction: class + the access-count stamp it was computed at,
+/// plus the insertion sequence number pairing it with its `order` entry
+/// (stamped lazy deletion, like the admission ghost LRU: an invalidated
+/// block leaves a stale order entry behind, and a later re-insert must
+/// not be evictable through that stale id).
 #[derive(Debug, Clone, Copy)]
 struct CachedClass {
     reused: bool,
     stamp: u64,
+    seq: u64,
 }
 
-/// Batching predictor with a per-block class cache.
+/// Batching predictor with a bounded per-block class cache.
 pub struct PredictionBatcher {
     cache: IdHashMap<BlockId, CachedClass>,
+    /// Insertion order of class-cache entries as (block, seq) pairs (FIFO
+    /// eviction when the cache exceeds `capacity`). Entries whose seq no
+    /// longer matches the cached entry are stale (invalidated or
+    /// re-inserted blocks) and are skipped — and compacted — lazily.
+    order: VecDeque<(BlockId, u64)>,
+    /// Monotonic insertion counter backing the order-entry stamps.
+    seq: u64,
+    /// Class-cache bound: beyond it the oldest entries are dropped.
+    capacity: usize,
+    /// Version of the classifier snapshot the cached classes came from.
+    model_version: u64,
     /// Pending cold queries (block, stamp, features).
     pending: Vec<(BlockId, u64, FeatureVec)>,
     /// Flush threshold = artifact batch width.
@@ -47,8 +70,17 @@ pub struct BatcherStats {
 
 impl PredictionBatcher {
     pub fn new(batch_width: usize) -> Self {
+        Self::with_capacity(batch_width, DEFAULT_CLASS_CACHE_CAPACITY)
+    }
+
+    /// A batcher whose class cache holds at most `capacity` blocks.
+    pub fn with_capacity(batch_width: usize, capacity: usize) -> Self {
         PredictionBatcher {
             cache: IdHashMap::default(),
+            order: VecDeque::new(),
+            seq: 0,
+            capacity: capacity.max(1),
+            model_version: 0,
             pending: Vec::new(),
             batch_width: batch_width.max(1),
             stats: BatcherStats::default(),
@@ -91,11 +123,46 @@ impl PredictionBatcher {
             self.stats.backend_calls += 1;
             self.stats.predictions_scored += scores.len() as u64;
             for ((block, stamp, _), score) in chunk.iter().zip(scores) {
-                self.cache
-                    .insert(*block, CachedClass { reused: score > 0.0, stamp: *stamp });
+                // Every score — fresh insert or stamp-refresh of a
+                // resident block — gets a new seq at the queue back,
+                // superseding any older order entry for the block. That
+                // keeps just-scored entries out of reach of the capacity
+                // eviction below: predict()'s own query is the last one
+                // pushed, so the entry it reads back is always the newest
+                // and can never be the over-capacity victim.
+                self.seq += 1;
+                self.order.push_back((*block, self.seq));
+                self.cache.insert(
+                    *block,
+                    CachedClass { reused: score > 0.0, stamp: *stamp, seq: self.seq },
+                );
             }
         }
+        self.enforce_capacity();
         Ok(())
+    }
+
+    /// Drop oldest class-cache entries past the bound. Order entries whose
+    /// seq does not match the live cache entry are stale (the block was
+    /// invalidated, re-scored or re-inserted under a newer seq) and must
+    /// only be skipped — removing through them would evict the live entry
+    /// out of queue order, including one the current flush just wrote.
+    /// Compact the queue when stale entries dominate it.
+    fn enforce_capacity(&mut self) {
+        while self.cache.len() > self.capacity {
+            match self.order.pop_front() {
+                Some((oldest, seq)) => {
+                    if self.cache.get(&oldest).map(|c| c.seq) == Some(seq) {
+                        self.cache.remove(&oldest);
+                    }
+                }
+                None => break, // unreachable: every cached entry was queued
+            }
+        }
+        if self.order.len() > 2 * self.cache.len() + 16 {
+            let cache = &self.cache;
+            self.order.retain(|(b, s)| cache.get(b).map(|c| c.seq) == Some(*s));
+        }
     }
 
     /// Queue a prediction without needing the answer immediately (prefetch
@@ -111,10 +178,30 @@ impl PredictionBatcher {
         }
     }
 
+    /// Invalidate one block's cached class — called from the eviction /
+    /// uncache path so the class cache tracks the block population instead
+    /// of growing monotonically over the trace.
+    pub fn invalidate(&mut self, block: BlockId) {
+        self.cache.remove(&block);
+        self.pending.retain(|(b, _, _)| *b != block);
+    }
+
     /// Invalidate all cached classes (after retraining).
     pub fn invalidate_all(&mut self) {
         self.cache.clear();
+        self.order.clear();
         self.pending.clear();
+    }
+
+    /// Note the classifier-snapshot version serving predictions. When it
+    /// moves, every cached class came from a stale model and is dropped
+    /// (pending queries are kept — they will be scored by the new model).
+    pub fn note_model_version(&mut self, version: u64) {
+        if version != self.model_version {
+            self.model_version = version;
+            self.cache.clear();
+            self.order.clear();
+        }
     }
 
     pub fn cached_len(&self) -> usize {
@@ -214,6 +301,113 @@ mod tests {
         batcher.invalidate_all();
         assert_eq!(batcher.cached_len(), 0);
         assert_eq!(batcher.pending_len(), 0);
+    }
+
+    #[test]
+    fn invalidate_drops_one_block_only() {
+        let mut be = FakeBackend { calls: 0 };
+        let mut batcher = PredictionBatcher::new(8);
+        batcher.predict(&mut be, BlockId(1), 0, fv(0.9)).unwrap();
+        batcher.predict(&mut be, BlockId(2), 0, fv(0.9)).unwrap();
+        assert_eq!(batcher.cached_len(), 2);
+        batcher.invalidate(BlockId(1));
+        assert_eq!(batcher.cached_len(), 1);
+        // Block 1 must be re-scored; block 2 still serves from the cache.
+        let calls_before = be.calls;
+        batcher.predict(&mut be, BlockId(2), 0, fv(0.9)).unwrap();
+        assert_eq!(be.calls, calls_before);
+        batcher.predict(&mut be, BlockId(1), 0, fv(0.9)).unwrap();
+        assert_eq!(be.calls, calls_before + 1);
+        // Invalidate also drops any pending query for the block.
+        batcher.prefetch(BlockId(7), 0, fv(0.5));
+        batcher.invalidate(BlockId(7));
+        assert_eq!(batcher.pending_len(), 0);
+    }
+
+    #[test]
+    fn class_cache_is_bounded() {
+        let mut be = FakeBackend { calls: 0 };
+        let mut batcher = PredictionBatcher::with_capacity(8, 16);
+        // A long trace over a huge keyspace must not grow the cache
+        // without bound (the pre-fix leak).
+        for i in 0..400u64 {
+            batcher.predict(&mut be, BlockId(i), 0, fv(0.9)).unwrap();
+            assert!(batcher.cached_len() <= 16, "leaked at block {i}");
+        }
+        // Oldest entries were the ones dropped: the newest still serves.
+        let calls = be.calls;
+        batcher.predict(&mut be, BlockId(399), 0, fv(0.9)).unwrap();
+        assert_eq!(be.calls, calls, "newest entry retained");
+        batcher.predict(&mut be, BlockId(0), 0, fv(0.9)).unwrap();
+        assert_eq!(be.calls, calls + 1, "oldest entry was evicted");
+    }
+
+    /// Regression: an invalidated block leaves a stale order entry; after
+    /// the block is re-predicted, capacity eviction must not remove the
+    /// live entry through that stale id (which panicked predict()'s
+    /// "flush populated cache" expect when it hit the entry the current
+    /// flush had just inserted).
+    #[test]
+    fn stale_order_entry_cannot_evict_a_reinserted_block() {
+        let mut be = FakeBackend { calls: 0 };
+        let mut batcher = PredictionBatcher::with_capacity(8, 4);
+        batcher.predict(&mut be, BlockId(0), 0, fv(0.9)).unwrap();
+        batcher.invalidate(BlockId(0)); // stale (0, seq1) stays queued
+        for i in 1..=4u64 {
+            batcher.predict(&mut be, BlockId(i), 0, fv(0.9)).unwrap();
+        }
+        assert_eq!(batcher.cached_len(), 4);
+        // Re-predict block 0: the flush inserts it and evicts past the
+        // bound — the stale (0, seq1) front entry must be skipped, not
+        // used to evict the entry just inserted.
+        batcher.predict(&mut be, BlockId(0), 1, fv(0.9)).unwrap();
+        assert_eq!(batcher.cached_len(), 4);
+        let calls = be.calls;
+        batcher.predict(&mut be, BlockId(0), 1, fv(0.9)).unwrap();
+        assert_eq!(be.calls, calls, "re-inserted block survived the eviction");
+        // FIFO still correct: block 1 (the oldest live entry) was evicted.
+        batcher.predict(&mut be, BlockId(1), 0, fv(0.9)).unwrap();
+        assert_eq!(be.calls, calls + 1, "oldest live entry was the victim");
+    }
+
+    /// Regression: a full class cache, a pending prefetch and a
+    /// stamp-refresh of the *oldest* resident block in one flush — the
+    /// re-scored block must end up newest, not be evicted by its own
+    /// flush (which panicked predict()'s "flush populated cache" expect).
+    #[test]
+    fn rescoring_the_oldest_resident_survives_a_full_flush() {
+        let mut be = FakeBackend { calls: 0 };
+        let mut batcher = PredictionBatcher::with_capacity(8, 4);
+        for i in 0..4u64 {
+            batcher.predict(&mut be, BlockId(i), 0, fv(0.9)).unwrap();
+        }
+        assert_eq!(batcher.cached_len(), 4, "cache at capacity, block 0 oldest");
+        batcher.prefetch(BlockId(9), 0, fv(0.9));
+        // Block 0 with a new stamp: the flush scores the prefetched block
+        // 9 (over capacity) and re-scores 0 — 0 is the freshest entry and
+        // must survive the eviction.
+        assert!(batcher.predict(&mut be, BlockId(0), 1, fv(0.9)).unwrap());
+        assert_eq!(batcher.cached_len(), 4);
+        let calls = be.calls;
+        batcher.predict(&mut be, BlockId(0), 1, fv(0.9)).unwrap();
+        assert_eq!(be.calls, calls, "re-scored block stayed cached");
+        // Block 1 became the oldest live entry and was the victim.
+        batcher.predict(&mut be, BlockId(1), 0, fv(0.9)).unwrap();
+        assert_eq!(be.calls, calls + 1);
+    }
+
+    #[test]
+    fn new_model_version_resets_cached_classes() {
+        let mut be = FakeBackend { calls: 0 };
+        let mut batcher = PredictionBatcher::new(8);
+        batcher.predict(&mut be, BlockId(1), 0, fv(0.9)).unwrap();
+        batcher.note_model_version(1);
+        assert_eq!(batcher.cached_len(), 0, "stale classes dropped");
+        batcher.predict(&mut be, BlockId(1), 0, fv(0.9)).unwrap();
+        assert_eq!(be.calls, 2, "re-scored under the new model");
+        // Same version again: no reset.
+        batcher.note_model_version(1);
+        assert_eq!(batcher.cached_len(), 1);
     }
 
     #[test]

@@ -22,6 +22,7 @@
 //! carried by the trace (§5.1 scenario 1).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::util::fasthash::IdHashMap;
 
@@ -40,6 +41,7 @@ use crate::svm::features::{BlockStatsTracker, FeatureVec};
 use crate::workload::{BlockRequest, Cluster};
 
 use super::batcher::PredictionBatcher;
+use super::online::SnapshotCell;
 use super::prefetcher::Prefetcher;
 use super::training_pipeline::TrainingPipeline;
 
@@ -112,6 +114,12 @@ pub struct CacheCoordinator {
     intermediate_seq: u64,
     /// Optional SVM-gated sequential prefetcher (paper §7 future work).
     prefetcher: Option<Prefetcher>,
+    /// Snapshot publication point (`coordinator::online`). The
+    /// single-threaded coordinator is a degenerate participant in the
+    /// online protocol: every deployed model is exported here, so shard
+    /// workers, tests and dashboards can consume exactly the classifier
+    /// the coordinator batches its own predictions through.
+    snapshots: Arc<SnapshotCell>,
 }
 
 impl CacheCoordinator {
@@ -179,6 +187,7 @@ impl CacheCoordinator {
             app_ids: HashMap::new(),
             intermediate_seq: 0,
             prefetcher: None,
+            snapshots: Arc::new(SnapshotCell::new()),
         })
     }
 
@@ -295,6 +304,16 @@ impl CacheCoordinator {
         }
     }
 
+    /// A new model was deployed: drop every stale cached class and publish
+    /// the model as an immutable snapshot (when the backend can export).
+    fn deploy_model(&mut self) {
+        self.batcher.invalidate_all();
+        if let Some(model) = self.backend.as_ref().and_then(|b| b.export_model()) {
+            let version = self.snapshots.publish(model);
+            self.batcher.note_model_version(version);
+        }
+    }
+
     /// Force a training round on everything observed so far (the paper's
     /// offline training on job history before evaluation).
     pub fn train_now(&mut self) -> Result<bool> {
@@ -303,7 +322,7 @@ impl CacheCoordinator {
         };
         let trained = self.pipeline.train_now(backend.as_mut())?;
         if trained {
-            self.batcher.invalidate_all();
+            self.deploy_model();
         }
         Ok(trained)
     }
@@ -316,9 +335,20 @@ impl CacheCoordinator {
         };
         let trained = self.pipeline.maybe_train(backend.as_mut())?;
         if trained {
-            self.batcher.invalidate_all();
+            self.deploy_model();
         }
         Ok(trained)
+    }
+
+    /// The snapshot cell this coordinator publishes deployed models to —
+    /// the same type the concurrent online replay reads lock-free.
+    pub fn snapshot_cell(&self) -> Arc<SnapshotCell> {
+        Arc::clone(&self.snapshots)
+    }
+
+    /// Version of the last published classifier snapshot (0 = none yet).
+    pub fn snapshot_version(&self) -> u64 {
+        self.snapshots.version()
     }
 
     #[allow(clippy::too_many_arguments)] // mirrors the AccessContext fields
@@ -388,6 +418,7 @@ impl CacheCoordinator {
                     self.stats.evictions += 1;
                     self.cluster.datanodes[dn.0 as usize].uncache_block(*victim);
                     self.cluster.namenode.note_uncached(*victim);
+                    self.batcher.invalidate(*victim);
                 }
                 if self.caches[dn.0 as usize].contains(block) {
                     self.stats.insertions += 1;
@@ -489,6 +520,7 @@ impl CacheCoordinator {
                 self.stats.evictions += 1;
                 self.cluster.datanodes[dn.0 as usize].uncache_block(*victim);
                 self.cluster.namenode.note_uncached(*victim);
+                self.batcher.invalidate(*victim);
                 if let Some(pf) = self.prefetcher.as_mut() {
                     pf.note_evicted(*victim);
                 }
@@ -783,6 +815,38 @@ mod tests {
             bs.class_cache_hits + bs.predictions_scored >= bs.queries,
             "every query answered"
         );
+    }
+
+    #[test]
+    fn coordinator_publishes_consumable_snapshots() {
+        use crate::coordinator::online::SnapshotReader;
+        let mut c = small_cluster("h-svm-lru", 4);
+        let cell = c.snapshot_cell();
+        assert_eq!(cell.version(), 0, "nothing published before training");
+        let trace = crate::workload::fig3_trace(128 * MB, 11);
+        for req in &trace {
+            c.handle_trace_request(req).unwrap();
+        }
+        assert!(c.pipeline.trainings > 0);
+        assert_eq!(
+            c.snapshot_version(),
+            c.pipeline.trainings,
+            "every deployed model is published (rust backend exports)"
+        );
+        // The published snapshot is the deployed classifier: it classifies,
+        // and a reader sees the freshest version.
+        let mut reader = SnapshotReader::new(cell);
+        let snap = reader.current();
+        assert!(snap.is_trained());
+        assert_eq!(snap.version(), c.snapshot_version());
+        let f = c.tracker.features(
+            trace[0].block,
+            trace[0].kind,
+            trace[0].size,
+            trace[0].affinity,
+            trace[0].time,
+        );
+        assert!(reader.predict(&f).is_some());
     }
 
     #[test]

@@ -7,13 +7,22 @@
 //! * `batcher` — per-block class caching + micro-batched PJRT predictions.
 //! * `training_pipeline` — labeled-sample accumulation and periodic
 //!   retraining (both §5.1 label scenarios).
+//! * `online` — concurrent online learning: immutable classifier
+//!   snapshots behind an atomically swappable cell, a bounded sample
+//!   channel and the background trainer loop that keeps the shard-parallel
+//!   replay's classifier fresh mid-trace.
 
 pub mod batcher;
 pub mod cache_coordinator;
+pub mod online;
 pub mod prefetcher;
 pub mod training_pipeline;
 
 pub use batcher::{BatcherStats, PredictionBatcher};
 pub use cache_coordinator::{CacheCoordinator, CacheMode, CoordinatorStats};
+pub use online::{
+    sample_channel, trainer_loop, ClassifierSnapshot, LabeledSample, SampleProbe, SampleSender,
+    SnapshotCell, SnapshotReader, TrainerConfig, TrainerReport,
+};
 pub use prefetcher::{PrefetchStats, Prefetcher};
 pub use training_pipeline::TrainingPipeline;

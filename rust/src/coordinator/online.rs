@@ -1,0 +1,455 @@
+//! Concurrent online learning: the paper's §5 retrain-as-you-go loop,
+//! running *beside* a shard-parallel replay instead of inside a
+//! single-threaded coordinator.
+//!
+//! The subsystem has three moving parts:
+//!
+//! * [`ClassifierSnapshot`] — an **immutable** trained classifier (the
+//!   exported [`SmoModel`] plus a monotonically increasing version).
+//!   Shard workers never lock a backend; they read a snapshot.
+//! * [`SnapshotCell`] — the publication point: one atomic version counter
+//!   plus a mutex-held `Arc<ClassifierSnapshot>`. Readers keep a local
+//!   `Arc` clone and re-check only the atomic on every prediction
+//!   ([`SnapshotReader`]), so the hot path is a single `Acquire` load
+//!   unless a new model was actually published.
+//! * the **background trainer** — [`trainer_loop`] drains a bounded
+//!   [`sample_channel`] of labeled observations (emitted by every shard
+//!   worker through a cloned [`SampleSender`]) into the existing
+//!   [`TrainingPipeline`], retrains the [`SvmBackend`] on the pipeline's
+//!   cadence, and publishes each fresh model to the cell.
+//!
+//! Emission never blocks the request path: [`SampleSender::emit`] uses
+//! `try_send` and counts drops when the trainer falls behind. The trainer
+//! exits when every sender is dropped, draining whatever is still queued
+//! (so short traces still get their final retrain).
+//!
+//! The single-threaded [`CacheCoordinator`](super::CacheCoordinator) is a
+//! degenerate participant of the same protocol: it publishes to a
+//! [`SnapshotCell`] after every retrain, so anything that can consume a
+//! snapshot (shard workers, tests, dashboards) sees the same classifier
+//! the coordinator itself batches predictions through.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::runtime::SvmBackend;
+use crate::svm::features::FeatureVec;
+use crate::svm::smo::SmoModel;
+
+use super::training_pipeline::TrainingPipeline;
+
+// ------------------------------------------------------------- snapshots
+
+/// An immutable, versioned classifier. Version 0 is the untrained
+/// snapshot every [`SnapshotCell`] starts from; published models get
+/// versions 1, 2, … in publication order.
+#[derive(Debug, Clone)]
+pub struct ClassifierSnapshot {
+    version: u64,
+    model: Option<SmoModel>,
+}
+
+impl ClassifierSnapshot {
+    /// The version-0 snapshot: no model, every prediction is `None`.
+    pub fn untrained() -> Self {
+        ClassifierSnapshot { version: 0, model: None }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn is_trained(&self) -> bool {
+        self.model.is_some()
+    }
+
+    /// Decision score (class "reused" iff > 0), or `None` when untrained.
+    pub fn decision(&self, features: &FeatureVec) -> Option<f32> {
+        self.model.as_ref().map(|m| m.decision(features))
+    }
+
+    /// Predicted class, or `None` when untrained — exactly the
+    /// `predicted_reuse` an [`AccessContext`](crate::cache::AccessContext)
+    /// carries.
+    pub fn predict(&self, features: &FeatureVec) -> Option<bool> {
+        self.decision(features).map(|s| s > 0.0)
+    }
+}
+
+/// The atomically swappable publication point for classifier snapshots.
+///
+/// `version` is the fast-path gate: readers compare it against their
+/// cached snapshot's version with one `Acquire` load and only take the
+/// `slot` lock when a publish actually happened. Publishing stores the
+/// new `Arc` and bumps `version` under the same lock, so the atomic can
+/// never run ahead of (or behind) the slot.
+#[derive(Debug)]
+pub struct SnapshotCell {
+    version: AtomicU64,
+    slot: Mutex<Arc<ClassifierSnapshot>>,
+}
+
+impl Default for SnapshotCell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SnapshotCell {
+    /// A cell holding the untrained version-0 snapshot.
+    pub fn new() -> Self {
+        SnapshotCell {
+            version: AtomicU64::new(0),
+            slot: Mutex::new(Arc::new(ClassifierSnapshot::untrained())),
+        }
+    }
+
+    /// Latest published version (0 = nothing published yet).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Publish a freshly trained model; returns its version.
+    pub fn publish(&self, model: SmoModel) -> u64 {
+        let mut slot = self.slot.lock().expect("snapshot cell poisoned");
+        let version = slot.version() + 1;
+        *slot = Arc::new(ClassifierSnapshot { version, model: Some(model) });
+        self.version.store(version, Ordering::Release);
+        version
+    }
+
+    /// The current snapshot (shared, immutable).
+    pub fn load(&self) -> Arc<ClassifierSnapshot> {
+        self.slot.lock().expect("snapshot cell poisoned").clone()
+    }
+
+    /// A reader with its own cached `Arc` (one per shard worker).
+    pub fn reader(self: &Arc<Self>) -> SnapshotReader {
+        SnapshotReader {
+            cached: self.load(),
+            refreshes: 0,
+            cell: Arc::clone(self),
+        }
+    }
+}
+
+/// A per-worker handle that caches the latest snapshot `Arc` and
+/// re-clones only when [`SnapshotCell::version`] moved — predictions on
+/// an unchanged model are entirely lock-free.
+#[derive(Debug)]
+pub struct SnapshotReader {
+    cell: Arc<SnapshotCell>,
+    cached: Arc<ClassifierSnapshot>,
+    refreshes: u64,
+}
+
+impl SnapshotReader {
+    pub fn new(cell: Arc<SnapshotCell>) -> Self {
+        cell.reader()
+    }
+
+    /// The freshest snapshot (refreshing the local cache if needed).
+    pub fn current(&mut self) -> &ClassifierSnapshot {
+        if self.cell.version() != self.cached.version() {
+            self.cached = self.cell.load();
+            self.refreshes += 1;
+        }
+        &self.cached
+    }
+
+    /// Predict through the freshest snapshot (`None` while untrained).
+    pub fn predict(&mut self, features: &FeatureVec) -> Option<bool> {
+        self.current().predict(features)
+    }
+
+    /// How many times this reader observed a newly published snapshot.
+    pub fn refreshes(&self) -> u64 {
+        self.refreshes
+    }
+}
+
+// -------------------------------------------------------------- samples
+
+/// One labeled observation flowing from a shard worker to the trainer.
+#[derive(Debug, Clone, Copy)]
+pub struct LabeledSample {
+    pub features: FeatureVec,
+    /// Ground truth (request awareness) or retrospective label.
+    pub reused: bool,
+}
+
+/// Shared counters for a sample channel (all sender clones).
+#[derive(Debug, Default)]
+struct SampleCounters {
+    sent: AtomicU64,
+    dropped: AtomicU64,
+}
+
+/// Cloneable, never-blocking emitter of labeled samples. When the bounded
+/// channel is full (trainer busy) the sample is dropped and counted —
+/// shard workers must not stall on the learning path.
+#[derive(Debug, Clone)]
+pub struct SampleSender {
+    tx: SyncSender<LabeledSample>,
+    counters: Arc<SampleCounters>,
+}
+
+impl SampleSender {
+    /// Emit one labeled sample; returns whether it was accepted.
+    pub fn emit(&self, features: FeatureVec, reused: bool) -> bool {
+        match self.tx.try_send(LabeledSample { features, reused }) {
+            Ok(()) => {
+                self.counters.sent.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.counters.dropped.fetch_add(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// Samples accepted across all clones of this sender.
+    pub fn sent(&self) -> u64 {
+        self.counters.sent.load(Ordering::Relaxed)
+    }
+
+    /// Samples dropped (channel full / trainer gone) across all clones.
+    pub fn dropped(&self) -> u64 {
+        self.counters.dropped.load(Ordering::Relaxed)
+    }
+
+    /// A counters-only handle. Unlike a sender clone it does NOT keep the
+    /// channel connected, so it can outlive the senders and read the final
+    /// totals after the trainer observed the disconnect.
+    pub fn probe(&self) -> SampleProbe {
+        SampleProbe { counters: Arc::clone(&self.counters) }
+    }
+}
+
+/// Read-only view of a sample channel's counters (see
+/// [`SampleSender::probe`]).
+#[derive(Debug, Clone)]
+pub struct SampleProbe {
+    counters: Arc<SampleCounters>,
+}
+
+impl SampleProbe {
+    pub fn sent(&self) -> u64 {
+        self.counters.sent.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.counters.dropped.load(Ordering::Relaxed)
+    }
+}
+
+/// A bounded sample channel: `(emitter, trainer-side receiver)`. The
+/// bound is the backpressure limit — beyond it, [`SampleSender::emit`]
+/// drops instead of blocking.
+pub fn sample_channel(bound: usize) -> (SampleSender, Receiver<LabeledSample>) {
+    let (tx, rx) = mpsc::sync_channel(bound.max(1));
+    (
+        SampleSender { tx, counters: Arc::new(SampleCounters::default()) },
+        rx,
+    )
+}
+
+// -------------------------------------------------------------- trainer
+
+/// Cadence knobs for the background trainer.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainerConfig {
+    /// First training once this many samples accumulated.
+    pub min_samples: usize,
+    /// Retrain every this many *new* observations after that.
+    pub retrain_interval: usize,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig { min_samples: 32, retrain_interval: 64 }
+    }
+}
+
+/// What the trainer did over its lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TrainerReport {
+    /// Samples received from the channel.
+    pub samples: u64,
+    /// Retrainings performed.
+    pub trainings: u64,
+    /// Snapshots published (== trainings when the backend exports).
+    pub publishes: u64,
+    /// Version of the last published snapshot (0 = never published).
+    pub final_version: u64,
+}
+
+/// The background trainer body: drain `rx` into `pipeline`, retrain
+/// `backend` on the pipeline's cadence and publish every fresh model to
+/// `cell`. Returns when every [`SampleSender`] clone is dropped, after
+/// draining the queue — so a short trace still gets its final retrain
+/// published.
+///
+/// Run it on a scoped thread next to the shard workers (see
+/// [`crate::sim::parallel::run_sharded_with_background`]) or a detached
+/// `std::thread` for long-lived deployments.
+pub fn trainer_loop(
+    rx: Receiver<LabeledSample>,
+    backend: &mut dyn SvmBackend,
+    pipeline: &mut TrainingPipeline,
+    cell: &SnapshotCell,
+) -> Result<TrainerReport> {
+    let mut report = TrainerReport::default();
+    while let Ok(sample) = rx.recv() {
+        report.samples += 1;
+        pipeline.observe(sample.features, sample.reused);
+        if pipeline.maybe_train(backend)? {
+            report.trainings += 1;
+            if let Some(model) = backend.export_model() {
+                report.final_version = cell.publish(model);
+                report.publishes += 1;
+            }
+        }
+    }
+    // Senders gone: train once more on whatever arrived since the last
+    // cadence point, so the published model covers the full stream.
+    if pipeline.pending_since_train() > 0 && pipeline.train_now(backend)? {
+        report.trainings += 1;
+        if let Some(model) = backend.export_model() {
+            report.final_version = cell.publish(model);
+            report.publishes += 1;
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::RustBackend;
+    use crate::svm::features::N_FEATURES;
+    use crate::svm::kernel::{KernelKind, KernelParams};
+
+    /// A model whose decision is a constant: sign(bias).
+    fn constant_model(bias: f32) -> SmoModel {
+        SmoModel {
+            params: KernelParams::new(KernelKind::Linear),
+            support_x: Vec::new(),
+            support_y: Vec::new(),
+            alpha: Vec::new(),
+            bias,
+        }
+    }
+
+    fn fv(v: f32) -> FeatureVec {
+        let mut f = [0.0f32; N_FEATURES];
+        f[0] = v;
+        f
+    }
+
+    #[test]
+    fn untrained_snapshot_predicts_none() {
+        let s = ClassifierSnapshot::untrained();
+        assert_eq!(s.version(), 0);
+        assert!(!s.is_trained());
+        assert_eq!(s.predict(&fv(0.9)), None);
+        assert_eq!(s.decision(&fv(0.9)), None);
+    }
+
+    #[test]
+    fn publish_bumps_version_and_swaps_model() {
+        let cell = Arc::new(SnapshotCell::new());
+        assert_eq!(cell.version(), 0);
+        let mut reader = cell.reader();
+        assert_eq!(reader.predict(&fv(0.5)), None);
+
+        assert_eq!(cell.publish(constant_model(1.0)), 1);
+        assert_eq!(cell.version(), 1);
+        assert_eq!(reader.predict(&fv(0.5)), Some(true));
+        assert_eq!(reader.refreshes(), 1);
+
+        assert_eq!(cell.publish(constant_model(-1.0)), 2);
+        assert_eq!(reader.predict(&fv(0.5)), Some(false));
+        assert_eq!(reader.refreshes(), 2);
+        // No new publish: the reader stays on its cached Arc.
+        assert_eq!(reader.predict(&fv(0.5)), Some(false));
+        assert_eq!(reader.refreshes(), 2);
+    }
+
+    #[test]
+    fn sample_channel_counts_drops_when_full() {
+        let (tx, rx) = sample_channel(2);
+        assert!(tx.emit(fv(0.1), true));
+        assert!(tx.emit(fv(0.2), false));
+        assert!(!tx.emit(fv(0.3), true), "third emit exceeds the bound");
+        assert_eq!(tx.sent(), 2);
+        assert_eq!(tx.dropped(), 1);
+        drop(rx);
+        assert!(!tx.emit(fv(0.4), true), "disconnected channel drops");
+        assert_eq!(tx.dropped(), 2);
+    }
+
+    #[test]
+    fn trainer_loop_trains_and_publishes() {
+        let (tx, rx) = sample_channel(1024);
+        let cell = Arc::new(SnapshotCell::new());
+        let mut backend = RustBackend::new(KernelKind::Rbf);
+        let mut pipeline = TrainingPipeline::new(8, 16);
+        // Two separable classes, enough for several cadence points.
+        for i in 0..64 {
+            let reused = i % 2 == 0;
+            tx.emit(fv(if reused { 0.2 } else { 0.8 }), reused);
+        }
+        drop(tx);
+        let report = trainer_loop(rx, &mut backend, &mut pipeline, &cell).unwrap();
+        assert_eq!(report.samples, 64);
+        assert!(report.trainings >= 1, "{report:?}");
+        assert_eq!(report.publishes, report.trainings, "rust backend exports");
+        assert_eq!(report.final_version, cell.version());
+        assert!(cell.version() >= 1);
+        // The published snapshot separates the classes.
+        let snap = cell.load();
+        assert_eq!(snap.predict(&fv(0.2)), Some(true));
+        assert_eq!(snap.predict(&fv(0.8)), Some(false));
+    }
+
+    #[test]
+    fn trainer_loop_single_class_never_publishes() {
+        let (tx, rx) = sample_channel(64);
+        let cell = Arc::new(SnapshotCell::new());
+        let mut backend = RustBackend::new(KernelKind::Rbf);
+        let mut pipeline = TrainingPipeline::new(4, 4);
+        for i in 0..32 {
+            tx.emit(fv(i as f32 / 32.0), false);
+        }
+        drop(tx);
+        let report = trainer_loop(rx, &mut backend, &mut pipeline, &cell).unwrap();
+        assert_eq!(report.samples, 32);
+        assert_eq!(report.trainings, 0);
+        assert_eq!(report.publishes, 0);
+        assert_eq!(cell.version(), 0, "nothing to publish from one class");
+    }
+
+    #[test]
+    fn trainer_drains_after_disconnect_and_publishes_the_tail() {
+        let (tx, rx) = sample_channel(1024);
+        let cell = Arc::new(SnapshotCell::new());
+        let mut backend = RustBackend::new(KernelKind::Rbf);
+        // min_samples larger than the stream: no cadence training fires,
+        // only the final drain training covers the tail.
+        let mut pipeline = TrainingPipeline::new(1000, 1000);
+        for i in 0..20 {
+            let reused = i % 2 == 0;
+            tx.emit(fv(if reused { 0.1 } else { 0.9 }), reused);
+        }
+        drop(tx);
+        let report = trainer_loop(rx, &mut backend, &mut pipeline, &cell).unwrap();
+        assert_eq!(report.trainings, 1, "drain training");
+        assert_eq!(report.publishes, 1);
+        assert_eq!(cell.version(), 1);
+    }
+}

@@ -28,7 +28,12 @@ pub struct TrainingPipeline {
     /// new samples after that.
     min_samples: usize,
     retrain_interval: usize,
-    samples_at_last_train: usize,
+    /// Cadence anchor: observations since the last (re)training. A plain
+    /// counter is immune to the sliding-window halving — the earlier
+    /// buffer-length anchor (`samples_at_last_train`) was decremented by
+    /// the drain and could make the next retrain fire immediately (anchor
+    /// saturated to 0) or drift late after repeated halvings.
+    observed_since_train: usize,
     pub trainings: u64,
 }
 
@@ -40,17 +45,26 @@ impl TrainingPipeline {
             max_samples: 8192,
             min_samples: min_samples.max(2),
             retrain_interval: retrain_interval.max(1),
-            samples_at_last_train: 0,
+            observed_since_train: 0,
             trainings: 0,
         }
+    }
+
+    /// Override the sliding-window cap (tests and memory-tight deployments).
+    pub fn with_max_samples(mut self, max_samples: usize) -> Self {
+        self.max_samples = max_samples.max(2);
+        self
     }
 
     /// Add one labeled observation.
     pub fn observe(&mut self, features: FeatureVec, reused: bool) {
         self.buffer.push(features, reused);
         self.n_positive += reused as usize;
+        self.observed_since_train += 1;
         if self.buffer.len() > self.max_samples {
             // Drop the oldest half (sliding window over recent behaviour).
+            // The cadence anchor is a counter of observations, not a buffer
+            // position, so the drain must not touch it.
             let keep_from = self.buffer.len() / 2;
             self.n_positive = self.buffer.y[keep_from..]
                 .iter()
@@ -58,8 +72,6 @@ impl TrainingPipeline {
                 .count();
             self.buffer.x.drain(..keep_from);
             self.buffer.y.drain(..keep_from);
-            self.samples_at_last_train =
-                self.samples_at_last_train.saturating_sub(keep_from);
         }
     }
 
@@ -72,15 +84,21 @@ impl TrainingPipeline {
         self.n_positive > 0 && self.n_positive < self.buffer.len()
     }
 
+    /// Observations since the last (re)training — the cadence counter the
+    /// background trainer uses to decide whether a final drain training is
+    /// worthwhile.
+    pub fn pending_since_train(&self) -> usize {
+        self.observed_since_train
+    }
+
     fn due(&self) -> bool {
-        let n = self.buffer.len();
         if !self.has_both_classes() {
             return false;
         }
         if self.trainings == 0 {
-            n >= self.min_samples
+            self.buffer.len() >= self.min_samples
         } else {
-            n >= self.samples_at_last_train + self.retrain_interval
+            self.observed_since_train >= self.retrain_interval
         }
     }
 
@@ -96,7 +114,7 @@ impl TrainingPipeline {
         }
         backend.train(&ds)?;
         self.trainings += 1;
-        self.samples_at_last_train = self.buffer.len();
+        self.observed_since_train = 0;
         log::debug!(
             "svm retrained: samples={} positives={} trainings={}",
             ds.len(),
@@ -115,7 +133,7 @@ impl TrainingPipeline {
         ds.preprocess();
         backend.train(&ds)?;
         self.trainings += 1;
-        self.samples_at_last_train = self.buffer.len();
+        self.observed_since_train = 0;
         Ok(true)
     }
 
@@ -199,6 +217,45 @@ mod tests {
         assert!(!tp.maybe_train(&mut be).unwrap());
         assert!(!tp.train_now(&mut be).unwrap());
         assert_eq!(be.trainings, 0);
+    }
+
+    /// Property: the retrain cadence is exactly `retrain_interval` new
+    /// observations, no matter how often the sliding window halves in
+    /// between. (The old buffer-length anchor fired immediately — or
+    /// drifted late — after a halving.)
+    #[test]
+    fn retrain_cadence_survives_window_halvings() {
+        for (min, interval, max_samples) in [(4, 8, 16), (2, 5, 8), (6, 13, 20)] {
+            let mut be = CountingBackend { trainings: 0 };
+            let mut tp = TrainingPipeline::new(min, interval).with_max_samples(max_samples);
+            let mut train_points = Vec::new();
+            for i in 0..400usize {
+                // Alternate classes so both are always present.
+                tp.observe(fv(i), i % 2 == 0);
+                if tp.maybe_train(&mut be).unwrap() {
+                    train_points.push(i);
+                }
+            }
+            assert!(
+                train_points.len() >= 2,
+                "cadence must fire repeatedly (min={min} interval={interval})"
+            );
+            assert_eq!(
+                train_points[0] + 1,
+                min.max(2),
+                "first training at min_samples"
+            );
+            for w in train_points.windows(2) {
+                assert_eq!(
+                    w[1] - w[0],
+                    interval,
+                    "retrain gap must be exactly the interval across halvings \
+                     (min={min} interval={interval} max={max_samples})"
+                );
+            }
+            // The window itself stayed bounded the whole time.
+            assert!(tp.n_samples() <= max_samples);
+        }
     }
 
     #[test]

@@ -12,6 +12,7 @@
 //! | `sharded_replay` | shard-parallel trace replay on scoped workers |
 //! | `simulate`| DES cluster scenario: arrivals, heartbeats, retraining |
 //! | `admission` | eviction-policy × admission-policy sweep (pollution control) |
+//! | `online_sharded` | frozen vs. online-learning shard-parallel replay matrix |
 
 pub mod admission;
 pub mod common;
@@ -19,6 +20,7 @@ pub mod fig3;
 pub mod fig4;
 pub mod fig5;
 pub mod fig6;
+pub mod online_sharded;
 pub mod policies;
 pub mod sharded_replay;
 pub mod simulate;

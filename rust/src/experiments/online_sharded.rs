@@ -1,0 +1,430 @@
+//! True online H-SVM-LRU on the concurrent path: the shard-parallel
+//! replay of [`super::sharded_replay`] with a **live background trainer**
+//! instead of a classify-once pass — the `repro online` driver.
+//!
+//! Every shard worker walks its shard's slice of the trace in original
+//! order, computing features from a *per-shard* [`BlockStatsTracker`]
+//! (block → shard routing is stable, so a block's whole history lives on
+//! one shard and the features are bit-identical to the single-threaded
+//! pass — see [`super::sharded_replay::trace_dataset`]). Each request:
+//!
+//! 1. emits its (features, `reused_later`) request-awareness sample into
+//!    the bounded channel (never blocking; drops are counted),
+//! 2. predicts through a lock-free [`SnapshotReader`] over the latest
+//!    published classifier, and
+//! 3. replays the access against the shared [`ShardedCache`].
+//!
+//! The background trainer drains the channel into a
+//! [`TrainingPipeline`], retrains on cadence, and publishes every fresh
+//! model to the [`SnapshotCell`] the workers read — the paper's §5 online
+//! loop, running as wide as the hardware allows.
+//!
+//! [`TrainerMode::Frozen`] is the control arm: the identical worker path
+//! with the trainer disabled and a single pre-trained snapshot published
+//! up front. It is bit-identical to the classify-once replay
+//! (`run_with_classes`) — the parity is property-tested in
+//! rust/tests/property_online.rs and smoke-checked by `repro online
+//! --smoke` in CI.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cache::sharded::{shard_of, ShardStats, ShardedCache};
+use crate::cache::AccessContext;
+use crate::coordinator::online::{
+    sample_channel, trainer_loop, SampleSender, SnapshotCell, SnapshotReader, TrainerConfig,
+    TrainerReport,
+};
+use crate::coordinator::TrainingPipeline;
+use crate::runtime::{RustBackend, SvmBackend};
+use crate::sim::parallel::{run_sharded, run_sharded_with_background};
+use crate::svm::features::BlockStatsTracker;
+use crate::svm::smo::SmoModel;
+use crate::svm::KernelKind;
+use crate::util::table::{fmt_f, Table};
+use crate::workload::BlockRequest;
+
+use super::sharded_replay::trace_dataset;
+
+/// Backpressure bound of the worker → trainer sample channel. Larger than
+/// the experiment traces, so the built-in sweeps never drop a sample and
+/// the trainer is guaranteed to see (and publish from) the full stream.
+pub const SAMPLE_CHANNEL_BOUND: usize = 8192;
+
+/// Classifier arm of the replay.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrainerMode {
+    /// One snapshot pre-trained on the whole trace, never updated — the
+    /// classify-once control, bit-identical to `repro sharded`.
+    Frozen,
+    /// Background trainer consuming the live sample stream and publishing
+    /// snapshots mid-trace.
+    Online,
+}
+
+impl TrainerMode {
+    pub fn label(self) -> &'static str {
+        match self {
+            TrainerMode::Frozen => "frozen",
+            TrainerMode::Online => "online",
+        }
+    }
+}
+
+/// Outcome of one online (or frozen-control) shard-parallel replay.
+#[derive(Debug, Clone)]
+pub struct OnlineReplayReport {
+    pub policy: String,
+    pub mode: TrainerMode,
+    pub shards: usize,
+    /// Merged counters (the hit ratio of the whole replay).
+    pub stats: ShardStats,
+    /// Per-shard counters, in shard order.
+    pub per_shard: Vec<ShardStats>,
+    /// Wall-clock time of the replay phase (trainer included — it runs
+    /// concurrently and ends with the workers' sample stream).
+    pub wall: Duration,
+    /// What the background trainer did (all-zero in frozen mode).
+    pub trainer: TrainerReport,
+    /// Samples accepted into the channel across all workers.
+    pub samples_sent: u64,
+    /// Samples dropped because the trainer fell behind.
+    pub samples_dropped: u64,
+    /// Newly published snapshots observed by workers mid-replay, summed
+    /// over workers (0 when every worker finished before the first
+    /// publish — the trainer still drains and publishes afterwards).
+    pub snapshot_refreshes: u64,
+}
+
+impl OnlineReplayReport {
+    pub fn hit_ratio(&self) -> f64 {
+        self.stats.hit_ratio()
+    }
+
+    pub fn requests_per_sec(&self) -> f64 {
+        self.stats.requests as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Samples the trainer consumed per second of replay wall time.
+    pub fn samples_per_sec(&self) -> f64 {
+        self.trainer.samples as f64 / self.wall.as_secs_f64().max(1e-12)
+    }
+}
+
+/// Train one model on the whole trace exactly like the classify-once pass
+/// ([`super::sharded_replay::classify_trace`]) trains its backend: same
+/// dataset construction, same `RustBackend` training path. `None` when
+/// the trace is single-class — then the frozen arm replays unclassified,
+/// matching classify-once's all-`None` predictions.
+pub fn pretrain_model(trace: &[BlockRequest], kernel: KernelKind) -> Result<Option<SmoModel>> {
+    let (_, dataset) = trace_dataset(trace);
+    if dataset.n_positive() == 0 || dataset.n_positive() == dataset.len() {
+        return Ok(None);
+    }
+    let mut backend = RustBackend::new(kernel);
+    backend.train(&dataset).context("pretraining frozen snapshot")?;
+    Ok(backend.export_model())
+}
+
+/// Replay `trace` on a fresh `shards`-way cache of `policy`, with the
+/// classifier arm selected by `mode` (see module docs for the worker
+/// protocol). `cfg` sets the online trainer's cadence; ignored when
+/// frozen.
+pub fn run_online(
+    policy: &str,
+    shards: usize,
+    capacity: u64,
+    trace: &[BlockRequest],
+    mode: TrainerMode,
+    kernel: KernelKind,
+    cfg: TrainerConfig,
+) -> Result<OnlineReplayReport> {
+    let pretrained = match mode {
+        TrainerMode::Frozen => pretrain_model(trace, kernel)?,
+        TrainerMode::Online => None,
+    };
+    run_online_with(policy, shards, capacity, trace, mode, kernel, cfg, pretrained)
+}
+
+/// [`run_online`] with the frozen arm's pretrained model supplied by the
+/// caller — the model depends only on (trace, kernel), so sweeps train it
+/// once instead of once per cell (mirroring `run_sweep`'s hoisted
+/// classify pass in `sharded_replay`).
+#[allow(clippy::too_many_arguments)] // run_online + the hoisted model
+fn run_online_with(
+    policy: &str,
+    shards: usize,
+    capacity: u64,
+    trace: &[BlockRequest],
+    mode: TrainerMode,
+    kernel: KernelKind,
+    cfg: TrainerConfig,
+    pretrained: Option<SmoModel>,
+) -> Result<OnlineReplayReport> {
+    let cache = ShardedCache::from_registry(policy, shards, capacity)
+        .with_context(|| format!("unknown policy {policy:?}"))?;
+    let n = cache.n_shards();
+    let mut partitions: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, req) in trace.iter().enumerate() {
+        partitions[shard_of(req.block, n)].push(i);
+    }
+    let block_size = trace.iter().map(|r| r.size).max().unwrap_or(1);
+    let cell = Arc::new(SnapshotCell::new());
+
+    // The master sender lives in a mutex-held Option: each worker clones
+    // it on entry, and the `finish` hook takes it once every worker has
+    // joined — the disconnect that tells the trainer to drain and exit.
+    // In frozen mode it is `None` and workers never emit.
+    let (sender, rx) = sample_channel(SAMPLE_CHANNEL_BOUND);
+    let probe = sender.probe();
+    let master: Mutex<Option<SampleSender>> = match mode {
+        TrainerMode::Online => Mutex::new(Some(sender)),
+        TrainerMode::Frozen => {
+            drop(sender);
+            if let Some(model) = pretrained {
+                cell.publish(model);
+            }
+            Mutex::new(None)
+        }
+    };
+
+    let worker = |w: usize| {
+        let tx = master.lock().expect("sender mutex poisoned").as_ref().cloned();
+        let mut tracker = BlockStatsTracker::new(block_size);
+        let mut reader = SnapshotReader::new(Arc::clone(&cell));
+        for &i in &partitions[w] {
+            let req = &trace[i];
+            let features =
+                tracker.features(req.block, req.kind, req.size, req.affinity, req.time);
+            if let Some(tx) = &tx {
+                tx.emit(features, req.reused_later);
+            }
+            let ctx = AccessContext {
+                time: req.time,
+                size: req.size,
+                kind: req.kind,
+                file: req.block.0, // trace blocks are their own files
+                file_width: 1,
+                file_complete: false,
+                affinity: req.affinity,
+                predicted_reuse: reader.predict(&features),
+            };
+            cache.access_or_insert(req.block, &ctx);
+            tracker.record_access(req.block, 0, req.time);
+        }
+        (cache.stats_of(w), reader.refreshes())
+    };
+
+    let t0 = Instant::now();
+    let (per_worker, trainer) = match mode {
+        TrainerMode::Frozen => {
+            drop(rx);
+            let per_worker = run_sharded(n, worker);
+            let trainer =
+                TrainerReport { final_version: cell.version(), ..TrainerReport::default() };
+            (per_worker, trainer)
+        }
+        TrainerMode::Online => {
+            let trainer_cell = Arc::clone(&cell);
+            let (per_worker, trainer) = run_sharded_with_background(
+                n,
+                worker,
+                move || {
+                    let mut backend = RustBackend::new(kernel);
+                    let mut pipeline =
+                        TrainingPipeline::new(cfg.min_samples, cfg.retrain_interval);
+                    trainer_loop(rx, &mut backend, &mut pipeline, &trainer_cell)
+                },
+                || {
+                    master.lock().expect("sender mutex poisoned").take();
+                },
+            );
+            (per_worker, trainer.context("background trainer failed")?)
+        }
+    };
+    let wall = t0.elapsed();
+
+    let mut stats = ShardStats::default();
+    let mut per_shard = Vec::with_capacity(per_worker.len());
+    let mut snapshot_refreshes = 0u64;
+    for (shard_stats, refreshes) in per_worker {
+        stats.merge(&shard_stats);
+        per_shard.push(shard_stats);
+        snapshot_refreshes += refreshes;
+    }
+    Ok(OnlineReplayReport {
+        policy: policy.to_string(),
+        mode,
+        shards: n,
+        stats,
+        per_shard,
+        wall,
+        trainer,
+        samples_sent: probe.sent(),
+        samples_dropped: probe.dropped(),
+        snapshot_refreshes,
+    })
+}
+
+/// The frozen × online matrix over `policies` and `shard_counts`, one
+/// replay per cell, all on the identical trace.
+pub fn run_matrix(
+    policies: &[&str],
+    shard_counts: &[usize],
+    capacity: u64,
+    trace: &[BlockRequest],
+    kernel: KernelKind,
+    cfg: TrainerConfig,
+) -> Result<Vec<OnlineReplayReport>> {
+    // The frozen model depends only on (trace, kernel): train it once for
+    // the whole matrix instead of once per frozen cell.
+    let pretrained = pretrain_model(trace, kernel)?;
+    let mut reports = Vec::with_capacity(policies.len() * shard_counts.len() * 2);
+    for &policy in policies {
+        for &shards in shard_counts {
+            for mode in [TrainerMode::Frozen, TrainerMode::Online] {
+                let model = match mode {
+                    TrainerMode::Frozen => pretrained.clone(),
+                    TrainerMode::Online => None,
+                };
+                reports.push(run_online_with(
+                    policy, shards, capacity, trace, mode, kernel, cfg, model,
+                )?);
+            }
+        }
+    }
+    Ok(reports)
+}
+
+/// Render a matrix run as a table (the `repro online` output).
+pub fn render(reports: &[OnlineReplayReport]) -> Table {
+    let mut t = Table::new(vec![
+        "policy",
+        "mode",
+        "shards",
+        "hit ratio",
+        "publishes",
+        "trainings",
+        "samples",
+        "dropped",
+        "refreshes",
+        "replay wall (ms)",
+        "req/s",
+    ]);
+    for r in reports {
+        t.add_row(vec![
+            r.policy.clone(),
+            r.mode.label().to_string(),
+            r.shards.to_string(),
+            fmt_f(r.hit_ratio(), 4),
+            r.trainer.publishes.to_string(),
+            r.trainer.trainings.to_string(),
+            r.samples_sent.to_string(),
+            r.samples_dropped.to_string(),
+            r.snapshot_refreshes.to_string(),
+            fmt_f(r.wall.as_secs_f64() * 1e3, 2),
+            format!("{:.0}", r.requests_per_sec()),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::sharded_replay::{classify_trace, run_with_classes};
+    use crate::util::bytes::MB;
+    use crate::workload::fig3_trace;
+
+    const BLOCK: u64 = 64 * MB;
+
+    /// The acceptance criterion's control arm: frozen-mode replay is
+    /// bit-identical to the classify-once path, for 1 and 8 shards.
+    #[test]
+    fn frozen_matches_classify_once() {
+        let trace = fig3_trace(BLOCK, 5);
+        let classes = classify_trace(&trace, KernelKind::Rbf, 64).unwrap();
+        for shards in [1usize, 8] {
+            let baseline =
+                run_with_classes("h-svm-lru", shards, 8 * BLOCK, &trace, &classes).unwrap();
+            let frozen = run_online(
+                "h-svm-lru",
+                shards,
+                8 * BLOCK,
+                &trace,
+                TrainerMode::Frozen,
+                KernelKind::Rbf,
+                TrainerConfig::default(),
+            )
+            .unwrap();
+            assert_eq!(frozen.stats, baseline.stats, "{shards}-shard frozen parity");
+            assert_eq!(frozen.per_shard, baseline.per_shard);
+            assert_eq!(frozen.samples_sent, 0, "frozen workers never emit");
+            assert_eq!(frozen.trainer.publishes, 0);
+            assert_eq!(frozen.trainer.final_version, 1, "one pretrained snapshot");
+        }
+    }
+
+    #[test]
+    fn online_replay_trains_and_publishes_live() {
+        let trace = fig3_trace(BLOCK, 7);
+        let report = run_online(
+            "h-svm-lru",
+            8,
+            8 * BLOCK,
+            &trace,
+            TrainerMode::Online,
+            KernelKind::Rbf,
+            TrainerConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(report.stats.requests, trace.len() as u64);
+        assert_eq!(report.stats.hits + report.stats.misses, report.stats.requests);
+        assert_eq!(report.shards, 8);
+        // The channel is wider than the trace: every sample reaches the
+        // trainer, so at least one (re)training + publish is guaranteed.
+        assert_eq!(report.samples_dropped, 0);
+        assert_eq!(report.samples_sent, trace.len() as u64);
+        assert_eq!(report.trainer.samples, trace.len() as u64);
+        assert!(report.trainer.trainings >= 1, "{:?}", report.trainer);
+        assert!(report.trainer.publishes >= 1, "{:?}", report.trainer);
+        assert_eq!(report.trainer.final_version, report.trainer.publishes);
+    }
+
+    #[test]
+    fn matrix_covers_modes_policies_and_shards() {
+        let trace = fig3_trace(BLOCK, 3);
+        let reports = run_matrix(
+            &["lru", "h-svm-lru"],
+            &[1, 4],
+            8 * BLOCK,
+            &trace,
+            KernelKind::Rbf,
+            TrainerConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(reports.len(), 2 * 2 * 2);
+        for r in &reports {
+            assert_eq!(r.stats.requests, trace.len() as u64);
+        }
+        let t = render(&reports);
+        assert_eq!(t.n_rows(), 8);
+    }
+
+    #[test]
+    fn unknown_policy_errors() {
+        let trace = fig3_trace(BLOCK, 3);
+        let r = run_online(
+            "nonsense",
+            2,
+            8 * BLOCK,
+            &trace,
+            TrainerMode::Frozen,
+            KernelKind::Rbf,
+            TrainerConfig::default(),
+        );
+        assert!(r.is_err());
+    }
+}

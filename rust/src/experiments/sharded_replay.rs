@@ -24,7 +24,7 @@ use crate::cache::sharded::{shard_of, ShardStats, ShardedCache};
 use crate::cache::AccessContext;
 use crate::runtime::{RustBackend, SvmBackend};
 use crate::sim::parallel::run_sharded;
-use crate::svm::features::BlockStatsTracker;
+use crate::svm::features::{BlockStatsTracker, FeatureVec};
 use crate::svm::KernelKind;
 use crate::util::table::{fmt_f, Table};
 use crate::workload::BlockRequest;
@@ -56,6 +56,32 @@ impl ShardedReplayReport {
     }
 }
 
+/// The feature pass shared by every trace classifier: walk `trace` once
+/// with a fresh [`BlockStatsTracker`], returning each request's
+/// *pre-access* feature vector plus the full request-awareness dataset
+/// (features labeled with `reused_later`).
+///
+/// Per-block feature state depends only on that block's own history, and
+/// a block's requests all route to one shard — so a per-shard tracker fed
+/// its shard's requests in trace order reproduces these vectors exactly.
+/// That invariant is what lets the online replay (`experiments::
+/// online_sharded`) compute features concurrently yet stay bit-identical
+/// to this single-threaded pass (property-tested in
+/// rust/tests/property_online.rs).
+pub fn trace_dataset(trace: &[BlockRequest]) -> (Vec<FeatureVec>, crate::svm::Dataset) {
+    let block_size = trace.iter().map(|r| r.size).max().unwrap_or(1);
+    let mut tracker = BlockStatsTracker::new(block_size);
+    let mut dataset = crate::svm::Dataset::new();
+    let mut features = Vec::with_capacity(trace.len());
+    for req in trace {
+        let f = tracker.features(req.block, req.kind, req.size, req.affinity, req.time);
+        dataset.push(f, req.reused_later);
+        features.push(f);
+        tracker.record_access(req.block, 0, req.time);
+    }
+    (features, dataset)
+}
+
 /// Phase 1: single-threaded classifier pass. Trains the SMO fallback on the
 /// trace's request-awareness labels, then batch-scores every request's
 /// feature vector (chunks of `batch`). Returns one prediction per request;
@@ -66,18 +92,7 @@ pub fn classify_trace(
     batch: usize,
 ) -> Result<Vec<Option<bool>>> {
     let mut backend = RustBackend::new(kernel);
-    let block_size = trace.iter().map(|r| r.size).max().unwrap_or(1);
-
-    // Training pass: features at access time, labeled by the ground truth.
-    let mut tracker = BlockStatsTracker::new(block_size);
-    let mut dataset = crate::svm::Dataset::new();
-    let mut features = Vec::with_capacity(trace.len());
-    for req in trace {
-        let f = tracker.features(req.block, req.kind, req.size, req.affinity, req.time);
-        dataset.push(f, req.reused_later);
-        features.push(f);
-        tracker.record_access(req.block, 0, req.time);
-    }
+    let (features, dataset) = trace_dataset(trace);
     if dataset.n_positive() == 0 || dataset.n_positive() == dataset.len() {
         return Ok(vec![None; trace.len()]);
     }

@@ -95,11 +95,12 @@ fn run(args: &[String]) -> Result<()> {
             use h_svm_lru::mapreduce::FailureModel;
             let svm_cfg = cli.svm_config()?;
             let (mut cluster_cfg, _) = h_svm_lru::config::load(cli.flag("config"))?;
-            let policy = cli.flag("policy").unwrap_or("h-svm-lru").to_string();
-            let scenario = match policy.as_str() {
-                "none" | "no-cache" => Scenario::NoCache,
-                "h-svm-lru" => Scenario::SvmLru,
-                p => Scenario::Policy(p.to_string()),
+            let scenario = match cli.flag("policy") {
+                Some("none") | Some("no-cache") => Scenario::NoCache,
+                _ => match cli.policy("h-svm-lru")?.as_str() {
+                    "h-svm-lru" => Scenario::SvmLru,
+                    p => Scenario::Policy(p.to_string()),
+                },
             };
             cluster_cfg.cache_shards = cli.shards(cluster_cfg.cache_shards)?;
             if let Some(adm) = cli.flag("admission") {
@@ -150,18 +151,10 @@ fn run(args: &[String]) -> Result<()> {
             let max_shards = cli.shards(8)?;
             let blocks: u64 =
                 cli.flag("cache-blocks").map(|s| s.parse()).transpose()?.unwrap_or(8);
-            let policy = cli.flag("policy").unwrap_or("h-svm-lru").to_string();
+            let policy = cli.policy("h-svm-lru")?;
             let block_size = 64 * MB;
             let trace = h_svm_lru::workload::fig3_trace(block_size, cli.seed()?);
-            // Doubling sweep, always ending on the requested count (so
-            // --shards 6 actually runs 1, 2, 4, 6).
-            let mut counts = Vec::new();
-            let mut shards = 1usize;
-            while shards < max_shards {
-                counts.push(shards);
-                shards *= 2;
-            }
-            counts.push(max_shards);
+            let counts = doubling_shard_counts(max_shards);
             let reports =
                 sharded_replay::run_sweep(&policy, &counts, blocks * block_size, &trace)?;
             emit(
@@ -234,6 +227,123 @@ fn run(args: &[String]) -> Result<()> {
             }
             Ok(())
         }
+        "online" => {
+            use h_svm_lru::coordinator::online::TrainerConfig;
+            use h_svm_lru::experiments::online_sharded::{self, TrainerMode};
+            use h_svm_lru::experiments::sharded_replay;
+            use h_svm_lru::svm::KernelKind;
+            use h_svm_lru::util::bytes::MB;
+
+            let svm_cfg = cli.svm_config()?;
+            // The online trainer needs a Send backend that exports model
+            // snapshots; the PJRT path offers neither. Reject rather than
+            // silently substituting the rust backend for the one asked for.
+            anyhow::ensure!(
+                svm_cfg.backend == "rust",
+                "`repro online` requires --svm-backend rust (the {} backend cannot \
+                 export Send model snapshots for the background trainer)",
+                svm_cfg.backend
+            );
+            let kernel = KernelKind::from_name(&svm_cfg.kernel)
+                .ok_or_else(|| anyhow::anyhow!("bad kernel name {:?}", svm_cfg.kernel))?;
+            let max_shards = cli.shards(8)?;
+            let blocks: u64 =
+                cli.flag("cache-blocks").map(|s| s.parse()).transpose()?.unwrap_or(8);
+            let policy = cli.policy("h-svm-lru")?;
+            let smoke = cli.switch("smoke");
+            let seed = cli.seed()?;
+            let block_size = 64 * MB;
+            let capacity = blocks * block_size;
+            let trainer_cfg = TrainerConfig::default();
+
+            // Smoke: just the requested policy at the full shard count
+            // (the acceptance path). Full: an lru baseline next to the
+            // requested policy, over a doubling shard sweep.
+            let mut policies = vec![policy.as_str()];
+            let mut counts = vec![max_shards];
+            if !smoke {
+                if policy != "lru" {
+                    policies.insert(0, "lru");
+                }
+                counts = doubling_shard_counts(max_shards);
+            }
+
+            let traces = [
+                ("fig3", h_svm_lru::workload::fig3_trace(block_size, seed)),
+                ("scan-storm", h_svm_lru::workload::scan_storm_trace(block_size, seed)),
+            ];
+            for (name, trace) in &traces {
+                let reports = online_sharded::run_matrix(
+                    &policies,
+                    &counts,
+                    capacity,
+                    trace,
+                    kernel,
+                    trainer_cfg,
+                )?;
+                emit(
+                    &format!(
+                        "Online-learning replay on {name} ({} requests, cache = {blocks} \
+                         blocks of 64MB)",
+                        trace.len()
+                    ),
+                    &online_sharded::render(&reports),
+                    csv,
+                );
+                let online = reports
+                    .iter()
+                    .find(|r| {
+                        r.policy == policy
+                            && r.mode == TrainerMode::Online
+                            && r.shards == max_shards
+                    })
+                    .expect("matrix covers the requested cell");
+                println!(
+                    "\n{name}, {policy} @ {max_shards} shards online: {} snapshot \
+                     publish(es), {} samples ({} dropped), {:.0} samples/s",
+                    online.trainer.publishes,
+                    online.samples_sent,
+                    online.samples_dropped,
+                    online.samples_per_sec(),
+                );
+                // The acceptance criteria, enforced on the smoke path CI
+                // runs: the live trainer must actually publish, and the
+                // frozen arm must be bit-identical to the classify-once
+                // `repro sharded` replay.
+                if smoke {
+                    anyhow::ensure!(
+                        online.trainer.publishes >= 1,
+                        "online replay on {name} never published a snapshot"
+                    );
+                    let classes = sharded_replay::classify_trace(trace, kernel, 64)?;
+                    let baseline = sharded_replay::run_with_classes(
+                        &policy, max_shards, capacity, trace, &classes,
+                    )?;
+                    let frozen = reports
+                        .iter()
+                        .find(|r| {
+                            r.policy == policy
+                                && r.mode == TrainerMode::Frozen
+                                && r.shards == max_shards
+                        })
+                        .expect("matrix covers the frozen cell");
+                    anyhow::ensure!(
+                        frozen.stats == baseline.stats
+                            && frozen.per_shard == baseline.per_shard,
+                        "frozen online replay diverged from the classify-once path on \
+                         {name}: {:?} vs {:?}",
+                        frozen.stats,
+                        baseline.stats
+                    );
+                    println!(
+                        "smoke ok: frozen arm bit-identical to classify-once, \
+                         {} publish(es) live",
+                        online.trainer.publishes
+                    );
+                }
+            }
+            Ok(())
+        }
         "policies" => {
             let blocks: u64 = cli.flag("cache-blocks").map(|s| s.parse()).transpose()?.unwrap_or(8);
             let results = policies::run(&cli.svm_config()?, cli.seed()?, blocks)?;
@@ -256,6 +366,20 @@ fn run(args: &[String]) -> Result<()> {
             anyhow::bail!("unknown subcommand {other:?}\n\n{HELP}");
         }
     }
+}
+
+/// Doubling shard sweep, always ending on the requested count (so
+/// `--shards 6` actually runs 1, 2, 4, 6) — shared by the `sharded` and
+/// `online` subcommands.
+fn doubling_shard_counts(max_shards: usize) -> Vec<usize> {
+    let mut counts = Vec::new();
+    let mut shards = 1usize;
+    while shards < max_shards {
+        counts.push(shards);
+        shards *= 2;
+    }
+    counts.push(max_shards);
+    counts
 }
 
 /// A 30-second tour: replay the Fig 3 trace at one cache size and print

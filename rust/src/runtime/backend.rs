@@ -29,6 +29,23 @@ pub trait SvmBackend {
     fn decision_batch(&mut self, queries: &[FeatureVec]) -> Result<Vec<f32>>;
 
     fn is_trained(&self) -> bool;
+
+    /// Export the trained model for immutable snapshot publication
+    /// (`coordinator::online`): the returned [`SmoModel`] scores
+    /// identically to `decision_batch` but is plain `Send + Sync` data
+    /// shard workers can read lock-free behind an `Arc`. Backends whose
+    /// state cannot leave the device (the PJRT path keeps dual state in
+    /// artifact-shaped buffers) return `None` and online consumers fall
+    /// back to the in-process path.
+    fn export_model(&self) -> Option<SmoModel> {
+        None
+    }
+
+    /// Install a previously exported model (snapshot import — the inverse
+    /// of [`SvmBackend::export_model`]). Default: unsupported.
+    fn import_model(&mut self, _model: SmoModel) -> Result<()> {
+        bail!("backend {:?} cannot import model snapshots", self.name())
+    }
 }
 
 /// Convenience: predicted classes.
@@ -209,6 +226,15 @@ impl SvmBackend for RustBackend {
     fn is_trained(&self) -> bool {
         self.model.is_some()
     }
+
+    fn export_model(&self) -> Option<SmoModel> {
+        self.model.clone()
+    }
+
+    fn import_model(&mut self, model: SmoModel) -> Result<()> {
+        self.model = Some(model);
+        Ok(())
+    }
 }
 
 /// Build the configured backend ("hlo" or "rust").
@@ -258,6 +284,22 @@ mod tests {
             .count() as f64
             / ds.len() as f64;
         assert!(acc > 0.95, "acc={acc}");
+    }
+
+    #[test]
+    fn export_import_round_trip_preserves_decisions() {
+        let mut trained = RustBackend::new(KernelKind::Rbf);
+        assert!(trained.export_model().is_none(), "untrained exports nothing");
+        let ds = blob_dataset(40);
+        trained.train(&ds).unwrap();
+        let model = trained.export_model().expect("trained backend exports");
+
+        let mut imported = RustBackend::new(KernelKind::Rbf);
+        imported.import_model(model).unwrap();
+        assert!(imported.is_trained());
+        let a = trained.decision_batch(&ds.x).unwrap();
+        let b = imported.decision_batch(&ds.x).unwrap();
+        assert_eq!(a, b, "snapshot round trip must score identically");
     }
 
     #[test]

@@ -35,6 +35,56 @@ where
     })
 }
 
+/// Run `worker(0..n_workers)` concurrently *plus* one background task on
+/// the same scope, and return `(worker results, background result)`.
+///
+/// The online-learning replay is the motivating shape: shard workers
+/// replay the trace while the background task runs the trainer loop,
+/// consuming the sample channel the workers feed. `finish` runs after
+/// every worker has joined and *before* the background task is joined —
+/// the place to drop the channel sender whose disconnect tells the
+/// background loop to drain and exit. Forgetting to close the channel in
+/// `finish` deadlocks the join, exactly like the equivalent hand-rolled
+/// scope would.
+///
+/// Panics propagate from workers and background task alike.
+pub fn run_sharded_with_background<R, B, F, G, D>(
+    n_workers: usize,
+    worker: F,
+    background: G,
+    finish: D,
+) -> (Vec<R>, B)
+where
+    R: Send,
+    B: Send,
+    F: Fn(usize) -> R + Sync,
+    G: FnOnce() -> B + Send,
+    D: FnOnce(),
+{
+    assert!(n_workers > 0, "run_sharded_with_background with zero workers");
+    std::thread::scope(|scope| {
+        let bg = scope.spawn(background);
+        let worker = &worker;
+        let handles: Vec<_> = (0..n_workers)
+            .map(|i| scope.spawn(move || worker(i)))
+            .collect();
+        // Join every worker BEFORE propagating any panic: `finish` must
+        // run even on worker failure, or the background task would never
+        // see its shutdown signal and the scope would deadlock.
+        let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+        finish();
+        let b = bg.join().expect("background task panicked");
+        let results: Vec<R> = joined
+            .into_iter()
+            .map(|r| match r {
+                Ok(v) => v,
+                Err(p) => std::panic::resume_unwind(p),
+            })
+            .collect();
+        (results, b)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -62,6 +112,36 @@ mod tests {
             data.iter().filter(|&&x| x as usize % n == w).sum::<u64>()
         });
         assert_eq!(partial.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn background_task_consumes_worker_output() {
+        // Workers feed a channel; the background task sums until the
+        // senders disappear (the last one dropped by `finish`).
+        let (tx, rx) = std::sync::mpsc::sync_channel::<u64>(64);
+        let master = std::sync::Mutex::new(Some(tx));
+        let (results, total) = run_sharded_with_background(
+            4,
+            |w| {
+                let tx = master
+                    .lock()
+                    .unwrap()
+                    .as_ref()
+                    .expect("sender taken before workers finished")
+                    .clone();
+                for k in 0..10u64 {
+                    tx.send(w as u64 * 100 + k).unwrap();
+                }
+                w
+            },
+            move || rx.iter().sum::<u64>(),
+            || {
+                master.lock().unwrap().take();
+            },
+        );
+        assert_eq!(results, vec![0, 1, 2, 3]);
+        let expected: u64 = (0..4u64).map(|w| (0..10).map(|k| w * 100 + k).sum::<u64>()).sum();
+        assert_eq!(total, expected);
     }
 
     #[test]

@@ -1,0 +1,223 @@
+//! Property tests for the online-learning subsystem
+//! (`coordinator::online` + `experiments::online_sharded`):
+//!
+//! * snapshot publish/read race: concurrent readers only ever observe
+//!   monotonically non-decreasing versions, and every observed snapshot
+//!   is internally consistent (version ↔ model);
+//! * online-vs-frozen parity when the trainer never publishes (a
+//!   single-class trace): both arms are bit-identical to the
+//!   classify-once replay;
+//! * `ShardStats` merge correctness on the `insert` path, including
+//!   admission-rejected inserts counted as missed requests
+//!   (cache/sharded.rs `insert` accounting), driven concurrently.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+
+use h_svm_lru::cache::sharded::{shard_of, ShardStats, ShardedCache};
+use h_svm_lru::cache::{AccessContext, CacheAffinity};
+use h_svm_lru::coordinator::online::{SnapshotCell, SnapshotReader, TrainerConfig};
+use h_svm_lru::experiments::online_sharded::{run_online, TrainerMode as Mode};
+use h_svm_lru::experiments::sharded_replay::{classify_trace, run_with_classes};
+use h_svm_lru::hdfs::{BlockId, BlockKind};
+use h_svm_lru::sim::SimTime;
+use h_svm_lru::svm::features::N_FEATURES;
+use h_svm_lru::svm::kernel::{KernelKind, KernelParams};
+use h_svm_lru::svm::smo::SmoModel;
+use h_svm_lru::util::bytes::MB;
+use h_svm_lru::workload::BlockRequest;
+
+/// A model whose decision is the constant `bias` — version `v` is
+/// published with bias `+v` so readers can check snapshot consistency.
+fn constant_model(bias: f32) -> SmoModel {
+    SmoModel {
+        params: KernelParams::new(KernelKind::Linear),
+        support_x: Vec::new(),
+        support_y: Vec::new(),
+        alpha: Vec::new(),
+        bias,
+    }
+}
+
+#[test]
+fn concurrent_readers_see_monotone_consistent_snapshots() {
+    const PUBLISHES: u64 = 200;
+    const READERS: usize = 4;
+    let cell = Arc::new(SnapshotCell::new());
+    let publisher_done = Arc::new(AtomicBool::new(false));
+    let start = Arc::new(Barrier::new(READERS + 1));
+
+    std::thread::scope(|scope| {
+        for _ in 0..READERS {
+            let cell = Arc::clone(&cell);
+            let done = Arc::clone(&publisher_done);
+            let start = Arc::clone(&start);
+            scope.spawn(move || {
+                let mut reader = SnapshotReader::new(cell);
+                let mut last_version = 0u64;
+                let features = [0.0f32; N_FEATURES];
+                start.wait();
+                loop {
+                    let finished = done.load(Ordering::Acquire);
+                    let snap = reader.current();
+                    let v = snap.version();
+                    assert!(
+                        v >= last_version,
+                        "version went backwards: {last_version} -> {v}"
+                    );
+                    last_version = v;
+                    // Consistency: version v was published with bias +v,
+                    // so a torn version/model pair would show up here.
+                    match snap.decision(&features) {
+                        None => assert_eq!(v, 0, "trained snapshot lost its model"),
+                        Some(score) => {
+                            assert_eq!(score, v as f32, "snapshot {v} carries wrong model")
+                        }
+                    }
+                    // One more pass after the publisher finished, so every
+                    // reader provably converges to the final version.
+                    if finished {
+                        break;
+                    }
+                }
+                let snap = reader.current();
+                assert_eq!(snap.version(), PUBLISHES, "reader must converge");
+            });
+        }
+        start.wait();
+        for v in 1..=PUBLISHES {
+            let published = cell.publish(constant_model(v as f32));
+            assert_eq!(published, v, "publisher owns the version sequence");
+        }
+        publisher_done.store(true, Ordering::Release);
+    });
+    assert_eq!(cell.version(), PUBLISHES);
+}
+
+/// A trace where no block is ever re-requested: every label is negative,
+/// the classifier is untrainable, and the online trainer must never
+/// publish.
+fn single_class_trace(n: usize) -> Vec<BlockRequest> {
+    (0..n)
+        .map(|i| BlockRequest {
+            time: SimTime(i as u64 * 1_000_000),
+            block: BlockId(i as u64),
+            size: 64 * MB,
+            kind: BlockKind::Intermediate,
+            affinity: CacheAffinity::Low,
+            reused_later: false,
+        })
+        .collect()
+}
+
+#[test]
+fn online_without_publishes_matches_frozen_and_classify_once() {
+    let trace = single_class_trace(300);
+    let capacity = 8 * 64 * MB;
+    for shards in [1usize, 8] {
+        let online = run_online(
+            "h-svm-lru",
+            shards,
+            capacity,
+            &trace,
+            Mode::Online,
+            KernelKind::Rbf,
+            TrainerConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(online.trainer.publishes, 0, "single class must not train");
+        assert_eq!(online.trainer.trainings, 0);
+        assert_eq!(online.snapshot_refreshes, 0);
+        assert_eq!(
+            online.trainer.samples,
+            trace.len() as u64,
+            "trainer still consumed the stream"
+        );
+
+        let frozen = run_online(
+            "h-svm-lru",
+            shards,
+            capacity,
+            &trace,
+            Mode::Frozen,
+            KernelKind::Rbf,
+            TrainerConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(frozen.trainer.final_version, 0, "nothing to pretrain on");
+
+        let classes = classify_trace(&trace, KernelKind::Rbf, 64).unwrap();
+        assert!(classes.iter().all(|c| c.is_none()));
+        let baseline = run_with_classes("h-svm-lru", shards, capacity, &trace, &classes).unwrap();
+
+        assert_eq!(online.stats, baseline.stats, "{shards}-shard online parity");
+        assert_eq!(online.per_shard, baseline.per_shard);
+        assert_eq!(frozen.stats, baseline.stats, "{shards}-shard frozen parity");
+        assert_eq!(frozen.per_shard, baseline.per_shard);
+    }
+}
+
+/// Mode labels and trainer-config defaults (the public CLI surface).
+#[test]
+fn trainer_mode_labels() {
+    assert_eq!(Mode::Frozen.label(), "frozen");
+    assert_eq!(Mode::Online.label(), "online");
+    let cfg = TrainerConfig::default();
+    assert!(cfg.min_samples >= 2);
+    assert!(cfg.retrain_interval >= 1);
+}
+
+#[test]
+fn insert_path_counts_rejections_as_misses_and_merges_exactly() {
+    // Ghost admission refuses every first sighting: drive the coordinator's
+    // miss path (`ShardedCache::insert`) concurrently and check the
+    // accounting end to end.
+    let n = 4usize;
+    let cache = ShardedCache::from_registry_with_admission("lru", "ghost", n, 64).unwrap();
+    let blocks: Vec<BlockId> = (0..120u64).map(BlockId).collect();
+    let ctx_of = |t: u64| AccessContext::simple(SimTime(t), 1);
+
+    // Two rounds: first insert of each block is probation-rejected, the
+    // re-insert is admitted. Each worker only touches its own shard.
+    std::thread::scope(|scope| {
+        for w in 0..n {
+            let cache = &cache;
+            let blocks = &blocks;
+            scope.spawn(move || {
+                for round in 0..2u64 {
+                    for (i, &b) in blocks.iter().enumerate() {
+                        if shard_of(b, n) == w && !cache.contains(b) {
+                            cache.insert(b, &ctx_of(round * 1000 + i as u64));
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    let merged = cache.stats();
+    let by_hand = cache
+        .shard_stats()
+        .iter()
+        .fold(ShardStats::default(), |mut acc, s| {
+            acc.merge(s);
+            acc
+        });
+    assert_eq!(merged, by_hand, "merged stats must equal the per-shard fold");
+
+    // insert() counts every call as a missed request — including the
+    // admission-rejected ones (the cache/sharded.rs insert contract).
+    assert_eq!(merged.requests, 2 * blocks.len() as u64);
+    assert_eq!(merged.misses, merged.requests, "insert path never hits");
+    assert_eq!(merged.hits, 0);
+    assert_eq!(merged.rejected, blocks.len() as u64, "every first sighting refused");
+    assert_eq!(merged.admitted, blocks.len() as u64, "every re-insert admitted");
+    assert_eq!(merged.insertions, merged.admitted);
+    // Conservation across shards: admitted - evicted = still cached.
+    assert_eq!(
+        merged.insertions - merged.evictions,
+        cache.len() as u64,
+        "insertion/eviction conservation"
+    );
+    assert!(cache.used() <= cache.capacity());
+}
