@@ -1,0 +1,239 @@
+//! The O(1) eviction hot path + SVM fast-path inference, measured.
+//!
+//! Two claims to hold the line on (this file is the recorded baseline all
+//! future perf PRs are judged against):
+//!
+//! 1. **touch/insert/evict are O(1)**: per-op latency of the ported
+//!    policies (OrderList-backed LRU / H-SVM-LRU / Modified-ARC, plus the
+//!    ghost-admission LRU) stays flat — within noise — as the resident
+//!    population grows 1k → 1M blocks. The BTreeMap implementations this
+//!    replaced degraded with O(log n) re-keying per access.
+//! 2. **linear-kernel `decision` is O(d)**: the precomputed weight vector
+//!    makes the score independent of the support-vector count (64 → 4096
+//!    SVs, flat), while RBF — which must keep the kernel loop — scales
+//!    linearly over the contiguous SoA slab.
+//!
+//! Plus decisions/sec through `RustBackend::decision_batch` and the SMO
+//! train cost (error-cache path).
+//!
+//! Flags: `--json` writes BENCH_hotpath.json via `bench_support::
+//! write_json` (uploaded by the CI bench-record job), `--quick` drops to
+//! CI-smoke sizes/iteration counts.
+
+use h_svm_lru::bench_support::{banner, black_box, write_json, BenchResult, Bencher};
+use h_svm_lru::cache::admission::GhostProbation;
+use h_svm_lru::cache::registry::make_policy;
+use h_svm_lru::cache::{AccessContext, BlockCache};
+use h_svm_lru::hdfs::BlockId;
+use h_svm_lru::runtime::{RustBackend, SvmBackend};
+use h_svm_lru::sim::SimTime;
+use h_svm_lru::svm::features::{FeatureVec, N_FEATURES};
+use h_svm_lru::svm::kernel::{KernelKind, KernelParams};
+use h_svm_lru::svm::smo::{train, SmoConfig, SmoModel};
+use h_svm_lru::svm::Dataset;
+use h_svm_lru::util::rng::Pcg64;
+
+/// Mixed touch/insert/evict stream at a fixed resident population:
+/// even ops touch a likely-resident block (hit → policy re-order), odd ops
+/// insert a never-seen block (miss → insert + one eviction at capacity).
+struct HotPath {
+    cache: BlockCache,
+    resident: u64,
+    now: u64,
+    cold: u64,
+}
+
+impl HotPath {
+    fn new(policy: &str, ghost: bool, resident: u64) -> Self {
+        let policy = make_policy(policy).expect("registry policy");
+        let cache = if ghost {
+            // Ghost probation sized to the population: every rejected
+            // first sighting and every eviction churns the ghost LRU.
+            BlockCache::with_admission(
+                policy,
+                Box::new(GhostProbation::new(resident as usize)),
+                resident,
+            )
+        } else {
+            BlockCache::new(policy, resident)
+        };
+        let mut hp = HotPath { cache, resident, now: 0, cold: 0 };
+        // Prefill to capacity so every odd op evicts (two rounds: ghost
+        // admission needs each id twice to graduate probation).
+        for i in 0..2 * resident {
+            hp.step_block(i % resident);
+        }
+        hp.cold = resident;
+        hp
+    }
+
+    fn step_block(&mut self, id: u64) {
+        let ctx = AccessContext::simple(SimTime(self.now), 1)
+            .with_prediction(id % 3 != 0);
+        black_box(self.cache.access_or_insert(BlockId(id), &ctx));
+        self.now += 1;
+    }
+
+    /// One measured op (the 7919 stride decorrelates the hot-id walk).
+    fn step(&mut self, t: u64) {
+        let id = if t % 2 == 0 {
+            // Likely-resident id: recently inserted cold ids stay cached
+            // until ~`resident` newer inserts push them out.
+            let back = 1 + t.wrapping_mul(7919) % self.resident;
+            self.cold.saturating_sub(back)
+        } else {
+            self.cold += 1;
+            self.cold
+        };
+        self.step_block(id);
+    }
+}
+
+fn bench_policies(bench: &Bencher, quick: bool, results: &mut Vec<BenchResult>) {
+    banner("eviction hot path — touch/insert/evict mix vs resident blocks");
+    let ops: u64 = if quick { 20_000 } else { 100_000 };
+    let sizes: &[u64] = if quick {
+        &[1_000, 32_768]
+    } else {
+        &[1_000, 32_768, 1_000_000]
+    };
+    let configs: &[(&str, bool)] = &[
+        ("lru", false),
+        ("h-svm-lru", false),
+        ("modified-arc", false),
+        ("lru", true), // + ghost-probation admission
+    ];
+    for &(policy, ghost) in configs {
+        let label = if ghost {
+            format!("{policy}+ghost")
+        } else {
+            policy.to_string()
+        };
+        for &resident in sizes {
+            let mut hp = HotPath::new(policy, ghost, resident);
+            let r = bench.run_per_op(
+                &format!("{label} access mix, {resident} resident"),
+                ops,
+                || {
+                    for t in 0..ops {
+                        hp.step(t);
+                    }
+                },
+            );
+            println!("{}", r.report());
+            results.push(r);
+        }
+    }
+    println!("\nO(1) check: per-op latency must stay flat (within noise) down each column.");
+}
+
+/// A synthetic dual model with `n_sv` active support vectors.
+fn synth_model(kind: KernelKind, n_sv: usize, seed: u64) -> SmoModel {
+    let mut rng = Pcg64::new(seed, 0xFA57);
+    let mut x = Vec::with_capacity(n_sv);
+    let mut y = Vec::with_capacity(n_sv);
+    let mut alpha = Vec::with_capacity(n_sv);
+    for i in 0..n_sv {
+        let mut v = [0.0f32; N_FEATURES];
+        for f in v.iter_mut() {
+            *f = rng.next_f64() as f32;
+        }
+        x.push(v.to_vec());
+        y.push(if i % 2 == 0 { 1.0 } else { -1.0 });
+        alpha.push(0.1 + rng.next_f64() as f32);
+    }
+    SmoModel::new(KernelParams::new(kind), x, y, alpha, 0.05)
+}
+
+fn bench_svm(bench: &Bencher, quick: bool, results: &mut Vec<BenchResult>) {
+    banner("SVM inference — decision latency vs support-vector count");
+    let evals: u64 = if quick { 5_000 } else { 50_000 };
+    let query = [0.4f32; N_FEATURES];
+    for kind in [KernelKind::Linear, KernelKind::Rbf] {
+        for n_sv in [64usize, 512, 4096] {
+            let model = synth_model(kind, n_sv, 11);
+            let r = bench.run_per_op(
+                &format!("{} decision, {n_sv} sv", kind.name()),
+                evals,
+                || {
+                    for _ in 0..evals {
+                        black_box(model.decision(&query));
+                    }
+                },
+            );
+            println!("{}", r.report());
+            results.push(r);
+        }
+    }
+    println!("\nO(1) check: linear decision must not scale with the sv count (rbf does).");
+
+    banner("SVM batch inference — decisions/sec through RustBackend");
+    let batch: Vec<FeatureVec> = {
+        let mut rng = Pcg64::new(3, 0xBA7C);
+        (0..1024)
+            .map(|_| {
+                let mut f = [0.0f32; N_FEATURES];
+                for v in f.iter_mut() {
+                    *v = rng.next_f64() as f32;
+                }
+                f
+            })
+            .collect()
+    };
+    for kind in [KernelKind::Linear, KernelKind::Rbf] {
+        let mut backend = RustBackend::new(kind);
+        backend
+            .import_model(synth_model(kind, 256, 17))
+            .expect("rust backend imports snapshots");
+        let r = bench.run_per_op(
+            &format!("decision_batch 1024q, {} 256sv", kind.name()),
+            1024,
+            || {
+                black_box(backend.decision_batch(&batch).expect("batch scores"));
+            },
+        );
+        println!("{}", r.report());
+        results.push(r);
+    }
+}
+
+fn bench_train(bench: &Bencher, quick: bool, results: &mut Vec<BenchResult>) {
+    banner("SMO training — error-cache path");
+    let n_per = if quick { 64 } else { 128 };
+    let mut rng = Pcg64::new(21, 0);
+    let mut ds = Dataset::new();
+    for _ in 0..n_per {
+        let mut a = [0.0f32; N_FEATURES];
+        let mut b = [0.0f32; N_FEATURES];
+        for k in 0..N_FEATURES {
+            a[k] = rng.gen_normal(0.3, 0.1) as f32;
+            b[k] = rng.gen_normal(0.7, 0.1) as f32;
+        }
+        ds.push(a, true);
+        ds.push(b, false);
+    }
+    let r = bench.run(&format!("smo::train rbf, {} samples", ds.len()), || {
+        black_box(train(&ds, KernelParams::new(KernelKind::Rbf), &SmoConfig::default()));
+    });
+    println!("{}", r.report());
+    results.push(r);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json = args.iter().any(|a| a == "--json");
+    let quick = args.iter().any(|a| a == "--quick");
+
+    let bench = if quick { Bencher::new(1, 3) } else { Bencher::new(2, 10) };
+    let mut results = Vec::new();
+
+    bench_policies(&bench, quick, &mut results);
+    bench_svm(&bench, quick, &mut results);
+    bench_train(&bench, quick, &mut results);
+
+    if json {
+        let path = "BENCH_hotpath.json";
+        write_json(path, "hotpath", &results).expect("writing bench json");
+        println!("\nwrote {path} ({} results)", results.len());
+    }
+}

@@ -9,84 +9,33 @@
 //! never graduates out of the ghost — the 2Q/ARC ghost-history idea applied
 //! as pure admission control.
 
-use std::collections::VecDeque;
-
 use crate::hdfs::BlockId;
-use crate::util::fasthash::IdHashMap;
 
+use super::super::order_list::LruSet;
 use super::super::AccessContext;
 use super::AdmissionPolicy;
 
-/// Bounded LRU set of block ids with O(1) touch via stamped lazy deletion:
-/// the map holds each member's latest stamp, the queue holds (id, stamp)
-/// entries in insertion order, and entries whose stamp is stale are dropped
-/// when they surface at the front.
-#[derive(Debug, Default)]
-struct GhostLru {
-    stamps: IdHashMap<BlockId, u64>,
-    queue: VecDeque<(BlockId, u64)>,
-    seq: u64,
-    capacity: usize,
-}
-
-impl GhostLru {
-    fn new(capacity: usize) -> Self {
-        GhostLru { capacity: capacity.max(1), ..Default::default() }
-    }
-
-    /// Insert or refresh `block` as most-recently-seen, evicting the least
-    /// recently seen member when over capacity.
-    fn record(&mut self, block: BlockId) {
-        self.seq += 1;
-        self.stamps.insert(block, self.seq);
-        self.queue.push_back((block, self.seq));
-        while self.stamps.len() > self.capacity {
-            let (b, s) = self.queue.pop_front().expect("members imply queue entries");
-            if self.stamps.get(&b) == Some(&s) {
-                self.stamps.remove(&b);
-            }
-        }
-        // Drain stale fronts eagerly so the queue stays near `len()`.
-        while let Some(&(b, s)) = self.queue.front() {
-            if self.stamps.get(&b) == Some(&s) {
-                break;
-            }
-            self.queue.pop_front();
-        }
-        // A live front entry can shield stale entries behind it from the
-        // drain above (e.g. one never-re-referenced probation member while
-        // admissions keep removing stamps mid-queue). Compact whenever
-        // stale entries dominate: `retain` keeps order and runs at most
-        // once per `capacity` pushes, so it amortizes to O(1) per record.
-        if self.queue.len() > 2 * self.capacity {
-            let stamps = &self.stamps;
-            self.queue.retain(|(b, s)| stamps.get(b) == Some(s));
-        }
-    }
-
-    /// Remove `block`; true if it was a member.
-    fn remove(&mut self, block: BlockId) -> bool {
-        self.stamps.remove(&block).is_some()
-    }
-
-    fn contains(&self, block: BlockId) -> bool {
-        self.stamps.contains_key(&block)
-    }
-
-    fn len(&self) -> usize {
-        self.stamps.len()
-    }
-}
-
-/// Ghost-LRU probation admission.
+/// Ghost-LRU probation admission. The ghost is a bounded [`LruSet`] —
+/// O(1) allocation-free touch/insert/remove/trim. (The previous
+/// implementation emulated O(1) removal with stamped lazy deletion over a
+/// `VecDeque` plus periodic compaction; the handle unlink makes all of
+/// that machinery unnecessary.)
 pub struct GhostProbation {
-    ghost: GhostLru,
+    ghost: LruSet<BlockId>,
+    capacity: usize,
 }
 
 impl GhostProbation {
     /// Ghost history of at most `capacity` block ids.
     pub fn new(capacity: usize) -> Self {
-        GhostProbation { ghost: GhostLru::new(capacity) }
+        GhostProbation { ghost: LruSet::new(), capacity: capacity.max(1) }
+    }
+
+    /// Insert or refresh `block` as most-recently-seen, evicting the least
+    /// recently seen member when over capacity.
+    fn record(&mut self, block: BlockId) {
+        self.ghost.touch_or_insert(block);
+        self.ghost.trim_to(self.capacity);
     }
 
     /// Current ghost members (ids on probation or recently evicted).
@@ -95,13 +44,13 @@ impl GhostProbation {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.ghost.len() == 0
+        self.ghost.is_empty()
     }
 
     /// Maximum ghost members — `len() <= capacity()` always holds
     /// (property-tested in rust/tests/property_admission.rs).
     pub fn capacity(&self) -> usize {
-        self.ghost.capacity
+        self.capacity
     }
 
     pub fn contains(&self, block: BlockId) -> bool {
@@ -127,13 +76,13 @@ impl AdmissionPolicy for GhostProbation {
             true
         } else {
             // First sighting: put it on probation instead of in the cache.
-            self.ghost.record(candidate);
+            self.record(candidate);
             false
         }
     }
 
     fn on_evict(&mut self, block: BlockId) {
-        self.ghost.record(block);
+        self.record(block);
     }
 }
 
@@ -181,10 +130,10 @@ mod tests {
     }
 
     #[test]
-    fn stale_queue_entries_are_compacted() {
-        // One never-re-referenced probation member sits live at the queue
-        // front while admission pairs keep stranding stale entries behind
-        // it; compaction must keep the queue bounded by the capacity.
+    fn churn_reuses_slab_slots() {
+        // One never-re-referenced probation member plus thousands of
+        // probation/admission pairs: the list slab must stay bounded by
+        // the peak live membership (no stale entries, no compaction debt).
         let mut g = GhostProbation::new(8);
         assert!(!admit(&mut g, 999_999));
         for id in 0..10_000u64 {
@@ -193,9 +142,9 @@ mod tests {
         }
         assert!(g.len() <= g.capacity());
         assert!(
-            g.ghost.queue.len() <= 2 * g.capacity(),
-            "queue grew to {} entries for {} members",
-            g.ghost.queue.len(),
+            g.ghost.slots() <= g.capacity(),
+            "slab grew to {} slots for {} members",
+            g.ghost.slots(),
             g.len()
         );
     }

@@ -1,19 +1,20 @@
 //! FIFO — insertion order, no recency update. Sanity baseline for the
 //! policy-comparison ablation (not in the paper's survey, but the natural
-//! lower bound for ordered policies).
+//! lower bound for ordered policies). Insertion order lives in an intrusive
+//! [`OrderList`]: O(1) allocation-free insert and evict.
 
-use std::collections::{BTreeMap, HashMap};
+use crate::util::fasthash::IdHashMap;
 
 use crate::hdfs::BlockId;
 use crate::sim::SimTime;
 
+use super::order_list::{OrderHandle, OrderList};
 use super::{AccessContext, CachePolicy};
 
 #[derive(Debug, Default)]
 pub struct Fifo {
-    order: BTreeMap<i64, BlockId>,
-    index: HashMap<BlockId, i64>,
-    next: i64,
+    order: OrderList<BlockId>,
+    index: IdHashMap<BlockId, OrderHandle>,
 }
 
 impl Fifo {
@@ -33,19 +34,17 @@ impl CachePolicy for Fifo {
 
     fn on_insert(&mut self, block: BlockId, _ctx: &AccessContext) {
         debug_assert!(!self.index.contains_key(&block), "double insert");
-        let key = self.next;
-        self.next += 1;
-        self.order.insert(key, block);
-        self.index.insert(block, key);
+        let handle = self.order.push_back(block);
+        self.index.insert(block, handle);
     }
 
     fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
-        self.order.values().next().copied()
+        self.order.front()
     }
 
     fn on_evict(&mut self, block: BlockId) {
-        if let Some(key) = self.index.remove(&block) {
-            self.order.remove(&key);
+        if let Some(handle) = self.index.remove(&block) {
+            self.order.unlink(handle);
         }
     }
 

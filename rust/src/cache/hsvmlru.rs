@@ -14,18 +14,22 @@
 //!   plain LRU — the paper's own consistency claim, property-tested in
 //!   rust/tests/property_cache.rs.
 //!
+//! Each region is an intrusive [`OrderList`] (two regions = two lists), so
+//! every hit/insert/evict is an O(1) allocation-free splice — identical
+//! order semantics to the original two-BTreeMap layout, property-tested in
+//! rust/tests/property_orderlist.rs.
+//!
 //! The SVM prediction arrives via `AccessContext::predicted_reuse`, filled
 //! by the coordinator (HLO-artifact predictor or the Rust SMO fallback).
 //! An absent prediction (classifier not yet trained) behaves like class 1,
 //! i.e. plain LRU.
-
-use std::collections::BTreeMap;
 
 use crate::util::fasthash::IdHashMap;
 
 use crate::hdfs::BlockId;
 use crate::sim::SimTime;
 
+use super::order_list::{OrderHandle, OrderList};
 use super::{AccessContext, CachePolicy};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,12 +42,9 @@ enum Region {
 
 #[derive(Debug, Default)]
 pub struct HSvmLru {
-    unused: BTreeMap<i64, BlockId>,
-    reused: BTreeMap<i64, BlockId>,
-    index: IdHashMap<BlockId, (Region, i64)>,
-    /// Monotone counters for back-of-region keys; front inserts mirror them.
-    next_hi: i64,
-    next_lo: i64,
+    unused: OrderList<BlockId>,
+    reused: OrderList<BlockId>,
+    index: IdHashMap<BlockId, (Region, OrderHandle)>,
 }
 
 impl HSvmLru {
@@ -52,29 +53,25 @@ impl HSvmLru {
     }
 
     fn detach(&mut self, block: BlockId) {
-        if let Some((region, key)) = self.index.remove(&block) {
+        if let Some((region, handle)) = self.index.remove(&block) {
             match region {
-                Region::Unused => self.unused.remove(&key),
-                Region::Reused => self.reused.remove(&key),
+                Region::Unused => self.unused.unlink(handle),
+                Region::Reused => self.reused.unlink(handle),
             };
         }
     }
 
     fn push_back(&mut self, region: Region, block: BlockId) {
-        let key = self.next_hi;
-        self.next_hi += 1;
-        match region {
-            Region::Unused => self.unused.insert(key, block),
-            Region::Reused => self.reused.insert(key, block),
+        let handle = match region {
+            Region::Unused => self.unused.push_back(block),
+            Region::Reused => self.reused.push_back(block),
         };
-        self.index.insert(block, (region, key));
+        self.index.insert(block, (region, handle));
     }
 
     fn push_front_unused(&mut self, block: BlockId) {
-        self.next_lo -= 1;
-        let key = self.next_lo;
-        self.unused.insert(key, block);
-        self.index.insert(block, (Region::Unused, key));
+        let handle = self.unused.push_front(block);
+        self.index.insert(block, (Region::Unused, handle));
     }
 
     fn classify(ctx: &AccessContext) -> bool {
@@ -85,11 +82,7 @@ impl HSvmLru {
     /// Eviction order (first = next victim): whole unused region, then the
     /// reused region in LRU order. Diagnostic/test helper.
     pub fn eviction_order(&self) -> Vec<BlockId> {
-        self.unused
-            .values()
-            .chain(self.reused.values())
-            .copied()
-            .collect()
+        self.unused.iter().chain(self.reused.iter()).collect()
     }
 
     pub fn n_unused(&self) -> usize {
@@ -131,11 +124,7 @@ impl CachePolicy for HSvmLru {
 
     fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
         // Victim = top of the cache: the unused region drains first.
-        self.unused
-            .values()
-            .next()
-            .or_else(|| self.reused.values().next())
-            .copied()
+        self.unused.front().or_else(|| self.reused.front())
     }
 
     fn on_evict(&mut self, block: BlockId) {
@@ -214,6 +203,19 @@ mod tests {
         p.on_hit(BlockId(1), &plain(3));
         assert_eq!(p.choose_victim(SimTime(4)), Some(BlockId(2)));
         assert_eq!(p.n_reused(), 2);
+    }
+
+    #[test]
+    fn region_flips_reuse_freed_slots() {
+        // A block bouncing between regions must not grow either slab.
+        let mut p = HSvmLru::new();
+        p.on_insert(BlockId(1), &ctx(0, true));
+        for t in 1..2_000u64 {
+            p.on_hit(BlockId(1), &ctx(t, t % 2 == 0));
+        }
+        assert_eq!(p.len(), 1);
+        assert_eq!(p.unused.slots(), 1);
+        assert_eq!(p.reused.slots(), 1);
     }
 
     #[test]

@@ -1,25 +1,27 @@
 //! Classic LRU — the paper's baseline (H-LRU scenario).
 //!
 //! Implemented as the "ordered dictionary" the paper describes (§4.2): an
-//! order index (monotone counter -> block) plus a reverse map. Victim = the
-//! least recently used block (the "top" of the paper's cache picture).
-
-use std::collections::BTreeMap;
+//! intrusive [`OrderList`] (least recently used at the front) plus a
+//! block → handle map. Every touch is an O(1) allocation-free
+//! `move_to_back`; the BTreeMap re-keying the original implementation paid
+//! per access is gone (parity property-tested in
+//! rust/tests/property_orderlist.rs). Victim = the least recently used
+//! block (the "top" of the paper's cache picture).
 
 use crate::util::fasthash::IdHashMap;
 
 use crate::hdfs::BlockId;
 use crate::sim::SimTime;
 
+use super::order_list::{OrderHandle, OrderList};
 use super::{AccessContext, CachePolicy};
 
 #[derive(Debug, Default)]
 pub struct Lru {
-    /// order key -> block, ascending = least recently used first.
-    order: BTreeMap<i64, BlockId>,
-    /// block -> its current order key.
-    index: IdHashMap<BlockId, i64>,
-    next: i64,
+    /// Eviction order: front = least recently used.
+    order: OrderList<BlockId>,
+    /// block -> its live order handle.
+    index: IdHashMap<BlockId, OrderHandle>,
 }
 
 impl Lru {
@@ -28,18 +30,17 @@ impl Lru {
     }
 
     fn touch(&mut self, block: BlockId) {
-        if let Some(old) = self.index.remove(&block) {
-            self.order.remove(&old);
+        if let Some(&handle) = self.index.get(&block) {
+            self.order.move_to_back(handle);
+        } else {
+            let handle = self.order.push_back(block);
+            self.index.insert(block, handle);
         }
-        let key = self.next;
-        self.next += 1;
-        self.order.insert(key, block);
-        self.index.insert(block, key);
     }
 
     /// Eviction order, least-recently-used first (test/diagnostic helper).
     pub fn eviction_order(&self) -> Vec<BlockId> {
-        self.order.values().copied().collect()
+        self.order.iter().collect()
     }
 }
 
@@ -59,12 +60,12 @@ impl CachePolicy for Lru {
     }
 
     fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
-        self.order.values().next().copied()
+        self.order.front()
     }
 
     fn on_evict(&mut self, block: BlockId) {
-        if let Some(key) = self.index.remove(&block) {
-            self.order.remove(&key);
+        if let Some(handle) = self.index.remove(&block) {
+            self.order.unlink(handle);
         }
     }
 
@@ -112,5 +113,22 @@ mod tests {
         let mut lru = Lru::new();
         assert_eq!(lru.choose_victim(SimTime(0)), None);
         assert!(lru.is_empty());
+    }
+
+    #[test]
+    fn long_churn_is_allocation_free() {
+        // Steady-state touch/insert/evict cycles must reuse slab slots.
+        let mut lru = Lru::new();
+        for i in 0..16u64 {
+            lru.on_insert(BlockId(i), &ctx(i));
+        }
+        for t in 16..5_000u64 {
+            let victim = lru.choose_victim(SimTime(t)).unwrap();
+            lru.on_evict(victim);
+            lru.on_insert(BlockId(t), &ctx(t));
+            lru.on_hit(BlockId(t), &ctx(t));
+        }
+        assert_eq!(lru.len(), 16);
+        assert_eq!(lru.order.slots(), 16, "churn must not grow the slab");
     }
 }

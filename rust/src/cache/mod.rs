@@ -25,6 +25,11 @@
 //! refuse to cache a block at all (`always` / `tinylfu` / `ghost` / `svm`).
 //! The default `always` admits everything and is bit-identical to a cache
 //! without the layer.
+//!
+//! The list-ordered policies (`lru`, `hsvmlru`, `fifo`, `arc`, the
+//! admission ghost) keep their eviction order in
+//! [`order_list::OrderList`], a slab-backed intrusive doubly-linked list:
+//! O(1) allocation-free touch/insert/evict on the replay hot path.
 
 pub mod admission;
 pub mod affinity_aware;
@@ -38,6 +43,7 @@ pub mod life;
 pub mod lfu;
 pub mod lfu_f;
 pub mod lru;
+pub mod order_list;
 pub mod registry;
 pub mod sharded;
 pub mod slru_k;

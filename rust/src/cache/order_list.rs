@@ -1,0 +1,470 @@
+//! Slab-backed intrusive order list — the O(1) zero-allocation backbone of
+//! every list-ordered replacement structure.
+//!
+//! The previous implementations kept eviction order in a
+//! `BTreeMap<i64, BlockId>` keyed by a monotone counter: every touch,
+//! insert and evict re-keyed the tree (node allocation + O(log n) pointer
+//! chasing), which dominated the replay hot path long before the policy
+//! logic mattered. `OrderList` replaces that with a doubly-linked list
+//! whose nodes live in one `Vec` slab:
+//!
+//! * **O(1)** `push_front`/`push_back`/`move_to_front`/`move_to_back`/
+//!   `unlink`/`pop_front` — neighbour pointers are slab indices, not heap
+//!   pointers.
+//! * **Zero steady-state allocation** — unlinked slots go on an index
+//!   free-list and are reused by later pushes; the slab only grows while
+//!   the peak live population grows.
+//! * **Stable handles** — an [`OrderHandle`] is the node's slab index. It
+//!   stays valid (and keeps addressing the same element) across any number
+//!   of operations on *other* elements, so callers keep it in the same
+//!   `IdHashMap` they already maintain per block and get O(1) re-ordering
+//!   without a search. A handle dies when its element is unlinked; using
+//!   it afterwards is caller error (caught by `debug_assert` in debug
+//!   builds).
+//!
+//! Used by `Lru`, `HSvmLru` (two regions = two lists), `Fifo`, the four
+//! `ModifiedArc` queues and the admission-ghost LRU; property-tested
+//! against the original BTreeMap/VecDeque implementations in
+//! rust/tests/property_orderlist.rs.
+
+use std::hash::Hash;
+
+use crate::util::fasthash::IdHashMap;
+
+/// End-of-list sentinel.
+const NIL: u32 = u32::MAX;
+/// `prev` marker of a slot on the free list (never a valid index).
+const FREE: u32 = u32::MAX - 1;
+
+/// Stable reference to a live element (its slab index).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OrderHandle(u32);
+
+#[derive(Debug, Clone)]
+struct Node<T> {
+    item: T,
+    prev: u32,
+    next: u32,
+}
+
+/// Doubly-linked order list over a `Vec` slab with an index free-list.
+#[derive(Debug, Clone)]
+pub struct OrderList<T> {
+    nodes: Vec<Node<T>>,
+    head: u32,
+    tail: u32,
+    /// Head of the free-slot chain (threaded through `next`).
+    free: u32,
+    len: usize,
+}
+
+impl<T: Copy> OrderList<T> {
+    pub fn new() -> Self {
+        OrderList { nodes: Vec::new(), head: NIL, tail: NIL, free: NIL, len: 0 }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        OrderList { nodes: Vec::with_capacity(n), ..Self::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Slab slots ever allocated (= peak live population; free-list reuse
+    /// keeps this from growing under churn — asserted in the property
+    /// tests).
+    pub fn slots(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Grab a slot off the free list or grow the slab.
+    fn alloc(&mut self, item: T) -> u32 {
+        if self.free != NIL {
+            let idx = self.free;
+            let node = &mut self.nodes[idx as usize];
+            debug_assert_eq!(node.prev, FREE, "free-list corruption");
+            self.free = node.next;
+            node.item = item;
+            idx
+        } else {
+            assert!(self.nodes.len() < FREE as usize, "order list slab full");
+            self.nodes.push(Node { item, prev: NIL, next: NIL });
+            (self.nodes.len() - 1) as u32
+        }
+    }
+
+    /// Splice `idx` in as the new tail (node must be detached).
+    fn link_back(&mut self, idx: u32) {
+        self.nodes[idx as usize].prev = self.tail;
+        self.nodes[idx as usize].next = NIL;
+        if self.tail != NIL {
+            self.nodes[self.tail as usize].next = idx;
+        } else {
+            self.head = idx;
+        }
+        self.tail = idx;
+    }
+
+    /// Splice `idx` in as the new head (node must be detached).
+    fn link_front(&mut self, idx: u32) {
+        self.nodes[idx as usize].prev = NIL;
+        self.nodes[idx as usize].next = self.head;
+        if self.head != NIL {
+            self.nodes[self.head as usize].prev = idx;
+        } else {
+            self.tail = idx;
+        }
+        self.head = idx;
+    }
+
+    /// Unhook `idx` from its neighbours without freeing the slot.
+    fn detach(&mut self, idx: u32) {
+        let (prev, next) = {
+            let node = &self.nodes[idx as usize];
+            debug_assert_ne!(node.prev, FREE, "stale OrderHandle");
+            (node.prev, node.next)
+        };
+        if prev != NIL {
+            self.nodes[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.nodes[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    /// Append at the eviction-last end. O(1); allocation-free when a freed
+    /// slot is available.
+    pub fn push_back(&mut self, item: T) -> OrderHandle {
+        let idx = self.alloc(item);
+        self.link_back(idx);
+        self.len += 1;
+        OrderHandle(idx)
+    }
+
+    /// Prepend at the eviction-first end. O(1).
+    pub fn push_front(&mut self, item: T) -> OrderHandle {
+        let idx = self.alloc(item);
+        self.link_front(idx);
+        self.len += 1;
+        OrderHandle(idx)
+    }
+
+    /// Remove the element behind `handle`, returning it. The handle is dead
+    /// afterwards; its slot goes on the free list. O(1).
+    pub fn unlink(&mut self, handle: OrderHandle) -> T {
+        let idx = handle.0;
+        self.detach(idx);
+        self.len -= 1;
+        let node = &mut self.nodes[idx as usize];
+        let item = node.item;
+        node.prev = FREE;
+        node.next = self.free;
+        self.free = idx;
+        item
+    }
+
+    /// Re-order an element to the tail (most-recently-used end). O(1).
+    pub fn move_to_back(&mut self, handle: OrderHandle) {
+        if self.tail != handle.0 {
+            self.detach(handle.0);
+            self.link_back(handle.0);
+        }
+    }
+
+    /// Re-order an element to the head (eviction-first end). O(1).
+    pub fn move_to_front(&mut self, handle: OrderHandle) {
+        if self.head != handle.0 {
+            self.detach(handle.0);
+            self.link_front(handle.0);
+        }
+    }
+
+    /// The eviction-first element, if any.
+    pub fn front(&self) -> Option<T> {
+        if self.head == NIL {
+            None
+        } else {
+            Some(self.nodes[self.head as usize].item)
+        }
+    }
+
+    /// The most-recently-ordered element, if any.
+    pub fn back(&self) -> Option<T> {
+        if self.tail == NIL {
+            None
+        } else {
+            Some(self.nodes[self.tail as usize].item)
+        }
+    }
+
+    /// Unlink and return the eviction-first element.
+    pub fn pop_front(&mut self) -> Option<T> {
+        if self.head == NIL {
+            None
+        } else {
+            Some(self.unlink(OrderHandle(self.head)))
+        }
+    }
+
+    /// The element behind a live handle.
+    pub fn get(&self, handle: OrderHandle) -> T {
+        let node = &self.nodes[handle.0 as usize];
+        debug_assert_ne!(node.prev, FREE, "stale OrderHandle");
+        node.item
+    }
+
+    /// Iterate front (eviction-first) to back. O(n) — diagnostics and
+    /// `eviction_order` helpers only, never the hot path.
+    pub fn iter(&self) -> Iter<'_, T> {
+        Iter { list: self, cur: self.head }
+    }
+
+    pub fn clear(&mut self) {
+        self.nodes.clear();
+        self.head = NIL;
+        self.tail = NIL;
+        self.free = NIL;
+        self.len = 0;
+    }
+}
+
+impl<T: Copy> Default for OrderList<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Recency-ordered set of ids over an [`OrderList`] plus a handle map:
+/// O(1) touch/insert/remove and an O(1)-per-drop capacity trim, all
+/// allocation-free in steady state. One implementation for every bounded
+/// "ghost"-style history in the crate (the ARC B1/B2 lists, the admission
+/// ghost) — keeps the unlink/trim invariants in a single place.
+#[derive(Debug, Clone)]
+pub struct LruSet<T> {
+    index: IdHashMap<T, OrderHandle>,
+    order: OrderList<T>,
+}
+
+impl<T: Copy + Eq + Hash> LruSet<T> {
+    pub fn new() -> Self {
+        LruSet { index: IdHashMap::default(), order: OrderList::new() }
+    }
+
+    /// Insert `item` as most-recently-seen, or refresh its recency if
+    /// already a member.
+    pub fn touch_or_insert(&mut self, item: T) {
+        if let Some(&handle) = self.index.get(&item) {
+            self.order.move_to_back(handle);
+        } else {
+            let handle = self.order.push_back(item);
+            self.index.insert(item, handle);
+        }
+    }
+
+    /// Drop least-recently-seen members until `len() <= cap`.
+    pub fn trim_to(&mut self, cap: usize) {
+        while self.order.len() > cap {
+            let oldest = self.order.pop_front().expect("len > cap implies members");
+            self.index.remove(&oldest);
+        }
+    }
+
+    /// Remove `item`; true if it was a member.
+    pub fn remove(&mut self, item: T) -> bool {
+        match self.index.remove(&item) {
+            Some(handle) => {
+                self.order.unlink(handle);
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn contains(&self, item: T) -> bool {
+        self.index.contains_key(&item)
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Slab slots of the backing list (see [`OrderList::slots`]).
+    pub fn slots(&self) -> usize {
+        self.order.slots()
+    }
+}
+
+impl<T: Copy + Eq + Hash> Default for LruSet<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Front-to-back iterator over an [`OrderList`].
+pub struct Iter<'a, T> {
+    list: &'a OrderList<T>,
+    cur: u32,
+}
+
+impl<T: Copy> Iterator for Iter<'_, T> {
+    type Item = T;
+
+    fn next(&mut self) -> Option<T> {
+        if self.cur == NIL {
+            return None;
+        }
+        let node = &self.list.nodes[self.cur as usize];
+        self.cur = node.next;
+        Some(node.item)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(list: &OrderList<u64>) -> Vec<u64> {
+        list.iter().collect()
+    }
+
+    #[test]
+    fn push_move_unlink_order() {
+        let mut l = OrderList::new();
+        let a = l.push_back(1u64);
+        let b = l.push_back(2);
+        let c = l.push_back(3);
+        assert_eq!(collect(&l), vec![1, 2, 3]);
+        l.move_to_back(a);
+        assert_eq!(collect(&l), vec![2, 3, 1]);
+        l.move_to_front(c);
+        assert_eq!(collect(&l), vec![3, 2, 1]);
+        assert_eq!(l.unlink(b), 2);
+        assert_eq!(collect(&l), vec![3, 1]);
+        assert_eq!(l.front(), Some(3));
+        assert_eq!(l.back(), Some(1));
+        assert_eq!(l.len(), 2);
+    }
+
+    #[test]
+    fn push_front_orders_before_head() {
+        let mut l = OrderList::new();
+        l.push_back(2u64);
+        l.push_front(1);
+        l.push_front(0);
+        assert_eq!(collect(&l), vec![0, 1, 2]);
+        assert_eq!(l.pop_front(), Some(0));
+        assert_eq!(l.pop_front(), Some(1));
+        assert_eq!(l.pop_front(), Some(2));
+        assert_eq!(l.pop_front(), None);
+        assert!(l.is_empty());
+    }
+
+    #[test]
+    fn free_list_reuses_slots() {
+        let mut l = OrderList::new();
+        for i in 0..8u64 {
+            l.push_back(i);
+        }
+        assert_eq!(l.slots(), 8);
+        // Heavy churn at constant population: the slab must not grow.
+        for i in 8..10_000u64 {
+            let front = l.pop_front().unwrap();
+            assert_eq!(front, i - 8);
+            l.push_back(i);
+        }
+        assert_eq!(l.len(), 8);
+        assert_eq!(l.slots(), 8, "steady-state churn must not allocate");
+    }
+
+    #[test]
+    fn handles_stay_stable_across_other_ops() {
+        let mut l = OrderList::new();
+        let handles: Vec<(u64, OrderHandle)> =
+            (0..32u64).map(|i| (i, l.push_back(i))).collect();
+        // Unlink every odd element; even handles must still resolve.
+        for (i, h) in &handles {
+            if i % 2 == 1 {
+                assert_eq!(l.unlink(*h), *i);
+            }
+        }
+        for (i, h) in &handles {
+            if i % 2 == 0 {
+                assert_eq!(l.get(*h), *i, "handle {i} moved");
+            }
+        }
+        // New pushes reuse freed slots without disturbing live handles.
+        for i in 100..116u64 {
+            l.push_back(i);
+        }
+        assert_eq!(l.slots(), 32, "pushes reuse the 16 freed slots");
+        for (i, h) in &handles {
+            if i % 2 == 0 {
+                assert_eq!(l.get(*h), *i);
+            }
+        }
+    }
+
+    #[test]
+    fn move_is_noop_at_its_end() {
+        let mut l = OrderList::new();
+        let a = l.push_back(1u64);
+        let b = l.push_back(2);
+        l.move_to_back(b);
+        l.move_to_front(a);
+        assert_eq!(collect(&l), vec![1, 2]);
+        // Singleton: both moves are no-ops.
+        l.unlink(b);
+        l.move_to_back(a);
+        l.move_to_front(a);
+        assert_eq!(collect(&l), vec![1]);
+    }
+
+    #[test]
+    fn lru_set_touch_trim_remove() {
+        let mut s: LruSet<u64> = LruSet::default();
+        for i in 0..4u64 {
+            s.touch_or_insert(i);
+        }
+        s.touch_or_insert(0); // refresh: 0 becomes most recent
+        s.trim_to(2);
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(3) && s.contains(0), "LRU members trimmed first");
+        assert!(!s.contains(1) && !s.contains(2));
+        assert!(s.remove(3));
+        assert!(!s.remove(3));
+        assert!(!s.is_empty());
+        // Churn at constant population reuses slots.
+        for i in 100..1_000u64 {
+            s.touch_or_insert(i);
+            s.trim_to(4);
+        }
+        assert!(s.slots() <= 5, "trimmed churn grew the slab to {}", s.slots());
+    }
+
+    #[test]
+    fn clear_resets_everything() {
+        let mut l = OrderList::new();
+        for i in 0..4u64 {
+            l.push_back(i);
+        }
+        l.clear();
+        assert!(l.is_empty());
+        assert_eq!(l.slots(), 0);
+        assert_eq!(l.front(), None);
+        let h = l.push_back(9);
+        assert_eq!(l.get(h), 9);
+    }
+}

@@ -95,6 +95,10 @@ struct Shard {
 pub struct ShardedCache {
     shards: Vec<Mutex<Shard>>,
     capacity: u64,
+    /// Captured at construction (every shard wraps the same policy /
+    /// admission type) so the name getters never take a shard lock.
+    policy_name: &'static str,
+    admission_name: &'static str,
 }
 
 impl ShardedCache {
@@ -123,6 +127,8 @@ impl ShardedCache {
             admissions.len(),
             "one admission policy per shard"
         );
+        let policy_name = policies[0].name();
+        let admission_name = admissions[0].name();
         let n = policies.len() as u64;
         let base = total_capacity / n;
         let rem = total_capacity % n;
@@ -138,7 +144,7 @@ impl ShardedCache {
                 })
             })
             .collect();
-        ShardedCache { shards, capacity: total_capacity }
+        ShardedCache { shards, capacity: total_capacity, policy_name, admission_name }
     }
 
     /// Build `n_shards` shards of the registry policy `name` (None for an
@@ -177,12 +183,15 @@ impl ShardedCache {
         shard_of(block, self.shards.len())
     }
 
+    /// Wrapped policy name, captured at construction — lock-free, callable
+    /// from reporting paths while shard workers hold the locks.
     pub fn policy_name(&self) -> &'static str {
-        self.shards[0].lock().expect("shard poisoned").cache.policy_name()
+        self.policy_name
     }
 
+    /// Admission policy name, captured at construction — lock-free.
     pub fn admission_name(&self) -> &'static str {
-        self.shards[0].lock().expect("shard poisoned").cache.admission_name()
+        self.admission_name
     }
 
     /// The full access path on the owning shard: hit (policy notified) or
@@ -444,6 +453,18 @@ mod tests {
         assert_eq!(c.hit_ratio(), stats.hit_ratio());
         c.reset_stats();
         assert_eq!(c.stats(), ShardStats::default());
+    }
+
+    #[test]
+    fn name_getters_are_lock_free() {
+        // The names are captured at construction: they must be readable
+        // even while every shard lock (including shard 0's) is held — the
+        // pre-fix implementation deadlocked here.
+        let c = ShardedCache::from_registry_with_admission("h-svm-lru", "tinylfu", 2, 8).unwrap();
+        let guards: Vec<_> = c.shards.iter().map(|s| s.lock().unwrap()).collect();
+        assert_eq!(c.policy_name(), "h-svm-lru");
+        assert_eq!(c.admission_name(), "tinylfu");
+        drop(guards);
     }
 
     #[test]

@@ -3,9 +3,33 @@
 //! K-th most recent access (classic LRU-K). *Selective insertion* declines
 //! to cache blocks on their first sighting unless the cache has plenty of
 //! free room — reducing the byte-insertion overhead the paper's authors
-//! targeted. A weight heuristic biases against very large partitions.
+//! targeted.
+//!
+//! ### Victim index
+//!
+//! LRU-K is the one policy in this crate whose re-ordering is *not* a list
+//! discipline: a hit moves a block's K-distance reference to its previously
+//! second-oldest access, which can land anywhere in the middle of the
+//! order, so an intrusive [`super::order_list::OrderList`] cannot express
+//! it. Instead of the original O(n) full scan per `choose_victim`, the
+//! victim order is maintained in a `BTreeSet` keyed by
+//! `(complete, reference_time, block)`:
+//!
+//! * `complete = false` (fewer than K recorded accesses ⇒ infinite backward
+//!   K-distance) sorts before any complete history — exactly the old
+//!   `(complete, score)` tuple ordering;
+//! * the old score `1 / (1 + age)` is strictly decreasing in the reference
+//!   age, so ascending reference time reproduces ascending score;
+//! * ties (equal reference times) fall back to the block id, as before.
+//!
+//! That makes `choose_victim` O(1) (first element) and each update
+//! O(log n), and is access-for-access identical to the old scan for
+//! monotone traces (property-tested against the scan implementation in
+//! rust/tests/property_orderlist.rs).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeSet, VecDeque};
+
+use crate::util::fasthash::IdHashMap;
 
 use crate::hdfs::BlockId;
 use crate::sim::SimTime;
@@ -16,39 +40,38 @@ use super::{AccessContext, CachePolicy};
 pub struct SlruK {
     k: usize,
     /// Cached blocks: last-K access times (most recent at the back).
-    entries: HashMap<BlockId, VecDeque<SimTime>>,
+    entries: IdHashMap<BlockId, VecDeque<SimTime>>,
+    /// Victim order: incomplete histories first, then oldest K-th-recent
+    /// access; ties by block id (see the module docs).
+    victim_order: BTreeSet<(bool, SimTime, BlockId)>,
     /// Access history for *all* blocks, cached or not (for selectivity).
-    seen: HashMap<BlockId, u64>,
+    seen: IdHashMap<BlockId, u64>,
     /// Admit first-touch blocks only if this many admissions still fit.
     selective_threshold: u64,
-    size_weight: f64,
 }
 
 impl SlruK {
     pub fn new(k: usize) -> Self {
         SlruK {
             k: k.max(1),
-            entries: HashMap::new(),
-            seen: HashMap::new(),
+            entries: IdHashMap::default(),
+            victim_order: BTreeSet::new(),
+            seen: IdHashMap::default(),
             selective_threshold: 2,
-            size_weight: 1.0,
         }
     }
 
-    /// Victim ordering key: smaller = evicted first. Blocks with fewer than
-    /// K recorded accesses have infinite backward K-distance (classic
-    /// LRU-K) and sort before any complete history; ties fall back to the
-    /// last access time.
-    fn weight(&self, times: &VecDeque<SimTime>, now: SimTime) -> (bool, f64) {
-        let complete = times.len() >= self.k;
+    /// Victim-order key for a block's access history: incomplete histories
+    /// (infinite backward K-distance) first, then the K-th most recent
+    /// access time.
+    fn order_key(k: usize, times: &VecDeque<SimTime>, block: BlockId) -> (bool, SimTime, BlockId) {
+        let complete = times.len() >= k;
         let reference = if complete {
-            times[times.len() - self.k]
+            times[times.len() - k]
         } else {
             *times.back().expect("empty access history")
         };
-        let age = reference.duration_until(now).as_secs_f64();
-        let recency_score = 1.0 / (1.0 + age);
-        (complete, recency_score * self.size_weight)
+        (complete, reference, block)
     }
 }
 
@@ -59,10 +82,17 @@ impl CachePolicy for SlruK {
 
     fn on_hit(&mut self, block: BlockId, ctx: &AccessContext) {
         *self.seen.entry(block).or_insert(0) += 1;
+        let k = self.k;
         let times = self.entries.get_mut(&block).expect("hit on untracked block");
+        let old_key = Self::order_key(k, times, block);
         times.push_back(ctx.time);
-        while times.len() > self.k {
+        while times.len() > k {
             times.pop_front();
+        }
+        let new_key = Self::order_key(k, times, block);
+        if new_key != old_key {
+            self.victim_order.remove(&old_key);
+            self.victim_order.insert(new_key);
         }
     }
 
@@ -71,6 +101,7 @@ impl CachePolicy for SlruK {
         *self.seen.entry(block).or_insert(0) += 1;
         let mut times = VecDeque::with_capacity(self.k);
         times.push_back(ctx.time);
+        self.victim_order.insert(Self::order_key(self.k, &times, block));
         self.entries.insert(block, times);
     }
 
@@ -82,19 +113,14 @@ impl CachePolicy for SlruK {
             || (self.entries.len() as u64) < self.selective_threshold
     }
 
-    fn choose_victim(&mut self, now: SimTime) -> Option<BlockId> {
-        self.entries
-            .iter()
-            .min_by(|(ba, ta), (bb, tb)| {
-                let wa = self.weight(ta, now);
-                let wb = self.weight(tb, now);
-                wa.partial_cmp(&wb).unwrap().then(ba.cmp(bb))
-            })
-            .map(|(b, _)| *b)
+    fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
+        self.victim_order.first().map(|&(_, _, b)| b)
     }
 
     fn on_evict(&mut self, block: BlockId) {
-        self.entries.remove(&block);
+        if let Some(times) = self.entries.remove(&block) {
+            self.victim_order.remove(&Self::order_key(self.k, &times, block));
+        }
     }
 
     fn len(&self) -> usize {
@@ -151,5 +177,30 @@ mod tests {
             p.on_hit(BlockId(1), &ctx(t));
         }
         assert_eq!(p.entries[&BlockId(1)].len(), 3);
+    }
+
+    #[test]
+    fn victim_index_tracks_population() {
+        let mut p = SlruK::new(2);
+        for i in 0..8u64 {
+            p.on_insert(BlockId(i), &ctx(i));
+        }
+        for t in 0..20u64 {
+            p.on_hit(BlockId(t % 8), &ctx(100 + t));
+        }
+        assert_eq!(p.victim_order.len(), p.len());
+        while let Some(v) = p.choose_victim(SimTime(1000)) {
+            p.on_evict(v);
+            assert_eq!(p.victim_order.len(), p.len());
+        }
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn equal_reference_times_tie_break_by_id() {
+        let mut p = SlruK::new(1);
+        p.on_insert(BlockId(7), &ctx(5));
+        p.on_insert(BlockId(3), &ctx(5));
+        assert_eq!(p.choose_victim(SimTime(6)), Some(BlockId(3)));
     }
 }

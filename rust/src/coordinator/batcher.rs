@@ -11,8 +11,9 @@
 //!    native batch width before one `decision_batch` call scores them all
 //!    (the vLLM-router-style amortization; see DESIGN.md §8).
 
-use std::collections::VecDeque;
+use std::collections::hash_map::Entry;
 
+use crate::cache::order_list::{OrderHandle, OrderList};
 use crate::util::fasthash::IdHashMap;
 
 use anyhow::Result;
@@ -27,33 +28,32 @@ use crate::svm::features::FeatureVec;
 pub const DEFAULT_CLASS_CACHE_CAPACITY: usize = 4096;
 
 /// Cached prediction: class + the access-count stamp it was computed at,
-/// plus the insertion sequence number pairing it with its `order` entry
-/// (stamped lazy deletion, like the admission ghost LRU: an invalidated
-/// block leaves a stale order entry behind, and a later re-insert must
-/// not be evictable through that stale id).
+/// plus the block's live handle in the score-order list. (This replaces a
+/// stamped-lazy-deletion `VecDeque` — invalidation now unlinks the order
+/// entry in O(1) instead of leaving a stale id to be skipped later.)
 #[derive(Debug, Clone, Copy)]
 struct CachedClass {
     reused: bool,
     stamp: u64,
-    seq: u64,
+    handle: OrderHandle,
 }
 
 /// Batching predictor with a bounded per-block class cache.
 pub struct PredictionBatcher {
     cache: IdHashMap<BlockId, CachedClass>,
-    /// Insertion order of class-cache entries as (block, seq) pairs (FIFO
-    /// eviction when the cache exceeds `capacity`). Entries whose seq no
-    /// longer matches the cached entry are stale (invalidated or
-    /// re-inserted blocks) and are skipped — and compacted — lazily.
-    order: VecDeque<(BlockId, u64)>,
-    /// Monotonic insertion counter backing the order-entry stamps.
-    seq: u64,
+    /// Score order of class-cache entries, oldest score at the front —
+    /// the eviction order when the cache exceeds `capacity`. Re-scoring a
+    /// resident block moves it to the back.
+    order: OrderList<BlockId>,
     /// Class-cache bound: beyond it the oldest entries are dropped.
     capacity: usize,
     /// Version of the classifier snapshot the cached classes came from.
     model_version: u64,
     /// Pending cold queries (block, stamp, features).
     pending: Vec<(BlockId, u64, FeatureVec)>,
+    /// Reused per-chunk query buffer for `flush` — one allocation for the
+    /// batcher's lifetime instead of a fresh `Vec<FeatureVec>` per chunk.
+    scratch: Vec<FeatureVec>,
     /// Flush threshold = artifact batch width.
     batch_width: usize,
     pub stats: BatcherStats,
@@ -77,11 +77,11 @@ impl PredictionBatcher {
     pub fn with_capacity(batch_width: usize, capacity: usize) -> Self {
         PredictionBatcher {
             cache: IdHashMap::default(),
-            order: VecDeque::new(),
-            seq: 0,
+            order: OrderList::new(),
             capacity: capacity.max(1),
             model_version: 0,
             pending: Vec::new(),
+            scratch: Vec::new(),
             batch_width: batch_width.max(1),
             stats: BatcherStats::default(),
         }
@@ -118,50 +118,44 @@ impl PredictionBatcher {
         }
         let pending = std::mem::take(&mut self.pending);
         for chunk in pending.chunks(self.batch_width) {
-            let queries: Vec<FeatureVec> = chunk.iter().map(|(_, _, f)| *f).collect();
-            let scores = backend.decision_batch(&queries)?;
+            self.scratch.clear();
+            self.scratch.extend(chunk.iter().map(|(_, _, f)| *f));
+            let scores = backend.decision_batch(&self.scratch)?;
             self.stats.backend_calls += 1;
             self.stats.predictions_scored += scores.len() as u64;
             for ((block, stamp, _), score) in chunk.iter().zip(scores) {
                 // Every score — fresh insert or stamp-refresh of a
-                // resident block — gets a new seq at the queue back,
-                // superseding any older order entry for the block. That
-                // keeps just-scored entries out of reach of the capacity
+                // resident block — lands at the order back. That keeps
+                // just-scored entries out of reach of the capacity
                 // eviction below: predict()'s own query is the last one
-                // pushed, so the entry it reads back is always the newest
+                // scored, so the entry it reads back is always the newest
                 // and can never be the over-capacity victim.
-                self.seq += 1;
-                self.order.push_back((*block, self.seq));
-                self.cache.insert(
-                    *block,
-                    CachedClass { reused: score > 0.0, stamp: *stamp, seq: self.seq },
-                );
+                let reused = score > 0.0;
+                match self.cache.entry(*block) {
+                    Entry::Occupied(mut e) => {
+                        let c = e.get_mut();
+                        c.reused = reused;
+                        c.stamp = *stamp;
+                        self.order.move_to_back(c.handle);
+                    }
+                    Entry::Vacant(e) => {
+                        let handle = self.order.push_back(*block);
+                        e.insert(CachedClass { reused, stamp: *stamp, handle });
+                    }
+                }
             }
         }
         self.enforce_capacity();
         Ok(())
     }
 
-    /// Drop oldest class-cache entries past the bound. Order entries whose
-    /// seq does not match the live cache entry are stale (the block was
-    /// invalidated, re-scored or re-inserted under a newer seq) and must
-    /// only be skipped — removing through them would evict the live entry
-    /// out of queue order, including one the current flush just wrote.
-    /// Compact the queue when stale entries dominate it.
+    /// Drop oldest-scored class-cache entries past the bound. The order
+    /// list holds exactly the cached blocks (invalidation unlinks), so
+    /// every front entry is live.
     fn enforce_capacity(&mut self) {
         while self.cache.len() > self.capacity {
-            match self.order.pop_front() {
-                Some((oldest, seq)) => {
-                    if self.cache.get(&oldest).map(|c| c.seq) == Some(seq) {
-                        self.cache.remove(&oldest);
-                    }
-                }
-                None => break, // unreachable: every cached entry was queued
-            }
-        }
-        if self.order.len() > 2 * self.cache.len() + 16 {
-            let cache = &self.cache;
-            self.order.retain(|(b, s)| cache.get(b).map(|c| c.seq) == Some(*s));
+            let oldest = self.order.pop_front().expect("cached entries are ordered");
+            self.cache.remove(&oldest);
         }
     }
 
@@ -182,7 +176,9 @@ impl PredictionBatcher {
     /// uncache path so the class cache tracks the block population instead
     /// of growing monotonically over the trace.
     pub fn invalidate(&mut self, block: BlockId) {
-        self.cache.remove(&block);
+        if let Some(c) = self.cache.remove(&block) {
+            self.order.unlink(c.handle);
+        }
         self.pending.retain(|(b, _, _)| *b != block);
     }
 
@@ -342,24 +338,25 @@ mod tests {
         assert_eq!(be.calls, calls + 1, "oldest entry was evicted");
     }
 
-    /// Regression: an invalidated block leaves a stale order entry; after
-    /// the block is re-predicted, capacity eviction must not remove the
-    /// live entry through that stale id (which panicked predict()'s
-    /// "flush populated cache" expect when it hit the entry the current
-    /// flush had just inserted).
+    /// Regression (from the stamped-lazy-deletion era, kept as a guard):
+    /// after an invalidate + re-predict of the same block, capacity
+    /// eviction must not remove the freshly re-inserted entry (the old
+    /// stale-order-id bug panicked predict()'s "flush populated cache"
+    /// expect). With the order list, invalidation unlinks eagerly, so no
+    /// stale entry can exist at all.
     #[test]
     fn stale_order_entry_cannot_evict_a_reinserted_block() {
         let mut be = FakeBackend { calls: 0 };
         let mut batcher = PredictionBatcher::with_capacity(8, 4);
         batcher.predict(&mut be, BlockId(0), 0, fv(0.9)).unwrap();
-        batcher.invalidate(BlockId(0)); // stale (0, seq1) stays queued
+        batcher.invalidate(BlockId(0));
         for i in 1..=4u64 {
             batcher.predict(&mut be, BlockId(i), 0, fv(0.9)).unwrap();
         }
         assert_eq!(batcher.cached_len(), 4);
-        // Re-predict block 0: the flush inserts it and evicts past the
-        // bound — the stale (0, seq1) front entry must be skipped, not
-        // used to evict the entry just inserted.
+        // Re-predict block 0: the flush inserts it newest and evicts past
+        // the bound — the victim must be the oldest live entry, never the
+        // entry the current flush just wrote.
         batcher.predict(&mut be, BlockId(0), 1, fv(0.9)).unwrap();
         assert_eq!(batcher.cached_len(), 4);
         let calls = be.calls;

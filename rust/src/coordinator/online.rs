@@ -336,13 +336,13 @@ mod tests {
 
     /// A model whose decision is a constant: sign(bias).
     fn constant_model(bias: f32) -> SmoModel {
-        SmoModel {
-            params: KernelParams::new(KernelKind::Linear),
-            support_x: Vec::new(),
-            support_y: Vec::new(),
-            alpha: Vec::new(),
+        SmoModel::new(
+            KernelParams::new(KernelKind::Linear),
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
             bias,
-        }
+        )
     }
 
     fn fv(v: f32) -> FeatureVec {

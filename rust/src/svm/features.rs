@@ -14,8 +14,6 @@
 //! `BlockStatsTracker` maintains the per-block running state (last access,
 //! access count, distinct requesting apps) the features are computed from.
 
-use std::collections::HashSet;
-
 use crate::util::fasthash::IdHashMap;
 
 use crate::cache::CacheAffinity;
@@ -28,12 +26,42 @@ pub const N_FEATURES: usize = 8;
 /// A normalized feature vector.
 pub type FeatureVec = [f32; N_FEATURES];
 
+/// Distinct requesting apps tracked per block. The share-degree feature is
+/// `min(len / MAX_TRACKED_APPS, 1)`, so it saturates exactly here — ids
+/// beyond the cap cannot change any feature value.
+const MAX_TRACKED_APPS: usize = 4;
+
+/// Capped inline set of distinct app ids. Replaces the per-block
+/// `HashSet<u64>` the tracker used to allocate for every block it ever
+/// saw: the share-degree feature saturates at [`MAX_TRACKED_APPS`]
+/// distinct apps, so a fixed-size probe array is exact and allocation-free.
+#[derive(Debug, Clone, Copy, Default)]
+struct AppSet {
+    ids: [u64; MAX_TRACKED_APPS],
+    len: u8,
+}
+
+impl AppSet {
+    fn insert(&mut self, app: u64) {
+        let n = self.len as usize;
+        if n == MAX_TRACKED_APPS || self.ids[..n].contains(&app) {
+            return; // saturated (feature already 1.0) or already tracked
+        }
+        self.ids[n] = app;
+        self.len += 1;
+    }
+
+    fn len(&self) -> usize {
+        self.len as usize
+    }
+}
+
 /// Per-block running statistics.
 #[derive(Debug, Clone)]
 struct BlockStats {
     last_access: SimTime,
     accesses: u64,
-    apps: HashSet<u64>,
+    apps: AppSet,
 }
 
 /// Tracks block access statistics and derives normalized features.
@@ -64,7 +92,7 @@ impl BlockStatsTracker {
         let e = self.stats.entry(block).or_insert(BlockStats {
             last_access: now,
             accesses: 0,
-            apps: HashSet::new(),
+            apps: AppSet::default(),
         });
         e.last_access = now;
         e.accesses += 1;
@@ -92,7 +120,7 @@ impl BlockStatsTracker {
                 let recency = 0.5f64.powf(age / self.recency_half_life_s) as f32;
                 let freq = ((s.accesses as f64).ln_1p() / (self.freq_scale).ln_1p())
                     .min(1.0) as f32;
-                let share = (s.apps.len() as f32 / 4.0).min(1.0);
+                let share = (s.apps.len() as f32 / MAX_TRACKED_APPS as f32).min(1.0);
                 (recency, freq, share)
             }
             None => (0.0, 0.0, 0.0),
@@ -175,6 +203,28 @@ mod tests {
         );
         assert!(f_soon[4] > f_late[4]);
         assert!(f_late[4] < 0.01);
+    }
+
+    #[test]
+    fn share_degree_saturates_at_the_cap() {
+        let mut tr = BlockStatsTracker::new(MB);
+        let b = BlockId(3);
+        // 10 distinct apps (each seen twice): the inline set caps at 4
+        // tracked ids, and the feature saturates at exactly 1.0 — the same
+        // value the unbounded HashSet produced.
+        for app in 0..10u64 {
+            tr.record_access(b, app, SimTime::from_secs_f64(app as f64));
+            tr.record_access(b, app, SimTime::from_secs_f64(app as f64));
+        }
+        let f = tr.features(
+            b,
+            BlockKind::Input,
+            MB,
+            CacheAffinity::Medium,
+            SimTime::from_secs_f64(10.0),
+        );
+        assert_eq!(f[7], 1.0);
+        assert_eq!(tr.accesses(b), 20);
     }
 
     #[test]

@@ -5,13 +5,29 @@
 //! artifacts' numerics in integration tests and serves as the
 //! `--svm-backend rust` implementation so every experiment runs even
 //! without `make artifacts`.
+//!
+//! Inference hot path: [`SmoModel::new`] precomputes a fast path so
+//! [`SmoModel::decision`] never walks `Vec<Vec<f32>>` rows. Linear kernels
+//! collapse the whole dual sum into one weight vector (`w = Σ αᵢ yᵢ xᵢ`) —
+//! a single dot product regardless of support-vector count. RBF/sigmoid
+//! keep the kernel loop but run it over an SoA layout: the active
+//! (`α ≠ 0`) support vectors packed support-vector-major into one
+//! contiguous `Vec<f32>` with their `αᵢ·yᵢ` coefficients alongside, so the
+//! batch path streams cache lines instead of chasing per-row heap
+//! pointers (bit-identical scores to the row walk; `benches/
+//! bench_hotpath.rs` records both paths).
 
 use crate::util::rng::Pcg64;
 
 use super::dataset::Dataset;
-use super::kernel::KernelParams;
+use super::kernel::{KernelKind, KernelParams};
 
 /// Trained SVM model (dual form).
+///
+/// Construct through [`SmoModel::new`] — it derives the precomputed
+/// inference fast path from the dual state. The public fields are read-only
+/// by convention; mutating them after construction would desynchronize the
+/// fast path.
 #[derive(Debug, Clone)]
 pub struct SmoModel {
     pub params: KernelParams,
@@ -19,21 +35,92 @@ pub struct SmoModel {
     pub support_y: Vec<f32>,
     pub alpha: Vec<f32>,
     pub bias: f32,
+    fast: FastPath,
+}
+
+/// Precomputed inference state (derived from the dual form by
+/// [`SmoModel::new`]).
+#[derive(Debug, Clone, Default)]
+struct FastPath {
+    /// Linear kernel only: `w = Σ αᵢ yᵢ xᵢ` — decision is `w·x + b`.
+    linear_w: Option<Vec<f32>>,
+    /// Active (`α ≠ 0`) support vectors, support-vector-major contiguous
+    /// (`coef.len() × dim`).
+    sv_flat: Vec<f32>,
+    /// `αᵢ·yᵢ` per active support vector, aligned with `sv_flat` rows.
+    coef: Vec<f32>,
+    /// Feature dimension of the support vectors.
+    dim: usize,
+}
+
+impl FastPath {
+    fn build(
+        params: &KernelParams,
+        support_x: &[Vec<f32>],
+        support_y: &[f32],
+        alpha: &[f32],
+    ) -> Self {
+        let dim = support_x.first().map(Vec::len).unwrap_or(0);
+        let mut sv_flat = Vec::new();
+        let mut coef = Vec::new();
+        for ((sx, sy), a) in support_x.iter().zip(support_y).zip(alpha) {
+            debug_assert_eq!(sx.len(), dim, "ragged support vectors");
+            if *a != 0.0 {
+                // `a * sy` first, matching the old `a * sy * k` product
+                // order bit for bit.
+                coef.push(a * sy);
+                sv_flat.extend_from_slice(sx);
+            }
+        }
+        if params.kind == KernelKind::Linear && dim > 0 {
+            // Fold the slab into the weight vector and drop it: the linear
+            // decision never reads the per-SV layout, so keeping it would
+            // just triple every model clone (snapshot publishes).
+            let mut w = vec![0.0f32; dim];
+            for (c, sv) in coef.iter().zip(sv_flat.chunks_exact(dim)) {
+                for (wk, xk) in w.iter_mut().zip(sv) {
+                    *wk += c * xk;
+                }
+            }
+            return FastPath { linear_w: Some(w), sv_flat: Vec::new(), coef: Vec::new(), dim };
+        }
+        FastPath { linear_w: None, sv_flat, coef, dim }
+    }
 }
 
 impl SmoModel {
+    /// Build a model from dual state, precomputing the inference fast path.
+    pub fn new(
+        params: KernelParams,
+        support_x: Vec<Vec<f32>>,
+        support_y: Vec<f32>,
+        alpha: Vec<f32>,
+        bias: f32,
+    ) -> Self {
+        let fast = FastPath::build(&params, &support_x, &support_y, &alpha);
+        SmoModel { params, support_x, support_y, alpha, bias, fast }
+    }
+
     /// Decision score; class "reused" iff score > 0.
+    ///
+    /// Linear kernels: one dot product against the precomputed weight
+    /// vector — O(d), independent of the support-vector count. Other
+    /// kernels: one pass over the contiguous active-SV slab.
     pub fn decision(&self, x: &[f32]) -> f32 {
-        let mut s = self.bias;
-        for ((sx, sy), a) in self
-            .support_x
-            .iter()
-            .zip(&self.support_y)
-            .zip(&self.alpha)
-        {
-            if *a != 0.0 {
-                s += a * sy * self.params.eval(sx, x);
+        if let Some(w) = &self.fast.linear_w {
+            let mut s = self.bias;
+            for (wk, xk) in w.iter().zip(x) {
+                s += wk * xk;
             }
+            return s;
+        }
+        let mut s = self.bias;
+        if self.fast.coef.is_empty() {
+            return s;
+        }
+        let svs = self.fast.sv_flat.chunks_exact(self.fast.dim);
+        for (c, sv) in self.fast.coef.iter().zip(svs) {
+            s += c * self.params.eval(sv, x);
         }
         s
     }
@@ -64,6 +151,14 @@ impl Default for SmoConfig {
 }
 
 /// Train with simplified SMO.
+///
+/// The KKT-violation scan keeps an *error cache*: `err[k] = f(k) - y[k]`
+/// for every training point, updated incrementally (in f64, to bound
+/// drift) whenever an (αᵢ, αⱼ, b) step lands. The original implementation
+/// re-summed the full dual expansion — O(n) — for every candidate `i` and
+/// every random partner `j`, which made each outer pass O(n²) even when
+/// nothing changed; with the cache a candidate costs O(1) and only a
+/// successful step pays one O(n) sweep.
 pub fn train(ds: &Dataset, params: KernelParams, cfg: &SmoConfig) -> SmoModel {
     let n = ds.len();
     assert!(n > 0, "empty training set");
@@ -81,15 +176,8 @@ pub fn train(ds: &Dataset, params: KernelParams, cfg: &SmoConfig) -> SmoModel {
     let mut alpha = vec![0.0f32; n];
     let mut b = 0.0f32;
     let mut rng = Pcg64::new(cfg.seed, 0x5A0);
-    let f = |alpha: &[f32], b: f32, k: &[f32], idx: usize| -> f32 {
-        let mut s = b;
-        for j in 0..n {
-            if alpha[j] != 0.0 {
-                s += alpha[j] * y[j] * k[idx * n + j];
-            }
-        }
-        s
-    };
+    // α = 0 and b = 0 ⇒ f(k) = 0 ⇒ err[k] = -y[k].
+    let mut err: Vec<f64> = y.iter().map(|&yi| -f64::from(yi)).collect();
 
     let mut passes = 0usize;
     let mut iters = 0usize;
@@ -97,7 +185,7 @@ pub fn train(ds: &Dataset, params: KernelParams, cfg: &SmoConfig) -> SmoModel {
         let mut changed = 0usize;
         for i in 0..n {
             iters += 1;
-            let ei = f(&alpha, b, &k, i) - y[i];
+            let ei = err[i] as f32;
             let violates = (y[i] * ei < -cfg.tol && alpha[i] < cfg.c)
                 || (y[i] * ei > cfg.tol && alpha[i] > 0.0);
             if !violates {
@@ -108,7 +196,7 @@ pub fn train(ds: &Dataset, params: KernelParams, cfg: &SmoConfig) -> SmoModel {
             if j >= i {
                 j += 1;
             }
-            let ej = f(&alpha, b, &k, j) - y[j];
+            let ej = err[j] as f32;
             let (ai_old, aj_old) = (alpha[i], alpha[j]);
             let (lo, hi) = if (y[i] - y[j]).abs() > 1e-6 {
                 (
@@ -144,13 +232,24 @@ pub fn train(ds: &Dataset, params: KernelParams, cfg: &SmoConfig) -> SmoModel {
             let b2 = b - ej
                 - y[i] * (ai - ai_old) * k[i * n + j]
                 - y[j] * (aj - aj_old) * k[j * n + j];
-            b = if ai > 0.0 && ai < cfg.c {
+            let b_new = if ai > 0.0 && ai < cfg.c {
                 b1
             } else if aj > 0.0 && aj < cfg.c {
                 b2
             } else {
                 0.5 * (b1 + b2)
             };
+            // Incremental error-cache sweep: Δf(t) = Δαᵢyᵢ·K[i,t] +
+            // Δαⱼyⱼ·K[j,t] + Δb for every t — the only O(n) work per
+            // successful step.
+            let dai = f64::from((ai - ai_old) * y[i]);
+            let daj = f64::from((aj - aj_old) * y[j]);
+            let db = f64::from(b_new - b);
+            let (ki, kj) = (&k[i * n..i * n + n], &k[j * n..j * n + n]);
+            for ((e, kit), kjt) in err.iter_mut().zip(ki).zip(kj) {
+                *e += dai * f64::from(*kit) + daj * f64::from(*kjt) + db;
+            }
+            b = b_new;
             changed += 1;
         }
         if changed == 0 {
@@ -160,7 +259,7 @@ pub fn train(ds: &Dataset, params: KernelParams, cfg: &SmoConfig) -> SmoModel {
         }
     }
 
-    SmoModel { params, support_x: x, support_y: y, alpha, bias: b }
+    SmoModel::new(params, x, y, alpha, b)
 }
 
 #[cfg(test)]
@@ -249,5 +348,58 @@ mod tests {
         let m2 = train(&ds, KernelParams::new(KernelKind::Rbf), &SmoConfig::default());
         assert_eq!(m1.alpha, m2.alpha);
         assert_eq!(m1.bias, m2.bias);
+    }
+
+    /// The fast paths must agree with the textbook dual expansion.
+    fn reference_decision(model: &SmoModel, x: &[f32]) -> f32 {
+        let mut s = model.bias;
+        for ((sx, sy), a) in model.support_x.iter().zip(&model.support_y).zip(&model.alpha) {
+            if *a != 0.0 {
+                s += a * sy * model.params.eval(sx, x);
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn soa_fast_path_is_bit_identical_to_row_walk() {
+        // RBF/sigmoid keep the kernel loop, just over the SoA slab — the
+        // per-SV products and summation order are unchanged, so scores
+        // must match bit for bit.
+        for kind in [KernelKind::Rbf, KernelKind::Sigmoid] {
+            let ds = blobs(25, 9);
+            let model = train(&ds, KernelParams::new(kind), &SmoConfig::default());
+            for x in ds.x.iter().take(20) {
+                assert_eq!(model.decision(x), reference_decision(&model, x));
+            }
+        }
+    }
+
+    #[test]
+    fn linear_weight_vector_matches_dual_expansion() {
+        // The collapsed w·x + b reassociates the sum, so allow float slack.
+        let ds = blobs(25, 10);
+        let model = train(&ds, KernelParams::new(KernelKind::Linear), &SmoConfig::default());
+        for x in ds.x.iter().take(20) {
+            let fast = model.decision(x);
+            let slow = reference_decision(&model, x);
+            assert!(
+                (fast - slow).abs() < 1e-3,
+                "linear fast path diverged: {fast} vs {slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_support_set_scores_the_bias() {
+        let model = SmoModel::new(
+            KernelParams::new(KernelKind::Linear),
+            Vec::new(),
+            Vec::new(),
+            Vec::new(),
+            0.75,
+        );
+        assert_eq!(model.decision(&[0.5; N_FEATURES]), 0.75);
+        assert!(model.predict(&[0.5; N_FEATURES]));
     }
 }

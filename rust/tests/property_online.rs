@@ -30,13 +30,13 @@ use h_svm_lru::workload::BlockRequest;
 /// A model whose decision is the constant `bias` — version `v` is
 /// published with bias `+v` so readers can check snapshot consistency.
 fn constant_model(bias: f32) -> SmoModel {
-    SmoModel {
-        params: KernelParams::new(KernelKind::Linear),
-        support_x: Vec::new(),
-        support_y: Vec::new(),
-        alpha: Vec::new(),
+    SmoModel::new(
+        KernelParams::new(KernelKind::Linear),
+        Vec::new(),
+        Vec::new(),
+        Vec::new(),
         bias,
-    }
+    )
 }
 
 #[test]

@@ -1,0 +1,644 @@
+//! Property tests for the O(1) eviction hot path.
+//!
+//! Every policy that moved off `BTreeMap`/`VecDeque` ordering onto the
+//! slab-backed intrusive `OrderList` (plus SlruK's ordered victim index)
+//! must be **access-for-access identical** to the implementation it
+//! replaced. The original order logic is kept here, verbatim, as reference
+//! models (`Ref*`), and both sides are driven through `BlockCache` with
+//! the same randomized traces — every `AccessOutcome` (hit/miss, victim
+//! set, admission decision) must match, request by request.
+//!
+//! Also: `OrderList` itself is differential-tested against a `VecDeque`
+//! model, and its free-list reuse + handle stability guarantees are
+//! asserted directly.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use h_svm_lru::cache::admission::{AdmissionPolicy, GhostProbation};
+use h_svm_lru::cache::order_list::{OrderHandle, OrderList};
+use h_svm_lru::cache::registry::make_policy;
+use h_svm_lru::cache::{AccessContext, BlockCache, CachePolicy};
+use h_svm_lru::hdfs::BlockId;
+use h_svm_lru::sim::SimTime;
+use h_svm_lru::util::fasthash::IdHashMap;
+use h_svm_lru::util::rng::Pcg64;
+
+// ------------------------------------------------------------------------
+// Reference models: the pre-OrderList order logic, kept bit for bit.
+// ------------------------------------------------------------------------
+
+/// The original BTreeMap-ordered LRU.
+#[derive(Default)]
+struct RefLru {
+    order: BTreeMap<i64, BlockId>,
+    index: IdHashMap<BlockId, i64>,
+    next: i64,
+}
+
+impl RefLru {
+    fn touch(&mut self, block: BlockId) {
+        if let Some(old) = self.index.remove(&block) {
+            self.order.remove(&old);
+        }
+        let key = self.next;
+        self.next += 1;
+        self.order.insert(key, block);
+        self.index.insert(block, key);
+    }
+}
+
+impl CachePolicy for RefLru {
+    fn name(&self) -> &'static str {
+        "ref-lru"
+    }
+    fn on_hit(&mut self, block: BlockId, _ctx: &AccessContext) {
+        self.touch(block);
+    }
+    fn on_insert(&mut self, block: BlockId, _ctx: &AccessContext) {
+        self.touch(block);
+    }
+    fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
+        self.order.values().next().copied()
+    }
+    fn on_evict(&mut self, block: BlockId) {
+        if let Some(key) = self.index.remove(&block) {
+            self.order.remove(&key);
+        }
+    }
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+}
+
+/// The original BTreeMap-ordered FIFO.
+#[derive(Default)]
+struct RefFifo {
+    order: BTreeMap<i64, BlockId>,
+    index: HashMap<BlockId, i64>,
+    next: i64,
+}
+
+impl CachePolicy for RefFifo {
+    fn name(&self) -> &'static str {
+        "ref-fifo"
+    }
+    fn on_hit(&mut self, _block: BlockId, _ctx: &AccessContext) {}
+    fn on_insert(&mut self, block: BlockId, _ctx: &AccessContext) {
+        let key = self.next;
+        self.next += 1;
+        self.order.insert(key, block);
+        self.index.insert(block, key);
+    }
+    fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
+        self.order.values().next().copied()
+    }
+    fn on_evict(&mut self, block: BlockId) {
+        if let Some(key) = self.index.remove(&block) {
+            self.order.remove(&key);
+        }
+    }
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+}
+
+/// The original two-BTreeMap H-SVM-LRU.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum RefRegion {
+    Unused,
+    Reused,
+}
+
+#[derive(Default)]
+struct RefHSvmLru {
+    unused: BTreeMap<i64, BlockId>,
+    reused: BTreeMap<i64, BlockId>,
+    index: IdHashMap<BlockId, (RefRegion, i64)>,
+    next_hi: i64,
+    next_lo: i64,
+}
+
+impl RefHSvmLru {
+    fn detach(&mut self, block: BlockId) {
+        if let Some((region, key)) = self.index.remove(&block) {
+            match region {
+                RefRegion::Unused => self.unused.remove(&key),
+                RefRegion::Reused => self.reused.remove(&key),
+            };
+        }
+    }
+
+    fn push_back(&mut self, region: RefRegion, block: BlockId) {
+        let key = self.next_hi;
+        self.next_hi += 1;
+        match region {
+            RefRegion::Unused => self.unused.insert(key, block),
+            RefRegion::Reused => self.reused.insert(key, block),
+        };
+        self.index.insert(block, (region, key));
+    }
+
+    fn push_front_unused(&mut self, block: BlockId) {
+        self.next_lo -= 1;
+        let key = self.next_lo;
+        self.unused.insert(key, block);
+        self.index.insert(block, (RefRegion::Unused, key));
+    }
+
+    fn classify(ctx: &AccessContext) -> bool {
+        ctx.predicted_reuse.unwrap_or(true)
+    }
+}
+
+impl CachePolicy for RefHSvmLru {
+    fn name(&self) -> &'static str {
+        "ref-h-svm-lru"
+    }
+    fn on_hit(&mut self, block: BlockId, ctx: &AccessContext) {
+        self.detach(block);
+        if Self::classify(ctx) {
+            self.push_back(RefRegion::Reused, block);
+        } else {
+            self.push_front_unused(block);
+        }
+    }
+    fn on_insert(&mut self, block: BlockId, ctx: &AccessContext) {
+        if Self::classify(ctx) {
+            self.push_back(RefRegion::Reused, block);
+        } else {
+            self.push_back(RefRegion::Unused, block);
+        }
+    }
+    fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
+        self.unused
+            .values()
+            .next()
+            .or_else(|| self.reused.values().next())
+            .copied()
+    }
+    fn on_evict(&mut self, block: BlockId) {
+        self.detach(block);
+    }
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+}
+
+/// The original VecDeque-based Modified ARC (O(n) ghost removals and all).
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum RefList {
+    Recent,
+    Frequent,
+}
+
+struct RefArc {
+    t1: VecDeque<BlockId>,
+    t2: VecDeque<BlockId>,
+    where_is: HashMap<BlockId, RefList>,
+    b1: VecDeque<BlockId>,
+    b2: VecDeque<BlockId>,
+    ghost_cap: usize,
+    p: f64,
+}
+
+impl RefArc {
+    fn new(ghost_cap: usize) -> Self {
+        RefArc {
+            t1: VecDeque::new(),
+            t2: VecDeque::new(),
+            where_is: HashMap::new(),
+            b1: VecDeque::new(),
+            b2: VecDeque::new(),
+            ghost_cap: ghost_cap.max(1),
+            p: 0.0,
+        }
+    }
+
+    fn ghost_remove(list: &mut VecDeque<BlockId>, block: BlockId) -> bool {
+        if let Some(pos) = list.iter().position(|&b| b == block) {
+            list.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn ghost_push(list: &mut VecDeque<BlockId>, cap: usize, block: BlockId) {
+        list.push_back(block);
+        while list.len() > cap {
+            list.pop_front();
+        }
+    }
+}
+
+impl CachePolicy for RefArc {
+    fn name(&self) -> &'static str {
+        "ref-modified-arc"
+    }
+    fn on_hit(&mut self, block: BlockId, _ctx: &AccessContext) {
+        match self.where_is.get(&block) {
+            Some(RefList::Recent) => {
+                Self::ghost_remove(&mut self.t1, block);
+            }
+            Some(RefList::Frequent) => {
+                Self::ghost_remove(&mut self.t2, block);
+            }
+            None => panic!("hit on untracked block"),
+        }
+        self.t2.push_back(block);
+        self.where_is.insert(block, RefList::Frequent);
+    }
+    fn on_insert(&mut self, block: BlockId, _ctx: &AccessContext) {
+        let total = (self.t1.len() + self.t2.len()).max(1) as f64;
+        if Self::ghost_remove(&mut self.b1, block) {
+            let delta = (self.b2.len().max(1) as f64 / self.b1.len().max(1) as f64).max(1.0);
+            self.p = (self.p + delta).min(total);
+            self.t2.push_back(block);
+            self.where_is.insert(block, RefList::Frequent);
+        } else if Self::ghost_remove(&mut self.b2, block) {
+            let delta = (self.b1.len().max(1) as f64 / self.b2.len().max(1) as f64).max(1.0);
+            self.p = (self.p - delta).max(0.0);
+            self.t2.push_back(block);
+            self.where_is.insert(block, RefList::Frequent);
+        } else {
+            self.t1.push_back(block);
+            self.where_is.insert(block, RefList::Recent);
+        }
+    }
+    fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
+        if !self.t1.is_empty() && (self.t1.len() as f64 > self.p || self.t2.is_empty()) {
+            self.t1.front().copied()
+        } else {
+            self.t2.front().copied().or_else(|| self.t1.front().copied())
+        }
+    }
+    fn on_evict(&mut self, block: BlockId) {
+        match self.where_is.remove(&block) {
+            Some(RefList::Recent) => {
+                Self::ghost_remove(&mut self.t1, block);
+                Self::ghost_push(&mut self.b1, self.ghost_cap, block);
+            }
+            Some(RefList::Frequent) => {
+                Self::ghost_remove(&mut self.t2, block);
+                Self::ghost_push(&mut self.b2, self.ghost_cap, block);
+            }
+            None => {}
+        }
+    }
+    fn len(&self) -> usize {
+        self.where_is.len()
+    }
+}
+
+/// The original full-scan Selective LRU-K (weight recomputed per victim
+/// scan against `now`).
+struct RefSlruK {
+    k: usize,
+    entries: HashMap<BlockId, VecDeque<SimTime>>,
+    seen: HashMap<BlockId, u64>,
+    selective_threshold: u64,
+    size_weight: f64,
+}
+
+impl RefSlruK {
+    fn new(k: usize) -> Self {
+        RefSlruK {
+            k: k.max(1),
+            entries: HashMap::new(),
+            seen: HashMap::new(),
+            selective_threshold: 2,
+            size_weight: 1.0,
+        }
+    }
+
+    fn weight(&self, times: &VecDeque<SimTime>, now: SimTime) -> (bool, f64) {
+        let complete = times.len() >= self.k;
+        let reference = if complete {
+            times[times.len() - self.k]
+        } else {
+            *times.back().expect("empty access history")
+        };
+        let age = reference.duration_until(now).as_secs_f64();
+        let recency_score = 1.0 / (1.0 + age);
+        (complete, recency_score * self.size_weight)
+    }
+}
+
+impl CachePolicy for RefSlruK {
+    fn name(&self) -> &'static str {
+        "ref-slru-k"
+    }
+    fn on_hit(&mut self, block: BlockId, ctx: &AccessContext) {
+        *self.seen.entry(block).or_insert(0) += 1;
+        let times = self.entries.get_mut(&block).expect("hit on untracked block");
+        times.push_back(ctx.time);
+        while times.len() > self.k {
+            times.pop_front();
+        }
+    }
+    fn on_insert(&mut self, block: BlockId, ctx: &AccessContext) {
+        *self.seen.entry(block).or_insert(0) += 1;
+        let mut times = VecDeque::with_capacity(self.k);
+        times.push_back(ctx.time);
+        self.entries.insert(block, times);
+    }
+    fn admits(&self, block: BlockId, _ctx: &AccessContext) -> bool {
+        self.seen.contains_key(&block)
+            || (self.entries.len() as u64) < self.selective_threshold
+    }
+    fn choose_victim(&mut self, now: SimTime) -> Option<BlockId> {
+        self.entries
+            .iter()
+            .min_by(|(ba, ta), (bb, tb)| {
+                let wa = self.weight(ta, now);
+                let wb = self.weight(tb, now);
+                wa.partial_cmp(&wb).unwrap().then(ba.cmp(bb))
+            })
+            .map(|(b, _)| *b)
+    }
+    fn on_evict(&mut self, block: BlockId) {
+        self.entries.remove(&block);
+    }
+    fn len(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// The original stamped-lazy-deletion ghost LRU behind the `ghost`
+/// admission policy.
+#[derive(Default)]
+struct RefGhostLru {
+    stamps: IdHashMap<BlockId, u64>,
+    queue: VecDeque<(BlockId, u64)>,
+    seq: u64,
+    capacity: usize,
+}
+
+impl RefGhostLru {
+    fn new(capacity: usize) -> Self {
+        RefGhostLru { capacity: capacity.max(1), ..Default::default() }
+    }
+
+    fn record(&mut self, block: BlockId) {
+        self.seq += 1;
+        self.stamps.insert(block, self.seq);
+        self.queue.push_back((block, self.seq));
+        while self.stamps.len() > self.capacity {
+            let (b, s) = self.queue.pop_front().expect("members imply queue entries");
+            if self.stamps.get(&b) == Some(&s) {
+                self.stamps.remove(&b);
+            }
+        }
+        while let Some(&(b, s)) = self.queue.front() {
+            if self.stamps.get(&b) == Some(&s) {
+                break;
+            }
+            self.queue.pop_front();
+        }
+        if self.queue.len() > 2 * self.capacity {
+            let stamps = &self.stamps;
+            self.queue.retain(|(b, s)| stamps.get(b) == Some(s));
+        }
+    }
+
+    fn remove(&mut self, block: BlockId) -> bool {
+        self.stamps.remove(&block).is_some()
+    }
+}
+
+struct RefGhostProbation {
+    ghost: RefGhostLru,
+}
+
+impl AdmissionPolicy for RefGhostProbation {
+    fn name(&self) -> &'static str {
+        "ref-ghost"
+    }
+    fn on_access(&mut self, _block: BlockId, _ctx: &AccessContext) {}
+    fn admit(
+        &mut self,
+        candidate: BlockId,
+        _ctx: &AccessContext,
+        _victim: &mut dyn FnMut() -> Option<BlockId>,
+    ) -> bool {
+        if self.ghost.remove(candidate) {
+            true
+        } else {
+            self.ghost.record(candidate);
+            false
+        }
+    }
+    fn on_evict(&mut self, block: BlockId) {
+        self.ghost.record(block);
+    }
+}
+
+// ------------------------------------------------------------------------
+// Differential drivers
+// ------------------------------------------------------------------------
+
+/// Replay a randomized (monotone-time) trace through two caches and demand
+/// identical outcomes — hit/miss, inserted flag and the exact victim list —
+/// on every request, plus identical final contents.
+fn assert_trace_parity(mut real: BlockCache, mut reference: BlockCache, seed: u64) {
+    let mut rng = Pcg64::new(seed, 0xD1FF);
+    let keyspace = 48u64;
+    for t in 0..4_000u64 {
+        let block = BlockId(rng.gen_range(keyspace));
+        let size = 1 + rng.gen_range(3);
+        let mut ctx = AccessContext::simple(SimTime(t), size);
+        if rng.gen_bool(0.8) {
+            ctx = ctx.with_prediction(rng.gen_bool(0.5));
+        }
+        let a = real.access_or_insert(block, &ctx);
+        let b = reference.access_or_insert(block, &ctx);
+        assert_eq!(a, b, "outcome divergence at t={t} block={block:?}");
+        // Occasional external uncache exercises on_evict outside the
+        // victim loop.
+        if rng.gen_bool(0.03) {
+            let victim = BlockId(rng.gen_range(keyspace));
+            assert_eq!(real.remove(victim), reference.remove(victim), "remove divergence at t={t}");
+        }
+    }
+    assert_eq!(real.cached_blocks(), reference.cached_blocks());
+    assert_eq!(real.used(), reference.used());
+    assert_eq!(real.admission_stats(), reference.admission_stats());
+}
+
+fn registry_policy(name: &str) -> Box<dyn CachePolicy> {
+    make_policy(name).expect("registry policy")
+}
+
+#[test]
+fn lru_matches_btreemap_reference() {
+    for seed in 0..6u64 {
+        assert_trace_parity(
+            BlockCache::new(registry_policy("lru"), 24),
+            BlockCache::new(Box::<RefLru>::default(), 24),
+            seed,
+        );
+    }
+}
+
+#[test]
+fn fifo_matches_btreemap_reference() {
+    for seed in 0..6u64 {
+        assert_trace_parity(
+            BlockCache::new(registry_policy("fifo"), 24),
+            BlockCache::new(Box::<RefFifo>::default(), 24),
+            seed,
+        );
+    }
+}
+
+#[test]
+fn hsvmlru_matches_two_btreemap_reference() {
+    for seed in 0..6u64 {
+        assert_trace_parity(
+            BlockCache::new(registry_policy("h-svm-lru"), 24),
+            BlockCache::new(Box::<RefHSvmLru>::default(), 24),
+            seed,
+        );
+    }
+}
+
+#[test]
+fn modified_arc_matches_vecdeque_reference() {
+    for seed in 0..6u64 {
+        // Ghost cap 64 = the registry default for modified-arc.
+        assert_trace_parity(
+            BlockCache::new(registry_policy("modified-arc"), 24),
+            BlockCache::new(Box::new(RefArc::new(64)), 24),
+            seed,
+        );
+    }
+}
+
+#[test]
+fn slru_k_matches_full_scan_reference() {
+    for seed in 0..6u64 {
+        // K = 2 = the registry default for slru-k.
+        assert_trace_parity(
+            BlockCache::new(registry_policy("slru-k"), 24),
+            BlockCache::new(Box::new(RefSlruK::new(2)), 24),
+            seed,
+        );
+    }
+}
+
+#[test]
+fn ghost_admission_matches_stamped_reference() {
+    for seed in 0..6u64 {
+        let capacity = 32;
+        assert_trace_parity(
+            BlockCache::with_admission(
+                registry_policy("lru"),
+                Box::new(GhostProbation::new(capacity)),
+                24,
+            ),
+            BlockCache::with_admission(
+                Box::<RefLru>::default(),
+                Box::new(RefGhostProbation { ghost: RefGhostLru::new(capacity) }),
+                24,
+            ),
+            seed,
+        );
+    }
+}
+
+// ------------------------------------------------------------------------
+// OrderList itself
+// ------------------------------------------------------------------------
+
+#[test]
+fn order_list_matches_vecdeque_model() {
+    let mut rng = Pcg64::new(0x0B5E55ED, 7);
+    let mut list: OrderList<u64> = OrderList::new();
+    let mut model: VecDeque<u64> = VecDeque::new();
+    let mut handles: HashMap<u64, OrderHandle> = HashMap::new();
+    let mut next_id = 0u64;
+    let mut peak_live = 0usize;
+    for step in 0..20_000u64 {
+        match rng.gen_range(6) {
+            0 | 1 => {
+                let id = next_id;
+                next_id += 1;
+                if rng.gen_bool(0.7) {
+                    handles.insert(id, list.push_back(id));
+                    model.push_back(id);
+                } else {
+                    handles.insert(id, list.push_front(id));
+                    model.push_front(id);
+                }
+            }
+            2 => {
+                if let Some(&id) = model.front() {
+                    assert_eq!(list.front(), Some(id));
+                    assert_eq!(list.pop_front(), model.pop_front());
+                    handles.remove(&id);
+                }
+            }
+            3 => {
+                // Unlink a random live element through its stable handle.
+                if !model.is_empty() {
+                    let pos = rng.gen_range(model.len() as u64) as usize;
+                    let id = model.remove(pos).unwrap();
+                    let h = handles.remove(&id).unwrap();
+                    assert_eq!(list.get(h), id, "handle drifted");
+                    assert_eq!(list.unlink(h), id);
+                }
+            }
+            4 => {
+                if !model.is_empty() {
+                    let pos = rng.gen_range(model.len() as u64) as usize;
+                    let id = model.remove(pos).unwrap();
+                    model.push_back(id);
+                    list.move_to_back(handles[&id]);
+                }
+            }
+            _ => {
+                if !model.is_empty() {
+                    let pos = rng.gen_range(model.len() as u64) as usize;
+                    let id = model.remove(pos).unwrap();
+                    model.push_front(id);
+                    list.move_to_front(handles[&id]);
+                }
+            }
+        }
+        peak_live = peak_live.max(model.len());
+        assert_eq!(list.len(), model.len(), "len divergence at step {step}");
+        if step % 64 == 0 {
+            let got: Vec<u64> = list.iter().collect();
+            let want: Vec<u64> = model.iter().copied().collect();
+            assert_eq!(got, want, "order divergence at step {step}");
+            assert_eq!(list.back(), model.back().copied());
+        }
+    }
+    // Free-list reuse: the slab never outgrows the peak live population.
+    assert!(
+        list.slots() <= peak_live,
+        "slab has {} slots for a peak of {} live nodes",
+        list.slots(),
+        peak_live
+    );
+}
+
+#[test]
+fn order_list_handles_survive_slot_reuse() {
+    // Live handles must keep resolving to their element while freed slots
+    // are recycled underneath them.
+    let mut list: OrderList<u64> = OrderList::new();
+    let keep: Vec<(u64, OrderHandle)> = (0..64u64).map(|i| (i, list.push_back(i))).collect();
+    let churn: Vec<OrderHandle> = (1000..1064u64).map(|i| list.push_back(i)).collect();
+    for h in churn {
+        list.unlink(h);
+    }
+    let slots_before = list.slots();
+    for i in 2000..2064u64 {
+        list.push_back(i); // must reuse the 64 freed slots
+    }
+    assert_eq!(list.slots(), slots_before, "churn slots were not reused");
+    for (i, h) in &keep {
+        assert_eq!(list.get(*h), *i, "stable handle {i} broke after reuse");
+    }
+}
