@@ -1,0 +1,259 @@
+//! Shard-front scalability, measured — the two serialization points this
+//! crate removed, held as regression lines:
+//!
+//! 1. **Reader contention.** `stats()` / `used()` used to take every
+//!    shard `Mutex`: readers serialized against replay writers. With the
+//!    seqlock stats block they are lock-free — the 8-thread replay wall
+//!    must stay flat whether 0 or 4 reader threads hammer the stats path
+//!    for its whole duration.
+//! 2. **Miss-storm batcher stalls.** One global `PredictionBatcher`
+//!    behind one lock made every shard worker wait for one synchronous
+//!    backend flush; per-shard `ShardBatcher`s flush independently. The
+//!    miss-storm scenario replays an all-cold query stream through both
+//!    topologies.
+//!
+//! Plus the 1-vs-8-shard replay throughput baseline carried over from
+//! `bench_policy_ops`.
+//!
+//! Flags: `--json` writes BENCH_sharded.json (compared against
+//! `BENCH_baseline/BENCH_sharded.json` by the CI bench-gate job),
+//! `--quick` drops to CI-smoke iteration counts.
+
+use std::sync::Mutex;
+
+use h_svm_lru::bench_support::{banner, black_box, write_json, Bencher};
+use h_svm_lru::cache::sharded::shard_of;
+use h_svm_lru::cache::{AccessContext, ShardedCache};
+use h_svm_lru::coordinator::batcher::{BatcherConfig, PredictionBatcher, ShardBatcher};
+use h_svm_lru::hdfs::BlockId;
+use h_svm_lru::runtime::{RustBackend, SvmBackend};
+use h_svm_lru::sim::parallel::{run_sharded, run_sharded_with_monitor};
+use h_svm_lru::sim::SimTime;
+use h_svm_lru::svm::features::{FeatureVec, N_FEATURES};
+use h_svm_lru::svm::kernel::{KernelKind, KernelParams};
+use h_svm_lru::svm::smo::SmoModel;
+use h_svm_lru::util::rng::Pcg64;
+
+const WORKERS: usize = 8;
+const WORKING_SET: u64 = 256;
+
+/// One worker's deterministic slice of the replay stream (identical
+/// regardless of the shard count, like `bench_policy_ops`).
+fn replay_worker(cache: &ShardedCache, w: usize, ops: u64) {
+    for t in 0..ops {
+        let b = BlockId((w as u64 * 7919 + t * 31) % WORKING_SET);
+        let ctx = AccessContext::simple(SimTime(t), 1).with_prediction(shard_of(b, 2) == 0);
+        black_box(cache.access_or_insert(b, &ctx));
+    }
+}
+
+fn bench_replay_shards(
+    bench: &Bencher,
+    ops: u64,
+    results: &mut Vec<h_svm_lru::bench_support::BenchResult>,
+) {
+    banner("sharded front — 8 workers, 1 vs 8 shards (lru, 64-block cache)");
+    let mut throughput = Vec::new();
+    for shards in [1usize, 8] {
+        let res = bench.run_per_op(
+            &format!("replay lru {shards} shard(s), {WORKERS} threads"),
+            ops * WORKERS as u64,
+            || {
+                let cache = ShardedCache::from_registry("lru", shards, 64).unwrap();
+                run_sharded(WORKERS, |w| replay_worker(&cache, w, ops));
+            },
+        );
+        println!("{}", res.report());
+        throughput.push(res.mean);
+        results.push(res);
+    }
+    println!(
+        "\n8-shard speedup over 1-shard: {:.2}x (contended lock vs per-shard locks)",
+        throughput[0].as_secs_f64() / throughput[1].as_secs_f64().max(1e-12)
+    );
+}
+
+fn bench_reader_contention(
+    bench: &Bencher,
+    ops: u64,
+    results: &mut Vec<h_svm_lru::bench_support::BenchResult>,
+) {
+    banner("reader contention — stats()/used() during the 8-thread replay");
+    // Cost of one merged lock-free snapshot, uncontended.
+    let cache = ShardedCache::from_registry("lru", 8, 64).unwrap();
+    run_sharded(WORKERS, |w| replay_worker(&cache, w, 1000));
+    const READS: u64 = 100_000;
+    let res = bench.run_per_op("stats snapshot read (merged, 8 shards)", READS, || {
+        for _ in 0..READS {
+            black_box(cache.stats());
+            black_box(cache.used());
+        }
+    });
+    println!("{}", res.report());
+    results.push(res);
+
+    // Replay wall with N reader threads looping the whole time. The
+    // lock-free read path must leave the writers' wall flat: pre-split,
+    // every snapshot took all 8 shard locks and the 4-reader row
+    // collapsed.
+    let mut walls = Vec::new();
+    for readers in [0usize, 4] {
+        let res = bench.run_per_op(
+            &format!("replay 8 shards + {readers} stats readers"),
+            ops * WORKERS as u64,
+            || {
+                let cache = ShardedCache::from_registry("lru", 8, 64).unwrap();
+                if readers == 0 {
+                    run_sharded(WORKERS, |w| replay_worker(&cache, w, ops));
+                } else {
+                    let (_, snapshots) = run_sharded_with_monitor(
+                        WORKERS,
+                        |w| replay_worker(&cache, w, ops),
+                        |done: &std::sync::atomic::AtomicBool| {
+                            std::thread::scope(|scope| {
+                                let handles: Vec<_> = (0..readers)
+                                    .map(|_| {
+                                        scope.spawn(move || {
+                                            let mut n = 0u64;
+                                            while !done
+                                                .load(std::sync::atomic::Ordering::Acquire)
+                                            {
+                                                black_box(cache.stats());
+                                                black_box(cache.used());
+                                                n += 1;
+                                            }
+                                            n
+                                        })
+                                    })
+                                    .collect();
+                                handles
+                                    .into_iter()
+                                    .map(|h| h.join().expect("reader"))
+                                    .sum::<u64>()
+                            })
+                        },
+                    );
+                    black_box(snapshots);
+                }
+            },
+        );
+        println!("{}", res.report());
+        walls.push(res.mean);
+        results.push(res);
+    }
+    println!(
+        "\n4-reader slowdown over 0-reader: {:.2}x (lock-free readers must not serialize writers)",
+        walls[1].as_secs_f64() / walls[0].as_secs_f64().max(1e-12)
+    );
+}
+
+/// A small synthetic linear model (decision cost independent of SVs).
+fn synth_model(n_sv: usize, seed: u64) -> SmoModel {
+    let mut rng = Pcg64::new(seed, 0xFA57);
+    let mut x = Vec::with_capacity(n_sv);
+    let mut y = Vec::with_capacity(n_sv);
+    let mut alpha = Vec::with_capacity(n_sv);
+    for i in 0..n_sv {
+        let mut v = [0.0f32; N_FEATURES];
+        for f in v.iter_mut() {
+            *f = rng.next_f64() as f32;
+        }
+        x.push(v.to_vec());
+        y.push(if i % 2 == 0 { 1.0 } else { -1.0 });
+        alpha.push(0.1 + rng.next_f64() as f32);
+    }
+    SmoModel::new(KernelParams::new(KernelKind::Linear), x, y, alpha, 0.05)
+}
+
+fn query_features(w: usize, i: u64) -> FeatureVec {
+    let mut f = [0.1f32; N_FEATURES];
+    f[0] = ((w as u64 * 131 + i) % 97) as f32 / 97.0;
+    f
+}
+
+fn bench_miss_storm(
+    bench: &Bencher,
+    queries: u64,
+    results: &mut Vec<h_svm_lru::bench_support::BenchResult>,
+) {
+    banner("miss storm — all-cold queries: global batcher vs per-shard batchers");
+    let model = synth_model(64, 11);
+    let total = queries * WORKERS as u64;
+
+    // Legacy topology: ONE batcher + ONE backend behind one lock. Every
+    // cold query's synchronous flush happens inside the critical section,
+    // so all 8 workers serialize on it.
+    let res = bench.run_per_op(
+        &format!("miss storm global batcher, {WORKERS} workers"),
+        total,
+        || {
+            let mut backend = RustBackend::new(KernelKind::Linear);
+            backend.import_model(model.clone()).expect("import");
+            let global = Mutex::new((PredictionBatcher::new(64), backend));
+            run_sharded(WORKERS, |w| {
+                for i in 0..queries {
+                    // Unique block per query: every lookup is cold.
+                    let block = BlockId(w as u64 * queries + i);
+                    let f = query_features(w, i);
+                    let mut g = global.lock().expect("global batcher");
+                    let (batcher, backend) = &mut *g;
+                    black_box(batcher.predict(backend, block, 0, f).expect("predict"));
+                }
+            });
+        },
+    );
+    println!("{}", res.report());
+    let global_wall = res.mean;
+    results.push(res);
+
+    // Split topology: each worker (= shard) owns its batcher and backend;
+    // a flush never leaves the worker.
+    let res = bench.run_per_op(
+        &format!("miss storm per-shard batchers, {WORKERS} workers"),
+        total,
+        || {
+            run_sharded(WORKERS, |w| {
+                let mut backend = RustBackend::new(KernelKind::Linear);
+                backend.import_model(model.clone()).expect("import");
+                let mut batcher = ShardBatcher::new(BatcherConfig::default());
+                for i in 0..queries {
+                    let block = BlockId(w as u64 * queries + i);
+                    let f = query_features(w, i);
+                    black_box(
+                        batcher
+                            .predict(&mut backend, block, 0, f, SimTime(i))
+                            .expect("predict"),
+                    );
+                }
+            });
+        },
+    );
+    println!("{}", res.report());
+    let split_wall = res.mean;
+    results.push(res);
+    println!(
+        "\nper-shard speedup over global: {:.2}x (no worker blocks behind another shard's flush)",
+        global_wall.as_secs_f64() / split_wall.as_secs_f64().max(1e-12)
+    );
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json = args.iter().any(|a| a == "--json");
+    let quick = args.iter().any(|a| a == "--quick");
+
+    let bench = if quick { Bencher::new(1, 3) } else { Bencher::new(2, 10) };
+    let ops: u64 = if quick { 2_000 } else { 10_000 };
+    let queries: u64 = if quick { 2_000 } else { 10_000 };
+    let mut results = Vec::new();
+
+    bench_replay_shards(&bench, ops, &mut results);
+    bench_reader_contention(&bench, ops, &mut results);
+    bench_miss_storm(&bench, queries, &mut results);
+
+    if json {
+        let path = "BENCH_sharded.json";
+        write_json(path, "sharded", &results).expect("writing bench json");
+        println!("\nwrote {path} ({} results)", results.len());
+    }
+}

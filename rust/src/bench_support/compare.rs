@@ -1,0 +1,535 @@
+//! Bench-regression gate: parse the records `bench_support::write_json`
+//! emits and fail when a tracked metric regresses beyond a tolerance.
+//!
+//! CI runs the `--quick --json` bench drivers, then `repro bench-gate
+//! --baseline BENCH_baseline --current rust` compares the fresh JSONs
+//! against the committed baselines. Uploading artifacts alone is not a
+//! regression gate — this module is what actually *fails the build*.
+//!
+//! Design choices:
+//!
+//! * **`min_ns` is the tracked metric.** On shared CI runners the mean is
+//!   polluted by scheduler noise; the minimum over the measured
+//!   iterations is the closest observable to the true cost of the code.
+//! * **Names are matched canonically.** `Bencher::run_per_op` appends a
+//!   measured `" [123 ns/op]"` annotation to the result name, which
+//!   differs run to run; [`canonical_name`] strips it on both sides.
+//! * **A missing tracked metric fails the gate.** Renaming or deleting a
+//!   bench silently would un-watch it; the gate reports it as missing and
+//!   fails, forcing the baseline to be updated deliberately.
+//!
+//! The JSON parser below handles exactly the subset our own writer emits
+//! (objects, arrays, strings with escapes, unsigned integers) — there is
+//! no serde in the offline dependency set.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// One parsed bench record (a row of `BENCH_*.json`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BenchRecord {
+    pub name: String,
+    pub iterations: u64,
+    pub mean_ns: u64,
+    pub std_dev_ns: u64,
+    pub min_ns: u64,
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+}
+
+/// One parsed bench document (`{"suite":…,"results":[…]}`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BenchDoc {
+    pub suite: String,
+    pub results: Vec<BenchRecord>,
+}
+
+/// Strip the run-dependent `" [123 ns/op]"` annotation `run_per_op`
+/// appends, so baseline and current rows match by stable name.
+pub fn canonical_name(name: &str) -> &str {
+    match name.find(" [") {
+        Some(i) => &name[..i],
+        None => name,
+    }
+    .trim_end()
+}
+
+// ------------------------------------------------------------ JSON subset
+
+#[derive(Debug, Clone, PartialEq)]
+enum Json {
+    Str(String),
+    Num(u64),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_num(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Self {
+        Parser { bytes: s.as_bytes(), pos: 0 }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Result<u8> {
+        self.skip_ws();
+        self.bytes
+            .get(self.pos)
+            .copied()
+            .context("unexpected end of bench JSON")
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        let got = self.peek()?;
+        if got != b {
+            bail!(
+                "bench JSON: expected {:?} at byte {}, got {:?}",
+                b as char,
+                self.pos,
+                got as char
+            );
+        }
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'"' => Ok(Json::Str(self.string()?)),
+            b'[' => self.array(),
+            b'{' => self.object(),
+            b'0'..=b'9' => self.number(),
+            other => bail!("bench JSON: unexpected {:?} at byte {}", other as char, self.pos),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(&b) = self.bytes.get(self.pos) else {
+                bail!("bench JSON: unterminated string");
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(&esc) = self.bytes.get(self.pos) else {
+                        bail!("bench JSON: dangling escape");
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .context("bench JSON: short \\u escape")?;
+                            self.pos += 4;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).context("bad \\u escape")?,
+                                16,
+                            )
+                            .context("bad \\u escape")?;
+                            out.push(
+                                char::from_u32(code).context("bad \\u code point")?,
+                            );
+                        }
+                        other => bail!("bench JSON: unknown escape \\{}", other as char),
+                    }
+                }
+                _ if b < 0x80 => out.push(b as char),
+                _ => {
+                    // Multi-byte UTF-8 sequence: copy it through whole.
+                    let len = if b >= 0xF0 {
+                        4
+                    } else if b >= 0xE0 {
+                        3
+                    } else {
+                        2
+                    };
+                    let start = self.pos - 1;
+                    let seq = self
+                        .bytes
+                        .get(start..start + len)
+                        .context("bench JSON: truncated UTF-8 sequence")?;
+                    out.push_str(
+                        std::str::from_utf8(seq).context("bench JSON: bad UTF-8 in string")?,
+                    );
+                    self.pos = start + len;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while self
+            .bytes
+            .get(self.pos)
+            .is_some_and(|b| b.is_ascii_digit())
+        {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii digits");
+        // Durations can exceed u64 only after ~585 years; clamp instead of
+        // failing so a pathological record still parses.
+        let n = text.parse::<u128>().context("bench JSON: bad number")?;
+        Ok(Json::Num(n.min(u64::MAX as u128) as u64))
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek()? == b']' {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b']' => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => bail!("bench JSON: expected , or ] got {:?}", other as char),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        if self.peek()? == b'}' {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.expect(b':')?;
+            fields.push((key, self.value()?));
+            match self.peek()? {
+                b',' => self.pos += 1,
+                b'}' => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                other => bail!("bench JSON: expected , or }} got {:?}", other as char),
+            }
+        }
+    }
+}
+
+/// Parse one `BENCH_*.json` document.
+pub fn parse_doc(json: &str) -> Result<BenchDoc> {
+    let root = Parser::new(json).value()?;
+    let suite = root
+        .get("suite")
+        .and_then(Json::as_str)
+        .context("bench JSON: missing suite")?
+        .to_string();
+    let rows = match root.get("results").context("bench JSON: missing results")? {
+        Json::Arr(rows) => rows,
+        _ => bail!("bench JSON: results is not an array"),
+    };
+    let num = |row: &Json, key: &str| -> Result<u64> {
+        row.get(key)
+            .and_then(Json::as_num)
+            .with_context(|| format!("bench JSON: missing numeric {key:?}"))
+    };
+    let mut results = Vec::with_capacity(rows.len());
+    for row in rows {
+        results.push(BenchRecord {
+            name: row
+                .get("name")
+                .and_then(Json::as_str)
+                .context("bench JSON: missing result name")?
+                .to_string(),
+            iterations: num(row, "iterations")?,
+            mean_ns: num(row, "mean_ns")?,
+            std_dev_ns: num(row, "std_dev_ns")?,
+            min_ns: num(row, "min_ns")?,
+            p50_ns: num(row, "p50_ns")?,
+            p95_ns: num(row, "p95_ns")?,
+        });
+    }
+    Ok(BenchDoc { suite, results })
+}
+
+// --------------------------------------------------------------- the gate
+
+/// One tracked metric that got slower than the baseline allows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Regression {
+    pub name: String,
+    pub baseline_ns: u64,
+    pub current_ns: u64,
+    /// current / baseline (> 1 + tolerance by construction).
+    pub ratio: f64,
+}
+
+/// Outcome of comparing one current document against its baseline.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GateReport {
+    pub suite: String,
+    /// Metrics present on both sides and compared.
+    pub compared: usize,
+    /// Tracked metrics beyond tolerance — any entry fails the gate.
+    pub regressions: Vec<Regression>,
+    /// Baseline metrics absent from the current run — also a failure
+    /// (a bench silently disappeared or was renamed).
+    pub missing: Vec<String>,
+    /// Current metrics with no baseline yet (informational: new benches).
+    pub added: usize,
+}
+
+impl GateReport {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty() && self.missing.is_empty()
+    }
+}
+
+/// Compare `current` against `baseline` on `min_ns`, flagging anything
+/// slower than `baseline * (1 + tolerance)`.
+pub fn compare(baseline: &BenchDoc, current: &BenchDoc, tolerance: f64) -> GateReport {
+    let mut report = GateReport { suite: baseline.suite.clone(), ..GateReport::default() };
+    let current_by_name: Vec<(&str, &BenchRecord)> = current
+        .results
+        .iter()
+        .map(|r| (canonical_name(&r.name), r))
+        .collect();
+    for base in &baseline.results {
+        let name = canonical_name(&base.name);
+        let Some((_, cur)) = current_by_name.iter().find(|(n, _)| *n == name) else {
+            report.missing.push(name.to_string());
+            continue;
+        };
+        report.compared += 1;
+        let limit = base.min_ns as f64 * (1.0 + tolerance);
+        if (cur.min_ns as f64) > limit {
+            report.regressions.push(Regression {
+                name: name.to_string(),
+                baseline_ns: base.min_ns,
+                current_ns: cur.min_ns,
+                ratio: cur.min_ns as f64 / (base.min_ns as f64).max(1.0),
+            });
+        }
+    }
+    report.added = current
+        .results
+        .iter()
+        .filter(|r| {
+            let name = canonical_name(&r.name);
+            !baseline
+                .results
+                .iter()
+                .any(|b| canonical_name(&b.name) == name)
+        })
+        .count();
+    report
+}
+
+/// Load + compare one suite's baseline and current record files.
+pub fn gate_files(baseline: &Path, current: &Path, tolerance: f64) -> Result<GateReport> {
+    let base = std::fs::read_to_string(baseline)
+        .with_context(|| format!("reading baseline {baseline:?}"))?;
+    let cur = std::fs::read_to_string(current)
+        .with_context(|| format!("reading current record {current:?}"))?;
+    let base = parse_doc(&base).with_context(|| format!("parsing {baseline:?}"))?;
+    let cur = parse_doc(&cur).with_context(|| format!("parsing {current:?}"))?;
+    Ok(compare(&base, &cur, tolerance))
+}
+
+/// Render a gate report as the lines the CI log shows.
+pub fn render_report(report: &GateReport, tolerance: f64) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "suite {:<10} {} metrics compared, {} new, tolerance {:.0}%\n",
+        report.suite,
+        report.compared,
+        report.added,
+        tolerance * 100.0
+    ));
+    for m in &report.missing {
+        out.push_str(&format!("  MISSING    {m} (tracked metric disappeared)\n"));
+    }
+    for r in &report.regressions {
+        out.push_str(&format!(
+            "  REGRESSED  {}: {} ns -> {} ns ({:+.1}%)\n",
+            r.name,
+            r.baseline_ns,
+            r.current_ns,
+            (r.ratio - 1.0) * 100.0
+        ));
+    }
+    if report.passed() {
+        out.push_str("  ok\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_support::{results_to_json, BenchResult};
+    use std::time::Duration;
+
+    fn record(name: &str, min_ns: u64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            iterations: 5,
+            mean: Duration::from_nanos(min_ns + 50),
+            std_dev: Duration::from_nanos(3),
+            min: Duration::from_nanos(min_ns),
+            p50: Duration::from_nanos(min_ns + 40),
+            p95: Duration::from_nanos(min_ns + 90),
+        }
+    }
+
+    fn doc(suite: &str, rows: &[(&str, u64)]) -> BenchDoc {
+        let results: Vec<BenchResult> =
+            rows.iter().map(|(n, ns)| record(n, *ns)).collect();
+        parse_doc(&results_to_json(suite, &results)).unwrap()
+    }
+
+    #[test]
+    fn round_trips_the_writers_output() {
+        let json = results_to_json("online", &[record("a \"quoted\"\nname", 123)]);
+        let doc = parse_doc(&json).unwrap();
+        assert_eq!(doc.suite, "online");
+        assert_eq!(doc.results.len(), 1);
+        assert_eq!(doc.results[0].name, "a \"quoted\"\nname");
+        assert_eq!(doc.results[0].min_ns, 123);
+        assert_eq!(doc.results[0].mean_ns, 173);
+        assert_eq!(doc.results[0].iterations, 5);
+        // Non-ASCII passes through the writer raw; the parser must copy
+        // the sequence whole, not byte-by-byte.
+        let json = results_to_json("s", &[record("latency in µs — fast", 9)]);
+        let doc = parse_doc(&json).unwrap();
+        assert_eq!(doc.results[0].name, "latency in µs — fast");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_doc("").is_err());
+        assert!(parse_doc("{").is_err());
+        assert!(parse_doc("{\"suite\":\"x\"}").is_err(), "results required");
+        assert!(parse_doc("{\"suite\":3,\"results\":[]}").is_err());
+        assert!(
+            parse_doc("{\"suite\":\"x\",\"results\":[{\"name\":\"a\"}]}").is_err(),
+            "metrics required"
+        );
+    }
+
+    #[test]
+    fn canonical_name_strips_per_op_annotation() {
+        assert_eq!(canonical_name("lru access mix [123 ns/op]"), "lru access mix");
+        assert_eq!(canonical_name("plain name"), "plain name");
+        assert_eq!(canonical_name("trailing  "), "trailing");
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = doc("s", &[("a", 100), ("b", 200)]);
+        let cur = doc("s", &[("a", 110), ("b", 190)]);
+        let report = compare(&base, &cur, 0.15);
+        assert!(report.passed(), "{report:?}");
+        assert_eq!(report.compared, 2);
+        assert!(report.regressions.is_empty());
+    }
+
+    /// The acceptance check: an injected regression must fail the gate.
+    #[test]
+    fn injected_regression_fails_the_gate() {
+        let base = doc("s", &[("a", 100), ("b", 200)]);
+        let cur = doc("s", &[("a", 100), ("b", 260)]); // +30% on b
+        let report = compare(&base, &cur, 0.15);
+        assert!(!report.passed());
+        assert_eq!(report.regressions.len(), 1);
+        let r = &report.regressions[0];
+        assert_eq!(r.name, "b");
+        assert_eq!(r.baseline_ns, 200);
+        assert_eq!(r.current_ns, 260);
+        assert!((r.ratio - 1.3).abs() < 1e-9);
+        let rendered = render_report(&report, 0.15);
+        assert!(rendered.contains("REGRESSED"), "{rendered}");
+        assert!(rendered.contains("b: 200 ns -> 260 ns"), "{rendered}");
+    }
+
+    #[test]
+    fn per_op_annotations_match_across_runs() {
+        // run_per_op stamps a measured ns/op into the name: two runs carry
+        // different annotations but must still be the same tracked metric.
+        let base = doc("s", &[("lru mix [101 ns/op]", 100)]);
+        let cur = doc("s", &[("lru mix [240 ns/op]", 240)]);
+        let report = compare(&base, &cur, 0.15);
+        assert_eq!(report.compared, 1);
+        assert_eq!(report.regressions.len(), 1);
+        assert_eq!(report.regressions[0].name, "lru mix");
+    }
+
+    #[test]
+    fn missing_tracked_metric_fails() {
+        let base = doc("s", &[("a", 100), ("gone", 50)]);
+        let cur = doc("s", &[("a", 100), ("brand new", 70)]);
+        let report = compare(&base, &cur, 0.15);
+        assert!(!report.passed());
+        assert_eq!(report.missing, vec!["gone".to_string()]);
+        assert_eq!(report.added, 1, "new benches are informational");
+        assert!(render_report(&report, 0.15).contains("MISSING"));
+    }
+
+    #[test]
+    fn gate_files_end_to_end() {
+        let dir = std::env::temp_dir().join("hsvmlru_gate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base_path = dir.join("BENCH_x_base.json");
+        let cur_path = dir.join("BENCH_x_cur.json");
+        std::fs::write(&base_path, results_to_json("x", &[record("m", 100)])).unwrap();
+        std::fs::write(&cur_path, results_to_json("x", &[record("m", 300)])).unwrap();
+        let report = gate_files(&base_path, &cur_path, 0.15).unwrap();
+        assert!(!report.passed(), "3x slowdown must fail");
+        assert!(gate_files(&base_path, &base_path, 0.15).unwrap().passed());
+        assert!(gate_files(Path::new("/definitely/missing"), &cur_path, 0.15).is_err());
+    }
+}

@@ -6,6 +6,8 @@
 //! table/figure) print the paper-style rows next to the wall-clock cost of
 //! regenerating them; micro benches report ns/op.
 
+pub mod compare;
+
 use std::time::{Duration, Instant};
 
 use crate::util::stats::{percentile, Welford};

@@ -1,18 +1,59 @@
 //! LFU — least frequently used, ties broken by least-recent access.
-
-use std::collections::{BTreeMap, HashMap};
+//!
+//! O(1) frequency buckets on [`OrderList`]: the previous implementation
+//! re-keyed a `BTreeMap<(freq, seq), BlockId>` on *every* access (node
+//! allocation + O(log n) pointer chasing per touch — the last per-access
+//! BTreeMap in the crate after PR 4 ported the list-ordered policies).
+//! Here the classic constant-time LFU shape replaces it:
+//!
+//! * `bucket_order` — an `OrderList` of bucket slab indices in ascending
+//!   frequency order (front = lowest live frequency);
+//! * each bucket holds its members in their own `OrderList`, least
+//!   recently bumped at the front (the recency tie-break);
+//! * a block bump moves it from bucket `f` to the adjacent `f + 1`
+//!   bucket — found (or spliced in) via [`OrderList::insert_after`] in
+//!   O(1), never searched;
+//! * the victim is the front member of the front bucket: O(1) peek.
+//!
+//! Emptied buckets are unlinked and their slots (including their member
+//! list's slab) recycled, so steady-state churn allocates nothing once
+//! the working set's bucket population has been seen. Access-for-access
+//! parity with the original BTreeMap implementation is differential-
+//! tested in rust/tests/property_orderlist.rs (`RefLfu`).
 
 use crate::hdfs::BlockId;
 use crate::sim::SimTime;
+use crate::util::fasthash::IdHashMap;
 
+use super::order_list::{OrderHandle, OrderList};
 use super::{AccessContext, CachePolicy};
+
+/// One live frequency bucket.
+#[derive(Debug)]
+struct Bucket {
+    freq: u64,
+    /// Members at this frequency, least recently bumped at the front.
+    members: OrderList<BlockId>,
+    /// This bucket's handle in `bucket_order`.
+    handle: OrderHandle,
+}
+
+/// Where one block lives: its bucket slab index + its member handle.
+#[derive(Debug, Clone, Copy)]
+struct BlockSlot {
+    bucket: u32,
+    member: OrderHandle,
+}
 
 #[derive(Debug, Default)]
 pub struct Lfu {
-    /// (frequency, last-access seq) -> block; victim = first entry.
-    order: BTreeMap<(u64, i64), BlockId>,
-    index: HashMap<BlockId, (u64, i64)>,
-    seq: i64,
+    /// Live bucket slab indices in ascending frequency order.
+    bucket_order: OrderList<u32>,
+    /// Bucket slab; freed slots on `free_buckets` (their member lists keep
+    /// their allocation for reuse).
+    buckets: Vec<Bucket>,
+    free_buckets: Vec<u32>,
+    index: IdHashMap<BlockId, BlockSlot>,
 }
 
 impl Lfu {
@@ -20,20 +61,94 @@ impl Lfu {
         Self::default()
     }
 
-    fn bump(&mut self, block: BlockId, add: u64) {
-        let (freq, old_seq) = self.index.remove(&block).unwrap_or((0, 0));
-        if freq > 0 || old_seq != 0 {
-            self.order.remove(&(freq, old_seq));
+    /// Allocate (or reuse) a bucket slot for `freq`, already linked into
+    /// `bucket_order` at `handle`.
+    fn alloc_bucket(&mut self, freq: u64, handle: OrderHandle) -> u32 {
+        if let Some(idx) = self.free_buckets.pop() {
+            let b = &mut self.buckets[idx as usize];
+            debug_assert!(b.members.is_empty(), "freed bucket kept members");
+            b.freq = freq;
+            b.handle = handle;
+            idx
+        } else {
+            self.buckets.push(Bucket { freq, members: OrderList::new(), handle });
+            (self.buckets.len() - 1) as u32
         }
-        let seq = self.seq;
-        self.seq += 1;
-        let entry = (freq + add, seq);
-        self.order.insert(entry, block);
-        self.index.insert(block, entry);
+    }
+
+    /// Unlink an emptied bucket and recycle its slot.
+    fn release_if_empty(&mut self, bucket: u32) {
+        if self.buckets[bucket as usize].members.is_empty() {
+            let handle = self.buckets[bucket as usize].handle;
+            self.bucket_order.unlink(handle);
+            self.free_buckets.push(bucket);
+        }
+    }
+
+    /// Move `block` into the bucket of `freq`, positioned right after
+    /// `prev` in the frequency chain (`None` = new lowest frequency, goes
+    /// to the front). The target bucket is created if absent. O(1).
+    fn enter_bucket(&mut self, block: BlockId, freq: u64, prev: Option<OrderHandle>) {
+        // The candidate neighbour: the bucket following `prev` (or the
+        // current front when inserting at the low end).
+        let next = match prev {
+            Some(p) => self.bucket_order.next_of(p),
+            None => self.bucket_order.front_handle(),
+        };
+        let target = match next {
+            Some(h) => {
+                let idx = self.bucket_order.get(h);
+                if self.buckets[idx as usize].freq == freq {
+                    Some(idx)
+                } else {
+                    debug_assert!(
+                        self.buckets[idx as usize].freq > freq,
+                        "bucket chain out of order"
+                    );
+                    None
+                }
+            }
+            None => None,
+        };
+        let bucket = match target {
+            Some(idx) => idx,
+            None => {
+                // Splice a fresh bucket between `prev` and `next`. Two
+                // steps because the bucket slab index must be known to be
+                // stored as the order item: reserve the slot first.
+                let handle = match prev {
+                    Some(p) => self.bucket_order.insert_after(p, u32::MAX),
+                    None => self.bucket_order.push_front(u32::MAX),
+                };
+                let idx = self.alloc_bucket(freq, handle);
+                self.bucket_order.set(handle, idx);
+                idx
+            }
+        };
+        let member = self.buckets[bucket as usize].members.push_back(block);
+        self.index.insert(block, BlockSlot { bucket, member });
+    }
+
+    /// Count one access: move the block from frequency `f` to `f + 1`
+    /// (inserting at frequency 1 when untracked). O(1).
+    fn bump(&mut self, block: BlockId) {
+        match self.index.get(&block).copied() {
+            Some(slot) => {
+                let freq = self.buckets[slot.bucket as usize].freq;
+                let prev = self.buckets[slot.bucket as usize].handle;
+                self.buckets[slot.bucket as usize].members.unlink(slot.member);
+                self.enter_bucket(block, freq + 1, Some(prev));
+                self.release_if_empty(slot.bucket);
+            }
+            None => self.enter_bucket(block, 1, None),
+        }
     }
 
     pub fn frequency(&self, block: BlockId) -> u64 {
-        self.index.get(&block).map(|(f, _)| *f).unwrap_or(0)
+        self.index
+            .get(&block)
+            .map(|slot| self.buckets[slot.bucket as usize].freq)
+            .unwrap_or(0)
     }
 }
 
@@ -44,21 +159,23 @@ impl CachePolicy for Lfu {
 
     fn on_hit(&mut self, block: BlockId, _ctx: &AccessContext) {
         debug_assert!(self.index.contains_key(&block));
-        self.bump(block, 1);
+        self.bump(block);
     }
 
     fn on_insert(&mut self, block: BlockId, _ctx: &AccessContext) {
         debug_assert!(!self.index.contains_key(&block), "double insert");
-        self.bump(block, 1);
+        self.bump(block);
     }
 
     fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
-        self.order.values().next().copied()
+        let front = self.bucket_order.front()?;
+        self.buckets[front as usize].members.front()
     }
 
     fn on_evict(&mut self, block: BlockId) {
-        if let Some(entry) = self.index.remove(&block) {
-            self.order.remove(&entry);
+        if let Some(slot) = self.index.remove(&block) {
+            self.buckets[slot.bucket as usize].members.unlink(slot.member);
+            self.release_if_empty(slot.bucket);
         }
     }
 
@@ -110,5 +227,75 @@ mod tests {
         assert_eq!(p.len(), 0);
         p.on_insert(BlockId(1), &c());
         assert_eq!(p.frequency(BlockId(1)), 1);
+    }
+
+    #[test]
+    fn buckets_merge_and_recycle() {
+        let mut p = Lfu::new();
+        // Two blocks climbing in lockstep share one bucket per level.
+        p.on_insert(BlockId(1), &c());
+        p.on_insert(BlockId(2), &c());
+        for _ in 0..5 {
+            p.on_hit(BlockId(1), &c());
+            p.on_hit(BlockId(2), &c());
+        }
+        assert_eq!(p.frequency(BlockId(1)), 6);
+        assert_eq!(p.frequency(BlockId(2)), 6);
+        assert_eq!(p.bucket_order.len(), 1, "lockstep blocks share one bucket");
+        // Heavy churn at constant population must not grow the bucket slab.
+        for i in 10..1_000u64 {
+            p.on_insert(BlockId(i), &c());
+            let victim = p.choose_victim(SimTime(i)).unwrap();
+            assert_eq!(victim, BlockId(i), "fresh freq-1 block is the victim");
+            p.on_evict(victim);
+        }
+        assert!(
+            p.buckets.len() <= 4,
+            "bucket slab grew to {} under churn",
+            p.buckets.len()
+        );
+        assert_eq!(p.len(), 2);
+    }
+
+    /// The frequency chain stays strictly ascending front-to-back across
+    /// interleaved bumps and evictions (the structural invariant every
+    /// O(1) step relies on).
+    #[test]
+    fn bucket_chain_stays_sorted() {
+        let mut p = Lfu::new();
+        let mut state = 0x2545F4914F6CDD1Du64;
+        let mut rng = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for t in 0..2_000u64 {
+            let block = BlockId(rng() % 24);
+            if p.index.contains_key(&block) {
+                if rng() % 8 == 0 {
+                    p.on_evict(block);
+                } else {
+                    p.on_hit(block, &c());
+                }
+            } else {
+                p.on_insert(block, &c());
+            }
+            let freqs: Vec<u64> = p
+                .bucket_order
+                .iter()
+                .map(|idx| p.buckets[idx as usize].freq)
+                .collect();
+            assert!(
+                freqs.windows(2).all(|w| w[0] < w[1]),
+                "chain out of order at t={t}: {freqs:?}"
+            );
+            let members: usize = p
+                .bucket_order
+                .iter()
+                .map(|idx| p.buckets[idx as usize].members.len())
+                .sum();
+            assert_eq!(members, p.len(), "member count drift at t={t}");
+        }
     }
 }

@@ -30,6 +30,8 @@
 //! admission ghost) keep their eviction order in
 //! [`order_list::OrderList`], a slab-backed intrusive doubly-linked list:
 //! O(1) allocation-free touch/insert/evict on the replay hot path.
+//! `lfu` runs on O(1) frequency buckets built from the same list (an
+//! ordered chain of per-frequency `OrderList`s).
 
 pub mod admission;
 pub mod affinity_aware;
@@ -45,11 +47,13 @@ pub mod lfu_f;
 pub mod lru;
 pub mod order_list;
 pub mod registry;
+pub mod shard_stats;
 pub mod sharded;
 pub mod slru_k;
 pub mod wsclock;
 
 pub use admission::{AdmissionPolicy, AdmissionStats, AlwaysAdmit};
+pub use shard_stats::{AtomicShardStats, ShardSnapshot};
 pub use sharded::{shard_of, ShardStats, ShardedCache};
 
 use crate::util::fasthash::IdHashMap;

@@ -158,6 +158,45 @@ impl<T: Copy> OrderList<T> {
         OrderHandle(idx)
     }
 
+    /// Splice a new element immediately after a live `after`. O(1) — the
+    /// primitive the LFU frequency-bucket chain needs to create the
+    /// `f + 1` bucket next to the `f` bucket without a search.
+    pub fn insert_after(&mut self, after: OrderHandle, item: T) -> OrderHandle {
+        debug_assert_ne!(self.nodes[after.0 as usize].prev, FREE, "stale OrderHandle");
+        let idx = self.alloc(item);
+        let next = self.nodes[after.0 as usize].next;
+        self.nodes[idx as usize].prev = after.0;
+        self.nodes[idx as usize].next = next;
+        self.nodes[after.0 as usize].next = idx;
+        if next != NIL {
+            self.nodes[next as usize].prev = idx;
+        } else {
+            self.tail = idx;
+        }
+        self.len += 1;
+        OrderHandle(idx)
+    }
+
+    /// The live handle following `handle` in front-to-back order, if any.
+    pub fn next_of(&self, handle: OrderHandle) -> Option<OrderHandle> {
+        let node = &self.nodes[handle.0 as usize];
+        debug_assert_ne!(node.prev, FREE, "stale OrderHandle");
+        if node.next == NIL {
+            None
+        } else {
+            Some(OrderHandle(node.next))
+        }
+    }
+
+    /// Handle of the eviction-first element, if any.
+    pub fn front_handle(&self) -> Option<OrderHandle> {
+        if self.head == NIL {
+            None
+        } else {
+            Some(OrderHandle(self.head))
+        }
+    }
+
     /// Remove the element behind `handle`, returning it. The handle is dead
     /// afterwards; its slot goes on the free list. O(1).
     pub fn unlink(&mut self, handle: OrderHandle) -> T {
@@ -220,6 +259,14 @@ impl<T: Copy> OrderList<T> {
         let node = &self.nodes[handle.0 as usize];
         debug_assert_ne!(node.prev, FREE, "stale OrderHandle");
         node.item
+    }
+
+    /// Replace the element behind a live handle (its position is kept),
+    /// returning the previous value.
+    pub fn set(&mut self, handle: OrderHandle, item: T) -> T {
+        let node = &mut self.nodes[handle.0 as usize];
+        debug_assert_ne!(node.prev, FREE, "stale OrderHandle");
+        std::mem::replace(&mut node.item, item)
     }
 
     /// Iterate front (eviction-first) to back. O(n) — diagnostics and
@@ -415,6 +462,35 @@ mod tests {
                 assert_eq!(l.get(*h), *i);
             }
         }
+    }
+
+    #[test]
+    fn insert_after_splices_in_place() {
+        let mut l = OrderList::new();
+        let a = l.push_back(1u64);
+        let c = l.push_back(3);
+        let b = l.insert_after(a, 2);
+        assert_eq!(collect(&l), vec![1, 2, 3]);
+        assert_eq!(l.len(), 3);
+        // After the tail: becomes the new tail.
+        let d = l.insert_after(c, 4);
+        assert_eq!(collect(&l), vec![1, 2, 3, 4]);
+        assert_eq!(l.back(), Some(4));
+        // Handles walk the chain in order.
+        assert_eq!(l.front_handle(), Some(a));
+        assert_eq!(l.next_of(a), Some(b));
+        assert_eq!(l.next_of(b), Some(c));
+        assert_eq!(l.next_of(c), Some(d));
+        assert_eq!(l.next_of(d), None);
+        // Splicing reuses freed slots like any other alloc.
+        l.unlink(b);
+        let b2 = l.insert_after(a, 9);
+        assert_eq!(collect(&l), vec![1, 9, 3, 4]);
+        assert_eq!(l.get(b2), 9);
+        assert_eq!(l.slots(), 4, "freed slot reused");
+        // set replaces in place without reordering.
+        assert_eq!(l.set(b2, 7), 9);
+        assert_eq!(collect(&l), vec![1, 7, 3, 4]);
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! Lock-split shard statistics: a per-shard atomic counter block with
+//! seqlock-consistent snapshots.
+//!
+//! Before this module existed, [`ShardStats`] lived *inside* the shard
+//! behind the shard `Mutex`: every `stats()` / `used()` reader took every
+//! shard lock and serialized against the replay writers. With the
+//! per-access bookkeeping now O(1), that serialization was the dominant
+//! cost of the concurrent replay (ROADMAP: "lock splitting on the shard
+//! front").
+//!
+//! The split:
+//!
+//! * Writers (the shard hot path) still run under the shard `Mutex` — the
+//!   lock already serializes cache mutations, so there is **exactly one
+//!   stats writer per shard** at any time. They bump plain relaxed
+//!   atomics inside a seqlock write section ([`AtomicShardStats::write`]).
+//! * Readers never take a lock: [`AtomicShardStats::snapshot`] spins on
+//!   the sequence word until it observes an even, unchanged value around
+//!   the counter reads, yielding an **internally consistent** snapshot
+//!   (`hits + misses == requests`, `used <= capacity`) even while the
+//!   writer is mid-flight.
+//!
+//! Cross-shard merges stay consistent because each per-shard snapshot is
+//! consistent and the merged invariants are linear (sums of per-shard
+//! invariants) — property-tested in rust/tests/property_sharded.rs by
+//! reader threads hammering `stats()` during a multi-threaded replay.
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+/// Per-shard access counters; merged across shards (and across DataNodes
+/// by the coordinator) with [`ShardStats::merge`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    pub requests: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub insertions: u64,
+    /// Candidate inserts the admission layer allowed (see
+    /// [`crate::cache::admission::AdmissionStats`]; always 0-rejected under
+    /// the default `always` admission).
+    pub admitted: u64,
+    /// Candidate inserts the admission layer refused.
+    pub rejected: u64,
+}
+
+impl ShardStats {
+    pub fn merge(&mut self, other: &ShardStats) {
+        self.requests += other.requests;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+        self.insertions += other.insertions;
+        self.admitted += other.admitted;
+        self.rejected += other.rejected;
+    }
+
+    pub fn hit_ratio(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.requests as f64
+        }
+    }
+}
+
+/// One seqlock-consistent view of a shard: its access counters plus the
+/// occupancy mirrors, all read in the same critical section so
+/// `used <= capacity` and `hits + misses == requests` hold together.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardSnapshot {
+    pub stats: ShardStats,
+    /// Bytes cached on the shard (mirror of `BlockCache::used`).
+    pub used: u64,
+    /// Blocks cached on the shard (mirror of `BlockCache::len`).
+    pub blocks: u64,
+}
+
+/// The lock-free stats block of one shard.
+///
+/// Aligned to two cache lines so adjacent shards' blocks never share a
+/// line (the writers are per-shard hot paths; false sharing between them
+/// would reintroduce the contention the split removes).
+///
+/// Single-writer discipline: a write section may only be opened by a
+/// thread holding the owning shard's `Mutex`. Readers are unrestricted.
+#[derive(Debug, Default)]
+#[repr(align(128))]
+pub struct AtomicShardStats {
+    /// Seqlock word: odd while a write section is open, bumped to the next
+    /// even value when it closes. Readers retry until they bracket their
+    /// counter reads with the same even value.
+    seq: AtomicU64,
+    requests: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    insertions: AtomicU64,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    used: AtomicU64,
+    blocks: AtomicU64,
+}
+
+impl AtomicShardStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Open a write section. The caller MUST hold the owning shard's lock
+    /// (single writer); the section closes when the guard drops.
+    pub fn write(&self) -> StatsWrite<'_> {
+        let prev = self.seq.fetch_add(1, Ordering::AcqRel);
+        debug_assert_eq!(prev & 1, 0, "nested/concurrent stats write section");
+        StatsWrite { stats: self }
+    }
+
+    /// A consistent snapshot of every counter — lock-free; spins only
+    /// while a writer is inside its (non-blocking, constant-work) write
+    /// section.
+    pub fn snapshot(&self) -> ShardSnapshot {
+        loop {
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let snap = ShardSnapshot {
+                stats: ShardStats {
+                    requests: self.requests.load(Ordering::Relaxed),
+                    hits: self.hits.load(Ordering::Relaxed),
+                    misses: self.misses.load(Ordering::Relaxed),
+                    evictions: self.evictions.load(Ordering::Relaxed),
+                    insertions: self.insertions.load(Ordering::Relaxed),
+                    admitted: self.admitted.load(Ordering::Relaxed),
+                    rejected: self.rejected.load(Ordering::Relaxed),
+                },
+                used: self.used.load(Ordering::Relaxed),
+                blocks: self.blocks.load(Ordering::Relaxed),
+            };
+            // Order the counter loads before the re-check: if no write
+            // section opened in between, the loads all came from the same
+            // even-sequence state.
+            fence(Ordering::Acquire);
+            if self.seq.load(Ordering::Relaxed) == s1 {
+                return snap;
+            }
+            std::hint::spin_loop();
+        }
+    }
+
+    /// The access counters only (one consistent snapshot).
+    pub fn stats(&self) -> ShardStats {
+        self.snapshot().stats
+    }
+}
+
+/// RAII seqlock write section over an [`AtomicShardStats`]. All mutators
+/// are relaxed stores — the seqlock fences on open/close publish them.
+pub struct StatsWrite<'a> {
+    stats: &'a AtomicShardStats,
+}
+
+impl StatsWrite<'_> {
+    fn bump(counter: &AtomicU64, by: u64) {
+        // Single writer: a plain load+store (not an RMW) is enough.
+        counter.store(counter.load(Ordering::Relaxed) + by, Ordering::Relaxed);
+    }
+
+    /// Record one request: a hit, or a miss with `inserted`/`evicted`
+    /// bookkeeping.
+    pub fn record_request(&mut self, hit: bool, inserted: bool, evicted: u64) {
+        Self::bump(&self.stats.requests, 1);
+        if hit {
+            Self::bump(&self.stats.hits, 1);
+        } else {
+            Self::bump(&self.stats.misses, 1);
+            Self::bump(&self.stats.insertions, u64::from(inserted));
+        }
+        Self::bump(&self.stats.evictions, evicted);
+    }
+
+    /// Mirror the shard cache's admission counters (absolute values — the
+    /// admission layer owns the running totals).
+    pub fn set_admission(&mut self, admitted: u64, rejected: u64) {
+        self.stats.admitted.store(admitted, Ordering::Relaxed);
+        self.stats.rejected.store(rejected, Ordering::Relaxed);
+    }
+
+    /// Mirror the shard cache's occupancy (absolute values).
+    pub fn set_occupancy(&mut self, used: u64, blocks: u64) {
+        self.stats.used.store(used, Ordering::Relaxed);
+        self.stats.blocks.store(blocks, Ordering::Relaxed);
+    }
+
+    /// Zero the access counters (occupancy mirrors are left alone — the
+    /// cached contents survive a stats reset).
+    pub fn reset_counters(&mut self) {
+        self.stats.requests.store(0, Ordering::Relaxed);
+        self.stats.hits.store(0, Ordering::Relaxed);
+        self.stats.misses.store(0, Ordering::Relaxed);
+        self.stats.evictions.store(0, Ordering::Relaxed);
+        self.stats.insertions.store(0, Ordering::Relaxed);
+        self.stats.admitted.store(0, Ordering::Relaxed);
+        self.stats.rejected.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Drop for StatsWrite<'_> {
+    fn drop(&mut self) {
+        let prev = self.stats.seq.fetch_add(1, Ordering::Release);
+        debug_assert_eq!(prev & 1, 1, "stats write section closed twice");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_and_hit_ratio() {
+        let mut a = ShardStats { requests: 10, hits: 4, misses: 6, ..Default::default() };
+        let b = ShardStats { requests: 2, hits: 2, misses: 0, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.requests, 12);
+        assert_eq!(a.hits, 6);
+        assert!((a.hit_ratio() - 0.5).abs() < 1e-12);
+        assert_eq!(ShardStats::default().hit_ratio(), 0.0);
+    }
+
+    #[test]
+    fn write_sections_accumulate_and_snapshot_consistently() {
+        let block = AtomicShardStats::new();
+        {
+            let mut w = block.write();
+            w.record_request(false, true, 0);
+            w.set_occupancy(1, 1);
+        }
+        {
+            let mut w = block.write();
+            w.record_request(true, true, 0);
+        }
+        {
+            let mut w = block.write();
+            w.record_request(false, true, 1);
+            w.set_occupancy(1, 1);
+            w.set_admission(2, 1);
+        }
+        let snap = block.snapshot();
+        assert_eq!(snap.stats.requests, 3);
+        assert_eq!(snap.stats.hits, 1);
+        assert_eq!(snap.stats.misses, 2);
+        assert_eq!(snap.stats.insertions, 2);
+        assert_eq!(snap.stats.evictions, 1);
+        assert_eq!(snap.stats.admitted, 2);
+        assert_eq!(snap.stats.rejected, 1);
+        assert_eq!(snap.used, 1);
+        assert_eq!(snap.blocks, 1);
+        assert_eq!(block.stats(), snap.stats);
+    }
+
+    #[test]
+    fn reset_keeps_occupancy_mirrors() {
+        let block = AtomicShardStats::new();
+        {
+            let mut w = block.write();
+            w.record_request(false, true, 0);
+            w.set_occupancy(7, 3);
+        }
+        {
+            let mut w = block.write();
+            w.reset_counters();
+        }
+        let snap = block.snapshot();
+        assert_eq!(snap.stats, ShardStats::default());
+        assert_eq!(snap.used, 7, "reset must keep contents mirrors");
+        assert_eq!(snap.blocks, 3);
+    }
+
+    /// One writer thread, many reader threads: every snapshot must be
+    /// internally consistent even while writes are in flight.
+    #[test]
+    fn concurrent_readers_never_observe_torn_counters() {
+        let block = AtomicShardStats::new();
+        let writes: u64 = 20_000;
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let block = &block;
+            let stop_ref = &stop;
+            let readers: Vec<_> = (0..3)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut seen = 0u64;
+                        let mut last_requests = 0u64;
+                        while !stop_ref.load(Ordering::Acquire) {
+                            let s = block.snapshot();
+                            assert_eq!(
+                                s.stats.hits + s.stats.misses,
+                                s.stats.requests,
+                                "torn snapshot"
+                            );
+                            assert!(s.stats.requests >= last_requests, "requests went back");
+                            assert_eq!(s.used, s.stats.requests % 5, "mirror out of section");
+                            last_requests = s.stats.requests;
+                            seen += 1;
+                        }
+                        seen
+                    })
+                })
+                .collect();
+            for i in 0..writes {
+                let mut w = block.write();
+                w.record_request(i % 3 == 0, true, 0);
+                w.set_occupancy((i + 1) % 5, 1);
+            }
+            stop.store(true, Ordering::Release);
+            for r in readers {
+                assert!(r.join().unwrap() > 0, "reader never got a snapshot");
+            }
+        });
+        let snap = block.snapshot();
+        assert_eq!(snap.stats.requests, writes);
+        assert_eq!(snap.stats.hits + snap.stats.misses, writes);
+    }
+}

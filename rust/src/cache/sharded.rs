@@ -14,10 +14,13 @@
 //!   would — hit/miss/eviction parity is property-tested in
 //!   rust/tests/property_sharded.rs.
 //! * **No cross-shard locking.** Each access touches exactly one shard's
-//!   `Mutex`; per-shard [`ShardStats`] accumulate under that same lock and
-//!   are merged on demand, so shard workers on `std::thread::scope` never
-//!   contend on a shared counter (see `sim::parallel` and
-//!   `experiments::sharded_replay`).
+//!   `Mutex`, so shard workers on `std::thread::scope` never contend (see
+//!   `sim::parallel` and `experiments::sharded_replay`).
+//! * **Lock-free stats reads.** Per-shard counters live in a
+//!   [`AtomicShardStats`] seqlock block *outside* the shard `Mutex`
+//!   (written under the lock, read without it): `stats()`, `stats_of()`,
+//!   `used()`, `len()` and `hit_ratio()` never acquire a shard lock and
+//!   never serialize the replay writers (see `cache::shard_stats`).
 //! * **Exact capacity split.** Total capacity divides across shards with
 //!   the remainder going to the first shards, so the shard capacities sum
 //!   to the configured total and the multi-shard occupancy invariant
@@ -31,6 +34,7 @@ use crate::util::fasthash::IdHasher;
 
 use super::admission::{make_admission, AdmissionPolicy, AlwaysAdmit};
 use super::registry::make_policy;
+pub use super::shard_stats::{AtomicShardStats, ShardSnapshot, ShardStats};
 use super::{AccessContext, AccessOutcome, BlockCache, CachePolicy};
 
 /// Route a block to its shard: high bits of the Fibonacci id mix, so
@@ -45,55 +49,19 @@ pub fn shard_of(block: BlockId, n_shards: usize) -> usize {
     ((h.finish() >> 32) as usize) % n_shards
 }
 
-/// Per-shard access counters; merged across shards (and across DataNodes by
-/// the coordinator) with [`ShardStats::merge`].
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct ShardStats {
-    pub requests: u64,
-    pub hits: u64,
-    pub misses: u64,
-    pub evictions: u64,
-    pub insertions: u64,
-    /// Candidate inserts the admission layer allowed (see
-    /// [`crate::cache::admission::AdmissionStats`]; always 0-rejected under
-    /// the default `always` admission).
-    pub admitted: u64,
-    /// Candidate inserts the admission layer refused.
-    pub rejected: u64,
-}
-
-impl ShardStats {
-    pub fn merge(&mut self, other: &ShardStats) {
-        self.requests += other.requests;
-        self.hits += other.hits;
-        self.misses += other.misses;
-        self.evictions += other.evictions;
-        self.insertions += other.insertions;
-        self.admitted += other.admitted;
-        self.rejected += other.rejected;
-    }
-
-    pub fn hit_ratio(&self) -> f64 {
-        if self.requests == 0 {
-            0.0
-        } else {
-            self.hits as f64 / self.requests as f64
-        }
-    }
-}
-
-struct Shard {
-    cache: BlockCache,
-    stats: ShardStats,
-}
-
 /// N independently locked [`BlockCache`] shards behind one front.
 ///
 /// All methods take `&self`: the per-shard `Mutex` provides interior
 /// mutability, which is what lets trace replay share one `ShardedCache`
-/// across scoped worker threads without `unsafe`.
+/// across scoped worker threads without `unsafe`. Counters live beside
+/// (not under) each lock in an [`AtomicShardStats`] block, so the stats
+/// read path is entirely lock-free.
 pub struct ShardedCache {
-    shards: Vec<Mutex<Shard>>,
+    shards: Vec<Mutex<BlockCache>>,
+    /// One seqlock stats block per shard, indexed like `shards`. Written
+    /// only while holding the same index's `Mutex` (the single-writer
+    /// discipline the seqlock requires); read from anywhere, lock-free.
+    stats: Vec<AtomicShardStats>,
     capacity: u64,
     /// Captured at construction (every shard wraps the same policy /
     /// admission type) so the name getters never take a shard lock.
@@ -132,19 +100,17 @@ impl ShardedCache {
         let n = policies.len() as u64;
         let base = total_capacity / n;
         let rem = total_capacity % n;
+        let stats = (0..policies.len()).map(|_| AtomicShardStats::new()).collect();
         let shards = policies
             .into_iter()
             .zip(admissions)
             .enumerate()
             .map(|(i, (policy, admission))| {
                 let cap = base + u64::from((i as u64) < rem);
-                Mutex::new(Shard {
-                    cache: BlockCache::with_admission(policy, admission, cap),
-                    stats: ShardStats::default(),
-                })
+                Mutex::new(BlockCache::with_admission(policy, admission, cap))
             })
             .collect();
-        ShardedCache { shards, capacity: total_capacity, policy_name, admission_name }
+        ShardedCache { shards, stats, capacity: total_capacity, policy_name, admission_name }
     }
 
     /// Build `n_shards` shards of the registry policy `name` (None for an
@@ -195,20 +161,18 @@ impl ShardedCache {
     }
 
     /// The full access path on the owning shard: hit (policy notified) or
-    /// miss + insertion with evictions as needed. Stats accumulate on the
-    /// same shard under the same lock.
+    /// miss + insertion with evictions as needed. Stats land in the
+    /// shard's atomic block inside one seqlock write section, while the
+    /// shard lock is still held (the single-writer guarantee).
     pub fn access_or_insert(&self, block: BlockId, ctx: &AccessContext) -> AccessOutcome {
-        let mut shard = self.shard(block);
-        let outcome = shard.cache.access_or_insert(block, ctx);
-        shard.stats.requests += 1;
-        if outcome.hit {
-            shard.stats.hits += 1;
-        } else {
-            shard.stats.misses += 1;
-            shard.stats.insertions += u64::from(outcome.inserted);
-        }
-        shard.stats.evictions += outcome.evicted.len() as u64;
-        Self::sync_admission(&mut shard);
+        let idx = self.shard_of(block);
+        let mut cache = self.lock_shard(idx);
+        let outcome = cache.access_or_insert(block, ctx);
+        let a = cache.admission_stats();
+        let mut w = self.stats[idx].write();
+        w.record_request(outcome.hit, outcome.inserted, outcome.evicted.len() as u64);
+        w.set_admission(a.admitted, a.rejected);
+        w.set_occupancy(cache.used(), cache.len() as u64);
         outcome
     }
 
@@ -218,67 +182,76 @@ impl ShardedCache {
     /// callers (like the coordinator) that route misses here instead of
     /// through `access_or_insert`.
     pub fn insert(&self, block: BlockId, ctx: &AccessContext) -> Vec<BlockId> {
-        let mut shard = self.shard(block);
-        let evicted = shard.cache.insert(block, ctx);
-        shard.stats.requests += 1;
-        shard.stats.misses += 1;
-        shard.stats.evictions += evicted.len() as u64;
-        shard.stats.insertions += u64::from(shard.cache.contains(block));
-        Self::sync_admission(&mut shard);
+        let idx = self.shard_of(block);
+        let mut cache = self.lock_shard(idx);
+        let evicted = cache.insert(block, ctx);
+        let inserted = cache.contains(block);
+        let a = cache.admission_stats();
+        let mut w = self.stats[idx].write();
+        w.record_request(false, inserted, evicted.len() as u64);
+        w.set_admission(a.admitted, a.rejected);
+        w.set_occupancy(cache.used(), cache.len() as u64);
+        drop(w);
+        drop(cache);
         evicted
-    }
-
-    /// Mirror the shard cache's admission counters into the shard stats so
-    /// per-shard and merged stats always carry them.
-    fn sync_admission(shard: &mut Shard) {
-        let a = shard.cache.admission_stats();
-        shard.stats.admitted = a.admitted;
-        shard.stats.rejected = a.rejected;
     }
 
     /// Externally remove a block (user uncache directive).
     pub fn remove(&self, block: BlockId) -> bool {
-        self.shard(block).cache.remove(block)
+        let idx = self.shard_of(block);
+        let mut cache = self.lock_shard(idx);
+        let removed = cache.remove(block);
+        if removed {
+            let mut w = self.stats[idx].write();
+            w.set_occupancy(cache.used(), cache.len() as u64);
+        }
+        removed
     }
 
     pub fn contains(&self, block: BlockId) -> bool {
-        self.shard(block).cache.contains(block)
+        self.lock_shard(self.shard_of(block)).contains(block)
     }
 
-    /// Bytes cached across all shards.
+    /// Bytes cached across all shards — lock-free (occupancy mirrors in
+    /// the atomic stats blocks).
     pub fn used(&self) -> u64 {
-        self.fold(0u64, |acc, s| acc + s.cache.used())
+        self.stats.iter().map(|s| s.snapshot().used).sum()
     }
 
     pub fn free(&self) -> u64 {
-        self.capacity - self.used()
+        self.capacity.saturating_sub(self.used())
     }
 
-    /// Blocks cached across all shards.
+    /// Blocks cached across all shards — lock-free.
     pub fn len(&self) -> usize {
-        self.fold(0usize, |acc, s| acc + s.cache.len())
+        self.stats.iter().map(|s| s.snapshot().blocks).sum::<u64>() as usize
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// All cached blocks, merged across shards and sorted by id.
+    /// All cached blocks, merged across shards and sorted by id. (Reads
+    /// cache contents, so this one does take the shard locks — it is a
+    /// diagnostics path, not a counter read.)
     pub fn cached_blocks(&self) -> Vec<BlockId> {
-        let mut all = self.fold(Vec::new(), |mut acc, s| {
-            acc.extend(s.cache.cached_blocks());
-            acc
-        });
+        let mut all = Vec::new();
+        for shard in &self.shards {
+            all.extend(shard.lock().expect("shard poisoned").cached_blocks());
+        }
         all.sort_unstable();
         all
     }
 
-    /// Merged access counters across all shards.
+    /// Merged access counters across all shards — lock-free; each
+    /// per-shard snapshot is seqlock-consistent and the merged invariants
+    /// (`hits + misses == requests`) are sums of per-shard ones.
     pub fn stats(&self) -> ShardStats {
-        self.fold(ShardStats::default(), |mut acc, s| {
-            acc.merge(&s.stats);
-            acc
-        })
+        let mut acc = ShardStats::default();
+        for s in &self.stats {
+            acc.merge(&s.stats());
+        }
+        acc
     }
 
     /// Hit ratio computed from the merged counters — THE hit-ratio of a
@@ -287,40 +260,37 @@ impl ShardedCache {
         self.stats().hit_ratio()
     }
 
-    /// Per-shard counters, in shard order.
+    /// Per-shard counters, in shard order — lock-free.
     pub fn shard_stats(&self) -> Vec<ShardStats> {
-        self.shards
-            .iter()
-            .map(|s| s.lock().expect("shard poisoned").stats)
-            .collect()
+        self.stats.iter().map(|s| s.stats()).collect()
     }
 
-    /// Counters of one shard.
+    /// Counters of one shard — lock-free.
     pub fn stats_of(&self, shard: usize) -> ShardStats {
-        self.shards[shard].lock().expect("shard poisoned").stats
+        self.stats[shard].stats()
+    }
+
+    /// One consistent (counters + occupancy) view of one shard —
+    /// lock-free.
+    pub fn snapshot_of(&self, shard: usize) -> ShardSnapshot {
+        self.stats[shard].snapshot()
     }
 
     /// Zero the access counters on every shard (cached contents and learned
     /// admission state stay).
     pub fn reset_stats(&self) {
-        for s in &self.shards {
-            let mut shard = s.lock().expect("shard poisoned");
-            shard.stats = ShardStats::default();
-            shard.cache.reset_admission_stats();
+        for (idx, shard) in self.shards.iter().enumerate() {
+            let mut cache = shard.lock().expect("shard poisoned");
+            cache.reset_admission_stats();
+            let mut w = self.stats[idx].write();
+            w.reset_counters();
+            // Occupancy mirrors stay: reset_stats keeps the contents.
+            w.set_occupancy(cache.used(), cache.len() as u64);
         }
     }
 
-    fn shard(&self, block: BlockId) -> std::sync::MutexGuard<'_, Shard> {
-        self.shards[self.shard_of(block)].lock().expect("shard poisoned")
-    }
-
-    fn fold<T, F: FnMut(T, &Shard) -> T>(&self, init: T, mut f: F) -> T {
-        let mut acc = init;
-        for s in &self.shards {
-            let guard = s.lock().expect("shard poisoned");
-            acc = f(acc, &guard);
-        }
-        acc
+    fn lock_shard(&self, idx: usize) -> std::sync::MutexGuard<'_, BlockCache> {
+        self.shards[idx].lock().expect("shard poisoned")
     }
 }
 
@@ -465,6 +435,47 @@ mod tests {
         assert_eq!(c.policy_name(), "h-svm-lru");
         assert_eq!(c.admission_name(), "tinylfu");
         drop(guards);
+    }
+
+    #[test]
+    fn stats_reads_never_take_a_shard_lock() {
+        // The acceptance criterion of the lock split: every counter read
+        // must work while every shard Mutex is held by someone else. The
+        // pre-split implementation deadlocked on the first stats() call.
+        let c = ShardedCache::from_registry("lru", 4, 16).unwrap();
+        for t in 0..32u64 {
+            c.access_or_insert(BlockId(t % 8), &ctx(t, 1));
+        }
+        let expected = c.stats();
+        let expected_used = c.used();
+        let guards: Vec<_> = c.shards.iter().map(|s| s.lock().unwrap()).collect();
+        assert_eq!(c.stats(), expected);
+        let per_shard: u64 = (0..4).map(|i| c.stats_of(i).requests).sum();
+        assert_eq!(per_shard, expected.requests);
+        assert_eq!(c.shard_stats().len(), 4);
+        assert_eq!(c.used(), expected_used);
+        assert_eq!(c.len() as u64, expected_used, "unit blocks: len == used");
+        assert_eq!(c.hit_ratio(), expected.hit_ratio());
+        let snap = c.snapshot_of(0);
+        assert_eq!(snap.stats.hits + snap.stats.misses, snap.stats.requests);
+        drop(guards);
+    }
+
+    #[test]
+    fn snapshot_couples_counters_and_occupancy() {
+        let c = ShardedCache::from_registry("lru", 1, 4).unwrap();
+        for t in 0..6u64 {
+            c.access_or_insert(BlockId(t), &ctx(t, 1));
+        }
+        let snap = c.snapshot_of(0);
+        assert_eq!(snap.stats.requests, 6);
+        assert_eq!(snap.used, 4, "at capacity");
+        assert_eq!(snap.blocks, 4);
+        assert_eq!(
+            snap.stats.insertions - snap.stats.evictions,
+            snap.blocks,
+            "conservation inside one snapshot"
+        );
     }
 
     #[test]

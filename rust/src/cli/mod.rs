@@ -61,6 +61,12 @@ impl Cli {
             "--input-gb",
             "--shards",
             "--admission",
+            "--batch-queue",
+            "--batch-deadline-ms",
+            "--readers",
+            "--baseline",
+            "--current",
+            "--tolerance",
         ];
         // Known valueless switches. Anything else starting with `--` is a
         // typo and must exit non-zero — previously it was collected as a
@@ -119,6 +125,47 @@ impl Cli {
                 let v: usize = s.parse().context("bad --shards")?;
                 if !(1..=MAX_SHARDS).contains(&v) {
                     bail!("--shards must be in 1..={MAX_SHARDS}, got {v}");
+                }
+                Ok(v)
+            }
+            None => Ok(fallback),
+        }
+    }
+
+    /// Cold-query queue depth of the per-shard prediction batchers
+    /// (`--batch-queue`, default `fallback`). 1 = flush every cold query
+    /// synchronously (the legacy behaviour).
+    pub fn batch_queue(&self, fallback: usize) -> Result<usize> {
+        match self.flag("batch-queue") {
+            Some(s) => {
+                let v: usize = s.parse().context("bad --batch-queue")?;
+                if v == 0 {
+                    bail!("--batch-queue must be >= 1");
+                }
+                Ok(v)
+            }
+            None => Ok(fallback),
+        }
+    }
+
+    /// Flush deadline of the cold-query queue in milliseconds
+    /// (`--batch-deadline-ms`, default `fallback`).
+    pub fn batch_deadline_ms(&self, fallback: u64) -> Result<u64> {
+        match self.flag("batch-deadline-ms") {
+            Some(s) => s.parse().context("bad --batch-deadline-ms"),
+            None => Ok(fallback),
+        }
+    }
+
+    /// Concurrent `stats()` reader threads for the sharded replay
+    /// (`--readers`, default `fallback`).
+    pub fn readers(&self, fallback: usize) -> Result<usize> {
+        const MAX_READERS: usize = 64;
+        match self.flag("readers") {
+            Some(s) => {
+                let v: usize = s.parse().context("bad --readers")?;
+                if v > MAX_READERS {
+                    bail!("--readers must be <= {MAX_READERS}, got {v}");
                 }
                 Ok(v)
             }
@@ -192,6 +239,7 @@ SUBCOMMANDS
                [--policy P] [--failures] [--prefetch] [--shards N]
   sharded      shard-parallel trace replay sweep (1..N shards on scoped
                threads) [--policy P] [--shards N] [--cache-blocks N]
+               [--readers N  concurrent lock-free stats() readers]
   admission    eviction × admission sweep over the Fig 3 trace and the
                scan-storm pollution adversary [--smoke] [--shards N]
                [--cache-blocks N]
@@ -199,6 +247,10 @@ SUBCOMMANDS
                workers stream labeled samples to a background trainer
                that publishes classifier snapshots mid-trace
                [--policy P] [--shards N] [--cache-blocks N] [--smoke]
+               [--batch-queue N] [--batch-deadline-ms MS]
+  bench-gate   compare --current bench JSONs against --baseline records,
+               failing on any tracked-metric regression beyond
+               --tolerance (default 0.15); the CI regression gate
   all          every experiment in sequence
 
 FLAGS
@@ -210,6 +262,17 @@ FLAGS
   --cache-blocks N         cache size for `policies`/`sharded` (default 8)
   --shards N               cache shards per node / replay workers
   --admission A            always|tinylfu|ghost|svm admission for `simulate`
+  --batch-queue N          cold SVM queries buffered per shard batcher
+                           before a forced flush (default 1 = legacy
+                           synchronous flush; `simulate`/`online`)
+  --batch-deadline-ms MS   flush deadline of the cold-query queue, in
+                           simulated (request-clock) milliseconds
+                           (default 2; `simulate`/`online`)
+  --readers N              concurrent stats() reader threads during the
+                           `sharded` replay (default 0)
+  --baseline DIR           `bench-gate`: committed BENCH_baseline dir
+  --current DIR            `bench-gate`: dir with freshly written JSONs
+  --tolerance F            `bench-gate`: allowed relative regression
   --smoke                  `admission`/`online`: reduced CI sweep with
                            parity + publish assertions
   --csv                    CSV output
@@ -290,6 +353,33 @@ mod tests {
         assert!(r.is_err());
         // Known switches still parse.
         assert!(Cli::parse(&["fig3".to_string(), "--csv".to_string()]).is_ok());
+    }
+
+    #[test]
+    fn batcher_flags_parse_and_validate() {
+        let cli = parse(&["online", "--batch-queue", "16", "--batch-deadline-ms", "5"]);
+        assert_eq!(cli.batch_queue(1).unwrap(), 16);
+        assert_eq!(cli.batch_deadline_ms(2).unwrap(), 5);
+        assert_eq!(parse(&["online"]).batch_queue(1).unwrap(), 1);
+        assert_eq!(parse(&["online"]).batch_deadline_ms(2).unwrap(), 2);
+        assert!(parse(&["online", "--batch-queue", "0"]).batch_queue(1).is_err());
+        assert!(parse(&["online", "--batch-queue", "x"]).batch_queue(1).is_err());
+        assert!(parse(&["online", "--batch-deadline-ms", "-1"]).batch_deadline_ms(2).is_err());
+    }
+
+    #[test]
+    fn readers_flag_parses_and_validates() {
+        assert_eq!(parse(&["sharded", "--readers", "4"]).readers(0).unwrap(), 4);
+        assert_eq!(parse(&["sharded"]).readers(0).unwrap(), 0);
+        assert!(parse(&["sharded", "--readers", "1000"]).readers(0).is_err());
+    }
+
+    #[test]
+    fn bench_gate_flags_are_valued() {
+        let cli = parse(&["bench-gate", "--baseline", "BENCH_baseline", "--current", "rust"]);
+        assert_eq!(cli.flag("baseline"), Some("BENCH_baseline"));
+        assert_eq!(cli.flag("current"), Some("rust"));
+        assert!(Cli::parse(&["bench-gate".into(), "--baseline".into()]).is_err());
     }
 
     #[test]

@@ -71,6 +71,16 @@ pub struct ClusterConfig {
     /// policy: "always" (default, the paper's behaviour), "tinylfu",
     /// "ghost" or "svm" (see `cache::admission`).
     pub cache_admission: String,
+    /// Cold SVM queries buffered per prediction-batcher shard before a
+    /// flush is forced (see `coordinator::batcher::BatcherConfig`). 1 =
+    /// flush every cold query synchronously (the legacy behaviour);
+    /// larger values defer cold predictions to amortize backend calls.
+    pub cache_batch_queue: usize,
+    /// Flush deadline of the cold-query queue in **simulated**
+    /// milliseconds (request-clock time, so seeded runs stay
+    /// deterministic): the oldest deferred query never waits longer than
+    /// this for its batch.
+    pub cache_batch_deadline_ms: u64,
     /// Map container memory (mapreduce.map.memory.mb) — bounds map slots.
     pub map_memory_mb: u64,
     /// Reduce container memory (mapreduce.reduce.memory.mb).
@@ -99,6 +109,8 @@ impl Default for ClusterConfig {
             cache_capacity_per_node: (1.5 * GB as f64) as u64,
             cache_shards: 1,
             cache_admission: "always".into(),
+            cache_batch_queue: 1,
+            cache_batch_deadline_ms: 2,
             map_memory_mb: 1024,
             reduce_memory_mb: 2048,
             node_memory_mb: 16 * 1024,
@@ -155,6 +167,9 @@ impl ClusterConfig {
                 self.cache_admission
             );
         }
+        if self.cache_batch_queue == 0 {
+            bail!("cache_batch_queue must be > 0");
+        }
         if self.disk.read_bandwidth_bps <= 0.0
             || self.network.bandwidth_bps <= 0.0
             || self.memory.read_bandwidth_bps <= 0.0
@@ -191,6 +206,18 @@ impl ClusterConfig {
         }
         if let Some(v) = doc.get_str("cluster.admission") {
             self.cache_admission = v.to_string();
+        }
+        if let Some(v) = doc.get_i64("cluster.cache_batch_queue") {
+            if v <= 0 {
+                bail!("cluster.cache_batch_queue must be positive, got {v}");
+            }
+            self.cache_batch_queue = v as usize;
+        }
+        if let Some(v) = doc.get_i64("cluster.cache_batch_deadline_ms") {
+            if v < 0 {
+                bail!("cluster.cache_batch_deadline_ms must be >= 0, got {v}");
+            }
+            self.cache_batch_deadline_ms = v as u64;
         }
         if let Some(v) = doc.get_i64("cluster.map_memory_mb") {
             self.map_memory_mb = v as u64;
@@ -392,6 +419,27 @@ kernel = "linear"
         c.apply_toml(&doc).unwrap();
         assert_eq!(c.cache_admission, "tinylfu");
         let doc = toml::Document::parse("[cluster]\nadmission = \"nonsense\"").unwrap();
+        assert!(ClusterConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn batcher_knobs_validated_and_overridable() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.cache_batch_queue, 1, "default = legacy synchronous flush");
+        assert_eq!(c.cache_batch_deadline_ms, 2);
+        let c = ClusterConfig { cache_batch_queue: 0, ..Default::default() };
+        assert!(c.validate().is_err());
+        let doc = toml::Document::parse(
+            "[cluster]\ncache_batch_queue = 16\ncache_batch_deadline_ms = 5",
+        )
+        .unwrap();
+        let mut c = ClusterConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.cache_batch_queue, 16);
+        assert_eq!(c.cache_batch_deadline_ms, 5);
+        let doc = toml::Document::parse("[cluster]\ncache_batch_queue = -1").unwrap();
+        assert!(ClusterConfig::default().apply_toml(&doc).is_err());
+        let doc = toml::Document::parse("[cluster]\ncache_batch_deadline_ms = -3").unwrap();
         assert!(ClusterConfig::default().apply_toml(&doc).is_err());
     }
 

@@ -1,4 +1,4 @@
-//! Prediction micro-batching + class caching.
+//! Prediction micro-batching + class caching, per shard.
 //!
 //! Algorithm 1 consults the SVM on *every* cache decision. Calling the
 //! PJRT executable per block would put an artifact invocation on each
@@ -10,10 +10,30 @@
 //! 2. batches cold predictions: queries accumulate into the artifact's
 //!    native batch width before one `decision_batch` call scores them all
 //!    (the vLLM-router-style amortization; see DESIGN.md §8).
+//!
+//! Topology: the single global batcher of the early coordinator became
+//! per-shard [`ShardBatcher`]s, routed by the same hash as the shards
+//! themselves — a [`BatcherPool`] in the single-threaded coordinator, one
+//! batcher *owned by each shard worker* on the concurrent replay path. A
+//! miss storm on one shard flushes *that shard's* queue; workers on other
+//! shards never wait behind the flush (the ROADMAP "batcher backpressure"
+//! item). Each shard batcher holds a **bounded cold-query queue with a
+//! flush deadline** (measured in simulated time, so seeded runs stay
+//! deterministic): a cold query enqueues and either joins the in-flight
+//! batch (deferred, answered by a later flush) or triggers a flush when
+//! the queue fills or the oldest entry's deadline lapses. Drop / latency /
+//! flush-size counters are surfaced through a cloneable [`BatcherProbe`],
+//! exactly like the online sample channel's
+//! [`SampleProbe`](super::online::SampleProbe).
 
 use std::collections::hash_map::Entry;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::cache::order_list::{OrderHandle, OrderList};
+use crate::cache::sharded::shard_of;
+use crate::sim::{SimDuration, SimTime};
 use crate::util::fasthash::IdHashMap;
 
 use anyhow::Result;
@@ -68,6 +88,16 @@ pub struct BatcherStats {
     pub predictions_scored: u64,
 }
 
+impl BatcherStats {
+    /// Sum counters across per-shard batchers (the [`BatcherPool`] view).
+    pub fn merge(&mut self, other: &BatcherStats) {
+        self.queries += other.queries;
+        self.class_cache_hits += other.class_cache_hits;
+        self.backend_calls += other.backend_calls;
+        self.predictions_scored += other.predictions_scored;
+    }
+}
+
 impl PredictionBatcher {
     pub fn new(batch_width: usize) -> Self {
         Self::with_capacity(batch_width, DEFAULT_CLASS_CACHE_CAPACITY)
@@ -87,6 +117,25 @@ impl PredictionBatcher {
         }
     }
 
+    /// Class-cache lookup for one query (counted). `Some` only when the
+    /// cached class was computed at the same feature stamp.
+    pub fn lookup(&mut self, block: BlockId, stamp: u64) -> Option<bool> {
+        self.stats.queries += 1;
+        if let Some(c) = self.cache.get(&block) {
+            if c.stamp == stamp {
+                self.stats.class_cache_hits += 1;
+                return Some(c.reused);
+            }
+        }
+        None
+    }
+
+    /// The cached class of a block regardless of stamp (post-flush read;
+    /// `None` when the block is not in the class cache).
+    pub fn class_of(&self, block: BlockId) -> Option<bool> {
+        self.cache.get(&block).map(|c| c.reused)
+    }
+
     /// Predict the class of one block, given its current feature vector and
     /// an access-count stamp. Uses the class cache when the stamp matches;
     /// otherwise queues the query and flushes a full batch through the
@@ -99,16 +148,12 @@ impl PredictionBatcher {
         stamp: u64,
         features: FeatureVec,
     ) -> Result<bool> {
-        self.stats.queries += 1;
-        if let Some(c) = self.cache.get(&block) {
-            if c.stamp == stamp {
-                self.stats.class_cache_hits += 1;
-                return Ok(c.reused);
-            }
+        if let Some(class) = self.lookup(block, stamp) {
+            return Ok(class);
         }
-        self.pending.push((block, stamp, features));
+        self.prefetch(block, stamp, features);
         self.flush(backend)?;
-        Ok(self.cache.get(&block).expect("flush populated cache").reused)
+        Ok(self.class_of(block).expect("flush populated cache"))
     }
 
     /// Score everything pending in batch_width chunks.
@@ -160,7 +205,8 @@ impl PredictionBatcher {
     }
 
     /// Queue a prediction without needing the answer immediately (prefetch
-    /// for blocks we expect to decide on soon).
+    /// for blocks we expect to decide on soon). Deduplicates against the
+    /// class cache (same stamp) and the pending queue.
     pub fn prefetch(&mut self, block: BlockId, stamp: u64, features: FeatureVec) {
         let fresh = self
             .cache
@@ -209,6 +255,422 @@ impl PredictionBatcher {
     }
 }
 
+// --------------------------------------------------- bounded shard batcher
+
+/// Knobs of one shard's cold-query queue (see [`ShardBatcher`]).
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Backend batch width (= the artifact's native batch size).
+    pub batch_width: usize,
+    /// Per-shard class-cache bound (clamped up to `queue_depth` so a
+    /// flush can never evict its own just-scored entries).
+    pub class_cache_capacity: usize,
+    /// Cold queries buffered on a shard before a flush is forced. `1`
+    /// reproduces the legacy behavior exactly: every cold query flushes
+    /// synchronously and the caller always gets its class.
+    pub queue_depth: usize,
+    /// Oldest-pending age — in **simulated** time, so seeded runs stay
+    /// bit-for-bit reproducible — that forces a flush even below
+    /// `queue_depth`, bounding how stale a deferred answer can get.
+    pub deadline: SimDuration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            batch_width: 64,
+            class_cache_capacity: DEFAULT_CLASS_CACHE_CAPACITY,
+            queue_depth: 1,
+            deadline: SimDuration::from_micros(2_000),
+        }
+    }
+}
+
+/// Shared cold-path counters of one batcher topology (every
+/// [`ShardBatcher`] constructed from the same [`BatcherProbe`] clone).
+#[derive(Debug, Default)]
+struct ColdCounters {
+    cold: AtomicU64,
+    deferred: AtomicU64,
+    flushes: AtomicU64,
+    flush_fill: AtomicU64,
+    flush_deadline: AtomicU64,
+    flushed_queries: AtomicU64,
+    flush_ns: AtomicU64,
+    dropped: AtomicU64,
+}
+
+/// Read-only, cloneable view of the cold-query counters — the
+/// [`SampleProbe`](super::online::SampleProbe) pattern for the prediction
+/// path. Cloning shares the counters; `BatcherProbe::new()` starts a
+/// fresh set.
+#[derive(Debug, Clone, Default)]
+pub struct BatcherProbe {
+    counters: Arc<ColdCounters>,
+}
+
+impl BatcherProbe {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cold queries that missed the class cache and entered a queue.
+    pub fn cold_queries(&self) -> u64 {
+        self.counters.cold.load(Ordering::Relaxed)
+    }
+
+    /// Cold queries answered `None` (queued for a later flush instead of
+    /// flushing inline).
+    pub fn deferred(&self) -> u64 {
+        self.counters.deferred.load(Ordering::Relaxed)
+    }
+
+    pub fn flushes(&self) -> u64 {
+        self.counters.flushes.load(Ordering::Relaxed)
+    }
+
+    /// Flushes triggered by the queue reaching `queue_depth`.
+    pub fn flushes_by_fill(&self) -> u64 {
+        self.counters.flush_fill.load(Ordering::Relaxed)
+    }
+
+    /// Flushes triggered by the oldest entry's deadline (or forced).
+    pub fn flushes_by_deadline(&self) -> u64 {
+        self.counters.flush_deadline.load(Ordering::Relaxed)
+    }
+
+    /// Cold queries scored across all flushes.
+    pub fn flushed_queries(&self) -> u64 {
+        self.counters.flushed_queries.load(Ordering::Relaxed)
+    }
+
+    /// Pending queries lost to invalidation or a failed flush.
+    pub fn dropped(&self) -> u64 {
+        self.counters.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Mean queries per flush (0 when nothing flushed yet).
+    pub fn mean_flush_size(&self) -> f64 {
+        let flushes = self.flushes();
+        if flushes == 0 {
+            0.0
+        } else {
+            self.flushed_queries() as f64 / flushes as f64
+        }
+    }
+
+    /// Mean wall-clock backend latency per flush.
+    pub fn mean_flush_latency(&self) -> Duration {
+        let flushes = self.flushes();
+        if flushes == 0 {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(self.counters.flush_ns.load(Ordering::Relaxed) / flushes)
+        }
+    }
+}
+
+/// One shard's predictor: a [`PredictionBatcher`] behind a bounded
+/// cold-query queue with a flush deadline.
+///
+/// [`ShardBatcher::predict`] returns `Ok(Some(class))` from the class
+/// cache or an inline flush, and `Ok(None)` when the query was *deferred*
+/// — enqueued to join the next batch. Callers treat a deferred query like
+/// an untrained classifier (fall back to plain LRU behavior for that one
+/// access); the answer lands in the class cache when the queue fills or
+/// the deadline lapses.
+pub struct ShardBatcher {
+    inner: PredictionBatcher,
+    queue_depth: usize,
+    deadline: SimDuration,
+    /// Simulated enqueue time of the oldest pending query (None = queue
+    /// empty). Deadlines run on the caller-supplied [`SimTime`], never the
+    /// wall clock, so flush timing is deterministic under a fixed seed.
+    oldest: Option<SimTime>,
+    counters: Arc<ColdCounters>,
+}
+
+impl ShardBatcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Self::with_probe(cfg, BatcherProbe::new())
+    }
+
+    /// A batcher reporting into `probe`'s counters — how a pool (or a set
+    /// of per-worker batchers) shares one telemetry surface.
+    pub fn with_probe(cfg: BatcherConfig, probe: BatcherProbe) -> Self {
+        let capacity = cfg.class_cache_capacity.max(cfg.queue_depth);
+        ShardBatcher {
+            inner: PredictionBatcher::with_capacity(cfg.batch_width, capacity),
+            queue_depth: cfg.queue_depth.max(1),
+            deadline: cfg.deadline,
+            oldest: None,
+            counters: probe.counters,
+        }
+    }
+
+    /// A probe sharing this batcher's counters.
+    pub fn probe(&self) -> BatcherProbe {
+        BatcherProbe { counters: Arc::clone(&self.counters) }
+    }
+
+    pub fn stats(&self) -> BatcherStats {
+        self.inner.stats
+    }
+
+    /// Answer a query from the class cache, flush inline (queue full or
+    /// deadline lapsed), or defer (`Ok(None)`). `now` is the caller's
+    /// simulated clock (request time); within a shard it must be
+    /// monotone, which trace order and the coordinator both guarantee.
+    pub fn predict(
+        &mut self,
+        backend: &mut dyn SvmBackend,
+        block: BlockId,
+        stamp: u64,
+        features: FeatureVec,
+        now: SimTime,
+    ) -> Result<Option<bool>> {
+        if let Some(class) = self.inner.lookup(block, stamp) {
+            // A class-cache hit must not starve the queue: an overdue
+            // batch still flushes on this shard's traffic. A flush
+            // failure must not discard the valid cached answer, though —
+            // the drop is already counted, and the next cold query will
+            // surface the backend error to the caller.
+            let _ = self.maybe_flush(backend, now);
+            return Ok(Some(class));
+        }
+        // `prefetch` dedupes against an already-pending (block, stamp):
+        // only count queries that actually entered the queue as cold (and
+        // as deferred below), so deferred <= cold_queries and
+        // cold_queries == flushed_queries + dropped (+ still pending).
+        let before = self.inner.pending_len();
+        self.inner.prefetch(block, stamp, features);
+        let enqueued = self.inner.pending_len() > before;
+        if enqueued {
+            self.counters.cold.fetch_add(1, Ordering::Relaxed);
+        }
+        let oldest = *self.oldest.get_or_insert(now);
+        let fill = self.inner.pending_len() >= self.queue_depth;
+        let late = oldest.duration_until(now) >= self.deadline;
+        if !fill && !late {
+            if enqueued {
+                self.counters.deferred.fetch_add(1, Ordering::Relaxed);
+            }
+            return Ok(None);
+        }
+        self.flush_now(backend, fill)?;
+        Ok(self.inner.class_of(block))
+    }
+
+    /// Enqueue without needing an answer (rides along with the next flush).
+    pub fn prefetch(&mut self, block: BlockId, stamp: u64, features: FeatureVec, now: SimTime) {
+        self.inner.prefetch(block, stamp, features);
+        if self.inner.pending_len() > 0 {
+            self.oldest.get_or_insert(now);
+        }
+    }
+
+    /// Flush the queue if the oldest pending query outlived the deadline
+    /// (the periodic sweep callers run between requests).
+    pub fn maybe_flush(&mut self, backend: &mut dyn SvmBackend, now: SimTime) -> Result<()> {
+        if let Some(oldest) = self.oldest {
+            if oldest.duration_until(now) >= self.deadline {
+                self.flush_now(backend, false)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Unconditional flush (end of run; counted as a deadline flush).
+    pub fn flush(&mut self, backend: &mut dyn SvmBackend) -> Result<()> {
+        self.flush_now(backend, false)
+    }
+
+    fn flush_now(&mut self, backend: &mut dyn SvmBackend, by_fill: bool) -> Result<()> {
+        let n = self.inner.pending_len() as u64;
+        self.oldest = None;
+        if n == 0 {
+            return Ok(());
+        }
+        let scored_before = self.inner.stats.predictions_scored;
+        let t0 = Instant::now();
+        let result = self.inner.flush(backend);
+        // A multi-chunk flush can fail part-way: earlier chunks were
+        // scored and cached (count them flushed), only the remainder was
+        // taken-and-lost (count those dropped). On success scored == n.
+        let scored = self.inner.stats.predictions_scored - scored_before;
+        if scored > 0 {
+            self.counters.flushes.fetch_add(1, Ordering::Relaxed);
+            if by_fill {
+                self.counters.flush_fill.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.counters.flush_deadline.fetch_add(1, Ordering::Relaxed);
+            }
+            self.counters.flushed_queries.fetch_add(scored, Ordering::Relaxed);
+            self.counters
+                .flush_ns
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        if scored < n {
+            self.counters.dropped.fetch_add(n - scored, Ordering::Relaxed);
+        }
+        result
+    }
+
+    /// Invalidate one block (eviction / uncache); pending queries for it
+    /// are dropped and counted.
+    pub fn invalidate(&mut self, block: BlockId) {
+        let before = self.inner.pending_len();
+        self.inner.invalidate(block);
+        let removed = (before - self.inner.pending_len()) as u64;
+        if removed > 0 {
+            self.counters.dropped.fetch_add(removed, Ordering::Relaxed);
+        }
+        if self.inner.pending_len() == 0 {
+            self.oldest = None;
+        }
+    }
+
+    /// Drop every cached class and pending query (counted as dropped).
+    pub fn invalidate_all(&mut self) {
+        let pending = self.inner.pending_len() as u64;
+        if pending > 0 {
+            self.counters.dropped.fetch_add(pending, Ordering::Relaxed);
+        }
+        self.inner.invalidate_all();
+        self.oldest = None;
+    }
+
+    /// Classifier-snapshot invalidation: a moved version drops every
+    /// cached class (pending queries survive — the new model scores them).
+    pub fn note_model_version(&mut self, version: u64) {
+        self.inner.note_model_version(version);
+    }
+
+    pub fn cached_len(&self) -> usize {
+        self.inner.cached_len()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.inner.pending_len()
+    }
+}
+
+// -------------------------------------------------------------- the pool
+
+/// Per-shard [`ShardBatcher`]s behind one front, routed by the cache's
+/// own [`shard_of`] hash — the single-threaded coordinator's batcher
+/// topology. The pool gives each shard an independent queue and routes
+/// invalidation per shard while `note_model_version` fans a deployment
+/// out to every batcher. It is deliberately lock-free plumbing over
+/// `&mut self`: the coordinator is single-threaded, so wrapping each
+/// shard in a `Mutex` would be pure overhead. Concurrent consumers (the
+/// online sharded replay) instead give each worker its *own*
+/// [`ShardBatcher`] — that is where a miss storm on one shard stops
+/// blocking the others (benchmarked in `bench_sharded`'s miss-storm
+/// scenario).
+pub struct BatcherPool {
+    shards: Vec<ShardBatcher>,
+    probe: BatcherProbe,
+}
+
+impl BatcherPool {
+    pub fn new(n_shards: usize, cfg: BatcherConfig) -> Self {
+        let probe = BatcherProbe::new();
+        let shards = (0..n_shards.max(1))
+            .map(|_| ShardBatcher::with_probe(cfg, probe.clone()))
+            .collect();
+        BatcherPool { shards, probe }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard(&mut self, block: BlockId) -> &mut ShardBatcher {
+        let idx = shard_of(block, self.shards.len());
+        &mut self.shards[idx]
+    }
+
+    /// Predict through the owning shard's batcher (see
+    /// [`ShardBatcher::predict`] for the `Ok(None)` deferral contract).
+    pub fn predict(
+        &mut self,
+        backend: &mut dyn SvmBackend,
+        block: BlockId,
+        stamp: u64,
+        features: FeatureVec,
+        now: SimTime,
+    ) -> Result<Option<bool>> {
+        self.shard(block).predict(backend, block, stamp, features, now)
+    }
+
+    /// Enqueue on the owning shard without needing an answer.
+    pub fn prefetch(&mut self, block: BlockId, stamp: u64, features: FeatureVec, now: SimTime) {
+        self.shard(block).prefetch(block, stamp, features, now);
+    }
+
+    /// Deadline sweep across every shard: flush any queue whose oldest
+    /// pending query is overdue at `now`. Cheap when nothing is pending;
+    /// the coordinator runs it on its label-sweep cadence so queues on
+    /// quiet shards cannot hold deferred queries past the deadline.
+    pub fn sweep(&mut self, backend: &mut dyn SvmBackend, now: SimTime) -> Result<()> {
+        for shard in &mut self.shards {
+            shard.maybe_flush(backend, now)?;
+        }
+        Ok(())
+    }
+
+    /// Invalidate one block on its owning shard only.
+    pub fn invalidate(&mut self, block: BlockId) {
+        self.shard(block).invalidate(block);
+    }
+
+    /// Drop every shard's cached classes and pending queries.
+    pub fn invalidate_all(&mut self) {
+        for shard in &mut self.shards {
+            shard.invalidate_all();
+        }
+    }
+
+    /// Broadcast a published snapshot version to **every** per-shard
+    /// batcher — the invalidation fan-out a model deployment requires.
+    pub fn note_model_version(&mut self, version: u64) {
+        for shard in &mut self.shards {
+            shard.note_model_version(version);
+        }
+    }
+
+    /// Flush every shard's queue (end of run / measurement boundary).
+    pub fn flush_all(&mut self, backend: &mut dyn SvmBackend) -> Result<()> {
+        for shard in &mut self.shards {
+            shard.flush(backend)?;
+        }
+        Ok(())
+    }
+
+    /// The shared cold-path counters of every shard batcher.
+    pub fn probe(&self) -> BatcherProbe {
+        self.probe.clone()
+    }
+
+    /// Class-cache telemetry merged across shards.
+    pub fn stats(&self) -> BatcherStats {
+        let mut acc = BatcherStats::default();
+        for shard in &self.shards {
+            acc.merge(&shard.stats());
+        }
+        acc
+    }
+
+    pub fn cached_len(&self) -> usize {
+        self.shards.iter().map(|s| s.cached_len()).sum()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.shards.iter().map(|s| s.pending_len()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,6 +691,24 @@ mod tests {
         fn decision_batch(&mut self, q: &[FeatureVec]) -> Result<Vec<f32>> {
             self.calls += 1;
             Ok(q.iter().map(|f| f[0] - 0.5).collect())
+        }
+        fn is_trained(&self) -> bool {
+            true
+        }
+    }
+
+    /// A backend that always fails (drop accounting on failed flushes).
+    struct BrokenBackend;
+
+    impl SvmBackend for BrokenBackend {
+        fn name(&self) -> &'static str {
+            "broken"
+        }
+        fn train(&mut self, _ds: &crate::svm::Dataset) -> Result<()> {
+            anyhow::bail!("broken")
+        }
+        fn decision_batch(&mut self, _q: &[FeatureVec]) -> Result<Vec<f32>> {
+            anyhow::bail!("broken")
         }
         fn is_trained(&self) -> bool {
             true
@@ -413,5 +893,271 @@ mod tests {
         batcher.prefetch(BlockId(1), 0, fv(0.5));
         batcher.prefetch(BlockId(1), 0, fv(0.5));
         assert_eq!(batcher.pending_len(), 1);
+    }
+
+    // ------------------------------------------------- bounded shard queue
+
+    /// `queue_depth = 1` is the legacy synchronous batcher: every cold
+    /// query flushes inline and the caller always gets `Some`.
+    #[test]
+    fn depth_one_is_the_legacy_synchronous_path() {
+        let mut be = FakeBackend { calls: 0 };
+        let mut legacy = PredictionBatcher::new(8);
+        let mut bounded = ShardBatcher::new(BatcherConfig::default());
+        let mut be2 = FakeBackend { calls: 0 };
+        for i in 0..50u64 {
+            let block = BlockId(i % 7);
+            let stamp = i / 7;
+            let f = fv(if i % 2 == 0 { 0.9 } else { 0.1 });
+            let a = legacy.predict(&mut be, block, stamp, f).unwrap();
+            let b = bounded.predict(&mut be2, block, stamp, f, SimTime(i)).unwrap();
+            assert_eq!(Some(a), b, "divergence at query {i}");
+        }
+        assert_eq!(be.calls, be2.calls, "same backend call count");
+        let probe = bounded.probe();
+        assert_eq!(probe.deferred(), 0, "depth 1 never defers");
+        assert_eq!(probe.flushes(), probe.flushes_by_fill());
+        assert_eq!(probe.cold_queries(), probe.flushed_queries());
+    }
+
+    #[test]
+    fn deep_queue_defers_until_fill() {
+        let mut be = FakeBackend { calls: 0 };
+        let cfg = BatcherConfig {
+            queue_depth: 4,
+            deadline: SimDuration::from_secs_f64(3600.0), // never lapses in-test
+            ..BatcherConfig::default()
+        };
+        let mut batcher = ShardBatcher::new(cfg);
+        // Three cold queries: deferred, no backend call.
+        for i in 0..3u64 {
+            let r = batcher.predict(&mut be, BlockId(i), 0, fv(0.9), SimTime(i)).unwrap();
+            assert_eq!(r, None, "query {i} must defer");
+        }
+        assert_eq!(be.calls, 0);
+        assert_eq!(batcher.pending_len(), 3);
+        // Fourth fills the queue: one flush scores all four.
+        let r = batcher.predict(&mut be, BlockId(3), 0, fv(0.9), SimTime(3)).unwrap();
+        assert_eq!(r, Some(true));
+        assert_eq!(be.calls, 1);
+        assert_eq!(batcher.pending_len(), 0);
+        // The deferred queries' answers are now in the class cache.
+        for i in 0..3u64 {
+            let r = batcher.predict(&mut be, BlockId(i), 0, fv(0.9), SimTime(9)).unwrap();
+            assert_eq!(r, Some(true));
+        }
+        assert_eq!(be.calls, 1, "deferred answers served from the cache");
+        let probe = batcher.probe();
+        assert_eq!(probe.cold_queries(), 4);
+        assert_eq!(probe.deferred(), 3);
+        assert_eq!(probe.flushes(), 1);
+        assert_eq!(probe.flushes_by_fill(), 1);
+        assert!((probe.mean_flush_size() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_deadline_flushes_every_cold_query() {
+        let mut be = FakeBackend { calls: 0 };
+        let cfg = BatcherConfig {
+            queue_depth: 64,
+            deadline: SimDuration::ZERO,
+            ..BatcherConfig::default()
+        };
+        let mut batcher = ShardBatcher::new(cfg);
+        for i in 0..5u64 {
+            let r = batcher.predict(&mut be, BlockId(i), 0, fv(0.1), SimTime(i)).unwrap();
+            assert_eq!(r, Some(false), "zero deadline never defers");
+        }
+        assert_eq!(be.calls, 5);
+        let probe = batcher.probe();
+        assert_eq!(probe.flushes_by_deadline(), 5);
+        assert_eq!(probe.flushes_by_fill(), 0);
+    }
+
+    #[test]
+    fn maybe_flush_sweeps_an_overdue_queue() {
+        let mut be = FakeBackend { calls: 0 };
+        let cfg = BatcherConfig {
+            queue_depth: 64,
+            deadline: SimDuration::from_secs_f64(1.0),
+            ..BatcherConfig::default()
+        };
+        let mut batcher = ShardBatcher::new(cfg);
+        let t0 = SimTime(0);
+        assert_eq!(batcher.predict(&mut be, BlockId(1), 0, fv(0.9), t0).unwrap(), None);
+        // Not overdue: sweep is a no-op.
+        batcher.maybe_flush(&mut be, SimTime(500_000)).unwrap();
+        assert_eq!(be.calls, 0);
+        // Overdue at t0 + 1s: the sweep flushes.
+        batcher.maybe_flush(&mut be, SimTime(1_000_000)).unwrap();
+        assert_eq!(be.calls, 1);
+        assert_eq!(batcher.pending_len(), 0);
+        assert_eq!(batcher.probe().flushes_by_deadline(), 1);
+        // A class-cache hit on an overdue queue also sweeps it.
+        assert_eq!(
+            batcher.predict(&mut be, BlockId(2), 0, fv(0.9), SimTime(2_000_000)).unwrap(),
+            None
+        );
+        let r = batcher
+            .predict(&mut be, BlockId(1), 0, fv(0.9), SimTime(4_000_000))
+            .unwrap();
+        assert_eq!(r, Some(true), "block 1 still cached");
+        assert_eq!(be.calls, 2, "hit-path sweep flushed the overdue block 2");
+        // Forced flush on an empty queue is free.
+        batcher.flush(&mut be).unwrap();
+        assert_eq!(be.calls, 2);
+    }
+
+    #[test]
+    fn deduped_requery_is_not_double_counted() {
+        let mut be = FakeBackend { calls: 0 };
+        let cfg = BatcherConfig {
+            queue_depth: 8,
+            deadline: SimDuration::from_secs_f64(3600.0),
+            ..BatcherConfig::default()
+        };
+        let mut batcher = ShardBatcher::new(cfg);
+        assert_eq!(batcher.predict(&mut be, BlockId(1), 0, fv(0.9), SimTime(0)).unwrap(), None);
+        // Same (block, stamp) again before any flush: dedupes against the
+        // pending entry — neither cold nor deferred may double-count.
+        assert_eq!(batcher.predict(&mut be, BlockId(1), 0, fv(0.9), SimTime(1)).unwrap(), None);
+        let probe = batcher.probe();
+        assert_eq!(probe.cold_queries(), 1, "deduped re-query is not a new cold entry");
+        assert_eq!(probe.deferred(), 1);
+        assert_eq!(batcher.pending_len(), 1);
+        batcher.flush(&mut be).unwrap();
+        assert_eq!(probe.flushed_queries(), 1);
+        assert_eq!(probe.cold_queries(), probe.flushed_queries() + probe.dropped());
+    }
+
+    #[test]
+    fn invalidation_drops_pending_and_counts() {
+        let mut be = FakeBackend { calls: 0 };
+        let cfg = BatcherConfig {
+            queue_depth: 8,
+            deadline: SimDuration::from_secs_f64(3600.0),
+            ..BatcherConfig::default()
+        };
+        let mut batcher = ShardBatcher::new(cfg);
+        assert_eq!(batcher.predict(&mut be, BlockId(1), 0, fv(0.9), SimTime(0)).unwrap(), None);
+        assert_eq!(batcher.predict(&mut be, BlockId(2), 0, fv(0.9), SimTime(1)).unwrap(), None);
+        batcher.invalidate(BlockId(1));
+        assert_eq!(batcher.pending_len(), 1);
+        assert_eq!(batcher.probe().dropped(), 1);
+        batcher.invalidate_all();
+        assert_eq!(batcher.pending_len(), 0);
+        assert_eq!(batcher.probe().dropped(), 2);
+    }
+
+    /// A multi-chunk flush that fails part-way: the chunks that were
+    /// scored count as flushed (and stay served from the class cache);
+    /// only the lost remainder counts as dropped.
+    #[test]
+    fn partial_flush_accounts_scored_and_dropped() {
+        struct FlakyBackend {
+            calls: u64,
+        }
+        impl SvmBackend for FlakyBackend {
+            fn name(&self) -> &'static str {
+                "flaky"
+            }
+            fn train(&mut self, _ds: &crate::svm::Dataset) -> Result<()> {
+                Ok(())
+            }
+            fn decision_batch(&mut self, q: &[FeatureVec]) -> Result<Vec<f32>> {
+                self.calls += 1;
+                if self.calls > 1 {
+                    anyhow::bail!("transient backend failure");
+                }
+                Ok(q.iter().map(|f| f[0] - 0.5).collect())
+            }
+            fn is_trained(&self) -> bool {
+                true
+            }
+        }
+        let mut be = FlakyBackend { calls: 0 };
+        let cfg = BatcherConfig {
+            batch_width: 4,
+            queue_depth: 6,
+            deadline: SimDuration::from_secs_f64(3600.0),
+            ..BatcherConfig::default()
+        };
+        let mut batcher = ShardBatcher::new(cfg);
+        for i in 0..5u64 {
+            let r = batcher.predict(&mut be, BlockId(i), 0, fv(0.9), SimTime(i)).unwrap();
+            assert_eq!(r, None, "query {i} defers below the fill bound");
+        }
+        // Sixth fills the queue: chunk 1 (blocks 0..4) scores, chunk 2
+        // (blocks 4..6) hits the transient failure.
+        let r = batcher.predict(&mut be, BlockId(5), 0, fv(0.9), SimTime(5));
+        assert!(r.is_err(), "failing chunk propagates");
+        let probe = batcher.probe();
+        assert_eq!(probe.cold_queries(), 6);
+        assert_eq!(probe.flushed_queries(), 4, "first chunk was scored");
+        assert_eq!(probe.dropped(), 2, "only the failed chunk is dropped");
+        assert_eq!(probe.flushes(), 1);
+        assert_eq!(
+            probe.cold_queries(),
+            probe.flushed_queries() + probe.dropped(),
+            "conservation holds through the partial failure"
+        );
+        // The scored chunk still serves from the class cache.
+        let r = batcher.predict(&mut be, BlockId(2), 0, fv(0.9), SimTime(9)).unwrap();
+        assert_eq!(r, Some(true));
+        assert_eq!(be.calls, 2, "cache hit needs no backend");
+    }
+
+    #[test]
+    fn failed_flush_counts_dropped_queries() {
+        let mut be = BrokenBackend;
+        let mut batcher = ShardBatcher::new(BatcherConfig::default());
+        let r = batcher.predict(&mut be, BlockId(1), 0, fv(0.9), SimTime(0));
+        assert!(r.is_err());
+        assert_eq!(batcher.probe().dropped(), 1);
+        assert_eq!(batcher.pending_len(), 0, "failed flush consumed the queue");
+    }
+
+    #[test]
+    fn pool_routes_by_shard_and_merges_stats() {
+        let mut be = FakeBackend { calls: 0 };
+        let mut pool = BatcherPool::new(4, BatcherConfig::default());
+        assert_eq!(pool.n_shards(), 4);
+        for i in 0..32u64 {
+            let r = pool.predict(&mut be, BlockId(i), 0, fv(0.9), SimTime(i)).unwrap();
+            assert_eq!(r, Some(true));
+        }
+        assert_eq!(pool.cached_len(), 32);
+        let stats = pool.stats();
+        assert_eq!(stats.queries, 32);
+        assert_eq!(stats.predictions_scored, 32);
+        assert_eq!(pool.probe().cold_queries(), 32);
+        // Same stamp again: every answer comes from a per-shard cache.
+        let calls = be.calls;
+        for i in 0..32u64 {
+            let r = pool.predict(&mut be, BlockId(i), 0, fv(0.9), SimTime(40 + i)).unwrap();
+            assert_eq!(r, Some(true));
+        }
+        assert_eq!(be.calls, calls);
+        assert_eq!(pool.stats().class_cache_hits, 32);
+    }
+
+    #[test]
+    fn pool_invalidation_routes_and_broadcasts() {
+        let mut be = FakeBackend { calls: 0 };
+        let mut pool = BatcherPool::new(2, BatcherConfig::default());
+        for i in 0..8u64 {
+            pool.predict(&mut be, BlockId(i), 0, fv(0.9), SimTime(i)).unwrap();
+        }
+        pool.invalidate(BlockId(3));
+        assert_eq!(pool.cached_len(), 7, "one block invalidated on its shard");
+        // A published model version reaches every shard batcher.
+        pool.note_model_version(1);
+        assert_eq!(pool.cached_len(), 0, "broadcast dropped every cached class");
+        pool.predict(&mut be, BlockId(1), 0, fv(0.9), SimTime(9)).unwrap();
+        pool.note_model_version(1);
+        assert_eq!(pool.cached_len(), 1, "unchanged version is a no-op");
+        pool.invalidate_all();
+        assert_eq!(pool.cached_len(), 0);
+        assert_eq!(pool.pending_len(), 0);
     }
 }

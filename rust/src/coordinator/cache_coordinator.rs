@@ -4,7 +4,8 @@
 //! The coordinator owns the per-DataNode off-heap caches (the NameNode is
 //! the single decision point; DataNodes only execute cache/uncache
 //! commands), the replacement policy instances, the SVM classifier
-//! (batched through `PredictionBatcher`) and the online training pipeline.
+//! (batched through a per-shard `BatcherPool`) and the online training
+//! pipeline.
 //!
 //! Request flow (`read_block`, called by the MapReduce scheduler):
 //!
@@ -40,7 +41,7 @@ use crate::sim::{SimDuration, SimTime};
 use crate::svm::features::{BlockStatsTracker, FeatureVec};
 use crate::workload::{BlockRequest, Cluster};
 
-use super::batcher::PredictionBatcher;
+use super::batcher::{BatcherConfig, BatcherPool, BatcherProbe};
 use super::online::SnapshotCell;
 use super::prefetcher::Prefetcher;
 use super::training_pipeline::TrainingPipeline;
@@ -99,7 +100,12 @@ pub struct CacheCoordinator {
     /// locked policy instances each); empty in NoCache mode.
     caches: Vec<ShardedCache>,
     backend: Option<Box<dyn SvmBackend>>,
-    batcher: PredictionBatcher,
+    /// One bounded prediction batcher per cache shard (routed by the same
+    /// hash as the shards): per-shard cold-query queues with
+    /// `cfg.cache_batch_queue` / `cfg.cache_batch_deadline_ms` bounding
+    /// the cold-query rate, and per-shard invalidation with pool-wide
+    /// model-version fan-out.
+    batchers: BatcherPool,
     pub pipeline: TrainingPipeline,
     pub tracker: BlockStatsTracker,
     pub stats: CoordinatorStats,
@@ -169,14 +175,23 @@ impl CacheCoordinator {
         if svm_enabled && backend.is_none() {
             anyhow::bail!("policy or admission requires an SVM backend but none was provided");
         }
-        let batch_width = 64;
         let block_size = cluster.cfg.block_size;
+        let batcher_cfg = BatcherConfig {
+            queue_depth: cluster.cfg.cache_batch_queue.max(1),
+            // Simulated milliseconds: flush timing is driven by the
+            // request clock, so seeded runs stay bit-for-bit reproducible.
+            deadline: SimDuration::from_micros(
+                cluster.cfg.cache_batch_deadline_ms.saturating_mul(1000),
+            ),
+            ..BatcherConfig::default()
+        };
+        let batcher_shards = cluster.cfg.cache_shards.max(1);
         Ok(CacheCoordinator {
             cluster,
             mode,
             caches,
             backend,
-            batcher: PredictionBatcher::new(batch_width),
+            batchers: BatcherPool::new(batcher_shards, batcher_cfg),
             pipeline: TrainingPipeline::new(32, 128),
             tracker: BlockStatsTracker::new(block_size),
             stats: CoordinatorStats::default(),
@@ -224,8 +239,20 @@ impl CacheCoordinator {
         self.caches.first().map(|c| c.admission_name()).unwrap_or("none")
     }
 
+    /// Class-cache telemetry merged across the per-shard batchers.
     pub fn batcher_stats(&self) -> super::batcher::BatcherStats {
-        self.batcher.stats
+        self.batchers.stats()
+    }
+
+    /// Cold-query queue counters (deferred / flush / drop / latency) of
+    /// the per-shard batcher pool.
+    pub fn batcher_probe(&self) -> BatcherProbe {
+        self.batchers.probe()
+    }
+
+    /// Prediction batchers per DataNode cache (mirrors `cache_shards`).
+    pub fn batcher_shards(&self) -> usize {
+        self.batchers.n_shards()
     }
 
     fn app_id(&mut self, app: &str) -> u64 {
@@ -238,6 +265,7 @@ impl CacheCoordinator {
         &mut self,
         block: BlockId,
         features: FeatureVec,
+        now: SimTime,
     ) -> Option<bool> {
         if !self.svm_enabled {
             return None;
@@ -253,10 +281,14 @@ impl CacheCoordinator {
         let accesses = self.tracker.accesses(block);
         let stamp = if accesses < 4 { accesses } else { 63 - accesses.leading_zeros() as u64 + 4 };
         match self
-            .batcher
-            .predict(backend.as_mut(), block, stamp, features)
+            .batchers
+            .predict(backend.as_mut(), block, stamp, features, now)
         {
-            Ok(class) => Some(class),
+            // `None` = the query was deferred into the shard's cold queue
+            // (only with cache_batch_queue > 1): this access falls back to
+            // unclassified-LRU behavior and the class lands in the cache
+            // when the queue fills or the deadline lapses.
+            Ok(class) => class,
             Err(e) => {
                 log::warn!("prediction failed, falling back to LRU: {e:#}");
                 None
@@ -278,8 +310,18 @@ impl CacheCoordinator {
     }
 
     /// Expire pending observations: no reuse within the window = negative.
+    /// Also sweeps the per-shard cold-query queues, so deferred
+    /// predictions on shards the request stream stopped touching still
+    /// flush by their deadline.
     pub fn sweep_stale_labels(&mut self, now: SimTime) {
         self.requests_since_sweep = 0;
+        if let Some(backend) = self.backend.as_mut() {
+            if backend.is_trained() {
+                if let Err(e) = self.batchers.sweep(backend.as_mut(), now) {
+                    log::warn!("cold-query deadline sweep failed: {e:#}");
+                }
+            }
+        }
         let window = self.label_window;
         let expired: Vec<BlockId> = self
             .pending_labels
@@ -304,13 +346,16 @@ impl CacheCoordinator {
         }
     }
 
-    /// A new model was deployed: drop every stale cached class and publish
-    /// the model as an immutable snapshot (when the backend can export).
+    /// A new model was deployed: drop every stale cached class on every
+    /// per-shard batcher and publish the model as an immutable snapshot
+    /// (when the backend can export). The version broadcast reaches
+    /// **every** shard batcher — a deployment invalidates the whole pool,
+    /// not just the shard that happened to trigger the retrain.
     fn deploy_model(&mut self) {
-        self.batcher.invalidate_all();
+        self.batchers.invalidate_all();
         if let Some(model) = self.backend.as_ref().and_then(|b| b.export_model()) {
             let version = self.snapshots.publish(model);
-            self.batcher.note_model_version(version);
+            self.batchers.note_model_version(version);
         }
     }
 
@@ -364,7 +409,7 @@ impl CacheCoordinator {
         now: SimTime,
     ) -> AccessContext {
         let features = self.tracker.features(block, kind, size, affinity, now);
-        let predicted = self.predict_class(block, features);
+        let predicted = self.predict_class(block, features, now);
         AccessContext {
             time: now,
             size,
@@ -418,7 +463,7 @@ impl CacheCoordinator {
                     self.stats.evictions += 1;
                     self.cluster.datanodes[dn.0 as usize].uncache_block(*victim);
                     self.cluster.namenode.note_uncached(*victim);
-                    self.batcher.invalidate(*victim);
+                    self.batchers.invalidate(*victim);
                 }
                 if self.caches[dn.0 as usize].contains(block) {
                     self.stats.insertions += 1;
@@ -499,7 +544,7 @@ impl CacheCoordinator {
             // Classifier gate: only stage blocks predicted to be reused.
             // Without a trained model, prefetch optimistically (sequential
             // scans are the common case the heuristic already filtered).
-            if self.predict_class(next, features) == Some(false) {
+            if self.predict_class(next, features, now) == Some(false) {
                 continue;
             }
             let Some(BlockLocation::OnDisk(dn)) = self.cluster.namenode.locate(next) else {
@@ -520,7 +565,7 @@ impl CacheCoordinator {
                 self.stats.evictions += 1;
                 self.cluster.datanodes[dn.0 as usize].uncache_block(*victim);
                 self.cluster.namenode.note_uncached(*victim);
-                self.batcher.invalidate(*victim);
+                self.batchers.invalidate(*victim);
                 if let Some(pf) = self.prefetcher.as_mut() {
                     pf.note_evicted(*victim);
                 }
@@ -569,7 +614,7 @@ impl CacheCoordinator {
         self.stats = CoordinatorStats::default();
         self.tracker.reset();
         self.pending_labels.clear();
-        self.batcher.invalidate_all();
+        self.batchers.invalidate_all();
         self.requests_since_sweep = 0;
     }
 

@@ -4,7 +4,10 @@
 //! * `cache_coordinator` — Algorithm 1 (GetCache/PutCache) over the
 //!   simulated cluster, implementing `mapreduce::BlockService` for the
 //!   request path.
-//! * `batcher` — per-block class caching + micro-batched PJRT predictions.
+//! * `batcher` — per-block class caching + micro-batched PJRT
+//!   predictions, one bounded [`batcher::ShardBatcher`] per cache shard
+//!   behind a [`batcher::BatcherPool`] (cold-query queue + flush
+//!   deadline, so a miss storm on one shard never stalls another).
 //! * `training_pipeline` — labeled-sample accumulation and periodic
 //!   retraining (both §5.1 label scenarios).
 //! * `online` — concurrent online learning: immutable classifier
@@ -18,11 +21,13 @@ pub mod online;
 pub mod prefetcher;
 pub mod training_pipeline;
 
-pub use batcher::{BatcherStats, PredictionBatcher};
+pub use batcher::{
+    BatcherConfig, BatcherPool, BatcherProbe, BatcherStats, PredictionBatcher, ShardBatcher,
+};
 pub use cache_coordinator::{CacheCoordinator, CacheMode, CoordinatorStats};
 pub use online::{
     sample_channel, trainer_loop, ClassifierSnapshot, LabeledSample, SampleProbe, SampleSender,
-    SnapshotCell, SnapshotReader, TrainerConfig, TrainerReport,
+    SnapshotBackend, SnapshotCell, SnapshotReader, TrainerConfig, TrainerReport,
 };
 pub use prefetcher::{PrefetchStats, Prefetcher};
 pub use training_pipeline::TrainingPipeline;

@@ -171,6 +171,67 @@ impl SnapshotReader {
     }
 }
 
+/// An [`SvmBackend`] view over the latest published classifier snapshot:
+/// `decision_batch` scores through a [`SnapshotReader`], so the scoring
+/// path is as lock-free as the reader (one `Acquire` load on unchanged
+/// models). Read-only — `train` fails; the background trainer owns the
+/// real backend.
+///
+/// This is the bridge that lets a per-shard
+/// [`ShardBatcher`](super::batcher::ShardBatcher) run on the concurrent
+/// replay path: each shard worker owns one `SnapshotBackend`, flushes its
+/// own cold-query queue through it, and never waits behind another
+/// shard's flush (the miss-storm serialization of a single shared
+/// backend is gone).
+#[derive(Debug)]
+pub struct SnapshotBackend {
+    reader: SnapshotReader,
+}
+
+impl SnapshotBackend {
+    pub fn new(cell: Arc<SnapshotCell>) -> Self {
+        SnapshotBackend { reader: SnapshotReader::new(cell) }
+    }
+
+    /// The freshest published version (refreshing the cached snapshot).
+    /// Feed this to the shard batcher's `note_model_version` (see
+    /// [`super::batcher::ShardBatcher`]) so a publish invalidates the
+    /// shard's cached classes.
+    pub fn version(&mut self) -> u64 {
+        self.reader.current().version()
+    }
+
+    /// Newly published snapshots this backend has observed.
+    pub fn refreshes(&self) -> u64 {
+        self.reader.refreshes()
+    }
+}
+
+impl SvmBackend for SnapshotBackend {
+    fn name(&self) -> &'static str {
+        "snapshot"
+    }
+
+    fn train(&mut self, _ds: &crate::svm::Dataset) -> Result<()> {
+        anyhow::bail!("snapshot backend is read-only (the trainer owns the real backend)")
+    }
+
+    fn decision_batch(&mut self, queries: &[FeatureVec]) -> Result<Vec<f32>> {
+        let snap = self.reader.current();
+        anyhow::ensure!(snap.is_trained(), "no classifier snapshot published yet");
+        Ok(queries
+            .iter()
+            .map(|q| snap.decision(q).expect("trained snapshot scores"))
+            .collect())
+    }
+
+    fn is_trained(&self) -> bool {
+        // Version 0 is the untrained snapshot; every published version
+        // carries a model.
+        self.reader.cell.version() > 0
+    }
+}
+
 // -------------------------------------------------------------- samples
 
 /// One labeled observation flowing from a shard worker to the trainer.
@@ -378,6 +439,24 @@ mod tests {
         // No new publish: the reader stays on its cached Arc.
         assert_eq!(reader.predict(&fv(0.5)), Some(false));
         assert_eq!(reader.refreshes(), 2);
+    }
+
+    #[test]
+    fn snapshot_backend_scores_through_published_models() {
+        let cell = Arc::new(SnapshotCell::new());
+        let mut be = SnapshotBackend::new(Arc::clone(&cell));
+        assert!(!be.is_trained());
+        assert!(be.decision_batch(&[fv(0.5)]).is_err(), "unpublished = untrained");
+        assert!(be.train(&crate::svm::Dataset::new()).is_err(), "read-only");
+        cell.publish(constant_model(1.0));
+        assert!(be.is_trained());
+        assert_eq!(be.version(), 1);
+        let scores = be.decision_batch(&[fv(0.1), fv(0.9)]).unwrap();
+        assert!(scores.iter().all(|&s| s > 0.0));
+        cell.publish(constant_model(-1.0));
+        let scores = be.decision_batch(&[fv(0.1)]).unwrap();
+        assert!(scores[0] < 0.0, "publish reaches the backend");
+        assert_eq!(be.refreshes(), 2);
     }
 
     #[test]

@@ -10,8 +10,12 @@
 //!
 //! 1. emits its (features, `reused_later`) request-awareness sample into
 //!    the bounded channel (never blocking; drops are counted),
-//! 2. predicts through a lock-free [`SnapshotReader`] over the latest
-//!    published classifier, and
+//! 2. predicts through its **own per-shard [`ShardBatcher`]** over a
+//!    [`SnapshotBackend`] (a lock-free view of the latest published
+//!    classifier): cold queries enter a bounded queue and flush when it
+//!    fills or the deadline lapses — no worker ever waits behind another
+//!    shard's flush, and every published snapshot invalidates the shard's
+//!    cached classes, and
 //! 3. replays the access against the shared [`ShardedCache`].
 //!
 //! The background trainer drains the channel into a
@@ -33,8 +37,9 @@ use anyhow::{Context, Result};
 
 use crate::cache::sharded::{shard_of, ShardStats, ShardedCache};
 use crate::cache::AccessContext;
+use crate::coordinator::batcher::{BatcherConfig, BatcherProbe, ShardBatcher};
 use crate::coordinator::online::{
-    sample_channel, trainer_loop, SampleSender, SnapshotCell, SnapshotReader, TrainerConfig,
+    sample_channel, trainer_loop, SampleSender, SnapshotBackend, SnapshotCell, TrainerConfig,
     TrainerReport,
 };
 use crate::coordinator::TrainingPipeline;
@@ -96,6 +101,46 @@ pub struct OnlineReplayReport {
     /// over workers (0 when every worker finished before the first
     /// publish — the trainer still drains and publishes afterwards).
     pub snapshot_refreshes: u64,
+    /// Cold-query queue counters of the per-shard prediction batchers
+    /// (every worker predicts through its own [`ShardBatcher`] over a
+    /// [`SnapshotBackend`]).
+    pub cold: ColdPathReport,
+}
+
+/// Snapshot of a [`BatcherProbe`] at the end of a replay.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ColdPathReport {
+    /// Cold queries (class-cache misses) across all shard batchers.
+    pub cold_queries: u64,
+    /// Cold queries deferred into a queue (answered by a later flush).
+    pub deferred: u64,
+    /// Queue flushes (fill- or deadline-triggered).
+    pub flushes: u64,
+    /// Cold queries scored across all flushes.
+    pub flushed_queries: u64,
+    /// Pending queries lost to invalidation or failed flushes.
+    pub dropped: u64,
+}
+
+impl ColdPathReport {
+    fn from_probe(probe: &BatcherProbe) -> Self {
+        ColdPathReport {
+            cold_queries: probe.cold_queries(),
+            deferred: probe.deferred(),
+            flushes: probe.flushes(),
+            flushed_queries: probe.flushed_queries(),
+            dropped: probe.dropped(),
+        }
+    }
+
+    /// Mean queries per flush (the batching amortization actually won).
+    pub fn mean_flush_size(&self) -> f64 {
+        if self.flushes == 0 {
+            0.0
+        } else {
+            self.flushed_queries as f64 / self.flushes as f64
+        }
+    }
 }
 
 impl OnlineReplayReport {
@@ -131,7 +176,10 @@ pub fn pretrain_model(trace: &[BlockRequest], kernel: KernelKind) -> Result<Opti
 /// Replay `trace` on a fresh `shards`-way cache of `policy`, with the
 /// classifier arm selected by `mode` (see module docs for the worker
 /// protocol). `cfg` sets the online trainer's cadence; ignored when
-/// frozen.
+/// frozen. `batcher` bounds each worker's cold-query queue — the default
+/// (`queue_depth` 1) flushes every cold query inline and keeps the frozen
+/// arm bit-identical to the classify-once path.
+#[allow(clippy::too_many_arguments)] // the replay's full knob surface
 pub fn run_online(
     policy: &str,
     shards: usize,
@@ -140,12 +188,13 @@ pub fn run_online(
     mode: TrainerMode,
     kernel: KernelKind,
     cfg: TrainerConfig,
+    batcher: BatcherConfig,
 ) -> Result<OnlineReplayReport> {
     let pretrained = match mode {
         TrainerMode::Frozen => pretrain_model(trace, kernel)?,
         TrainerMode::Online => None,
     };
-    run_online_with(policy, shards, capacity, trace, mode, kernel, cfg, pretrained)
+    run_online_with(policy, shards, capacity, trace, mode, kernel, cfg, batcher, pretrained)
 }
 
 /// [`run_online`] with the frozen arm's pretrained model supplied by the
@@ -161,6 +210,7 @@ fn run_online_with(
     mode: TrainerMode,
     kernel: KernelKind,
     cfg: TrainerConfig,
+    batcher: BatcherConfig,
     pretrained: Option<SmoModel>,
 ) -> Result<OnlineReplayReport> {
     let cache = ShardedCache::from_registry(policy, shards, capacity)
@@ -190,10 +240,18 @@ fn run_online_with(
         }
     };
 
+    // Shared cold-path telemetry of every worker's per-shard batcher.
+    let batch_probe = BatcherProbe::new();
+
     let worker = |w: usize| {
         let tx = master.lock().expect("sender mutex poisoned").as_ref().cloned();
         let mut tracker = BlockStatsTracker::new(block_size);
-        let mut reader = SnapshotReader::new(Arc::clone(&cell));
+        // Per-shard prediction front: a read-only backend over the latest
+        // published snapshot + this shard's own bounded cold-query queue.
+        // No lock is shared with any other worker — a flush here can never
+        // stall another shard (the miss-storm fix).
+        let mut backend = SnapshotBackend::new(Arc::clone(&cell));
+        let mut shard_batcher = ShardBatcher::with_probe(batcher, batch_probe.clone());
         for &i in &partitions[w] {
             let req = &trace[i];
             let features =
@@ -201,6 +259,21 @@ fn run_online_with(
             if let Some(tx) = &tx {
                 tx.emit(features, req.reused_later);
             }
+            // Snapshot invalidation must reach every per-shard batcher: a
+            // freshly published version drops this shard's cached classes
+            // before the next prediction.
+            shard_batcher.note_model_version(backend.version());
+            let predicted = if backend.is_trained() {
+                // Exact per-access stamp: every access re-scores, exactly
+                // like the classify-once pass scores every request (the
+                // class cache only answers repeat queries at one stamp).
+                let stamp = tracker.accesses(req.block);
+                shard_batcher
+                    .predict(&mut backend, req.block, stamp, features, req.time)
+                    .unwrap_or_default()
+            } else {
+                None
+            };
             let ctx = AccessContext {
                 time: req.time,
                 size: req.size,
@@ -209,12 +282,17 @@ fn run_online_with(
                 file_width: 1,
                 file_complete: false,
                 affinity: req.affinity,
-                predicted_reuse: reader.predict(&features),
+                predicted_reuse: predicted,
             };
             cache.access_or_insert(req.block, &ctx);
             tracker.record_access(req.block, 0, req.time);
         }
-        (cache.stats_of(w), reader.refreshes())
+        // Drain whatever the deadline never reached, so every cold query
+        // is accounted as flushed (or dropped) by the end of the replay.
+        if backend.is_trained() {
+            let _ = shard_batcher.flush(&mut backend);
+        }
+        (cache.stats_of(w), backend.refreshes())
     };
 
     let t0 = Instant::now();
@@ -265,11 +343,13 @@ fn run_online_with(
         samples_sent: probe.sent(),
         samples_dropped: probe.dropped(),
         snapshot_refreshes,
+        cold: ColdPathReport::from_probe(&batch_probe),
     })
 }
 
 /// The frozen × online matrix over `policies` and `shard_counts`, one
 /// replay per cell, all on the identical trace.
+#[allow(clippy::too_many_arguments)] // the sweep mirrors run_online's knobs
 pub fn run_matrix(
     policies: &[&str],
     shard_counts: &[usize],
@@ -277,6 +357,7 @@ pub fn run_matrix(
     trace: &[BlockRequest],
     kernel: KernelKind,
     cfg: TrainerConfig,
+    batcher: BatcherConfig,
 ) -> Result<Vec<OnlineReplayReport>> {
     // The frozen model depends only on (trace, kernel): train it once for
     // the whole matrix instead of once per frozen cell.
@@ -290,7 +371,7 @@ pub fn run_matrix(
                     TrainerMode::Online => None,
                 };
                 reports.push(run_online_with(
-                    policy, shards, capacity, trace, mode, kernel, cfg, model,
+                    policy, shards, capacity, trace, mode, kernel, cfg, batcher, model,
                 )?);
             }
         }
@@ -310,6 +391,8 @@ pub fn render(reports: &[OnlineReplayReport]) -> Table {
         "samples",
         "dropped",
         "refreshes",
+        "deferred",
+        "flushes",
         "replay wall (ms)",
         "req/s",
     ]);
@@ -324,6 +407,8 @@ pub fn render(reports: &[OnlineReplayReport]) -> Table {
             r.samples_sent.to_string(),
             r.samples_dropped.to_string(),
             r.snapshot_refreshes.to_string(),
+            r.cold.deferred.to_string(),
+            r.cold.flushes.to_string(),
             fmt_f(r.wall.as_secs_f64() * 1e3, 2),
             format!("{:.0}", r.requests_per_sec()),
         ]);
@@ -341,7 +426,9 @@ mod tests {
     const BLOCK: u64 = 64 * MB;
 
     /// The acceptance criterion's control arm: frozen-mode replay is
-    /// bit-identical to the classify-once path, for 1 and 8 shards.
+    /// bit-identical to the classify-once path, for 1 and 8 shards —
+    /// including through the per-shard batcher front (default depth 1
+    /// flushes every cold query inline).
     #[test]
     fn frozen_matches_classify_once() {
         let trace = fig3_trace(BLOCK, 5);
@@ -357,6 +444,7 @@ mod tests {
                 TrainerMode::Frozen,
                 KernelKind::Rbf,
                 TrainerConfig::default(),
+                BatcherConfig::default(),
             )
             .unwrap();
             assert_eq!(frozen.stats, baseline.stats, "{shards}-shard frozen parity");
@@ -364,6 +452,8 @@ mod tests {
             assert_eq!(frozen.samples_sent, 0, "frozen workers never emit");
             assert_eq!(frozen.trainer.publishes, 0);
             assert_eq!(frozen.trainer.final_version, 1, "one pretrained snapshot");
+            assert_eq!(frozen.cold.deferred, 0, "depth 1 never defers");
+            assert!(frozen.cold.flushes > 0, "predictions ran through the batchers");
         }
     }
 
@@ -378,6 +468,7 @@ mod tests {
             TrainerMode::Online,
             KernelKind::Rbf,
             TrainerConfig::default(),
+            BatcherConfig::default(),
         )
         .unwrap();
         assert_eq!(report.stats.requests, trace.len() as u64);
@@ -393,6 +484,42 @@ mod tests {
         assert_eq!(report.trainer.final_version, report.trainer.publishes);
     }
 
+    /// A deep cold-query queue defers predictions instead of flushing
+    /// inline; every deferred query is accounted, and the replay stays
+    /// well-formed (the deferred accesses just run unclassified).
+    #[test]
+    fn deep_queue_defers_and_accounts() {
+        let trace = fig3_trace(BLOCK, 5);
+        let batcher = BatcherConfig {
+            queue_depth: 8,
+            // Never lapses in-test: deferral is driven purely by fill.
+            deadline: crate::sim::SimDuration::from_secs_f64(1e9),
+            ..BatcherConfig::default()
+        };
+        let report = run_online(
+            "h-svm-lru",
+            4,
+            8 * BLOCK,
+            &trace,
+            TrainerMode::Frozen,
+            KernelKind::Rbf,
+            TrainerConfig::default(),
+            batcher,
+        )
+        .unwrap();
+        assert_eq!(report.stats.requests, trace.len() as u64);
+        assert!(report.cold.deferred > 0, "deep queue must defer: {:?}", report.cold);
+        // Per-access stamps never dedupe, and the worker drains its queue
+        // at the end: every cold query ends up flushed (or dropped).
+        assert_eq!(
+            report.cold.cold_queries,
+            report.cold.flushed_queries + report.cold.dropped,
+            "cold-query conservation: {:?}",
+            report.cold
+        );
+        assert!(report.cold.mean_flush_size() > 1.0, "batching actually amortized");
+    }
+
     #[test]
     fn matrix_covers_modes_policies_and_shards() {
         let trace = fig3_trace(BLOCK, 3);
@@ -403,6 +530,7 @@ mod tests {
             &trace,
             KernelKind::Rbf,
             TrainerConfig::default(),
+            BatcherConfig::default(),
         )
         .unwrap();
         assert_eq!(reports.len(), 2 * 2 * 2);
@@ -424,6 +552,7 @@ mod tests {
             TrainerMode::Frozen,
             KernelKind::Rbf,
             TrainerConfig::default(),
+            BatcherConfig::default(),
         );
         assert!(r.is_err());
     }

@@ -23,7 +23,7 @@ use anyhow::{Context, Result};
 use crate::cache::sharded::{shard_of, ShardStats, ShardedCache};
 use crate::cache::AccessContext;
 use crate::runtime::{RustBackend, SvmBackend};
-use crate::sim::parallel::run_sharded;
+use crate::sim::parallel::{run_sharded, run_sharded_with_monitor};
 use crate::svm::features::{BlockStatsTracker, FeatureVec};
 use crate::svm::KernelKind;
 use crate::util::table::{fmt_f, Table};
@@ -109,6 +109,39 @@ pub fn classify_trace(
     Ok(classes)
 }
 
+/// Request indices of `trace` grouped by owning shard, preserving trace
+/// order within each shard.
+fn partition_by_shard(trace: &[BlockRequest], n: usize) -> Vec<Vec<usize>> {
+    let mut partitions: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, req) in trace.iter().enumerate() {
+        partitions[shard_of(req.block, n)].push(i);
+    }
+    partitions
+}
+
+/// Replay one shard's request indices against the shared cache.
+fn replay_slice(
+    cache: &ShardedCache,
+    trace: &[BlockRequest],
+    classes: &[Option<bool>],
+    indices: &[usize],
+) {
+    for &i in indices {
+        let req = &trace[i];
+        let ctx = AccessContext {
+            time: req.time,
+            size: req.size,
+            kind: req.kind,
+            file: req.block.0, // trace blocks are their own files
+            file_width: 1,
+            file_complete: false,
+            affinity: req.affinity,
+            predicted_reuse: classes.get(i).copied().flatten(),
+        };
+        cache.access_or_insert(req.block, &ctx);
+    }
+}
+
 /// Phase 2: replay `trace` against `cache`, one scoped worker per shard.
 /// `classes[i]` is the prediction attached to request `i` (pass an empty
 /// slice to replay without predictions). Each worker sees its shard's
@@ -119,27 +152,92 @@ pub fn replay_on_shards(
     classes: &[Option<bool>],
 ) -> Vec<ShardStats> {
     let n = cache.n_shards();
-    let mut partitions: Vec<Vec<usize>> = vec![Vec::new(); n];
-    for (i, req) in trace.iter().enumerate() {
-        partitions[shard_of(req.block, n)].push(i);
-    }
+    let partitions = partition_by_shard(trace, n);
     run_sharded(n, |w| {
-        for &i in &partitions[w] {
-            let req = &trace[i];
-            let ctx = AccessContext {
-                time: req.time,
-                size: req.size,
-                kind: req.kind,
-                file: req.block.0, // trace blocks are their own files
-                file_width: 1,
-                file_complete: false,
-                affinity: req.affinity,
-                predicted_reuse: classes.get(i).copied().flatten(),
-            };
-            cache.access_or_insert(req.block, &ctx);
-        }
+        replay_slice(cache, trace, classes, &partitions[w]);
         cache.stats_of(w)
     })
+}
+
+/// What concurrent lock-free stats readers observed during a replay (see
+/// [`replay_with_stats_readers`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StatsReaderReport {
+    pub readers: usize,
+    /// Merged-stats snapshots taken across all readers while the shard
+    /// workers were replaying.
+    pub snapshots: u64,
+    /// Snapshots that violated an internal-consistency invariant
+    /// (`hits + misses == requests`, `used <= capacity`, per-shard
+    /// coupling). Must be 0 — the seqlock guarantees it.
+    pub inconsistencies: u64,
+}
+
+/// [`replay_on_shards`] with `n_readers` concurrent reader threads
+/// hammering the lock-free stats path (`stats()`, `used()`,
+/// `snapshot_of()`) for the whole duration of the replay. Readers check
+/// every snapshot for internal consistency; with the seqlock stats block
+/// they never serialize the shard workers (benchmarked in
+/// `bench_sharded`'s reader-contention scenario).
+pub fn replay_with_stats_readers(
+    cache: &ShardedCache,
+    trace: &[BlockRequest],
+    classes: &[Option<bool>],
+    n_readers: usize,
+) -> (Vec<ShardStats>, StatsReaderReport) {
+    if n_readers == 0 {
+        return (replay_on_shards(cache, trace, classes), StatsReaderReport::default());
+    }
+    let n = cache.n_shards();
+    let partitions = partition_by_shard(trace, n);
+    let worker = |w: usize| {
+        replay_slice(cache, trace, classes, &partitions[w]);
+        cache.stats_of(w)
+    };
+    let monitor = |done: &std::sync::atomic::AtomicBool| {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..n_readers)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut snapshots = 0u64;
+                        let mut inconsistencies = 0u64;
+                        let mut last_requests = 0u64;
+                        // do-while: at least one snapshot even when the
+                        // replay finishes before the reader's first pass.
+                        loop {
+                            let merged = cache.stats();
+                            let mut ok = merged.hits + merged.misses == merged.requests
+                                && cache.used() <= cache.capacity()
+                                && merged.requests >= last_requests;
+                            last_requests = merged.requests;
+                            for s in 0..n {
+                                let snap = cache.snapshot_of(s);
+                                ok &= snap.stats.hits + snap.stats.misses
+                                    == snap.stats.requests;
+                            }
+                            snapshots += 1;
+                            inconsistencies += u64::from(!ok);
+                            if done.load(std::sync::atomic::Ordering::Acquire) {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                        (snapshots, inconsistencies)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("stats reader panicked"))
+                .fold((0u64, 0u64), |acc, (s, i)| (acc.0 + s, acc.1 + i))
+        })
+    };
+    let (per_shard, (snapshots, inconsistencies)) =
+        run_sharded_with_monitor(n, worker, monitor);
+    (
+        per_shard,
+        StatsReaderReport { readers: n_readers, snapshots, inconsistencies },
+    )
 }
 
 /// Replay `trace` with precomputed predictions on a fresh `shards`-way
@@ -298,5 +396,27 @@ mod tests {
     fn unknown_policy_errors() {
         let trace = fig3_trace(64 * MB, 3);
         assert!(run("nonsense", 2, 8 * 64 * MB, &trace).is_err());
+    }
+
+    #[test]
+    fn stats_readers_see_only_consistent_snapshots() {
+        let trace = fig3_trace(64 * MB, 9);
+        let cache = ShardedCache::from_registry("lru", 4, 8 * 64 * MB).unwrap();
+        let (per_shard, report) = replay_with_stats_readers(&cache, &trace, &[], 2);
+        assert_eq!(report.readers, 2);
+        assert!(report.snapshots > 0, "readers must have observed the replay");
+        assert_eq!(report.inconsistencies, 0, "seqlock snapshots must be consistent");
+        let mut merged = ShardStats::default();
+        for s in &per_shard {
+            merged.merge(s);
+        }
+        assert_eq!(merged, cache.stats());
+        assert_eq!(merged.requests, trace.len() as u64);
+        // Reader-free path is the plain replay.
+        let cache2 = ShardedCache::from_registry("lru", 4, 8 * 64 * MB).unwrap();
+        let (plain, none) = replay_with_stats_readers(&cache2, &trace, &[], 0);
+        assert_eq!(none.readers, 0);
+        assert_eq!(none.snapshots, 0);
+        assert_eq!(plain, per_shard, "readers must not perturb the replay");
     }
 }

@@ -103,10 +103,13 @@ fn run(args: &[String]) -> Result<()> {
                 },
             };
             cluster_cfg.cache_shards = cli.shards(cluster_cfg.cache_shards)?;
+            cluster_cfg.cache_batch_queue = cli.batch_queue(cluster_cfg.cache_batch_queue)?;
+            cluster_cfg.cache_batch_deadline_ms =
+                cli.batch_deadline_ms(cluster_cfg.cache_batch_deadline_ms)?;
             if let Some(adm) = cli.flag("admission") {
                 cluster_cfg.cache_admission = adm.to_string();
-                cluster_cfg.validate()?;
             }
+            cluster_cfg.validate()?;
             let mut sim = SimulateConfig { seed: cli.seed()?, ..Default::default() };
             if cli.switch("failures") {
                 sim.failures = FailureModel::with_rates(0.08, 0.03, cli.seed()?);
@@ -119,6 +122,12 @@ fn run(args: &[String]) -> Result<()> {
             println!("cache shards       {}", cluster_cfg.cache_shards);
             if cluster_cfg.cache_admission != "always" {
                 println!("cache admission    {}", cluster_cfg.cache_admission);
+            }
+            if cluster_cfg.cache_batch_queue > 1 {
+                println!(
+                    "batcher queue      {} (deadline {} ms)",
+                    cluster_cfg.cache_batch_queue, cluster_cfg.cache_batch_deadline_ms
+                );
             }
             println!("jobs completed     {}", report.completed.len());
             println!("sim time           {}", report.sim_end);
@@ -155,8 +164,22 @@ fn run(args: &[String]) -> Result<()> {
             let block_size = 64 * MB;
             let trace = h_svm_lru::workload::fig3_trace(block_size, cli.seed()?);
             let counts = doubling_shard_counts(max_shards);
-            let reports =
-                sharded_replay::run_sweep(&policy, &counts, blocks * block_size, &trace)?;
+            // Classify once for the sweep AND the optional reader arm —
+            // predictions depend on neither the shard count nor readers.
+            let classes =
+                sharded_replay::classify_trace(&trace, h_svm_lru::svm::KernelKind::Rbf, 64)?;
+            let reports = counts
+                .iter()
+                .map(|&n| {
+                    sharded_replay::run_with_classes(
+                        &policy,
+                        n,
+                        blocks * block_size,
+                        &trace,
+                        &classes,
+                    )
+                })
+                .collect::<Result<Vec<_>>>()?;
             emit(
                 &format!(
                     "Shard-parallel replay ({policy}, {} requests, cache = {blocks} \
@@ -171,6 +194,32 @@ fn run(args: &[String]) -> Result<()> {
                     "\nreplay speedup {}-shard over 1-shard: {:.2}x",
                     last.shards,
                     last.requests_per_sec() / first.requests_per_sec().max(1e-12)
+                );
+            }
+            // Reader-contention arm: replay once more at the max shard
+            // count with N threads hammering the lock-free stats path.
+            let readers = cli.readers(0)?;
+            if readers > 0 {
+                use h_svm_lru::cache::ShardedCache;
+                let cache =
+                    ShardedCache::from_registry(&policy, max_shards, blocks * block_size)
+                        .expect("policy validated above");
+                let t0 = std::time::Instant::now();
+                let (_, rr) = sharded_replay::replay_with_stats_readers(
+                    &cache, &trace, &classes, readers,
+                );
+                let wall = t0.elapsed();
+                println!(
+                    "\n{} stats reader(s) during the {max_shards}-shard replay: \
+                     {} consistent snapshots, {} inconsistencies, replay wall {:.2} ms",
+                    rr.readers,
+                    rr.snapshots,
+                    rr.inconsistencies,
+                    wall.as_secs_f64() * 1e3,
+                );
+                anyhow::ensure!(
+                    rr.inconsistencies == 0,
+                    "lock-free stats readers observed a torn snapshot"
                 );
             }
             Ok(())
@@ -228,6 +277,7 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         "online" => {
+            use h_svm_lru::coordinator::batcher::BatcherConfig;
             use h_svm_lru::coordinator::online::TrainerConfig;
             use h_svm_lru::experiments::online_sharded::{self, TrainerMode};
             use h_svm_lru::experiments::sharded_replay;
@@ -255,6 +305,26 @@ fn run(args: &[String]) -> Result<()> {
             let block_size = 64 * MB;
             let capacity = blocks * block_size;
             let trainer_cfg = TrainerConfig::default();
+            let default_batcher = BatcherConfig::default();
+            // Deadlines are simulated milliseconds (trace time), keeping
+            // seeded replays deterministic regardless of host speed.
+            let default_deadline_ms = default_batcher.deadline.micros() / 1000;
+            let batcher_cfg = BatcherConfig {
+                queue_depth: cli.batch_queue(default_batcher.queue_depth)?,
+                deadline: h_svm_lru::sim::SimDuration::from_micros(
+                    cli.batch_deadline_ms(default_deadline_ms)?.saturating_mul(1000),
+                ),
+                ..default_batcher
+            };
+            // The smoke parity assertion (frozen == classify-once) only
+            // holds when every cold query is answered inline.
+            if cli.switch("smoke") {
+                anyhow::ensure!(
+                    batcher_cfg.queue_depth == 1,
+                    "--smoke parity requires --batch-queue 1 (deferred predictions \
+                     intentionally diverge from the classify-once path)"
+                );
+            }
 
             // Smoke: just the requested policy at the full shard count
             // (the acceptance path). Full: an lru baseline next to the
@@ -280,6 +350,7 @@ fn run(args: &[String]) -> Result<()> {
                     trace,
                     kernel,
                     trainer_cfg,
+                    batcher_cfg,
                 )?;
                 emit(
                     &format!(
@@ -305,6 +376,15 @@ fn run(args: &[String]) -> Result<()> {
                     online.samples_sent,
                     online.samples_dropped,
                     online.samples_per_sec(),
+                );
+                println!(
+                    "cold path: {} cold queries, {} deferred, {} flushes \
+                     (mean {:.1} queries/flush), {} dropped",
+                    online.cold.cold_queries,
+                    online.cold.deferred,
+                    online.cold.flushes,
+                    online.cold.mean_flush_size(),
+                    online.cold.dropped,
                 );
                 // The acceptance criteria, enforced on the smoke path CI
                 // runs: the live trainer must actually publish, and the
@@ -342,6 +422,39 @@ fn run(args: &[String]) -> Result<()> {
                     );
                 }
             }
+            Ok(())
+        }
+        "bench-gate" => {
+            use anyhow::Context;
+            use h_svm_lru::bench_support::compare::{gate_files, render_report};
+            let baseline_dir = cli.flag("baseline").unwrap_or("BENCH_baseline");
+            let current_dir = cli.flag("current").unwrap_or("rust");
+            let tolerance: f64 = match cli.flag("tolerance") {
+                Some(s) => {
+                    let v: f64 = s.parse().context("bad --tolerance")?;
+                    anyhow::ensure!(
+                        v > 0.0 && v < 10.0,
+                        "--tolerance must be a relative fraction in (0, 10)"
+                    );
+                    v
+                }
+                None => 0.15,
+            };
+            let mut failed = false;
+            for suite in ["hotpath", "sharded", "online"] {
+                let file = format!("BENCH_{suite}.json");
+                let baseline = std::path::Path::new(baseline_dir).join(&file);
+                let current = std::path::Path::new(current_dir).join(&file);
+                let report = gate_files(&baseline, &current, tolerance)?;
+                print!("{}", render_report(&report, tolerance));
+                failed |= !report.passed();
+            }
+            anyhow::ensure!(
+                !failed,
+                "bench regression gate failed (rows above); if the slowdown is \
+                 intended, refresh BENCH_baseline/ from the bench-gate artifacts"
+            );
+            println!("bench gate: every tracked metric within tolerance");
             Ok(())
         }
         "policies" => {

@@ -85,6 +85,57 @@ where
     })
 }
 
+/// Run `worker(0..n_workers)` concurrently *plus* one polling monitor on
+/// the same scope, and return `(worker results, monitor result)`.
+///
+/// The monitor receives a `done` flag that flips to `true` (Release) once
+/// every worker has joined; it is expected to loop — observing shared
+/// state like lock-free cache stats — until the flag is set, then return.
+/// The reader-contention replay is the motivating shape: shard workers
+/// hammer a [`crate::cache::ShardedCache`] while the monitor loops
+/// `stats()` / `used()`, which must never serialize the workers.
+///
+/// Panics propagate from workers and monitor alike; the flag is set even
+/// when a worker panics, so the monitor always terminates.
+pub fn run_sharded_with_monitor<R, M, F, G>(
+    n_workers: usize,
+    worker: F,
+    monitor: G,
+) -> (Vec<R>, M)
+where
+    R: Send,
+    M: Send,
+    F: Fn(usize) -> R + Sync,
+    G: FnOnce(&std::sync::atomic::AtomicBool) -> M + Send,
+{
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    assert!(n_workers > 0, "run_sharded_with_monitor with zero workers");
+    let done = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let done = &done;
+        let mon = scope.spawn(move || monitor(done));
+        let worker = &worker;
+        let handles: Vec<_> = (0..n_workers)
+            .map(|i| scope.spawn(move || worker(i)))
+            .collect();
+        // Join every worker BEFORE propagating any panic: the monitor must
+        // see its stop signal even on worker failure, or the scope would
+        // never finish joining it.
+        let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+        done.store(true, Ordering::Release);
+        let m = mon.join().expect("monitor panicked");
+        let results: Vec<R> = joined
+            .into_iter()
+            .map(|r| match r {
+                Ok(v) => v,
+                Err(p) => std::panic::resume_unwind(p),
+            })
+            .collect();
+        (results, m)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -142,6 +193,55 @@ mod tests {
         assert_eq!(results, vec![0, 1, 2, 3]);
         let expected: u64 = (0..4u64).map(|w| (0..10).map(|k| w * 100 + k).sum::<u64>()).sum();
         assert_eq!(total, expected);
+    }
+
+    #[test]
+    fn monitor_observes_until_workers_finish() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let progress = AtomicU64::new(0);
+        let (results, polls) = run_sharded_with_monitor(
+            4,
+            |w| {
+                for _ in 0..1000 {
+                    progress.fetch_add(1, Ordering::Relaxed);
+                }
+                w
+            },
+            |done: &std::sync::atomic::AtomicBool| {
+                let mut polls = 0u64;
+                while !done.load(Ordering::Acquire) {
+                    let p = progress.load(Ordering::Relaxed);
+                    assert!(p <= 4000);
+                    polls += 1;
+                }
+                polls
+            },
+        );
+        assert_eq!(results, vec![0, 1, 2, 3]);
+        assert!(polls > 0, "monitor must have observed at least once");
+        assert_eq!(progress.load(Ordering::Relaxed), 4000);
+    }
+
+    #[test]
+    #[should_panic(expected = "monitor panicked")]
+    fn monitor_terminates_even_when_a_worker_panics() {
+        run_sharded_with_monitor(
+            2,
+            |i| {
+                if i == 1 {
+                    panic!("worker boom");
+                }
+                i
+            },
+            |done: &std::sync::atomic::AtomicBool| {
+                while !done.load(std::sync::atomic::Ordering::Acquire) {
+                    std::hint::spin_loop();
+                }
+                // The monitor sees the stop signal despite the worker
+                // panic; its own panic is what the harness reports first.
+                panic!("monitor saw shutdown");
+            },
+        );
     }
 
     #[test]

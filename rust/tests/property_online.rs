@@ -16,6 +16,7 @@ use std::sync::{Arc, Barrier};
 
 use h_svm_lru::cache::sharded::{shard_of, ShardStats, ShardedCache};
 use h_svm_lru::cache::{AccessContext, CacheAffinity};
+use h_svm_lru::coordinator::batcher::BatcherConfig;
 use h_svm_lru::coordinator::online::{SnapshotCell, SnapshotReader, TrainerConfig};
 use h_svm_lru::experiments::online_sharded::{run_online, TrainerMode as Mode};
 use h_svm_lru::experiments::sharded_replay::{classify_trace, run_with_classes};
@@ -123,6 +124,7 @@ fn online_without_publishes_matches_frozen_and_classify_once() {
             Mode::Online,
             KernelKind::Rbf,
             TrainerConfig::default(),
+            BatcherConfig::default(),
         )
         .unwrap();
         assert_eq!(online.trainer.publishes, 0, "single class must not train");
@@ -142,6 +144,7 @@ fn online_without_publishes_matches_frozen_and_classify_once() {
             Mode::Frozen,
             KernelKind::Rbf,
             TrainerConfig::default(),
+            BatcherConfig::default(),
         )
         .unwrap();
         assert_eq!(frozen.trainer.final_version, 0, "nothing to pretrain on");

@@ -102,6 +102,52 @@ impl CachePolicy for RefFifo {
     }
 }
 
+/// The original BTreeMap-ordered LFU ((frequency, last-access seq) keys
+/// re-inserted on every access; victim = first entry).
+#[derive(Default)]
+struct RefLfu {
+    order: BTreeMap<(u64, i64), BlockId>,
+    index: HashMap<BlockId, (u64, i64)>,
+    seq: i64,
+}
+
+impl RefLfu {
+    fn bump(&mut self, block: BlockId, add: u64) {
+        let (freq, old_seq) = self.index.remove(&block).unwrap_or((0, 0));
+        if freq > 0 || old_seq != 0 {
+            self.order.remove(&(freq, old_seq));
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        let entry = (freq + add, seq);
+        self.order.insert(entry, block);
+        self.index.insert(block, entry);
+    }
+}
+
+impl CachePolicy for RefLfu {
+    fn name(&self) -> &'static str {
+        "ref-lfu"
+    }
+    fn on_hit(&mut self, block: BlockId, _ctx: &AccessContext) {
+        self.bump(block, 1);
+    }
+    fn on_insert(&mut self, block: BlockId, _ctx: &AccessContext) {
+        self.bump(block, 1);
+    }
+    fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
+        self.order.values().next().copied()
+    }
+    fn on_evict(&mut self, block: BlockId) {
+        if let Some(entry) = self.index.remove(&block) {
+            self.order.remove(&entry);
+        }
+    }
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+}
+
 /// The original two-BTreeMap H-SVM-LRU.
 #[derive(Clone, Copy, PartialEq, Eq)]
 enum RefRegion {
@@ -486,6 +532,20 @@ fn fifo_matches_btreemap_reference() {
         assert_trace_parity(
             BlockCache::new(registry_policy("fifo"), 24),
             BlockCache::new(Box::<RefFifo>::default(), 24),
+            seed,
+        );
+    }
+}
+
+#[test]
+fn lfu_matches_btreemap_reference() {
+    // The O(1) frequency-bucket LFU must be access-for-access identical
+    // to the per-access BTreeMap re-key implementation it replaced
+    // (frequency order, recency tie-break, eviction resets — all of it).
+    for seed in 0..6u64 {
+        assert_trace_parity(
+            BlockCache::new(registry_policy("lfu"), 24),
+            BlockCache::new(Box::<RefLfu>::default(), 24),
             seed,
         );
     }

@@ -6,7 +6,7 @@ use h_svm_lru::cache::registry::{make_policy, POLICY_NAMES};
 use h_svm_lru::cache::sharded::{shard_of, ShardStats, ShardedCache};
 use h_svm_lru::cache::{AccessContext, BlockCache};
 use h_svm_lru::hdfs::BlockId;
-use h_svm_lru::sim::parallel::run_sharded;
+use h_svm_lru::sim::parallel::{run_sharded, run_sharded_with_monitor};
 use h_svm_lru::sim::SimTime;
 use h_svm_lru::testkit::{forall, CacheOpsGen, Config};
 
@@ -162,6 +162,119 @@ fn parallel_shard_replay_matches_sequential_replay() {
             },
         );
     }
+}
+
+/// The lock-split acceptance property: writer threads hammer one
+/// `ShardedCache` while reader threads loop the lock-free stats path the
+/// whole time. Every snapshot a reader takes must be internally
+/// consistent — `hits + misses == requests` (merged and per shard),
+/// `used() <= capacity()`, requests monotone — and the final merged
+/// stats must equal a sequential replay of the same stream.
+#[test]
+fn concurrent_stats_readers_stay_consistent_with_writers() {
+    let shards = 4usize;
+    let capacity = 32u64;
+    let ops: Vec<(u64, bool)> = {
+        // Deterministic mixed stream: hot head + scattered tail.
+        (0..6_000u64)
+            .map(|t| {
+                let key = if t % 3 == 0 { t % 7 } else { (t * 7919) % 96 };
+                (key, key % 2 == 0)
+            })
+            .collect()
+    };
+
+    // Sequential ground truth (shards are independent, so the sequential
+    // replay sees exactly the per-shard streams the workers will).
+    let sequential = sharded("lru", shards, capacity);
+    for (t, (key, reuse)) in ops.iter().enumerate() {
+        sequential.access_or_insert(BlockId(*key), &ctx(t as u64, *reuse));
+    }
+
+    let concurrent = sharded("lru", shards, capacity);
+    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); shards];
+    for (i, (key, _)) in ops.iter().enumerate() {
+        parts[shard_of(BlockId(*key), shards)].push(i);
+    }
+    let concurrent_ref = &concurrent;
+    let (per_shard, reader_stats) = run_sharded_with_monitor(
+        shards,
+        |w| {
+            for &i in &parts[w] {
+                let (key, reuse) = ops[i];
+                concurrent_ref.access_or_insert(BlockId(key), &ctx(i as u64, reuse));
+            }
+            concurrent_ref.stats_of(w)
+        },
+        |done: &std::sync::atomic::AtomicBool| {
+            std::thread::scope(|scope| {
+                let readers: Vec<_> = (0..3)
+                    .map(|_| {
+                        scope.spawn(move || {
+                            let mut snapshots = 0u64;
+                            let mut last_requests = 0u64;
+                            // do-while: at least one snapshot even if the
+                            // workers win the race outright.
+                            loop {
+                                let merged = concurrent_ref.stats();
+                                assert_eq!(
+                                    merged.hits + merged.misses,
+                                    merged.requests,
+                                    "torn merged snapshot"
+                                );
+                                assert!(
+                                    merged.requests >= last_requests,
+                                    "merged requests went backwards"
+                                );
+                                last_requests = merged.requests;
+                                assert!(
+                                    concurrent_ref.used() <= concurrent_ref.capacity(),
+                                    "occupancy over capacity"
+                                );
+                                for s in 0..shards {
+                                    let snap = concurrent_ref.snapshot_of(s);
+                                    assert_eq!(
+                                        snap.stats.hits + snap.stats.misses,
+                                        snap.stats.requests,
+                                        "torn shard snapshot"
+                                    );
+                                    assert_eq!(
+                                        snap.stats.insertions - snap.stats.evictions,
+                                        snap.blocks,
+                                        "counters and occupancy decoupled"
+                                    );
+                                }
+                                snapshots += 1;
+                                if done.load(std::sync::atomic::Ordering::Acquire) {
+                                    break;
+                                }
+                            }
+                            snapshots
+                        })
+                    })
+                    .collect();
+                readers
+                    .into_iter()
+                    .map(|h| h.join().expect("stats reader panicked"))
+                    .sum::<u64>()
+            })
+        },
+    );
+    assert!(reader_stats > 0, "readers must have snapshotted mid-replay");
+
+    let mut merged = ShardStats::default();
+    for s in &per_shard {
+        merged.merge(s);
+    }
+    assert_eq!(merged, concurrent.stats(), "worker-held stats disagree with merged");
+    assert_eq!(merged.requests, ops.len() as u64);
+    assert_eq!(
+        concurrent.stats(),
+        sequential.stats(),
+        "final merged stats must equal the sequential replay"
+    );
+    assert_eq!(concurrent.cached_blocks(), sequential.cached_blocks());
+    assert_eq!(concurrent.used(), sequential.used());
 }
 
 /// The shard router: total (every block routed), stable, in range, and
