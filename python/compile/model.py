@@ -37,7 +37,7 @@ from .kernels.ref import gram_matrix_ref
 
 # AOT artifact shapes (must match rust/src/runtime/artifacts.rs).
 N_TRAIN = 256
-N_FEATURES = 8
+N_FEATURES = 9
 N_PREDICT_BATCH = 64
 
 # Baked hyper-parameters (one artifact family; see aot.py variants).

@@ -1,0 +1,74 @@
+//! End-to-end cost of the DAG replay (`experiments::dag_replay`), held as
+//! regression lines:
+//!
+//! 1. **A classifier-less pass is cheap.** One diamond-suite replay drives
+//!    every stage through the MapReduce scheduler and the sharded cache —
+//!    the whole pass must stay in event-loop territory, not blow up with
+//!    the per-access cost plumbing (`AccessContext::recompute_cost`, the
+//!    `CostAware` tie-break).
+//! 2. **Classify-once stays two passes + one training.** The full
+//!    `run_dag` adds ground-truth labeling, one SMO training over the
+//!    pass-A log and a scored pass B; its wall is bounded by a small
+//!    multiple of the classifier-less pass plus the train cost tracked in
+//!    `bench_hotpath`.
+//!
+//! Flags: `--json` writes BENCH_dag.json (compared against
+//! `BENCH_baseline/BENCH_dag.json` by the CI bench-gate job), `--quick`
+//! drops to CI-smoke job counts.
+
+use h_svm_lru::bench_support::{banner, black_box, write_json, Bencher};
+use h_svm_lru::config::ClusterConfig;
+use h_svm_lru::experiments::dag_replay::{run_dag, run_dag_pass};
+use h_svm_lru::svm::kernel::KernelKind;
+use h_svm_lru::workload::{chain_suite, diamond_suite};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json = args.iter().any(|a| a == "--json");
+    let quick = args.iter().any(|a| a == "--quick");
+
+    let bench = if quick { Bencher::new(1, 3) } else { Bencher::new(2, 10) };
+    let n_jobs = if quick { 2 } else { 4 };
+
+    let cfg = ClusterConfig::default();
+    let capacity = 16 * cfg.block_size;
+    let seed = 7u64;
+    let mut results = Vec::new();
+
+    banner(&format!(
+        "DAG replay — {n_jobs} concurrent jobs, 16-block cache, 4 shards"
+    ));
+
+    let diamond = diamond_suite(n_jobs, 4, 8);
+    let res = bench.run("diamond pass, lru (no classifier)", || {
+        black_box(
+            run_dag_pass("lru", &cfg, 4, capacity, &diamond, seed, &[]).expect("replay"),
+        );
+    });
+    println!("{}", res.report());
+    results.push(res);
+
+    let res = bench.run("diamond classify-once, h-svm-lru", || {
+        black_box(
+            run_dag("h-svm-lru", &cfg, 4, capacity, &diamond, seed, KernelKind::Rbf, 64)
+                .expect("replay"),
+        );
+    });
+    println!("{}", res.report());
+    results.push(res);
+
+    let chain = chain_suite(n_jobs, 3);
+    let res = bench.run("chain pass, lru-cost tie-break", || {
+        black_box(
+            run_dag_pass("lru-cost", &cfg, 4, capacity, &chain, seed, &[]).expect("replay"),
+        );
+    });
+    println!("{}", res.report());
+    results.push(res);
+
+    if json {
+        let path = "BENCH_dag.json";
+        write_json(path, "dag", &results).expect("writing bench json");
+        println!("\nwrote {path} ({} results)", results.len());
+    }
+}

@@ -172,6 +172,7 @@ impl Doorkeeper {
         newly
     }
 
+    /// Whether the doorkeeper has (probabilistically) seen `block`.
     pub fn contains(&self, block: BlockId) -> bool {
         self.probes(block.0)
             .iter()

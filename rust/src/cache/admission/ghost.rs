@@ -43,6 +43,7 @@ impl GhostProbation {
         self.ghost.len()
     }
 
+    /// Whether the ghost list is empty.
     pub fn is_empty(&self) -> bool {
         self.ghost.is_empty()
     }
@@ -53,6 +54,7 @@ impl GhostProbation {
         self.capacity
     }
 
+    /// Whether `block` is on ghost probation.
     pub fn contains(&self, block: BlockId) -> bool {
         self.ghost.contains(block)
     }

@@ -27,9 +27,13 @@
 //! instance, so admission state is updated under the shard lock the access
 //! already holds and the hot path stays lock-free across shards.
 
+/// Count-Min frequency sketch + doorkeeper Bloom filter.
 pub mod frequency;
+/// Ghost-LRU probation admission.
 pub mod ghost;
+/// SVM-prediction admission.
 pub mod svm_admit;
+/// W-TinyLFU-style frequency-duel admission.
 pub mod tinylfu;
 
 pub use frequency::{Doorkeeper, FrequencySketch};
@@ -45,7 +49,21 @@ use super::AccessContext;
 ///
 /// Implementations must be cheap: `on_access` sits on the per-request hot
 /// path of every shard.
+///
+/// ```
+/// use h_svm_lru::cache::admission::{AdmissionPolicy, AlwaysAdmit};
+/// use h_svm_lru::cache::AccessContext;
+/// use h_svm_lru::hdfs::BlockId;
+/// use h_svm_lru::sim::SimTime;
+///
+/// let mut gate: Box<dyn AdmissionPolicy> = Box::new(AlwaysAdmit);
+/// let ctx = AccessContext::simple(SimTime(0), 64);
+/// gate.on_access(BlockId(1), &ctx);
+/// // `always` admits without ever probing the victim it would displace.
+/// assert!(gate.admit(BlockId(1), &ctx, &mut || None));
+/// ```
 pub trait AdmissionPolicy: Send {
+    /// Registry name of the policy (e.g. `"tinylfu"`).
     fn name(&self) -> &'static str;
 
     /// Every cache request for `block` — hit, miss or prefetch staging —
@@ -90,11 +108,14 @@ pub trait AdmissionPolicy: Send {
 /// bucket.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct AdmissionStats {
+    /// Inserts the admission layer allowed end to end.
     pub admitted: u64,
+    /// Candidates it vetoed.
     pub rejected: u64,
 }
 
 impl AdmissionStats {
+    /// Add `other`'s counters into `self`.
     pub fn merge(&mut self, other: &AdmissionStats) {
         self.admitted += other.admitted;
         self.rejected += other.rejected;

@@ -18,6 +18,8 @@ struct Entry {
     lru_seq: u64,
 }
 
+/// Affinity-weighted LFU: victim = lowest `affinity x frequency`, LRU
+/// tie-break.
 #[derive(Debug, Default)]
 pub struct AffinityAware {
     entries: HashMap<BlockId, Entry>,
@@ -25,6 +27,7 @@ pub struct AffinityAware {
 }
 
 impl AffinityAware {
+    /// Empty policy state.
     pub fn new() -> Self {
         Self::default()
     }
@@ -33,6 +36,7 @@ impl AffinityAware {
         e.affinity * e.frequency as f64
     }
 
+    /// Current `affinity x frequency` benefit of a tracked block.
     pub fn benefit_of(&self, block: BlockId) -> Option<f64> {
         self.entries.get(&block).map(Self::benefit)
     }

@@ -26,6 +26,7 @@ enum List {
     Frequent, // T2
 }
 
+/// Modified ARC: adaptive recent/frequent lists with ghost histories.
 #[derive(Debug)]
 pub struct ModifiedArc {
     t1: OrderList<BlockId>,
@@ -40,6 +41,7 @@ pub struct ModifiedArc {
 }
 
 impl ModifiedArc {
+    /// Create an empty policy; `ghost_cap` bounds each ghost history.
     pub fn new(ghost_cap: usize) -> Self {
         ModifiedArc {
             t1: OrderList::new(),
@@ -61,14 +63,17 @@ impl ModifiedArc {
         ghost.trim_to(cap);
     }
 
+    /// Number of blocks in the recent (T1) list.
     pub fn recent_len(&self) -> usize {
         self.t1.len()
     }
 
+    /// Number of blocks in the frequent (T2) list.
     pub fn frequent_len(&self) -> usize {
         self.t2.len()
     }
 
+    /// Current adaptive target size for the recent list, in blocks.
     pub fn target_recent(&self) -> f64 {
         self.p
     }
@@ -122,6 +127,16 @@ impl CachePolicy for ModifiedArc {
         } else {
             self.t2.front().or_else(|| self.t1.front())
         }
+    }
+
+    fn victim_candidates(&mut self, _now: SimTime, k: usize) -> Vec<BlockId> {
+        // Same list preference as `choose_victim`, extended to a window:
+        // drain the preferred list front-to-back, then the other.
+        let prefer_recent =
+            !self.t1.is_empty() && (self.t1.len() as f64 > self.p || self.t2.is_empty());
+        let (first, second) =
+            if prefer_recent { (&self.t1, &self.t2) } else { (&self.t2, &self.t1) };
+        first.iter().chain(second.iter()).take(k).collect()
     }
 
     fn on_evict(&mut self, block: BlockId) {

@@ -25,6 +25,8 @@ struct Entry {
     predicted_reuse: Option<bool>,
 }
 
+/// Logistic-scored eviction over frequency/recency/affinity/SVM-hint
+/// features; victim = lowest predicted re-reference probability.
 #[derive(Debug)]
 pub struct AutoCache {
     entries: HashMap<BlockId, Entry>,
@@ -41,6 +43,7 @@ impl Default for AutoCache {
 }
 
 impl AutoCache {
+    /// Policy with the default prior weights.
     pub fn new() -> Self {
         AutoCache {
             entries: HashMap::new(),

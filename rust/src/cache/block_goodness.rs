@@ -1,7 +1,10 @@
 //! Block-goodness-aware replacement (paper §3.1 / [12]): each cached block
 //! carries a *block goodness* (BG) value combining its access count with the
-//! cache affinity of the MapReduce application(s) reading it. The victim is
-//! the block with the lowest BG; ties go to the oldest access time.
+//! cache affinity of the MapReduce application(s) reading it, scaled by how
+//! expensive the block is to regenerate (DAG stage outputs carry a nonzero
+//! recompute cost; disk-backed blocks contribute a neutral factor of 1).
+//! The victim is the block with the lowest BG; ties go to the oldest access
+//! time.
 
 use std::collections::HashMap;
 
@@ -15,25 +18,32 @@ struct Entry {
     accesses: u64,
     /// Highest affinity weight among apps that touched the block.
     affinity: f64,
+    /// Highest recompute cost (seconds) reported for the block.
+    recompute_cost: f64,
     last_access: SimTime,
 }
 
 impl Entry {
     fn goodness(&self) -> f64 {
-        self.accesses as f64 * self.affinity
+        // Zero-cost blocks keep the original accesses x affinity value, so
+        // flat traces (which always report cost 0) are unaffected.
+        self.accesses as f64 * self.affinity * (1.0 + self.recompute_cost)
     }
 }
 
+/// Block-goodness replacement: victim = lowest accesses x affinity x cost.
 #[derive(Debug, Default)]
 pub struct BlockGoodness {
     entries: HashMap<BlockId, Entry>,
 }
 
 impl BlockGoodness {
+    /// Create an empty block-goodness policy.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Current BG value for `block` (None when untracked).
     pub fn goodness_of(&self, block: BlockId) -> Option<f64> {
         self.entries.get(&block).map(Entry::goodness)
     }
@@ -48,6 +58,7 @@ impl CachePolicy for BlockGoodness {
         let e = self.entries.get_mut(&block).expect("hit on untracked block");
         e.accesses += 1;
         e.affinity = e.affinity.max(ctx.affinity.weight());
+        e.recompute_cost = e.recompute_cost.max(ctx.recompute_cost);
         e.last_access = ctx.time;
     }
 
@@ -55,7 +66,12 @@ impl CachePolicy for BlockGoodness {
         debug_assert!(!self.entries.contains_key(&block), "double insert");
         self.entries.insert(
             block,
-            Entry { accesses: 1, affinity: ctx.affinity.weight(), last_access: ctx.time },
+            Entry {
+                accesses: 1,
+                affinity: ctx.affinity.weight(),
+                recompute_cost: ctx.recompute_cost,
+                last_access: ctx.time,
+            },
         );
     }
 
@@ -112,6 +128,26 @@ mod tests {
         // Equal BG -> the oldest access time (block 1) is discarded first,
         // exactly the paper's tiebreak.
         assert_eq!(p.choose_victim(SimTime(3)), Some(BlockId(1)));
+    }
+
+    #[test]
+    fn recompute_cost_protects_expensive_blocks() {
+        let mut p = BlockGoodness::new();
+        let costly = |t: u64, cost: f64| {
+            let mut c = ctx(t, CacheAffinity::Medium);
+            c.recompute_cost = cost;
+            c
+        };
+        // Same affinity and access count; block 2 is expensive to rebuild.
+        p.on_insert(BlockId(1), &costly(1, 0.0));
+        p.on_insert(BlockId(2), &costly(2, 30.0));
+        p.on_insert(BlockId(3), &costly(3, 0.0));
+        // BG: 1 -> 0.5, 2 -> 0.5 * 31, 3 -> 0.5; tie between 1 and 3 goes
+        // to the oldest access, and 2 outlives both.
+        assert_eq!(p.choose_victim(SimTime(4)), Some(BlockId(1)));
+        p.on_evict(BlockId(1));
+        assert_eq!(p.choose_victim(SimTime(5)), Some(BlockId(3)));
+        assert!((p.goodness_of(BlockId(2)).unwrap() - 15.5).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,186 @@
+//! Cost-aware victim tie-break: a wrapper that makes any base policy
+//! prefer evicting cheap-to-recompute blocks.
+//!
+//! DAG stage outputs (workload::dag) are cache-only — a miss on an evicted
+//! intermediate block re-runs part of the producing stage and charges its
+//! recompute cost to simulated job time. A cost-blind policy treats a
+//! 0-cost scan block and a 60-second-to-rebuild shuffle product as equal
+//! victims. [`CostAware`] keeps the base policy's eviction order but, among
+//! the first `k` candidates of that order ([`CachePolicy::victim_candidates`]),
+//! picks the one with the lowest recorded recompute cost. With uniform
+//! costs (e.g. a flat trace where every cost is 0.0) the first candidate
+//! wins the min and the wrapper is bit-identical to the base policy.
+//!
+//! `choose_victim` must stay idempotent and non-mutating between evictions:
+//! `BlockCache::insert` probes the victim lazily and may consult it again
+//! before confirming with `on_evict` — re-ranking a read-only candidate
+//! window preserves that contract as long as the base policy's
+//! `victim_candidates` does (all in-tree overrides are pure reads).
+//!
+//! Registered as `lru-cost`, `lfu-cost` and `arc-cost` in
+//! [`super::registry`].
+
+use crate::hdfs::BlockId;
+use crate::sim::SimTime;
+use crate::util::fasthash::IdHashMap;
+
+use super::{AccessContext, CachePolicy};
+
+/// How many blocks of the base policy's eviction order the tie-break may
+/// reorder. Small by design: the wrapper trades at most `k - 1` positions
+/// of the base order for cost, so a hot block can never be sacrificed for
+/// an arbitrarily cold expensive one.
+pub const DEFAULT_CANDIDATE_WINDOW: usize = 4;
+
+/// Wraps a base [`CachePolicy`] and re-ranks its victim window by
+/// recompute cost (cheapest evicted first).
+pub struct CostAware {
+    inner: Box<dyn CachePolicy>,
+    name: &'static str,
+    /// Last recompute cost reported for each tracked block.
+    costs: IdHashMap<BlockId, f64>,
+    k: usize,
+}
+
+impl CostAware {
+    /// Wrap `inner`, reporting `name` (the registry key, e.g. "lru-cost").
+    pub fn new(inner: Box<dyn CachePolicy>, name: &'static str) -> Self {
+        CostAware { inner, name, costs: IdHashMap::default(), k: DEFAULT_CANDIDATE_WINDOW }
+    }
+
+    /// Override the candidate-window size (`k >= 1`).
+    pub fn with_window(mut self, k: usize) -> Self {
+        self.k = k.max(1);
+        self
+    }
+
+    /// The recompute cost currently recorded for `block`.
+    pub fn cost_of(&self, block: BlockId) -> Option<f64> {
+        self.costs.get(&block).copied()
+    }
+}
+
+impl CachePolicy for CostAware {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn on_hit(&mut self, block: BlockId, ctx: &AccessContext) {
+        self.costs.insert(block, ctx.recompute_cost);
+        self.inner.on_hit(block, ctx);
+    }
+
+    fn on_insert(&mut self, block: BlockId, ctx: &AccessContext) {
+        self.costs.insert(block, ctx.recompute_cost);
+        self.inner.on_insert(block, ctx);
+    }
+
+    fn choose_victim(&mut self, now: SimTime) -> Option<BlockId> {
+        // Min cost over the candidate window; the window is ordered best
+        // victim first, so strict `<` keeps the base policy's choice on
+        // ties — uniform costs degrade to exactly the base policy.
+        let mut best: Option<(BlockId, f64)> = None;
+        for b in self.inner.victim_candidates(now, self.k) {
+            let cost = self.costs.get(&b).copied().unwrap_or(0.0);
+            match best {
+                Some((_, c)) if cost >= c => {}
+                _ => best = Some((b, cost)),
+            }
+        }
+        best.map(|(b, _)| b)
+    }
+
+    fn victim_candidates(&mut self, now: SimTime, k: usize) -> Vec<BlockId> {
+        // Expose the re-ranked window so stacked wrappers see the same
+        // order this policy would actually evict in.
+        let mut window = self.inner.victim_candidates(now, self.k.max(k));
+        let costs = &self.costs;
+        window.sort_by(|a, b| {
+            let ca = costs.get(a).copied().unwrap_or(0.0);
+            let cb = costs.get(b).copied().unwrap_or(0.0);
+            ca.partial_cmp(&cb).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        window.truncate(k);
+        window
+    }
+
+    fn on_evict(&mut self, block: BlockId) {
+        self.costs.remove(&block);
+        self.inner.on_evict(block);
+    }
+
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    fn admits(&self, block: BlockId, ctx: &AccessContext) -> bool {
+        self.inner.admits(block, ctx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lru::Lru;
+    use super::*;
+
+    fn ctx(t: u64, cost: f64) -> AccessContext {
+        AccessContext::simple(SimTime(t), 1).with_recompute_cost(cost)
+    }
+
+    #[test]
+    fn uniform_costs_match_base_policy() {
+        let mut base = Lru::new();
+        let mut wrapped = CostAware::new(Box::new(Lru::new()), "lru-cost");
+        for i in 0..8u64 {
+            base.on_insert(BlockId(i), &ctx(i, 0.0));
+            wrapped.on_insert(BlockId(i), &ctx(i, 0.0));
+        }
+        base.on_hit(BlockId(2), &ctx(10, 0.0));
+        wrapped.on_hit(BlockId(2), &ctx(10, 0.0));
+        for t in 11..17u64 {
+            let want = base.choose_victim(SimTime(t));
+            assert_eq!(wrapped.choose_victim(SimTime(t)), want);
+            base.on_evict(want.unwrap());
+            wrapped.on_evict(want.unwrap());
+        }
+    }
+
+    #[test]
+    fn cheap_block_evicted_before_expensive_older_one() {
+        let mut p = CostAware::new(Box::new(Lru::new()), "lru-cost");
+        p.on_insert(BlockId(1), &ctx(1, 45.0)); // LRU-oldest but expensive
+        p.on_insert(BlockId(2), &ctx(2, 0.0));
+        p.on_insert(BlockId(3), &ctx(3, 45.0));
+        // Plain LRU would pick 1; the cost tie-break picks the free block.
+        assert_eq!(p.choose_victim(SimTime(4)), Some(BlockId(2)));
+        // Idempotent until the eviction is confirmed.
+        assert_eq!(p.choose_victim(SimTime(5)), Some(BlockId(2)));
+        p.on_evict(BlockId(2));
+        // Only expensive blocks left: back to the base LRU order.
+        assert_eq!(p.choose_victim(SimTime(6)), Some(BlockId(1)));
+    }
+
+    #[test]
+    fn window_bounds_the_reordering() {
+        // The expensive block is protected only while it sits inside the
+        // k-block window; beyond that the base order rules.
+        let mut p = CostAware::new(Box::new(Lru::new()), "lru-cost").with_window(2);
+        p.on_insert(BlockId(1), &ctx(1, 99.0));
+        p.on_insert(BlockId(2), &ctx(2, 99.0));
+        p.on_insert(BlockId(3), &ctx(3, 0.0)); // cheap, but outside k=2
+        assert_eq!(p.choose_victim(SimTime(4)), Some(BlockId(1)));
+    }
+
+    #[test]
+    fn candidate_window_is_cost_sorted() {
+        let mut p = CostAware::new(Box::new(Lru::new()), "lru-cost");
+        p.on_insert(BlockId(1), &ctx(1, 30.0));
+        p.on_insert(BlockId(2), &ctx(2, 0.0));
+        p.on_insert(BlockId(3), &ctx(3, 10.0));
+        assert_eq!(
+            p.victim_candidates(SimTime(4), 3),
+            vec![BlockId(2), BlockId(3), BlockId(1)]
+        );
+        assert_eq!(p.cost_of(BlockId(3)), Some(10.0));
+    }
+}

@@ -17,6 +17,8 @@ struct Entry {
     last: SimTime,
 }
 
+/// Exponential-decay (EXD) scoring: each hit adds 1 to a score that
+/// decays as `exp(-beta * dt)`; victim = lowest decayed score.
 #[derive(Debug)]
 pub struct Exd {
     beta: f64,
@@ -36,6 +38,7 @@ impl Exd {
         e.score * (-self.beta * dt).exp()
     }
 
+    /// The block's decayed score at `now`.
     pub fn score_of(&self, block: BlockId, now: SimTime) -> Option<f64> {
         self.entries.get(&block).map(|e| self.decayed_score(e, now))
     }

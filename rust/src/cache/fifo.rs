@@ -11,6 +11,7 @@ use crate::sim::SimTime;
 use super::order_list::{OrderHandle, OrderList};
 use super::{AccessContext, CachePolicy};
 
+/// First-in-first-out: victim = oldest insertion; hits never re-order.
 #[derive(Debug, Default)]
 pub struct Fifo {
     order: OrderList<BlockId>,
@@ -18,6 +19,7 @@ pub struct Fifo {
 }
 
 impl Fifo {
+    /// Empty policy state.
     pub fn new() -> Self {
         Self::default()
     }

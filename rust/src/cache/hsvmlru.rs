@@ -40,6 +40,7 @@ enum Region {
     Reused,
 }
 
+/// The paper's two-region SVM-guided LRU (Algorithm 1).
 #[derive(Debug, Default)]
 pub struct HSvmLru {
     unused: OrderList<BlockId>,
@@ -48,6 +49,7 @@ pub struct HSvmLru {
 }
 
 impl HSvmLru {
+    /// Create an empty H-SVM-LRU policy.
     pub fn new() -> Self {
         Self::default()
     }
@@ -85,10 +87,12 @@ impl HSvmLru {
         self.unused.iter().chain(self.reused.iter()).collect()
     }
 
+    /// Number of blocks currently in the unused (evict-first) region.
     pub fn n_unused(&self) -> usize {
         self.unused.len()
     }
 
+    /// Number of blocks currently in the protected reused region.
     pub fn n_reused(&self) -> usize {
         self.reused.len()
     }
@@ -125,6 +129,10 @@ impl CachePolicy for HSvmLru {
     fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
         // Victim = top of the cache: the unused region drains first.
         self.unused.front().or_else(|| self.reused.front())
+    }
+
+    fn victim_candidates(&mut self, _now: SimTime, k: usize) -> Vec<BlockId> {
+        self.unused.iter().chain(self.reused.iter()).take(k).collect()
     }
 
     fn on_evict(&mut self, block: BlockId) {

@@ -45,6 +45,7 @@ struct BlockSlot {
     member: OrderHandle,
 }
 
+/// Least-frequently-used replacement with O(1) frequency buckets.
 #[derive(Debug, Default)]
 pub struct Lfu {
     /// Live bucket slab indices in ascending frequency order.
@@ -57,6 +58,7 @@ pub struct Lfu {
 }
 
 impl Lfu {
+    /// Create an empty LFU policy.
     pub fn new() -> Self {
         Self::default()
     }
@@ -144,6 +146,7 @@ impl Lfu {
         }
     }
 
+    /// Access count the policy holds for `block` (0 when untracked).
     pub fn frequency(&self, block: BlockId) -> u64 {
         self.index
             .get(&block)
@@ -170,6 +173,21 @@ impl CachePolicy for Lfu {
     fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
         let front = self.bucket_order.front()?;
         self.buckets[front as usize].members.front()
+    }
+
+    fn victim_candidates(&mut self, _now: SimTime, k: usize) -> Vec<BlockId> {
+        // Ascending frequency, then least recently bumped within a bucket —
+        // the exact order repeated `choose_victim`/`on_evict` would produce.
+        let mut out = Vec::with_capacity(k.min(self.index.len()));
+        for idx in self.bucket_order.iter() {
+            for b in self.buckets[idx as usize].members.iter() {
+                if out.len() == k {
+                    return out;
+                }
+                out.push(b);
+            }
+        }
+        out
     }
 
     fn on_evict(&mut self, block: BlockId) {

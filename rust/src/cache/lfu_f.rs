@@ -16,6 +16,8 @@ struct Entry {
     accesses: u64,
 }
 
+/// LFU-F: frequency-based eviction that protects incomplete files
+/// inside the aging window (all-or-nothing file caching pressure).
 #[derive(Debug)]
 pub struct LfuF {
     entries: HashMap<BlockId, Entry>,
@@ -23,6 +25,7 @@ pub struct LfuF {
 }
 
 impl LfuF {
+    /// Policy with the given aging window.
     pub fn new(window: SimDuration) -> Self {
         LfuF { entries: HashMap::new(), window }
     }

@@ -19,6 +19,8 @@ struct Entry {
     accesses: u64,
 }
 
+/// LIFE (PacMan): evict from the widest incomplete wave first, with an
+/// aging window against pollution.
 #[derive(Debug)]
 pub struct Life {
     entries: HashMap<BlockId, Entry>,
@@ -28,6 +30,7 @@ pub struct Life {
 }
 
 impl Life {
+    /// Policy with the given aging window.
     pub fn new(window: SimDuration) -> Self {
         Life { entries: HashMap::new(), window }
     }

@@ -16,6 +16,7 @@ use crate::sim::SimTime;
 use super::order_list::{OrderHandle, OrderList};
 use super::{AccessContext, CachePolicy};
 
+/// Classic least-recently-used replacement (the paper's H-LRU baseline).
 #[derive(Debug, Default)]
 pub struct Lru {
     /// Eviction order: front = least recently used.
@@ -25,6 +26,7 @@ pub struct Lru {
 }
 
 impl Lru {
+    /// Create an empty LRU policy.
     pub fn new() -> Self {
         Self::default()
     }
@@ -61,6 +63,10 @@ impl CachePolicy for Lru {
 
     fn choose_victim(&mut self, _now: SimTime) -> Option<BlockId> {
         self.order.front()
+    }
+
+    fn victim_candidates(&mut self, _now: SimTime, k: usize) -> Vec<BlockId> {
+        self.order.iter().take(k).collect()
     }
 
     fn on_evict(&mut self, block: BlockId) {

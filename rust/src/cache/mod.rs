@@ -16,9 +16,10 @@
 //! | `arc`             | Modified ARC: recent/frequent + ghost histories |
 //! | `slru_k`          | Selective LRU-K |
 //! | `exd`             | Exponential-Decay score |
-//! | `block_goodness`  | block-goodness (affinity x access count) |
+//! | `block_goodness`  | block-goodness (affinity x access count x recompute cost) |
 //! | `affinity_aware`  | cache-affinity-aware caching benefit |
 //! | `autocache`       | AutoCache-style probability score + watermarks |
+//! | `cost_aware`      | recompute-cost re-ranking wrapper (`lru-cost`, `lfu-cost`, `arc-cost`) |
 //!
 //! In front of any policy sits an [`admission`] layer
 //! ([`admission::AdmissionPolicy`]): insert-time pollution control that can
@@ -33,23 +34,43 @@
 //! `lfu` runs on O(1) frequency buckets built from the same list (an
 //! ordered chain of per-frequency `OrderList`s).
 
+/// Insert-time admission policies (pollution control in front of eviction).
 pub mod admission;
+/// Cache-affinity-aware caching benefit policy.
 pub mod affinity_aware;
+/// Modified ARC: recent/frequent lists with ghost histories.
 pub mod arc;
+/// AutoCache-style probability score with high/low watermarks.
 pub mod autocache;
+/// Block-goodness score: affinity × access count × recompute cost.
 pub mod block_goodness;
+/// Recompute-cost re-ranking wrapper around any base policy.
+pub mod cost_aware;
+/// Exponential-decay score policy.
 pub mod exd;
+/// Insertion-order FIFO baseline.
 pub mod fifo;
+/// H-SVM-LRU — the paper's Algorithm 1 (class-aware two-region LRU).
 pub mod hsvmlru;
+/// PacMan LIFE: largest wave-width first.
 pub mod life;
+/// Least-frequently-used with O(1) frequency buckets.
 pub mod lfu;
+/// PacMan LFU-F: window-aged frequency.
 pub mod lfu_f;
+/// Classic LRU (the paper's baseline).
 pub mod lru;
+/// Slab-backed intrusive doubly-linked list used by the ordered policies.
 pub mod order_list;
+/// Name → policy constructor registry (`POLICY_NAMES` / `make_policy`).
 pub mod registry;
+/// Lock-free per-shard statistics (seqlock snapshots).
 pub mod shard_stats;
+/// Hash-sharded concurrent cache front over per-shard `BlockCache`s.
 pub mod sharded;
+/// Selective LRU-K.
 pub mod slru_k;
+/// EDACHE WSClock: reference-bit clock with an age threshold.
 pub mod wsclock;
 
 pub use admission::{AdmissionPolicy, AdmissionStats, AlwaysAdmit};
@@ -65,8 +86,11 @@ use crate::sim::SimTime;
 /// how much the application benefits from cached data.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum CacheAffinity {
+    /// Little benefit from caching (I/O-bound single-pass apps like Sort).
     Low,
+    /// Moderate benefit (WordCount, Join).
     Medium,
+    /// High benefit (Grep, Aggregation re-read their inputs).
     High,
 }
 
@@ -80,6 +104,7 @@ impl CacheAffinity {
         }
     }
 
+    /// Lower-case display name ("low" / "medium" / "high").
     pub fn name(self) -> &'static str {
         match self {
             CacheAffinity::Low => "low",
@@ -93,12 +118,15 @@ impl CacheAffinity {
 /// key on; unneeded fields are ignored by simpler policies).
 #[derive(Debug, Clone)]
 pub struct AccessContext {
+    /// Simulated time of the access.
     pub time: SimTime,
+    /// Block size in bytes.
     pub size: u64,
+    /// Block type (input / intermediate / output).
     pub kind: BlockKind,
-    /// Owning file and its "wave width" (blocks processed concurrently —
-    /// LIFE/LFU-F eviction criterion).
+    /// Owning file (grouping key for the LIFE/LFU-F wave criterion).
     pub file: u64,
+    /// The file's "wave width": blocks processed concurrently.
     pub file_width: u32,
     /// Whether all tasks reading this file have completed.
     pub file_complete: bool,
@@ -107,6 +135,10 @@ pub struct AccessContext {
     /// SVM-predicted class: Some(true) = "reused in the future".
     /// Filled by the coordinator for H-SVM-LRU (and AutoCache's score).
     pub predicted_reuse: Option<bool>,
+    /// CPU seconds needed to regenerate this block if it is evicted and
+    /// requested again (DAG stage outputs — arXiv 1804.10563). 0.0 for
+    /// blocks that persist on disk and never need recomputation.
+    pub recompute_cost: f64,
 }
 
 impl AccessContext {
@@ -121,11 +153,19 @@ impl AccessContext {
             file_complete: false,
             affinity: CacheAffinity::Medium,
             predicted_reuse: None,
+            recompute_cost: 0.0,
         }
     }
 
+    /// Attach an SVM prediction (builder style, for tests and replay).
     pub fn with_prediction(mut self, reuse: bool) -> Self {
         self.predicted_reuse = Some(reuse);
+        self
+    }
+
+    /// Attach a recompute cost in seconds (builder style).
+    pub fn with_recompute_cost(mut self, cost_s: f64) -> Self {
+        self.recompute_cost = cost_s;
         self
     }
 }
@@ -134,6 +174,7 @@ impl AccessContext {
 /// `on_insert` for blocks not present, `on_hit` for present blocks,
 /// `choose_victim`/`on_evict` pairs while space is needed.
 pub trait CachePolicy: Send {
+    /// Registry name of the policy (e.g. "lru", "h-svm-lru").
     fn name(&self) -> &'static str;
 
     /// A cached block was accessed again.
@@ -146,12 +187,24 @@ pub trait CachePolicy: Send {
     /// must NOT forget the block yet — `on_evict` confirms.
     fn choose_victim(&mut self, now: SimTime) -> Option<BlockId>;
 
+    /// The first `k` blocks of the policy's eviction order, best victim
+    /// first. Wrappers like [`cost_aware::CostAware`] re-rank this window
+    /// (e.g. by recompute cost) without touching the policy's internals.
+    /// The default is the single-candidate window — exactly
+    /// [`CachePolicy::choose_victim`] — so only policies with a cheaply
+    /// enumerable order need to override it. Like `choose_victim`, this
+    /// must not mutate the eviction order.
+    fn victim_candidates(&mut self, now: SimTime, _k: usize) -> Vec<BlockId> {
+        self.choose_victim(now).into_iter().collect()
+    }
+
     /// The chosen victim (or an externally uncached block) left the cache.
     fn on_evict(&mut self, block: BlockId);
 
     /// Number of tracked blocks (must equal the cache's block count).
     fn len(&self) -> usize;
 
+    /// Whether the policy tracks no blocks.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -166,6 +219,7 @@ pub trait CachePolicy: Send {
 /// Outcome of a cache access through `BlockCache::access_or_insert`.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct AccessOutcome {
+    /// Whether the block was already cached.
     pub hit: bool,
     /// Blocks evicted to make room (empty on hits).
     pub evicted: Vec<BlockId>,
@@ -187,6 +241,7 @@ pub struct BlockCache {
 }
 
 impl BlockCache {
+    /// A cache of `capacity` bytes with the default admit-everything gate.
     pub fn new(policy: Box<dyn CachePolicy>, capacity: u64) -> Self {
         Self::with_admission(policy, Box::new(AlwaysAdmit), capacity)
     }
@@ -207,10 +262,12 @@ impl BlockCache {
         }
     }
 
+    /// Registry name of the eviction policy.
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
     }
 
+    /// Registry name of the admission policy ("always" = no gate).
     pub fn admission_name(&self) -> &'static str {
         self.admission.name()
     }
@@ -220,34 +277,42 @@ impl BlockCache {
         self.admission_stats
     }
 
+    /// Zero the admission counters (measurement-pass reset).
     pub fn reset_admission_stats(&mut self) {
         self.admission_stats = AdmissionStats::default();
     }
 
+    /// Total capacity in bytes.
     pub fn capacity(&self) -> u64 {
         self.capacity
     }
 
+    /// Bytes currently cached.
     pub fn used(&self) -> u64 {
         self.used
     }
 
+    /// Remaining free bytes.
     pub fn free(&self) -> u64 {
         self.capacity - self.used
     }
 
+    /// Number of cached blocks.
     pub fn len(&self) -> usize {
         self.sizes.len()
     }
 
+    /// Whether the cache holds no blocks.
     pub fn is_empty(&self) -> bool {
         self.sizes.is_empty()
     }
 
+    /// Whether `block` is currently cached.
     pub fn contains(&self, block: BlockId) -> bool {
         self.sizes.contains_key(&block)
     }
 
+    /// All cached block ids, sorted (stable test/debug output).
     pub fn cached_blocks(&self) -> Vec<BlockId> {
         let mut v: Vec<BlockId> = self.sizes.keys().copied().collect();
         v.sort_unstable();

@@ -48,6 +48,22 @@ struct Node<T> {
 }
 
 /// Doubly-linked order list over a `Vec` slab with an index free-list.
+///
+/// The backbone of every O(1) recency structure in the crate: front =
+/// next victim, back = most recently used.
+///
+/// ```
+/// use h_svm_lru::cache::order_list::OrderList;
+///
+/// let mut list = OrderList::new();
+/// let a = list.push_back(1u64);
+/// let _b = list.push_back(2u64);
+/// assert_eq!(list.front(), Some(1)); // oldest first
+/// list.move_to_back(a);              // touch: 1 becomes most recent
+/// assert_eq!(list.front(), Some(2));
+/// assert_eq!(list.pop_front(), Some(2));
+/// assert_eq!(list.len(), 1);
+/// ```
 #[derive(Debug, Clone)]
 pub struct OrderList<T> {
     nodes: Vec<Node<T>>,
@@ -59,18 +75,22 @@ pub struct OrderList<T> {
 }
 
 impl<T: Copy> OrderList<T> {
+    /// Empty list.
     pub fn new() -> Self {
         OrderList { nodes: Vec::new(), head: NIL, tail: NIL, free: NIL, len: 0 }
     }
 
+    /// Empty list with slab space for `n` elements.
     pub fn with_capacity(n: usize) -> Self {
         OrderList { nodes: Vec::with_capacity(n), ..Self::new() }
     }
 
+    /// Live elements in the list.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether the list has no live elements.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
@@ -275,6 +295,7 @@ impl<T: Copy> OrderList<T> {
         Iter { list: self, cur: self.head }
     }
 
+    /// Drop every element (slab space is released too).
     pub fn clear(&mut self) {
         self.nodes.clear();
         self.head = NIL;
@@ -302,6 +323,7 @@ pub struct LruSet<T> {
 }
 
 impl<T: Copy + Eq + Hash> LruSet<T> {
+    /// Empty set.
     pub fn new() -> Self {
         LruSet { index: IdHashMap::default(), order: OrderList::new() }
     }
@@ -336,14 +358,17 @@ impl<T: Copy + Eq + Hash> LruSet<T> {
         }
     }
 
+    /// Whether `item` is a member.
     pub fn contains(&self, item: T) -> bool {
         self.index.contains_key(&item)
     }
 
+    /// Member count.
     pub fn len(&self) -> usize {
         self.index.len()
     }
 
+    /// Whether the set has no members.
     pub fn is_empty(&self) -> bool {
         self.index.is_empty()
     }

@@ -7,6 +7,7 @@ use super::affinity_aware::AffinityAware;
 use super::arc::ModifiedArc;
 use super::autocache::AutoCache;
 use super::block_goodness::BlockGoodness;
+use super::cost_aware::CostAware;
 use super::exd::Exd;
 use super::fifo::Fifo;
 use super::hsvmlru::HSvmLru;
@@ -33,6 +34,9 @@ pub const POLICY_NAMES: &[&str] = &[
     "block-goodness",
     "affinity-aware",
     "autocache",
+    "lru-cost",
+    "lfu-cost",
+    "arc-cost",
 ];
 
 /// Instantiate a policy by name with its default parameters.
@@ -53,6 +57,12 @@ pub fn make_policy(name: &str) -> Option<Box<dyn CachePolicy>> {
         "block-goodness" => Box::new(BlockGoodness::new()),
         "affinity-aware" => Box::new(AffinityAware::new()),
         "autocache" => Box::new(AutoCache::new()),
+        // Cost-aware variants: the base eviction order with a recompute-cost
+        // tie-break over the front candidate window (workload::dag misses on
+        // evicted intermediates charge that cost to job time).
+        "lru-cost" => Box::new(CostAware::new(Box::new(Lru::new()), "lru-cost")),
+        "lfu-cost" => Box::new(CostAware::new(Box::new(Lfu::new()), "lfu-cost")),
+        "arc-cost" => Box::new(CostAware::new(Box::new(ModifiedArc::new(64)), "arc-cost")),
         _ => return None,
     })
 }

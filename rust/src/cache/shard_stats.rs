@@ -31,10 +31,15 @@ use std::sync::atomic::{fence, AtomicU64, Ordering};
 /// by the coordinator) with [`ShardStats::merge`].
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ShardStats {
+    /// Accesses routed to the shard (`hits + misses`).
     pub requests: u64,
+    /// Accesses that found the block cached.
     pub hits: u64,
+    /// Accesses that did not.
     pub misses: u64,
+    /// Blocks evicted to make room.
     pub evictions: u64,
+    /// Blocks actually inserted.
     pub insertions: u64,
     /// Candidate inserts the admission layer allowed (see
     /// [`crate::cache::admission::AdmissionStats`]; always 0-rejected under
@@ -45,6 +50,7 @@ pub struct ShardStats {
 }
 
 impl ShardStats {
+    /// Add `other`'s counters into `self` (shard -> node -> cluster rollup).
     pub fn merge(&mut self, other: &ShardStats) {
         self.requests += other.requests;
         self.hits += other.hits;
@@ -55,6 +61,7 @@ impl ShardStats {
         self.rejected += other.rejected;
     }
 
+    /// `hits / requests` (0 when no requests were made).
     pub fn hit_ratio(&self) -> f64 {
         if self.requests == 0 {
             0.0
@@ -69,6 +76,7 @@ impl ShardStats {
 /// `used <= capacity` and `hits + misses == requests` hold together.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ShardSnapshot {
+    /// The shard's access counters.
     pub stats: ShardStats,
     /// Bytes cached on the shard (mirror of `BlockCache::used`).
     pub used: u64,
@@ -103,6 +111,7 @@ pub struct AtomicShardStats {
 }
 
 impl AtomicShardStats {
+    /// Zeroed stats block.
     pub fn new() -> Self {
         Self::default()
     }

@@ -136,10 +136,12 @@ impl ShardedCache {
         Some(Self::with_admission(policies, admissions, total_capacity))
     }
 
+    /// Number of shards (policy instances).
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
 
+    /// Total capacity in bytes across all shards.
     pub fn capacity(&self) -> u64 {
         self.capacity
     }
@@ -208,6 +210,7 @@ impl ShardedCache {
         removed
     }
 
+    /// Whether `block` is currently cached (locks only its shard).
     pub fn contains(&self, block: BlockId) -> bool {
         self.lock_shard(self.shard_of(block)).contains(block)
     }
@@ -218,6 +221,7 @@ impl ShardedCache {
         self.stats.iter().map(|s| s.snapshot().used).sum()
     }
 
+    /// Unused capacity in bytes (`capacity - used`).
     pub fn free(&self) -> u64 {
         self.capacity.saturating_sub(self.used())
     }
@@ -227,6 +231,7 @@ impl ShardedCache {
         self.stats.iter().map(|s| s.snapshot().blocks).sum::<u64>() as usize
     }
 
+    /// Whether no shard holds any block.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

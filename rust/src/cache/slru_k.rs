@@ -36,6 +36,8 @@ use crate::sim::SimTime;
 
 use super::{AccessContext, CachePolicy};
 
+/// Selective LRU-K: LRU on the K-th most recent access, admitting
+/// first-touch blocks only while admissions still fit.
 #[derive(Debug)]
 pub struct SlruK {
     k: usize,
@@ -51,6 +53,7 @@ pub struct SlruK {
 }
 
 impl SlruK {
+    /// Policy tracking the last `k` access times per block (`k >= 1`).
     pub fn new(k: usize) -> Self {
         SlruK {
             k: k.max(1),

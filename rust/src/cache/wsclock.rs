@@ -19,6 +19,8 @@ struct Slot {
     last_used: SimTime,
 }
 
+/// WSClock: a clock ring where the hand skips referenced-or-young slots
+/// (working-set approximation of LRU).
 #[derive(Debug)]
 pub struct WsClock {
     ring: Vec<Slot>,
@@ -29,6 +31,7 @@ pub struct WsClock {
 }
 
 impl WsClock {
+    /// Policy with age threshold `tau`.
     pub fn new(tau: SimDuration) -> Self {
         WsClock { ring: Vec::new(), hand: 0, index: HashMap::new(), tau }
     }

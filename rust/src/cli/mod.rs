@@ -64,6 +64,7 @@ impl Cli {
             "--batch-queue",
             "--batch-deadline-ms",
             "--readers",
+            "--jobs",
             "--baseline",
             "--current",
             "--tolerance",
@@ -173,6 +174,22 @@ impl Cli {
         }
     }
 
+    /// Concurrent DAG job count (`--jobs`, default `fallback`). Bounded:
+    /// every job adds stages to each scheduler wave.
+    pub fn jobs(&self, fallback: usize) -> Result<usize> {
+        const MAX_JOBS: usize = 256;
+        match self.flag("jobs") {
+            Some(s) => {
+                let v: usize = s.parse().context("bad --jobs")?;
+                if !(1..=MAX_JOBS).contains(&v) {
+                    bail!("--jobs must be in 1..={MAX_JOBS}, got {v}");
+                }
+                Ok(v)
+            }
+            None => Ok(fallback),
+        }
+    }
+
     /// The `--policy` flag (defaulting to `fallback`), validated against
     /// the policy registry — a typo'd name exits non-zero up front instead
     /// of silently falling through to a later (or no) failure.
@@ -248,6 +265,12 @@ SUBCOMMANDS
                that publishes classifier snapshots mid-trace
                [--policy P] [--shards N] [--cache-blocks N] [--smoke]
                [--batch-queue N] [--batch-deadline-ms MS]
+  dag          multi-stage DAG replay: diamond-DAG jobs through the
+               MapReduce scheduler with recompute-cost charging for
+               evicted intermediates; sweeps policies x cache sizes x
+               job concurrency [--policy P] [--jobs N] [--shards N]
+               [--cache-blocks N] [--smoke  assert cost-aware
+               H-SVM-LRU beats cost-blind LRU on total job time]
   bench-gate   compare --current bench JSONs against --baseline records,
                failing on any tracked-metric regression beyond
                --tolerance (default 0.15); the CI regression gate
@@ -270,6 +293,7 @@ FLAGS
                            (default 2; `simulate`/`online`)
   --readers N              concurrent stats() reader threads during the
                            `sharded` replay (default 0)
+  --jobs N                 concurrent DAG jobs for `dag` (default 3)
   --baseline DIR           `bench-gate`: committed BENCH_baseline dir
   --current DIR            `bench-gate`: dir with freshly written JSONs
   --tolerance F            `bench-gate`: allowed relative regression
@@ -372,6 +396,15 @@ mod tests {
         assert_eq!(parse(&["sharded", "--readers", "4"]).readers(0).unwrap(), 4);
         assert_eq!(parse(&["sharded"]).readers(0).unwrap(), 0);
         assert!(parse(&["sharded", "--readers", "1000"]).readers(0).is_err());
+    }
+
+    #[test]
+    fn jobs_flag_parses_and_validates() {
+        assert_eq!(parse(&["dag", "--jobs", "6"]).jobs(3).unwrap(), 6);
+        assert_eq!(parse(&["dag"]).jobs(3).unwrap(), 3);
+        assert!(parse(&["dag", "--jobs", "0"]).jobs(3).is_err());
+        assert!(parse(&["dag", "--jobs", "9999"]).jobs(3).is_err());
+        assert!(parse(&["dag", "--jobs", "x"]).jobs(3).is_err());
     }
 
     #[test]

@@ -76,15 +76,20 @@ pub struct PredictionBatcher {
     scratch: Vec<FeatureVec>,
     /// Flush threshold = artifact batch width.
     batch_width: usize,
+    /// Telemetry counters (queries, cache hits, backend calls).
     pub stats: BatcherStats,
 }
 
 /// Telemetry for the perf pass.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BatcherStats {
+    /// Class lookups issued.
     pub queries: u64,
+    /// Lookups answered from the per-block class cache.
     pub class_cache_hits: u64,
+    /// Backend `decision_batch` invocations.
     pub backend_calls: u64,
+    /// Individual predictions scored across those calls.
     pub predictions_scored: u64,
 }
 
@@ -99,6 +104,7 @@ impl BatcherStats {
 }
 
 impl PredictionBatcher {
+    /// A batcher with the default class-cache capacity.
     pub fn new(batch_width: usize) -> Self {
         Self::with_capacity(batch_width, DEFAULT_CLASS_CACHE_CAPACITY)
     }
@@ -246,10 +252,12 @@ impl PredictionBatcher {
         }
     }
 
+    /// Blocks with a cached class.
     pub fn cached_len(&self) -> usize {
         self.cache.len()
     }
 
+    /// Cold queries awaiting a flush.
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }
@@ -310,6 +318,7 @@ pub struct BatcherProbe {
 }
 
 impl BatcherProbe {
+    /// A probe with fresh zeroed counters.
     pub fn new() -> Self {
         Self::default()
     }
@@ -325,6 +334,7 @@ impl BatcherProbe {
         self.counters.deferred.load(Ordering::Relaxed)
     }
 
+    /// Backend flushes of the cold queue (fill + deadline + forced).
     pub fn flushes(&self) -> u64 {
         self.counters.flushes.load(Ordering::Relaxed)
     }
@@ -391,6 +401,7 @@ pub struct ShardBatcher {
 }
 
 impl ShardBatcher {
+    /// A batcher with its own private telemetry counters.
     pub fn new(cfg: BatcherConfig) -> Self {
         Self::with_probe(cfg, BatcherProbe::new())
     }
@@ -413,6 +424,7 @@ impl ShardBatcher {
         BatcherProbe { counters: Arc::clone(&self.counters) }
     }
 
+    /// The wrapped batcher's telemetry counters.
     pub fn stats(&self) -> BatcherStats {
         self.inner.stats
     }
@@ -546,10 +558,12 @@ impl ShardBatcher {
         self.inner.note_model_version(version);
     }
 
+    /// Blocks with a cached class.
     pub fn cached_len(&self) -> usize {
         self.inner.cached_len()
     }
 
+    /// Cold queries awaiting a flush.
     pub fn pending_len(&self) -> usize {
         self.inner.pending_len()
     }
@@ -574,6 +588,7 @@ pub struct BatcherPool {
 }
 
 impl BatcherPool {
+    /// A pool of `n_shards` batchers sharing one telemetry probe.
     pub fn new(n_shards: usize, cfg: BatcherConfig) -> Self {
         let probe = BatcherProbe::new();
         let shards = (0..n_shards.max(1))
@@ -582,6 +597,7 @@ impl BatcherPool {
         BatcherPool { shards, probe }
     }
 
+    /// Number of per-shard batchers.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }
@@ -662,10 +678,12 @@ impl BatcherPool {
         acc
     }
 
+    /// Blocks with a cached class, summed over shards.
     pub fn cached_len(&self) -> usize {
         self.shards.iter().map(|s| s.cached_len()).sum()
     }
 
+    /// Cold queries awaiting a flush, summed over shards.
     pub fn pending_len(&self) -> usize {
         self.shards.iter().map(|s| s.pending_len()).sum()
     }

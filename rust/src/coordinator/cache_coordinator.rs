@@ -58,16 +58,24 @@ pub enum CacheMode {
 /// Aggregated request-path statistics.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CoordinatorStats {
+    /// Total block read requests.
     pub requests: u64,
+    /// Requests served from a cache (local or remote).
     pub hits: u64,
+    /// Requests served from disk.
     pub misses: u64,
+    /// Total bytes requested.
     pub bytes_requested: u64,
+    /// Bytes served from cache.
     pub bytes_from_cache: u64,
+    /// Blocks evicted to make room.
     pub evictions: u64,
+    /// Blocks inserted into a cache.
     pub insertions: u64,
 }
 
 impl CoordinatorStats {
+    /// Fraction of requests served from cache (0.0 with no requests).
     pub fn hit_ratio(&self) -> f64 {
         if self.requests == 0 {
             0.0
@@ -76,6 +84,7 @@ impl CoordinatorStats {
         }
     }
 
+    /// Fraction of requested bytes served from cache.
     pub fn byte_hit_ratio(&self) -> f64 {
         if self.bytes_requested == 0 {
             0.0
@@ -94,6 +103,7 @@ struct PendingLabel {
 
 /// The coordinator.
 pub struct CacheCoordinator {
+    /// The simulated cluster (NameNode metadata + DataNode resources).
     pub cluster: Cluster,
     mode: CacheMode,
     /// One sharded cache per DataNode (`cfg.cache_shards` independently
@@ -106,8 +116,11 @@ pub struct CacheCoordinator {
     /// the cold-query rate, and per-shard invalidation with pool-wide
     /// model-version fan-out.
     batchers: BatcherPool,
+    /// Online training pipeline (label buffer + retrain cadence).
     pub pipeline: TrainingPipeline,
+    /// Per-block access statistics feeding the SVM features.
     pub tracker: BlockStatsTracker,
+    /// Request-path counters.
     pub stats: CoordinatorStats,
     /// Whether the active policy consumes SVM predictions.
     svm_enabled: bool,
@@ -215,14 +228,17 @@ impl CacheCoordinator {
         self
     }
 
+    /// Prefetcher telemetry, when prefetching is enabled.
     pub fn prefetch_stats(&self) -> Option<super::prefetcher::PrefetchStats> {
         self.prefetcher.as_ref().map(|p| p.stats)
     }
 
+    /// The operating mode this coordinator was built with.
     pub fn mode(&self) -> &CacheMode {
         &self.mode
     }
 
+    /// Active replacement-policy name ("no-cache" in NoCache mode).
     pub fn policy_name(&self) -> &str {
         match &self.mode {
             CacheMode::NoCache => "no-cache",
@@ -230,6 +246,7 @@ impl CacheCoordinator {
         }
     }
 
+    /// Name of the SVM backend ("none" when no classifier is attached).
     pub fn backend_name(&self) -> &'static str {
         self.backend.as_ref().map(|b| b.name()).unwrap_or("none")
     }
@@ -406,9 +423,11 @@ impl CacheCoordinator {
         req_file: u64,
         file_width: u32,
         file_complete: bool,
+        recompute_cost: f64,
         now: SimTime,
     ) -> AccessContext {
-        let features = self.tracker.features(block, kind, size, affinity, now);
+        let features =
+            self.tracker.features(block, kind, size, affinity, recompute_cost, now);
         let predicted = self.predict_class(block, features, now);
         AccessContext {
             time: now,
@@ -419,6 +438,7 @@ impl CacheCoordinator {
             file_complete,
             affinity,
             predicted_reuse: predicted,
+            recompute_cost,
         }
     }
 
@@ -484,9 +504,14 @@ impl CacheCoordinator {
     /// Replay one trace request (Fig 3 / Table 7 path). Uses the trace's
     /// request-awareness ground truth for training labels. Returns hit?
     pub fn handle_trace_request(&mut self, req: &BlockRequest) -> Result<bool> {
-        let features =
-            self.tracker
-                .features(req.block, req.kind, req.size, req.affinity, req.time);
+        let features = self.tracker.features(
+            req.block,
+            req.kind,
+            req.size,
+            req.affinity,
+            req.recompute_cost,
+            req.time,
+        );
         // Request-awareness scenario: the label is known at request time.
         self.pipeline.observe(features, req.reused_later);
         let ctx = self.build_ctx(
@@ -497,6 +522,7 @@ impl CacheCoordinator {
             req.block.0, // trace blocks are their own files
             1,
             false,
+            req.recompute_cost,
             req.time,
         );
         let reader = self
@@ -540,7 +566,8 @@ impl CacheCoordinator {
                 .block_info(next)
                 .map(|b| b.size)
                 .unwrap_or(self.cluster.cfg.block_size);
-            let features = self.tracker.features(next, info.kind, size, req.affinity, now);
+            let features =
+                self.tracker.features(next, info.kind, size, req.affinity, 0.0, now);
             // Classifier gate: only stage blocks predicted to be reused.
             // Without a trained model, prefetch optimistically (sequential
             // scans are the common case the heuristic already filtered).
@@ -559,6 +586,7 @@ impl CacheCoordinator {
                 file_complete: false,
                 affinity: req.affinity,
                 predicted_reuse: Some(true),
+                recompute_cost: 0.0,
             };
             let evicted = self.caches[dn.0 as usize].insert(next, &ctx);
             for victim in &evicted {
@@ -623,6 +651,7 @@ impl CacheCoordinator {
         self.caches.iter().map(|c| c.used()).sum()
     }
 
+    /// Total cached blocks across DataNodes.
     pub fn cached_blocks(&self) -> usize {
         self.caches.iter().map(|c| c.len()).sum()
     }
@@ -655,7 +684,8 @@ impl BlockService for CacheCoordinator {
         req: &AccessRequest,
     ) -> BlockRead {
         let size = self.block_size(block);
-        let features = self.tracker.features(block, req.kind, size, req.affinity, now);
+        let features =
+            self.tracker.features(block, req.kind, size, req.affinity, 0.0, now);
         // Label collection only matters when a classifier can consume it.
         if self.backend.is_some() {
             self.observe_reuse(block, features, now);
@@ -668,6 +698,7 @@ impl BlockService for CacheCoordinator {
             req.file,
             req.file_width,
             req.file_complete,
+            0.0,
             now,
         );
         let (source, serving_dn) = self.access(block, reader, now, ctx);
@@ -889,6 +920,7 @@ mod tests {
             trace[0].kind,
             trace[0].size,
             trace[0].affinity,
+            trace[0].recompute_cost,
             trace[0].time,
         );
         assert!(reader.predict(&f).is_some());

@@ -15,10 +15,15 @@
 //!   channel and the background trainer loop that keeps the shard-parallel
 //!   replay's classifier fresh mid-trace.
 
+/// Class caching + micro-batched predictions (per-shard batchers).
 pub mod batcher;
+/// Algorithm 1 (GetCache/PutCache) over the simulated cluster.
 pub mod cache_coordinator;
+/// Concurrent online learning: snapshot cell, sample channel, trainer loop.
 pub mod online;
+/// Sequential-readahead prefetching into the cache.
 pub mod prefetcher;
+/// Labeled-sample accumulation and periodic retraining.
 pub mod training_pipeline;
 
 pub use batcher::{

@@ -58,10 +58,12 @@ impl ClassifierSnapshot {
         ClassifierSnapshot { version: 0, model: None }
     }
 
+    /// Monotonic publish version (0 = untrained).
     pub fn version(&self) -> u64 {
         self.version
     }
 
+    /// Whether the snapshot carries a model.
     pub fn is_trained(&self) -> bool {
         self.model.is_some()
     }
@@ -86,6 +88,26 @@ impl ClassifierSnapshot {
 /// `slot` lock when a publish actually happened. Publishing stores the
 /// new `Arc` and bumps `version` under the same lock, so the atomic can
 /// never run ahead of (or behind) the slot.
+///
+/// ```
+/// use std::sync::Arc;
+/// use h_svm_lru::coordinator::online::SnapshotCell;
+/// use h_svm_lru::svm::kernel::{KernelKind, KernelParams};
+/// use h_svm_lru::svm::smo::SmoModel;
+///
+/// let cell = Arc::new(SnapshotCell::new());
+/// let mut reader = cell.reader();
+/// assert_eq!(reader.predict(&[0.5; 9]), None); // version 0: untrained
+///
+/// // Publish a trivial model whose decision is sign(bias) everywhere.
+/// let model = SmoModel::new(
+///     KernelParams::new(KernelKind::Linear),
+///     Vec::new(), Vec::new(), Vec::new(),
+///     1.0,
+/// );
+/// assert_eq!(cell.publish(model), 1); // publish bumps the version...
+/// assert_eq!(reader.predict(&[0.5; 9]), Some(true)); // ...readers see it
+/// ```
 #[derive(Debug)]
 pub struct SnapshotCell {
     version: AtomicU64,
@@ -147,6 +169,7 @@ pub struct SnapshotReader {
 }
 
 impl SnapshotReader {
+    /// A reader over `cell`, pre-loaded with its current snapshot.
     pub fn new(cell: Arc<SnapshotCell>) -> Self {
         cell.reader()
     }
@@ -189,6 +212,7 @@ pub struct SnapshotBackend {
 }
 
 impl SnapshotBackend {
+    /// A read-only backend view over `cell`.
     pub fn new(cell: Arc<SnapshotCell>) -> Self {
         SnapshotBackend { reader: SnapshotReader::new(cell) }
     }
@@ -237,6 +261,7 @@ impl SvmBackend for SnapshotBackend {
 /// One labeled observation flowing from a shard worker to the trainer.
 #[derive(Debug, Clone, Copy)]
 pub struct LabeledSample {
+    /// The access's feature vector at observation time.
     pub features: FeatureVec,
     /// Ground truth (request awareness) or retrospective label.
     pub reused: bool,
@@ -299,10 +324,12 @@ pub struct SampleProbe {
 }
 
 impl SampleProbe {
+    /// Samples accepted into the channel.
     pub fn sent(&self) -> u64 {
         self.counters.sent.load(Ordering::Relaxed)
     }
 
+    /// Samples dropped because the channel was full.
     pub fn dropped(&self) -> u64 {
         self.counters.dropped.load(Ordering::Relaxed)
     }

@@ -42,10 +42,12 @@ pub struct Prefetcher {
     scans: IdHashMap<u64, FileScan>,
     /// Blocks currently cached due to prefetch (for usefulness tracking).
     prefetched: IdHashMap<BlockId, ()>,
+    /// Prefetch telemetry (issued, inserted, useful hits).
     pub stats: PrefetchStats,
 }
 
 impl Prefetcher {
+    /// A prefetcher issuing up to `depth` readahead blocks per trigger.
     pub fn new(depth: u32) -> Self {
         Prefetcher {
             depth,
@@ -56,6 +58,7 @@ impl Prefetcher {
         }
     }
 
+    /// Configured readahead depth.
     pub fn depth(&self) -> u32 {
         self.depth
     }
@@ -113,6 +116,7 @@ impl Prefetcher {
         }
     }
 
+    /// Drop all scan state and telemetry (fresh run).
     pub fn reset(&mut self) {
         self.scans.clear();
         self.prefetched.clear();

@@ -34,10 +34,13 @@ pub struct TrainingPipeline {
     /// the drain and could make the next retrain fire immediately (anchor
     /// saturated to 0) or drift late after repeated halvings.
     observed_since_train: usize,
+    /// Completed (re)trainings.
     pub trainings: u64,
 }
 
 impl TrainingPipeline {
+    /// A pipeline that first trains at `min_samples` observations and
+    /// retrains every `retrain_interval` observations after that.
     pub fn new(min_samples: usize, retrain_interval: usize) -> Self {
         TrainingPipeline {
             buffer: Dataset::new(),
@@ -75,6 +78,7 @@ impl TrainingPipeline {
         }
     }
 
+    /// Labeled samples currently buffered.
     pub fn n_samples(&self) -> usize {
         self.buffer.len()
     }

@@ -13,9 +13,11 @@
 //! | `simulate`| DES cluster scenario: arrivals, heartbeats, retraining |
 //! | `admission` | eviction-policy × admission-policy sweep (pollution control) |
 //! | `online_sharded` | frozen vs. online-learning shard-parallel replay matrix |
+//! | `dag_replay` | multi-stage DAG jobs with recompute-cost charging |
 
 pub mod admission;
 pub mod common;
+pub mod dag_replay;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
@@ -28,3 +30,4 @@ pub mod table5;
 pub mod table7;
 
 pub use common::{make_coordinator, replay_trace_two_pass, run_repeated_job, run_workload, Scenario, WorkloadRun};
+pub use dag_replay::{run_dag, run_dag_pass, DagReport};

@@ -254,8 +254,14 @@ fn run_online_with(
         let mut shard_batcher = ShardBatcher::with_probe(batcher, batch_probe.clone());
         for &i in &partitions[w] {
             let req = &trace[i];
-            let features =
-                tracker.features(req.block, req.kind, req.size, req.affinity, req.time);
+            let features = tracker.features(
+                req.block,
+                req.kind,
+                req.size,
+                req.affinity,
+                req.recompute_cost,
+                req.time,
+            );
             if let Some(tx) = &tx {
                 tx.emit(features, req.reused_later);
             }
@@ -283,6 +289,7 @@ fn run_online_with(
                 file_complete: false,
                 affinity: req.affinity,
                 predicted_reuse: predicted,
+                recompute_cost: req.recompute_cost,
             };
             cache.access_or_insert(req.block, &ctx);
             tracker.record_access(req.block, 0, req.time);

@@ -74,7 +74,14 @@ pub fn trace_dataset(trace: &[BlockRequest]) -> (Vec<FeatureVec>, crate::svm::Da
     let mut dataset = crate::svm::Dataset::new();
     let mut features = Vec::with_capacity(trace.len());
     for req in trace {
-        let f = tracker.features(req.block, req.kind, req.size, req.affinity, req.time);
+        let f = tracker.features(
+            req.block,
+            req.kind,
+            req.size,
+            req.affinity,
+            req.recompute_cost,
+            req.time,
+        );
         dataset.push(f, req.reused_later);
         features.push(f);
         tracker.record_access(req.block, 0, req.time);
@@ -137,6 +144,7 @@ fn replay_slice(
             file_complete: false,
             affinity: req.affinity,
             predicted_reuse: classes.get(i).copied().flatten(),
+            recompute_cost: req.recompute_cost,
         };
         cache.access_or_insert(req.block, &ctx);
     }
@@ -365,6 +373,7 @@ mod tests {
                 file_complete: false,
                 affinity: req.affinity,
                 predicted_reuse: classes[i],
+                recompute_cost: req.recompute_cost,
             };
             seq.access_or_insert(req.block, &ctx);
         }

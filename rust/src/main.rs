@@ -424,6 +424,89 @@ fn run(args: &[String]) -> Result<()> {
             }
             Ok(())
         }
+        "dag" => {
+            use h_svm_lru::experiments::dag_replay;
+            use h_svm_lru::svm::KernelKind;
+            use h_svm_lru::workload::diamond_suite;
+
+            let svm_cfg = cli.svm_config()?;
+            let kernel = KernelKind::from_name(&svm_cfg.kernel)
+                .ok_or_else(|| anyhow::anyhow!("bad kernel name {:?}", svm_cfg.kernel))?;
+            let (cluster_cfg, _) = h_svm_lru::config::load(cli.flag("config"))?;
+            let seed = cli.seed()?;
+            let shards = cli.shards(4)?;
+            let smoke = cli.switch("smoke");
+            let n_jobs = cli.jobs(3)?;
+            let cache_blocks: u64 =
+                cli.flag("cache-blocks").map(|s| s.parse()).transpose()?.unwrap_or(16);
+
+            // Sweep dimensions: smoke runs the one acceptance cell, the
+            // full sweep covers cost-aware policies x sizes x concurrency.
+            let flag_policy = cli.policy("h-svm-lru")?;
+            let mut policies: Vec<String> =
+                vec!["lru".into(), "h-svm-lru".into(), "lru-cost".into(), "arc-cost".into()];
+            if !policies.iter().any(|p| *p == flag_policy) {
+                policies.push(flag_policy);
+            }
+            if smoke {
+                policies = vec!["lru".into(), "h-svm-lru".into()];
+            }
+            let cache_sizes: Vec<u64> =
+                if smoke { vec![cache_blocks] } else { vec![cache_blocks / 2, cache_blocks, cache_blocks * 2] };
+            let job_counts: Vec<usize> = if smoke { vec![n_jobs] } else { vec![1, n_jobs] };
+
+            let mut reports = Vec::new();
+            for &jobs in &job_counts {
+                let suite = diamond_suite(jobs, 4, 8);
+                for &blocks in &cache_sizes {
+                    let capacity = blocks.max(1) * cluster_cfg.block_size;
+                    for policy in &policies {
+                        reports.push(dag_replay::run_dag(
+                            policy, &cluster_cfg, shards, capacity, &suite, seed, kernel, 64,
+                        )?);
+                    }
+                }
+            }
+            emit(
+                &format!(
+                    "DAG replay: diamond suite (sources=4, scans=8), {} shard(s), \
+                     block size {} MB",
+                    shards,
+                    cluster_cfg.block_size / h_svm_lru::util::bytes::MB
+                ),
+                &dag_replay::render(&reports),
+                csv,
+            );
+
+            // The acceptance check (CI smoke): cost-aware H-SVM-LRU beats
+            // cost-blind LRU on total simulated job time for the same cell.
+            if smoke {
+                let cell = |name: &str| {
+                    reports
+                        .iter()
+                        .find(|r| r.policy == name)
+                        .expect("smoke sweep covers lru and h-svm-lru")
+                };
+                let (lru, svm) = (cell("lru"), cell("h-svm-lru"));
+                println!(
+                    "\nsmoke: h-svm-lru {:.1}s vs lru {:.1}s total job time \
+                     ({} vs {} recomputes)",
+                    svm.total_job_time_s,
+                    lru.total_job_time_s,
+                    svm.recompute_events,
+                    lru.recompute_events,
+                );
+                anyhow::ensure!(
+                    svm.total_job_time_s < lru.total_job_time_s,
+                    "cost-aware H-SVM-LRU must beat cost-blind LRU on the diamond \
+                     suite: {:.2}s vs {:.2}s",
+                    svm.total_job_time_s,
+                    lru.total_job_time_s
+                );
+                println!("smoke ok: recompute-cost-aware eviction wins on job time");
+            }
+            Ok(())
+        }
         "bench-gate" => {
             use anyhow::Context;
             use h_svm_lru::bench_support::compare::{gate_files, render_report};
@@ -441,7 +524,7 @@ fn run(args: &[String]) -> Result<()> {
                 None => 0.15,
             };
             let mut failed = false;
-            for suite in ["hotpath", "sharded", "online"] {
+            for suite in ["hotpath", "sharded", "online", "dag"] {
                 let file = format!("BENCH_{suite}.json");
                 let baseline = std::path::Path::new(baseline_dir).join(&file);
                 let current = std::path::Path::new(current_dir).join(&file);

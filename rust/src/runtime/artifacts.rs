@@ -101,7 +101,7 @@ mod tests {
     const SAMPLE: &str = "\
 # comment
 n_train=256
-n_features=8
+n_features=9
 n_predict_batch=64
 c=4.0
 gamma=0.5
@@ -114,7 +114,7 @@ kernels=linear,rbf,sigmoid
     fn parses_manifest() {
         let m = Manifest::parse(SAMPLE).unwrap();
         assert_eq!(m.n_train, 256);
-        assert_eq!(m.n_features, 8);
+        assert_eq!(m.n_features, 9);
         assert_eq!(m.n_predict_batch, 64);
         assert_eq!(m.gamma, 0.5);
         assert_eq!(m.kernels, vec!["linear", "rbf", "sigmoid"]);
@@ -128,7 +128,7 @@ kernels=linear,rbf,sigmoid
 
     #[test]
     fn wrong_feature_count_fails_validation() {
-        let text = SAMPLE.replace("n_features=8", "n_features=5");
+        let text = SAMPLE.replace("n_features=9", "n_features=5");
         let m = Manifest::parse(&text).unwrap();
         assert!(m.validate().is_err());
     }

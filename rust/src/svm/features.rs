@@ -1,6 +1,6 @@
 //! SVM feature extraction — the request-awareness scenario of §5.1/Table 2.
 //!
-//! Feature vector layout (D = 8, matches python/compile/model.N_FEATURES):
+//! Feature vector layout (D = 9, matches python/compile/model.N_FEATURES):
 //!
 //! | idx | feature                       | source            |
 //! |-----|-------------------------------|-------------------|
@@ -10,6 +10,7 @@
 //! | 5   | frequency (log-scaled)        | Table 2 "Frequency" |
 //! | 6   | requesting app cache affinity | Table 3 extension |
 //! | 7   | share degree (distinct apps)  | §6.4.2 sharing    |
+//! | 8   | recompute cost (log-scaled)   | DAG stage outputs (arXiv 1804.10563) |
 //!
 //! `BlockStatsTracker` maintains the per-block running state (last access,
 //! access count, distinct requesting apps) the features are computed from.
@@ -21,7 +22,7 @@ use crate::hdfs::{BlockId, BlockKind};
 use crate::sim::SimTime;
 
 /// Number of features (must equal the AOT artifacts' N_FEATURES).
-pub const N_FEATURES: usize = 8;
+pub const N_FEATURES: usize = 9;
 
 /// A normalized feature vector.
 pub type FeatureVec = [f32; N_FEATURES];
@@ -74,15 +75,23 @@ pub struct BlockStatsTracker {
     pub recency_half_life_s: f64,
     /// Frequency scale: log1p(freq) / log1p(freq_scale) saturates at 1.
     pub freq_scale: f64,
+    /// Recompute-cost scale in seconds:
+    /// `log1p(cost_s) / log1p(cost_scale_s)` saturates at 1. A stage
+    /// output that takes `cost_scale_s` of CPU to regenerate is "maximally
+    /// expensive" for the classifier.
+    pub cost_scale_s: f64,
 }
 
 impl BlockStatsTracker {
+    /// Build a tracker; `max_block_size` is the size-normalization
+    /// reference (a block of that size gets size feature 1.0).
     pub fn new(max_block_size: u64) -> Self {
         BlockStatsTracker {
             stats: IdHashMap::default(),
             max_block_size: max_block_size.max(1),
             recency_half_life_s: 120.0,
             freq_scale: 32.0,
+            cost_scale_s: 60.0,
         }
     }
 
@@ -99,17 +108,22 @@ impl BlockStatsTracker {
         e.apps.insert(app_id);
     }
 
+    /// Total recorded accesses of `block` (0 when never seen).
     pub fn accesses(&self, block: BlockId) -> u64 {
         self.stats.get(&block).map(|s| s.accesses).unwrap_or(0)
     }
 
     /// Build the (normalized) feature vector for a request.
+    /// `recompute_cost_s` is the CPU seconds needed to regenerate the
+    /// block when it has been evicted (0.0 for plain HDFS blocks that can
+    /// always be re-read from disk).
     pub fn features(
         &self,
         block: BlockId,
         kind: BlockKind,
         size: u64,
         affinity: CacheAffinity,
+        recompute_cost_s: f64,
         now: SimTime,
     ) -> FeatureVec {
         let one_hot = kind.one_hot();
@@ -125,6 +139,8 @@ impl BlockStatsTracker {
             }
             None => (0.0, 0.0, 0.0),
         };
+        let cost = (recompute_cost_s.max(0.0).ln_1p() / self.cost_scale_s.ln_1p())
+            .min(1.0) as f32;
         [
             one_hot[0],
             one_hot[1],
@@ -134,9 +150,11 @@ impl BlockStatsTracker {
             freq,
             affinity.weight() as f32,
             share,
+            cost,
         ]
     }
 
+    /// Forget all per-block history (fresh measurement pass).
     pub fn reset(&mut self) {
         self.stats.clear();
     }
@@ -155,6 +173,7 @@ mod tests {
             BlockKind::Input,
             64 * MB,
             CacheAffinity::High,
+            0.0,
             SimTime::ZERO,
         );
         assert_eq!(&f[0..3], &[1.0, 0.0, 0.0]);
@@ -163,6 +182,7 @@ mod tests {
         assert_eq!(f[5], 0.0); // no frequency
         assert_eq!(f[6], 1.0); // high affinity
         assert_eq!(f[7], 0.0); // no sharing
+        assert_eq!(f[8], 0.0); // free to recompute
     }
 
     #[test]
@@ -177,6 +197,7 @@ mod tests {
             BlockKind::Intermediate,
             128 * MB,
             CacheAffinity::Low,
+            0.0,
             SimTime::from_secs_f64(21.0),
         );
         assert!(f[4] > 0.9, "recent access -> recency near 1, got {}", f[4]);
@@ -194,11 +215,11 @@ mod tests {
         let mut tr = BlockStatsTracker::new(128 * MB);
         tr.record_access(BlockId(1), 0, SimTime::ZERO);
         let f_soon = tr.features(
-            BlockId(1), BlockKind::Input, MB, CacheAffinity::Medium,
+            BlockId(1), BlockKind::Input, MB, CacheAffinity::Medium, 0.0,
             SimTime::from_secs_f64(1.0),
         );
         let f_late = tr.features(
-            BlockId(1), BlockKind::Input, MB, CacheAffinity::Medium,
+            BlockId(1), BlockKind::Input, MB, CacheAffinity::Medium, 0.0,
             SimTime::from_secs_f64(1200.0),
         );
         assert!(f_soon[4] > f_late[4]);
@@ -221,10 +242,32 @@ mod tests {
             BlockKind::Input,
             MB,
             CacheAffinity::Medium,
+            0.0,
             SimTime::from_secs_f64(10.0),
         );
         assert_eq!(f[7], 1.0);
         assert_eq!(tr.accesses(b), 20);
+    }
+
+    #[test]
+    fn recompute_cost_is_log_scaled_and_bounded() {
+        let tr = BlockStatsTracker::new(128 * MB);
+        let at = |cost: f64| {
+            tr.features(
+                BlockId(9),
+                BlockKind::Intermediate,
+                64 * MB,
+                CacheAffinity::Medium,
+                cost,
+                SimTime::ZERO,
+            )[8]
+        };
+        assert_eq!(at(0.0), 0.0);
+        assert!(at(1.0) > 0.0);
+        assert!(at(10.0) > at(1.0), "more cost -> larger feature");
+        assert_eq!(at(60.0), 1.0, "saturates at cost_scale_s");
+        assert_eq!(at(1e9), 1.0, "clamped above the scale");
+        assert_eq!(at(-5.0), 0.0, "negative cost clamps to free");
     }
 
     #[test]

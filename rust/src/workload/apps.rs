@@ -13,17 +13,24 @@ use crate::mapreduce::job::{JobId, JobSpec};
 /// The evaluated applications.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum App {
+    /// CPU-intensive token counting.
     WordCount,
+    /// I/O-bound single-pass sort.
     Sort,
+    /// Scan with per-record match cost.
     Grep,
+    /// Multi-stage join (two chained MapReduce stages).
     Join,
+    /// Hive-style aggregation query.
     Aggregation,
 }
 
+/// Every evaluated application, in presentation order.
 pub const ALL_APPS: [App; 5] =
     [App::WordCount, App::Sort, App::Grep, App::Join, App::Aggregation];
 
 impl App {
+    /// Canonical display name.
     pub fn name(self) -> &'static str {
         match self {
             App::WordCount => "WordCount",
@@ -34,6 +41,7 @@ impl App {
         }
     }
 
+    /// Parse a (case-insensitive) application name.
     pub fn from_name(s: &str) -> Option<App> {
         match s.to_ascii_lowercase().as_str() {
             "wordcount" => Some(App::WordCount),

@@ -1,0 +1,318 @@
+//! Multi-stage job DAGs whose stage outputs are cacheable blocks.
+//!
+//! The paper's workloads are flat MapReduce jobs; real Hadoop pipelines
+//! (Hive/Pig query plans, iterative analytics) chain stages into DAGs where
+//! one stage's output is the next stage's input. Those intermediate
+//! datasets are exactly the blocks H-SVM-LRU must reason about: they live
+//! only in the cache (nothing re-reads them from HDFS once the pipeline
+//! finishes), and evicting one that a downstream stage still needs forces
+//! the producing stage's work to be partially re-run — a *recompute cost*
+//! charged to simulated job time (cf. Spark's lineage-based recovery,
+//! arXiv 1804.10563).
+//!
+//! A [`DagJob`] is a list of [`DagStage`]s in topological order: each stage
+//! runs one of the five paper applications ([`App`]) over the outputs of
+//! its `deps` plus any fresh HDFS `input_blocks`. Builders cover the three
+//! shapes the experiments use — [`chain`] (map→shuffle→reduce pipelines),
+//! [`diamond`] (one producer fanned out to two consumers, joined by a
+//! sink) and [`fan_in`] (independent producers joined by one consumer) —
+//! plus [`diamond_suite`]/[`chain_suite`] generators for N concurrent jobs
+//! with disjoint block ranges.
+//!
+//! The cost model lives here too: [`stage_output_bytes`] sizes a stage's
+//! output dataset from its input volume and the app's shuffle ratio, and
+//! [`stage_recompute_cost_s`] prices regenerating it (map CPU over the
+//! input plus reduce CPU over the shuffled fraction). `experiments::
+//! dag_replay` divides that cost across the stage's output blocks and
+//! attaches it to every cache access (`AccessContext::recompute_cost`,
+//! SVM feature 8).
+
+use crate::hdfs::BlockId;
+use crate::util::bytes::MB;
+
+use super::apps::App;
+
+/// One stage of a DAG job: an application run over the outputs of earlier
+/// stages and/or fresh HDFS input blocks.
+#[derive(Debug, Clone)]
+pub struct DagStage {
+    /// Application profile executed by this stage.
+    pub app: App,
+    /// Indices of upstream stages (must be `<` this stage's own index)
+    /// whose output blocks this stage reads.
+    pub deps: Vec<usize>,
+    /// Fresh HDFS input blocks read in addition to `deps` outputs. These
+    /// are scheduled *before* the dependency outputs in the stage's map
+    /// list, so a scan-heavy stage pressures the cache before it returns
+    /// to the intermediate data it shares with sibling stages.
+    pub input_blocks: Vec<BlockId>,
+}
+
+/// A multi-stage job: stages in topological order (deps point backwards).
+#[derive(Debug, Clone)]
+pub struct DagJob {
+    /// Stable job identifier (disjoint across a suite).
+    pub id: u64,
+    /// Stages in topological order.
+    pub stages: Vec<DagStage>,
+}
+
+impl DagJob {
+    /// Build a job, validating the DAG shape: at least one stage, every
+    /// dependency points to an earlier stage (acyclic by construction) and
+    /// every stage has something to read.
+    pub fn new(id: u64, stages: Vec<DagStage>) -> DagJob {
+        assert!(!stages.is_empty(), "DAG job {id} has no stages");
+        for (i, s) in stages.iter().enumerate() {
+            for &d in &s.deps {
+                assert!(d < i, "job {id} stage {i}: dep {d} is not an earlier stage");
+            }
+            assert!(
+                !s.deps.is_empty() || !s.input_blocks.is_empty(),
+                "job {id} stage {i} reads nothing"
+            );
+        }
+        DagJob { id, stages }
+    }
+
+    /// Number of stages.
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Wave level per stage: 0 for sources, `1 + max(dep levels)` otherwise.
+    /// Stages of equal level across concurrent jobs run in the same wave.
+    pub fn levels(&self) -> Vec<usize> {
+        let mut lv = vec![0usize; self.stages.len()];
+        for i in 0..self.stages.len() {
+            lv[i] = self.stages[i]
+                .deps
+                .iter()
+                .map(|&d| lv[d] + 1)
+                .max()
+                .unwrap_or(0);
+        }
+        lv
+    }
+
+    /// Stage indices no other stage depends on (the job finishes when its
+    /// last sink finishes).
+    pub fn sinks(&self) -> Vec<usize> {
+        (0..self.stages.len())
+            .filter(|&i| !self.stages.iter().any(|s| s.deps.contains(&i)))
+            .collect()
+    }
+
+    /// Whether any stage consumes `stage`'s output (sinks write to HDFS
+    /// instead of materializing cache blocks).
+    pub fn has_consumer(&self, stage: usize) -> bool {
+        self.stages.iter().any(|s| s.deps.contains(&stage))
+    }
+
+    /// All fresh HDFS blocks the job reads (sources + per-stage scans).
+    pub fn input_blocks(&self) -> Vec<BlockId> {
+        self.stages.iter().flat_map(|s| s.input_blocks.iter().copied()).collect()
+    }
+}
+
+/// Output volume of a stage over `input_bytes` of input: the app's shuffle
+/// ratio applied to the input (at least one byte, so every consumed stage
+/// materializes something).
+pub fn stage_output_bytes(app: App, input_bytes: u64) -> u64 {
+    ((input_bytes as f64 * app.shuffle_ratio()) as u64).max(1)
+}
+
+/// CPU seconds to regenerate a stage's output from its (disk-resident)
+/// inputs: map CPU over the input volume plus reduce CPU over the shuffled
+/// fraction. This is what an evicted-then-requested output block costs,
+/// pro-rated per block by the replay.
+pub fn stage_recompute_cost_s(app: App, input_bytes: u64) -> f64 {
+    let input_mb = input_bytes as f64 / MB as f64;
+    input_mb * (app.map_cpu_s_per_mb() + app.shuffle_ratio() * app.reduce_cpu_s_per_mb())
+}
+
+/// Linear pipeline: `apps[0]` reads `input_blocks`, every later app reads
+/// its predecessor's output.
+pub fn chain(id: u64, apps: &[App], input_blocks: Vec<BlockId>) -> DagJob {
+    assert!(!apps.is_empty(), "empty chain");
+    let mut stages = vec![DagStage { app: apps[0], deps: Vec::new(), input_blocks }];
+    for (i, &app) in apps.iter().enumerate().skip(1) {
+        stages.push(DagStage { app, deps: vec![i - 1], input_blocks: Vec::new() });
+    }
+    DagJob::new(id, stages)
+}
+
+/// Diamond: `source` feeds two branches which join into `sink`. The first
+/// branch additionally scans `scan_blocks` fresh HDFS blocks (read before
+/// the shared intermediates — the cache-pollution pattern the cost-aware
+/// policies must survive).
+pub fn diamond(
+    id: u64,
+    source: App,
+    branches: (App, App),
+    sink: App,
+    source_blocks: Vec<BlockId>,
+    scan_blocks: Vec<BlockId>,
+) -> DagJob {
+    DagJob::new(
+        id,
+        vec![
+            DagStage { app: source, deps: Vec::new(), input_blocks: source_blocks },
+            DagStage { app: branches.0, deps: vec![0], input_blocks: scan_blocks },
+            DagStage { app: branches.1, deps: vec![0], input_blocks: Vec::new() },
+            DagStage { app: sink, deps: vec![1, 2], input_blocks: Vec::new() },
+        ],
+    )
+}
+
+/// Fan-in: independent `sources` joined by one `sink` stage.
+pub fn fan_in(id: u64, sources: Vec<(App, Vec<BlockId>)>, sink: App) -> DagJob {
+    assert!(!sources.is_empty(), "fan_in needs at least one source");
+    let n = sources.len();
+    let mut stages: Vec<DagStage> = sources
+        .into_iter()
+        .map(|(app, input_blocks)| DagStage { app, deps: Vec::new(), input_blocks })
+        .collect();
+    stages.push(DagStage { app: sink, deps: (0..n).collect(), input_blocks: Vec::new() });
+    DagJob::new(id, stages)
+}
+
+/// Per-job block-id stride: suites give each job a disjoint id range so
+/// traces from different jobs never alias.
+pub const JOB_BLOCK_STRIDE: u64 = 1_000_000;
+
+/// N concurrent diamond jobs: Sort produces a full-volume intermediate
+/// dataset, a Grep branch scans `scan_blocks` fresh single-pass blocks
+/// before re-reading it, an Aggregation branch re-reads it directly, and
+/// an Aggregation sink joins the branches. Sort's shuffle ratio of 1.0
+/// makes the shared intermediates maximally expensive to lose.
+pub fn diamond_suite(n_jobs: usize, source_blocks: usize, scan_blocks: usize) -> Vec<DagJob> {
+    (0..n_jobs as u64)
+        .map(|j| {
+            let base = j * JOB_BLOCK_STRIDE;
+            let sources = (base..base + source_blocks as u64).map(BlockId).collect();
+            let scans = (base + JOB_BLOCK_STRIDE / 2
+                ..base + JOB_BLOCK_STRIDE / 2 + scan_blocks as u64)
+                .map(BlockId)
+                .collect();
+            diamond(
+                j,
+                App::Sort,
+                (App::Grep, App::Aggregation),
+                App::Aggregation,
+                sources,
+                scans,
+            )
+        })
+        .collect()
+}
+
+/// N concurrent three-stage chains (Sort → Join → Aggregation) over
+/// disjoint inputs: the map→shuffle→reduce pipeline shape.
+pub fn chain_suite(n_jobs: usize, source_blocks: usize) -> Vec<DagJob> {
+    (0..n_jobs as u64)
+        .map(|j| {
+            let base = j * JOB_BLOCK_STRIDE;
+            let inputs = (base..base + source_blocks as u64).map(BlockId).collect();
+            chain(j, &[App::Sort, App::Join, App::Aggregation], inputs)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_levels_are_sequential() {
+        let job = chain(0, &[App::Sort, App::Join, App::Grep], vec![BlockId(0), BlockId(1)]);
+        assert_eq!(job.n_stages(), 3);
+        assert_eq!(job.levels(), vec![0, 1, 2]);
+        assert_eq!(job.sinks(), vec![2]);
+        assert!(job.has_consumer(0));
+        assert!(job.has_consumer(1));
+        assert!(!job.has_consumer(2));
+    }
+
+    #[test]
+    fn diamond_shape() {
+        let job = diamond(
+            1,
+            App::Sort,
+            (App::Grep, App::Aggregation),
+            App::Aggregation,
+            vec![BlockId(0)],
+            vec![BlockId(10), BlockId(11)],
+        );
+        assert_eq!(job.levels(), vec![0, 1, 1, 2]);
+        assert_eq!(job.sinks(), vec![3]);
+        // Branch scans ride along as fresh inputs.
+        assert_eq!(job.input_blocks(), vec![BlockId(0), BlockId(10), BlockId(11)]);
+    }
+
+    #[test]
+    fn fan_in_shape() {
+        let job = fan_in(
+            2,
+            vec![(App::Sort, vec![BlockId(0)]), (App::Grep, vec![BlockId(1)])],
+            App::Join,
+        );
+        assert_eq!(job.levels(), vec![0, 0, 1]);
+        assert_eq!(job.sinks(), vec![2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "reads nothing")]
+    fn stage_without_inputs_rejected() {
+        DagJob::new(
+            0,
+            vec![DagStage { app: App::Sort, deps: Vec::new(), input_blocks: Vec::new() }],
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "not an earlier stage")]
+    fn forward_dep_rejected() {
+        DagJob::new(
+            0,
+            vec![
+                DagStage { app: App::Sort, deps: vec![1], input_blocks: Vec::new() },
+                DagStage { app: App::Grep, deps: Vec::new(), input_blocks: vec![BlockId(0)] },
+            ],
+        );
+    }
+
+    #[test]
+    fn cost_model_tracks_volume_and_app() {
+        // Sort shuffles everything: output = input, and losing it costs
+        // map + full reduce CPU.
+        assert_eq!(stage_output_bytes(App::Sort, 512 * MB), 512 * MB);
+        // Grep's output is tiny but never zero.
+        assert!(stage_output_bytes(App::Grep, 512 * MB) < 16 * MB);
+        assert!(stage_output_bytes(App::Grep, 1) >= 1);
+        // Cost grows linearly with input volume.
+        let c1 = stage_recompute_cost_s(App::Sort, 128 * MB);
+        let c4 = stage_recompute_cost_s(App::Sort, 512 * MB);
+        assert!((c4 / c1 - 4.0).abs() < 1e-9);
+        // Sort's full-volume shuffle makes its outputs pricier per input
+        // byte than Grep's.
+        assert!(c1 > stage_recompute_cost_s(App::Grep, 128 * MB));
+    }
+
+    #[test]
+    fn suites_use_disjoint_block_ranges() {
+        let jobs = diamond_suite(3, 4, 8);
+        assert_eq!(jobs.len(), 3);
+        let mut all: Vec<BlockId> = jobs.iter().flat_map(|j| j.input_blocks()).collect();
+        let n = all.len();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), n, "suite jobs must not share blocks");
+        for job in &jobs {
+            assert_eq!(job.levels(), vec![0, 1, 1, 2]);
+        }
+        let chains = chain_suite(2, 4);
+        assert_eq!(chains.len(), 2);
+        assert_eq!(chains[0].levels(), vec![0, 1, 2]);
+    }
+}

@@ -8,8 +8,11 @@ use crate::util::rng::Pcg64;
 
 /// A freshly provisioned simulated cluster.
 pub struct Cluster {
+    /// The cluster parameters the dataset was provisioned with.
     pub cfg: ClusterConfig,
+    /// Block -> location metadata.
     pub namenode: NameNode,
+    /// Per-node cache + disk state.
     pub datanodes: Vec<DataNode>,
 }
 

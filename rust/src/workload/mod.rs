@@ -1,13 +1,21 @@
 //! Workload models: the five HiBench-like applications the paper evaluates,
-//! synthetic dataset registration, seeded block-request traces (Fig 3), and
-//! the Table 8 workload suites (Fig 5/6).
+//! synthetic dataset registration, seeded block-request traces (Fig 3), the
+//! Table 8 workload suites (Fig 5/6), and multi-stage job DAGs whose stage
+//! outputs are cacheable blocks with recompute costs.
 
+/// The five paper applications and their resource/affinity profiles.
 pub mod apps;
+/// Multi-stage DAG jobs (chain/diamond/fan-in) and the recompute-cost model.
+pub mod dag;
+/// Synthetic HDFS dataset registration.
 pub mod datagen;
+/// The Table 8 workload suites (Fig 5/6).
 pub mod suites;
+/// Seeded block-request trace generators (Fig 3).
 pub mod trace;
 
 pub use apps::{App, ALL_APPS};
+pub use dag::{chain_suite, diamond_suite, DagJob, DagStage};
 pub use datagen::Cluster;
 pub use suites::{instantiate, workload_by_name, WorkloadDef, WORKLOADS};
 pub use trace::{

@@ -17,7 +17,9 @@ use super::datagen::Cluster;
 /// One Table 8 row.
 #[derive(Debug, Clone)]
 pub struct WorkloadDef {
+    /// Suite name (W1..W6).
     pub name: &'static str,
+    /// The four applications the suite mixes.
     pub apps: [App; 4],
     /// Paper's total input size in GB (Table 8's "Input data size").
     pub input_gb: f64,
@@ -57,6 +59,7 @@ pub const WORKLOADS: [WorkloadDef; 6] = [
     },
 ];
 
+/// Look up a Table 8 workload suite by its `W1`..`W6` name.
 pub fn workload_by_name(name: &str) -> Option<&'static WorkloadDef> {
     WORKLOADS.iter().find(|w| w.name.eq_ignore_ascii_case(name))
 }

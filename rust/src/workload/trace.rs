@@ -20,13 +20,21 @@ use crate::util::rng::{Pcg64, Zipf};
 /// One request in a trace.
 #[derive(Debug, Clone)]
 pub struct BlockRequest {
+    /// Simulated arrival time.
     pub time: SimTime,
+    /// Requested block.
     pub block: BlockId,
+    /// Block size in bytes.
     pub size: u64,
+    /// Block type (input vs intermediate — the Table 2 "type" feature).
     pub kind: BlockKind,
+    /// Cache affinity of the requesting application.
     pub affinity: CacheAffinity,
     /// Ground truth: is this block requested again later in the trace?
     pub reused_later: bool,
+    /// CPU seconds to regenerate the block if evicted (0.0 for the flat
+    /// trace generators; nonzero only for DAG stage outputs).
+    pub recompute_cost: f64,
 }
 
 /// Trace generator parameters.
@@ -46,6 +54,7 @@ pub struct TraceConfig {
     pub block_size: u64,
     /// Mean inter-arrival time in seconds.
     pub mean_interarrival_s: f64,
+    /// RNG seed — identical seeds produce identical traces.
     pub seed: u64,
 }
 
@@ -115,6 +124,7 @@ pub fn generate(cfg: &TraceConfig) -> Vec<BlockRequest> {
             kind: if is_cold { BlockKind::Intermediate } else { BlockKind::Input },
             affinity,
             reused_later,
+            recompute_cost: 0.0,
         })
         .collect()
 }
@@ -189,6 +199,7 @@ pub fn scan_storm_trace(block_size: u64, seed: u64) -> Vec<BlockRequest> {
                 kind: if is_scan { BlockKind::Intermediate } else { BlockKind::Input },
                 affinity: if is_scan { CacheAffinity::Low } else { CacheAffinity::High },
                 reused_later,
+                recompute_cost: 0.0,
             }
         })
         .collect()

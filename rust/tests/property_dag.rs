@@ -1,0 +1,97 @@
+//! Property tests for the DAG replay path (`experiments::dag_replay`).
+//!
+//! Two invariants (see docs/ARCHITECTURE.md, "CI-enforced invariants"):
+//!
+//! 1. **Determinism** — the replay runs entirely on the simulated clock
+//!    with seeded placement, so the same (policy, seed, shard count)
+//!    must reproduce bit-identical job-time totals and cache counters,
+//!    at 1 shard and at 8.
+//! 2. **Monotonicity in capacity** — a finite cache can only add
+//!    recompute charges on top of what an effectively infinite cache
+//!    pays; it must never finish the suite *faster*.
+
+use h_svm_lru::config::ClusterConfig;
+use h_svm_lru::experiments::run_dag_pass;
+use h_svm_lru::util::bytes::GB;
+use h_svm_lru::workload::dag::{chain_suite, diamond_suite, DagJob};
+
+fn cfg() -> ClusterConfig {
+    ClusterConfig {
+        datanodes: 5,
+        replication: 2,
+        ..Default::default()
+    }
+}
+
+fn suites() -> Vec<(&'static str, Vec<DagJob>)> {
+    vec![
+        ("diamond", diamond_suite(3, 4, 8)),
+        ("chain", chain_suite(2, 4)),
+    ]
+}
+
+#[test]
+fn same_seed_reproduces_identical_totals() {
+    let cfg = cfg();
+    for (name, jobs) in suites() {
+        for &shards in &[1usize, 8] {
+            for &seed in &[7u64, 42] {
+                let capacity = 16 * cfg.block_size;
+                let (a, log_a) =
+                    run_dag_pass("lru", &cfg, shards, capacity, &jobs, seed, &[]).unwrap();
+                let (b, log_b) =
+                    run_dag_pass("lru", &cfg, shards, capacity, &jobs, seed, &[]).unwrap();
+                assert_eq!(
+                    a.total_job_time_s.to_bits(),
+                    b.total_job_time_s.to_bits(),
+                    "{name}: job-time totals diverged at shards={shards} seed={seed}"
+                );
+                assert_eq!(
+                    a.makespan_s.to_bits(),
+                    b.makespan_s.to_bits(),
+                    "{name}: makespan diverged at shards={shards} seed={seed}"
+                );
+                assert_eq!(a.stats.requests, b.stats.requests, "{name}");
+                assert_eq!(a.stats.hits, b.stats.hits, "{name}");
+                assert_eq!(a.stats.evictions, b.stats.evictions, "{name}");
+                assert_eq!(a.recompute_events, b.recompute_events, "{name}");
+                assert_eq!(
+                    a.recompute_seconds.to_bits(),
+                    b.recompute_seconds.to_bits(),
+                    "{name}"
+                );
+                assert_eq!(log_a.len(), log_b.len(), "{name}: access logs diverged");
+                for (ra, rb) in log_a.iter().zip(log_b.iter()) {
+                    assert_eq!(ra.block, rb.block, "{name}: access order diverged");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn finite_cache_never_beats_infinite_cache() {
+    let cfg = cfg();
+    for (name, jobs) in suites() {
+        let (infinite, _) = run_dag_pass("lru", &cfg, 1, 1024 * GB, &jobs, 7, &[]).unwrap();
+        assert_eq!(
+            infinite.recompute_events, 0,
+            "{name}: an infinite cache must never recompute"
+        );
+        for &blocks in &[4u64, 8, 16, 64] {
+            let (finite, _) =
+                run_dag_pass("lru", &cfg, 1, blocks * cfg.block_size, &jobs, 7, &[]).unwrap();
+            assert!(
+                finite.total_job_time_s >= infinite.total_job_time_s,
+                "{name}: {blocks}-block cache finished in {} s, beating the \
+                 infinite cache's {} s",
+                finite.total_job_time_s,
+                infinite.total_job_time_s,
+            );
+            assert!(
+                finite.makespan_s >= infinite.makespan_s,
+                "{name}: finite-cache makespan beat infinite at {blocks} blocks"
+            );
+        }
+    }
+}

@@ -107,6 +107,7 @@ fn single_class_trace(n: usize) -> Vec<BlockRequest> {
             kind: BlockKind::Intermediate,
             affinity: CacheAffinity::Low,
             reused_later: false,
+            recompute_cost: 0.0,
         })
         .collect()
 }

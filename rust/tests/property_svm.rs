@@ -129,7 +129,8 @@ fn features_always_normalized() {
             let now = SimTime(t_ms * 1000);
             for kind in [BlockKind::Input, BlockKind::Intermediate, BlockKind::Output] {
                 for aff in [CacheAffinity::Low, CacheAffinity::Medium, CacheAffinity::High] {
-                    let f = tracker.features(BlockId(block), kind, 64 * MB, aff, now);
+                    let f =
+                        tracker.features(BlockId(block), kind, 64 * MB, aff, 0.5, now);
                     for (i, v) in f.iter().enumerate() {
                         if !(0.0..=1.0).contains(v) || !v.is_finite() {
                             return Err(format!("feature {i} = {v} out of [0,1]"));
