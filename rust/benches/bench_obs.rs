@@ -1,0 +1,103 @@
+//! Telemetry overhead gate — the observability acceptance criterion held
+//! as a bench: an 8-shard h-svm-lru fig3 replay with the full metrics
+//! stack enabled (registry histograms + windowed series + audit ring)
+//! must stay close to the same replay with telemetry off, and a disabled
+//! registry must be a near-zero-cost no-op on the hot path.
+//!
+//! Flags: `--json` writes BENCH_obs.json (compared against
+//! `BENCH_baseline/BENCH_obs.json` by the CI bench-gate job), `--quick`
+//! drops to CI-smoke iteration counts. The metrics-on/metrics-off ratio
+//! is always printed; set `BENCH_OBS_STRICT=1` to turn the 5% budget into
+//! a hard assertion (shared CI runners are too noisy to enforce it on
+//! every build, the bench-gate min_ns lines are the durable guard).
+
+use h_svm_lru::bench_support::{banner, black_box, write_json, Bencher};
+use h_svm_lru::cache::ShardedCache;
+use h_svm_lru::experiments::sharded_replay::{
+    classify_trace_scored, replay_on_shards, replay_on_shards_observed,
+};
+use h_svm_lru::obs::{MetricsRegistry, ObsConfig};
+use h_svm_lru::svm::KernelKind;
+use h_svm_lru::util::bytes::MB;
+use h_svm_lru::workload::fig3_trace;
+
+const SHARDS: usize = 8;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json = args.iter().any(|a| a == "--json");
+    let quick = args.iter().any(|a| a == "--quick");
+
+    let bench = if quick { Bencher::new(1, 3) } else { Bencher::new(2, 10) };
+    let repeats: u64 = if quick { 4 } else { 16 };
+
+    let trace = fig3_trace(64 * MB, 11);
+    let (features, scores) =
+        classify_trace_scored(&trace, KernelKind::Rbf, 64).expect("classifier pass");
+    let classes: Vec<Option<bool>> = scores.iter().map(|s| s.map(|v| v > 0.0)).collect();
+    let capacity = 8 * 64 * MB;
+    let ops = trace.len() as u64 * repeats;
+    let mut results = Vec::new();
+
+    banner("telemetry overhead — 8-shard h-svm-lru fig3 replay, metrics off vs on");
+
+    let res = bench.run_per_op("observed replay, metrics off", ops, || {
+        for _ in 0..repeats {
+            let cache = ShardedCache::from_registry("h-svm-lru", SHARDS, capacity).unwrap();
+            black_box(replay_on_shards(&cache, &trace, &classes));
+        }
+    });
+    println!("{}", res.report());
+    let off_wall = res.mean;
+    results.push(res);
+
+    let res = bench.run_per_op("observed replay, disabled registry", ops, || {
+        for _ in 0..repeats {
+            let cache = ShardedCache::from_registry("h-svm-lru", SHARDS, capacity).unwrap();
+            let registry = MetricsRegistry::disabled();
+            black_box(replay_on_shards_observed(
+                &cache,
+                &trace,
+                &features,
+                &scores,
+                &registry,
+                ObsConfig::default(),
+            ));
+        }
+    });
+    println!("{}", res.report());
+    results.push(res);
+
+    let res = bench.run_per_op("observed replay, metrics on", ops, || {
+        for _ in 0..repeats {
+            let cache = ShardedCache::from_registry("h-svm-lru", SHARDS, capacity).unwrap();
+            let registry = MetricsRegistry::new();
+            black_box(replay_on_shards_observed(
+                &cache,
+                &trace,
+                &features,
+                &scores,
+                &registry,
+                ObsConfig::default(),
+            ));
+        }
+    });
+    println!("{}", res.report());
+    let on_wall = res.mean;
+    results.push(res);
+
+    let overhead = on_wall.as_secs_f64() / off_wall.as_secs_f64().max(1e-12);
+    println!("\nmetrics-on overhead over metrics-off: {overhead:.3}x (budget: 1.05x)");
+    if std::env::var_os("BENCH_OBS_STRICT").is_some() {
+        assert!(
+            overhead <= 1.05,
+            "telemetry overhead {overhead:.3}x exceeds the 5% acceptance budget"
+        );
+    }
+
+    if json {
+        let path = "BENCH_obs.json";
+        write_json(path, "obs", &results).expect("writing bench json");
+        println!("\nwrote {path} ({} results)", results.len());
+    }
+}

@@ -10,7 +10,7 @@ pub mod compare;
 
 use std::time::{Duration, Instant};
 
-use crate::util::stats::{percentile, Welford};
+use crate::util::stats::{Summary, Welford};
 
 /// One benchmark measurement series.
 #[derive(Debug, Clone)]
@@ -116,14 +116,17 @@ impl Bencher {
             w.push(dt.as_secs_f64());
             samples.push(dt.as_secs_f64());
         }
+        // One sort serves min, p50 and p95 (util::stats::Summary) — the
+        // free `percentile` clones and re-sorts per call.
+        let summary = Summary::of(&samples);
         BenchResult {
             name: name.to_string(),
             iterations: self.iterations as u64,
             mean: Duration::from_secs_f64(w.mean()),
             std_dev: Duration::from_secs_f64(w.std_dev()),
-            min: Duration::from_secs_f64(samples.iter().copied().fold(f64::INFINITY, f64::min)),
-            p50: Duration::from_secs_f64(percentile(&samples, 50.0)),
-            p95: Duration::from_secs_f64(percentile(&samples, 95.0)),
+            min: Duration::from_secs_f64(summary.min()),
+            p50: Duration::from_secs_f64(summary.percentile(50.0)),
+            p95: Duration::from_secs_f64(summary.percentile(95.0)),
         }
     }
 

@@ -98,6 +98,16 @@ pub trait AdmissionPolicy: Send {
 
     /// `block` left the cache (policy eviction or external uncache).
     fn on_evict(&mut self, block: BlockId);
+
+    /// Whether this policy's admit/admit_over decisions actually compare
+    /// the candidate against the victim (a frequency duel). Observability
+    /// only — the eviction-cause classifier
+    /// ([`crate::cache::EvictCause::AdmissionDuel`]) uses it to tell a
+    /// dueled eviction from a rubber-stamped one; never consulted for
+    /// admission decisions. Default: no duel.
+    fn duels(&self) -> bool {
+        false
+    }
 }
 
 /// Admission counters kept by the owning cache. `admitted` counts inserts

@@ -71,6 +71,10 @@ impl AdmissionPolicy for TinyLfu {
     }
 
     fn on_evict(&mut self, _block: BlockId) {}
+
+    fn duels(&self) -> bool {
+        true
+    }
 }
 
 #[cfg(test)]

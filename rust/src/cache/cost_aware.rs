@@ -40,12 +40,21 @@ pub struct CostAware {
     /// Last recompute cost reported for each tracked block.
     costs: IdHashMap<BlockId, f64>,
     k: usize,
+    /// Whether the latest `choose_victim` deviated from the base order
+    /// (reported through [`CachePolicy::took_cost_tie_break`]).
+    last_tie: bool,
 }
 
 impl CostAware {
     /// Wrap `inner`, reporting `name` (the registry key, e.g. "lru-cost").
     pub fn new(inner: Box<dyn CachePolicy>, name: &'static str) -> Self {
-        CostAware { inner, name, costs: IdHashMap::default(), k: DEFAULT_CANDIDATE_WINDOW }
+        CostAware {
+            inner,
+            name,
+            costs: IdHashMap::default(),
+            k: DEFAULT_CANDIDATE_WINDOW,
+            last_tie: false,
+        }
     }
 
     /// Override the candidate-window size (`k >= 1`).
@@ -80,13 +89,21 @@ impl CachePolicy for CostAware {
         // victim first, so strict `<` keeps the base policy's choice on
         // ties — uniform costs degrade to exactly the base policy.
         let mut best: Option<(BlockId, f64)> = None;
+        let mut first: Option<BlockId> = None;
         for b in self.inner.victim_candidates(now, self.k) {
+            first.get_or_insert(b);
             let cost = self.costs.get(&b).copied().unwrap_or(0.0);
             match best {
                 Some((_, c)) if cost >= c => {}
                 _ => best = Some((b, cost)),
             }
         }
+        // The tie-break "fired" iff the pick differs from the base
+        // policy's own head-of-order choice.
+        self.last_tie = match (best, first) {
+            (Some((b, _)), Some(f)) => b != f,
+            _ => false,
+        };
         best.map(|(b, _)| b)
     }
 
@@ -115,6 +132,10 @@ impl CachePolicy for CostAware {
 
     fn admits(&self, block: BlockId, ctx: &AccessContext) -> bool {
         self.inner.admits(block, ctx)
+    }
+
+    fn took_cost_tie_break(&self) -> bool {
+        self.last_tie
     }
 }
 
@@ -153,11 +174,13 @@ mod tests {
         p.on_insert(BlockId(3), &ctx(3, 45.0));
         // Plain LRU would pick 1; the cost tie-break picks the free block.
         assert_eq!(p.choose_victim(SimTime(4)), Some(BlockId(2)));
+        assert!(p.took_cost_tie_break(), "deviation from base order must be flagged");
         // Idempotent until the eviction is confirmed.
         assert_eq!(p.choose_victim(SimTime(5)), Some(BlockId(2)));
         p.on_evict(BlockId(2));
         // Only expensive blocks left: back to the base LRU order.
         assert_eq!(p.choose_victim(SimTime(6)), Some(BlockId(1)));
+        assert!(!p.took_cost_tie_break(), "base-order pick must not be flagged");
     }
 
     #[test]

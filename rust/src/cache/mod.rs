@@ -170,6 +170,33 @@ impl AccessContext {
     }
 }
 
+/// Why a victim was evicted — the per-eviction breakdown the
+/// observability layer ([`crate::obs`]) aggregates per time window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EvictCause {
+    /// Pure capacity pressure: the policy's own order picked the victim
+    /// and no other mechanism intervened.
+    Capacity,
+    /// The admission layer dueled the newcomer against this victim and
+    /// the newcomer won (e.g. TinyLFU's frequency duel).
+    AdmissionDuel,
+    /// A cost-aware wrapper re-ranked the base policy's candidate window
+    /// and picked a cheaper-to-recompute victim than the base order would
+    /// have.
+    CostTieBreak,
+}
+
+impl EvictCause {
+    /// Stable lowercase name (used by the metrics export).
+    pub fn name(self) -> &'static str {
+        match self {
+            EvictCause::Capacity => "capacity",
+            EvictCause::AdmissionDuel => "admission",
+            EvictCause::CostTieBreak => "cost_tie",
+        }
+    }
+}
+
 /// Eviction-order policy. The `BlockCache` guarantees the call protocol:
 /// `on_insert` for blocks not present, `on_hit` for present blocks,
 /// `choose_victim`/`on_evict` pairs while space is needed.
@@ -214,6 +241,14 @@ pub trait CachePolicy: Send {
     fn admits(&self, _block: BlockId, _ctx: &AccessContext) -> bool {
         true
     }
+
+    /// Whether the most recent [`CachePolicy::choose_victim`] call broke
+    /// the base order's tie toward a cheaper victim (overridden by
+    /// [`cost_aware::CostAware`]). Observability only — never consulted
+    /// for eviction decisions.
+    fn took_cost_tie_break(&self) -> bool {
+        false
+    }
 }
 
 /// Outcome of a cache access through `BlockCache::access_or_insert`.
@@ -223,6 +258,11 @@ pub struct AccessOutcome {
     pub hit: bool,
     /// Blocks evicted to make room (empty on hits).
     pub evicted: Vec<BlockId>,
+    /// Why each victim in `evicted` went (parallel to `evicted`).
+    pub causes: Vec<EvictCause>,
+    /// Eviction-loop iterations this access performed (victim selections
+    /// — the "eviction scan work" the obs layer histograms).
+    pub scan_steps: u32,
     /// Whether the block is cached after the access (false when the policy
     /// declined admission or the block exceeds capacity).
     pub inserted: bool,
@@ -326,17 +366,40 @@ impl BlockCache {
             self.admission.on_access(block, ctx);
             self.policy.on_hit(block, ctx);
             debug_assert_eq!(self.policy.len(), self.sizes.len());
-            return AccessOutcome { hit: true, evicted: Vec::new(), inserted: true };
+            return AccessOutcome {
+                hit: true,
+                evicted: Vec::new(),
+                causes: Vec::new(),
+                scan_steps: 0,
+                inserted: true,
+            };
         }
-        let evicted = self.insert(block, ctx);
+        let mut causes = Vec::new();
+        let mut scan_steps = 0u32;
+        let evicted = self.insert_classified(block, ctx, &mut causes, &mut scan_steps);
         let inserted = self.sizes.contains_key(&block);
-        AccessOutcome { hit: false, evicted, inserted }
+        AccessOutcome { hit: false, evicted, causes, scan_steps, inserted }
     }
 
     /// Insert a missing block, evicting per policy until it fits. Returns
     /// the evicted blocks. Oversized, policy-declined or admission-refused
     /// blocks are skipped.
     pub fn insert(&mut self, block: BlockId, ctx: &AccessContext) -> Vec<BlockId> {
+        let mut causes = Vec::new();
+        let mut scan_steps = 0u32;
+        self.insert_classified(block, ctx, &mut causes, &mut scan_steps)
+    }
+
+    /// [`BlockCache::insert`] plus per-victim [`EvictCause`] classification
+    /// and scan-step counting. The classification reads flags the eviction
+    /// path sets anyway, so the uninstrumented behavior is untouched.
+    fn insert_classified(
+        &mut self,
+        block: BlockId,
+        ctx: &AccessContext,
+        causes: &mut Vec<EvictCause>,
+        scan_steps: &mut u32,
+    ) -> Vec<BlockId> {
         assert!(!self.sizes.contains_key(&block), "insert of cached block");
         self.admission.on_access(block, ctx);
         let mut evicted = Vec::new();
@@ -368,23 +431,34 @@ impl BlockCache {
             }
         }
         while self.used + ctx.size > self.capacity {
+            *scan_steps += 1;
             // Consume the admission probe's victim first so the policy is
             // asked exactly once per eviction; it was already dueled inside
             // `admit`. Every further victim gets its own duel — a
             // multi-eviction insert must beat each block it displaces.
-            let victim = match peeked.take() {
-                Some(victim) => victim,
+            let (victim, dueled) = match peeked.take() {
+                // The probe only runs when the admission policy compares
+                // the newcomer against a victim, so a consumed peek means
+                // a duel already happened inside `admit`.
+                Some(victim) => (victim, true),
                 None => match self.policy.choose_victim(ctx.time) {
                     Some(victim) => {
                         if !self.admission.admit_over(block, ctx, victim) {
                             self.admission_stats.rejected += 1;
                             return evicted;
                         }
-                        victim
+                        (victim, self.admission.duels())
                     }
                     None => return evicted, // policy refuses to evict
                 },
             };
+            causes.push(if self.policy.took_cost_tie_break() {
+                EvictCause::CostTieBreak
+            } else if dueled {
+                EvictCause::AdmissionDuel
+            } else {
+                EvictCause::Capacity
+            });
             self.policy.on_evict(victim);
             self.admission.on_evict(victim);
             let size = self.sizes.remove(&victim).expect("victim not in cache");
@@ -521,6 +595,34 @@ mod tests {
         assert!(!cache.contains(BlockId(3)));
         // X and Y's own inserts were admitted; C was vetoed twice.
         assert_eq!(cache.admission_stats(), AdmissionStats { admitted: 2, rejected: 2 });
+    }
+
+    #[test]
+    fn eviction_causes_classify_capacity_vs_duel() {
+        // Plain LRU + AlwaysAdmit: every eviction is pure capacity.
+        let mut cache = BlockCache::new(Box::new(Lru::new()), 200);
+        cache.access_or_insert(BlockId(1), &ctx(1, 100));
+        cache.access_or_insert(BlockId(2), &ctx(2, 100));
+        let o = cache.access_or_insert(BlockId(3), &ctx(3, 200));
+        assert_eq!(o.evicted, vec![BlockId(1), BlockId(2)]);
+        assert_eq!(o.causes, vec![EvictCause::Capacity, EvictCause::Capacity]);
+        assert_eq!(o.scan_steps, 2);
+        assert_eq!(cache.access_or_insert(BlockId(3), &ctx(4, 200)).scan_steps, 0);
+
+        // TinyLFU: the victim the newcomer dueled (and beat) is an
+        // admission-duel eviction.
+        let mut cache = BlockCache::with_admission(
+            Box::new(Lru::new()),
+            admission::make_admission("tinylfu").unwrap(),
+            1,
+        );
+        cache.access_or_insert(BlockId(1), &ctx(1, 1));
+        // Seen twice -> estimate 2 beats the resident's 1.
+        cache.access_or_insert(BlockId(9), &ctx(2, 1));
+        let o = cache.access_or_insert(BlockId(9), &ctx(3, 1));
+        assert!(o.inserted);
+        assert_eq!(o.evicted, vec![BlockId(1)]);
+        assert_eq!(o.causes, vec![EvictCause::AdmissionDuel]);
     }
 
     #[test]

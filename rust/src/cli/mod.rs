@@ -35,6 +35,9 @@ use crate::config::SvmConfig;
 #[derive(Debug, Clone)]
 pub struct Cli {
     pub command: String,
+    /// One positional operand after the command (only `report` takes one:
+    /// the metrics JSONL path).
+    pub operand: Option<String>,
     pub flags: HashMap<String, String>,
     pub switches: Vec<String>,
 }
@@ -44,6 +47,7 @@ impl Cli {
     /// switches don't (`--csv`).
     pub fn parse(args: &[String]) -> Result<Cli> {
         let mut command = String::new();
+        let mut operand = None;
         let mut flags = HashMap::new();
         let mut switches = Vec::new();
         let valued = [
@@ -68,7 +72,10 @@ impl Cli {
             "--baseline",
             "--current",
             "--tolerance",
+            "--metrics-out",
         ];
+        // Commands taking one positional operand after the command word.
+        let takes_operand = ["report"];
         // Known valueless switches. Anything else starting with `--` is a
         // typo and must exit non-zero — previously it was collected as a
         // never-read switch and the run silently proceeded without it.
@@ -92,6 +99,9 @@ impl Cli {
             } else if command.is_empty() {
                 command = a.clone();
                 i += 1;
+            } else if operand.is_none() && takes_operand.contains(&command.as_str()) {
+                operand = Some(a.clone());
+                i += 1;
             } else {
                 bail!("unexpected argument {a:?}");
             }
@@ -99,7 +109,7 @@ impl Cli {
         if command.is_empty() {
             command = "help".to_string();
         }
-        Ok(Cli { command, flags, switches })
+        Ok(Cli { command, operand, flags, switches })
     }
 
     pub fn flag(&self, name: &str) -> Option<&str> {
@@ -271,6 +281,9 @@ SUBCOMMANDS
                job concurrency [--policy P] [--jobs N] [--shards N]
                [--cache-blocks N] [--smoke  assert cost-aware
                H-SVM-LRU beats cost-blind LRU on total job time]
+  report FILE  render a --metrics-out JSONL file as windowed tables:
+               per-window hit ratio, eviction-cause breakdown, occupancy,
+               classifier confusion counts, plus scalars and histograms
   bench-gate   compare --current bench JSONs against --baseline records,
                failing on any tracked-metric regression beyond
                --tolerance (default 0.15); the CI regression gate
@@ -294,6 +307,10 @@ FLAGS
   --readers N              concurrent stats() reader threads during the
                            `sharded` replay (default 0)
   --jobs N                 concurrent DAG jobs for `dag` (default 3)
+  --metrics-out FILE       `sharded`/`online`/`dag`: write the telemetry
+                           layer's windowed series, eviction audit and
+                           registry scalars as JSONL (render with
+                           `repro report FILE`)
   --baseline DIR           `bench-gate`: committed BENCH_baseline dir
   --current DIR            `bench-gate`: dir with freshly written JSONs
   --tolerance F            `bench-gate`: allowed relative regression
@@ -413,6 +430,30 @@ mod tests {
         assert_eq!(cli.flag("baseline"), Some("BENCH_baseline"));
         assert_eq!(cli.flag("current"), Some("rust"));
         assert!(Cli::parse(&["bench-gate".into(), "--baseline".into()]).is_err());
+    }
+
+    #[test]
+    fn metrics_out_is_valued() {
+        let cli = parse(&["sharded", "--metrics-out", "m.jsonl"]);
+        assert_eq!(cli.flag("metrics-out"), Some("m.jsonl"));
+        assert!(Cli::parse(&["sharded".into(), "--metrics-out".into()]).is_err());
+    }
+
+    #[test]
+    fn report_takes_one_positional_operand() {
+        let cli = parse(&["report", "metrics.jsonl"]);
+        assert_eq!(cli.command, "report");
+        assert_eq!(cli.operand.as_deref(), Some("metrics.jsonl"));
+        // A second positional is still rejected…
+        assert!(Cli::parse(&[
+            "report".into(),
+            "a.jsonl".into(),
+            "b.jsonl".into()
+        ])
+        .is_err());
+        // …and other commands take none at all.
+        assert!(Cli::parse(&["sharded".into(), "stray".into()]).is_err());
+        assert_eq!(parse(&["report"]).operand, None);
     }
 
     #[test]

@@ -33,6 +33,7 @@ use std::time::{Duration, Instant};
 
 use crate::cache::order_list::{OrderHandle, OrderList};
 use crate::cache::sharded::shard_of;
+use crate::obs::{HistHandle, MetricClass, MetricsRegistry};
 use crate::sim::{SimDuration, SimTime};
 use crate::util::fasthash::IdHashMap;
 
@@ -378,6 +379,64 @@ impl BatcherProbe {
             Duration::from_nanos(self.counters.flush_ns.load(Ordering::Relaxed) / flushes)
         }
     }
+
+    /// Expose every cold-path counter as a `{prefix}.…` gauge so the
+    /// JSONL export carries the same numbers the accessor API reports.
+    /// The probe stays the programmatic view; the gauges are thin reads
+    /// over the same shared cells, so they agree by construction.
+    pub fn register_gauges(&self, registry: &MetricsRegistry, prefix: &str) {
+        let gauge = |name: &str, read: fn(&ColdCounters) -> &AtomicU64| {
+            let counters = Arc::clone(&self.counters);
+            registry.gauge(&format!("{prefix}.{name}"), move || {
+                read(&counters).load(Ordering::Relaxed)
+            });
+        };
+        gauge("cold_queries", |c| &c.cold);
+        gauge("deferred", |c| &c.deferred);
+        gauge("flushes", |c| &c.flushes);
+        gauge("flushes_by_fill", |c| &c.flush_fill);
+        gauge("flushes_by_deadline", |c| &c.flush_deadline);
+        gauge("flushed_queries", |c| &c.flushed_queries);
+        gauge("dropped", |c| &c.dropped);
+    }
+}
+
+/// Per-shard histogram recorders of one [`ShardBatcher`] — flush sizes and
+/// simulated queue waits are [`MetricClass::Deterministic`] (exported),
+/// backend wall-clock latency is [`MetricClass::Volatile`] (log-only).
+/// `Default` is fully inert, as are handles from a disabled registry, so
+/// the un-instrumented hot path pays one null check per flush.
+#[derive(Debug, Clone, Default)]
+pub struct BatcherObs {
+    shard: usize,
+    flush_size: HistHandle,
+    queue_wait_us: HistHandle,
+    flush_wall_ns: HistHandle,
+}
+
+impl BatcherObs {
+    /// Recorder for shard `shard` of `shards`, registering the shared
+    /// histograms on first use.
+    pub fn register(registry: &MetricsRegistry, shards: usize, shard: usize) -> Self {
+        BatcherObs {
+            shard,
+            flush_size: registry.histogram(
+                "batcher.flush_size",
+                MetricClass::Deterministic,
+                shards,
+            ),
+            queue_wait_us: registry.histogram(
+                "batcher.queue_wait_us",
+                MetricClass::Deterministic,
+                shards,
+            ),
+            flush_wall_ns: registry.histogram(
+                "batcher.flush_wall_ns",
+                MetricClass::Volatile,
+                shards,
+            ),
+        }
+    }
 }
 
 /// One shard's predictor: a [`PredictionBatcher`] behind a bounded
@@ -398,6 +457,7 @@ pub struct ShardBatcher {
     /// wall clock, so flush timing is deterministic under a fixed seed.
     oldest: Option<SimTime>,
     counters: Arc<ColdCounters>,
+    obs: BatcherObs,
 }
 
 impl ShardBatcher {
@@ -416,7 +476,13 @@ impl ShardBatcher {
             deadline: cfg.deadline,
             oldest: None,
             counters: probe.counters,
+            obs: BatcherObs::default(),
         }
+    }
+
+    /// Attach histogram recorders (inert by default — see [`BatcherObs`]).
+    pub fn set_obs(&mut self, obs: BatcherObs) {
+        self.obs = obs;
     }
 
     /// A probe sharing this batcher's counters.
@@ -469,7 +535,7 @@ impl ShardBatcher {
             }
             return Ok(None);
         }
-        self.flush_now(backend, fill)?;
+        self.flush_now(backend, fill, Some(now))?;
         Ok(self.inner.class_of(block))
     }
 
@@ -486,7 +552,7 @@ impl ShardBatcher {
     pub fn maybe_flush(&mut self, backend: &mut dyn SvmBackend, now: SimTime) -> Result<()> {
         if let Some(oldest) = self.oldest {
             if oldest.duration_until(now) >= self.deadline {
-                self.flush_now(backend, false)?;
+                self.flush_now(backend, false, Some(now))?;
             }
         }
         Ok(())
@@ -494,11 +560,24 @@ impl ShardBatcher {
 
     /// Unconditional flush (end of run; counted as a deadline flush).
     pub fn flush(&mut self, backend: &mut dyn SvmBackend) -> Result<()> {
-        self.flush_now(backend, false)
+        self.flush_now(backend, false, None)
     }
 
-    fn flush_now(&mut self, backend: &mut dyn SvmBackend, by_fill: bool) -> Result<()> {
+    fn flush_now(
+        &mut self,
+        backend: &mut dyn SvmBackend,
+        by_fill: bool,
+        now: Option<SimTime>,
+    ) -> Result<()> {
         let n = self.inner.pending_len() as u64;
+        // Simulated queue wait of the oldest pending query — deterministic
+        // under a fixed seed, unlike the wall-clock flush latency below.
+        // Forced end-of-run flushes pass no `now` and record no wait.
+        if let (Some(now), Some(oldest), true) = (now, self.oldest, n > 0) {
+            self.obs
+                .queue_wait_us
+                .record(self.obs.shard, oldest.duration_until(now).micros());
+        }
         self.oldest = None;
         if n == 0 {
             return Ok(());
@@ -518,9 +597,10 @@ impl ShardBatcher {
                 self.counters.flush_deadline.fetch_add(1, Ordering::Relaxed);
             }
             self.counters.flushed_queries.fetch_add(scored, Ordering::Relaxed);
-            self.counters
-                .flush_ns
-                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let wall_ns = t0.elapsed().as_nanos() as u64;
+            self.counters.flush_ns.fetch_add(wall_ns, Ordering::Relaxed);
+            self.obs.flush_size.record(self.obs.shard, scored);
+            self.obs.flush_wall_ns.record(self.obs.shard, wall_ns);
         }
         if scored < n {
             self.counters.dropped.fetch_add(n - scored, Ordering::Relaxed);
@@ -662,6 +742,16 @@ impl BatcherPool {
             shard.flush(backend)?;
         }
         Ok(())
+    }
+
+    /// Attach per-shard histogram recorders and the `batcher.*` cold-path
+    /// gauges to `registry` (a no-op against a disabled registry).
+    pub fn attach_obs(&mut self, registry: &MetricsRegistry) {
+        let n = self.shards.len();
+        for (i, shard) in self.shards.iter_mut().enumerate() {
+            shard.set_obs(BatcherObs::register(registry, n, i));
+        }
+        self.probe.register_gauges(registry, "batcher");
     }
 
     /// The shared cold-path counters of every shard batcher.
@@ -1157,6 +1247,67 @@ mod tests {
         }
         assert_eq!(be.calls, calls);
         assert_eq!(pool.stats().class_cache_hits, 32);
+    }
+
+    /// The obs hook records flush sizes + simulated queue waits into the
+    /// registry and mirrors the probe counters as `batcher.*` gauges,
+    /// without disturbing the probe's own accounting.
+    #[test]
+    fn obs_hook_records_flushes_and_mirrors_probe_gauges() {
+        let mut be = FakeBackend { calls: 0 };
+        let registry = MetricsRegistry::new();
+        let cfg = BatcherConfig {
+            queue_depth: 3,
+            deadline: SimDuration::from_secs_f64(3600.0),
+            ..BatcherConfig::default()
+        };
+        let mut batcher = ShardBatcher::new(cfg);
+        batcher.set_obs(BatcherObs::register(&registry, 1, 0));
+        batcher.probe().register_gauges(&registry, "batcher");
+        for i in 0..3u64 {
+            batcher.predict(&mut be, BlockId(i), 0, fv(0.9), SimTime(10 * i)).unwrap();
+        }
+        assert_eq!(be.calls, 1, "third query fills the queue");
+        let snaps = registry.hist_snapshots();
+        let hist = |name: &str| {
+            snaps.iter().find(|(n, _, _)| n == name).unwrap_or_else(|| panic!("{name}"))
+        };
+        let flush = hist("batcher.flush_size");
+        assert_eq!(flush.2.count, 1);
+        assert_eq!(flush.2.sum, 3, "one flush scored three queries");
+        assert_eq!(flush.1, MetricClass::Deterministic);
+        let wait = hist("batcher.queue_wait_us");
+        assert_eq!(wait.2.count, 1);
+        assert_eq!(wait.2.sum, 20, "oldest entry waited 20 simulated us");
+        assert_eq!(hist("batcher.flush_wall_ns").1, MetricClass::Volatile);
+        let gauges = registry.gauge_values();
+        let gauge = |name: &str| {
+            gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap()
+        };
+        let probe = batcher.probe();
+        assert_eq!(gauge("batcher.cold_queries"), probe.cold_queries());
+        assert_eq!(gauge("batcher.deferred"), probe.deferred());
+        assert_eq!(gauge("batcher.flushes"), probe.flushes());
+        assert_eq!(gauge("batcher.flushed_queries"), probe.flushed_queries());
+        assert_eq!(gauge("batcher.dropped"), probe.dropped());
+    }
+
+    #[test]
+    fn pool_attach_obs_covers_every_shard() {
+        let mut be = FakeBackend { calls: 0 };
+        let registry = MetricsRegistry::new();
+        let mut pool = BatcherPool::new(2, BatcherConfig::default());
+        pool.attach_obs(&registry);
+        for i in 0..8u64 {
+            pool.predict(&mut be, BlockId(i), 0, fv(0.9), SimTime(i)).unwrap();
+        }
+        let snaps = registry.hist_snapshots();
+        let flush = snaps.iter().find(|(n, _, _)| n == "batcher.flush_size").unwrap();
+        assert_eq!(flush.2.sum, 8, "every cold query shows in the merged histogram");
+        assert_eq!(
+            registry.gauge_values().iter().filter(|(n, _)| n.starts_with("batcher.")).count(),
+            7
+        );
     }
 
     #[test]

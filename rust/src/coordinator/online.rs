@@ -333,6 +333,20 @@ impl SampleProbe {
     pub fn dropped(&self) -> u64 {
         self.counters.dropped.load(Ordering::Relaxed)
     }
+
+    /// Expose both counters as `{prefix}.sent` / `{prefix}.dropped`
+    /// gauges — the accessor API stays the programmatic view, the gauges
+    /// put the same cells in the `--metrics-out` JSONL.
+    pub fn register_gauges(&self, registry: &crate::obs::MetricsRegistry, prefix: &str) {
+        let counters = Arc::clone(&self.counters);
+        registry.gauge(&format!("{prefix}.sent"), move || {
+            counters.sent.load(Ordering::Relaxed)
+        });
+        let counters = Arc::clone(&self.counters);
+        registry.gauge(&format!("{prefix}.dropped"), move || {
+            counters.dropped.load(Ordering::Relaxed)
+        });
+    }
 }
 
 /// A bounded sample channel: `(emitter, trainer-side receiver)`. The
@@ -497,6 +511,20 @@ mod tests {
         drop(rx);
         assert!(!tx.emit(fv(0.4), true), "disconnected channel drops");
         assert_eq!(tx.dropped(), 2);
+    }
+
+    #[test]
+    fn sample_probe_gauges_mirror_the_accessors() {
+        let registry = crate::obs::MetricsRegistry::new();
+        let (tx, _rx) = sample_channel(1);
+        tx.probe().register_gauges(&registry, "samples");
+        assert!(tx.emit(fv(0.1), true));
+        assert!(!tx.emit(fv(0.2), false), "bound 1: second emit drops");
+        let gauges = registry.gauge_values();
+        assert_eq!(
+            gauges,
+            vec![("samples.dropped".to_string(), 1), ("samples.sent".to_string(), 1)]
+        );
     }
 
     #[test]

@@ -31,12 +31,16 @@ use std::collections::{HashMap, HashSet};
 use anyhow::{anyhow, Result};
 
 use crate::cache::sharded::{shard_of, ShardStats, ShardedCache};
-use crate::cache::{AccessContext, CacheAffinity};
+use crate::cache::{AccessContext, CacheAffinity, EvictCause};
 use crate::config::ClusterConfig;
 use crate::hdfs::topology::Placement;
 use crate::hdfs::{reader, BlockId, BlockKind, DataNodeId, ReadSource};
 use crate::mapreduce::job::JobId;
 use crate::mapreduce::scheduler::{AccessRequest, BlockRead, BlockService, Scheduler};
+use crate::obs::{
+    merge_audits, merge_series, AuditEntry, EvictionAudit, HistHandle, MetricClass,
+    MetricsRegistry, ObsConfig, RunObservations, WindowSeries,
+};
 use crate::sim::{SimDuration, SimTime};
 use crate::svm::kernel::KernelKind;
 use crate::util::fasthash::IdHashMap;
@@ -44,7 +48,7 @@ use crate::util::rng::Pcg64;
 use crate::workload::dag::{self, DagJob};
 use crate::workload::BlockRequest;
 
-use super::sharded_replay::classify_trace;
+use super::sharded_replay::{classify_trace, classify_trace_scored};
 
 /// Stage-output block ids start here — far above any suite's input range.
 const OUTPUT_BLOCK_BASE: u64 = 1 << 40;
@@ -89,6 +93,34 @@ struct BlockMeta {
     replicas: Vec<DataNodeId>,
 }
 
+/// An eviction seen mid-replay whose ground-truth reuse is only knowable
+/// after the pass log is complete — [`run_dag_observed`] resolves them
+/// against the labeled log once the replay ends.
+#[derive(Debug, Clone, Copy)]
+struct PendingEvict {
+    /// Simulated time of the evicting access.
+    at: SimTime,
+    /// Log index of the victim's most recent access (its prediction and,
+    /// post-labeling, its `reused_later` ground truth).
+    log_idx: usize,
+    cause: EvictCause,
+    block: BlockId,
+}
+
+/// In-replay observation state of a [`DagBlockService`] (single-threaded:
+/// the scheduler drives the whole cache from one thread, so one window
+/// series and one running occupancy counter suffice).
+#[derive(Debug)]
+struct DagObs {
+    windows: WindowSeries,
+    /// Victim's-last-access index per resident block.
+    last: IdHashMap<BlockId, usize>,
+    pending: Vec<PendingEvict>,
+    /// Blocks resident across ALL shards (insertions − evictions).
+    resident: u64,
+    scan_hist: HistHandle,
+}
+
 /// [`BlockService`] over one [`ShardedCache`]: inputs are disk-backed with
 /// placed replicas, stage outputs are cache-only with recompute charges.
 pub struct DagBlockService<'a> {
@@ -102,6 +134,8 @@ pub struct DagBlockService<'a> {
     log: Vec<BlockRequest>,
     recompute_events: u64,
     recompute_seconds: f64,
+    /// Telemetry, present only on observed passes (see [`run_dag_observed`]).
+    obs: Option<DagObs>,
 }
 
 impl<'a> DagBlockService<'a> {
@@ -116,7 +150,26 @@ impl<'a> DagBlockService<'a> {
             log: Vec::new(),
             recompute_events: 0,
             recompute_seconds: 0.0,
+            obs: None,
         }
+    }
+
+    /// Attach the telemetry layer: windowed series, eviction bookkeeping
+    /// for the post-run audit, and the eviction scan-work histogram (one
+    /// slot — this service is single-threaded).
+    fn enable_obs(&mut self, registry: &MetricsRegistry, cfg: ObsConfig) {
+        self.obs = Some(DagObs {
+            windows: WindowSeries::new(cfg.window_us),
+            last: IdHashMap::default(),
+            pending: Vec::new(),
+            resident: 0,
+            scan_hist: registry.histogram("evict.scan_steps", MetricClass::Deterministic, 1),
+        });
+    }
+
+    /// Detach and return the observation state (None on unobserved passes).
+    fn take_obs(&mut self) -> Option<(WindowSeries, Vec<PendingEvict>)> {
+        self.obs.take().map(|o| (o.windows, o.pending))
     }
 
     /// Register a disk-backed input block with its HDFS replicas.
@@ -174,7 +227,37 @@ impl<'a> DagBlockService<'a> {
             predicted_reuse: class,
             recompute_cost: m.recompute_s,
         };
-        self.cache.access_or_insert(block, &ctx).hit
+        let outcome = self.cache.access_or_insert(block, &ctx);
+        if let Some(obs) = &mut self.obs {
+            if !outcome.hit {
+                obs.scan_hist.record(0, u64::from(outcome.scan_steps));
+            }
+            obs.resident += u64::from(outcome.inserted);
+            obs.resident -= outcome.evicted.len() as u64;
+            let log_idx = self.log.len() - 1;
+            let win = obs.windows.at(now);
+            win.requests += 1;
+            win.hits += u64::from(outcome.hit);
+            win.insertions += u64::from(outcome.inserted);
+            win.occupancy_end = obs.resident;
+            for (victim, cause) in outcome.evicted.iter().zip(&outcome.causes) {
+                match cause {
+                    EvictCause::Capacity => win.evict_capacity += 1,
+                    EvictCause::AdmissionDuel => win.evict_admission += 1,
+                    EvictCause::CostTieBreak => win.evict_cost_tie += 1,
+                }
+                if let Some(li) = obs.last.remove(victim) {
+                    obs.pending.push(PendingEvict {
+                        at: now,
+                        log_idx: li,
+                        cause: *cause,
+                        block: *victim,
+                    });
+                }
+            }
+            obs.last.insert(block, log_idx);
+        }
+        outcome.hit
     }
 
     /// Recompute charges accrued so far: (events, seconds).
@@ -210,7 +293,11 @@ impl BlockService for DagBlockService<'_> {
             // block was already handled by `access`).
             self.recompute_events += 1;
             self.recompute_seconds += recompute_s;
-            (ReadSource::DiskLocal, SimDuration::from_secs_f64(recompute_s))
+            let service = SimDuration::from_secs_f64(recompute_s);
+            if let Some(obs) = &mut self.obs {
+                obs.windows.at(now).recompute_cost_us += service.micros();
+            }
+            (ReadSource::DiskLocal, service)
         } else {
             let src = if local_replica { ReadSource::DiskLocal } else { ReadSource::DiskRemote };
             (src, reader::service_time(self.cfg, src, size))
@@ -247,9 +334,30 @@ pub fn run_dag_pass(
     seed: u64,
     classes: &[Option<bool>],
 ) -> Result<(DagReport, Vec<BlockRequest>)> {
+    let (report, log, _) = run_dag_pass_inner(policy, cfg, shards, capacity, jobs, seed, classes, None)?;
+    Ok((report, log))
+}
+
+/// [`run_dag_pass`] with optional telemetry attached to the service; the
+/// raw observation state comes back for [`run_dag_observed`]'s post-run
+/// ground-truth fix-up.
+#[allow(clippy::too_many_arguments, clippy::type_complexity)] // internal plumbing
+fn run_dag_pass_inner(
+    policy: &str,
+    cfg: &ClusterConfig,
+    shards: usize,
+    capacity: u64,
+    jobs: &[DagJob],
+    seed: u64,
+    classes: &[Option<bool>],
+    observe: Option<(&MetricsRegistry, ObsConfig)>,
+) -> Result<(DagReport, Vec<BlockRequest>, Option<(WindowSeries, Vec<PendingEvict>)>)> {
     let cache = ShardedCache::from_registry(policy, shards, capacity)
         .ok_or_else(|| anyhow!("unknown policy {policy:?}"))?;
     let mut svc = DagBlockService::new(cfg, cache, classes.to_vec());
+    if let Some((registry, obs_cfg)) = observe {
+        svc.enable_obs(registry, obs_cfg);
+    }
 
     // Replica placement for every disk-backed input, in deterministic
     // job/stage order under the seed.
@@ -355,7 +463,8 @@ pub fn run_dag_pass(
         accesses: svc.log.len(),
         trained: false,
     };
-    Ok((report, svc.log))
+    let obs = svc.take_obs();
+    Ok((report, svc.log, obs))
 }
 
 /// Fill ground-truth reuse labels into a pass log: an access is
@@ -392,6 +501,103 @@ pub fn run_dag(
     let (mut report, _) = run_dag_pass(policy, cfg, shards, capacity, jobs, seed, &classes)?;
     report.trained = true;
     Ok(report)
+}
+
+/// [`run_dag`] with the telemetry layer on the *final* arm (pass B when
+/// the classifier trains, the prediction-less replay otherwise): windowed
+/// hit/eviction/recompute series, eviction scan-work histogram, and the
+/// sampled audit ring with real decision scores.
+///
+/// The audit's ground truth needs the complete pass log, so evictions are
+/// collected as [`PendingEvict`]s mid-replay and resolved here once
+/// [`ground_truth_labels`] has labeled the observed pass's own log —
+/// `reused_later` of the victim's last access is exactly "was it
+/// requested again after this eviction". Everything recorded is keyed on
+/// simulated time, so same-(seed, shards) runs produce identical series.
+#[allow(clippy::too_many_arguments)] // run_dag's knobs + the telemetry pair
+pub fn run_dag_observed(
+    policy: &str,
+    cfg: &ClusterConfig,
+    shards: usize,
+    capacity: u64,
+    jobs: &[DagJob],
+    seed: u64,
+    kernel: KernelKind,
+    batch: usize,
+    registry: &MetricsRegistry,
+    obs_cfg: ObsConfig,
+) -> Result<(DagReport, RunObservations)> {
+    // Pass A (unobserved) exists only to produce the labeled training log.
+    let (_, mut trace) = run_dag_pass(policy, cfg, shards, capacity, jobs, seed, &[])?;
+    ground_truth_labels(&mut trace);
+    let (features, scores) = classify_trace_scored(&trace, kernel, batch)?;
+    let trained = scores.iter().any(|s| s.is_some());
+    let classes: Vec<Option<bool>> = scores.iter().map(|s| s.map(|v| v > 0.0)).collect();
+    let used: &[Option<bool>] = if trained { &classes } else { &[] };
+    let (mut report, log, obs_raw) = run_dag_pass_inner(
+        policy,
+        cfg,
+        shards,
+        capacity,
+        jobs,
+        seed,
+        used,
+        Some((registry, obs_cfg)),
+    )?;
+    report.trained = trained;
+    let (mut windows, pending) = obs_raw.expect("observed pass returns its state");
+
+    // The scheduler's access order is timing-independent, so the observed
+    // log is index-aligned with the training log (and with `scores`) —
+    // label it to resolve each pending eviction's eventual reuse.
+    let mut labeled = log;
+    ground_truth_labels(&mut labeled);
+    let mut audit = EvictionAudit::new(obs_cfg.audit_every, obs_cfg.audit_cap);
+    for p in &pending {
+        let actual = labeled[p.log_idx].reused_later;
+        let predicted = if trained {
+            scores.get(p.log_idx).copied().flatten().map(|v| v > 0.0)
+        } else {
+            None
+        };
+        // Re-opening a past window yields a fresh accumulator; the
+        // merge_series rollup below folds it into the original by index.
+        let win = windows.at(p.at);
+        match predicted {
+            Some(true) if actual => win.tp += 1,
+            Some(true) => win.fp += 1,
+            Some(false) if actual => win.fn_ += 1,
+            Some(false) => win.tn += 1,
+            None => {}
+        }
+        audit.observe(|| AuditEntry {
+            at: p.at,
+            block: p.block,
+            cause: p.cause,
+            features: features.get(p.log_idx).copied().unwrap_or_default(),
+            score: scores.get(p.log_idx).copied().flatten().unwrap_or(0.0),
+            predicted,
+            actual,
+        });
+    }
+
+    // End-of-run recompute totals, readable at export time (simulated-time
+    // quantities: deterministic under the seed).
+    let events = report.recompute_events;
+    let charged_us = SimDuration::from_secs_f64(report.recompute_seconds).micros();
+    registry.gauge("dag.recompute_events", move || events);
+    registry.gauge("dag.recompute_us", move || charged_us);
+
+    let (audit_entries, audit_seen) = merge_audits(vec![audit]);
+    Ok((
+        report,
+        RunObservations {
+            windows: merge_series(vec![windows.finish()]),
+            audit: audit_entries,
+            audit_seen,
+            audit_every: obs_cfg.audit_every.max(1),
+        },
+    ))
 }
 
 /// Render a sweep of DAG reports as an aligned table (one row per run).
@@ -506,6 +712,71 @@ mod tests {
         .unwrap();
         assert!(report.trained, "diamond log has both classes");
         assert!(report.stats.requests > 0);
+    }
+
+    /// Observed DAG replay: parity with [`run_dag`], window sums matching
+    /// the merged counters, recompute charges landing in the series, and
+    /// a resolved (ground-truthed) audit ring.
+    #[test]
+    fn observed_dag_matches_run_dag_and_charges_windows() {
+        let cfg = small_cfg();
+        let jobs = diamond_suite(2, 3, 10);
+        let plain = run_dag(
+            "h-svm-lru",
+            &cfg,
+            2,
+            6 * cfg.block_size,
+            &jobs,
+            7,
+            KernelKind::Rbf,
+            64,
+        )
+        .unwrap();
+        let registry = MetricsRegistry::new();
+        let (report, obs) = run_dag_observed(
+            "h-svm-lru",
+            &cfg,
+            2,
+            6 * cfg.block_size,
+            &jobs,
+            7,
+            KernelKind::Rbf,
+            64,
+            &registry,
+            ObsConfig { audit_every: 1, ..ObsConfig::default() },
+        )
+        .unwrap();
+        assert_eq!(report.stats, plain.stats, "observation must not perturb the replay");
+        assert_eq!(report.recompute_events, plain.recompute_events);
+        assert_eq!(report.trained, plain.trained);
+
+        let requests: u64 = obs.windows.iter().map(|(_, w)| w.requests).sum();
+        let evictions: u64 = obs.windows.iter().map(|(_, w)| w.evictions()).sum();
+        let recompute_us: u64 = obs.windows.iter().map(|(_, w)| w.recompute_cost_us).sum();
+        assert_eq!(requests, report.stats.requests);
+        assert_eq!(evictions, report.stats.evictions);
+        assert!(report.recompute_events > 0, "tight cache must recompute");
+        assert!(recompute_us > 0, "recompute charges must land in windows");
+        assert!(obs.windows.windows(2).all(|p| p[0].0 < p[1].0), "sorted series");
+
+        // Every eviction whose victim had been accessed is audited
+        // (audit_every=1) with resolved ground truth, up to ring capacity.
+        assert_eq!(
+            obs.audit.len() as u64,
+            obs.audit_seen.min(crate::obs::DEFAULT_AUDIT_CAP as u64)
+        );
+        assert!(!obs.audit.is_empty());
+        let labeled: u64 = obs.windows.iter().map(|(_, w)| w.labeled_evictions()).sum();
+        assert!(labeled <= evictions);
+        if report.trained {
+            assert!(labeled > 0, "trained replay must label evictions");
+        }
+
+        // The gauges expose the recompute totals the report carries.
+        let gauges = registry.gauge_values();
+        assert!(gauges
+            .iter()
+            .any(|(n, v)| n == "dag.recompute_events" && *v == report.recompute_events));
     }
 
     #[test]

@@ -36,18 +36,24 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::cache::sharded::{shard_of, ShardStats, ShardedCache};
-use crate::cache::AccessContext;
-use crate::coordinator::batcher::{BatcherConfig, BatcherProbe, ShardBatcher};
+use crate::cache::{AccessContext, EvictCause};
+use crate::coordinator::batcher::{BatcherConfig, BatcherObs, BatcherProbe, ShardBatcher};
 use crate::coordinator::online::{
     sample_channel, trainer_loop, SampleSender, SnapshotBackend, SnapshotCell, TrainerConfig,
     TrainerReport,
 };
 use crate::coordinator::TrainingPipeline;
+use crate::hdfs::BlockId;
+use crate::obs::{
+    merge_audits, merge_series, AuditEntry, EvictionAudit, MetricClass, MetricsRegistry,
+    ObsConfig, RunObservations, WindowSeries,
+};
 use crate::runtime::{RustBackend, SvmBackend};
 use crate::sim::parallel::{run_sharded, run_sharded_with_background};
-use crate::svm::features::BlockStatsTracker;
+use crate::svm::features::{BlockStatsTracker, FeatureVec};
 use crate::svm::smo::SmoModel;
 use crate::svm::KernelKind;
+use crate::util::fasthash::IdHashMap;
 use crate::util::table::{fmt_f, Table};
 use crate::workload::BlockRequest;
 
@@ -354,6 +360,234 @@ fn run_online_with(
     })
 }
 
+/// [`run_online`] with the telemetry layer attached: per-worker windowed
+/// series + eviction audit ring (merged deterministically at the end),
+/// per-shard batcher histograms ([`BatcherObs`]), prediction-path latency,
+/// and every probe counter surfaced as a registry gauge. The worker
+/// protocol is identical to [`run_online`] — observation only reads what
+/// the replay already computes, so the frozen arm keeps its classify-once
+/// parity.
+///
+/// Snapshot-version churn lands in the window where a worker first *saw*
+/// the fresh version, which is the moment it affects that shard's
+/// predictions. The audit ring's `score` is 0.0 on this path: the batcher
+/// front answers classes, not margins (the classify-once path of
+/// [`super::sharded_replay::run_observed`] records real decision scores).
+#[allow(clippy::too_many_arguments)] // run_online's knobs + the telemetry pair
+pub fn run_online_observed(
+    policy: &str,
+    shards: usize,
+    capacity: u64,
+    trace: &[BlockRequest],
+    mode: TrainerMode,
+    kernel: KernelKind,
+    cfg: TrainerConfig,
+    batcher: BatcherConfig,
+    registry: &MetricsRegistry,
+    obs_cfg: ObsConfig,
+) -> Result<(OnlineReplayReport, RunObservations)> {
+    let pretrained = match mode {
+        TrainerMode::Frozen => pretrain_model(trace, kernel)?,
+        TrainerMode::Online => None,
+    };
+    let cache = ShardedCache::from_registry(policy, shards, capacity)
+        .with_context(|| format!("unknown policy {policy:?}"))?;
+    let n = cache.n_shards();
+    let mut partitions: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, req) in trace.iter().enumerate() {
+        partitions[shard_of(req.block, n)].push(i);
+    }
+    let block_size = trace.iter().map(|r| r.size).max().unwrap_or(1);
+    let cell = Arc::new(SnapshotCell::new());
+    let (sender, rx) = sample_channel(SAMPLE_CHANNEL_BOUND);
+    let probe = sender.probe();
+    let master: Mutex<Option<SampleSender>> = match mode {
+        TrainerMode::Online => Mutex::new(Some(sender)),
+        TrainerMode::Frozen => {
+            drop(sender);
+            if let Some(model) = pretrained {
+                cell.publish(model);
+            }
+            Mutex::new(None)
+        }
+    };
+    let batch_probe = BatcherProbe::new();
+    probe.register_gauges(registry, "samples");
+    batch_probe.register_gauges(registry, "batcher");
+    let predict_ns = registry.histogram("predict.ns", MetricClass::Volatile, n);
+    let scan_hist = registry.histogram("evict.scan_steps", MetricClass::Deterministic, n);
+
+    let worker = |w: usize| {
+        let tx = master.lock().expect("sender mutex poisoned").as_ref().cloned();
+        let mut tracker = BlockStatsTracker::new(block_size);
+        let mut backend = SnapshotBackend::new(Arc::clone(&cell));
+        let mut shard_batcher = ShardBatcher::with_probe(batcher, batch_probe.clone());
+        shard_batcher.set_obs(BatcherObs::register(registry, n, w));
+        let mut windows = WindowSeries::new(obs_cfg.window_us);
+        let mut audit = EvictionAudit::new(obs_cfg.audit_every, obs_cfg.audit_cap);
+        // Victim ground truth: the victim's most recent request on this
+        // shard — (features, prediction, reused_later) at that access.
+        let mut last: IdHashMap<BlockId, (FeatureVec, Option<bool>, bool)> =
+            IdHashMap::default();
+        let mut seen_version = backend.version();
+        for &i in &partitions[w] {
+            let req = &trace[i];
+            let features = tracker.features(
+                req.block,
+                req.kind,
+                req.size,
+                req.affinity,
+                req.recompute_cost,
+                req.time,
+            );
+            if let Some(tx) = &tx {
+                tx.emit(features, req.reused_later);
+            }
+            let version = backend.version();
+            if version != seen_version {
+                windows.at(req.time).snapshot_publishes += version - seen_version;
+                seen_version = version;
+            }
+            shard_batcher.note_model_version(version);
+            let predicted = if backend.is_trained() {
+                let stamp = tracker.accesses(req.block);
+                let t0 = predict_ns.is_active().then(Instant::now);
+                let p = shard_batcher
+                    .predict(&mut backend, req.block, stamp, features, req.time)
+                    .unwrap_or_default();
+                if let Some(t0) = t0 {
+                    predict_ns.record(w, t0.elapsed().as_nanos() as u64);
+                }
+                p
+            } else {
+                None
+            };
+            let ctx = AccessContext {
+                time: req.time,
+                size: req.size,
+                kind: req.kind,
+                file: req.block.0, // trace blocks are their own files
+                file_width: 1,
+                file_complete: false,
+                affinity: req.affinity,
+                predicted_reuse: predicted,
+                recompute_cost: req.recompute_cost,
+            };
+            let outcome = cache.access_or_insert(req.block, &ctx);
+            tracker.record_access(req.block, 0, req.time);
+            if !outcome.hit {
+                scan_hist.record(w, u64::from(outcome.scan_steps));
+            }
+            let occupancy = cache.snapshot_of(w).blocks;
+            let win = windows.at(req.time);
+            win.requests += 1;
+            win.hits += u64::from(outcome.hit);
+            win.insertions += u64::from(outcome.inserted);
+            win.occupancy_end = occupancy;
+            for (victim, cause) in outcome.evicted.iter().zip(&outcome.causes) {
+                match cause {
+                    EvictCause::Capacity => win.evict_capacity += 1,
+                    EvictCause::AdmissionDuel => win.evict_admission += 1,
+                    EvictCause::CostTieBreak => win.evict_cost_tie += 1,
+                }
+                if let Some((vf, vp, actual)) = last.remove(victim) {
+                    match vp {
+                        Some(true) if actual => win.tp += 1,
+                        Some(true) => win.fp += 1,
+                        Some(false) if actual => win.fn_ += 1,
+                        Some(false) => win.tn += 1,
+                        None => {}
+                    }
+                    audit.observe(|| AuditEntry {
+                        at: req.time,
+                        block: *victim,
+                        cause: *cause,
+                        features: vf,
+                        score: 0.0,
+                        predicted: vp,
+                        actual,
+                    });
+                }
+            }
+            last.insert(req.block, (features, predicted, req.reused_later));
+        }
+        if backend.is_trained() {
+            let _ = shard_batcher.flush(&mut backend);
+        }
+        (cache.stats_of(w), backend.refreshes(), windows.finish(), audit)
+    };
+
+    let t0 = Instant::now();
+    let (per_worker, trainer) = match mode {
+        TrainerMode::Frozen => {
+            drop(rx);
+            let per_worker = run_sharded(n, worker);
+            let trainer =
+                TrainerReport { final_version: cell.version(), ..TrainerReport::default() };
+            (per_worker, trainer)
+        }
+        TrainerMode::Online => {
+            let trainer_cell = Arc::clone(&cell);
+            let (per_worker, trainer) = run_sharded_with_background(
+                n,
+                worker,
+                move || {
+                    let mut backend = RustBackend::new(kernel);
+                    let mut pipeline =
+                        TrainingPipeline::new(cfg.min_samples, cfg.retrain_interval);
+                    trainer_loop(rx, &mut backend, &mut pipeline, &trainer_cell)
+                },
+                || {
+                    master.lock().expect("sender mutex poisoned").take();
+                },
+            );
+            (per_worker, trainer.context("background trainer failed")?)
+        }
+    };
+    let wall = t0.elapsed();
+
+    let mut stats = ShardStats::default();
+    let mut per_shard = Vec::with_capacity(per_worker.len());
+    let mut snapshot_refreshes = 0u64;
+    let mut window_parts = Vec::with_capacity(per_worker.len());
+    let mut audit_parts = Vec::with_capacity(per_worker.len());
+    for (shard_stats, refreshes, windows, audit) in per_worker {
+        stats.merge(&shard_stats);
+        per_shard.push(shard_stats);
+        snapshot_refreshes += refreshes;
+        window_parts.push(windows);
+        audit_parts.push(audit);
+    }
+    // End-of-run trainer facts, readable at export time.
+    let (trainings, publishes, samples) = (trainer.trainings, trainer.publishes, trainer.samples);
+    registry.gauge("trainer.trainings", move || trainings);
+    registry.gauge("trainer.publishes", move || publishes);
+    registry.gauge("trainer.samples", move || samples);
+    registry.gauge("snapshot.refreshes", move || snapshot_refreshes);
+    let (audit, audit_seen) = merge_audits(audit_parts);
+    Ok((
+        OnlineReplayReport {
+            policy: policy.to_string(),
+            mode,
+            shards: n,
+            stats,
+            per_shard,
+            wall,
+            trainer,
+            samples_sent: probe.sent(),
+            samples_dropped: probe.dropped(),
+            snapshot_refreshes,
+            cold: ColdPathReport::from_probe(&batch_probe),
+        },
+        RunObservations {
+            windows: merge_series(window_parts),
+            audit,
+            audit_seen,
+            audit_every: obs_cfg.audit_every.max(1),
+        },
+    ))
+}
+
 /// The frozen × online matrix over `policies` and `shard_counts`, one
 /// replay per cell, all on the identical trace.
 #[allow(clippy::too_many_arguments)] // the sweep mirrors run_online's knobs
@@ -525,6 +759,69 @@ mod tests {
             report.cold
         );
         assert!(report.cold.mean_flush_size() > 1.0, "batching actually amortized");
+    }
+
+    /// Observed frozen replay: parity with the plain frozen replay, window
+    /// sums matching the merged counters, probe counts visible as gauges.
+    #[test]
+    fn observed_frozen_keeps_parity_and_sums() {
+        let trace = fig3_trace(BLOCK, 5);
+        let plain = run_online(
+            "h-svm-lru",
+            4,
+            8 * BLOCK,
+            &trace,
+            TrainerMode::Frozen,
+            KernelKind::Rbf,
+            TrainerConfig::default(),
+            BatcherConfig::default(),
+        )
+        .unwrap();
+        let registry = MetricsRegistry::new();
+        let (report, obs) = run_online_observed(
+            "h-svm-lru",
+            4,
+            8 * BLOCK,
+            &trace,
+            TrainerMode::Frozen,
+            KernelKind::Rbf,
+            TrainerConfig::default(),
+            BatcherConfig::default(),
+            &registry,
+            ObsConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(report.stats, plain.stats, "observation must not perturb the replay");
+        assert_eq!(report.per_shard, plain.per_shard);
+        assert_eq!(report.cold, plain.cold);
+
+        let requests: u64 = obs.windows.iter().map(|(_, w)| w.requests).sum();
+        let evictions: u64 = obs.windows.iter().map(|(_, w)| w.evictions()).sum();
+        let churn: u64 = obs.windows.iter().map(|(_, w)| w.snapshot_publishes).sum();
+        assert_eq!(requests, report.stats.requests);
+        assert_eq!(evictions, report.stats.evictions);
+        assert_eq!(churn, 0, "frozen publishes before the workers start");
+
+        let gauges = registry.gauge_values();
+        let gauge = |name: &str| {
+            gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or_else(|| {
+                panic!("gauge {name:?} missing from {gauges:?}")
+            })
+        };
+        assert_eq!(gauge("batcher.cold_queries"), report.cold.cold_queries);
+        assert_eq!(gauge("batcher.flushes"), report.cold.flushes);
+        assert_eq!(gauge("samples.sent"), 0);
+        assert_eq!(gauge("trainer.publishes"), 0);
+        assert_eq!(gauge("snapshot.refreshes"), report.snapshot_refreshes);
+
+        // Per-shard batcher histograms merged across the 4 workers.
+        let hists = registry.hist_snapshots();
+        let flush_size = hists
+            .iter()
+            .find(|(n, _, _)| n == "batcher.flush_size")
+            .expect("batcher histogram registered");
+        assert_eq!(flush_size.2.sum, report.cold.flushed_queries);
+        assert_eq!(flush_size.2.count, report.cold.flushes);
     }
 
     #[test]

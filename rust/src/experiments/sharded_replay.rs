@@ -21,11 +21,17 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::cache::sharded::{shard_of, ShardStats, ShardedCache};
-use crate::cache::AccessContext;
+use crate::cache::{AccessContext, EvictCause};
+use crate::hdfs::BlockId;
+use crate::obs::{
+    merge_audits, merge_series, AuditEntry, EvictionAudit, MetricClass, MetricsRegistry,
+    ObsConfig, RunObservations, WindowSeries,
+};
 use crate::runtime::{RustBackend, SvmBackend};
 use crate::sim::parallel::{run_sharded, run_sharded_with_monitor};
 use crate::svm::features::{BlockStatsTracker, FeatureVec};
 use crate::svm::KernelKind;
+use crate::util::fasthash::IdHashMap;
 use crate::util::table::{fmt_f, Table};
 use crate::workload::BlockRequest;
 
@@ -98,22 +104,35 @@ pub fn classify_trace(
     kernel: KernelKind,
     batch: usize,
 ) -> Result<Vec<Option<bool>>> {
+    let (_, scores) = classify_trace_scored(trace, kernel, batch)?;
+    Ok(scores.into_iter().map(|s| s.map(|v| v > 0.0)).collect())
+}
+
+/// [`classify_trace`] keeping the raw decision scores and the per-request
+/// feature vectors — the audit ring records both, and the boolean classes
+/// are just `score > 0.0`.
+pub fn classify_trace_scored(
+    trace: &[BlockRequest],
+    kernel: KernelKind,
+    batch: usize,
+) -> Result<(Vec<FeatureVec>, Vec<Option<f32>>)> {
     let mut backend = RustBackend::new(kernel);
     let (features, dataset) = trace_dataset(trace);
     if dataset.n_positive() == 0 || dataset.n_positive() == dataset.len() {
-        return Ok(vec![None; trace.len()]);
+        let scores = vec![None; trace.len()];
+        return Ok((features, scores));
     }
     backend.train(&dataset).context("training classifier pass")?;
 
     // Scoring pass: batch through the backend, never from a worker thread.
-    let mut classes = Vec::with_capacity(trace.len());
+    let mut scores = Vec::with_capacity(trace.len());
     for chunk in features.chunks(batch.max(1)) {
-        let scores = backend
+        let chunk_scores = backend
             .decision_batch(chunk)
             .context("scoring classifier pass")?;
-        classes.extend(scores.into_iter().map(|s| Some(s > 0.0)));
+        scores.extend(chunk_scores.into_iter().map(Some));
     }
-    Ok(classes)
+    Ok((features, scores))
 }
 
 /// Request indices of `trace` grouped by owning shard, preserving trace
@@ -165,6 +184,153 @@ pub fn replay_on_shards(
         replay_slice(cache, trace, classes, &partitions[w]);
         cache.stats_of(w)
     })
+}
+
+/// [`replay_on_shards`] with the telemetry layer attached: each worker
+/// keeps its own [`WindowSeries`] + [`EvictionAudit`] (merged
+/// deterministically at the end) and records eviction scan work /
+/// access latency into per-shard registry histograms. Cache behavior is
+/// identical to the plain replay — observation reads the
+/// [`crate::cache::AccessOutcome`] the access already returns.
+///
+/// Ground truth for the confusion counts comes from each worker's
+/// last-access map: a block's requests all route to one shard, and an
+/// eviction happens after the victim's last access and before its next
+/// request, so `reused_later` of the victim's most recent request IS
+/// "was it requested again after this eviction".
+pub fn replay_on_shards_observed(
+    cache: &ShardedCache,
+    trace: &[BlockRequest],
+    features: &[FeatureVec],
+    scores: &[Option<f32>],
+    registry: &MetricsRegistry,
+    cfg: ObsConfig,
+) -> (Vec<ShardStats>, RunObservations) {
+    let n = cache.n_shards();
+    let partitions = partition_by_shard(trace, n);
+    let scan_hist = registry.histogram("evict.scan_steps", MetricClass::Deterministic, n);
+    let access_ns = registry.histogram("replay.access_ns", MetricClass::Volatile, n);
+    let results = run_sharded(n, |w| {
+        let mut windows = WindowSeries::new(cfg.window_us);
+        let mut audit = EvictionAudit::new(cfg.audit_every, cfg.audit_cap);
+        let mut last: IdHashMap<BlockId, usize> = IdHashMap::default();
+        for &i in &partitions[w] {
+            let req = &trace[i];
+            let predicted_here = scores.get(i).copied().flatten().map(|s| s > 0.0);
+            let ctx = AccessContext {
+                time: req.time,
+                size: req.size,
+                kind: req.kind,
+                file: req.block.0,
+                file_width: 1,
+                file_complete: false,
+                affinity: req.affinity,
+                predicted_reuse: predicted_here,
+                recompute_cost: req.recompute_cost,
+            };
+            let t0 = access_ns.is_active().then(Instant::now);
+            let outcome = cache.access_or_insert(req.block, &ctx);
+            if let Some(t0) = t0 {
+                access_ns.record(w, t0.elapsed().as_nanos() as u64);
+            }
+            if !outcome.hit {
+                scan_hist.record(w, u64::from(outcome.scan_steps));
+            }
+            // This worker is shard w's only writer, so the lock-free
+            // snapshot it reads back is its own deterministic state.
+            let occupancy = cache.snapshot_of(w).blocks;
+            let win = windows.at(req.time);
+            win.requests += 1;
+            win.hits += u64::from(outcome.hit);
+            win.insertions += u64::from(outcome.inserted);
+            win.occupancy_end = occupancy;
+            for (victim, cause) in outcome.evicted.iter().zip(&outcome.causes) {
+                match cause {
+                    EvictCause::Capacity => win.evict_capacity += 1,
+                    EvictCause::AdmissionDuel => win.evict_admission += 1,
+                    EvictCause::CostTieBreak => win.evict_cost_tie += 1,
+                }
+                if let Some(li) = last.remove(victim) {
+                    let actual = trace[li].reused_later;
+                    let predicted = scores.get(li).copied().flatten().map(|s| s > 0.0);
+                    match predicted {
+                        Some(true) if actual => win.tp += 1,
+                        Some(true) => win.fp += 1,
+                        Some(false) if actual => win.fn_ += 1,
+                        Some(false) => win.tn += 1,
+                        None => {}
+                    }
+                    audit.observe(|| AuditEntry {
+                        at: req.time,
+                        block: *victim,
+                        cause: *cause,
+                        features: features.get(li).copied().unwrap_or_default(),
+                        score: scores.get(li).copied().flatten().unwrap_or(0.0),
+                        predicted,
+                        actual,
+                    });
+                }
+            }
+            last.insert(req.block, i);
+        }
+        (cache.stats_of(w), windows.finish(), audit)
+    });
+    let mut per_shard = Vec::with_capacity(n);
+    let mut window_parts = Vec::with_capacity(n);
+    let mut audit_parts = Vec::with_capacity(n);
+    for (stats, windows, audit) in results {
+        per_shard.push(stats);
+        window_parts.push(windows);
+        audit_parts.push(audit);
+    }
+    let (audit, audit_seen) = merge_audits(audit_parts);
+    (
+        per_shard,
+        RunObservations {
+            windows: merge_series(window_parts),
+            audit,
+            audit_seen,
+            audit_every: cfg.audit_every.max(1),
+        },
+    )
+}
+
+/// Full observed pipeline for one configuration: classify once (keeping
+/// features + scores for the audit ring), replay with telemetry, report.
+#[allow(clippy::too_many_arguments)]
+pub fn run_observed(
+    policy: &str,
+    admission: &str,
+    shards: usize,
+    capacity: u64,
+    trace: &[BlockRequest],
+    kernel: KernelKind,
+    batch: usize,
+    registry: &MetricsRegistry,
+    cfg: ObsConfig,
+) -> Result<(ShardedReplayReport, RunObservations)> {
+    let (features, scores) = classify_trace_scored(trace, kernel, batch)?;
+    let cache = ShardedCache::from_registry_with_admission(policy, admission, shards, capacity)
+        .with_context(|| format!("unknown policy {policy:?} or admission {admission:?}"))?;
+    let t0 = Instant::now();
+    let (per_shard, obs) =
+        replay_on_shards_observed(&cache, trace, &features, &scores, registry, cfg);
+    let wall = t0.elapsed();
+    let mut stats = ShardStats::default();
+    for s in &per_shard {
+        stats.merge(s);
+    }
+    Ok((
+        ShardedReplayReport {
+            policy: policy.to_string(),
+            admission: admission.to_string(),
+            shards: cache.n_shards(),
+            stats,
+            per_shard,
+            wall,
+        },
+        obs,
+    ))
 }
 
 /// What concurrent lock-free stats readers observed during a replay (see
@@ -343,6 +509,7 @@ pub fn render(reports: &[ShardedReplayReport]) -> Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::obs::DEFAULT_AUDIT_EVERY;
     use crate::util::bytes::MB;
     use crate::workload::fig3_trace;
 
@@ -405,6 +572,84 @@ mod tests {
     fn unknown_policy_errors() {
         let trace = fig3_trace(64 * MB, 3);
         assert!(run("nonsense", 2, 8 * 64 * MB, &trace).is_err());
+    }
+
+    #[test]
+    fn observed_replay_matches_plain_replay_and_its_own_windows() {
+        let trace = fig3_trace(64 * MB, 11);
+        let registry = MetricsRegistry::new();
+        let (report, obs) = run_observed(
+            "h-svm-lru",
+            "always",
+            4,
+            8 * 64 * MB,
+            &trace,
+            KernelKind::Rbf,
+            64,
+            &registry,
+            ObsConfig::default(),
+        )
+        .unwrap();
+        // Observation must not perturb the cache: same stats as the
+        // plain path on the same trace/policy/predictions.
+        let classes = classify_trace(&trace, KernelKind::Rbf, 64).unwrap();
+        let plain = run_with_classes("h-svm-lru", 4, 8 * 64 * MB, &trace, &classes).unwrap();
+        assert_eq!(report.stats, plain.stats);
+        assert_eq!(report.per_shard, plain.per_shard);
+
+        // Window sums reproduce the merged counters.
+        let requests: u64 = obs.windows.iter().map(|(_, w)| w.requests).sum();
+        let hits: u64 = obs.windows.iter().map(|(_, w)| w.hits).sum();
+        let evictions: u64 = obs.windows.iter().map(|(_, w)| w.evictions()).sum();
+        assert_eq!(requests, report.stats.requests);
+        assert_eq!(hits, report.stats.hits);
+        assert_eq!(evictions, report.stats.evictions);
+        // Confusion counts only cover evictions whose victim was seen
+        // before (all of them here) and carried a prediction.
+        let labeled: u64 = obs.windows.iter().map(|(_, w)| w.labeled_evictions()).sum();
+        assert!(labeled <= evictions);
+        assert!(labeled > 0, "classified trace must label some evictions");
+
+        // Audit ring: sampled every Nth eviction, each entry labeled.
+        assert_eq!(obs.audit_every, DEFAULT_AUDIT_EVERY);
+        assert!(obs.audit_seen > 0);
+        // Each of the 4 worker rings samples ceil(seen_w / every) entries,
+        // so the merged total may exceed the global ceiling by one per ring.
+        assert!(obs.audit.len() as u64 <= obs.audit_seen / obs.audit_every + 4);
+        assert!(!obs.audit.is_empty());
+        assert!(obs.audit.windows(2).all(|p| (p[0].at, p[0].block.0)
+            <= (p[1].at, p[1].block.0)));
+
+        // The registry picked up the deterministic scan-work histogram.
+        let hists = registry.hist_snapshots();
+        let scan = hists
+            .iter()
+            .find(|(name, _, _)| name == "evict.scan_steps")
+            .expect("scan histogram registered");
+        assert_eq!(scan.1, MetricClass::Deterministic);
+        assert_eq!(scan.2.count, report.stats.misses);
+    }
+
+    #[test]
+    fn observed_replay_with_disabled_registry_still_windows() {
+        let trace = fig3_trace(64 * MB, 4);
+        let registry = MetricsRegistry::disabled();
+        let (report, obs) = run_observed(
+            "lru",
+            "always",
+            2,
+            8 * 64 * MB,
+            &trace,
+            KernelKind::Rbf,
+            64,
+            &registry,
+            ObsConfig { window_us: 500_000, audit_every: 1, audit_cap: 16 },
+        )
+        .unwrap();
+        let requests: u64 = obs.windows.iter().map(|(_, w)| w.requests).sum();
+        assert_eq!(requests, report.stats.requests);
+        assert!(registry.hist_snapshots().is_empty(), "disabled registry records nothing");
+        assert!(obs.audit.len() <= 2 * 16, "per-worker audit ring capacity bound");
     }
 
     #[test]

@@ -58,6 +58,10 @@ pub mod runtime;
 pub mod svm;
 /// NameNode-side cache coordination: Algorithm 1, batching, online learning.
 pub mod coordinator;
+/// Observability: metrics registry, lock-free histograms, windowed
+/// time-series, eviction audit ring and the JSONL export behind
+/// `--metrics-out` / `repro report`.
+pub mod obs;
 /// Experiment drivers regenerating the paper's tables and figures.
 #[allow(missing_docs)]
 pub mod experiments;

@@ -147,10 +147,12 @@ fn run(args: &[String]) -> Result<()> {
                 .iter()
                 .map(|r| r.execution_time().as_secs_f64())
                 .collect();
+            // One sort serves both quantile reads (util::stats::Summary).
+            let summary = h_svm_lru::util::stats::Summary::of(&times);
             println!(
                 "job exec time      mean {:.1}s  p95 {:.1}s",
-                h_svm_lru::util::stats::mean(&times),
-                h_svm_lru::util::stats::percentile(&times, 95.0)
+                summary.mean(),
+                summary.percentile(95.0)
             );
             Ok(())
         }
@@ -195,6 +197,31 @@ fn run(args: &[String]) -> Result<()> {
                     last.shards,
                     last.requests_per_sec() / first.requests_per_sec().max(1e-12)
                 );
+            }
+            // Telemetry arm: one observed replay at the max shard count,
+            // exported as deterministic JSONL.
+            if let Some(path) = cli.flag("metrics-out") {
+                use h_svm_lru::obs::{MetricsRegistry, ObsConfig};
+                let registry = MetricsRegistry::new();
+                let obs_cfg = ObsConfig::default();
+                let (report, obs) = sharded_replay::run_observed(
+                    &policy,
+                    "always",
+                    max_shards,
+                    blocks * block_size,
+                    &trace,
+                    h_svm_lru::svm::KernelKind::Rbf,
+                    64,
+                    &registry,
+                    obs_cfg,
+                )?;
+                let mut doc = obs.into_doc(obs_cfg.window_us);
+                doc.meta_str("cmd", "sharded");
+                doc.meta_str("policy", policy.as_str());
+                doc.meta_u64("shards", report.shards as u64);
+                doc.meta_u64("seed", cli.seed()?);
+                doc.meta_u64("requests", report.stats.requests);
+                emit_metrics(path, &registry, doc)?;
             }
             // Reader-contention arm: replay once more at the max shard
             // count with N threads hammering the lock-free stats path.
@@ -422,6 +449,33 @@ fn run(args: &[String]) -> Result<()> {
                     );
                 }
             }
+            // Telemetry arm: one observed LIVE replay on the fig3 trace at
+            // the max shard count (snapshot churn + batcher histograms).
+            if let Some(path) = cli.flag("metrics-out") {
+                use h_svm_lru::obs::{MetricsRegistry, ObsConfig};
+                let registry = MetricsRegistry::new();
+                let obs_cfg = ObsConfig::default();
+                let (report, obs) = online_sharded::run_online_observed(
+                    &policy,
+                    max_shards,
+                    capacity,
+                    &traces[0].1,
+                    TrainerMode::Online,
+                    kernel,
+                    trainer_cfg,
+                    batcher_cfg,
+                    &registry,
+                    obs_cfg,
+                )?;
+                let mut doc = obs.into_doc(obs_cfg.window_us);
+                doc.meta_str("cmd", "online");
+                doc.meta_str("policy", policy.as_str());
+                doc.meta_str("mode", "online");
+                doc.meta_u64("shards", report.shards as u64);
+                doc.meta_u64("seed", seed);
+                doc.meta_u64("requests", report.stats.requests);
+                emit_metrics(path, &registry, doc)?;
+            }
             Ok(())
         }
         "dag" => {
@@ -446,7 +500,7 @@ fn run(args: &[String]) -> Result<()> {
             let mut policies: Vec<String> =
                 vec!["lru".into(), "h-svm-lru".into(), "lru-cost".into(), "arc-cost".into()];
             if !policies.iter().any(|p| *p == flag_policy) {
-                policies.push(flag_policy);
+                policies.push(flag_policy.clone());
             }
             if smoke {
                 policies = vec!["lru".into(), "h-svm-lru".into()];
@@ -505,6 +559,45 @@ fn run(args: &[String]) -> Result<()> {
                 );
                 println!("smoke ok: recompute-cost-aware eviction wins on job time");
             }
+            // Telemetry arm: one observed replay of the requested cell,
+            // with recompute charges in the windowed series.
+            if let Some(path) = cli.flag("metrics-out") {
+                use h_svm_lru::obs::{MetricsRegistry, ObsConfig};
+                let registry = MetricsRegistry::new();
+                let obs_cfg = ObsConfig::default();
+                let suite = diamond_suite(n_jobs, 4, 8);
+                let (report, obs) = dag_replay::run_dag_observed(
+                    &flag_policy,
+                    &cluster_cfg,
+                    shards,
+                    cache_blocks.max(1) * cluster_cfg.block_size,
+                    &suite,
+                    seed,
+                    kernel,
+                    64,
+                    &registry,
+                    obs_cfg,
+                )?;
+                let mut doc = obs.into_doc(obs_cfg.window_us);
+                doc.meta_str("cmd", "dag");
+                doc.meta_str("policy", flag_policy.as_str());
+                doc.meta_u64("shards", shards as u64);
+                doc.meta_u64("jobs", n_jobs as u64);
+                doc.meta_u64("seed", seed);
+                doc.meta_u64("requests", report.stats.requests);
+                emit_metrics(path, &registry, doc)?;
+            }
+            Ok(())
+        }
+        "report" => {
+            use anyhow::Context;
+            let path = cli
+                .operand
+                .as_deref()
+                .ok_or_else(|| anyhow::anyhow!("usage: repro report <metrics.jsonl>"))?;
+            let content = std::fs::read_to_string(path)
+                .with_context(|| format!("reading metrics file {path:?}"))?;
+            print!("{}", h_svm_lru::obs::export::render_report(&content)?);
             Ok(())
         }
         "bench-gate" => {
@@ -524,7 +617,7 @@ fn run(args: &[String]) -> Result<()> {
                 None => 0.15,
             };
             let mut failed = false;
-            for suite in ["hotpath", "sharded", "online", "dag"] {
+            for suite in ["hotpath", "sharded", "online", "dag", "obs"] {
                 let file = format!("BENCH_{suite}.json");
                 let baseline = std::path::Path::new(baseline_dir).join(&file);
                 let current = std::path::Path::new(current_dir).join(&file);
@@ -562,6 +655,20 @@ fn run(args: &[String]) -> Result<()> {
             anyhow::bail!("unknown subcommand {other:?}\n\n{HELP}");
         }
     }
+}
+
+/// Write the telemetry document + registry scalars to `path`
+/// (`--metrics-out`), first logging the wall-clock (volatile) histograms
+/// that the deterministic file deliberately excludes.
+fn emit_metrics(
+    path: &str,
+    registry: &h_svm_lru::obs::MetricsRegistry,
+    doc: h_svm_lru::obs::export::MetricsDoc,
+) -> Result<()> {
+    h_svm_lru::obs::export::log_volatile(registry);
+    doc.write_jsonl(registry, path)?;
+    println!("\nmetrics: wrote {path} (render with `repro report {path}`)");
+    Ok(())
 }
 
 /// Doubling shard sweep, always ending on the requested count (so

@@ -1,0 +1,164 @@
+//! Sampled eviction audit ring — "why was this block evicted?".
+//!
+//! Recording every eviction would dominate the run's memory on adversarial
+//! traces, so the ring keeps every Nth eviction up to a byte-bounded cap:
+//! `entries.len() <= min(cap, ceil(seen / every))` always holds
+//! (property-tested). Entry construction is deferred behind a closure so a
+//! skipped eviction costs one increment and one branch.
+//!
+//! Entries carry the evicted block's feature vector, SVM decision score
+//! and predicted-vs-eventual reuse, which is exactly the row a confusion
+//! tracker needs — the drivers fold each audited (and unaudited) labeled
+//! eviction into the per-window TP/FP/TN/FN counts of
+//! [`crate::obs::window::WindowAccum`].
+
+use crate::cache::EvictCause;
+use crate::hdfs::BlockId;
+use crate::sim::SimTime;
+use crate::svm::features::FeatureVec;
+
+/// One audited eviction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AuditEntry {
+    /// Simulated time of the access that forced the eviction.
+    pub at: SimTime,
+    /// The evicted block.
+    pub block: BlockId,
+    /// Why the policy let it go.
+    pub cause: EvictCause,
+    /// The block's feature vector at its last access (zeroed when the run
+    /// has no feature pipeline, e.g. plain LRU).
+    pub features: FeatureVec,
+    /// Raw SVM decision score at the last access (0.0 when unclassified).
+    pub score: f32,
+    /// The classifier's reuse prediction (`None` when unclassified).
+    pub predicted: Option<bool>,
+    /// Ground truth: was the block requested again after this eviction?
+    pub actual: bool,
+}
+
+/// The sampling ring: every `every`-th eviction is recorded until `cap`
+/// entries exist.
+#[derive(Debug)]
+pub struct EvictionAudit {
+    every: u64,
+    cap: usize,
+    seen: u64,
+    entries: Vec<AuditEntry>,
+}
+
+/// Default sampling period.
+pub const DEFAULT_AUDIT_EVERY: u64 = 8;
+/// Default ring capacity.
+pub const DEFAULT_AUDIT_CAP: usize = 256;
+
+impl EvictionAudit {
+    /// A ring sampling every `every`-th eviction (min 1) up to `cap`
+    /// entries.
+    pub fn new(every: u64, cap: usize) -> Self {
+        EvictionAudit { every: every.max(1), cap, seen: 0, entries: Vec::new() }
+    }
+
+    /// Observe one eviction; `make` runs only when this eviction is
+    /// sampled.
+    #[inline]
+    pub fn observe(&mut self, make: impl FnOnce() -> AuditEntry) {
+        let sampled = self.seen % self.every == 0 && self.entries.len() < self.cap;
+        self.seen += 1;
+        if sampled {
+            self.entries.push(make());
+        }
+    }
+
+    /// Evictions observed (sampled or not).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Sampling period.
+    pub fn every(&self) -> u64 {
+        self.every
+    }
+
+    /// The sampled entries, in observation order.
+    pub fn entries(&self) -> &[AuditEntry] {
+        &self.entries
+    }
+
+    /// Consume the ring.
+    pub fn into_entries(self) -> Vec<AuditEntry> {
+        self.entries
+    }
+}
+
+/// Merge per-worker audit rings into one deterministic list: entries
+/// sorted by `(time, block)`, total seen summed. Worker scheduling order
+/// never shows in the result because each block is pinned to one shard
+/// (so `(time, block)` collisions across workers cannot happen for
+/// distinct streams with distinct blocks).
+pub fn merge_audits(parts: Vec<EvictionAudit>) -> (Vec<AuditEntry>, u64) {
+    let mut seen = 0u64;
+    let mut entries = Vec::new();
+    for part in parts {
+        seen += part.seen;
+        entries.extend(part.entries);
+    }
+    entries.sort_by_key(|e| (e.at, e.block.0));
+    (entries, seen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(at: u64, block: u64) -> AuditEntry {
+        AuditEntry {
+            at: SimTime(at),
+            block: BlockId(block),
+            cause: EvictCause::Capacity,
+            features: FeatureVec::default(),
+            score: 0.0,
+            predicted: None,
+            actual: false,
+        }
+    }
+
+    #[test]
+    fn sampling_bound_holds() {
+        let mut ring = EvictionAudit::new(4, 5);
+        for i in 0..100u64 {
+            ring.observe(|| entry(i, i));
+        }
+        assert_eq!(ring.seen(), 100);
+        let bound = (ring.seen().div_ceil(ring.every()) as usize).min(5);
+        assert_eq!(ring.entries().len(), bound);
+        // Every 4th eviction, starting at the first.
+        assert_eq!(ring.entries()[0].at, SimTime(0));
+        assert_eq!(ring.entries()[1].at, SimTime(4));
+    }
+
+    #[test]
+    fn skipped_evictions_never_run_the_closure() {
+        let mut ring = EvictionAudit::new(2, 100);
+        let mut built = 0u32;
+        for i in 0..10u64 {
+            ring.observe(|| {
+                built += 1;
+                entry(i, i)
+            });
+        }
+        assert_eq!(built, 5);
+    }
+
+    #[test]
+    fn merge_is_order_independent() {
+        let mut a = EvictionAudit::new(1, 16);
+        let mut b = EvictionAudit::new(1, 16);
+        a.observe(|| entry(5, 1));
+        a.observe(|| entry(1, 2));
+        b.observe(|| entry(3, 3));
+        let (ab, seen) = merge_audits(vec![a, b]);
+        assert_eq!(seen, 3);
+        assert_eq!(ab.iter().map(|e| e.at.0).collect::<Vec<_>>(), vec![1, 3, 5]);
+    }
+}

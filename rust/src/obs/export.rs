@@ -1,0 +1,415 @@
+//! JSONL export (`--metrics-out`) and the `repro report` renderer.
+//!
+//! Hand-rolled like the rest of the crate's JSON (no serde): one object
+//! per line, fixed field order, counters/gauges/histograms sorted by name
+//! and windows by index — so two same-seed runs write **byte-identical**
+//! files (property-tested in rust/tests/property_obs.rs). Only
+//! [`MetricClass::Deterministic`] metrics are exported; `Volatile`
+//! (wall-clock) histograms go to the log via [`log_volatile`] instead.
+//!
+//! The reader side ([`render_report`]) parses just the fields it renders
+//! with the same minimal scanning approach as
+//! `bench_support::compare` — it only ever reads files this module wrote.
+
+use std::io::Write as _;
+
+use anyhow::{bail, Context, Result};
+
+use super::audit::AuditEntry;
+use super::window::WindowAccum;
+use super::{MetricClass, MetricsRegistry};
+use crate::util::table::{fmt_f, fmt_pct, Table};
+
+/// A value in the run-meta line.
+#[derive(Debug, Clone)]
+pub enum MetaVal {
+    /// JSON string.
+    Str(String),
+    /// JSON integer.
+    U64(u64),
+}
+
+/// Everything one run exports besides the registry: identity, windows and
+/// the audit ring.
+#[derive(Debug, Default)]
+pub struct MetricsDoc {
+    /// Run identity fields for the `meta` line (command, policy, seed…).
+    pub meta: Vec<(String, MetaVal)>,
+    /// Window width in simulated microseconds.
+    pub window_us: u64,
+    /// Completed windows, sorted by index.
+    pub windows: Vec<(u64, WindowAccum)>,
+    /// Evictions observed by the audit ring (sampled or not).
+    pub audit_seen: u64,
+    /// Audit sampling period.
+    pub audit_every: u64,
+    /// Sampled audit entries, sorted by `(time, block)`.
+    pub audit: Vec<AuditEntry>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl MetricsDoc {
+    /// Add a string meta field.
+    pub fn meta_str(&mut self, key: &str, value: impl Into<String>) {
+        self.meta.push((key.to_string(), MetaVal::Str(value.into())));
+    }
+
+    /// Add an integer meta field.
+    pub fn meta_u64(&mut self, key: &str, value: u64) {
+        self.meta.push((key.to_string(), MetaVal::U64(value)));
+    }
+
+    /// Serialize the document plus the registry's deterministic metrics as
+    /// JSONL.
+    pub fn to_jsonl(&self, registry: &MetricsRegistry) -> String {
+        let mut out = String::new();
+        // meta line
+        out.push_str("{\"type\":\"meta\"");
+        for (k, v) in &self.meta {
+            match v {
+                MetaVal::Str(s) => {
+                    out.push_str(&format!(",\"{}\":\"{}\"", json_escape(k), json_escape(s)))
+                }
+                MetaVal::U64(n) => out.push_str(&format!(",\"{}\":{n}", json_escape(k))),
+            }
+        }
+        out.push_str(&format!(",\"window_us\":{}}}\n", self.window_us));
+
+        for (idx, w) in &self.windows {
+            out.push_str(&format!(
+                "{{\"type\":\"window\",\"idx\":{idx},\"start_us\":{start},\
+                 \"requests\":{},\"hits\":{},\"insertions\":{},\
+                 \"evict_capacity\":{},\"evict_admission\":{},\"evict_cost_tie\":{},\
+                 \"occupancy\":{},\"snapshot_publishes\":{},\"recompute_us\":{},\
+                 \"tp\":{},\"fp\":{},\"tn\":{},\"fn\":{}}}\n",
+                w.requests,
+                w.hits,
+                w.insertions,
+                w.evict_capacity,
+                w.evict_admission,
+                w.evict_cost_tie,
+                w.occupancy_end,
+                w.snapshot_publishes,
+                w.recompute_cost_us,
+                w.tp,
+                w.fp,
+                w.tn,
+                w.fn_,
+                start = idx * self.window_us,
+            ));
+        }
+
+        for (name, value) in registry.counter_values() {
+            out.push_str(&format!(
+                "{{\"type\":\"counter\",\"name\":\"{}\",\"value\":{value}}}\n",
+                json_escape(&name)
+            ));
+        }
+        for (name, value) in registry.gauge_values() {
+            out.push_str(&format!(
+                "{{\"type\":\"gauge\",\"name\":\"{}\",\"value\":{value}}}\n",
+                json_escape(&name)
+            ));
+        }
+        for (name, class, snap) in registry.hist_snapshots() {
+            if class != MetricClass::Deterministic {
+                continue;
+            }
+            let buckets: Vec<String> = snap
+                .buckets
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(i, &c)| format!("[{},{c}]", super::histogram::bucket_bound(i)))
+                .collect();
+            out.push_str(&format!(
+                "{{\"type\":\"hist\",\"name\":\"{}\",\"count\":{},\"sum\":{},\
+                 \"p50\":{},\"p95\":{},\"buckets\":[{}]}}\n",
+                json_escape(&name),
+                snap.count,
+                snap.sum,
+                snap.quantile(0.50),
+                snap.quantile(0.95),
+                buckets.join(",")
+            ));
+        }
+
+        out.push_str(&format!(
+            "{{\"type\":\"audit_meta\",\"seen\":{},\"every\":{},\"sampled\":{}}}\n",
+            self.audit_seen,
+            self.audit_every,
+            self.audit.len()
+        ));
+        for e in &self.audit {
+            let predicted = match e.predicted {
+                Some(true) => "true",
+                Some(false) => "false",
+                None => "null",
+            };
+            let features: Vec<String> = e.features.iter().map(|f| format!("{f}")).collect();
+            out.push_str(&format!(
+                "{{\"type\":\"audit\",\"at_us\":{},\"block\":{},\"cause\":\"{}\",\
+                 \"score\":{},\"predicted\":{predicted},\"actual\":{},\"features\":[{}]}}\n",
+                e.at.micros(),
+                e.block.0,
+                e.cause.name(),
+                e.score,
+                e.actual,
+                features.join(",")
+            ));
+        }
+        out
+    }
+
+    /// Serialize and write to `path`.
+    pub fn write_jsonl(&self, registry: &MetricsRegistry, path: &str) -> Result<()> {
+        let content = self.to_jsonl(registry);
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating metrics file {path:?}"))?;
+        f.write_all(content.as_bytes())
+            .with_context(|| format!("writing metrics file {path:?}"))?;
+        Ok(())
+    }
+}
+
+/// Log every `Volatile`-class histogram (the wall-clock metrics the JSONL
+/// deliberately leaves out) at info level.
+pub fn log_volatile(registry: &MetricsRegistry) {
+    for (name, class, snap) in registry.hist_snapshots() {
+        if class == MetricClass::Volatile && snap.count > 0 {
+            log::info!(
+                "volatile hist {name}: n={} mean={:.0} p50<={} p95<={}",
+                snap.count,
+                snap.mean(),
+                snap.quantile(0.50),
+                snap.quantile(0.95)
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// repro report: minimal field scanners over our own JSONL.
+
+fn field_raw<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = if rest.starts_with('"') {
+        // String value: scan to the closing quote (no escapes in the
+        // fields report reads).
+        rest[1..].find('"').map(|i| i + 2)?
+    } else if rest.starts_with('[') {
+        rest.find(']').map(|i| i + 1)?
+    } else {
+        rest.find([',', '}'])?
+    };
+    Some(&rest[..end])
+}
+
+fn field_u64(line: &str, key: &str) -> Option<u64> {
+    field_raw(line, key)?.parse().ok()
+}
+
+fn field_str(line: &str, key: &str) -> Option<String> {
+    let raw = field_raw(line, key)?;
+    Some(raw.trim_matches('"').to_string())
+}
+
+/// Render a `metrics.jsonl` file's contents as the `repro report` tables.
+pub fn render_report(content: &str) -> Result<String> {
+    let mut out = String::new();
+    let mut windows = Table::new(vec![
+        "window", "t_start", "requests", "hit%", "evict cap", "evict adm", "evict tie",
+        "occupancy", "publishes", "recompute_s", "tp", "fp", "tn", "fn",
+    ]);
+    let mut scalars = Table::new(vec!["kind", "name", "value"]);
+    let mut hists = Table::new(vec!["histogram", "count", "mean", "p50<=", "p95<="]);
+    let mut n_meta = 0usize;
+
+    for line in content.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Some(ty) = field_str(line, "type") else {
+            bail!("not a metrics line (no \"type\" field): {line:?}");
+        };
+        match ty.as_str() {
+            "meta" => {
+                n_meta += 1;
+                out.push_str(&format!("run: {}\n", line));
+            }
+            "window" => {
+                let g = |k: &str| field_u64(line, k).unwrap_or(0);
+                let requests = g("requests");
+                let hit_pct = if requests == 0 {
+                    "-".to_string()
+                } else {
+                    fmt_pct(g("hits") as f64 / requests as f64)
+                };
+                windows.add_row(vec![
+                    g("idx").to_string(),
+                    fmt_f(g("start_us") as f64 / 1e6, 1),
+                    requests.to_string(),
+                    hit_pct,
+                    g("evict_capacity").to_string(),
+                    g("evict_admission").to_string(),
+                    g("evict_cost_tie").to_string(),
+                    g("occupancy").to_string(),
+                    g("snapshot_publishes").to_string(),
+                    fmt_f(g("recompute_us") as f64 / 1e6, 2),
+                    g("tp").to_string(),
+                    g("fp").to_string(),
+                    g("tn").to_string(),
+                    g("fn").to_string(),
+                ]);
+            }
+            "counter" | "gauge" => {
+                scalars.add_row(vec![
+                    ty.clone(),
+                    field_str(line, "name").unwrap_or_default(),
+                    field_u64(line, "value").unwrap_or(0).to_string(),
+                ]);
+            }
+            "hist" => {
+                let count = field_u64(line, "count").unwrap_or(0);
+                let sum = field_u64(line, "sum").unwrap_or(0);
+                let mean =
+                    if count == 0 { 0.0 } else { sum as f64 / count as f64 };
+                hists.add_row(vec![
+                    field_str(line, "name").unwrap_or_default(),
+                    count.to_string(),
+                    fmt_f(mean, 1),
+                    field_u64(line, "p50").unwrap_or(0).to_string(),
+                    field_u64(line, "p95").unwrap_or(0).to_string(),
+                ]);
+            }
+            "audit_meta" => {
+                out.push_str(&format!(
+                    "audit: {} evictions seen, every {} sampled, {} recorded\n",
+                    field_u64(line, "seen").unwrap_or(0),
+                    field_u64(line, "every").unwrap_or(0),
+                    field_u64(line, "sampled").unwrap_or(0),
+                ));
+            }
+            "audit" => {} // summarized by audit_meta; raw rows stay in the file
+            other => bail!("unknown metrics line type {other:?}"),
+        }
+    }
+    if n_meta == 0 {
+        bail!("no meta line — not a repro metrics.jsonl file");
+    }
+    if !windows.is_empty() {
+        out.push('\n');
+        out.push_str(&windows.render());
+    }
+    if !scalars.is_empty() {
+        out.push('\n');
+        out.push_str(&scalars.render());
+    }
+    if !hists.is_empty() {
+        out.push('\n');
+        out.push_str(&hists.render());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::EvictCause;
+    use crate::hdfs::BlockId;
+    use crate::sim::SimTime;
+
+    fn sample_doc() -> MetricsDoc {
+        let mut doc = MetricsDoc {
+            window_us: 1_000_000,
+            windows: vec![
+                (0, WindowAccum { requests: 10, hits: 4, evict_capacity: 2, ..Default::default() }),
+                (2, WindowAccum { requests: 5, hits: 5, tp: 1, fn_: 1, ..Default::default() }),
+            ],
+            audit_seen: 2,
+            audit_every: 1,
+            audit: vec![AuditEntry {
+                at: SimTime(17),
+                block: BlockId(3),
+                cause: EvictCause::Capacity,
+                features: Default::default(),
+                score: -0.5,
+                predicted: Some(false),
+                actual: true,
+            }],
+            ..Default::default()
+        };
+        doc.meta_str("cmd", "sharded");
+        doc.meta_str("policy", "h-svm-lru");
+        doc.meta_u64("seed", 7);
+        doc
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_report() {
+        let reg = MetricsRegistry::new();
+        reg.counter("batcher.cold").add(3);
+        reg.gauge("samples.sent", || 11);
+        let h = reg.histogram("evict.scan_steps", MetricClass::Deterministic, 1);
+        h.record(0, 1);
+        h.record(0, 5);
+        let wall = reg.histogram("flush.wall_ns", MetricClass::Volatile, 1);
+        wall.record(0, 123_456);
+
+        let doc = sample_doc();
+        let jsonl = doc.to_jsonl(&reg);
+        assert!(jsonl.contains("\"type\":\"meta\""));
+        assert!(jsonl.contains("\"seed\":7"));
+        assert!(jsonl.contains("\"type\":\"window\",\"idx\":2"));
+        assert!(jsonl.contains("\"name\":\"batcher.cold\",\"value\":3"));
+        assert!(!jsonl.contains("flush.wall_ns"), "volatile hist must not be exported");
+        assert!(jsonl.contains("\"cause\":\"capacity\""));
+
+        let report = render_report(&jsonl).expect("report renders");
+        assert!(report.contains("requests"));
+        assert!(report.contains("40.00%"));
+        assert!(report.contains("evict.scan_steps"));
+        assert!(report.contains("2 evictions seen"));
+    }
+
+    #[test]
+    fn export_is_deterministic_across_registration_order() {
+        let doc = sample_doc();
+        let a = MetricsRegistry::new();
+        a.counter("x").add(1);
+        a.counter("a").add(2);
+        let b = MetricsRegistry::new();
+        b.counter("a").add(2);
+        b.counter("x").add(1);
+        assert_eq!(doc.to_jsonl(&a), doc.to_jsonl(&b));
+    }
+
+    #[test]
+    fn report_rejects_garbage() {
+        assert!(render_report("not json at all\n").is_err());
+        assert!(render_report("").is_err());
+    }
+
+    #[test]
+    fn escapes_strings() {
+        assert_eq!(json_escape("a\"b\\c\n"), "a\\\"b\\\\c\\n");
+    }
+}

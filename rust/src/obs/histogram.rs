@@ -1,0 +1,281 @@
+//! Lock-free log-bucket histograms, one instance per shard, merged on read.
+//!
+//! Same split as [`crate::cache::shard_stats`]: the recording side runs on
+//! a hot path that is already single-writer per shard (the shard `Mutex`,
+//! or a replay worker that owns its shard outright), so writes are plain
+//! relaxed stores inside a seqlock write section; readers spin on the
+//! sequence word and never block the writer.
+//!
+//! Buckets are powers of two: bucket 0 holds the value 0, bucket `i` holds
+//! values whose highest set bit is `i - 1`, i.e. the range
+//! `[2^(i-1), 2^i - 1]`. 65 buckets cover the whole `u64` domain, so
+//! `record` never clamps and a merged snapshot is lossless — element-wise
+//! addition of bucket counts is associative and commutative, which is what
+//! makes per-shard instances mergeable in any order (property-tested in
+//! rust/tests/property_obs.rs).
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+
+/// Number of log2 buckets: one for zero plus one per possible
+/// highest-set-bit position of a `u64`.
+pub const BUCKETS: usize = 65;
+
+/// Bucket index of a value: 0 for 0, else `64 - leading_zeros` (the
+/// 1-based position of the highest set bit).
+#[inline]
+pub fn bucket_index(value: u64) -> usize {
+    if value == 0 {
+        0
+    } else {
+        64 - value.leading_zeros() as usize
+    }
+}
+
+/// Inclusive upper bound of bucket `i` (the largest value it can hold).
+pub fn bucket_bound(i: usize) -> u64 {
+    debug_assert!(i < BUCKETS);
+    if i == 0 {
+        0
+    } else if i == 64 {
+        u64::MAX
+    } else {
+        (1u64 << i) - 1
+    }
+}
+
+/// A lock-free log2-bucket histogram.
+///
+/// Aligned like [`crate::cache::shard_stats::AtomicShardStats`] so adjacent
+/// per-shard instances never share a cache line.
+///
+/// Single-writer discipline: `record` may only be called by the one thread
+/// that owns this instance (the shard's lock holder or the replay worker
+/// the shard is pinned to). `snapshot` is unrestricted.
+#[repr(align(128))]
+pub struct LogHistogram {
+    /// Seqlock word: odd while a record is in flight, even otherwise.
+    seq: AtomicU64,
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let snap = self.snapshot();
+        f.debug_struct("LogHistogram")
+            .field("count", &snap.count)
+            .field("sum", &snap.sum)
+            .finish()
+    }
+}
+
+impl LogHistogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        LogHistogram {
+            seq: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    #[inline]
+    fn bump(counter: &AtomicU64, by: u64) {
+        // Single writer: a plain load+store (not an RMW) is enough.
+        counter.store(counter.load(Ordering::Relaxed).wrapping_add(by), Ordering::Relaxed);
+    }
+
+    /// Record one observation. Caller must be this instance's single
+    /// writer; constant work, no allocation, no lock.
+    #[inline]
+    pub fn record(&self, value: u64) {
+        let prev = self.seq.fetch_add(1, Ordering::AcqRel);
+        debug_assert_eq!(prev & 1, 0, "concurrent LogHistogram writers");
+        Self::bump(&self.count, 1);
+        Self::bump(&self.sum, value);
+        Self::bump(&self.buckets[bucket_index(value)], 1);
+        let prev = self.seq.fetch_add(1, Ordering::Release);
+        debug_assert_eq!(prev & 1, 1, "LogHistogram write section closed twice");
+    }
+
+    /// A consistent snapshot — lock-free; spins only while a (constant
+    /// work) record is in flight.
+    pub fn snapshot(&self) -> HistSnapshot {
+        loop {
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let snap = HistSnapshot {
+                count: self.count.load(Ordering::Relaxed),
+                sum: self.sum.load(Ordering::Relaxed),
+                buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            };
+            // Order the bucket loads before the re-check (see
+            // AtomicShardStats::snapshot for the reasoning).
+            fence(Ordering::Acquire);
+            if self.seq.load(Ordering::Relaxed) == s1 {
+                return snap;
+            }
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// An owned, mergeable copy of a [`LogHistogram`]'s state.
+#[derive(Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Total observations recorded.
+    pub count: u64,
+    /// Sum of all observed values.
+    pub sum: u64,
+    /// Per-bucket observation counts (see [`bucket_index`]).
+    pub buckets: [u64; BUCKETS],
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        HistSnapshot { count: 0, sum: 0, buckets: [0; BUCKETS] }
+    }
+}
+
+impl std::fmt::Debug for HistSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HistSnapshot")
+            .field("count", &self.count)
+            .field("sum", &self.sum)
+            .field("mean", &self.mean())
+            .finish()
+    }
+}
+
+impl HistSnapshot {
+    /// Element-wise add `other` into `self`. Associative and lossless:
+    /// merging per-shard snapshots in any order yields the same totals as
+    /// recording every observation into one histogram.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        self.count += other.count;
+        self.sum += other.sum;
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Mean observed value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket containing the `q`-quantile observation
+    /// (`q` in `[0, 1]`); 0 when empty. Deterministic — it walks the
+    /// cumulative bucket counts, so identical snapshots give identical
+    /// answers regardless of merge order.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_bound(i);
+            }
+        }
+        bucket_bound(BUCKETS - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(u64::MAX), 64);
+        assert_eq!(bucket_bound(0), 0);
+        assert_eq!(bucket_bound(1), 1);
+        assert_eq!(bucket_bound(2), 3);
+        assert_eq!(bucket_bound(64), u64::MAX);
+        for v in [0u64, 1, 2, 3, 4, 5, 1023, 1024, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(v <= bucket_bound(i));
+            if i > 0 {
+                assert!(v > bucket_bound(i - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn records_and_summarizes() {
+        let h = LogHistogram::new();
+        for v in [0u64, 1, 2, 3, 100, 100, 1000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 7);
+        assert_eq!(s.sum, 1206);
+        assert_eq!(s.buckets[0], 1);
+        assert_eq!(s.buckets[1], 1);
+        assert_eq!(s.buckets[2], 2);
+        assert!((s.mean() - 1206.0 / 7.0).abs() < 1e-9);
+        assert_eq!(s.quantile(0.0), 0);
+        assert_eq!(s.quantile(1.0), bucket_bound(bucket_index(1000)));
+    }
+
+    #[test]
+    fn quantile_of_empty_is_zero() {
+        assert_eq!(HistSnapshot::default().quantile(0.5), 0);
+    }
+
+    #[test]
+    fn concurrent_readers_never_observe_torn_buckets() {
+        let h = LogHistogram::new();
+        let writes: u64 = 20_000;
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let h = &h;
+            let stop_ref = &stop;
+            let readers: Vec<_> = (0..3)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut seen = 0u64;
+                        while !stop_ref.load(Ordering::Acquire) {
+                            let s = h.snapshot();
+                            let total: u64 = s.buckets.iter().sum();
+                            assert_eq!(total, s.count, "torn histogram snapshot");
+                            seen += 1;
+                        }
+                        seen
+                    })
+                })
+                .collect();
+            for i in 0..writes {
+                h.record(i % 1024);
+            }
+            stop.store(true, Ordering::Release);
+            for r in readers {
+                assert!(r.join().unwrap() > 0);
+            }
+        });
+        assert_eq!(h.snapshot().count, writes);
+    }
+}

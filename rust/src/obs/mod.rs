@@ -1,0 +1,364 @@
+//! Observability: one metrics registry in front of lock-free histograms, a
+//! windowed time-series recorder, and a sampled eviction audit ring.
+//!
+//! The paper's claims are about *behavior over time* — pollution forming,
+//! classifier drift during online retraining, tail latency on the
+//! prediction path — not end-of-run scalars. This layer records that
+//! behavior without perturbing it:
+//!
+//! * [`MetricsRegistry`] hands out [`CounterHandle`] / [`HistHandle`]
+//!   recorders and closure-backed gauges. A **disabled** registry hands
+//!   out empty handles whose `record`/`add` is a null check — the O(1)
+//!   hot path stays O(1) and allocation-free (held within 5% by
+//!   `benches/bench_obs.rs` in the CI bench gate).
+//! * [`histogram::LogHistogram`] is a per-shard seqlock block (same
+//!   discipline as [`crate::cache::shard_stats`]): single writer under the
+//!   shard's ownership, lock-free mergeable readers.
+//! * [`window::WindowSeries`] buckets observations by **simulated** time,
+//!   so same-seed runs emit bit-identical series.
+//! * [`audit::EvictionAudit`] samples every Nth eviction with the feature
+//!   vector, SVM score and predicted-vs-eventual reuse, feeding the
+//!   per-window confusion counts.
+//! * [`export`] writes the whole thing as JSONL (`--metrics-out`) and
+//!   `repro report` renders it back as windowed tables.
+//!
+//! Determinism contract: metrics are either [`MetricClass::Deterministic`]
+//! (simulated-time or count domains — exported) or
+//! [`MetricClass::Volatile`] (wall-clock domains — reported to the log,
+//! **excluded** from the JSONL so two same-seed runs produce byte-identical
+//! files; property-tested in rust/tests/property_obs.rs).
+
+pub mod audit;
+pub mod export;
+pub mod histogram;
+pub mod window;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub use audit::{merge_audits, AuditEntry, EvictionAudit, DEFAULT_AUDIT_CAP, DEFAULT_AUDIT_EVERY};
+pub use histogram::{HistSnapshot, LogHistogram};
+pub use window::{merge_series, WindowAccum, WindowSeries, DEFAULT_WINDOW_US};
+
+/// Knobs of one observed run: window width and audit sampling.
+#[derive(Debug, Clone, Copy)]
+pub struct ObsConfig {
+    /// Time-series window width in simulated microseconds.
+    pub window_us: u64,
+    /// Audit every Nth eviction.
+    pub audit_every: u64,
+    /// Audit ring capacity (entries per worker).
+    pub audit_cap: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            window_us: DEFAULT_WINDOW_US,
+            audit_every: DEFAULT_AUDIT_EVERY,
+            audit_cap: DEFAULT_AUDIT_CAP,
+        }
+    }
+}
+
+/// One run's deterministic observations, merged across shard workers —
+/// what a driver hands to [`export::MetricsDoc`] next to the registry.
+#[derive(Debug, Clone, Default)]
+pub struct RunObservations {
+    /// Merged windowed series, sorted by window index.
+    pub windows: Vec<(u64, WindowAccum)>,
+    /// Merged audit entries, sorted by `(time, block)`.
+    pub audit: Vec<AuditEntry>,
+    /// Evictions the audit rings observed (sampled or not).
+    pub audit_seen: u64,
+    /// Audit sampling period.
+    pub audit_every: u64,
+}
+
+impl RunObservations {
+    /// Move the observations into an export document with the given
+    /// window width (meta fields are the caller's to fill).
+    pub fn into_doc(self, window_us: u64) -> export::MetricsDoc {
+        export::MetricsDoc {
+            meta: Vec::new(),
+            window_us,
+            windows: self.windows,
+            audit_seen: self.audit_seen,
+            audit_every: self.audit_every,
+            audit: self.audit,
+        }
+    }
+}
+
+/// Whether a metric's value domain is reproducible across same-seed runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricClass {
+    /// Counts and simulated-time quantities: included in the JSONL export.
+    Deterministic,
+    /// Wall-clock quantities (flush latency, prediction-path nanoseconds):
+    /// logged at end of run, excluded from the deterministic export.
+    Volatile,
+}
+
+impl MetricClass {
+    /// Stable lowercase name (used by the JSONL export).
+    pub fn name(self) -> &'static str {
+        match self {
+            MetricClass::Deterministic => "deterministic",
+            MetricClass::Volatile => "volatile",
+        }
+    }
+}
+
+type GaugeFn = Box<dyn Fn() -> u64 + Send>;
+
+#[derive(Default)]
+struct RegistryInner {
+    counters: Vec<(String, Arc<AtomicU64>)>,
+    hists: Vec<(String, MetricClass, Arc<Vec<LogHistogram>>)>,
+    gauges: Vec<(String, GaugeFn)>,
+}
+
+/// The registry: named counters, per-shard histograms and closure gauges.
+///
+/// Registration takes a `Mutex` (setup path); recording through the
+/// returned handles is lock-free. A registry built with
+/// [`MetricsRegistry::disabled`] returns inert handles and drops gauge
+/// closures — instrumented code needs no `if enabled` branches of its own.
+pub struct MetricsRegistry {
+    enabled: bool,
+    inner: Mutex<RegistryInner>,
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MetricsRegistry").field("enabled", &self.enabled).finish()
+    }
+}
+
+impl MetricsRegistry {
+    /// An active registry.
+    pub fn new() -> Self {
+        MetricsRegistry { enabled: true, inner: Mutex::new(RegistryInner::default()) }
+    }
+
+    /// A no-op registry: every handle it returns is inert.
+    pub fn disabled() -> Self {
+        MetricsRegistry { enabled: false, inner: Mutex::new(RegistryInner::default()) }
+    }
+
+    /// Active or disabled, as requested (CLI convenience).
+    pub fn with_enabled(enabled: bool) -> Self {
+        if enabled {
+            Self::new()
+        } else {
+            Self::disabled()
+        }
+    }
+
+    /// Whether handles record anything.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The counter named `name`, registering it on first use (handles for
+    /// the same name share one cell).
+    pub fn counter(&self, name: &str) -> CounterHandle {
+        if !self.enabled {
+            return CounterHandle(None);
+        }
+        let mut inner = self.inner.lock().expect("metrics registry poisoned");
+        if let Some((_, cell)) = inner.counters.iter().find(|(n, _)| n == name) {
+            return CounterHandle(Some(Arc::clone(cell)));
+        }
+        let cell = Arc::new(AtomicU64::new(0));
+        inner.counters.push((name.to_string(), Arc::clone(&cell)));
+        CounterHandle(Some(cell))
+    }
+
+    /// The per-shard histogram named `name` with `shards` independent
+    /// single-writer instances, registering it on first use. Re-requesting
+    /// an existing name returns the existing instances (the shard count
+    /// must match).
+    pub fn histogram(&self, name: &str, class: MetricClass, shards: usize) -> HistHandle {
+        if !self.enabled {
+            return HistHandle(None);
+        }
+        let mut inner = self.inner.lock().expect("metrics registry poisoned");
+        if let Some((_, _, slots)) = inner.hists.iter().find(|(n, _, _)| n == name) {
+            assert_eq!(slots.len(), shards, "histogram {name:?} re-registered with a different shard count");
+            return HistHandle(Some(Arc::clone(slots)));
+        }
+        let slots = Arc::new((0..shards.max(1)).map(|_| LogHistogram::new()).collect::<Vec<_>>());
+        inner.hists.push((name.to_string(), class, Arc::clone(&slots)));
+        HistHandle(Some(slots))
+    }
+
+    /// Register (or replace) the gauge named `name`; `read` is called at
+    /// export time.
+    pub fn gauge(&self, name: &str, read: impl Fn() -> u64 + Send + 'static) {
+        if !self.enabled {
+            return;
+        }
+        let mut inner = self.inner.lock().expect("metrics registry poisoned");
+        if let Some(slot) = inner.gauges.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = Box::new(read);
+        } else {
+            inner.gauges.push((name.to_string(), Box::new(read)));
+        }
+    }
+
+    /// Current counter values, sorted by name.
+    pub fn counter_values(&self) -> Vec<(String, u64)> {
+        let inner = self.inner.lock().expect("metrics registry poisoned");
+        let mut out: Vec<_> = inner
+            .counters
+            .iter()
+            .map(|(n, c)| (n.clone(), c.load(Ordering::Relaxed)))
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Current gauge readings, sorted by name.
+    pub fn gauge_values(&self) -> Vec<(String, u64)> {
+        let inner = self.inner.lock().expect("metrics registry poisoned");
+        let mut out: Vec<_> = inner.gauges.iter().map(|(n, f)| (n.clone(), f())).collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Cross-shard merged snapshots of every histogram, sorted by name.
+    pub fn hist_snapshots(&self) -> Vec<(String, MetricClass, HistSnapshot)> {
+        let inner = self.inner.lock().expect("metrics registry poisoned");
+        let mut out: Vec<_> = inner
+            .hists
+            .iter()
+            .map(|(n, class, slots)| {
+                let mut merged = HistSnapshot::default();
+                for h in slots.iter() {
+                    merged.merge(&h.snapshot());
+                }
+                (n.clone(), *class, merged)
+            })
+            .collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A recorder for one named counter; inert when the registry is disabled.
+#[derive(Clone, Default)]
+pub struct CounterHandle(Option<Arc<AtomicU64>>);
+
+impl CounterHandle {
+    /// Add `by` (multi-writer safe).
+    #[inline]
+    pub fn add(&self, by: u64) {
+        if let Some(cell) = &self.0 {
+            cell.fetch_add(by, Ordering::Relaxed);
+        }
+    }
+
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value (0 when inert).
+    pub fn value(&self) -> u64 {
+        self.0.as_ref().map_or(0, |c| c.load(Ordering::Relaxed))
+    }
+}
+
+impl std::fmt::Debug for CounterHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("CounterHandle").field(&self.value()).finish()
+    }
+}
+
+/// A recorder for one named per-shard histogram; inert when the registry
+/// is disabled. `record(shard, v)` must respect the per-shard
+/// single-writer discipline of [`LogHistogram`].
+#[derive(Clone, Default, Debug)]
+pub struct HistHandle(Option<Arc<Vec<LogHistogram>>>);
+
+impl HistHandle {
+    /// Record `value` into shard `shard`'s instance.
+    #[inline]
+    pub fn record(&self, shard: usize, value: u64) {
+        if let Some(slots) = &self.0 {
+            slots[shard % slots.len()].record(value);
+        }
+    }
+
+    /// Whether this handle records anything (for skipping observation
+    /// computation that is itself costly).
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        self.0.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_hands_out_inert_handles() {
+        let reg = MetricsRegistry::disabled();
+        let c = reg.counter("x");
+        c.add(5);
+        assert_eq!(c.value(), 0);
+        let h = reg.histogram("h", MetricClass::Deterministic, 4);
+        assert!(!h.is_active());
+        h.record(0, 7);
+        reg.gauge("g", || 3);
+        assert!(reg.counter_values().is_empty());
+        assert!(reg.gauge_values().is_empty());
+        assert!(reg.hist_snapshots().is_empty());
+    }
+
+    #[test]
+    fn counters_dedup_by_name() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("requests");
+        let b = reg.counter("requests");
+        a.add(2);
+        b.inc();
+        assert_eq!(reg.counter_values(), vec![("requests".to_string(), 3)]);
+    }
+
+    #[test]
+    fn histograms_merge_across_shards() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("scan", MetricClass::Deterministic, 2);
+        h.record(0, 1);
+        h.record(1, 1);
+        h.record(1, 100);
+        let snaps = reg.hist_snapshots();
+        assert_eq!(snaps.len(), 1);
+        assert_eq!(snaps[0].0, "scan");
+        assert_eq!(snaps[0].2.count, 3);
+        assert_eq!(snaps[0].2.sum, 102);
+    }
+
+    #[test]
+    fn gauges_read_latest_and_replace() {
+        let reg = MetricsRegistry::new();
+        let cell = Arc::new(AtomicU64::new(1));
+        let view = Arc::clone(&cell);
+        reg.gauge("probe.sent", move || view.load(Ordering::Relaxed));
+        cell.store(9, Ordering::Relaxed);
+        assert_eq!(reg.gauge_values(), vec![("probe.sent".to_string(), 9)]);
+        reg.gauge("probe.sent", || 42);
+        assert_eq!(reg.gauge_values(), vec![("probe.sent".to_string(), 42)]);
+    }
+}

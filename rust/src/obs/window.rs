@@ -1,0 +1,214 @@
+//! Windowed time-series recorder keyed on **simulated** time.
+//!
+//! Every accumulator field is integer and every window boundary is a
+//! `sim::time` microsecond index, so two same-seed runs produce identical
+//! series byte for byte — wall-clock never enters this module (wall-clock
+//! observations belong in `Volatile`-class histograms, which the JSONL
+//! export excludes; see [`crate::obs`]).
+//!
+//! Hot-path cost: one division + one branch per observation
+//! ([`WindowSeries::at`]). A window only materializes in the `done` list
+//! when the clock crosses its boundary, so idle windows cost nothing.
+
+use std::collections::BTreeMap;
+
+use crate::sim::SimTime;
+
+/// Default window width: one simulated second.
+pub const DEFAULT_WINDOW_US: u64 = 1_000_000;
+
+/// Per-window accumulator. Everything is a saturating-free plain `u64`
+/// count (or microsecond total), merged across shards by field-wise
+/// addition.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WindowAccum {
+    /// Accesses observed in the window.
+    pub requests: u64,
+    /// Accesses that hit.
+    pub hits: u64,
+    /// Blocks inserted.
+    pub insertions: u64,
+    /// Evictions forced purely by capacity pressure.
+    pub evict_capacity: u64,
+    /// Evictions where the admission layer dueled the victim and the
+    /// newcomer won.
+    pub evict_admission: u64,
+    /// Evictions where a cost-aware wrapper broke the base policy's tie
+    /// toward a cheaper victim.
+    pub evict_cost_tie: u64,
+    /// Blocks resident at the end of the window (summed across shards).
+    pub occupancy_end: u64,
+    /// Classifier snapshot version changes observed by workers.
+    pub snapshot_publishes: u64,
+    /// Recompute cost charged by the DAG replay, in simulated microseconds.
+    pub recompute_cost_us: u64,
+    /// Evicted with predicted-reuse=true that WAS requested again.
+    pub tp: u64,
+    /// Evicted with predicted-reuse=true that was NOT requested again.
+    pub fp: u64,
+    /// Evicted with predicted-reuse=false that was NOT requested again.
+    pub tn: u64,
+    /// Evicted with predicted-reuse=false that WAS requested again.
+    pub fn_: u64,
+}
+
+impl WindowAccum {
+    /// Field-wise add `other` into `self` (shard → run rollup).
+    pub fn merge(&mut self, other: &WindowAccum) {
+        self.requests += other.requests;
+        self.hits += other.hits;
+        self.insertions += other.insertions;
+        self.evict_capacity += other.evict_capacity;
+        self.evict_admission += other.evict_admission;
+        self.evict_cost_tie += other.evict_cost_tie;
+        self.occupancy_end += other.occupancy_end;
+        self.snapshot_publishes += other.snapshot_publishes;
+        self.recompute_cost_us += other.recompute_cost_us;
+        self.tp += other.tp;
+        self.fp += other.fp;
+        self.tn += other.tn;
+        self.fn_ += other.fn_;
+    }
+
+    /// Total evictions in the window, over all causes.
+    pub fn evictions(&self) -> u64 {
+        self.evict_capacity + self.evict_admission + self.evict_cost_tie
+    }
+
+    /// Evictions that carried a classifier prediction (the population the
+    /// confusion counts partition).
+    pub fn labeled_evictions(&self) -> u64 {
+        self.tp + self.fp + self.tn + self.fn_
+    }
+
+    /// `hits / requests` for the window (0 when idle).
+    pub fn hit_ratio(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.requests as f64
+        }
+    }
+}
+
+/// One worker's (or one shard's) window series: a current accumulator plus
+/// the list of completed `(window_index, accum)` pairs.
+#[derive(Debug)]
+pub struct WindowSeries {
+    width_us: u64,
+    cur_idx: Option<u64>,
+    cur: WindowAccum,
+    done: Vec<(u64, WindowAccum)>,
+}
+
+impl WindowSeries {
+    /// A series with the given window width in simulated microseconds
+    /// (must be nonzero).
+    pub fn new(width_us: u64) -> Self {
+        assert!(width_us > 0, "window width must be nonzero");
+        WindowSeries { width_us, cur_idx: None, cur: WindowAccum::default(), done: Vec::new() }
+    }
+
+    /// Window width in simulated microseconds.
+    pub fn width_us(&self) -> u64 {
+        self.width_us
+    }
+
+    /// The accumulator for the window containing `now`, rotating the
+    /// previous window out when the boundary is crossed. O(1); the caller
+    /// bumps fields directly on the returned accumulator.
+    #[inline]
+    pub fn at(&mut self, now: SimTime) -> &mut WindowAccum {
+        let idx = now.micros() / self.width_us;
+        if self.cur_idx != Some(idx) {
+            self.rotate(idx);
+        }
+        &mut self.cur
+    }
+
+    #[cold]
+    fn rotate(&mut self, idx: u64) {
+        if let Some(prev) = self.cur_idx {
+            self.done.push((prev, std::mem::take(&mut self.cur)));
+        }
+        self.cur_idx = Some(idx);
+    }
+
+    /// Close the current window and return every completed window, in
+    /// observation order (merge with [`merge_series`] for a sorted,
+    /// deduplicated rollup).
+    pub fn finish(mut self) -> Vec<(u64, WindowAccum)> {
+        if let Some(idx) = self.cur_idx.take() {
+            self.done.push((idx, self.cur));
+        }
+        self.done
+    }
+}
+
+/// Merge many per-worker window lists into one series sorted by window
+/// index, folding duplicate indices field-wise. Deterministic for any
+/// input order (addition is commutative).
+pub fn merge_series(parts: Vec<Vec<(u64, WindowAccum)>>) -> Vec<(u64, WindowAccum)> {
+    let mut merged: BTreeMap<u64, WindowAccum> = BTreeMap::new();
+    for part in parts {
+        for (idx, accum) in part {
+            merged.entry(idx).or_default().merge(&accum);
+        }
+    }
+    merged.into_iter().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rotates_on_boundary_crossings() {
+        let mut s = WindowSeries::new(1_000_000);
+        s.at(SimTime(0)).requests += 1;
+        s.at(SimTime(999_999)).requests += 1;
+        s.at(SimTime(1_000_000)).requests += 1;
+        s.at(SimTime(3_500_000)).hits += 1;
+        let done = s.finish();
+        assert_eq!(done.len(), 3);
+        assert_eq!(done[0].0, 0);
+        assert_eq!(done[0].1.requests, 2);
+        assert_eq!(done[1].0, 1);
+        assert_eq!(done[1].1.requests, 1);
+        assert_eq!(done[2].0, 3, "idle window 2 must not materialize");
+        assert_eq!(done[2].1.hits, 1);
+    }
+
+    #[test]
+    fn merge_folds_duplicate_windows_sorted() {
+        let a = vec![(1u64, WindowAccum { requests: 2, hits: 1, ..Default::default() })];
+        let b = vec![
+            (0u64, WindowAccum { requests: 5, ..Default::default() }),
+            (1u64, WindowAccum { requests: 3, hits: 3, ..Default::default() }),
+        ];
+        let ab = merge_series(vec![a.clone(), b.clone()]);
+        let ba = merge_series(vec![b, a]);
+        assert_eq!(ab, ba, "merge must be order-independent");
+        assert_eq!(ab.len(), 2);
+        assert_eq!(ab[0].0, 0);
+        assert_eq!(ab[1].1.requests, 5);
+        assert_eq!(ab[1].1.hits, 4);
+    }
+
+    #[test]
+    fn accum_invariants() {
+        let w = WindowAccum {
+            requests: 10,
+            hits: 4,
+            evict_capacity: 1,
+            evict_admission: 2,
+            evict_cost_tie: 3,
+            tp: 1,
+            fn_: 1,
+            ..Default::default()
+        };
+        assert_eq!(w.evictions(), 6);
+        assert_eq!(w.labeled_evictions(), 2);
+        assert!((w.hit_ratio() - 0.4).abs() < 1e-12);
+    }
+}

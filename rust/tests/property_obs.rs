@@ -1,0 +1,202 @@
+//! Property tests for the telemetry layer: histogram merge laws, window
+//! rotation determinism across shard counts, audit-ring sampling bounds,
+//! confusion-count accounting, and the acceptance criterion that two
+//! same-seed observed runs export byte-identical metrics JSONL.
+
+use h_svm_lru::cache::EvictCause;
+use h_svm_lru::experiments::sharded_replay::{run_observed, ShardedReplayReport};
+use h_svm_lru::hdfs::BlockId;
+use h_svm_lru::obs::{
+    merge_audits, AuditEntry, EvictionAudit, LogHistogram, MetricsRegistry, ObsConfig,
+    RunObservations,
+};
+use h_svm_lru::sim::SimTime;
+use h_svm_lru::svm::features::FeatureVec;
+use h_svm_lru::svm::KernelKind;
+use h_svm_lru::testkit::{forall, Config, VecU64Gen};
+use h_svm_lru::util::bytes::MB;
+use h_svm_lru::workload::fig3_trace;
+
+/// Merging per-shard histogram snapshots must be associative and lossless:
+/// any grouping of the shards yields the exact totals of one histogram that
+/// saw every observation.
+#[test]
+fn histogram_merge_is_lossless_and_associative() {
+    // Values capped well below u64::MAX so the sum cannot overflow.
+    let gen = VecU64Gen { min_len: 0, max_len: 400, max_value: 1 << 40 };
+    forall(&Config { cases: 60, seed: 0x0B57, ..Default::default() }, &gen, |values| {
+        let whole = LogHistogram::new();
+        let parts: Vec<LogHistogram> = (0..3).map(|_| LogHistogram::new()).collect();
+        for (i, &v) in values.iter().enumerate() {
+            whole.record(v);
+            parts[i % 3].record(v);
+        }
+
+        // ((a + b) + c) vs (a + (b + c)).
+        let mut left = parts[0].snapshot();
+        left.merge(&parts[1].snapshot());
+        left.merge(&parts[2].snapshot());
+        let mut bc = parts[1].snapshot();
+        bc.merge(&parts[2].snapshot());
+        let mut right = parts[0].snapshot();
+        right.merge(&bc);
+
+        if left != right {
+            return Err("merge is not associative".into());
+        }
+        if left != whole.snapshot() {
+            return Err("merging shard parts loses observations".into());
+        }
+        if left.count != values.len() as u64 {
+            return Err(format!("count {} != {} observations", left.count, values.len()));
+        }
+        if left.sum != values.iter().sum::<u64>() {
+            return Err("sum not preserved across the split".into());
+        }
+        if left.quantile(0.5) > left.quantile(0.95) {
+            return Err("quantiles out of order".into());
+        }
+        Ok(())
+    });
+}
+
+fn observed(
+    shards: usize,
+    cfg: ObsConfig,
+) -> (MetricsRegistry, ShardedReplayReport, RunObservations) {
+    let trace = fig3_trace(64 * MB, 11);
+    let registry = MetricsRegistry::new();
+    let (report, obs) = run_observed(
+        "h-svm-lru",
+        "always",
+        shards,
+        8 * 64 * MB,
+        &trace,
+        KernelKind::Rbf,
+        64,
+        &registry,
+        cfg,
+    )
+    .expect("observed replay");
+    (registry, report, obs)
+}
+
+/// The acceptance criterion: two same-seed observed runs must export
+/// byte-identical metrics JSONL — at one shard and at eight.
+#[test]
+fn same_seed_runs_export_byte_identical_jsonl() {
+    for shards in [1usize, 8] {
+        let render = || {
+            let cfg = ObsConfig::default();
+            let (registry, report, obs) = observed(shards, cfg);
+            let mut doc = obs.into_doc(cfg.window_us);
+            doc.meta_str("cmd", "property");
+            doc.meta_str("policy", "h-svm-lru");
+            doc.meta_u64("shards", shards as u64);
+            doc.meta_u64("seed", 11);
+            doc.meta_u64("requests", report.stats.requests);
+            doc.to_jsonl(&registry)
+        };
+        let first = render();
+        let second = render();
+        assert_eq!(first, second, "same-seed JSONL differs at {shards} shard(s)");
+        assert!(first.contains("{\"type\":\"meta\""));
+        assert!(first.contains("\"type\":\"window\""));
+        assert!(first.contains("\"type\":\"audit_meta\""));
+        assert!(first.contains("evict.scan_steps"), "deterministic hist must be exported");
+        assert!(
+            !first.contains("replay.access_ns"),
+            "volatile wall-clock hist must stay out of the deterministic export"
+        );
+    }
+}
+
+/// Window rotation is keyed on simulated time only, so per-window request
+/// counts cannot depend on how the replay is sharded.
+#[test]
+fn window_rotation_is_deterministic_across_shard_counts() {
+    let cfg = ObsConfig::default();
+    let (_, _, one) = observed(1, cfg);
+    let (_, _, eight) = observed(8, cfg);
+    assert!(!one.windows.is_empty());
+    assert_eq!(one.windows.len(), eight.windows.len());
+    for ((i1, w1), (i8_, w8)) in one.windows.iter().zip(eight.windows.iter()) {
+        assert_eq!(i1, i8_, "window indices diverge across shard counts");
+        assert_eq!(
+            w1.requests,
+            w8.requests,
+            "window {i1} request count must not depend on shard count"
+        );
+    }
+    for series in [&one.windows, &eight.windows] {
+        assert!(
+            series.windows(2).all(|p| p[0].0 < p[1].0),
+            "window series must be sorted with unique indices"
+        );
+    }
+}
+
+/// The audit ring records exactly every Nth observed eviction up to its
+/// capacity: `sampled == min(cap, ceil(seen / every))`, always the 0th,
+/// Nth, 2Nth… entries.
+#[test]
+fn audit_ring_sampling_respects_every_and_cap() {
+    let entry = |i: u64| AuditEntry {
+        at: SimTime(i * 10),
+        block: BlockId(i),
+        cause: EvictCause::Capacity,
+        features: FeatureVec::default(),
+        score: 0.0,
+        predicted: Some(i % 2 == 0),
+        actual: i % 3 == 0,
+    };
+    for every in [1u64, 2, 8, 13] {
+        for cap in [1usize, 7, 256] {
+            for n in [0u64, 1, 5, 64, 1000] {
+                let mut ring = EvictionAudit::new(every, cap);
+                for i in 0..n {
+                    ring.observe(|| entry(i));
+                }
+                let (entries, seen) = merge_audits(vec![ring]);
+                assert_eq!(seen, n);
+                let expect = n.div_ceil(every).min(cap as u64);
+                assert_eq!(entries.len() as u64, expect, "every={every} cap={cap} n={n}");
+                for (k, e) in entries.iter().enumerate() {
+                    assert_eq!(e.block.0, k as u64 * every, "wrong eviction sampled");
+                }
+            }
+        }
+    }
+}
+
+/// With `audit_every = 1`, one shard, and an over-sized ring, the audit
+/// trail captures every eviction — so the windowed confusion counters must
+/// tally exactly with a recount over the audit entries.
+#[test]
+fn confusion_counts_match_a_full_audit_recount() {
+    let cfg = ObsConfig { audit_every: 1, audit_cap: 1 << 20, ..ObsConfig::default() };
+    let (_, report, obs) = observed(1, cfg);
+
+    let evictions: u64 = obs.windows.iter().map(|(_, w)| w.evictions()).sum();
+    assert_eq!(evictions, report.stats.evictions);
+    assert_eq!(obs.audit_seen, evictions, "every eviction flows through the ring");
+    assert_eq!(obs.audit.len() as u64, evictions, "every=1 + big cap samples all");
+
+    let tp: u64 = obs.windows.iter().map(|(_, w)| w.tp).sum();
+    let fp: u64 = obs.windows.iter().map(|(_, w)| w.fp).sum();
+    let tn: u64 = obs.windows.iter().map(|(_, w)| w.tn).sum();
+    let fn_: u64 = obs.windows.iter().map(|(_, w)| w.fn_).sum();
+    let count = |p: Option<bool>, a: bool| {
+        obs.audit.iter().filter(|e| e.predicted == p && e.actual == a).count() as u64
+    };
+    assert_eq!(tp, count(Some(true), true));
+    assert_eq!(fp, count(Some(true), false));
+    assert_eq!(fn_, count(Some(false), true));
+    assert_eq!(tn, count(Some(false), false));
+
+    let labeled: u64 = obs.windows.iter().map(|(_, w)| w.labeled_evictions()).sum();
+    assert_eq!(labeled, tp + fp + tn + fn_);
+    assert_eq!(labeled, obs.audit.iter().filter(|e| e.predicted.is_some()).count() as u64);
+    assert!(labeled <= evictions);
+    assert!(labeled > 0, "the classified fig3 trace must label some evictions");
+}
