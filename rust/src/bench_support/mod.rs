@@ -103,6 +103,10 @@ impl Bencher {
     }
 
     /// Time `f` (called once per iteration).
+    // Wall-clock exception: timing is this harness's whole job; bench
+    // output is never part of the deterministic export — see clippy.toml
+    // and rust/tests/lint_invariants.rs.
+    #[allow(clippy::disallowed_methods)]
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
         for _ in 0..self.warmup {
             f();

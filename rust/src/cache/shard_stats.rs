@@ -25,7 +25,8 @@
 //! invariants) — property-tested in rust/tests/property_sharded.rs by
 //! reader threads hammering `stats()` during a multi-threaded replay.
 
-use std::sync::atomic::{fence, AtomicU64, Ordering};
+use crate::util::sync::atomic::{fence, AtomicU64, Ordering};
+use crate::util::sync::hint;
 
 /// Per-shard access counters; merged across shards (and across DataNodes
 /// by the coordinator) with [`ShardStats::merge`].
@@ -92,7 +93,10 @@ pub struct ShardSnapshot {
 ///
 /// Single-writer discipline: a write section may only be opened by a
 /// thread holding the owning shard's `Mutex`. Readers are unrestricted.
-#[derive(Debug, Default)]
+///
+/// The seqlock protocol is modeled exhaustively by loom in
+/// rust/tests/loom_protocols.rs (see docs/CONCURRENCY.md).
+#[derive(Debug)]
 #[repr(align(128))]
 pub struct AtomicShardStats {
     /// Seqlock word: odd while a write section is open, bumped to the next
@@ -110,15 +114,39 @@ pub struct AtomicShardStats {
     blocks: AtomicU64,
 }
 
+impl Default for AtomicShardStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl AtomicShardStats {
     /// Zeroed stats block.
+    ///
+    /// Spelled out field-by-field (instead of `#[derive(Default)]`)
+    /// because loom's atomics do not implement `Default`.
     pub fn new() -> Self {
-        Self::default()
+        Self {
+            seq: AtomicU64::new(0),
+            requests: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            insertions: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            used: AtomicU64::new(0),
+            blocks: AtomicU64::new(0),
+        }
     }
 
     /// Open a write section. The caller MUST hold the owning shard's lock
     /// (single writer); the section closes when the guard drops.
     pub fn write(&self) -> StatsWrite<'_> {
+        // AcqRel: the Acquire half pins the section's (relaxed) counter
+        // stores *after* the odd-store, so a reader that saw an even `seq`
+        // cannot have raced an in-flight section; the Release half pairs
+        // with the reader's Acquire load for the previous section's data.
         let prev = self.seq.fetch_add(1, Ordering::AcqRel);
         debug_assert_eq!(prev & 1, 0, "nested/concurrent stats write section");
         StatsWrite { stats: self }
@@ -129,9 +157,12 @@ impl AtomicShardStats {
     /// section.
     pub fn snapshot(&self) -> ShardSnapshot {
         loop {
+            // Acquire: pairs with the writer's Release close so the
+            // counter loads below observe (at least) every store of the
+            // section that published this even value.
             let s1 = self.seq.load(Ordering::Acquire);
             if s1 & 1 == 1 {
-                std::hint::spin_loop();
+                hint::spin_loop();
                 continue;
             }
             let snap = ShardSnapshot {
@@ -147,14 +178,15 @@ impl AtomicShardStats {
                 used: self.used.load(Ordering::Relaxed),
                 blocks: self.blocks.load(Ordering::Relaxed),
             };
-            // Order the counter loads before the re-check: if no write
-            // section opened in between, the loads all came from the same
-            // even-sequence state.
+            // Acquire fence: orders the counter loads before the `seq`
+            // re-check — if no write section opened in between, the loads
+            // all came from the same even-sequence state (the re-check
+            // load itself can then be Relaxed).
             fence(Ordering::Acquire);
             if self.seq.load(Ordering::Relaxed) == s1 {
                 return snap;
             }
-            std::hint::spin_loop();
+            hint::spin_loop();
         }
     }
 
@@ -217,14 +249,18 @@ impl StatsWrite<'_> {
 
 impl Drop for StatsWrite<'_> {
     fn drop(&mut self) {
+        // Release: publishes the section's counter stores before the even
+        // `seq` value — a reader that brackets its loads with this value
+        // (Acquire load + Acquire fence) sees the whole section or none.
         let prev = self.stats.seq.fetch_add(1, Ordering::Release);
         debug_assert_eq!(prev & 1, 1, "stats write section closed twice");
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
+    use crate::util::sync::atomic::AtomicBool;
 
     #[test]
     fn merge_and_hit_ratio() {
@@ -292,7 +328,7 @@ mod tests {
     fn concurrent_readers_never_observe_torn_counters() {
         let block = AtomicShardStats::new();
         let writes: u64 = 20_000;
-        let stop = std::sync::atomic::AtomicBool::new(false);
+        let stop = AtomicBool::new(false);
         std::thread::scope(|scope| {
             let block = &block;
             let stop_ref = &stop;
@@ -301,6 +337,8 @@ mod tests {
                     scope.spawn(move || {
                         let mut seen = 0u64;
                         let mut last_requests = 0u64;
+                        // Acquire: pairs with the Release store below so
+                        // the last iteration sees final writer state.
                         while !stop_ref.load(Ordering::Acquire) {
                             let s = block.snapshot();
                             assert_eq!(
@@ -322,6 +360,8 @@ mod tests {
                 w.record_request(i % 3 == 0, true, 0);
                 w.set_occupancy((i + 1) % 5, 1);
             }
+            // Release: everything written above happens-before a reader
+            // observing the stop flag.
             stop.store(true, Ordering::Release);
             for r in readers {
                 assert!(r.join().unwrap() > 0, "reader never got a snapshot");

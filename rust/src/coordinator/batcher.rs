@@ -27,9 +27,10 @@
 //! [`SampleProbe`](super::online::SampleProbe).
 
 use std::collections::hash_map::Entry;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
 
 use crate::cache::order_list::{OrderHandle, OrderList};
 use crate::cache::sharded::shard_of;
@@ -297,7 +298,7 @@ impl Default for BatcherConfig {
 
 /// Shared cold-path counters of one batcher topology (every
 /// [`ShardBatcher`] constructed from the same [`BatcherProbe`] clone).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct ColdCounters {
     cold: AtomicU64,
     deferred: AtomicU64,
@@ -307,6 +308,22 @@ struct ColdCounters {
     flushed_queries: AtomicU64,
     flush_ns: AtomicU64,
     dropped: AtomicU64,
+}
+
+impl Default for ColdCounters {
+    // Spelled out (instead of derived) because loom atomics lack `Default`.
+    fn default() -> Self {
+        ColdCounters {
+            cold: AtomicU64::new(0),
+            deferred: AtomicU64::new(0),
+            flushes: AtomicU64::new(0),
+            flush_fill: AtomicU64::new(0),
+            flush_deadline: AtomicU64::new(0),
+            flushed_queries: AtomicU64::new(0),
+            flush_ns: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
 }
 
 /// Read-only, cloneable view of the cold-query counters — the
@@ -563,6 +580,11 @@ impl ShardBatcher {
         self.flush_now(backend, false, None)
     }
 
+    // Wall-clock exception: flush latency is a `MetricClass::Volatile`
+    // metric (log-only, excluded from the deterministic export), so this
+    // is one of the few vetted `Instant::now` call sites — see clippy.toml
+    // and rust/tests/lint_invariants.rs.
+    #[allow(clippy::disallowed_methods)]
     fn flush_now(
         &mut self,
         backend: &mut dyn SvmBackend,

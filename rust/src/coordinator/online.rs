@@ -29,9 +29,11 @@
 //! snapshot (shard workers, tests, dashboards) sees the same classifier
 //! the coordinator itself batches predictions through.
 
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Mutex;
 
 use anyhow::Result;
 
@@ -131,6 +133,9 @@ impl SnapshotCell {
 
     /// Latest published version (0 = nothing published yet).
     pub fn version(&self) -> u64 {
+        // Acquire: pairs with the Release store in `publish` — a reader
+        // that observes version N and then takes the slot lock is
+        // guaranteed to find a snapshot of version >= N there.
         self.version.load(Ordering::Acquire)
     }
 
@@ -139,6 +144,10 @@ impl SnapshotCell {
         let mut slot = self.slot.lock().expect("snapshot cell poisoned");
         let version = slot.version() + 1;
         *slot = Arc::new(ClassifierSnapshot { version, model: Some(model) });
+        // Release (still under the slot lock): publishes the slot swap
+        // before the version bump, and the lock serializes publishers, so
+        // the atomic can never run ahead of the slot — loom-modeled in
+        // rust/tests/loom_protocols.rs.
         self.version.store(version, Ordering::Release);
         version
     }
@@ -268,10 +277,17 @@ pub struct LabeledSample {
 }
 
 /// Shared counters for a sample channel (all sender clones).
-#[derive(Debug, Default)]
+#[derive(Debug)]
 struct SampleCounters {
     sent: AtomicU64,
     dropped: AtomicU64,
+}
+
+impl SampleCounters {
+    /// Zeroed counters (explicit because loom atomics lack `Default`).
+    fn new() -> Self {
+        SampleCounters { sent: AtomicU64::new(0), dropped: AtomicU64::new(0) }
+    }
 }
 
 /// Cloneable, never-blocking emitter of labeled samples. When the bounded
@@ -355,7 +371,7 @@ impl SampleProbe {
 pub fn sample_channel(bound: usize) -> (SampleSender, Receiver<LabeledSample>) {
     let (tx, rx) = mpsc::sync_channel(bound.max(1));
     (
-        SampleSender { tx, counters: Arc::new(SampleCounters::default()) },
+        SampleSender { tx, counters: Arc::new(SampleCounters::new()) },
         rx,
     )
 }

@@ -22,7 +22,9 @@ use super::sharded_replay::{classify_trace, run_with_admission, ShardedReplayRep
 /// [`AdmissionSweep::admissions`] order.
 #[derive(Debug, Clone)]
 pub struct AdmissionRow {
+    /// Eviction policy of this row (registry name).
     pub policy: String,
+    /// One replay per admission policy, in sweep order.
     pub cells: Vec<ShardedReplayReport>,
 }
 
@@ -36,6 +38,7 @@ impl AdmissionRow {
             .fold(0.0, f64::max)
     }
 
+    /// Hit ratio of the cell replayed under `admission`, if present.
     pub fn hit_ratio_of(&self, admission: &str) -> Option<f64> {
         self.cells
             .iter()
@@ -49,7 +52,9 @@ impl AdmissionRow {
 pub struct AdmissionSweep {
     /// Trace label ("fig3" / "scan-storm").
     pub trace: String,
+    /// Admission policies swept (the matrix columns), in order.
     pub admissions: Vec<String>,
+    /// One row per eviction policy.
     pub rows: Vec<AdmissionRow>,
 }
 

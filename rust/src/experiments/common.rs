@@ -22,6 +22,7 @@ pub enum Scenario {
 }
 
 impl Scenario {
+    /// Display name in the paper's `H-*` convention (e.g. `"H-SVM-LRU"`).
     pub fn label(&self) -> String {
         match self {
             Scenario::NoCache => "H-NoCache".to_string(),
@@ -115,9 +116,14 @@ pub fn replay_trace_two_pass(
 /// Result of one workload-scenario run.
 #[derive(Debug, Clone)]
 pub struct WorkloadRun {
+    /// Scenario label ([`Scenario::label`]).
     pub scenario: String,
+    /// Per-job results of the measured (second) round.
     pub runs: Vec<JobRun>,
+    /// Wall time of the measured round in simulated seconds (max finish
+    /// minus round start).
     pub makespan_s: f64,
+    /// Cache hit ratio over the measured round.
     pub hit_ratio: f64,
 }
 

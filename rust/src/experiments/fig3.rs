@@ -14,9 +14,13 @@ use super::common::{make_coordinator, replay_trace_two_pass, Scenario};
 /// One measured point.
 #[derive(Debug, Clone)]
 pub struct HitRatioPoint {
+    /// HDFS block size of the swept configuration (64 MB or 128 MB).
     pub block_size: u64,
+    /// Cache capacity in blocks (the Fig 3 x-axis).
     pub cache_blocks: u64,
+    /// Measured H-LRU hit ratio.
     pub lru: f64,
+    /// Measured H-SVM-LRU hit ratio.
     pub svm_lru: f64,
 }
 

@@ -18,10 +18,15 @@ use super::common::{run_repeated_job, Scenario};
 /// One measured point: mean exec time (s) per scenario.
 #[derive(Debug, Clone)]
 pub struct ExecTimePoint {
+    /// HDFS block size of the swept configuration (64 MB or 128 MB).
     pub block_size: u64,
+    /// WordCount input size (the Fig 4 x-axis).
     pub input_bytes: u64,
+    /// Mean execution time without caching, in simulated seconds.
     pub nocache_s: f64,
+    /// Mean execution time under H-LRU, in simulated seconds.
     pub lru_s: f64,
+    /// Mean execution time under H-SVM-LRU, in simulated seconds.
     pub svm_lru_s: f64,
 }
 
@@ -31,6 +36,8 @@ pub fn input_sizes() -> Vec<u64> {
     vec![2 * GB, 4 * GB, 8 * GB, 16 * GB, 24 * GB]
 }
 
+/// Back-to-back runs per configuration (§6.2: "run each application five
+/// times" — later repetitions hit the warmed cache).
 pub const REPETITIONS: usize = 5;
 
 /// Run the Fig 4 sweep.
@@ -75,6 +82,7 @@ pub fn run(svm_cfg: &SvmConfig, seed: u64) -> Result<Vec<ExecTimePoint>> {
     Ok(points)
 }
 
+/// Render the Fig 4 series as a table.
 pub fn render(points: &[ExecTimePoint]) -> Table {
     let mut t = Table::new(vec![
         "block size",

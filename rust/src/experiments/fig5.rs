@@ -17,11 +17,17 @@ use super::common::{run_workload, Scenario};
 /// Normalized run times for one workload.
 #[derive(Debug, Clone)]
 pub struct WorkloadPoint {
+    /// Workload name ("W1".."W6").
     pub name: &'static str,
+    /// Mean H-NoCache makespan in simulated seconds (the baseline).
     pub nocache_s: f64,
+    /// Mean H-LRU makespan normalized to H-NoCache.
     pub lru_norm: f64,
+    /// Mean H-SVM-LRU makespan normalized to H-NoCache.
     pub svm_lru_norm: f64,
+    /// Mean cache hit ratio of the H-LRU runs.
     pub lru_hit_ratio: f64,
+    /// Mean cache hit ratio of the H-SVM-LRU runs.
     pub svm_hit_ratio: f64,
 }
 
@@ -41,6 +47,8 @@ pub fn run(svm_cfg: &SvmConfig, seed: u64, scale: f64) -> Result<Vec<WorkloadPoi
 /// Repetitions per configuration (the paper averages five runs).
 pub const RUNS_PER_POINT: u64 = 5;
 
+/// Run one workload under all three scenarios, averaged over
+/// [`RUNS_PER_POINT`] placement seeds.
 pub fn run_one(
     def: &WorkloadDef,
     svm_cfg: &SvmConfig,
@@ -91,6 +99,7 @@ pub fn summary(points: &[WorkloadPoint]) -> (f64, f64, f64) {
     (lru_impr, svm_impr, svm_over_lru)
 }
 
+/// Render the Fig 5 series as a table.
 pub fn render(points: &[WorkloadPoint]) -> Table {
     let mut t = Table::new(vec![
         "workload",

@@ -18,11 +18,13 @@ use super::common::{run_workload, Scenario};
 /// Normalized per-app run times for one workload.
 #[derive(Debug, Clone)]
 pub struct AppBreakdown {
+    /// Workload name ("W1".."W6").
     pub workload: &'static str,
     /// (app name with position suffix when repeated, normalized run time)
     pub apps: Vec<(String, f64)>,
 }
 
+/// Run the Fig 6 breakdown over all six workloads.
 pub fn run(svm_cfg: &SvmConfig, seed: u64, scale: f64) -> Result<Vec<AppBreakdown>> {
     WORKLOADS
         .iter()
@@ -82,6 +84,7 @@ pub fn per_app_means(points: &[AppBreakdown]) -> Vec<(String, f64)> {
     out
 }
 
+/// Render the Fig 6 breakdown as a table.
 pub fn render(points: &[AppBreakdown]) -> Table {
     let mut t = Table::new(vec!["workload", "application", "normalized run time"]);
     for bd in points {

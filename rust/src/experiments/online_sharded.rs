@@ -76,6 +76,8 @@ pub enum TrainerMode {
 }
 
 impl TrainerMode {
+    /// Short name used in table rows and JSONL export (`"frozen"` /
+    /// `"online"`).
     pub fn label(self) -> &'static str {
         match self {
             TrainerMode::Frozen => "frozen",
@@ -87,8 +89,11 @@ impl TrainerMode {
 /// Outcome of one online (or frozen-control) shard-parallel replay.
 #[derive(Debug, Clone)]
 pub struct OnlineReplayReport {
+    /// Replacement policy replayed (registry name, e.g. `"h-svm-lru"`).
     pub policy: String,
+    /// Which classifier arm ran (frozen control or live trainer).
     pub mode: TrainerMode,
+    /// Shard count of the cache the trace was replayed against.
     pub shards: usize,
     /// Merged counters (the hit ratio of the whole replay).
     pub stats: ShardStats,
@@ -150,10 +155,12 @@ impl ColdPathReport {
 }
 
 impl OnlineReplayReport {
+    /// Whole-replay hit ratio (merged over shards).
     pub fn hit_ratio(&self) -> f64 {
         self.stats.hit_ratio()
     }
 
+    /// Replay throughput: requests over the replay phase's wall time.
     pub fn requests_per_sec(&self) -> f64 {
         self.stats.requests as f64 / self.wall.as_secs_f64().max(1e-12)
     }
@@ -207,7 +214,9 @@ pub fn run_online(
 /// caller — the model depends only on (trace, kernel), so sweeps train it
 /// once instead of once per cell (mirroring `run_sweep`'s hoisted
 /// classify pass in `sharded_replay`).
-#[allow(clippy::too_many_arguments)] // run_online + the hoisted model
+// disallowed_methods: replay wall time is reporting-only (Volatile class) —
+// see clippy.toml and rust/tests/lint_invariants.rs.
+#[allow(clippy::too_many_arguments, clippy::disallowed_methods)]
 fn run_online_with(
     policy: &str,
     shards: usize,
@@ -373,7 +382,9 @@ fn run_online_with(
 /// predictions. The audit ring's `score` is 0.0 on this path: the batcher
 /// front answers classes, not margins (the classify-once path of
 /// [`super::sharded_replay::run_observed`] records real decision scores).
-#[allow(clippy::too_many_arguments)] // run_online's knobs + the telemetry pair
+// disallowed_methods: wall time + prediction latency are Volatile (log-only)
+// metrics — see clippy.toml and rust/tests/lint_invariants.rs.
+#[allow(clippy::too_many_arguments, clippy::disallowed_methods)]
 pub fn run_online_observed(
     policy: &str,
     shards: usize,

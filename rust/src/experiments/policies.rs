@@ -14,9 +14,13 @@ use super::common::{make_coordinator, replay_trace_two_pass, Scenario};
 /// One policy's trace-replay result.
 #[derive(Debug, Clone)]
 pub struct PolicyResult {
+    /// Replacement policy replayed (registry name).
     pub policy: String,
+    /// Measured-pass request hit ratio.
     pub hit_ratio: f64,
+    /// Measured-pass byte hit ratio.
     pub byte_hit_ratio: f64,
+    /// Evictions over both replay passes.
     pub evictions: u64,
 }
 
@@ -46,6 +50,7 @@ pub fn run(svm_cfg: &SvmConfig, seed: u64, cache_blocks: u64) -> Result<Vec<Poli
     Ok(out)
 }
 
+/// Render the policy comparison as a table (best hit ratio first).
 pub fn render(results: &[PolicyResult]) -> Table {
     let mut t = Table::new(vec!["policy", "hit ratio", "byte hit ratio", "evictions"]);
     for r in results {

@@ -20,6 +20,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+
 use crate::cache::sharded::{shard_of, ShardStats, ShardedCache};
 use crate::cache::{AccessContext, EvictCause};
 use crate::hdfs::BlockId;
@@ -38,9 +40,11 @@ use crate::workload::BlockRequest;
 /// Outcome of one shard-parallel replay.
 #[derive(Debug, Clone)]
 pub struct ShardedReplayReport {
+    /// Replacement policy replayed (registry name, e.g. `"h-svm-lru"`).
     pub policy: String,
     /// Admission policy in front of every shard ("always" = none).
     pub admission: String,
+    /// Shard count of the cache the trace was replayed against.
     pub shards: usize,
     /// Merged counters (hit ratio of the whole replay).
     pub stats: ShardStats,
@@ -51,6 +55,7 @@ pub struct ShardedReplayReport {
 }
 
 impl ShardedReplayReport {
+    /// Replay throughput: requests over the parallel phase's wall time.
     pub fn requests_per_sec(&self) -> f64 {
         self.stats.requests as f64 / self.wall.as_secs_f64().max(1e-12)
     }
@@ -198,6 +203,9 @@ pub fn replay_on_shards(
 /// eviction happens after the victim's last access and before its next
 /// request, so `reused_later` of the victim's most recent request IS
 /// "was it requested again after this eviction".
+// Wall-clock exception: access latency is a Volatile (log-only) metric —
+// see clippy.toml and rust/tests/lint_invariants.rs.
+#[allow(clippy::disallowed_methods)]
 pub fn replay_on_shards_observed(
     cache: &ShardedCache,
     trace: &[BlockRequest],
@@ -297,7 +305,8 @@ pub fn replay_on_shards_observed(
 
 /// Full observed pipeline for one configuration: classify once (keeping
 /// features + scores for the audit ring), replay with telemetry, report.
-#[allow(clippy::too_many_arguments)]
+// disallowed_methods: replay wall time is reporting-only (Volatile class).
+#[allow(clippy::too_many_arguments, clippy::disallowed_methods)]
 pub fn run_observed(
     policy: &str,
     admission: &str,
@@ -337,6 +346,7 @@ pub fn run_observed(
 /// [`replay_with_stats_readers`]).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct StatsReaderReport {
+    /// Concurrent reader threads that ran during the replay.
     pub readers: usize,
     /// Merged-stats snapshots taken across all readers while the shard
     /// workers were replaying.
@@ -368,7 +378,7 @@ pub fn replay_with_stats_readers(
         replay_slice(cache, trace, classes, &partitions[w]);
         cache.stats_of(w)
     };
-    let monitor = |done: &std::sync::atomic::AtomicBool| {
+    let monitor = |done: &AtomicBool| {
         std::thread::scope(|scope| {
             let handles: Vec<_> = (0..n_readers)
                 .map(|_| {
@@ -391,7 +401,10 @@ pub fn replay_with_stats_readers(
                             }
                             snapshots += 1;
                             inconsistencies += u64::from(!ok);
-                            if done.load(std::sync::atomic::Ordering::Acquire) {
+                            // Acquire: pairs with the harness's Release
+                            // store; the workers' final counters precede
+                            // this last observation.
+                            if done.load(Ordering::Acquire) {
                                 break;
                             }
                             std::thread::yield_now();
@@ -429,6 +442,8 @@ pub fn run_with_classes(
 /// Like [`run_with_classes`] but with an admission policy from
 /// `cache::admission` in front of every shard (the `repro admission`
 /// sweep path; `"always"` is exactly [`run_with_classes`]).
+// disallowed_methods: replay wall time is reporting-only (Volatile class).
+#[allow(clippy::disallowed_methods)]
 pub fn run_with_admission(
     policy: &str,
     admission: &str,

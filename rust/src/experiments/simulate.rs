@@ -27,9 +27,11 @@ pub struct SimulateConfig {
     pub n_datasets: usize,
     /// Bytes per dataset.
     pub dataset_bytes: u64,
+    /// Task/node failure injection model.
     pub failures: FailureModel,
     /// Prefetch depth (0 = off).
     pub prefetch_depth: u32,
+    /// Seed for arrivals, placement and failure draws.
     pub seed: u64,
 }
 
@@ -50,17 +52,29 @@ impl Default for SimulateConfig {
 /// Simulation outcome.
 #[derive(Debug)]
 pub struct SimulateReport {
+    /// Every job that ran, in completion order.
     pub completed: Vec<JobRun>,
+    /// Job-history records accumulated for retrospective labeling.
     pub history_records: usize,
+    /// Cache request hit ratio over the whole simulation.
     pub hit_ratio: f64,
+    /// Cache byte hit ratio over the whole simulation.
     pub byte_hit_ratio: f64,
+    /// DataNode heartbeats delivered.
     pub heartbeats: u64,
+    /// Stale cache-metadata entries repaired from heartbeat reports.
     pub metadata_fixes: usize,
+    /// Online (re)trainings the coordinator ran.
     pub trainings: u64,
+    /// Task attempts that failed and were retried.
     pub failed_attempts: u64,
+    /// Speculative/zombie attempts killed by the scheduler.
     pub killed_attempts: u64,
+    /// Simulated clock at the end of the run.
     pub sim_end: SimTime,
+    /// Events the DES engine fired.
     pub events_fired: u64,
+    /// Fraction of prefetched blocks later hit (None when prefetch off).
     pub prefetch_useful: Option<f64>,
 }
 

@@ -25,8 +25,11 @@ use super::common::make_coordinator;
 /// One kernel's Table 5 row block.
 #[derive(Debug, Clone)]
 pub struct KernelEval {
+    /// Kernel function evaluated.
     pub kernel: KernelKind,
+    /// Test-split confusion matrix (precision/recall/F1 derive from it).
     pub cm: ConfusionMatrix,
+    /// Accuracy on the held-out 25% split.
     pub test_accuracy: f64,
 }
 

@@ -21,8 +21,14 @@
 //! PJRT CPU client (`runtime`); Python never runs on the request path.
 //!
 //! See docs/ARCHITECTURE.md for the layer map and the CI-enforced
-//! invariants at each seam, and the root README.md for the experiment
-//! command index.
+//! invariants at each seam, docs/CONCURRENCY.md for the memory-ordering
+//! protocols and what the loom/Miri/TSan jobs prove about them, and the
+//! root README.md for the experiment command index.
+//!
+//! The crate is `#![forbid(unsafe_code)]`: every concurrent structure is
+//! safe Rust over `std::sync` primitives (via the [`util::sync`] facade,
+//! which swaps in loom's instrumented equivalents under `--cfg loom`).
+#![forbid(unsafe_code)]
 #![warn(missing_docs)]
 
 // Coverage debt: the modules below carry `allow(missing_docs)` until their
@@ -63,7 +69,6 @@ pub mod coordinator;
 /// `--metrics-out` / `repro report`.
 pub mod obs;
 /// Experiment drivers regenerating the paper's tables and figures.
-#[allow(missing_docs)]
 pub mod experiments;
 /// The hand-rolled `repro` command-line parser.
 #[allow(missing_docs)]

@@ -231,6 +231,9 @@ fn run(args: &[String]) -> Result<()> {
                 let cache =
                     ShardedCache::from_registry(&policy, max_shards, blocks * block_size)
                         .expect("policy validated above");
+                // Wall-clock exception: replay wall time is printed, never
+                // exported — see clippy.toml and rust/tests/lint_invariants.rs.
+                #[allow(clippy::disallowed_methods)]
                 let t0 = std::time::Instant::now();
                 let (_, rr) = sharded_replay::replay_with_stats_readers(
                     &cache, &trace, &classes, readers,

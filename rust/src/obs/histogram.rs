@@ -14,7 +14,8 @@
 //! makes per-shard instances mergeable in any order (property-tested in
 //! rust/tests/property_obs.rs).
 
-use std::sync::atomic::{fence, AtomicU64, Ordering};
+use crate::util::sync::atomic::{fence, AtomicU64, Ordering};
+use crate::util::sync::hint;
 
 /// Number of log2 buckets: one for zero plus one per possible
 /// highest-set-bit position of a `u64`.
@@ -97,6 +98,11 @@ impl LogHistogram {
     /// writer; constant work, no allocation, no lock.
     #[inline]
     pub fn record(&self, value: u64) {
+        // AcqRel open / Release close: same seqlock protocol as
+        // `AtomicShardStats` — the Acquire half of the open keeps the
+        // relaxed bumps after the odd-store, the Release close publishes
+        // them before the even-store (loom-modeled in
+        // rust/tests/loom_protocols.rs).
         let prev = self.seq.fetch_add(1, Ordering::AcqRel);
         debug_assert_eq!(prev & 1, 0, "concurrent LogHistogram writers");
         Self::bump(&self.count, 1);
@@ -110,9 +116,11 @@ impl LogHistogram {
     /// work) record is in flight.
     pub fn snapshot(&self) -> HistSnapshot {
         loop {
+            // Acquire: pairs with the writer's Release close (see
+            // `AtomicShardStats::snapshot`).
             let s1 = self.seq.load(Ordering::Acquire);
             if s1 & 1 == 1 {
-                std::hint::spin_loop();
+                hint::spin_loop();
                 continue;
             }
             let snap = HistSnapshot {
@@ -120,13 +128,13 @@ impl LogHistogram {
                 sum: self.sum.load(Ordering::Relaxed),
                 buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
             };
-            // Order the bucket loads before the re-check (see
-            // AtomicShardStats::snapshot for the reasoning).
+            // Acquire fence: orders the bucket loads before the re-check
+            // (see AtomicShardStats::snapshot for the reasoning).
             fence(Ordering::Acquire);
             if self.seq.load(Ordering::Relaxed) == s1 {
                 return snap;
             }
-            std::hint::spin_loop();
+            hint::spin_loop();
         }
     }
 }
@@ -199,9 +207,10 @@ impl HistSnapshot {
     }
 }
 
-#[cfg(test)]
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
+    use crate::util::sync::atomic::AtomicBool;
 
     #[test]
     fn bucket_boundaries() {
@@ -250,7 +259,7 @@ mod tests {
     fn concurrent_readers_never_observe_torn_buckets() {
         let h = LogHistogram::new();
         let writes: u64 = 20_000;
-        let stop = std::sync::atomic::AtomicBool::new(false);
+        let stop = AtomicBool::new(false);
         std::thread::scope(|scope| {
             let h = &h;
             let stop_ref = &stop;
@@ -258,6 +267,8 @@ mod tests {
                 .map(|_| {
                     scope.spawn(move || {
                         let mut seen = 0u64;
+                        // Acquire: pairs with the Release store below so
+                        // the last iteration sees final writer state.
                         while !stop_ref.load(Ordering::Acquire) {
                             let s = h.snapshot();
                             let total: u64 = s.buckets.iter().sum();
@@ -271,6 +282,8 @@ mod tests {
             for i in 0..writes {
                 h.record(i % 1024);
             }
+            // Release: all records above happen-before a reader observing
+            // the stop flag.
             stop.store(true, Ordering::Release);
             for r in readers {
                 assert!(r.join().unwrap() > 0);

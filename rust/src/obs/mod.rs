@@ -33,8 +33,10 @@ pub mod export;
 pub mod histogram;
 pub mod window;
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::Mutex;
 
 pub use audit::{merge_audits, AuditEntry, EvictionAudit, DEFAULT_AUDIT_CAP, DEFAULT_AUDIT_EVERY};
 pub use histogram::{HistSnapshot, LogHistogram};

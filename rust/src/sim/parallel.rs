@@ -106,9 +106,9 @@ where
     R: Send,
     M: Send,
     F: Fn(usize) -> R + Sync,
-    G: FnOnce(&std::sync::atomic::AtomicBool) -> M + Send,
+    G: FnOnce(&crate::util::sync::atomic::AtomicBool) -> M + Send,
 {
-    use std::sync::atomic::{AtomicBool, Ordering};
+    use crate::util::sync::atomic::{AtomicBool, Ordering};
 
     assert!(n_workers > 0, "run_sharded_with_monitor with zero workers");
     let done = AtomicBool::new(false);
@@ -123,6 +123,8 @@ where
         // see its stop signal even on worker failure, or the scope would
         // never finish joining it.
         let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+        // Release: pairs with the monitor's Acquire poll so everything the
+        // workers wrote happens-before the monitor's final observation.
         done.store(true, Ordering::Release);
         let m = mon.join().expect("monitor panicked");
         let results: Vec<R> = joined
@@ -139,6 +141,8 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use crate::util::sync::hint;
 
     #[test]
     fn results_come_back_in_worker_order() {
@@ -197,7 +201,6 @@ mod tests {
 
     #[test]
     fn monitor_observes_until_workers_finish() {
-        use std::sync::atomic::{AtomicU64, Ordering};
         let progress = AtomicU64::new(0);
         let (results, polls) = run_sharded_with_monitor(
             4,
@@ -207,8 +210,10 @@ mod tests {
                 }
                 w
             },
-            |done: &std::sync::atomic::AtomicBool| {
+            |done: &AtomicBool| {
                 let mut polls = 0u64;
+                // Acquire: pairs with run_sharded_with_monitor's Release
+                // store, so worker writes precede the final poll.
                 while !done.load(Ordering::Acquire) {
                     let p = progress.load(Ordering::Relaxed);
                     assert!(p <= 4000);
@@ -233,9 +238,11 @@ mod tests {
                 }
                 i
             },
-            |done: &std::sync::atomic::AtomicBool| {
-                while !done.load(std::sync::atomic::Ordering::Acquire) {
-                    std::hint::spin_loop();
+            |done: &AtomicBool| {
+                // Acquire: pairs with the harness's Release store (set
+                // even on worker panic, which is the point of this test).
+                while !done.load(Ordering::Acquire) {
+                    hint::spin_loop();
                 }
                 // The monitor sees the stop signal despite the worker
                 // panic; its own panic is what the harness reports first.

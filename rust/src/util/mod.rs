@@ -10,4 +10,5 @@ pub mod fasthash;
 pub mod logger;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;

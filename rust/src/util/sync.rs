@@ -1,0 +1,69 @@
+//! Switchable concurrency primitives: `std::sync` in normal builds, the
+//! [loom](https://docs.rs/loom) model-checker's equivalents under
+//! `--cfg loom`.
+//!
+//! Every module that participates in a lock-free protocol (the seqlock
+//! stats block, the histogram slots, `SnapshotCell`, the batcher/sample
+//! probes) imports its atomics, mutexes and spin hints from here instead
+//! of `std` directly. Normal builds see exactly the `std` types (the
+//! re-exports are zero-cost), while `RUSTFLAGS="--cfg loom"` swaps in
+//! loom's instrumented versions so `rust/tests/loom_protocols.rs` can
+//! exhaustively enumerate interleavings of those protocols. See
+//! docs/CONCURRENCY.md for the protocol table and what the loom suite
+//! proves.
+//!
+//! The repo-invariant lint (`rust/tests/lint_invariants.rs`) enforces the
+//! discipline: importing `std::sync::atomic` anywhere outside this facade
+//! (and the vetted exception list it documents) fails the test suite.
+//!
+//! `std::sync::Arc` is deliberately **not** switched: loom's `Arc` models
+//! reference-count ordering bugs, but swapping it would force every
+//! unported consumer of `Arc<ClassifierSnapshot>` etc. onto the facade
+//! type. Plain `Arc` works inside loom models (it is refcount-only; the
+//! protocols we check do not rely on `Arc`'s release/acquire edge).
+
+/// Atomic integer/bool types, memory orderings and fences.
+///
+/// Mirrors the `std::sync::atomic` (resp. `loom::sync::atomic`) surface
+/// that the crate actually uses; extend the re-export list as protocols
+/// grow rather than importing from `std` directly.
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
+}
+
+/// Spin-loop hint: `std::hint::spin_loop`, or loom's yield point.
+///
+/// Under loom a busy-wait **must** call [`hint::spin_loop`](spin_loop) so
+/// the scheduler can switch to the writer thread; a raw loop would spin
+/// forever inside the model.
+pub mod hint {
+    #[cfg(not(loom))]
+    pub use std::hint::spin_loop;
+
+    #[cfg(loom)]
+    pub use loom::hint::spin_loop;
+}
+
+#[cfg(not(loom))]
+pub use std::sync::{Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::{Mutex, MutexGuard};
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    #[test]
+    fn facade_reexports_are_std_types_in_normal_builds() {
+        // A facade `AtomicU64` must be the `std` type (same canonical
+        // path), so unported code interoperates with ported code freely.
+        let a: super::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(7);
+        assert_eq!(a.load(super::atomic::Ordering::Relaxed), 7);
+        let m: super::Mutex<u32> = std::sync::Mutex::new(3);
+        assert_eq!(*m.lock().unwrap(), 3);
+        super::hint::spin_loop();
+    }
+}

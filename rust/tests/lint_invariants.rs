@@ -1,0 +1,468 @@
+//! Repo-invariant lint: a source-walking test that keeps the crate's
+//! concurrency and determinism rules true *by construction*, not by
+//! review. It fails the build if:
+//!
+//! 1. `std::sync::atomic` / `core::sync::atomic` is imported anywhere in
+//!    `src/` outside the vetted facade modules (everything else must go
+//!    through `crate::util::sync`, so loom can swap the primitives under
+//!    `--cfg loom`);
+//! 2. `std::thread` is used in `src/` outside the modules vetted for
+//!    scoped parallelism;
+//! 3. wall-clock types (`std::time::Instant` / `std::time::SystemTime`)
+//!    appear in `src/` outside the modules allowed to log `Volatile`
+//!    (report-only, never exported) metrics — the deterministic replay
+//!    core must tell time only via `sim::SimTime`;
+//! 4. the token `unsafe` appears anywhere in `src/`, `tests/`, `benches/`
+//!    or `examples/` — belt to the crate-level `#![forbid(unsafe_code)]`
+//!    suspenders, extended to targets the crate attribute does not cover.
+//!
+//! Comments and string/char literals are stripped before matching, so
+//! prose *about* these constructs (like this header) never trips the
+//! lint. The `planted_*` tests below prove each rule actually fires by
+//! scanning a temp tree seeded with a violation; `repo_is_clean` proves
+//! the real tree passes. clippy.toml's `disallowed-methods` enforces the
+//! wall-clock rule at call sites too (with `#[allow]` at the vetted
+//! ones); this test is the half that works without clippy in the loop.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// One lint rule: forbidden tokens plus the files vetted to contain them.
+struct Rule {
+    name: &'static str,
+    /// Substrings that constitute a violation in stripped source.
+    /// Matched with identifier boundaries on both ends.
+    tokens: &'static [&'static str],
+    /// Directories under the crate root to scan.
+    roots: &'static [&'static str],
+    /// Files (paths relative to the crate root, `/`-separated) where the
+    /// tokens are allowed. Each entry carries its justification here, in
+    /// the one place the allow-list is defined.
+    allowed: &'static [&'static str],
+}
+
+/// Rule 1 — raw atomics only inside the facade.
+const ATOMICS: Rule = Rule {
+    name: "raw-atomics-outside-facade",
+    tokens: &["std::sync::atomic", "core::sync::atomic"],
+    roots: &["src"],
+    allowed: &[
+        // The facade itself: the one place that names std's atomics (and
+        // loom's, under `--cfg loom`).
+        "src/util/sync.rs",
+        // The logger's `static MAX_LEVEL: AtomicU8` needs const
+        // construction, which loom's types don't offer; it is
+        // intentionally outside the modeled protocols.
+        "src/util/logger.rs",
+    ],
+};
+
+/// Rule 2 — `std::thread` only in the vetted scoped-parallelism modules.
+const THREADS: Rule = Rule {
+    name: "std-thread-outside-vetted-modules",
+    tokens: &["std::thread"],
+    roots: &["src"],
+    allowed: &[
+        // The scoped fan-out helpers every parallel driver goes through.
+        "src/sim/parallel.rs",
+        // Shard replay spawns its monitor/driver threads directly.
+        "src/experiments/sharded_replay.rs",
+        // The sharded cache front's own scoped workers.
+        "src/cache/sharded.rs",
+        // `#[cfg(all(test, not(loom)))]` stress tests on real threads;
+        // the loom models in tests/loom_protocols.rs cover the same
+        // protocols exhaustively.
+        "src/cache/shard_stats.rs",
+        "src/obs/histogram.rs",
+    ],
+};
+
+/// Rule 3 — wall clocks only where `MetricClass::Volatile` data is born.
+const WALL_CLOCK: Rule = Rule {
+    name: "wall-clock-outside-volatile-reporting",
+    tokens: &[
+        "std::time::Instant",
+        "std::time::SystemTime",
+        "Instant::now",
+        "SystemTime::now",
+    ],
+    roots: &["src"],
+    allowed: &[
+        // Flush-latency observation (`flush_now`): logged, never exported.
+        "src/coordinator/batcher.rs",
+        // Replay wall time + throughput reporting (Volatile class).
+        "src/experiments/sharded_replay.rs",
+        "src/experiments/online_sharded.rs",
+        // The CLI's elapsed-time banner.
+        "src/main.rs",
+        // The bench harness: timing is its whole job; bench output is
+        // never part of the deterministic export.
+        "src/bench_support/mod.rs",
+    ],
+};
+
+/// Rule 4 — no `unsafe`, anywhere, including targets that the crate-level
+/// `#![forbid(unsafe_code)]` in src/lib.rs does not govern.
+const UNSAFE: Rule = Rule {
+    name: "unsafe-anywhere",
+    tokens: &["unsafe"],
+    roots: &["src", "tests", "benches", "examples"],
+    allowed: &[],
+};
+
+const RULES: &[&Rule] = &[&ATOMICS, &THREADS, &WALL_CLOCK, &UNSAFE];
+
+/// Replace comments and string/char literals with spaces (newlines kept,
+/// so reported line numbers stay true). Handles line + nested block
+/// comments, escapes in `"…"` strings, raw strings `r#"…"#` (any number
+/// of hashes), and char literals — including `'"'`, which would otherwise
+/// open a phantom string — while leaving lifetimes (`'a`) alone.
+fn strip_comments_and_strings(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+    let blank = |c: char| if c == '\n' { '\n' } else { ' ' };
+    while i < b.len() {
+        let c = b[i];
+        // Line comment.
+        if c == '/' && b.get(i + 1) == Some(&'/') {
+            while i < b.len() && b[i] != '\n' {
+                out.push(' ');
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (Rust block comments nest).
+        if c == '/' && b.get(i + 1) == Some(&'*') {
+            let mut depth = 0usize;
+            while i < b.len() {
+                if b[i] == '/' && b.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                } else if b[i] == '*' && b.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    out.push(blank(b[i]));
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string: r"…" or r#"…"# with any number of hashes.
+        if c == 'r' && matches!(b.get(i + 1), Some(&'"') | Some(&'#')) {
+            let mut j = i + 1;
+            let mut hashes = 0usize;
+            while b.get(j) == Some(&'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if b.get(j) == Some(&'"') {
+                out.push(' '); // the `r`
+                for _ in 0..hashes {
+                    out.push(' ');
+                }
+                out.push(' '); // opening quote
+                j += 1;
+                'raw: while j < b.len() {
+                    if b[j] == '"' {
+                        let mut k = 0usize;
+                        while k < hashes && b.get(j + 1 + k) == Some(&'#') {
+                            k += 1;
+                        }
+                        if k == hashes {
+                            for _ in 0..=hashes {
+                                out.push(' ');
+                            }
+                            j += 1 + hashes;
+                            break 'raw;
+                        }
+                    }
+                    out.push(blank(b[j]));
+                    j += 1;
+                }
+                i = j;
+                continue;
+            }
+            // `r` not starting a raw string (e.g. `r#keyword`): fall through.
+        }
+        // Ordinary string literal.
+        if c == '"' {
+            out.push(' ');
+            i += 1;
+            while i < b.len() {
+                if b[i] == '\\' {
+                    out.push(' ');
+                    out.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    out.push(' ');
+                    i += 1;
+                    break;
+                }
+                out.push(blank(b[i]));
+                i += 1;
+            }
+            continue;
+        }
+        // Char literal vs lifetime: `'x'` / `'\n'` are literals (blank
+        // them — a `'"'` must not open a string); `'label` is a lifetime.
+        if c == '\'' {
+            if b.get(i + 1) == Some(&'\\') {
+                // Escaped char literal: skip to the closing quote.
+                let mut j = i + 2;
+                while j < b.len() && b[j] != '\'' {
+                    j += 1;
+                }
+                for _ in i..=j.min(b.len() - 1) {
+                    out.push(' ');
+                }
+                i = j + 1;
+                continue;
+            }
+            if b.get(i + 2) == Some(&'\'') {
+                out.push(' ');
+                out.push(' ');
+                out.push(' ');
+                i += 3;
+                continue;
+            }
+            // Lifetime — emit verbatim.
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Find rule violations in one file's (already stripped) source.
+fn violations_in(stripped: &str, rule: &Rule) -> Vec<(usize, &'static str)> {
+    let mut out = Vec::new();
+    for (lineno, line) in stripped.lines().enumerate() {
+        for &tok in rule.tokens {
+            let mut start = 0;
+            while let Some(pos) = line[start..].find(tok) {
+                let at = start + pos;
+                let before_ok = at == 0
+                    || !is_ident_char(line[..at].chars().next_back().unwrap());
+                let after_ok = line[at + tok.len()..]
+                    .chars()
+                    .next()
+                    .map_or(true, |c| !is_ident_char(c));
+                if before_ok && after_ok {
+                    out.push((lineno + 1, tok));
+                }
+                start = at + tok.len();
+            }
+        }
+    }
+    out
+}
+
+fn walk(dir: &Path, files: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            walk(&path, files);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            files.push(path);
+        }
+    }
+    files.sort();
+}
+
+/// Scan a crate tree rooted at `root` with `rule`; return formatted
+/// violation records (`path:line token`).
+fn scan(root: &Path, rule: &Rule) -> Vec<String> {
+    let mut found = Vec::new();
+    for sub in rule.roots {
+        let mut files = Vec::new();
+        walk(&root.join(sub), &mut files);
+        for file in files {
+            let rel = file
+                .strip_prefix(root)
+                .unwrap_or(&file)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            if rule.allowed.contains(&rel.as_str()) {
+                continue;
+            }
+            let src = fs::read_to_string(&file)
+                .unwrap_or_else(|e| panic!("read {}: {e}", file.display()));
+            let stripped = strip_comments_and_strings(&src);
+            for (line, tok) in violations_in(&stripped, rule) {
+                found.push(format!("{rel}:{line} `{tok}`"));
+            }
+        }
+    }
+    found
+}
+
+fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// The positive check: the real tree is clean under every rule.
+#[test]
+fn repo_is_clean() {
+    let root = crate_root();
+    let mut report = String::new();
+    for rule in RULES {
+        for v in scan(&root, rule) {
+            writeln!(report, "[{}] {v}", rule.name).unwrap();
+        }
+    }
+    assert!(
+        report.is_empty(),
+        "repo-invariant lint violations (route atomics/threads through \
+         crate::util::sync / sim::parallel, keep wall clocks in Volatile \
+         reporting modules, or extend the allow-list in \
+         rust/tests/lint_invariants.rs with a justification):\n{report}"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Negative self-tests: plant one violation per rule in a temp tree and
+// prove the walker catches it — a lint that cannot fail protects nothing.
+// ---------------------------------------------------------------------
+
+/// Build a throwaway crate tree containing `planted` at `rel_path`,
+/// run `rule` over it, and return the violations.
+fn scan_planted(tag: &str, rel_path: &str, planted: &str, rule: &Rule) -> Vec<String> {
+    let root = std::env::temp_dir().join(format!(
+        "hsvmlru_lint_selftest_{}_{tag}",
+        std::process::id()
+    ));
+    let file = root.join(rel_path);
+    fs::create_dir_all(file.parent().unwrap()).unwrap();
+    fs::write(&file, planted).unwrap();
+    let found = scan(&root, rule);
+    fs::remove_dir_all(&root).ok();
+    found
+}
+
+#[test]
+fn planted_atomics_import_is_caught() {
+    let found = scan_planted(
+        "atomics",
+        "src/cache/rogue.rs",
+        "use std::sync::atomic::AtomicU64;\n",
+        &ATOMICS,
+    );
+    assert_eq!(found, ["src/cache/rogue.rs:1 `std::sync::atomic`"]);
+}
+
+#[test]
+fn planted_thread_use_is_caught() {
+    let found = scan_planted(
+        "thread",
+        "src/svm/rogue.rs",
+        "pub fn go() { std::thread::spawn(|| {}); }\n",
+        &THREADS,
+    );
+    assert_eq!(found, ["src/svm/rogue.rs:1 `std::thread`"]);
+}
+
+#[test]
+fn planted_wall_clock_is_caught() {
+    let found = scan_planted(
+        "clock",
+        "src/sim/rogue.rs",
+        "use std::time::Instant;\npub fn t() -> Instant { Instant::now() }\n",
+        &WALL_CLOCK,
+    );
+    assert_eq!(
+        found,
+        [
+            "src/sim/rogue.rs:1 `std::time::Instant`",
+            "src/sim/rogue.rs:2 `Instant::now`"
+        ]
+    );
+}
+
+#[test]
+fn planted_unsafe_is_caught_even_in_tests_dir() {
+    let found = scan_planted(
+        "unsafe",
+        "tests/rogue.rs",
+        "fn f(p: *const u8) -> u8 { unsafe { *p } }\n",
+        &UNSAFE,
+    );
+    assert_eq!(found, ["tests/rogue.rs:1 `unsafe`"]);
+}
+
+#[test]
+fn allow_list_suppresses_only_the_vetted_file() {
+    // The same content is a violation at a rogue path…
+    let content = "use std::sync::atomic::AtomicU64;\n";
+    assert!(!scan_planted("allowed_a", "src/obs/rogue.rs", content, &ATOMICS).is_empty());
+    // …and clean at the facade path.
+    assert!(scan_planted("allowed_b", "src/util/sync.rs", content, &ATOMICS).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Stripper unit tests: the lint must not fire on prose or literals.
+// ---------------------------------------------------------------------
+
+#[test]
+fn stripper_ignores_comments_strings_and_char_literals() {
+    let src = r##"
+// std::sync::atomic in a line comment
+/* std::thread in a /* nested */ block comment */
+const A: &str = "std::time::Instant inside a string";
+const R: &str = r#"unsafe inside a raw string"#;
+const Q: char = '"'; // the quote char must not open a string
+const N: &str = "after the quote char: std::sync::atomic";
+"##;
+    let stripped = strip_comments_and_strings(src);
+    for rule in RULES {
+        assert!(
+            violations_in(&stripped, rule).is_empty(),
+            "[{}] fired on stripped prose:\n{stripped}",
+            rule.name
+        );
+    }
+    // Lifetimes survive stripping (sanity that we only blank literals).
+    let lt = strip_comments_and_strings("fn f<'a>(x: &'a u8) -> &'a u8 { x }");
+    assert!(lt.contains("'a"), "lifetime was stripped: {lt}");
+}
+
+#[test]
+fn stripper_keeps_line_numbers_stable() {
+    let src = "line1\n/* c\nc */ std::thread::spawn\n";
+    let stripped = strip_comments_and_strings(src);
+    let v = violations_in(&stripped, &THREADS);
+    assert_eq!(v, [(3, "std::thread")]);
+}
+
+#[test]
+fn identifier_boundaries_prevent_false_positives() {
+    // `unsafe_code` (the forbid attribute's token) is not `unsafe`, and
+    // a made-up `not_std::thread` path prefix is still a real use of
+    // `std::thread`? No — boundary on the left rejects it.
+    let stripped = strip_comments_and_strings(
+        "#![forbid(unsafe_code)]\nfn f() { my_std::thread_pool(); }\n",
+    );
+    assert!(violations_in(&stripped, &UNSAFE).is_empty());
+    assert!(violations_in(&stripped, &THREADS).is_empty());
+}

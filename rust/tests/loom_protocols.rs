@@ -1,0 +1,296 @@
+//! Exhaustive loom models of every lock-free protocol in the crate.
+//!
+//! Compiled (and meaningful) only under `RUSTFLAGS="--cfg loom"`, which
+//! swaps the `crate::util::sync` facade from `std::sync` onto loom's
+//! instrumented primitives — see that module and docs/CONCURRENCY.md.
+//! Each `loom::model` below enumerates every interleaving (bounded by
+//! `LOOM_MAX_PREEMPTIONS` in CI) of a small instance of one protocol and
+//! asserts its invariant in all of them:
+//!
+//! 1. seqlock ([`AtomicShardStats`]): a snapshot taken concurrently with
+//!    write sections is never torn — counters from different sections
+//!    cannot mix.
+//! 2. histogram slots ([`LogHistogram`]): a lock-free cross-shard merge
+//!    taken mid-write observes only whole records, and post-join totals
+//!    are exact.
+//! 3. [`SnapshotCell`]: the version counter never runs ahead of the slot,
+//!    readers observe versions monotonically, and version ↔ model state
+//!    stay consistent.
+//! 4. [`BatcherProbe`]: cold-query counters shared by concurrent shard
+//!    batchers conserve `cold == flushed + dropped` at quiescence with
+//!    `deferred <= cold`.
+//!
+//! Run with:
+//! `RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 cargo test --release --test loom_protocols`
+#![cfg(loom)]
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use h_svm_lru::cache::shard_stats::AtomicShardStats;
+use h_svm_lru::coordinator::batcher::{BatcherConfig, BatcherProbe, ShardBatcher};
+use h_svm_lru::coordinator::online::SnapshotCell;
+use h_svm_lru::hdfs::BlockId;
+use h_svm_lru::obs::LogHistogram;
+use h_svm_lru::runtime::SvmBackend;
+use h_svm_lru::sim::{SimDuration, SimTime};
+use h_svm_lru::svm::features::{FeatureVec, N_FEATURES};
+use h_svm_lru::svm::kernel::{KernelKind, KernelParams};
+use h_svm_lru::svm::smo::SmoModel;
+
+/// A model whose decision is a constant: sign(bias). Publishing these
+/// makes every version's predictions distinguishable, so a reader can be
+/// checked for version ↔ model consistency.
+fn constant_model(bias: f32) -> SmoModel {
+    SmoModel::new(
+        KernelParams::new(KernelKind::Linear),
+        Vec::new(),
+        Vec::new(),
+        Vec::new(),
+        bias,
+    )
+}
+
+fn fv() -> FeatureVec {
+    [0.0f32; N_FEATURES]
+}
+
+/// Protocol 1 — the seqlock stats block. One writer (the shard lock
+/// holder) runs two write sections while a reader snapshots concurrently.
+/// `used` is set to `requests` inside every section, so *any* mix of
+/// fields from different sections breaks one of the equalities below.
+#[test]
+fn seqlock_snapshot_is_never_torn() {
+    loom::model(|| {
+        let stats = Arc::new(AtomicShardStats::new());
+        let writer = {
+            let stats = Arc::clone(&stats);
+            loom::thread::spawn(move || {
+                {
+                    let mut w = stats.write();
+                    w.record_request(true, false, 0);
+                    w.set_occupancy(1, 1);
+                }
+                {
+                    let mut w = stats.write();
+                    w.record_request(false, true, 1);
+                    w.set_occupancy(2, 2);
+                }
+            })
+        };
+
+        // Concurrent snapshot: must come from exactly one even-seq state.
+        let snap = stats.snapshot();
+        assert_eq!(
+            snap.stats.hits + snap.stats.misses,
+            snap.stats.requests,
+            "counters from different write sections mixed"
+        );
+        assert!(snap.stats.requests <= 2);
+        assert_eq!(
+            snap.used, snap.stats.requests,
+            "occupancy mirror from a different section than the counters"
+        );
+        assert_eq!(snap.used, snap.blocks);
+
+        writer.join().unwrap();
+        let fin = stats.snapshot();
+        assert_eq!(fin.stats.requests, 2);
+        assert_eq!(fin.stats.hits, 1);
+        assert_eq!(fin.stats.misses, 1);
+        assert_eq!(fin.stats.insertions, 1);
+        assert_eq!(fin.stats.evictions, 1);
+        assert_eq!(fin.used, 2);
+        assert_eq!(fin.blocks, 2);
+    });
+}
+
+/// Protocol 2 — per-shard histogram slots. Two single-writer histograms
+/// record concurrently while the main thread takes a lock-free merged
+/// snapshot. Each per-shard snapshot must be one of that shard's committed
+/// prefixes (never a torn half-record), and the post-join merge is exact.
+#[test]
+fn histogram_merge_observes_only_whole_records() {
+    loom::model(|| {
+        let a = Arc::new(LogHistogram::new());
+        let b = Arc::new(LogHistogram::new());
+        let ta = {
+            let a = Arc::clone(&a);
+            loom::thread::spawn(move || {
+                a.record(1);
+                a.record(2);
+            })
+        };
+        let tb = {
+            let b = Arc::clone(&b);
+            loom::thread::spawn(move || {
+                b.record(3);
+            })
+        };
+
+        // Concurrent merge: shard a has committed prefixes {}, {1}, {1,2};
+        // shard b has {}, {3}. Anything else is a torn read.
+        let sa = a.snapshot();
+        assert!(
+            matches!((sa.count, sa.sum), (0, 0) | (1, 1) | (2, 3)),
+            "shard a snapshot ({}, {}) is not a committed prefix",
+            sa.count,
+            sa.sum
+        );
+        let sb = b.snapshot();
+        assert!(
+            matches!((sb.count, sb.sum), (0, 0) | (1, 3)),
+            "shard b snapshot ({}, {}) is not a committed prefix",
+            sb.count,
+            sb.sum
+        );
+        let mut merged = sa.clone();
+        merged.merge(&sb);
+        let bucket_total: u64 = merged.buckets.iter().sum();
+        assert_eq!(bucket_total, merged.count, "merged bucket counts disagree with count");
+
+        ta.join().unwrap();
+        tb.join().unwrap();
+        let mut fin = a.snapshot();
+        fin.merge(&b.snapshot());
+        assert_eq!(fin.count, 3, "a committed record went missing");
+        assert_eq!(fin.sum, 6, "a committed value went missing");
+        let fin_total: u64 = fin.buckets.iter().sum();
+        assert_eq!(fin_total, 3);
+    });
+}
+
+/// Protocol 3 — the snapshot publication cell. A publisher pushes two
+/// models while the main thread reads; the version counter may lag the
+/// slot but can never run ahead of it, reader versions are monotone, and
+/// each version predicts exactly its model's class.
+#[test]
+fn snapshot_cell_version_never_runs_ahead_of_the_slot() {
+    loom::model(|| {
+        let cell = Arc::new(SnapshotCell::new());
+        let publisher = {
+            let cell = Arc::clone(&cell);
+            loom::thread::spawn(move || {
+                assert_eq!(cell.publish(constant_model(1.0)), 1);
+                assert_eq!(cell.publish(constant_model(-1.0)), 2);
+            })
+        };
+
+        // The issue's litmus: observe the version, then take the slot —
+        // the slot must hold a snapshot at least that fresh.
+        let v = cell.version();
+        let snap = cell.load();
+        assert!(
+            snap.version() >= v,
+            "version {} ran ahead of slot version {}",
+            v,
+            snap.version()
+        );
+        // version ↔ model consistency on whatever state we caught.
+        assert_eq!(snap.is_trained(), snap.version() > 0);
+        match snap.version() {
+            0 => assert_eq!(snap.predict(&fv()), None),
+            1 => assert_eq!(snap.predict(&fv()), Some(true)),
+            2 => assert_eq!(snap.predict(&fv()), Some(false)),
+            v => panic!("impossible version {v}"),
+        }
+        // Version monotonicity, raw and through a cached reader.
+        let v2 = cell.version();
+        assert!(v2 >= v, "cell version went backwards: {v} -> {v2}");
+        let mut reader = cell.reader();
+        let r1 = reader.current().version();
+        let r2 = reader.current().version();
+        assert!(r2 >= r1, "reader version went backwards: {r1} -> {r2}");
+
+        publisher.join().unwrap();
+        let fin = cell.load();
+        assert_eq!(cell.version(), 2);
+        assert_eq!(fin.version(), 2);
+        assert_eq!(fin.predict(&fv()), Some(false), "last published model wins");
+        assert_eq!(reader.predict(&fv()), Some(false), "reader refreshes to the tip");
+    });
+}
+
+/// Stub backend for the probe model: classifies everything `true`,
+/// never fails (drop accounting is covered by non-loom unit tests).
+struct FakeBackend;
+
+impl SvmBackend for FakeBackend {
+    fn name(&self) -> &'static str {
+        "fake"
+    }
+    fn train(&mut self, _ds: &h_svm_lru::svm::Dataset) -> Result<()> {
+        Ok(())
+    }
+    fn decision_batch(&mut self, q: &[FeatureVec]) -> Result<Vec<f32>> {
+        Ok(q.iter().map(|_| 1.0).collect())
+    }
+    fn is_trained(&self) -> bool {
+        true
+    }
+}
+
+/// Protocol 4 — shared cold-path counters. Two shard batchers (the
+/// [`BatcherPool`] topology: private queues, one shared probe) each defer
+/// one query and fill-flush a second, concurrently. A concurrent reader
+/// may only rely on per-counter monotonicity (the stores are relaxed, so
+/// cross-counter inequalities need not hold mid-flight — C11 permits the
+/// inversion and loom finds it); at quiescence the books must balance:
+/// `deferred <= cold == flushed + dropped`.
+#[test]
+fn probe_counters_conserve_cold_queries() {
+    loom::model(|| {
+        let probe = BatcherProbe::new();
+        let cfg = BatcherConfig {
+            queue_depth: 2,
+            deadline: SimDuration::from_secs_f64(3600.0), // never lapses in-model
+            ..BatcherConfig::default()
+        };
+        let workers: Vec<_> = (0..2u64)
+            .map(|t| {
+                let probe = probe.clone();
+                loom::thread::spawn(move || {
+                    let mut be = FakeBackend;
+                    let mut batcher = ShardBatcher::with_probe(cfg, probe);
+                    let base = t * 10;
+                    // First cold query defers below the fill bound…
+                    let r = batcher
+                        .predict(&mut be, BlockId(base), 0, fv(), SimTime(0))
+                        .unwrap();
+                    assert_eq!(r, None, "depth-2 queue must defer the first query");
+                    // …the second fills the queue and flushes both.
+                    let r = batcher
+                        .predict(&mut be, BlockId(base + 1), 0, fv(), SimTime(1))
+                        .unwrap();
+                    assert_eq!(r, Some(true));
+                    batcher.flush(&mut be).unwrap(); // empty-queue no-op
+                })
+            })
+            .collect();
+
+        // Concurrent reads: each individual counter is monotone
+        // (per-atomic coherence) — the only concurrent guarantee relaxed
+        // counters give.
+        let c1 = probe.cold_queries();
+        let c2 = probe.cold_queries();
+        assert!(c2 >= c1, "cold counter went backwards: {c1} -> {c2}");
+        assert!(c2 <= 4);
+
+        for w in workers {
+            w.join().unwrap();
+        }
+        // Quiescence (joins give happens-before): exact conservation.
+        assert_eq!(probe.cold_queries(), 4);
+        assert_eq!(probe.deferred(), 2);
+        assert!(probe.deferred() <= probe.cold_queries());
+        assert_eq!(probe.dropped(), 0);
+        assert_eq!(
+            probe.flushed_queries() + probe.dropped(),
+            probe.cold_queries(),
+            "cold-query conservation broken"
+        );
+        assert_eq!(probe.flushes(), 2);
+        assert_eq!(probe.flushes_by_fill(), 2);
+    });
+}
