@@ -281,6 +281,13 @@ SUBCOMMANDS
                job concurrency [--policy P] [--jobs N] [--shards N]
                [--cache-blocks N] [--smoke  assert cost-aware
                H-SVM-LRU beats cost-blind LRU on total job time]
+  chaos        fault-injected replay: scripted classifier outage + latency
+               spike over the Fig 3 trace (circuit breaker degrades
+               H-SVM-LRU to the unclassified cold path and recovers),
+               a trainer-crash arm, and a DAG node-death arm
+               [--policy P] [--shards N] [--cache-blocks N] [--jobs N]
+               [--smoke  assert open -> fallback -> recover and a
+               bounded degradation gap vs plain LRU]
   report FILE  render a --metrics-out JSONL file as windowed tables:
                per-window hit ratio, eviction-cause breakdown, occupancy,
                classifier confusion counts, plus scalars and histograms
@@ -314,8 +321,8 @@ FLAGS
   --baseline DIR           `bench-gate`: committed BENCH_baseline dir
   --current DIR            `bench-gate`: dir with freshly written JSONs
   --tolerance F            `bench-gate`: allowed relative regression
-  --smoke                  `admission`/`online`: reduced CI sweep with
-                           parity + publish assertions
+  --smoke                  `admission`/`online`/`dag`/`chaos`: reduced CI
+                           sweep with parity/degradation assertions
   --csv                    CSV output
   --config FILE            TOML config file
   --log-level L            off|error|warn|info|debug|trace

@@ -263,6 +263,16 @@ impl PredictionBatcher {
     pub fn pending_len(&self) -> usize {
         self.pending.len()
     }
+
+    /// Drop every pending query without scoring it, returning how many were
+    /// discarded. Used by the end-of-run flush when an open circuit breaker
+    /// means the queue will never be scored — the entries are accounted as
+    /// dropped instead of leaking from the conservation ledger.
+    pub fn drop_pending(&mut self) -> usize {
+        let n = self.pending.len();
+        self.pending.clear();
+        n
+    }
 }
 
 // --------------------------------------------------- bounded shard batcher
@@ -283,6 +293,10 @@ pub struct BatcherConfig {
     /// bit-for-bit reproducible — that forces a flush even below
     /// `queue_depth`, bounding how stale a deferred answer can get.
     pub deadline: SimDuration,
+    /// Circuit breaker over the backend flush path. Disabled by default:
+    /// the default config is behaviorally bit-identical to the
+    /// pre-breaker batcher.
+    pub breaker: BreakerConfig,
 }
 
 impl Default for BatcherConfig {
@@ -292,7 +306,197 @@ impl Default for BatcherConfig {
             class_cache_capacity: DEFAULT_CLASS_CACHE_CAPACITY,
             queue_depth: 1,
             deadline: SimDuration::from_micros(2_000),
+            breaker: BreakerConfig::off(),
         }
+    }
+}
+
+// ------------------------------------------------------- circuit breaker
+
+/// Circuit-breaker knobs for one shard's backend flush path.
+///
+/// Closed → `failure_threshold` consecutive flush failures → **Open**
+/// (every cold query falls back to unclassified, the policy's existing
+/// cold-path semantics) → after `probe_after` of simulated time a single
+/// probe flush is allowed (**HalfOpen**) → success closes the breaker,
+/// failure re-opens it. Each backend call inside a flush additionally gets
+/// `max_retries` bounded retries with `retry_backoff` of simulated backoff
+/// charged to telemetry (time does not advance mid-flush, so the retry
+/// schedule is deterministic).
+///
+/// All timing runs on the caller's request clock ([`SimTime`]); the state
+/// lives in the owning [`ShardBatcher`] (no shared mutable state), so
+/// seeded replays stay bit-for-bit reproducible at any shard count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerConfig {
+    /// Master switch; `false` short-circuits every breaker check.
+    pub enabled: bool,
+    /// Consecutive flush failures (from the Closed state) that open the
+    /// breaker.
+    pub failure_threshold: u32,
+    /// Extra backend attempts per `decision_batch` call after the first
+    /// fails.
+    pub max_retries: u32,
+    /// Simulated backoff charged per retry (telemetry only — see
+    /// [`BatcherProbe::retry_backoff_us`]).
+    pub retry_backoff: SimDuration,
+    /// Open → HalfOpen probe cadence in simulated time.
+    pub probe_after: SimDuration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            enabled: false,
+            failure_threshold: 3,
+            max_retries: 1,
+            retry_backoff: SimDuration::from_micros(500),
+            probe_after: SimDuration::from_micros(250_000),
+        }
+    }
+}
+
+impl BreakerConfig {
+    /// The disabled breaker (the default).
+    pub fn off() -> Self {
+        Self::default()
+    }
+
+    /// The breaker with default thresholds, enabled.
+    pub fn on() -> Self {
+        BreakerConfig { enabled: true, ..Self::default() }
+    }
+}
+
+/// The breaker's observable state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: flushes go to the backend.
+    Closed,
+    /// Tripped: cold queries fall back to unclassified without touching
+    /// the backend.
+    Open,
+    /// Probe window: the next flush is allowed through; its outcome
+    /// decides Closed vs. re-Open.
+    HalfOpen,
+}
+
+/// Per-shard breaker state machine (owned by one [`ShardBatcher`] — not
+/// shared, so no atomics and nothing for loom to model).
+#[derive(Debug)]
+struct Breaker {
+    cfg: BreakerConfig,
+    state: BreakerState,
+    consecutive_failures: u32,
+    /// Simulated instant of the last transition to Open.
+    opened_at: SimTime,
+    /// Latest request time observed — the transition stamp for flushes
+    /// that carry no clock (end-of-run forced flushes).
+    last_now: SimTime,
+}
+
+impl Breaker {
+    fn new(cfg: BreakerConfig) -> Self {
+        Breaker {
+            cfg,
+            state: BreakerState::Closed,
+            consecutive_failures: 0,
+            opened_at: SimTime::ZERO,
+            last_now: SimTime::ZERO,
+        }
+    }
+
+    fn active(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    fn state(&self) -> BreakerState {
+        self.state
+    }
+
+    /// May the backend be called at `now`? Moves Open → HalfOpen when the
+    /// probe cadence lapsed.
+    fn allows(&mut self, now: SimTime) -> bool {
+        self.last_now = self.last_now.max(now);
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open => {
+                if self.opened_at.duration_until(now) >= self.cfg.probe_after {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// A flush succeeded; returns true when this closed the breaker.
+    fn on_success(&mut self) -> bool {
+        self.consecutive_failures = 0;
+        if self.state == BreakerState::Closed {
+            false
+        } else {
+            self.state = BreakerState::Closed;
+            true
+        }
+    }
+
+    /// A flush failed at `now`; returns true when this opened (or
+    /// re-opened) the breaker.
+    fn on_failure(&mut self, now: SimTime) -> bool {
+        self.consecutive_failures = self.consecutive_failures.saturating_add(1);
+        let opens = match self.state {
+            BreakerState::HalfOpen => true,
+            BreakerState::Closed => self.consecutive_failures >= self.cfg.failure_threshold,
+            BreakerState::Open => false,
+        };
+        if opens {
+            self.state = BreakerState::Open;
+            self.opened_at = now;
+        }
+        opens
+    }
+}
+
+/// Bounded-retry adapter around one flush's backend: re-asks
+/// `decision_batch` up to `budget` extra times on error, tallying each
+/// retry. Time does not advance mid-flush, so during an injected outage
+/// the budget deterministically exhausts — the backoff is charged to
+/// telemetry, never the clock.
+struct RetryBackend<'a> {
+    inner: &'a mut dyn SvmBackend,
+    budget: u32,
+    retries: &'a mut u64,
+}
+
+impl SvmBackend for RetryBackend<'_> {
+    fn name(&self) -> &'static str {
+        "retry"
+    }
+
+    fn train(&mut self, ds: &crate::svm::Dataset) -> Result<()> {
+        self.inner.train(ds)
+    }
+
+    fn decision_batch(&mut self, queries: &[FeatureVec]) -> Result<Vec<f32>> {
+        let mut attempt = 0u32;
+        loop {
+            match self.inner.decision_batch(queries) {
+                Ok(scores) => return Ok(scores),
+                Err(e) => {
+                    if attempt >= self.budget {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                    *self.retries += 1;
+                }
+            }
+        }
+    }
+
+    fn is_trained(&self) -> bool {
+        self.inner.is_trained()
     }
 }
 
@@ -308,6 +512,11 @@ struct ColdCounters {
     flushed_queries: AtomicU64,
     flush_ns: AtomicU64,
     dropped: AtomicU64,
+    breaker_opens: AtomicU64,
+    breaker_closes: AtomicU64,
+    breaker_fallbacks: AtomicU64,
+    retries: AtomicU64,
+    retry_backoff_us: AtomicU64,
 }
 
 impl Default for ColdCounters {
@@ -322,6 +531,11 @@ impl Default for ColdCounters {
             flushed_queries: AtomicU64::new(0),
             flush_ns: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
+            breaker_opens: AtomicU64::new(0),
+            breaker_closes: AtomicU64::new(0),
+            breaker_fallbacks: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            retry_backoff_us: AtomicU64::new(0),
         }
     }
 }
@@ -377,6 +591,32 @@ impl BatcherProbe {
         self.counters.dropped.load(Ordering::Relaxed)
     }
 
+    /// Closed/HalfOpen → Open breaker transitions across all shards.
+    pub fn breaker_opens(&self) -> u64 {
+        self.counters.breaker_opens.load(Ordering::Relaxed)
+    }
+
+    /// Open/HalfOpen → Closed (recovery) transitions across all shards.
+    pub fn breaker_closes(&self) -> u64 {
+        self.counters.breaker_closes.load(Ordering::Relaxed)
+    }
+
+    /// Cold queries answered `None` because the breaker was open (the
+    /// caller fell back to unclassified plain-LRU placement).
+    pub fn breaker_fallbacks(&self) -> u64 {
+        self.counters.breaker_fallbacks.load(Ordering::Relaxed)
+    }
+
+    /// Bounded backend retries spent inside flushes.
+    pub fn retries(&self) -> u64 {
+        self.counters.retries.load(Ordering::Relaxed)
+    }
+
+    /// Total simulated backoff charged for those retries, in microseconds.
+    pub fn retry_backoff_us(&self) -> u64 {
+        self.counters.retry_backoff_us.load(Ordering::Relaxed)
+    }
+
     /// Mean queries per flush (0 when nothing flushed yet).
     pub fn mean_flush_size(&self) -> f64 {
         let flushes = self.flushes();
@@ -415,6 +655,24 @@ impl BatcherProbe {
         gauge("flushes_by_deadline", |c| &c.flush_deadline);
         gauge("flushed_queries", |c| &c.flushed_queries);
         gauge("dropped", |c| &c.dropped);
+    }
+
+    /// Expose the circuit-breaker counters as `{prefix}.…` gauges. Kept
+    /// separate from [`register_gauges`](Self::register_gauges) so drivers
+    /// that never enable the breaker export exactly the pre-breaker JSONL
+    /// (the all-clear parity guarantee).
+    pub fn register_breaker_gauges(&self, registry: &MetricsRegistry, prefix: &str) {
+        let gauge = |name: &str, read: fn(&ColdCounters) -> &AtomicU64| {
+            let counters = Arc::clone(&self.counters);
+            registry.gauge(&format!("{prefix}.{name}"), move || {
+                read(&counters).load(Ordering::Relaxed)
+            });
+        };
+        gauge("breaker_opens", |c| &c.breaker_opens);
+        gauge("breaker_closes", |c| &c.breaker_closes);
+        gauge("breaker_fallbacks", |c| &c.breaker_fallbacks);
+        gauge("retries", |c| &c.retries);
+        gauge("retry_backoff_us", |c| &c.retry_backoff_us);
     }
 }
 
@@ -475,6 +733,9 @@ pub struct ShardBatcher {
     oldest: Option<SimTime>,
     counters: Arc<ColdCounters>,
     obs: BatcherObs,
+    /// Circuit breaker over the backend flush path (inert unless
+    /// [`BreakerConfig::enabled`]). Owned per shard — no shared state.
+    breaker: Breaker,
 }
 
 impl ShardBatcher {
@@ -494,6 +755,7 @@ impl ShardBatcher {
             oldest: None,
             counters: probe.counters,
             obs: BatcherObs::default(),
+            breaker: Breaker::new(cfg.breaker),
         }
     }
 
@@ -533,6 +795,20 @@ impl ShardBatcher {
             let _ = self.maybe_flush(backend, now);
             return Ok(Some(class));
         }
+        // Open breaker: the query never enters the queue — the caller
+        // falls back to unclassified plain-LRU placement, the policy's
+        // existing cold-path semantics. (An open breaker also means the
+        // queue cannot grow unboundedly during an outage.) `allows` moves
+        // Open → HalfOpen once the probe cadence lapses; a HalfOpen shard
+        // forces the next cold query to flush inline as the probe.
+        let mut probing = false;
+        if self.breaker.active() {
+            if !self.breaker.allows(now) {
+                self.counters.breaker_fallbacks.fetch_add(1, Ordering::Relaxed);
+                return Ok(None);
+            }
+            probing = self.breaker.state() == BreakerState::HalfOpen;
+        }
         // `prefetch` dedupes against an already-pending (block, stamp):
         // only count queries that actually entered the queue as cold (and
         // as deferred below), so deferred <= cold_queries and
@@ -546,13 +822,20 @@ impl ShardBatcher {
         let oldest = *self.oldest.get_or_insert(now);
         let fill = self.inner.pending_len() >= self.queue_depth;
         let late = oldest.duration_until(now) >= self.deadline;
-        if !fill && !late {
+        if !fill && !late && !probing {
             if enqueued {
                 self.counters.deferred.fetch_add(1, Ordering::Relaxed);
             }
             return Ok(None);
         }
-        self.flush_now(backend, fill, Some(now))?;
+        match self.flush_now(backend, fill, Some(now)) {
+            Ok(()) => {}
+            // Degraded mode: the failure was tallied (and may have opened
+            // the breaker); this caller falls back to unclassified instead
+            // of surfacing the backend error up the serving path.
+            Err(_) if self.breaker.active() => return Ok(None),
+            Err(e) => return Err(e),
+        }
         Ok(self.inner.class_of(block))
     }
 
@@ -591,6 +874,24 @@ impl ShardBatcher {
         by_fill: bool,
         now: Option<SimTime>,
     ) -> Result<()> {
+        // Open breaker: leave the queue pending (bounded by queue_depth —
+        // predict() stops enqueueing while open) until the probe cadence
+        // reopens the path. The end-of-run flush (`now == None`) instead
+        // drops the queue and accounts it, keeping the conservation
+        // invariant cold == flushed + dropped at exit.
+        if self.breaker.active() {
+            let at = now.unwrap_or(self.breaker.last_now);
+            if !self.breaker.allows(at) {
+                if now.is_none() {
+                    let stranded = self.inner.drop_pending() as u64;
+                    if stranded > 0 {
+                        self.counters.dropped.fetch_add(stranded, Ordering::Relaxed);
+                    }
+                    self.oldest = None;
+                }
+                return Ok(());
+            }
+        }
         let n = self.inner.pending_len() as u64;
         // Simulated queue wait of the oldest pending query — deterministic
         // under a fixed seed, unlike the wall-clock flush latency below.
@@ -606,7 +907,27 @@ impl ShardBatcher {
         }
         let scored_before = self.inner.stats.predictions_scored;
         let t0 = Instant::now();
-        let result = self.inner.flush(backend);
+        let result = if self.breaker.active() && self.breaker.cfg.max_retries > 0 {
+            let mut retries = 0u64;
+            let r = {
+                let mut retry = RetryBackend {
+                    inner: backend,
+                    budget: self.breaker.cfg.max_retries,
+                    retries: &mut retries,
+                };
+                self.inner.flush(&mut retry)
+            };
+            if retries > 0 {
+                self.counters.retries.fetch_add(retries, Ordering::Relaxed);
+                self.counters.retry_backoff_us.fetch_add(
+                    retries * self.breaker.cfg.retry_backoff.micros(),
+                    Ordering::Relaxed,
+                );
+            }
+            r
+        } else {
+            self.inner.flush(backend)
+        };
         // A multi-chunk flush can fail part-way: earlier chunks were
         // scored and cached (count them flushed), only the remainder was
         // taken-and-lost (count those dropped). On success scored == n.
@@ -626,6 +947,16 @@ impl ShardBatcher {
         }
         if scored < n {
             self.counters.dropped.fetch_add(n - scored, Ordering::Relaxed);
+        }
+        if self.breaker.active() {
+            let at = now.unwrap_or(self.breaker.last_now);
+            if result.is_ok() {
+                if self.breaker.on_success() {
+                    self.counters.breaker_closes.fetch_add(1, Ordering::Relaxed);
+                }
+            } else if self.breaker.on_failure(at) {
+                self.counters.breaker_opens.fetch_add(1, Ordering::Relaxed);
+            }
         }
         result
     }
@@ -668,6 +999,16 @@ impl ShardBatcher {
     /// Cold queries awaiting a flush.
     pub fn pending_len(&self) -> usize {
         self.inner.pending_len()
+    }
+
+    /// Current circuit-breaker state, or `None` when the breaker is
+    /// disabled (the default config).
+    pub fn breaker_state(&self) -> Option<BreakerState> {
+        if self.breaker.active() {
+            Some(self.breaker.state())
+        } else {
+            None
+        }
     }
 }
 
@@ -1350,5 +1691,176 @@ mod tests {
         pool.invalidate_all();
         assert_eq!(pool.cached_len(), 0);
         assert_eq!(pool.pending_len(), 0);
+    }
+
+    // ------------------------------------------------- circuit breaker
+
+    /// A backend whose failure mode can be flipped mid-test (an outage
+    /// that starts and ends on demand).
+    struct SwitchBackend {
+        failing: bool,
+        calls: u64,
+    }
+
+    impl SvmBackend for SwitchBackend {
+        fn name(&self) -> &'static str {
+            "switch"
+        }
+        fn train(&mut self, _ds: &crate::svm::Dataset) -> Result<()> {
+            Ok(())
+        }
+        fn decision_batch(&mut self, q: &[FeatureVec]) -> Result<Vec<f32>> {
+            self.calls += 1;
+            if self.failing {
+                anyhow::bail!("simulated outage");
+            }
+            Ok(q.iter().map(|f| f[0] - 0.5).collect())
+        }
+        fn is_trained(&self) -> bool {
+            true
+        }
+    }
+
+    fn breaker_cfg(threshold: u32, retries: u32, probe_after_us: u64) -> BatcherConfig {
+        BatcherConfig {
+            breaker: BreakerConfig {
+                enabled: true,
+                failure_threshold: threshold,
+                max_retries: retries,
+                probe_after: SimDuration::from_micros(probe_after_us),
+                ..BreakerConfig::default()
+            },
+            ..BatcherConfig::default()
+        }
+    }
+
+    #[test]
+    fn breaker_disabled_reports_none_and_keeps_error_semantics() {
+        let mut batcher = ShardBatcher::new(BatcherConfig::default());
+        assert_eq!(batcher.breaker_state(), None);
+        // Pre-breaker semantics: a failing flush surfaces the Err.
+        let mut be = BrokenBackend;
+        assert!(batcher.predict(&mut be, BlockId(1), 0, fv(0.9), SimTime(0)).is_err());
+    }
+
+    #[test]
+    fn breaker_lifecycle_open_fallback_probe_close() {
+        let mut be = SwitchBackend { failing: true, calls: 0 };
+        let mut batcher = ShardBatcher::new(breaker_cfg(2, 0, 1_000));
+        // With the breaker active a failed flush degrades to `Ok(None)`
+        // (unclassified fallback) instead of an error.
+        assert_eq!(batcher.predict(&mut be, BlockId(1), 0, fv(0.9), SimTime(0)).unwrap(), None);
+        assert_eq!(batcher.breaker_state(), Some(BreakerState::Closed));
+        assert_eq!(batcher.predict(&mut be, BlockId(2), 0, fv(0.9), SimTime(10)).unwrap(), None);
+        assert_eq!(batcher.breaker_state(), Some(BreakerState::Open));
+        assert_eq!(batcher.probe().breaker_opens(), 1);
+        // Open: callers fall back without any backend traffic.
+        let calls = be.calls;
+        assert_eq!(batcher.predict(&mut be, BlockId(3), 0, fv(0.9), SimTime(20)).unwrap(), None);
+        assert_eq!(be.calls, calls, "open breaker never touches the backend");
+        assert_eq!(batcher.probe().breaker_fallbacks(), 1);
+        // Probe cadence lapses and the backend recovered: the HalfOpen
+        // probe flushes inline, succeeds, and closes the breaker.
+        be.failing = false;
+        let r = batcher.predict(&mut be, BlockId(4), 0, fv(0.9), SimTime(1_010)).unwrap();
+        assert_eq!(r, Some(true), "probe query is answered inline");
+        assert_eq!(batcher.breaker_state(), Some(BreakerState::Closed));
+        assert_eq!(batcher.probe().breaker_closes(), 1);
+    }
+
+    #[test]
+    fn half_open_probe_failure_reopens() {
+        let mut be = SwitchBackend { failing: true, calls: 0 };
+        let mut batcher = ShardBatcher::new(breaker_cfg(1, 0, 1_000));
+        assert_eq!(batcher.predict(&mut be, BlockId(1), 0, fv(0.9), SimTime(0)).unwrap(), None);
+        assert_eq!(batcher.breaker_state(), Some(BreakerState::Open));
+        // Probe at t=1_000 fails → immediate re-open, fresh probe window.
+        assert_eq!(batcher.predict(&mut be, BlockId(2), 0, fv(0.9), SimTime(1_000)).unwrap(), None);
+        assert_eq!(batcher.breaker_state(), Some(BreakerState::Open));
+        assert_eq!(batcher.probe().breaker_opens(), 2);
+        // Still inside the new probe window: pure fallback.
+        let calls = be.calls;
+        assert_eq!(batcher.predict(&mut be, BlockId(3), 0, fv(0.9), SimTime(1_500)).unwrap(), None);
+        assert_eq!(be.calls, calls);
+    }
+
+    #[test]
+    fn retry_budget_recovers_transient_failure() {
+        /// Fails exactly its first call, then stays healthy.
+        struct FlakyOnce {
+            calls: u64,
+        }
+        impl SvmBackend for FlakyOnce {
+            fn name(&self) -> &'static str {
+                "flaky-once"
+            }
+            fn train(&mut self, _ds: &crate::svm::Dataset) -> Result<()> {
+                Ok(())
+            }
+            fn decision_batch(&mut self, q: &[FeatureVec]) -> Result<Vec<f32>> {
+                self.calls += 1;
+                if self.calls == 1 {
+                    anyhow::bail!("transient");
+                }
+                Ok(q.iter().map(|f| f[0] - 0.5).collect())
+            }
+            fn is_trained(&self) -> bool {
+                true
+            }
+        }
+        let mut be = FlakyOnce { calls: 0 };
+        let mut batcher = ShardBatcher::new(breaker_cfg(3, 2, 1_000));
+        let r = batcher.predict(&mut be, BlockId(1), 0, fv(0.9), SimTime(0)).unwrap();
+        assert_eq!(r, Some(true), "one bounded retry absorbs the transient");
+        let probe = batcher.probe();
+        assert_eq!(probe.retries(), 1);
+        assert_eq!(probe.retry_backoff_us(), 500, "default 500us backoff per retry");
+        assert_eq!(probe.breaker_opens(), 0);
+        assert_eq!(batcher.breaker_state(), Some(BreakerState::Closed));
+        assert_eq!(probe.dropped(), 0, "retried flush loses nothing");
+    }
+
+    #[test]
+    fn open_breaker_end_of_run_flush_drops_pending() {
+        let mut be = SwitchBackend { failing: true, calls: 0 };
+        let mut batcher = ShardBatcher::new(breaker_cfg(1, 0, 1_000_000));
+        assert_eq!(batcher.predict(&mut be, BlockId(1), 0, fv(0.9), SimTime(0)).unwrap(), None);
+        assert_eq!(batcher.breaker_state(), Some(BreakerState::Open));
+        let dropped_before = batcher.probe().dropped();
+        // Prefetch bypasses the breaker gate (no answer needed), so the
+        // queue can hold entries when the run ends with the breaker open.
+        batcher.prefetch(BlockId(2), 0, fv(0.9), SimTime(5));
+        batcher.prefetch(BlockId(3), 0, fv(0.9), SimTime(6));
+        assert_eq!(batcher.pending_len(), 2);
+        batcher.flush(&mut be).unwrap();
+        assert_eq!(batcher.pending_len(), 0, "stranded queue is cleared");
+        assert_eq!(
+            batcher.probe().dropped(),
+            dropped_before + 2,
+            "stranded entries are accounted as dropped"
+        );
+        let calls = be.calls;
+        batcher.flush(&mut be).unwrap();
+        assert_eq!(be.calls, calls, "open breaker blocks the backend even at end of run");
+    }
+
+    #[test]
+    fn breaker_gauges_mirror_probe_accessors() {
+        let registry = MetricsRegistry::new();
+        let mut be = SwitchBackend { failing: true, calls: 0 };
+        let mut batcher = ShardBatcher::new(breaker_cfg(1, 1, 1_000));
+        batcher.probe().register_breaker_gauges(&registry, "breaker");
+        assert_eq!(batcher.predict(&mut be, BlockId(1), 0, fv(0.9), SimTime(0)).unwrap(), None);
+        assert_eq!(batcher.predict(&mut be, BlockId(2), 0, fv(0.9), SimTime(10)).unwrap(), None);
+        let gauges = registry.gauge_values();
+        let gauge = |name: &str| {
+            gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap()
+        };
+        let probe = batcher.probe();
+        assert_eq!(gauge("breaker.breaker_opens"), probe.breaker_opens());
+        assert_eq!(gauge("breaker.breaker_fallbacks"), probe.breaker_fallbacks());
+        assert_eq!(gauge("breaker.retries"), probe.retries());
+        assert_eq!(gauge("breaker.retry_backoff_us"), probe.retry_backoff_us());
+        assert!(probe.retries() >= 1, "the failing flush spent its retry budget");
     }
 }

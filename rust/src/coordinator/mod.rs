@@ -27,12 +27,14 @@ pub mod prefetcher;
 pub mod training_pipeline;
 
 pub use batcher::{
-    BatcherConfig, BatcherPool, BatcherProbe, BatcherStats, PredictionBatcher, ShardBatcher,
+    BatcherConfig, BatcherPool, BatcherProbe, BatcherStats, BreakerConfig, BreakerState,
+    PredictionBatcher, ShardBatcher,
 };
 pub use cache_coordinator::{CacheCoordinator, CacheMode, CoordinatorStats};
 pub use online::{
-    sample_channel, trainer_loop, ClassifierSnapshot, LabeledSample, SampleProbe, SampleSender,
-    SnapshotBackend, SnapshotCell, SnapshotReader, TrainerConfig, TrainerReport,
+    sample_channel, trainer_loop, trainer_loop_resilient, ClassifierSnapshot, LabeledSample,
+    SampleProbe, SampleSender, SnapshotBackend, SnapshotCell, SnapshotReader, TrainerConfig,
+    TrainerReport,
 };
 pub use prefetcher::{PrefetchStats, Prefetcher};
 pub use training_pipeline::TrainingPipeline;

@@ -308,7 +308,19 @@ impl SampleSender {
                 true
             }
             Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
-                self.counters.dropped.fetch_add(1, Ordering::Relaxed);
+                // Warn exactly once per channel (first drop wins the race;
+                // Relaxed is fine — double-logging under contention would
+                // merely repeat a diagnostic). Per-drop logging would melt
+                // the hot path during sustained saturation; the running
+                // totals live in the `samples.dropped` / `drop_rate_ppm`
+                // gauges instead.
+                let prev = self.counters.dropped.fetch_add(1, Ordering::Relaxed);
+                if prev == 0 {
+                    log::warn!(
+                        "sample channel saturated: dropping labeled samples \
+                         (see samples.dropped / samples.drop_rate_ppm gauges)"
+                    );
+                }
                 false
             }
         }
@@ -350,9 +362,12 @@ impl SampleProbe {
         self.counters.dropped.load(Ordering::Relaxed)
     }
 
-    /// Expose both counters as `{prefix}.sent` / `{prefix}.dropped`
-    /// gauges — the accessor API stays the programmatic view, the gauges
-    /// put the same cells in the `--metrics-out` JSONL.
+    /// Expose the counters as `{prefix}.sent` / `{prefix}.dropped` /
+    /// `{prefix}.drop_rate_ppm` gauges — the accessor API stays the
+    /// programmatic view, the gauges put the same cells in the
+    /// `--metrics-out` JSONL. The drop rate is parts-per-million of all
+    /// emit attempts, so saturation is visible at a glance without
+    /// cross-referencing two counters.
     pub fn register_gauges(&self, registry: &crate::obs::MetricsRegistry, prefix: &str) {
         let counters = Arc::clone(&self.counters);
         registry.gauge(&format!("{prefix}.sent"), move || {
@@ -361,6 +376,17 @@ impl SampleProbe {
         let counters = Arc::clone(&self.counters);
         registry.gauge(&format!("{prefix}.dropped"), move || {
             counters.dropped.load(Ordering::Relaxed)
+        });
+        let counters = Arc::clone(&self.counters);
+        registry.gauge(&format!("{prefix}.drop_rate_ppm"), move || {
+            let sent = counters.sent.load(Ordering::Relaxed);
+            let dropped = counters.dropped.load(Ordering::Relaxed);
+            let total = sent + dropped;
+            if total == 0 {
+                0
+            } else {
+                dropped * 1_000_000 / total
+            }
         });
     }
 }
@@ -404,6 +430,17 @@ pub struct TrainerReport {
     pub publishes: u64,
     /// Version of the last published snapshot (0 = never published).
     pub final_version: u64,
+    /// Training rounds that failed (resilient loop only — the plain
+    /// [`trainer_loop`] propagates the first error instead of counting).
+    pub train_errors: u64,
+    /// Injected trainer crashes survived (resilient loop only).
+    pub restarts: u64,
+    /// Samples consumed after the last publish — the staleness of the
+    /// serving snapshot at loop exit, measured on the sample stream's own
+    /// clock (counts, like everything else on this path, stay
+    /// deterministic). 0 right after a publish; equal to `samples` when
+    /// nothing was ever published.
+    pub stale_samples: u64,
 }
 
 /// The background trainer body: drain `rx` into `pipeline`, retrain
@@ -422,6 +459,7 @@ pub fn trainer_loop(
     cell: &SnapshotCell,
 ) -> Result<TrainerReport> {
     let mut report = TrainerReport::default();
+    let mut samples_at_publish = 0u64;
     while let Ok(sample) = rx.recv() {
         report.samples += 1;
         pipeline.observe(sample.features, sample.reused);
@@ -430,6 +468,7 @@ pub fn trainer_loop(
             if let Some(model) = backend.export_model() {
                 report.final_version = cell.publish(model);
                 report.publishes += 1;
+                samples_at_publish = report.samples;
             }
         }
     }
@@ -440,9 +479,97 @@ pub fn trainer_loop(
         if let Some(model) = backend.export_model() {
             report.final_version = cell.publish(model);
             report.publishes += 1;
+            samples_at_publish = report.samples;
         }
     }
+    report.stale_samples =
+        if report.publishes > 0 { report.samples - samples_at_publish } else { report.samples };
     Ok(report)
+}
+
+/// The graceful-degradation variant of [`trainer_loop`]: training errors
+/// are counted and logged instead of aborting the loop (shard workers keep
+/// serving the last published snapshot), and injected trainer crashes —
+/// sample-count thresholds from
+/// [`FaultPlan::trainer_crash_points`](crate::sim::FaultPlan) — reset the
+/// pipeline's in-flight buffer, modeling a trainer process restart that
+/// loses its accumulation window but never the published model (the
+/// [`SnapshotCell`] is the durable hand-off point).
+///
+/// With `injector == None` and an error-free backend this behaves exactly
+/// like [`trainer_loop`]; the plain loop stays the baseline (it propagates
+/// the first training error, the pre-existing contract).
+pub fn trainer_loop_resilient(
+    rx: Receiver<LabeledSample>,
+    backend: &mut dyn SvmBackend,
+    pipeline: &mut TrainingPipeline,
+    cell: &SnapshotCell,
+    injector: Option<&crate::sim::FaultInjector>,
+) -> Result<TrainerReport> {
+    let crash_points: Vec<u64> =
+        injector.map(|i| i.plan().trainer_crash_points()).unwrap_or_default();
+    let mut next_crash = 0usize;
+    let mut report = TrainerReport::default();
+    let mut samples_at_publish = 0u64;
+    while let Ok(sample) = rx.recv() {
+        report.samples += 1;
+        // Injected crash: the restarting trainer loses its buffered window
+        // (and this sample), keeps its published snapshots, and resumes
+        // accumulating from empty.
+        if next_crash < crash_points.len() && report.samples >= crash_points[next_crash] {
+            next_crash += 1;
+            pipeline.reset();
+            report.restarts += 1;
+            if let Some(inj) = injector {
+                inj.note_trainer_crash();
+            }
+            log::warn!(
+                "injected trainer crash at sample {}: buffer lost, snapshot v{} still serving",
+                report.samples,
+                report.final_version
+            );
+            continue;
+        }
+        pipeline.observe(sample.features, sample.reused);
+        match pipeline.maybe_train(backend) {
+            Ok(true) => publish(backend, cell, &mut report, &mut samples_at_publish),
+            Ok(false) => {}
+            Err(e) => {
+                report.train_errors += 1;
+                log::warn!("training failed (still serving snapshot v{}): {e:#}", report.final_version);
+            }
+        }
+    }
+    if pipeline.pending_since_train() > 0 {
+        match pipeline.train_now(backend) {
+            Ok(true) => publish(backend, cell, &mut report, &mut samples_at_publish),
+            Ok(false) => {}
+            Err(e) => {
+                report.train_errors += 1;
+                log::warn!("final drain training failed: {e:#}");
+            }
+        }
+    }
+    report.stale_samples =
+        if report.publishes > 0 { report.samples - samples_at_publish } else { report.samples };
+    Ok(report)
+}
+
+/// Shared publish tail of the trainer loops: export the freshly trained
+/// model (when the backend can), publish it, and move the staleness
+/// anchor to the current sample count.
+fn publish(
+    backend: &mut dyn SvmBackend,
+    cell: &SnapshotCell,
+    report: &mut TrainerReport,
+    samples_at_publish: &mut u64,
+) {
+    report.trainings += 1;
+    if let Some(model) = backend.export_model() {
+        report.final_version = cell.publish(model);
+        report.publishes += 1;
+        *samples_at_publish = report.samples;
+    }
 }
 
 #[cfg(test)]
@@ -539,8 +666,21 @@ mod tests {
         let gauges = registry.gauge_values();
         assert_eq!(
             gauges,
-            vec![("samples.dropped".to_string(), 1), ("samples.sent".to_string(), 1)]
+            vec![
+                ("samples.drop_rate_ppm".to_string(), 500_000),
+                ("samples.dropped".to_string(), 1),
+                ("samples.sent".to_string(), 1),
+            ]
         );
+    }
+
+    #[test]
+    fn drop_rate_gauge_is_zero_before_any_emit() {
+        let registry = crate::obs::MetricsRegistry::new();
+        let (tx, _rx) = sample_channel(4);
+        tx.probe().register_gauges(&registry, "samples");
+        let gauges = registry.gauge_values();
+        assert!(gauges.iter().all(|(_, v)| *v == 0), "{gauges:?}");
     }
 
     #[test]
@@ -582,6 +722,7 @@ mod tests {
         assert_eq!(report.trainings, 0);
         assert_eq!(report.publishes, 0);
         assert_eq!(cell.version(), 0, "nothing to publish from one class");
+        assert_eq!(report.stale_samples, 32, "never published: the whole stream is stale");
     }
 
     #[test]
@@ -601,5 +742,96 @@ mod tests {
         assert_eq!(report.trainings, 1, "drain training");
         assert_eq!(report.publishes, 1);
         assert_eq!(cell.version(), 1);
+        assert_eq!(report.stale_samples, 0, "the drain publish covers the whole stream");
+    }
+
+    // ------------------------------------------------ resilient trainer
+
+    use crate::sim::{FaultEvent, FaultInjector, FaultPlan};
+
+    fn alternating_stream(tx: &SampleSender, n: usize) {
+        for i in 0..n {
+            let reused = i % 2 == 0;
+            tx.emit(fv(if reused { 0.2 } else { 0.8 }), reused);
+        }
+    }
+
+    #[test]
+    fn resilient_loop_without_faults_matches_plain_loop() {
+        let run_plain = || {
+            let (tx, rx) = sample_channel(1024);
+            let cell = Arc::new(SnapshotCell::new());
+            let mut backend = RustBackend::new(KernelKind::Rbf);
+            let mut pipeline = TrainingPipeline::new(8, 16);
+            alternating_stream(&tx, 64);
+            drop(tx);
+            trainer_loop(rx, &mut backend, &mut pipeline, &cell).unwrap()
+        };
+        let run_resilient = |injector: Option<&FaultInjector>| {
+            let (tx, rx) = sample_channel(1024);
+            let cell = Arc::new(SnapshotCell::new());
+            let mut backend = RustBackend::new(KernelKind::Rbf);
+            let mut pipeline = TrainingPipeline::new(8, 16);
+            alternating_stream(&tx, 64);
+            drop(tx);
+            trainer_loop_resilient(rx, &mut backend, &mut pipeline, &cell, injector).unwrap()
+        };
+        let all_clear = FaultInjector::new(FaultPlan::all_clear(7));
+        assert_eq!(run_plain(), run_resilient(None));
+        assert_eq!(run_plain(), run_resilient(Some(&all_clear)));
+    }
+
+    #[test]
+    fn resilient_loop_counts_train_errors_instead_of_aborting() {
+        /// Training always fails; predictions would work if it trained.
+        struct FailingTrain;
+        impl SvmBackend for FailingTrain {
+            fn name(&self) -> &'static str {
+                "failing-train"
+            }
+            fn train(&mut self, _ds: &crate::svm::Dataset) -> Result<()> {
+                anyhow::bail!("injected train failure")
+            }
+            fn decision_batch(&mut self, q: &[FeatureVec]) -> Result<Vec<f32>> {
+                Ok(vec![0.0; q.len()])
+            }
+            fn is_trained(&self) -> bool {
+                false
+            }
+        }
+        let (tx, rx) = sample_channel(1024);
+        let cell = Arc::new(SnapshotCell::new());
+        let mut backend = FailingTrain;
+        let mut pipeline = TrainingPipeline::new(8, 16);
+        alternating_stream(&tx, 64);
+        drop(tx);
+        let report =
+            trainer_loop_resilient(rx, &mut backend, &mut pipeline, &cell, None).unwrap();
+        assert_eq!(report.samples, 64);
+        assert_eq!(report.trainings, 0);
+        assert!(report.train_errors >= 1, "{report:?}");
+        assert_eq!(cell.version(), 0, "nothing published, snapshot stays v0");
+    }
+
+    #[test]
+    fn injected_trainer_crash_loses_buffer_but_keeps_snapshot() {
+        let plan =
+            FaultPlan::all_clear(3).with_event(FaultEvent::TrainerCrash { after_samples: 40 });
+        let injector = FaultInjector::new(plan);
+        let (tx, rx) = sample_channel(1024);
+        let cell = Arc::new(SnapshotCell::new());
+        let mut backend = RustBackend::new(KernelKind::Rbf);
+        let mut pipeline = TrainingPipeline::new(8, 16);
+        alternating_stream(&tx, 96);
+        drop(tx);
+        let report =
+            trainer_loop_resilient(rx, &mut backend, &mut pipeline, &cell, Some(&injector))
+                .unwrap();
+        assert_eq!(report.samples, 96, "the crash never stops the loop");
+        assert_eq!(report.restarts, 1);
+        assert_eq!(injector.trainer_crashes(), 1);
+        assert!(report.trainings >= 2, "retrains before AND after the crash: {report:?}");
+        assert_eq!(report.final_version, cell.version());
+        assert!(cell.version() >= 1, "published snapshots survive the restart");
     }
 }

@@ -145,6 +145,17 @@ impl TrainingPipeline {
     pub fn dataset(&self) -> &Dataset {
         &self.buffer
     }
+
+    /// Drop every buffered sample and the cadence anchor — what an
+    /// injected trainer crash costs: the in-flight window is lost and the
+    /// restarted trainer accumulates from empty. `trainings` survives (it
+    /// counts completed work, and the cadence gate `trainings == 0` must
+    /// not re-arm the `min_samples` warm-up after a mid-run restart).
+    pub fn reset(&mut self) {
+        self.buffer = Dataset::new();
+        self.n_positive = 0;
+        self.observed_since_train = 0;
+    }
 }
 
 #[cfg(test)]
@@ -260,6 +271,29 @@ mod tests {
             // The window itself stayed bounded the whole time.
             assert!(tp.n_samples() <= max_samples);
         }
+    }
+
+    #[test]
+    fn reset_clears_buffer_but_keeps_training_count() {
+        let mut be = CountingBackend { trainings: 0 };
+        let mut tp = TrainingPipeline::new(4, 4);
+        for i in 0..4 {
+            tp.observe(fv(i), i % 2 == 0);
+        }
+        assert!(tp.maybe_train(&mut be).unwrap());
+        tp.observe(fv(5), true);
+        tp.reset();
+        assert_eq!(tp.n_samples(), 0);
+        assert_eq!(tp.pending_since_train(), 0);
+        assert!(!tp.has_both_classes());
+        assert_eq!(tp.trainings, 1, "completed trainings survive the crash");
+        // The restarted pipeline retrains on the interval cadence (not the
+        // min_samples warm-up) once both classes reappear.
+        for i in 0..4 {
+            tp.observe(fv(i), i % 2 == 0);
+        }
+        assert!(tp.maybe_train(&mut be).unwrap());
+        assert_eq!(be.trainings, 2);
     }
 
     #[test]

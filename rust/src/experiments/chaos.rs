@@ -1,0 +1,614 @@
+//! Chaos replay: the serving stack under a scripted [`FaultPlan`] — the
+//! `repro chaos` driver.
+//!
+//! Three arms, all on the simulated clock so every run is seeded and
+//! byte-reproducible:
+//!
+//! * **Serving** ([`run_serving_chaos`]) — the frozen shard-parallel
+//!   replay of [`super::online_sharded`] with every worker's
+//!   [`SnapshotBackend`] wrapped in a [`FaultyBackend`]: scripted backend
+//!   outages surface as prediction errors, the per-shard circuit breaker
+//!   ([`BreakerConfig`]) absorbs them, and the windowed series splits the
+//!   run into pre/outage/post phases to measure the degradation gap and
+//!   the recovery lag. The headline invariant: with the breaker open,
+//!   H-SVM-LRU degrades to the *unclassified* cold path — plain-LRU
+//!   placement — so its hit ratio stays within a bounded gap of an LRU
+//!   run under the identical plan, and recovers once the probe closes the
+//!   breaker.
+//! * **Trainer** ([`run_trainer_chaos`]) — the online arm with
+//!   [`trainer_loop_resilient`]: scripted trainer crashes lose the sample
+//!   buffer but never the published snapshot; workers keep serving the
+//!   last model while the trainer restarts.
+//! * **DAG** — [`super::dag_replay::run_dag_chaos`] (re-exported through
+//!   [`super::super::experiments`]): node death at wave boundaries +
+//!   seeded map-attempt failures from the same plan seed.
+//!
+//! An all-clear plan with the breaker disabled is bit-identical to the
+//! fault-free frozen replay — property-tested in
+//! rust/tests/property_faults.rs and smoke-checked by `repro chaos
+//! --smoke` in CI.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::cache::sharded::{shard_of, ShardStats, ShardedCache};
+use crate::cache::AccessContext;
+use crate::coordinator::batcher::{BatcherConfig, BatcherProbe, BreakerConfig, ShardBatcher};
+use crate::coordinator::online::{
+    sample_channel, trainer_loop_resilient, SampleSender, SnapshotBackend, SnapshotCell,
+    TrainerConfig, TrainerReport,
+};
+use crate::coordinator::TrainingPipeline;
+use crate::obs::{merge_series, MetricsRegistry, WindowAccum, WindowSeries};
+use crate::runtime::{RustBackend, SvmBackend};
+use crate::sim::parallel::{run_sharded, run_sharded_with_background};
+use crate::sim::{FaultEvent, FaultInjector, FaultPlan, FaultWindow, FaultyBackend, SimDuration};
+use crate::svm::features::BlockStatsTracker;
+use crate::svm::KernelKind;
+use crate::util::table::{fmt_f, Table};
+use crate::workload::BlockRequest;
+
+use super::online_sharded::{pretrain_model, SAMPLE_CHANNEL_BOUND};
+
+/// Recovery criterion: the first post-outage window whose hit ratio is
+/// back within this absolute gap of the pre-outage hit ratio counts as
+/// recovered.
+pub const RECOVERY_GAP: f64 = 0.10;
+
+/// The default chaos script for a serving replay over `trace`: one
+/// classifier outage across 30–55% of the trace's simulated span and one
+/// latency spike (500 simulated µs per call) across 60–70%.
+pub fn default_serving_plan(trace: &[BlockRequest], seed: u64) -> FaultPlan {
+    let span = trace.last().map(|r| r.time.micros()).unwrap_or(0).max(1);
+    let at = |f: f64| crate::sim::SimTime((span as f64 * f) as u64);
+    FaultPlan::all_clear(seed)
+        .with_event(FaultEvent::BackendOutage(FaultWindow::new(at(0.30), at(0.55))))
+        .with_event(FaultEvent::BackendSlow {
+            window: FaultWindow::new(at(0.60), at(0.70)),
+            extra: SimDuration::from_micros(500),
+        })
+}
+
+/// A breaker tuned to the trace's simulated span: default thresholds,
+/// probe cadence at 1/50th of the span so an outage ending mid-trace
+/// leaves room for several probes before the replay ends.
+pub fn breaker_for_trace(trace: &[BlockRequest]) -> BreakerConfig {
+    let span = trace.last().map(|r| r.time.micros()).unwrap_or(0);
+    BreakerConfig {
+        probe_after: SimDuration::from_micros((span / 50).max(1)),
+        ..BreakerConfig::on()
+    }
+}
+
+/// What one serving-arm chaos replay measured.
+#[derive(Debug, Clone)]
+pub struct ServingChaosReport {
+    /// Replacement policy replayed (registry name).
+    pub policy: String,
+    /// Shard count of the cache.
+    pub shards: usize,
+    /// Merged cache counters of the whole replay.
+    pub stats: ShardStats,
+    /// Windowed request/hit series (merged over shards, sorted by index).
+    pub windows: Vec<(u64, WindowAccum)>,
+    /// Window width used for the series and the phase split, micros.
+    pub window_us: u64,
+    /// Breaker transitions to Open across all shard batchers.
+    pub breaker_opens: u64,
+    /// Breaker transitions back to Closed.
+    pub breaker_closes: u64,
+    /// Cold queries answered by open-breaker fallback (unclassified).
+    pub breaker_fallbacks: u64,
+    /// Bounded backend retries spent inside flushes.
+    pub retries: u64,
+    /// Pending queries dropped (failed flushes + end-of-run strandings).
+    pub dropped: u64,
+    /// Backend calls failed by injection (the injector's tally).
+    pub backend_failures: u64,
+    /// The plan's first scripted outage window, if any — the phase split
+    /// below is relative to it.
+    pub outage: Option<FaultWindow>,
+    /// Hit ratio of the windows strictly before the outage.
+    pub pre_hit: f64,
+    /// Hit ratio of the windows overlapping the outage.
+    pub outage_hit: f64,
+    /// Hit ratio of the windows strictly after the outage.
+    pub post_hit: f64,
+    /// Windows after the outage until the hit ratio returned to within
+    /// [`RECOVERY_GAP`] of `pre_hit` (`None`: never recovered, or no
+    /// outage scripted).
+    pub recovered_after_windows: Option<u64>,
+}
+
+impl ServingChaosReport {
+    /// Whole-replay hit ratio.
+    pub fn hit_ratio(&self) -> f64 {
+        self.stats.hit_ratio()
+    }
+}
+
+fn phase_hit(windows: &[(u64, WindowAccum)], mut keep: impl FnMut(u64) -> bool) -> f64 {
+    let (mut hits, mut requests) = (0u64, 0u64);
+    for (idx, w) in windows {
+        if keep(*idx) {
+            hits += w.hits;
+            requests += w.requests;
+        }
+    }
+    if requests == 0 {
+        0.0
+    } else {
+        hits as f64 / requests as f64
+    }
+}
+
+/// Replay `trace` frozen (one pretrained snapshot) on a `shards`-way
+/// cache of `policy`, with every worker's backend wrapped under
+/// `injector`'s plan and the given circuit breaker on each shard's cold
+/// path. Phase metrics are split around the plan's first outage window.
+///
+/// With an all-clear plan and the breaker disabled this is bit-identical
+/// to the fault-free frozen replay ([`super::online_sharded::run_online`]).
+#[allow(clippy::too_many_arguments)] // the chaos replay's full knob surface
+pub fn run_serving_chaos(
+    policy: &str,
+    shards: usize,
+    capacity: u64,
+    trace: &[BlockRequest],
+    kernel: KernelKind,
+    breaker: BreakerConfig,
+    injector: &FaultInjector,
+    registry: &MetricsRegistry,
+    window_us: u64,
+) -> Result<ServingChaosReport> {
+    let model = pretrain_model(trace, kernel)?
+        .context("chaos serving arm needs a two-class trace to pretrain the classifier")?;
+    let cache = ShardedCache::from_registry(policy, shards, capacity)
+        .with_context(|| format!("unknown policy {policy:?}"))?;
+    let n = cache.n_shards();
+    let mut partitions: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, req) in trace.iter().enumerate() {
+        partitions[shard_of(req.block, n)].push(i);
+    }
+    let block_size = trace.iter().map(|r| r.size).max().unwrap_or(1);
+    let cell = Arc::new(SnapshotCell::new());
+    cell.publish(model);
+
+    let batch_probe = BatcherProbe::new();
+    batch_probe.register_gauges(registry, "batcher");
+    batch_probe.register_breaker_gauges(registry, "batcher");
+    let batcher_cfg = BatcherConfig { breaker, ..BatcherConfig::default() };
+
+    let worker = |w: usize| {
+        let mut tracker = BlockStatsTracker::new(block_size);
+        // The fault-injected prediction front: same per-shard batcher and
+        // snapshot view as the online replay, with the injector deciding
+        // each backend call's fate at the current request time. Injected
+        // failures trip this shard's breaker; open-breaker queries fall
+        // back to unclassified (plain-LRU placement).
+        let mut backend =
+            FaultyBackend::new(SnapshotBackend::new(Arc::clone(&cell)), injector.clone());
+        let mut shard_batcher = ShardBatcher::with_probe(batcher_cfg, batch_probe.clone());
+        let mut windows = WindowSeries::new(window_us);
+        for &i in &partitions[w] {
+            let req = &trace[i];
+            let features = tracker.features(
+                req.block,
+                req.kind,
+                req.size,
+                req.affinity,
+                req.recompute_cost,
+                req.time,
+            );
+            backend.set_now(req.time);
+            shard_batcher.note_model_version(backend.inner_mut().version());
+            let predicted = if backend.is_trained() {
+                let stamp = tracker.accesses(req.block);
+                shard_batcher
+                    .predict(&mut backend, req.block, stamp, features, req.time)
+                    .unwrap_or_default()
+            } else {
+                None
+            };
+            let ctx = AccessContext {
+                time: req.time,
+                size: req.size,
+                kind: req.kind,
+                file: req.block.0, // trace blocks are their own files
+                file_width: 1,
+                file_complete: false,
+                affinity: req.affinity,
+                predicted_reuse: predicted,
+                recompute_cost: req.recompute_cost,
+            };
+            let outcome = cache.access_or_insert(req.block, &ctx);
+            tracker.record_access(req.block, 0, req.time);
+            let win = windows.at(req.time);
+            win.requests += 1;
+            win.hits += u64::from(outcome.hit);
+            win.insertions += u64::from(outcome.inserted);
+        }
+        // Drain: with an open breaker the end-of-run flush drops the
+        // stranded queue and accounts it, keeping the conservation
+        // invariant cold == flushed + dropped.
+        let _ = shard_batcher.flush(&mut backend);
+        (cache.stats_of(w), windows.finish())
+    };
+    let per_worker = run_sharded(n, worker);
+
+    let mut stats = ShardStats::default();
+    let mut window_parts = Vec::with_capacity(per_worker.len());
+    for (shard_stats, windows) in per_worker {
+        stats.merge(&shard_stats);
+        window_parts.push(windows);
+    }
+    let windows = merge_series(window_parts);
+
+    // Phase split around the first scripted outage: `pre` is the healthy
+    // baseline, `outage` the degraded plateau, `post` the recovery.
+    let outage = injector.plan().outage_windows().first().copied();
+    let (mut pre_hit, mut outage_hit, mut post_hit) = (0.0, 0.0, 0.0);
+    let mut recovered_after_windows = None;
+    if let Some(o) = outage {
+        let start_idx = o.start.micros() / window_us;
+        let end_idx = o.end.micros() / window_us;
+        pre_hit = phase_hit(&windows, |idx| idx < start_idx);
+        outage_hit = phase_hit(&windows, |idx| (start_idx..=end_idx).contains(&idx));
+        post_hit = phase_hit(&windows, |idx| idx > end_idx);
+        recovered_after_windows = windows
+            .iter()
+            .filter(|(idx, w)| *idx > end_idx && w.requests > 0)
+            .find(|(_, w)| w.hit_ratio() >= pre_hit - RECOVERY_GAP)
+            .map(|(idx, _)| idx - end_idx);
+    } else {
+        pre_hit = stats.hit_ratio();
+    }
+
+    Ok(ServingChaosReport {
+        policy: policy.to_string(),
+        shards: n,
+        stats,
+        windows,
+        window_us,
+        breaker_opens: batch_probe.breaker_opens(),
+        breaker_closes: batch_probe.breaker_closes(),
+        breaker_fallbacks: batch_probe.breaker_fallbacks(),
+        retries: batch_probe.retries(),
+        dropped: batch_probe.dropped(),
+        backend_failures: injector.backend_failures(),
+        outage,
+        pre_hit,
+        outage_hit,
+        post_hit,
+        recovered_after_windows,
+    })
+}
+
+/// What one trainer-arm chaos replay measured.
+#[derive(Debug, Clone)]
+pub struct TrainerChaosReport {
+    /// Merged cache counters of the replay.
+    pub stats: ShardStats,
+    /// What the resilient trainer did (restarts, train errors, staleness).
+    pub trainer: TrainerReport,
+    /// Samples accepted into the channel across all workers.
+    pub samples_sent: u64,
+    /// Samples dropped because the trainer fell behind.
+    pub samples_dropped: u64,
+}
+
+/// The online replay of [`super::online_sharded`] with the crash-surviving
+/// [`trainer_loop_resilient`] as the background trainer: scripted
+/// [`FaultEvent::TrainerCrash`] points lose the in-flight sample buffer
+/// (the pipeline resets) while workers keep serving the last published
+/// snapshot. End-of-run trainer facts land in `registry` as
+/// `trainer.restarts`, `trainer.train_errors` and
+/// `trainer.stale_snapshot_age` (samples consumed after the last publish).
+#[allow(clippy::too_many_arguments)] // mirrors run_online's knob surface
+pub fn run_trainer_chaos(
+    policy: &str,
+    shards: usize,
+    capacity: u64,
+    trace: &[BlockRequest],
+    kernel: KernelKind,
+    cfg: TrainerConfig,
+    injector: &FaultInjector,
+    registry: &MetricsRegistry,
+) -> Result<TrainerChaosReport> {
+    let cache = ShardedCache::from_registry(policy, shards, capacity)
+        .with_context(|| format!("unknown policy {policy:?}"))?;
+    let n = cache.n_shards();
+    let mut partitions: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, req) in trace.iter().enumerate() {
+        partitions[shard_of(req.block, n)].push(i);
+    }
+    let block_size = trace.iter().map(|r| r.size).max().unwrap_or(1);
+    let cell = Arc::new(SnapshotCell::new());
+    let (sender, rx) = sample_channel(SAMPLE_CHANNEL_BOUND);
+    let probe = sender.probe();
+    let master: Mutex<Option<SampleSender>> = Mutex::new(Some(sender));
+    let batch_probe = BatcherProbe::new();
+
+    let worker = |w: usize| {
+        let tx = master.lock().expect("sender mutex poisoned").as_ref().cloned();
+        let mut tracker = BlockStatsTracker::new(block_size);
+        let mut backend = SnapshotBackend::new(Arc::clone(&cell));
+        let mut shard_batcher =
+            ShardBatcher::with_probe(BatcherConfig::default(), batch_probe.clone());
+        for &i in &partitions[w] {
+            let req = &trace[i];
+            let features = tracker.features(
+                req.block,
+                req.kind,
+                req.size,
+                req.affinity,
+                req.recompute_cost,
+                req.time,
+            );
+            if let Some(tx) = &tx {
+                tx.emit(features, req.reused_later);
+            }
+            shard_batcher.note_model_version(backend.version());
+            let predicted = if backend.is_trained() {
+                let stamp = tracker.accesses(req.block);
+                shard_batcher
+                    .predict(&mut backend, req.block, stamp, features, req.time)
+                    .unwrap_or_default()
+            } else {
+                None
+            };
+            let ctx = AccessContext {
+                time: req.time,
+                size: req.size,
+                kind: req.kind,
+                file: req.block.0, // trace blocks are their own files
+                file_width: 1,
+                file_complete: false,
+                affinity: req.affinity,
+                predicted_reuse: predicted,
+                recompute_cost: req.recompute_cost,
+            };
+            cache.access_or_insert(req.block, &ctx);
+            tracker.record_access(req.block, 0, req.time);
+        }
+        if backend.is_trained() {
+            let _ = shard_batcher.flush(&mut backend);
+        }
+        cache.stats_of(w)
+    };
+
+    let trainer_cell = Arc::clone(&cell);
+    let trainer_injector = injector.clone();
+    let (per_worker, trainer) = run_sharded_with_background(
+        n,
+        worker,
+        move || {
+            let mut backend = RustBackend::new(kernel);
+            let mut pipeline = TrainingPipeline::new(cfg.min_samples, cfg.retrain_interval);
+            trainer_loop_resilient(
+                rx,
+                &mut backend,
+                &mut pipeline,
+                &trainer_cell,
+                Some(&trainer_injector),
+            )
+        },
+        || {
+            master.lock().expect("sender mutex poisoned").take();
+        },
+    );
+    let trainer = trainer.context("resilient background trainer failed")?;
+
+    let mut stats = ShardStats::default();
+    for shard_stats in per_worker {
+        stats.merge(&shard_stats);
+    }
+    // End-of-run trainer facts, readable at export time. The staleness
+    // gauge is in samples: how far behind the published snapshot the
+    // trainer's consumed stream ended up.
+    let (restarts, train_errors, stale) =
+        (trainer.restarts, trainer.train_errors, trainer.stale_samples);
+    registry.gauge("trainer.restarts", move || restarts);
+    registry.gauge("trainer.train_errors", move || train_errors);
+    registry.gauge("trainer.stale_snapshot_age", move || stale);
+
+    Ok(TrainerChaosReport {
+        stats,
+        trainer,
+        samples_sent: probe.sent(),
+        samples_dropped: probe.dropped(),
+    })
+}
+
+/// Render serving-arm chaos reports as a table (the `repro chaos` output).
+pub fn render(reports: &[ServingChaosReport]) -> Table {
+    let mut t = Table::new(vec![
+        "policy",
+        "shards",
+        "hit ratio",
+        "pre",
+        "outage",
+        "post",
+        "recovered (w)",
+        "opens",
+        "closes",
+        "fallbacks",
+        "retries",
+        "dropped",
+        "inj fails",
+    ]);
+    for r in reports {
+        t.add_row(vec![
+            r.policy.clone(),
+            r.shards.to_string(),
+            fmt_f(r.hit_ratio(), 4),
+            fmt_f(r.pre_hit, 4),
+            fmt_f(r.outage_hit, 4),
+            fmt_f(r.post_hit, 4),
+            r.recovered_after_windows.map_or_else(|| "-".to_string(), |w| w.to_string()),
+            r.breaker_opens.to_string(),
+            r.breaker_closes.to_string(),
+            r.breaker_fallbacks.to_string(),
+            r.retries.to_string(),
+            r.dropped.to_string(),
+            r.backend_failures.to_string(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::online::TrainerConfig;
+    use crate::experiments::online_sharded::{run_online, TrainerMode};
+    use crate::obs::DEFAULT_WINDOW_US;
+    use crate::util::bytes::MB;
+    use crate::workload::fig3_trace;
+
+    const BLOCK: u64 = 64 * MB;
+
+    #[test]
+    fn all_clear_breaker_off_matches_fault_free_frozen_replay() {
+        let trace = fig3_trace(BLOCK, 5);
+        for shards in [1usize, 4] {
+            let baseline = run_online(
+                "h-svm-lru",
+                shards,
+                8 * BLOCK,
+                &trace,
+                TrainerMode::Frozen,
+                KernelKind::Rbf,
+                TrainerConfig::default(),
+                BatcherConfig::default(),
+            )
+            .unwrap();
+            let injector = FaultInjector::new(FaultPlan::all_clear(5));
+            let chaos = run_serving_chaos(
+                "h-svm-lru",
+                shards,
+                8 * BLOCK,
+                &trace,
+                KernelKind::Rbf,
+                BreakerConfig::off(),
+                &injector,
+                &MetricsRegistry::disabled(),
+                DEFAULT_WINDOW_US,
+            )
+            .unwrap();
+            assert_eq!(chaos.stats, baseline.stats, "{shards}-shard all-clear parity");
+            assert_eq!(chaos.breaker_opens, 0);
+            assert_eq!(chaos.breaker_fallbacks, 0);
+            assert_eq!(chaos.backend_failures, 0);
+            assert_eq!(chaos.outage, None);
+        }
+    }
+
+    #[test]
+    fn outage_opens_breaker_falls_back_and_recovers() {
+        let trace = fig3_trace(BLOCK, 7);
+        let plan = default_serving_plan(&trace, 7);
+        let run = || {
+            let injector = FaultInjector::new(plan.clone());
+            run_serving_chaos(
+                "h-svm-lru",
+                4,
+                8 * BLOCK,
+                &trace,
+                KernelKind::Rbf,
+                breaker_for_trace(&trace),
+                &injector,
+                &MetricsRegistry::disabled(),
+                DEFAULT_WINDOW_US,
+            )
+            .unwrap()
+        };
+        let r = run();
+        assert_eq!(r.stats.requests, trace.len() as u64, "every request replayed");
+        assert!(r.backend_failures >= 1, "outage injected: {r:?}");
+        assert!(r.breaker_opens >= 1, "breaker tripped: {r:?}");
+        assert!(r.breaker_fallbacks >= 1, "open breaker served fallbacks: {r:?}");
+        assert!(r.breaker_closes >= 1, "probe closed the breaker after the outage: {r:?}");
+        assert!(
+            r.recovered_after_windows.is_some(),
+            "hit ratio must return to within {RECOVERY_GAP} of pre-outage: {r:?}"
+        );
+        // Same plan, same seed: byte-identical rerun.
+        let again = run();
+        assert_eq!(r.stats, again.stats);
+        assert_eq!(r.windows, again.windows);
+        assert_eq!(r.breaker_opens, again.breaker_opens);
+        assert_eq!(r.breaker_fallbacks, again.breaker_fallbacks);
+    }
+
+    #[test]
+    fn degraded_hit_ratio_stays_within_gap_of_plain_lru() {
+        let trace = fig3_trace(BLOCK, 7);
+        let plan = default_serving_plan(&trace, 7);
+        let svm_injector = FaultInjector::new(plan.clone());
+        let svm = run_serving_chaos(
+            "h-svm-lru",
+            4,
+            8 * BLOCK,
+            &trace,
+            KernelKind::Rbf,
+            breaker_for_trace(&trace),
+            &svm_injector,
+            &MetricsRegistry::disabled(),
+            DEFAULT_WINDOW_US,
+        )
+        .unwrap();
+        let lru_injector = FaultInjector::new(plan);
+        let lru = run_serving_chaos(
+            "lru",
+            4,
+            8 * BLOCK,
+            &trace,
+            KernelKind::Rbf,
+            breaker_for_trace(&trace),
+            &lru_injector,
+            &MetricsRegistry::disabled(),
+            DEFAULT_WINDOW_US,
+        )
+        .unwrap();
+        // Under classifier outage H-SVM-LRU degrades to the unclassified
+        // cold path, so it must stay within a bounded gap of plain LRU.
+        assert!(
+            svm.outage_hit + 0.05 >= lru.outage_hit,
+            "degraded H-SVM-LRU within 5pp of LRU: {} vs {}",
+            svm.outage_hit,
+            lru.outage_hit
+        );
+    }
+
+    #[test]
+    fn trainer_chaos_restarts_and_keeps_serving() {
+        let trace = fig3_trace(BLOCK, 7);
+        let plan = FaultPlan::all_clear(7)
+            .with_event(FaultEvent::TrainerCrash { after_samples: trace.len() as u64 / 2 });
+        let injector = FaultInjector::new(plan);
+        let registry = MetricsRegistry::new();
+        let report = run_trainer_chaos(
+            "h-svm-lru",
+            4,
+            8 * BLOCK,
+            &trace,
+            KernelKind::Rbf,
+            TrainerConfig::default(),
+            &injector,
+            &registry,
+        )
+        .unwrap();
+        assert_eq!(report.stats.requests, trace.len() as u64);
+        assert_eq!(report.trainer.restarts, 1, "{:?}", report.trainer);
+        assert_eq!(injector.trainer_crashes(), 1);
+        assert_eq!(report.samples_sent, trace.len() as u64);
+        let gauges = registry.gauge_values();
+        let gauge = |name: &str| {
+            gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap()
+        };
+        assert_eq!(gauge("trainer.restarts"), 1);
+        assert_eq!(gauge("trainer.stale_snapshot_age"), report.trainer.stale_samples);
+    }
+}

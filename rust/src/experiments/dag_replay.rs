@@ -36,12 +36,14 @@ use crate::config::ClusterConfig;
 use crate::hdfs::topology::Placement;
 use crate::hdfs::{reader, BlockId, BlockKind, DataNodeId, ReadSource};
 use crate::mapreduce::job::JobId;
-use crate::mapreduce::scheduler::{AccessRequest, BlockRead, BlockService, Scheduler};
+use crate::mapreduce::scheduler::{
+    AccessRequest, BlockRead, BlockService, FailureModel, Scheduler,
+};
 use crate::obs::{
     merge_audits, merge_series, AuditEntry, EvictionAudit, HistHandle, MetricClass,
     MetricsRegistry, ObsConfig, RunObservations, WindowSeries,
 };
-use crate::sim::{SimDuration, SimTime};
+use crate::sim::{FaultInjector, FaultPlan, SimDuration, SimTime};
 use crate::svm::kernel::KernelKind;
 use crate::util::fasthash::IdHashMap;
 use crate::util::rng::Pcg64;
@@ -52,6 +54,21 @@ use super::sharded_replay::{classify_trace, classify_trace_scored};
 
 /// Stage-output block ids start here — far above any suite's input range.
 const OUTPUT_BLOCK_BASE: u64 = 1 << 40;
+
+/// Chaos wiring of one DAG replay: the shared [`FaultPlan`] (its node
+/// down/up events are applied at wave boundaries), an optional
+/// [`FaultInjector`] tallying the applied transitions, and the scheduler's
+/// attempt-level [`FailureModel`] — one cause, one seed, so node death and
+/// task-attempt failures replay together deterministically.
+#[derive(Clone)]
+pub struct DagChaos<'p> {
+    /// The scripted faults (only node events apply to the DAG replay).
+    pub plan: &'p FaultPlan,
+    /// Tally sink for applied node transitions (optional).
+    pub injector: Option<&'p FaultInjector>,
+    /// Map-attempt failure injection for [`Scheduler::run_jobs`].
+    pub failures: FailureModel,
+}
 
 /// What one DAG replay measured.
 #[derive(Debug, Clone)]
@@ -134,6 +151,13 @@ pub struct DagBlockService<'a> {
     log: Vec<BlockRequest>,
     recompute_events: u64,
     recompute_seconds: f64,
+    /// DataNodes currently down (scripted [`FaultEvent::NodeDown`]
+    /// (`crate::sim::FaultEvent`) applied at wave boundaries). Empty on
+    /// fault-free replays, in which case every liveness check below is
+    /// vacuously true and behavior is identical to the pre-chaos service.
+    dead: HashSet<u32>,
+    /// Cached blocks dropped because their cache node died.
+    dead_cache_drops: u64,
     /// Telemetry, present only on observed passes (see [`run_dag_observed`]).
     obs: Option<DagObs>,
 }
@@ -150,6 +174,8 @@ impl<'a> DagBlockService<'a> {
             log: Vec::new(),
             recompute_events: 0,
             recompute_seconds: 0.0,
+            dead: HashSet::new(),
+            dead_cache_drops: 0,
             obs: None,
         }
     }
@@ -264,6 +290,48 @@ impl<'a> DagBlockService<'a> {
     pub fn recompute_charges(&self) -> (u64, f64) {
         (self.recompute_events, self.recompute_seconds)
     }
+
+    /// Apply one scripted node transition. A death drops every cached
+    /// block whose cache node is the dying one (its memory is gone) — in
+    /// ascending block order, so replays stay deterministic — and hides
+    /// the node's disk replicas from [`read_block`](BlockService); a
+    /// revival restores replica visibility (the cache restarts cold).
+    /// Returns how many cached blocks were dropped. Idempotent per state.
+    pub fn apply_node_event(&mut self, node: u32, down: bool) -> u64 {
+        if !down {
+            self.dead.remove(&node);
+            return 0;
+        }
+        if !self.dead.insert(node) {
+            return 0;
+        }
+        let mut doomed: Vec<BlockId> = self
+            .meta
+            .keys()
+            .copied()
+            .filter(|&b| self.cache_node(b).0 == node && self.cache.contains(b))
+            .collect();
+        doomed.sort_unstable_by_key(|b| b.0);
+        let mut dropped = 0u64;
+        for b in doomed {
+            if self.cache.remove(b) {
+                dropped += 1;
+            }
+        }
+        self.dead_cache_drops += dropped;
+        if let Some(obs) = &mut self.obs {
+            // Keep the occupancy series truthful; node losses are not
+            // policy evictions, so the cause counters stay untouched (the
+            // injector's node_downs gauge carries the event itself).
+            obs.resident = obs.resident.saturating_sub(dropped);
+        }
+        dropped
+    }
+
+    /// Cached blocks lost to node deaths so far.
+    pub fn dead_cache_drops(&self) -> u64 {
+        self.dead_cache_drops
+    }
 }
 
 impl BlockService for DagBlockService<'_> {
@@ -274,9 +342,19 @@ impl BlockService for DagBlockService<'_> {
         now: SimTime,
         req: &AccessRequest,
     ) -> BlockRead {
-        let (size, recompute_s, local_replica, any_replica) = {
+        // Liveness-aware replica view: replicas on dead nodes are
+        // unreachable. With no scripted node faults `dead` is empty and
+        // this reduces exactly to the pre-chaos computation.
+        let (size, recompute_s, local_replica, any_live_replica, has_replicas) = {
             let m = self.meta.get(&block).expect("read of unregistered block");
-            (m.size, m.recompute_s, m.replicas.contains(&reader_node), !m.replicas.is_empty())
+            let live = |dn: &DataNodeId| !self.dead.contains(&dn.0);
+            (
+                m.size,
+                m.recompute_s,
+                m.replicas.iter().any(|dn| *dn == reader_node && live(dn)),
+                m.replicas.iter().any(live),
+                !m.replicas.is_empty(),
+            )
         };
         let hit = self.access(block, now, req.affinity);
         let (source, service) = if hit {
@@ -286,11 +364,12 @@ impl BlockService for DagBlockService<'_> {
                 ReadSource::CacheRemote
             };
             (src, reader::service_time(self.cfg, src, size))
-        } else if !any_replica {
-            // Cache-only intermediate evicted before this read: the
-            // producing stage's work is re-run — the full recompute cost
-            // lands on the read's completion time (and the re-inserted
-            // block was already handled by `access`).
+        } else if !has_replicas {
+            // Cache-only intermediate evicted before this read — by the
+            // replacement policy or with a dead cache node: the producing
+            // stage's work is re-run — the full recompute cost lands on
+            // the read's completion time (and the re-inserted block was
+            // already handled by `access`).
             self.recompute_events += 1;
             self.recompute_seconds += recompute_s;
             let service = SimDuration::from_secs_f64(recompute_s);
@@ -298,6 +377,11 @@ impl BlockService for DagBlockService<'_> {
                 obs.windows.at(now).recompute_cost_us += service.micros();
             }
             (ReadSource::DiskLocal, service)
+        } else if !any_live_replica {
+            // Disk-backed input whose every replica is on a dead node:
+            // model the NameNode-driven re-replication fetch as a remote
+            // disk read (the data still exists outside the dead set).
+            (ReadSource::DiskRemote, reader::service_time(self.cfg, ReadSource::DiskRemote, size))
         } else {
             let src = if local_replica { ReadSource::DiskLocal } else { ReadSource::DiskRemote };
             (src, reader::service_time(self.cfg, src, size))
@@ -309,12 +393,23 @@ impl BlockService for DagBlockService<'_> {
         if self.cache.contains(block) {
             Some(self.cache_node(block))
         } else {
-            self.meta.get(&block).and_then(|m| m.replicas.first().copied())
+            self.meta
+                .get(&block)
+                .and_then(|m| m.replicas.iter().find(|dn| !self.dead.contains(&dn.0)).copied())
         }
     }
 
     fn replica_nodes(&self, block: BlockId) -> Vec<DataNodeId> {
-        self.meta.get(&block).map(|m| m.replicas.clone()).unwrap_or_default()
+        self.meta
+            .get(&block)
+            .map(|m| {
+                m.replicas
+                    .iter()
+                    .copied()
+                    .filter(|dn| !self.dead.contains(&dn.0))
+                    .collect()
+            })
+            .unwrap_or_default()
     }
 
     fn block_size(&self, block: BlockId) -> u64 {
@@ -334,8 +429,67 @@ pub fn run_dag_pass(
     seed: u64,
     classes: &[Option<bool>],
 ) -> Result<(DagReport, Vec<BlockRequest>)> {
-    let (report, log, _) = run_dag_pass_inner(policy, cfg, shards, capacity, jobs, seed, classes, None)?;
+    let (report, log, _) =
+        run_dag_pass_inner(policy, cfg, shards, capacity, jobs, seed, classes, None, None)?;
     Ok((report, log))
+}
+
+/// [`run_dag_pass`] under a chaos script: the plan's node down/up events
+/// are applied at wave boundaries (cached copies die with their node,
+/// replicas go dark), and the scheduler injects map-attempt failures from
+/// the same seed. An all-clear plan with [`FailureModel::none`] is
+/// bit-identical to [`run_dag_pass`].
+#[allow(clippy::too_many_arguments)] // run_dag_pass's knobs + the chaos wiring
+pub fn run_dag_pass_chaos(
+    policy: &str,
+    cfg: &ClusterConfig,
+    shards: usize,
+    capacity: u64,
+    jobs: &[DagJob],
+    seed: u64,
+    classes: &[Option<bool>],
+    chaos: &DagChaos<'_>,
+) -> Result<(DagReport, Vec<BlockRequest>)> {
+    let (report, log, _) = run_dag_pass_inner(
+        policy,
+        cfg,
+        shards,
+        capacity,
+        jobs,
+        seed,
+        classes,
+        None,
+        Some(chaos),
+    )?;
+    Ok((report, log))
+}
+
+/// Classify-once DAG replay under a chaos script ([`run_dag`]'s chaos
+/// twin): both passes replay under the same plan and failure model, so
+/// the training log is index-aligned with the classified pass.
+#[allow(clippy::too_many_arguments)] // run_dag's knobs + the chaos wiring
+pub fn run_dag_chaos(
+    policy: &str,
+    cfg: &ClusterConfig,
+    shards: usize,
+    capacity: u64,
+    jobs: &[DagJob],
+    seed: u64,
+    kernel: KernelKind,
+    batch: usize,
+    chaos: &DagChaos<'_>,
+) -> Result<DagReport> {
+    let (report_a, mut trace) =
+        run_dag_pass_chaos(policy, cfg, shards, capacity, jobs, seed, &[], chaos)?;
+    ground_truth_labels(&mut trace);
+    let classes = classify_trace(&trace, kernel, batch)?;
+    if classes.iter().all(|c| c.is_none()) {
+        return Ok(report_a);
+    }
+    let (mut report, _) =
+        run_dag_pass_chaos(policy, cfg, shards, capacity, jobs, seed, &classes, chaos)?;
+    report.trained = true;
+    Ok(report)
 }
 
 /// [`run_dag_pass`] with optional telemetry attached to the service; the
@@ -351,6 +505,7 @@ fn run_dag_pass_inner(
     seed: u64,
     classes: &[Option<bool>],
     observe: Option<(&MetricsRegistry, ObsConfig)>,
+    chaos: Option<&DagChaos<'_>>,
 ) -> Result<(DagReport, Vec<BlockRequest>, Option<(WindowSeries, Vec<PendingEvict>)>)> {
     let cache = ShardedCache::from_registry(policy, shards, capacity)
         .ok_or_else(|| anyhow!("unknown policy {policy:?}"))?;
@@ -370,7 +525,14 @@ fn run_dag_pass_inner(
 
     let levels: Vec<Vec<usize>> = jobs.iter().map(|j| j.levels()).collect();
     let max_level = levels.iter().flat_map(|l| l.iter().copied()).max().unwrap_or(0);
-    let scheduler = Scheduler::new(cfg);
+    let mut scheduler = Scheduler::new(cfg);
+    if let Some(c) = chaos {
+        scheduler = scheduler.with_failures(c.failures);
+    }
+    // Scripted node transitions, applied at wave boundaries in (at, node)
+    // order once the wave clock passes them.
+    let node_events = chaos.map(|c| c.plan.node_events()).unwrap_or_default();
+    let mut next_node_event = 0usize;
 
     let mut outputs: HashMap<(usize, usize), Vec<BlockId>> = HashMap::new();
     let mut stage_finish: HashMap<(usize, usize), SimTime> = HashMap::new();
@@ -379,6 +541,18 @@ fn run_dag_pass_inner(
     let mut wave_start = SimTime::ZERO;
 
     for wave in 0..=max_level {
+        // Apply every node transition the wave clock has passed. Wave
+        // granularity keeps the replay deterministic: the event lands at
+        // the same boundary no matter how the previous wave's attempts
+        // interleaved.
+        while next_node_event < node_events.len() && node_events[next_node_event].0 <= wave_start {
+            let (_, node, down) = node_events[next_node_event];
+            next_node_event += 1;
+            svc.apply_node_event(node, down);
+            if let Some(inj) = chaos.and_then(|c| c.injector) {
+                inj.note_node_event(down);
+            }
+        }
         // Collect this wave's runnable stages across all jobs.
         let mut specs = Vec::new();
         let mut owners: Vec<(usize, usize)> = Vec::new();
@@ -543,6 +717,7 @@ pub fn run_dag_observed(
         seed,
         used,
         Some((registry, obs_cfg)),
+        None,
     )?;
     report.trained = trained;
     let (mut windows, pending) = obs_raw.expect("observed pass returns its state");
@@ -777,6 +952,81 @@ mod tests {
         assert!(gauges
             .iter()
             .any(|(n, v)| n == "dag.recompute_events" && *v == report.recompute_events));
+    }
+
+    #[test]
+    fn all_clear_chaos_is_bit_identical_to_plain_pass() {
+        let cfg = small_cfg();
+        let jobs = diamond_suite(2, 3, 10);
+        let plan = FaultPlan::all_clear(7);
+        let chaos = DagChaos { plan: &plan, injector: None, failures: FailureModel::none() };
+        let (plain, plain_log) =
+            run_dag_pass("h-svm-lru", &cfg, 2, 6 * cfg.block_size, &jobs, 7, &[]).unwrap();
+        let (under, under_log) =
+            run_dag_pass_chaos("h-svm-lru", &cfg, 2, 6 * cfg.block_size, &jobs, 7, &[], &chaos)
+                .unwrap();
+        assert_eq!(plain.stats, under.stats);
+        assert_eq!(plain.recompute_events, under.recompute_events);
+        assert_eq!(plain.total_job_time_s, under.total_job_time_s);
+        assert_eq!(plain.makespan_s, under.makespan_s);
+        assert_eq!(format!("{plain_log:?}"), format!("{under_log:?}"), "identical access logs");
+    }
+
+    #[test]
+    fn node_death_drops_replicas_and_costs_time() {
+        use crate::sim::FaultEvent;
+        let cfg = small_cfg();
+        let jobs = diamond_suite(2, 3, 10);
+        let capacity = 64 * cfg.block_size;
+        let (baseline, _) = run_dag_pass("lru", &cfg, 2, capacity, &jobs, 7, &[]).unwrap();
+        // Kill two nodes at t=0 (applied at the very first wave boundary:
+        // the event clock is `at <= wave_start`, and wave 0 starts at
+        // SimTime::ZERO) so input replicas on them go dark for the whole
+        // replay and every intermediate cached on them is dropped.
+        let plan = FaultPlan::all_clear(7)
+            .with_event(FaultEvent::NodeDown { node: 0, at: SimTime::ZERO })
+            .with_event(FaultEvent::NodeDown { node: 1, at: SimTime::ZERO });
+        let injector = FaultInjector::new(plan.clone());
+        let chaos =
+            DagChaos { plan: &plan, injector: Some(&injector), failures: FailureModel::none() };
+        let (under, _) =
+            run_dag_pass_chaos("lru", &cfg, 2, capacity, &jobs, 7, &[], &chaos).unwrap();
+        assert_eq!(injector.node_downs(), 2, "both deaths applied at a wave boundary");
+        assert!(
+            under.total_job_time_s >= baseline.total_job_time_s,
+            "dead nodes cannot make jobs faster: {} vs {}",
+            under.total_job_time_s,
+            baseline.total_job_time_s
+        );
+        // The same chaos pass replays bit-identically (shared seed).
+        let (again, _) =
+            run_dag_pass_chaos("lru", &cfg, 2, capacity, &jobs, 7, &[], &chaos).unwrap();
+        assert_eq!(under.stats, again.stats);
+        assert_eq!(under.recompute_events, again.recompute_events);
+        assert_eq!(under.total_job_time_s, again.total_job_time_s);
+    }
+
+    #[test]
+    fn scheduler_failures_share_the_plan_seed_and_stay_deterministic() {
+        let cfg = small_cfg();
+        let jobs = diamond_suite(2, 3, 10);
+        let plan = FaultPlan::all_clear(0xFA11);
+        let failures = FailureModel::with_rates(0.35, 0.1, plan.seed());
+        let chaos = DagChaos { plan: &plan, injector: None, failures };
+        let (a, _) =
+            run_dag_pass_chaos("lru", &cfg, 1, 8 * cfg.block_size, &jobs, 3, &[], &chaos).unwrap();
+        let (b, _) =
+            run_dag_pass_chaos("lru", &cfg, 1, 8 * cfg.block_size, &jobs, 3, &[], &chaos).unwrap();
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.total_job_time_s, b.total_job_time_s);
+        let (clean, _) =
+            run_dag_pass("lru", &cfg, 1, 8 * cfg.block_size, &jobs, 3, &[]).unwrap();
+        assert!(
+            a.total_job_time_s > clean.total_job_time_s,
+            "injected attempt failures must cost time: {} vs {}",
+            a.total_job_time_s,
+            clean.total_job_time_s
+        );
     }
 
     #[test]

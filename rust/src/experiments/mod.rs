@@ -14,8 +14,10 @@
 //! | `admission` | eviction-policy × admission-policy sweep (pollution control) |
 //! | `online_sharded` | frozen vs. online-learning shard-parallel replay matrix |
 //! | `dag_replay` | multi-stage DAG jobs with recompute-cost charging |
+//! | `chaos`   | fault-injected replays: breaker degradation, trainer crashes, node death |
 
 pub mod admission;
+pub mod chaos;
 pub mod common;
 pub mod dag_replay;
 pub mod fig3;
@@ -29,5 +31,9 @@ pub mod simulate;
 pub mod table5;
 pub mod table7;
 
+pub use chaos::{
+    breaker_for_trace, default_serving_plan, run_serving_chaos, run_trainer_chaos,
+    ServingChaosReport, TrainerChaosReport,
+};
 pub use common::{make_coordinator, replay_trace_two_pass, run_repeated_job, run_workload, Scenario, WorkloadRun};
-pub use dag_replay::{run_dag, run_dag_pass, DagReport};
+pub use dag_replay::{run_dag, run_dag_chaos, run_dag_pass, run_dag_pass_chaos, DagChaos, DagReport};

@@ -6,7 +6,7 @@
 //! management): DataNodes only execute cache/uncache commands and confirm via
 //! cache reports.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 use super::block::{BlockId, BlockInfo, DataNodeId};
 use super::datanode::DataNode;
@@ -31,6 +31,11 @@ pub struct NameNode {
     replicas: HashMap<BlockId, Vec<DataNodeId>>,
     /// cache metadata: caching DataNode per block.
     cache_map: HashMap<BlockId, DataNodeId>,
+    /// Liveness metadata: DataNodes currently marked dead (heartbeat
+    /// timeout in real HDFS, scripted [`FaultEvent::NodeDown`]
+    /// (`crate::sim::FaultEvent`) here). A `BTreeSet` so iteration order —
+    /// and everything derived from it — is deterministic.
+    dead: BTreeSet<u32>,
     placement: Placement,
 }
 
@@ -40,6 +45,7 @@ impl NameNode {
             files: FileRegistry::new(),
             replicas: HashMap::new(),
             cache_map: HashMap::new(),
+            dead: BTreeSet::new(),
             placement: Placement::new(n_datanodes, replication, rng),
         }
     }
@@ -72,19 +78,72 @@ impl NameNode {
 
     /// Resolve a block per the paper's query flow: cache metadata first,
     /// then the *first* replica from block metadata ("we choose the first
-    /// one to reduce search time").
+    /// one to reduce search time"). Dead-node aware: a cached copy on a
+    /// dead node is skipped (falling through to disk replicas), dead
+    /// replicas are skipped, and a block whose every replica is dead
+    /// resolves to `None` — the caller must recompute or fail the read.
     pub fn locate(&self, block: BlockId) -> Option<BlockLocation> {
         if let Some(&dn) = self.cache_map.get(&block) {
-            return Some(BlockLocation::Cached(dn));
+            if !self.dead.contains(&dn.0) {
+                return Some(BlockLocation::Cached(dn));
+            }
         }
         self.replicas
             .get(&block)
-            .and_then(|r| r.first())
+            .and_then(|r| r.iter().find(|dn| !self.dead.contains(&dn.0)))
             .map(|&dn| BlockLocation::OnDisk(dn))
     }
 
     pub fn replicas_of(&self, block: BlockId) -> &[DataNodeId] {
         self.replicas.get(&block).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// The block's replicas on live DataNodes, in placement order.
+    pub fn live_replicas_of(&self, block: BlockId) -> Vec<DataNodeId> {
+        self.replicas_of(block)
+            .iter()
+            .copied()
+            .filter(|dn| !self.dead.contains(&dn.0))
+            .collect()
+    }
+
+    /// Mark a DataNode dead (scripted failure / missed heartbeats). Cached
+    /// copies on the node are gone with its memory: the cache metadata is
+    /// invalidated and the orphaned block ids are returned — sorted, so
+    /// callers invalidate their own views in a deterministic order.
+    /// Idempotent: re-killing a dead node orphans nothing new.
+    pub fn mark_dead(&mut self, dn: DataNodeId) -> Vec<BlockId> {
+        if !self.dead.insert(dn.0) {
+            return Vec::new();
+        }
+        let mut orphaned: Vec<BlockId> = self
+            .cache_map
+            .iter()
+            .filter(|(_, &node)| node == dn)
+            .map(|(&b, _)| b)
+            .collect();
+        orphaned.sort_unstable_by_key(|b| b.0);
+        for b in &orphaned {
+            self.cache_map.remove(b);
+        }
+        orphaned
+    }
+
+    /// Mark a DataNode alive again (recovery). Its disk replicas become
+    /// visible to [`locate`](Self::locate) immediately; its cache starts
+    /// empty (lost on the way down).
+    pub fn mark_alive(&mut self, dn: DataNodeId) {
+        self.dead.remove(&dn.0);
+    }
+
+    /// Is the DataNode currently marked dead?
+    pub fn is_dead(&self, dn: DataNodeId) -> bool {
+        self.dead.contains(&dn.0)
+    }
+
+    /// DataNodes currently marked dead, ascending.
+    pub fn dead_nodes(&self) -> Vec<DataNodeId> {
+        self.dead.iter().map(|&n| DataNodeId(n)).collect()
     }
 
     pub fn is_cached(&self, block: BlockId) -> bool {
@@ -183,6 +242,34 @@ mod tests {
     fn locate_unknown_block_is_none() {
         let (nn, _) = cluster();
         assert_eq!(nn.locate(BlockId(999)), None);
+    }
+
+    #[test]
+    fn dead_node_skips_cache_and_replicas() {
+        let (mut nn, mut dns) = cluster();
+        let fid = nn.register_file("f", 128 * MB, 128 * MB, BlockKind::Input, &mut dns);
+        let b = nn.files.blocks_of(fid)[0];
+        let reps: Vec<DataNodeId> = nn.replicas_of(b).to_vec();
+        assert_eq!(reps.len(), 2);
+        nn.note_cached(b, reps[0]);
+        // Kill the caching node: its cached copy is orphaned, locate falls
+        // through to the surviving disk replica.
+        let orphaned = nn.mark_dead(reps[0]);
+        assert_eq!(orphaned, vec![b]);
+        assert!(nn.is_dead(reps[0]));
+        assert!(!nn.is_cached(b), "cache metadata dropped with the node");
+        assert_eq!(nn.locate(b), Some(BlockLocation::OnDisk(reps[1])));
+        assert_eq!(nn.live_replicas_of(b), vec![reps[1]]);
+        // Re-killing is idempotent.
+        assert_eq!(nn.mark_dead(reps[0]), Vec::new());
+        // Kill the second replica too: the block is unreachable.
+        nn.mark_dead(reps[1]);
+        assert_eq!(nn.locate(b), None, "all replicas dead");
+        assert!(nn.live_replicas_of(b).is_empty());
+        // Recovery restores disk visibility (first replica again).
+        nn.mark_alive(reps[0]);
+        assert_eq!(nn.locate(b), Some(BlockLocation::OnDisk(reps[0])));
+        assert_eq!(nn.dead_nodes(), vec![reps[1]]);
     }
 
     #[test]

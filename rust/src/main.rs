@@ -230,7 +230,9 @@ fn run(args: &[String]) -> Result<()> {
                 use h_svm_lru::cache::ShardedCache;
                 let cache =
                     ShardedCache::from_registry(&policy, max_shards, blocks * block_size)
-                        .expect("policy validated above");
+                        .ok_or_else(|| {
+                            anyhow::anyhow!("unknown policy {policy:?} for the reader arm")
+                        })?;
                 // Wall-clock exception: replay wall time is printed, never
                 // exported — see clippy.toml and rust/tests/lint_invariants.rs.
                 #[allow(clippy::disallowed_methods)]
@@ -398,7 +400,12 @@ fn run(args: &[String]) -> Result<()> {
                             && r.mode == TrainerMode::Online
                             && r.shards == max_shards
                     })
-                    .expect("matrix covers the requested cell");
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "online matrix is missing the {policy} x online x \
+                             {max_shards}-shard cell"
+                        )
+                    })?;
                 println!(
                     "\n{name}, {policy} @ {max_shards} shards online: {} snapshot \
                      publish(es), {} samples ({} dropped), {:.0} samples/s",
@@ -436,7 +443,12 @@ fn run(args: &[String]) -> Result<()> {
                                 && r.mode == TrainerMode::Frozen
                                 && r.shards == max_shards
                         })
-                        .expect("matrix covers the frozen cell");
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "online matrix is missing the {policy} x frozen x \
+                                 {max_shards}-shard cell"
+                            )
+                        })?;
                     anyhow::ensure!(
                         frozen.stats == baseline.stats
                             && frozen.per_shard == baseline.per_shard,
@@ -539,12 +551,11 @@ fn run(args: &[String]) -> Result<()> {
             // cost-blind LRU on total simulated job time for the same cell.
             if smoke {
                 let cell = |name: &str| {
-                    reports
-                        .iter()
-                        .find(|r| r.policy == name)
-                        .expect("smoke sweep covers lru and h-svm-lru")
+                    reports.iter().find(|r| r.policy == name).ok_or_else(|| {
+                        anyhow::anyhow!("dag smoke sweep is missing the {name} cell")
+                    })
                 };
-                let (lru, svm) = (cell("lru"), cell("h-svm-lru"));
+                let (lru, svm) = (cell("lru")?, cell("h-svm-lru")?);
                 println!(
                     "\nsmoke: h-svm-lru {:.1}s vs lru {:.1}s total job time \
                      ({} vs {} recomputes)",
@@ -588,6 +599,205 @@ fn run(args: &[String]) -> Result<()> {
                 doc.meta_u64("jobs", n_jobs as u64);
                 doc.meta_u64("seed", seed);
                 doc.meta_u64("requests", report.stats.requests);
+                emit_metrics(path, &registry, doc)?;
+            }
+            Ok(())
+        }
+        "chaos" => {
+            use h_svm_lru::coordinator::online::TrainerConfig;
+            use h_svm_lru::experiments::{chaos, dag_replay};
+            use h_svm_lru::mapreduce::FailureModel;
+            use h_svm_lru::obs::{MetricsRegistry, RunObservations, DEFAULT_WINDOW_US};
+            use h_svm_lru::sim::{FaultEvent, FaultInjector, FaultPlan, SimTime};
+            use h_svm_lru::svm::KernelKind;
+            use h_svm_lru::util::bytes::MB;
+            use h_svm_lru::workload::diamond_suite;
+
+            let svm_cfg = cli.svm_config()?;
+            // Same constraint as `repro online`: the chaos arms pretrain
+            // and (in the trainer arm) retrain through exported model
+            // snapshots, which the PJRT path cannot provide.
+            anyhow::ensure!(
+                svm_cfg.backend == "rust",
+                "`repro chaos` requires --svm-backend rust (the {} backend cannot \
+                 export Send model snapshots)",
+                svm_cfg.backend
+            );
+            let kernel = KernelKind::from_name(&svm_cfg.kernel)
+                .ok_or_else(|| anyhow::anyhow!("bad kernel name {:?}", svm_cfg.kernel))?;
+            let seed = cli.seed()?;
+            let shards = cli.shards(4)?;
+            let blocks: u64 =
+                cli.flag("cache-blocks").map(|s| s.parse()).transpose()?.unwrap_or(8);
+            let n_jobs = cli.jobs(2)?;
+            let smoke = cli.switch("smoke");
+            let policy = cli.policy("h-svm-lru")?;
+            let block_size = 64 * MB;
+            let capacity = blocks * block_size;
+            let trace = h_svm_lru::workload::fig3_trace(block_size, seed);
+
+            // Serving arm: scripted classifier outage + latency spike; the
+            // per-shard circuit breaker degrades H-SVM-LRU to the
+            // unclassified cold path and the probe closes it afterwards.
+            // The LRU control replays the identical plan through its own
+            // injector so the two tallies stay independent.
+            let plan = chaos::default_serving_plan(&trace, seed);
+            let breaker = chaos::breaker_for_trace(&trace);
+            let registry = MetricsRegistry::with_enabled(cli.flag("metrics-out").is_some());
+            let svm_injector = FaultInjector::new(plan.clone());
+            svm_injector.register_gauges(&registry, "faults");
+            let svm = chaos::run_serving_chaos(
+                &policy, shards, capacity, &trace, kernel, breaker, &svm_injector,
+                &registry, DEFAULT_WINDOW_US,
+            )?;
+            let lru_injector = FaultInjector::new(plan.clone());
+            let lru = chaos::run_serving_chaos(
+                "lru", shards, capacity, &trace, kernel, breaker, &lru_injector,
+                &MetricsRegistry::disabled(), DEFAULT_WINDOW_US,
+            )?;
+            let reports = [svm, lru];
+            emit(
+                &format!(
+                    "Chaos replay on fig3 ({} requests, cache = {blocks} blocks of 64MB, \
+                     {shards} shard(s), seed {seed})",
+                    trace.len()
+                ),
+                &chaos::render(&reports),
+                csv,
+            );
+            let [svm, lru] = reports;
+            if let Some(o) = svm.outage {
+                println!(
+                    "\nscripted outage {} .. {}: {} injected failures, breaker opened \
+                     {}x / closed {}x, {} fallback queries",
+                    o.start, o.end, svm.backend_failures, svm.breaker_opens,
+                    svm.breaker_closes, svm.breaker_fallbacks,
+                );
+            }
+            match svm.recovered_after_windows {
+                Some(w) => println!(
+                    "recovery: hit ratio back within {:.0}pp of pre-outage {} window(s) \
+                     after the outage end",
+                    chaos::RECOVERY_GAP * 100.0, w
+                ),
+                None => println!("recovery: hit ratio never returned to the pre-outage band"),
+            }
+
+            // Trainer arm: one scripted crash mid-stream; the resilient
+            // loop restarts (buffer lost, snapshot kept).
+            let trainer_plan = FaultPlan::all_clear(seed).with_event(
+                FaultEvent::TrainerCrash { after_samples: trace.len() as u64 / 2 },
+            );
+            let trainer_injector = FaultInjector::new(trainer_plan);
+            let trainer = chaos::run_trainer_chaos(
+                &policy, shards, capacity, &trace, kernel, TrainerConfig::default(),
+                &trainer_injector, &registry,
+            )?;
+            println!(
+                "\ntrainer arm: {} crash(es) injected, {} restart(s), {} train error(s), \
+                 {} publish(es), {} samples stale at exit",
+                trainer_injector.trainer_crashes(),
+                trainer.trainer.restarts,
+                trainer.trainer.train_errors,
+                trainer.trainer.publishes,
+                trainer.trainer.stale_samples,
+            );
+
+            // DAG arm: two DataNodes die at t=0 (replicas dark, cached
+            // copies dropped at the wave boundary) plus seeded map-attempt
+            // failures from the same plan seed.
+            let (cluster_cfg, _) = h_svm_lru::config::load(cli.flag("config"))?;
+            let suite = diamond_suite(n_jobs, 4, 8);
+            let dag_capacity = blocks.max(1) * cluster_cfg.block_size;
+            let clean = dag_replay::run_dag(
+                &policy, &cluster_cfg, shards, dag_capacity, &suite, seed, kernel, 64,
+            )?;
+            let node_plan = FaultPlan::all_clear(seed)
+                .with_event(FaultEvent::NodeDown { node: 0, at: SimTime::ZERO })
+                .with_event(FaultEvent::NodeDown { node: 1, at: SimTime::ZERO });
+            let dag_injector = FaultInjector::new(node_plan.clone());
+            let dag_chaos = dag_replay::DagChaos {
+                plan: &node_plan,
+                injector: Some(&dag_injector),
+                failures: FailureModel::with_rates(0.05, 0.02, node_plan.seed()),
+            };
+            let under = dag_replay::run_dag_chaos(
+                &policy, &cluster_cfg, shards, dag_capacity, &suite, seed, kernel, 64,
+                &dag_chaos,
+            )?;
+            println!(
+                "\ndag arm: {} node death(s) applied, total job time {:.1}s under chaos \
+                 vs {:.1}s clean ({} vs {} recomputes)",
+                dag_injector.node_downs(),
+                under.total_job_time_s,
+                clean.total_job_time_s,
+                under.recompute_events,
+                clean.recompute_events,
+            );
+
+            // The acceptance checks (CI smoke): open -> fallback -> close,
+            // bounded degradation vs plain LRU, recovery within the run,
+            // trainer restart, and node death actually costing time.
+            if smoke {
+                anyhow::ensure!(svm.breaker_opens >= 1, "outage never opened the breaker");
+                anyhow::ensure!(
+                    svm.breaker_fallbacks >= 1,
+                    "open breaker never served a fallback query"
+                );
+                anyhow::ensure!(
+                    svm.breaker_closes >= 1,
+                    "probe never closed the breaker after the outage"
+                );
+                anyhow::ensure!(
+                    svm.outage_hit + 0.05 >= lru.outage_hit,
+                    "degraded H-SVM-LRU must stay within 5pp of plain LRU under the \
+                     identical outage: {:.4} vs {:.4}",
+                    svm.outage_hit,
+                    lru.outage_hit
+                );
+                anyhow::ensure!(
+                    svm.recovered_after_windows.is_some(),
+                    "hit ratio never recovered to within {:.0}pp of the pre-outage \
+                     baseline after the breaker closed",
+                    chaos::RECOVERY_GAP * 100.0
+                );
+                anyhow::ensure!(
+                    trainer.trainer.restarts >= 1,
+                    "injected trainer crash never restarted the resilient loop"
+                );
+                anyhow::ensure!(
+                    dag_injector.node_downs() >= 1,
+                    "scripted node deaths were never applied at a wave boundary"
+                );
+                anyhow::ensure!(
+                    under.total_job_time_s >= clean.total_job_time_s,
+                    "dead nodes and failed attempts cannot make jobs faster: \
+                     {:.2}s vs {:.2}s",
+                    under.total_job_time_s,
+                    clean.total_job_time_s
+                );
+                println!(
+                    "\nsmoke ok: breaker opened -> degraded within bound -> recovered; \
+                     trainer restarted; node death charged"
+                );
+            }
+            // Telemetry arm: the serving-arm windowed series plus every
+            // registered gauge (injection tallies, breaker counters,
+            // trainer facts) as deterministic JSONL.
+            if let Some(path) = cli.flag("metrics-out") {
+                let obs = RunObservations {
+                    windows: svm.windows.clone(),
+                    audit: Vec::new(),
+                    audit_seen: 0,
+                    audit_every: 1,
+                };
+                let mut doc = obs.into_doc(DEFAULT_WINDOW_US);
+                doc.meta_str("cmd", "chaos");
+                doc.meta_str("policy", policy.as_str());
+                doc.meta_u64("shards", shards as u64);
+                doc.meta_u64("seed", seed);
+                doc.meta_u64("requests", svm.stats.requests);
+                doc.meta_u64("breaker_opens", svm.breaker_opens);
                 emit_metrics(path, &registry, doc)?;
             }
             Ok(())

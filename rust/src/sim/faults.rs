@@ -1,0 +1,530 @@
+//! Deterministic fault injection: seeded chaos plans on the simulated
+//! clock.
+//!
+//! A [`FaultPlan`] scripts *when* things break — classifier-backend
+//! outages and latency spikes as simulated-time windows, trainer crashes
+//! as sample-count thresholds, DataNode down/up events as timestamped
+//! transitions. Everything is keyed on the request clock
+//! ([`SimTime`]), never the wall clock, so the same plan replayed under
+//! the same seed produces byte-identical results at any shard count —
+//! the same discipline as the rest of the simulator (DESIGN.md §2).
+//!
+//! A [`FaultInjector`] is the shared, cloneable runtime view of one plan:
+//! it answers "does this backend call fail *now*?" and counts every
+//! injected fault in relaxed atomics (through the `util::sync` facade, so
+//! the loom/lint rules of rust/tests/lint_invariants.rs hold by
+//! construction). [`FaultyBackend`] wraps any [`SvmBackend`] with the
+//! injector: the replay worker stamps it with the current request time
+//! and injected outages surface as ordinary `Err` results on the
+//! prediction path — exactly what the batcher's circuit breaker
+//! ([`crate::coordinator::batcher::BreakerConfig`]) is built to absorb.
+//!
+//! An **all-clear plan** ([`FaultPlan::all_clear`]) injects nothing: the
+//! injector answers [`BackendFate::Healthy`] unconditionally and the
+//! wrapped backend is behaviorally identical to the bare one —
+//! property-tested in rust/tests/property_faults.rs.
+
+use std::sync::Arc;
+
+use crate::runtime::SvmBackend;
+use crate::sim::{SimDuration, SimTime};
+use crate::svm::features::FeatureVec;
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+
+/// A half-open simulated-time interval `[start, end)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultWindow {
+    pub start: SimTime,
+    pub end: SimTime,
+}
+
+impl FaultWindow {
+    /// Window from `start` (inclusive) to `end` (exclusive).
+    pub fn new(start: SimTime, end: SimTime) -> Self {
+        FaultWindow { start, end }
+    }
+
+    /// Does the window cover simulated instant `t`?
+    pub fn contains(&self, t: SimTime) -> bool {
+        self.start <= t && t < self.end
+    }
+
+    /// Does the window intersect `[a, b)`?
+    pub fn overlaps(&self, a: SimTime, b: SimTime) -> bool {
+        self.start < b && a < self.end
+    }
+}
+
+/// One scripted fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultEvent {
+    /// Every classifier-backend call inside the window fails.
+    BackendOutage(FaultWindow),
+    /// Backend calls inside the window succeed but cost `extra` simulated
+    /// latency (accounted by [`FaultyBackend::injected_latency`]).
+    BackendSlow { window: FaultWindow, extra: SimDuration },
+    /// The background trainer crashes (and restarts) once it has consumed
+    /// this many samples. Count-based rather than time-based because the
+    /// sample stream carries no timestamps — and a count is every bit as
+    /// deterministic.
+    TrainerCrash { after_samples: u64 },
+    /// DataNode `node` dies at `at` (replicas unreachable, cached copies
+    /// lost).
+    NodeDown { node: u32, at: SimTime },
+    /// DataNode `node` rejoins at `at`.
+    NodeUp { node: u32, at: SimTime },
+}
+
+/// A deterministic, seeded fault schedule. The seed is identity metadata
+/// (carried into the metrics export) — the events themselves are the
+/// script.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    seed: u64,
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing. Replays under an all-clear plan are
+    /// bit-identical to replays with no injection at all.
+    pub fn all_clear(seed: u64) -> Self {
+        FaultPlan { seed, events: Vec::new() }
+    }
+
+    /// Builder-style event append.
+    pub fn with_event(mut self, event: FaultEvent) -> Self {
+        self.events.push(event);
+        self
+    }
+
+    /// The plan's identity seed.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The scripted events, in insertion order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// True when the plan scripts no faults at all.
+    pub fn is_all_clear(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Is the classifier backend down at simulated instant `t`?
+    pub fn backend_down(&self, t: SimTime) -> bool {
+        self.events.iter().any(|e| matches!(e, FaultEvent::BackendOutage(w) if w.contains(t)))
+    }
+
+    /// Injected backend latency active at `t` (sum of overlapping spikes).
+    pub fn backend_extra_latency(&self, t: SimTime) -> SimDuration {
+        let micros: u64 = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::BackendSlow { window, extra } if window.contains(t) => {
+                    Some(extra.micros())
+                }
+                _ => None,
+            })
+            .sum();
+        SimDuration::from_micros(micros)
+    }
+
+    /// Sample-count thresholds at which the trainer crashes, ascending.
+    pub fn trainer_crash_points(&self) -> Vec<u64> {
+        let mut points: Vec<u64> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::TrainerCrash { after_samples } => Some(*after_samples),
+                _ => None,
+            })
+            .collect();
+        points.sort_unstable();
+        points
+    }
+
+    /// All scripted node transitions as `(at, node, down)`, sorted by
+    /// `(at, node, up-before-down)` so replaying them in order is
+    /// deterministic regardless of plan construction order.
+    pub fn node_events(&self) -> Vec<(SimTime, u32, bool)> {
+        let mut evs: Vec<(SimTime, u32, bool)> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::NodeDown { node, at } => Some((*at, *node, true)),
+                FaultEvent::NodeUp { node, at } => Some((*at, *node, false)),
+            _ => None,
+            })
+            .collect();
+        evs.sort_unstable_by_key(|&(at, node, down)| (at, node, down));
+        evs
+    }
+
+    /// The scripted backend outage windows, in insertion order.
+    pub fn outage_windows(&self) -> Vec<FaultWindow> {
+        self.events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::BackendOutage(w) => Some(*w),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// What the injector decided about one backend call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendFate {
+    /// Call proceeds untouched.
+    Healthy,
+    /// Call proceeds but costs this much extra simulated latency.
+    Slow(SimDuration),
+    /// Call fails.
+    Fail,
+}
+
+/// Shared injection tallies (explicit ctor: loom atomics lack `Default`).
+#[derive(Debug)]
+struct InjectionCounters {
+    backend_failures: AtomicU64,
+    backend_slowdowns: AtomicU64,
+    trainer_crashes: AtomicU64,
+    node_downs: AtomicU64,
+    node_ups: AtomicU64,
+}
+
+impl InjectionCounters {
+    fn new() -> Self {
+        InjectionCounters {
+            backend_failures: AtomicU64::new(0),
+            backend_slowdowns: AtomicU64::new(0),
+            trainer_crashes: AtomicU64::new(0),
+            node_downs: AtomicU64::new(0),
+            node_ups: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Cloneable runtime view of one [`FaultPlan`]: consults the script and
+/// tallies every injected fault. Clones share the plan and the counters,
+/// so one injector can serve every shard worker plus the trainer and the
+/// DAG service while the driver reads a single set of totals.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    plan: Arc<FaultPlan>,
+    counters: Arc<InjectionCounters>,
+}
+
+impl FaultInjector {
+    /// An injector over `plan` with fresh zeroed tallies.
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultInjector { plan: Arc::new(plan), counters: Arc::new(InjectionCounters::new()) }
+    }
+
+    /// The underlying plan.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Decide (and tally) the fate of a backend call at simulated `now`.
+    pub fn backend_fate(&self, now: SimTime) -> BackendFate {
+        if self.plan.backend_down(now) {
+            self.counters.backend_failures.fetch_add(1, Ordering::Relaxed);
+            return BackendFate::Fail;
+        }
+        let extra = self.plan.backend_extra_latency(now);
+        if extra > SimDuration::ZERO {
+            self.counters.backend_slowdowns.fetch_add(1, Ordering::Relaxed);
+            return BackendFate::Slow(extra);
+        }
+        BackendFate::Healthy
+    }
+
+    /// Tally one injected trainer crash.
+    pub fn note_trainer_crash(&self) {
+        self.counters.trainer_crashes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Tally one applied node transition.
+    pub fn note_node_event(&self, down: bool) {
+        if down {
+            self.counters.node_downs.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.counters.node_ups.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Backend calls failed by injection.
+    pub fn backend_failures(&self) -> u64 {
+        self.counters.backend_failures.load(Ordering::Relaxed)
+    }
+
+    /// Backend calls slowed by injection.
+    pub fn backend_slowdowns(&self) -> u64 {
+        self.counters.backend_slowdowns.load(Ordering::Relaxed)
+    }
+
+    /// Trainer crashes injected.
+    pub fn trainer_crashes(&self) -> u64 {
+        self.counters.trainer_crashes.load(Ordering::Relaxed)
+    }
+
+    /// Node-down transitions applied.
+    pub fn node_downs(&self) -> u64 {
+        self.counters.node_downs.load(Ordering::Relaxed)
+    }
+
+    /// Node-up transitions applied.
+    pub fn node_ups(&self) -> u64 {
+        self.counters.node_ups.load(Ordering::Relaxed)
+    }
+
+    /// Expose every injection tally as a `{prefix}.…` gauge — the probe
+    /// pattern of [`crate::coordinator::batcher::BatcherProbe`]: the
+    /// accessors stay the programmatic view, the gauges put the same
+    /// cells in the `--metrics-out` JSONL.
+    pub fn register_gauges(&self, registry: &crate::obs::MetricsRegistry, prefix: &str) {
+        let gauge = |name: &str, read: fn(&InjectionCounters) -> &AtomicU64| {
+            let counters = Arc::clone(&self.counters);
+            registry.gauge(&format!("{prefix}.{name}"), move || {
+                read(&counters).load(Ordering::Relaxed)
+            });
+        };
+        gauge("backend_failures", |c| &c.backend_failures);
+        gauge("backend_slowdowns", |c| &c.backend_slowdowns);
+        gauge("trainer_crashes", |c| &c.trainer_crashes);
+        gauge("node_downs", |c| &c.node_downs);
+        gauge("node_ups", |c| &c.node_ups);
+    }
+}
+
+/// An [`SvmBackend`] wrapper that injects the plan's backend faults.
+///
+/// The owning worker stamps it with the current request time
+/// ([`FaultyBackend::set_now`]) before each prediction; calls made during
+/// a scripted outage fail with an ordinary `Err`, calls under a latency
+/// spike succeed while accruing simulated delay into
+/// [`FaultyBackend::injected_latency`]. With an all-clear plan every call
+/// delegates untouched.
+#[derive(Debug)]
+pub struct FaultyBackend<B> {
+    inner: B,
+    injector: FaultInjector,
+    now: SimTime,
+    injected_latency: SimDuration,
+}
+
+impl<B> FaultyBackend<B> {
+    /// Wrap `inner` under `injector`'s plan.
+    pub fn new(inner: B, injector: FaultInjector) -> Self {
+        FaultyBackend { inner, injector, now: SimTime::ZERO, injected_latency: SimDuration::ZERO }
+    }
+
+    /// Advance the injection clock to the current request time.
+    pub fn set_now(&mut self, now: SimTime) {
+        self.now = now;
+    }
+
+    /// Total simulated latency injected into successful calls.
+    pub fn injected_latency(&self) -> SimDuration {
+        self.injected_latency
+    }
+
+    /// The wrapped backend.
+    pub fn inner_mut(&mut self) -> &mut B {
+        &mut self.inner
+    }
+}
+
+impl<B: SvmBackend> SvmBackend for FaultyBackend<B> {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn train(&mut self, ds: &crate::svm::Dataset) -> anyhow::Result<()> {
+        if let BackendFate::Fail = self.injector.backend_fate(self.now) {
+            anyhow::bail!("injected backend outage at {}us (train)", self.now.micros());
+        }
+        self.inner.train(ds)
+    }
+
+    fn decision_batch(&mut self, queries: &[FeatureVec]) -> anyhow::Result<Vec<f32>> {
+        match self.injector.backend_fate(self.now) {
+            BackendFate::Fail => {
+                anyhow::bail!("injected backend outage at {}us", self.now.micros())
+            }
+            BackendFate::Slow(extra) => {
+                self.injected_latency = self.injected_latency + extra;
+                self.inner.decision_batch(queries)
+            }
+            BackendFate::Healthy => self.inner.decision_batch(queries),
+        }
+    }
+
+    fn is_trained(&self) -> bool {
+        self.inner.is_trained()
+    }
+
+    fn export_model(&self) -> Option<crate::svm::smo::SmoModel> {
+        self.inner.export_model()
+    }
+
+    fn import_model(&mut self, model: crate::svm::smo::SmoModel) -> anyhow::Result<()> {
+        self.inner.import_model(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::Result;
+    use crate::svm::features::N_FEATURES;
+
+    struct OkBackend {
+        calls: u64,
+    }
+
+    impl SvmBackend for OkBackend {
+        fn name(&self) -> &'static str {
+            "ok"
+        }
+        fn train(&mut self, _ds: &crate::svm::Dataset) -> Result<()> {
+            Ok(())
+        }
+        fn decision_batch(&mut self, q: &[FeatureVec]) -> Result<Vec<f32>> {
+            self.calls += 1;
+            Ok(vec![1.0; q.len()])
+        }
+        fn is_trained(&self) -> bool {
+            true
+        }
+    }
+
+    fn fv() -> FeatureVec {
+        [0.0f32; N_FEATURES]
+    }
+
+    fn secs(s: f64) -> SimTime {
+        SimTime::from_secs_f64(s)
+    }
+
+    #[test]
+    fn all_clear_plan_injects_nothing() {
+        let plan = FaultPlan::all_clear(7);
+        assert!(plan.is_all_clear());
+        let inj = FaultInjector::new(plan);
+        for t in [0.0, 1.0, 1e6] {
+            assert_eq!(inj.backend_fate(secs(t)), BackendFate::Healthy);
+        }
+        assert_eq!(inj.backend_failures(), 0);
+        assert_eq!(inj.backend_slowdowns(), 0);
+    }
+
+    #[test]
+    fn outage_window_fails_calls_inside_only() {
+        let plan = FaultPlan::all_clear(7)
+            .with_event(FaultEvent::BackendOutage(FaultWindow::new(secs(10.0), secs(20.0))));
+        assert!(!plan.is_all_clear());
+        let inj = FaultInjector::new(plan);
+        assert_eq!(inj.backend_fate(secs(9.9)), BackendFate::Healthy);
+        assert_eq!(inj.backend_fate(secs(10.0)), BackendFate::Fail);
+        assert_eq!(inj.backend_fate(secs(19.9)), BackendFate::Fail);
+        assert_eq!(inj.backend_fate(secs(20.0)), BackendFate::Healthy, "half-open interval");
+        assert_eq!(inj.backend_failures(), 2);
+    }
+
+    #[test]
+    fn latency_spikes_sum_and_tally() {
+        let w = FaultWindow::new(secs(0.0), secs(5.0));
+        let plan = FaultPlan::all_clear(1)
+            .with_event(FaultEvent::BackendSlow { window: w, extra: SimDuration::from_micros(100) })
+            .with_event(FaultEvent::BackendSlow { window: w, extra: SimDuration::from_micros(50) });
+        let inj = FaultInjector::new(plan);
+        match inj.backend_fate(secs(1.0)) {
+            BackendFate::Slow(d) => assert_eq!(d.micros(), 150),
+            other => panic!("expected Slow, got {other:?}"),
+        }
+        assert_eq!(inj.backend_slowdowns(), 1);
+    }
+
+    #[test]
+    fn faulty_backend_fails_during_outage_and_recovers() {
+        let plan = FaultPlan::all_clear(3)
+            .with_event(FaultEvent::BackendOutage(FaultWindow::new(secs(1.0), secs(2.0))));
+        let mut be = FaultyBackend::new(OkBackend { calls: 0 }, FaultInjector::new(plan));
+        be.set_now(secs(0.5));
+        assert!(be.decision_batch(&[fv()]).is_ok());
+        be.set_now(secs(1.5));
+        let err = be.decision_batch(&[fv()]).unwrap_err();
+        assert!(err.to_string().contains("injected backend outage"), "{err}");
+        be.set_now(secs(2.5));
+        assert!(be.decision_batch(&[fv()]).is_ok());
+        assert_eq!(be.inner_mut().calls, 2, "outage call never reached the inner backend");
+    }
+
+    #[test]
+    fn faulty_backend_accrues_injected_latency() {
+        let plan = FaultPlan::all_clear(3).with_event(FaultEvent::BackendSlow {
+            window: FaultWindow::new(secs(0.0), secs(10.0)),
+            extra: SimDuration::from_micros(250),
+        });
+        let mut be = FaultyBackend::new(OkBackend { calls: 0 }, FaultInjector::new(plan));
+        be.set_now(secs(1.0));
+        assert!(be.decision_batch(&[fv()]).is_ok());
+        be.set_now(secs(2.0));
+        assert!(be.decision_batch(&[fv()]).is_ok());
+        assert_eq!(be.injected_latency().micros(), 500);
+    }
+
+    #[test]
+    fn node_events_sort_deterministically() {
+        let plan = FaultPlan::all_clear(0)
+            .with_event(FaultEvent::NodeUp { node: 2, at: secs(30.0) })
+            .with_event(FaultEvent::NodeDown { node: 2, at: secs(10.0) })
+            .with_event(FaultEvent::NodeDown { node: 1, at: secs(10.0) });
+        let evs = plan.node_events();
+        assert_eq!(
+            evs,
+            vec![
+                (secs(10.0), 1, true),
+                (secs(10.0), 2, true),
+                (secs(30.0), 2, false),
+            ]
+        );
+    }
+
+    #[test]
+    fn trainer_crash_points_sorted() {
+        let plan = FaultPlan::all_clear(0)
+            .with_event(FaultEvent::TrainerCrash { after_samples: 500 })
+            .with_event(FaultEvent::TrainerCrash { after_samples: 100 });
+        assert_eq!(plan.trainer_crash_points(), vec![100, 500]);
+    }
+
+    #[test]
+    fn injector_gauges_mirror_accessors() {
+        let registry = crate::obs::MetricsRegistry::new();
+        let plan = FaultPlan::all_clear(0)
+            .with_event(FaultEvent::BackendOutage(FaultWindow::new(secs(0.0), secs(1.0))));
+        let inj = FaultInjector::new(plan);
+        inj.register_gauges(&registry, "faults");
+        let _ = inj.backend_fate(secs(0.5));
+        inj.note_trainer_crash();
+        inj.note_node_event(true);
+        let gauges = registry.gauge_values();
+        let get = |name: &str| {
+            gauges
+                .iter()
+                .find(|(n, _)| n == &format!("faults.{name}"))
+                .map(|(_, v)| *v)
+                .unwrap_or(u64::MAX)
+        };
+        assert_eq!(get("backend_failures"), 1);
+        assert_eq!(get("trainer_crashes"), 1);
+        assert_eq!(get("node_downs"), 1);
+        assert_eq!(get("node_ups"), 0);
+    }
+}

@@ -7,11 +7,13 @@
 //! slots on each node.
 
 pub mod engine;
+pub mod faults;
 pub mod parallel;
 pub mod resource;
 pub mod time;
 
 pub use engine::Engine;
-pub use parallel::run_sharded;
+pub use faults::{BackendFate, FaultEvent, FaultInjector, FaultPlan, FaultWindow, FaultyBackend};
+pub use parallel::{run_sharded, run_sharded_resilient};
 pub use resource::Resource;
 pub use time::{SimDuration, SimTime};

@@ -35,6 +35,30 @@ where
     })
 }
 
+/// Run `worker(0..n_workers)` concurrently on scoped threads, **containing
+/// panics**: each worker's result comes back as `Some(R)`, or `None` if
+/// that worker panicked, instead of aborting the whole call. Partial
+/// per-shard results survive a single bad shard — the graceful-degradation
+/// variant of [`run_sharded`] for chaos runs and other best-effort sweeps.
+///
+/// Unlike [`run_sharded`], a single worker still runs on its own scoped
+/// thread: a panic must be caught at the thread boundary (no
+/// `catch_unwind`, no `unsafe`), so the inline fast path is not available.
+pub fn run_sharded_resilient<R, F>(n_workers: usize, worker: F) -> Vec<Option<R>>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    assert!(n_workers > 0, "run_sharded_resilient with zero workers");
+    std::thread::scope(|scope| {
+        let worker = &worker;
+        let handles: Vec<_> = (0..n_workers)
+            .map(|i| scope.spawn(move || worker(i)))
+            .collect();
+        handles.into_iter().map(|h| h.join().ok()).collect()
+    })
+}
+
 /// Run `worker(0..n_workers)` concurrently *plus* one background task on
 /// the same scope, and return `(worker results, background result)`.
 ///
@@ -249,6 +273,23 @@ mod tests {
                 panic!("monitor saw shutdown");
             },
         );
+    }
+
+    #[test]
+    fn resilient_contains_panics_and_keeps_partial_results() {
+        let out = run_sharded_resilient(4, |i| {
+            if i == 2 {
+                panic!("shard 2 boom");
+            }
+            i * 10
+        });
+        assert_eq!(out, vec![Some(0), Some(10), None, Some(30)]);
+    }
+
+    #[test]
+    fn resilient_single_worker_still_contains() {
+        let out: Vec<Option<u32>> = run_sharded_resilient(1, |_| panic!("boom"));
+        assert_eq!(out, vec![None]);
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Property tests for the fault-injection layer and the classifier
+//! circuit breaker: the scripted state-machine walk, retry-budget and
+//! cold-query conservation, breaker invariants under random fail/heal
+//! scripts, the all-clear + breaker-off parity guarantee, and the
+//! acceptance criterion that a chaos replay exports byte-identical
+//! metrics JSONL under the same seed and plan.
+
+use anyhow::{bail, Result};
+use h_svm_lru::coordinator::{
+    BatcherConfig, BatcherProbe, BreakerConfig, BreakerState, ShardBatcher, TrainerConfig,
+};
+use h_svm_lru::experiments::chaos::{breaker_for_trace, default_serving_plan, run_serving_chaos};
+use h_svm_lru::experiments::online_sharded::{run_online, TrainerMode};
+use h_svm_lru::hdfs::BlockId;
+use h_svm_lru::obs::{MetricsRegistry, RunObservations, DEFAULT_WINDOW_US};
+use h_svm_lru::runtime::SvmBackend;
+use h_svm_lru::sim::{FaultInjector, FaultPlan, SimDuration, SimTime};
+use h_svm_lru::svm::dataset::Dataset;
+use h_svm_lru::svm::features::FeatureVec;
+use h_svm_lru::svm::KernelKind;
+use h_svm_lru::testkit::{forall, Config, VecU64Gen};
+use h_svm_lru::util::bytes::MB;
+use h_svm_lru::workload::fig3_trace;
+
+/// Scriptable backend: healthy it classifies `f[0] > 0.5`, failing it
+/// errors every `decision_batch` — the toggle drives the breaker walk.
+struct FlakyBackend {
+    fail: bool,
+    calls: u64,
+}
+
+impl SvmBackend for FlakyBackend {
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
+
+    fn train(&mut self, _ds: &Dataset) -> Result<()> {
+        Ok(())
+    }
+
+    fn decision_batch(&mut self, queries: &[FeatureVec]) -> Result<Vec<f32>> {
+        self.calls += 1;
+        if self.fail {
+            bail!("scripted backend failure");
+        }
+        Ok(queries.iter().map(|f| if f[0] > 0.5 { 1.0 } else { -1.0 }).collect())
+    }
+
+    fn is_trained(&self) -> bool {
+        true
+    }
+}
+
+fn fv(v: f32) -> FeatureVec {
+    let mut f = FeatureVec::default();
+    f[0] = v;
+    f
+}
+
+/// The full breaker walk, scripted: Closed → (threshold failures) → Open
+/// → fallback without a backend call → HalfOpen probe that fails and
+/// re-opens → a later probe that succeeds and closes. Every transition is
+/// observable through `breaker_state()` and the probe counters.
+#[test]
+fn breaker_walks_closed_open_halfopen_and_back() {
+    let probe = BatcherProbe::new();
+    let breaker = BreakerConfig {
+        failure_threshold: 2,
+        max_retries: 0, // one backend call per flush — exact call accounting
+        probe_after: SimDuration::from_micros(1_000),
+        ..BreakerConfig::on()
+    };
+    let cfg = BatcherConfig { queue_depth: 1, breaker, ..BatcherConfig::default() };
+    let mut b = ShardBatcher::with_probe(cfg, probe.clone());
+    let mut be = FlakyBackend { fail: false, calls: 0 };
+
+    assert_eq!(b.breaker_state(), Some(BreakerState::Closed));
+
+    // Healthy inline flush (queue_depth 1): the caller gets its class.
+    let got = b.predict(&mut be, BlockId(1), 0, fv(0.9), SimTime(0)).unwrap();
+    assert_eq!(got, Some(true));
+    assert_eq!(b.breaker_state(), Some(BreakerState::Closed));
+
+    // Two consecutive flush failures cross the threshold and open it.
+    be.fail = true;
+    assert_eq!(b.predict(&mut be, BlockId(2), 0, fv(0.9), SimTime(10)).unwrap(), None);
+    assert_eq!(b.breaker_state(), Some(BreakerState::Closed), "one failure is below threshold");
+    assert_eq!(b.predict(&mut be, BlockId(3), 0, fv(0.9), SimTime(20)).unwrap(), None);
+    assert_eq!(b.breaker_state(), Some(BreakerState::Open));
+    assert_eq!(probe.breaker_opens(), 1);
+
+    // Open: the cold query falls back without touching the backend.
+    let calls_before = be.calls;
+    assert_eq!(b.predict(&mut be, BlockId(4), 0, fv(0.9), SimTime(30)).unwrap(), None);
+    assert_eq!(be.calls, calls_before, "open breaker must not call the backend");
+    assert_eq!(probe.breaker_fallbacks(), 1);
+    assert_eq!(b.breaker_state(), Some(BreakerState::Open));
+
+    // Past the probe cadence a still-failing probe re-opens immediately
+    // (HalfOpen needs no threshold).
+    assert_eq!(b.predict(&mut be, BlockId(5), 0, fv(0.9), SimTime(1_100)).unwrap(), None);
+    assert_eq!(be.calls, calls_before + 1, "the probe is exactly one backend call");
+    assert_eq!(b.breaker_state(), Some(BreakerState::Open));
+    assert_eq!(probe.breaker_opens(), 2);
+
+    // The re-open restarted the probe clock: shortly after, fall back.
+    assert_eq!(b.predict(&mut be, BlockId(6), 0, fv(0.9), SimTime(1_150)).unwrap(), None);
+    assert_eq!(probe.breaker_fallbacks(), 2);
+
+    // A healthy probe past the cadence closes the breaker and serves.
+    be.fail = false;
+    let got = b.predict(&mut be, BlockId(7), 0, fv(0.9), SimTime(2_200)).unwrap();
+    assert_eq!(got, Some(true));
+    assert_eq!(b.breaker_state(), Some(BreakerState::Closed));
+    assert_eq!(probe.breaker_closes(), 1);
+
+    // Closed again: normal service.
+    let got = b.predict(&mut be, BlockId(8), 0, fv(0.9), SimTime(2_300)).unwrap();
+    assert_eq!(got, Some(true));
+    assert_eq!(be.calls, 6, "1 healthy + 2 failures + 2 probes + 1 healthy");
+}
+
+/// Retry accounting: a persistently failing flush makes exactly
+/// `1 + max_retries` backend calls, tallies `max_retries` retries and
+/// charges `retries × retry_backoff` of simulated backoff — and the
+/// cold-query ledger stays conserved (`cold == flushed + dropped`).
+#[test]
+fn retry_budget_is_conserved_and_charged() {
+    for budget in [1u32, 3] {
+        let probe = BatcherProbe::new();
+        let breaker = BreakerConfig {
+            failure_threshold: 1_000_000, // stay Closed: every flush hits the backend
+            max_retries: budget,
+            retry_backoff: SimDuration::from_micros(500),
+            ..BreakerConfig::on()
+        };
+        let cfg = BatcherConfig { queue_depth: 1, breaker, ..BatcherConfig::default() };
+        let mut b = ShardBatcher::with_probe(cfg, probe.clone());
+        let mut be = FlakyBackend { fail: true, calls: 0 };
+
+        let queries = 5u64;
+        for i in 0..queries {
+            let got = b.predict(&mut be, BlockId(i), 0, fv(0.9), SimTime(i * 10)).unwrap();
+            assert_eq!(got, None, "failed flushes serve the unclassified fallback");
+        }
+        b.flush(&mut be).unwrap(); // empty queue: a no-op for every counter
+
+        assert_eq!(be.calls, queries * (1 + budget as u64), "1 + budget calls per flush");
+        assert_eq!(probe.retries(), queries * budget as u64);
+        assert_eq!(probe.retry_backoff_us(), probe.retries() * 500);
+        assert_eq!(probe.cold_queries(), queries);
+        assert_eq!(probe.flushed_queries(), 0);
+        assert_eq!(probe.dropped(), queries, "failed queries are accounted, not leaked");
+        assert_eq!(probe.cold_queries(), probe.flushed_queries() + probe.dropped());
+        assert_eq!(b.breaker_state(), Some(BreakerState::Closed), "below threshold");
+    }
+}
+
+/// One scripted fail/heal walk; returns every probe counter, the final
+/// breaker state and the backend call count — the whole observable
+/// surface, so equality across two runs is behavioral determinism.
+fn run_breaker_script(script: &[u64]) -> (Vec<u64>, Option<BreakerState>, u64) {
+    let probe = BatcherProbe::new();
+    let breaker = BreakerConfig {
+        failure_threshold: 2,
+        max_retries: 1,
+        probe_after: SimDuration::from_micros(500),
+        ..BreakerConfig::on()
+    };
+    let cfg = BatcherConfig { queue_depth: 1, breaker, ..BatcherConfig::default() };
+    let mut b = ShardBatcher::with_probe(cfg, probe.clone());
+    let mut be = FlakyBackend { fail: false, calls: 0 };
+    let mut now = 0u64;
+    for (i, &v) in script.iter().enumerate() {
+        be.fail = v & 1 == 1;
+        now += (v >> 1) % 3_000;
+        // Fresh block per step: no class-cache hits, every step is a cold
+        // query. With the breaker active a backend error never surfaces.
+        let _ = b
+            .predict(&mut be, BlockId(i as u64), 0, fv(0.9), SimTime(now))
+            .expect("active breaker swallows backend errors");
+    }
+    b.flush(&mut be).expect("end-of-run flush of an empty queue");
+    let counters = vec![
+        probe.cold_queries(),
+        probe.flushed_queries(),
+        probe.dropped(),
+        probe.breaker_opens(),
+        probe.breaker_closes(),
+        probe.breaker_fallbacks(),
+        probe.retries(),
+        probe.retry_backoff_us(),
+    ];
+    (counters, b.breaker_state(), be.calls)
+}
+
+/// Invariants under arbitrary fail/heal scripts: the cold-query ledger is
+/// conserved, closes never outnumber opens, fallbacks are bounded by the
+/// query count, and the whole observable surface is a pure function of
+/// the script (replaying it yields identical counters and state).
+#[test]
+fn breaker_invariants_hold_under_random_scripts() {
+    let gen = VecU64Gen { min_len: 1, max_len: 200, max_value: u64::MAX };
+    forall(&Config { cases: 40, seed: 0xFA17, ..Default::default() }, &gen, |script| {
+        let (counters, state, calls) = run_breaker_script(script);
+        let [cold, flushed, dropped, opens, closes, fallbacks, ..] = counters[..] else {
+            return Err("counter vector shape changed".into());
+        };
+        if cold != flushed + dropped {
+            return Err(format!(
+                "ledger leak: cold {cold} != flushed {flushed} + dropped {dropped}"
+            ));
+        }
+        if closes > opens {
+            return Err(format!("{closes} closes but only {opens} opens"));
+        }
+        if fallbacks + cold != script.len() as u64 {
+            return Err(format!(
+                "every query is either enqueued or a fallback: {fallbacks} + {cold} != {}",
+                script.len()
+            ));
+        }
+        if run_breaker_script(script) != (counters.clone(), state, calls) {
+            return Err("same script, different counters: breaker walk is not deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+/// The parity guarantee behind the whole PR: an all-clear fault plan plus
+/// a disabled breaker must replay bit-identically to the fault-free
+/// frozen path — across seeds and shard counts.
+#[test]
+fn all_clear_plan_with_breaker_off_is_bit_identical_to_fault_free() {
+    for seed in [5u64, 11] {
+        let trace = fig3_trace(64 * MB, seed);
+        for shards in [1usize, 8] {
+            let baseline = run_online(
+                "h-svm-lru",
+                shards,
+                8 * 64 * MB,
+                &trace,
+                TrainerMode::Frozen,
+                KernelKind::Rbf,
+                TrainerConfig::default(),
+                BatcherConfig::default(),
+            )
+            .expect("fault-free frozen replay");
+            let injector = FaultInjector::new(FaultPlan::all_clear(seed));
+            let registry = MetricsRegistry::disabled();
+            let under = run_serving_chaos(
+                "h-svm-lru",
+                shards,
+                8 * 64 * MB,
+                &trace,
+                KernelKind::Rbf,
+                BreakerConfig::off(),
+                &injector,
+                &registry,
+                DEFAULT_WINDOW_US,
+            )
+            .expect("all-clear chaos replay");
+            assert_eq!(
+                under.stats, baseline.stats,
+                "all-clear + breaker-off diverged at seed {seed}, {shards} shard(s)"
+            );
+            assert_eq!(under.breaker_opens, 0);
+            assert_eq!(under.breaker_fallbacks, 0);
+            assert_eq!(injector.backend_failures(), 0, "all-clear plan injected a fault");
+            assert_eq!(injector.backend_slowdowns(), 0);
+        }
+    }
+}
+
+/// The chaos acceptance criterion: two same-seed serving-arm chaos
+/// replays — same plan, same breaker, outage and all — export
+/// byte-identical metrics JSONL, at one shard and at eight.
+#[test]
+fn same_seed_chaos_runs_export_byte_identical_jsonl() {
+    let trace = fig3_trace(64 * MB, 11);
+    for shards in [1usize, 8] {
+        let render = || {
+            let registry = MetricsRegistry::new();
+            let injector = FaultInjector::new(default_serving_plan(&trace, 11));
+            injector.register_gauges(&registry, "faults");
+            let report = run_serving_chaos(
+                "h-svm-lru",
+                shards,
+                8 * 64 * MB,
+                &trace,
+                KernelKind::Rbf,
+                breaker_for_trace(&trace),
+                &injector,
+                &registry,
+                DEFAULT_WINDOW_US,
+            )
+            .expect("chaos replay");
+            let obs = RunObservations {
+                windows: report.windows.clone(),
+                audit: Vec::new(),
+                audit_seen: 0,
+                audit_every: 1,
+            };
+            let mut doc = obs.into_doc(DEFAULT_WINDOW_US);
+            doc.meta_str("cmd", "chaos-property");
+            doc.meta_str("policy", "h-svm-lru");
+            doc.meta_u64("shards", shards as u64);
+            doc.meta_u64("seed", 11);
+            doc.meta_u64("requests", report.stats.requests);
+            doc.meta_u64("breaker_opens", report.breaker_opens);
+            doc.to_jsonl(&registry)
+        };
+        let first = render();
+        let second = render();
+        assert_eq!(first, second, "same-seed chaos JSONL differs at {shards} shard(s)");
+        assert!(first.contains("\"name\":\"batcher.breaker_opens\""), "breaker gauges exported");
+        assert!(first.contains("\"name\":\"faults.backend_failures\""), "injector gauges exported");
+        assert!(first.contains("\"type\":\"window\""));
+    }
+}
