@@ -6,9 +6,9 @@
 
 use h_svm_lru::bench_support::{banner, black_box, Bencher};
 use h_svm_lru::cache::sharded::{shard_of, ShardedCache};
-use h_svm_lru::cache::AccessContext;
+use h_svm_lru::cache::{AccessContext, CacheBuilder};
 use h_svm_lru::hdfs::BlockId;
-use h_svm_lru::sim::parallel::run_sharded;
+use h_svm_lru::sim::parallel::{run_fanout, FanoutOptions};
 use h_svm_lru::sim::SimTime;
 
 const OPS_PER_WORKER: u64 = 10_000;
@@ -17,18 +17,22 @@ const SHARDS: usize = 8;
 const WORKING_SET: u64 = 256;
 
 fn replay(cache: &ShardedCache) {
-    run_sharded(WORKERS, |w| {
-        // Each worker owns a disjoint block range, so no two workers ever
-        // touch the same block and the stream content is identical across
-        // admission policies; residual contention is only shard-routing
-        // overlap, the same for every policy under test.
-        for t in 0..OPS_PER_WORKER {
-            let b = BlockId(w as u64 * WORKING_SET + (t * 31) % WORKING_SET);
-            let ctx = AccessContext::simple(SimTime(t), 1)
-                .with_prediction(shard_of(b, 2) == 0);
-            black_box(cache.access_or_insert(b, &ctx));
-        }
-    });
+    run_fanout(
+        WORKERS,
+        |w| {
+            // Each worker owns a disjoint block range, so no two workers
+            // ever touch the same block and the stream content is identical
+            // across admission policies; residual contention is only
+            // shard-routing overlap, the same for every policy under test.
+            for t in 0..OPS_PER_WORKER {
+                let b = BlockId(w as u64 * WORKING_SET + (t * 31) % WORKING_SET);
+                let ctx = AccessContext::simple(SimTime(t), 1)
+                    .with_prediction(shard_of(b, 2) == 0);
+                black_box(cache.access_or_insert(b, &ctx));
+            }
+        },
+        FanoutOptions::new(),
+    );
 }
 
 fn main() {
@@ -39,9 +43,13 @@ fn main() {
     for policy in ["lru", "h-svm-lru"] {
         for admission in ["always", "tinylfu", "ghost", "svm"] {
             let res = bench.run_per_op(&format!("{policy} + {admission}"), ops, || {
-                let cache =
-                    ShardedCache::from_registry_with_admission(policy, admission, SHARDS, 64)
-                        .unwrap();
+                let cache = CacheBuilder::new()
+                    .policy(policy)
+                    .admission(admission)
+                    .shards(SHARDS)
+                    .capacity(64)
+                    .build()
+                    .expect("cache under test");
                 replay(&cache);
                 black_box(cache.hit_ratio());
             });

@@ -23,7 +23,7 @@
 use h_svm_lru::bench_support::{banner, black_box, write_json, BenchResult, Bencher};
 use h_svm_lru::cache::admission::GhostProbation;
 use h_svm_lru::cache::registry::make_policy;
-use h_svm_lru::cache::{AccessContext, BlockCache};
+use h_svm_lru::cache::{AccessContext, BlockCache, CacheBuilder};
 use h_svm_lru::hdfs::BlockId;
 use h_svm_lru::runtime::{RustBackend, SvmBackend};
 use h_svm_lru::sim::SimTime;
@@ -45,17 +45,17 @@ struct HotPath {
 
 impl HotPath {
     fn new(policy: &str, ghost: bool, resident: u64) -> Self {
-        let policy = make_policy(policy).expect("registry policy");
         let cache = if ghost {
             // Ghost probation sized to the population: every rejected
             // first sighting and every eviction churns the ghost LRU.
-            BlockCache::with_admission(
-                policy,
-                Box::new(GhostProbation::new(resident as usize)),
-                resident,
-            )
+            CacheBuilder::new()
+                .policy(policy)
+                .admission_with(move || Box::new(GhostProbation::new(resident as usize)))
+                .capacity(resident)
+                .build_block_cache()
+                .expect("registry policy")
         } else {
-            BlockCache::new(policy, resident)
+            BlockCache::new(make_policy(policy).expect("registry policy"), resident)
         };
         let mut hp = HotPath { cache, resident, now: 0, cold: 0 };
         // Prefill to capacity so every odd op evicts (two rounds: ghost

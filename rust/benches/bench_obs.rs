@@ -12,16 +12,23 @@
 //! every build, the bench-gate min_ns lines are the durable guard).
 
 use h_svm_lru::bench_support::{banner, black_box, write_json, Bencher};
-use h_svm_lru::cache::ShardedCache;
-use h_svm_lru::experiments::sharded_replay::{
-    classify_trace_scored, replay_on_shards, replay_on_shards_observed,
-};
+use h_svm_lru::cache::{CacheBuilder, ShardedCache};
+use h_svm_lru::experiments::sharded_replay::{classify_trace_scored, drive, ReplayOptions};
 use h_svm_lru::obs::{MetricsRegistry, ObsConfig};
 use h_svm_lru::svm::KernelKind;
 use h_svm_lru::util::bytes::MB;
 use h_svm_lru::workload::fig3_trace;
 
 const SHARDS: usize = 8;
+
+fn svm_cache(capacity: u64) -> ShardedCache {
+    CacheBuilder::new()
+        .policy("h-svm-lru")
+        .shards(SHARDS)
+        .capacity(capacity)
+        .build()
+        .expect("h-svm-lru cache")
+}
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -43,8 +50,9 @@ fn main() {
 
     let res = bench.run_per_op("observed replay, metrics off", ops, || {
         for _ in 0..repeats {
-            let cache = ShardedCache::from_registry("h-svm-lru", SHARDS, capacity).unwrap();
-            black_box(replay_on_shards(&cache, &trace, &classes));
+            let cache = svm_cache(capacity);
+            let opts = ReplayOptions::new().classes(&classes);
+            black_box(drive(&cache, &trace, &opts).expect("replay"));
         }
     });
     println!("{}", res.report());
@@ -53,16 +61,12 @@ fn main() {
 
     let res = bench.run_per_op("observed replay, disabled registry", ops, || {
         for _ in 0..repeats {
-            let cache = ShardedCache::from_registry("h-svm-lru", SHARDS, capacity).unwrap();
+            let cache = svm_cache(capacity);
             let registry = MetricsRegistry::disabled();
-            black_box(replay_on_shards_observed(
-                &cache,
-                &trace,
-                &features,
-                &scores,
-                &registry,
-                ObsConfig::default(),
-            ));
+            let opts = ReplayOptions::new()
+                .scored(&features, &scores)
+                .observe(&registry, ObsConfig::default());
+            black_box(drive(&cache, &trace, &opts).expect("replay"));
         }
     });
     println!("{}", res.report());
@@ -70,16 +74,12 @@ fn main() {
 
     let res = bench.run_per_op("observed replay, metrics on", ops, || {
         for _ in 0..repeats {
-            let cache = ShardedCache::from_registry("h-svm-lru", SHARDS, capacity).unwrap();
+            let cache = svm_cache(capacity);
             let registry = MetricsRegistry::new();
-            black_box(replay_on_shards_observed(
-                &cache,
-                &trace,
-                &features,
-                &scores,
-                &registry,
-                ObsConfig::default(),
-            ));
+            let opts = ReplayOptions::new()
+                .scored(&features, &scores)
+                .observe(&registry, ObsConfig::default());
+            black_box(drive(&cache, &trace, &opts).expect("replay"));
         }
     });
     println!("{}", res.report());

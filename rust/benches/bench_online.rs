@@ -17,6 +17,7 @@
 use std::sync::Arc;
 
 use h_svm_lru::bench_support::{banner, black_box, write_json, Bencher};
+use h_svm_lru::cache::RecencyConfig;
 use h_svm_lru::coordinator::batcher::BatcherConfig;
 use h_svm_lru::coordinator::online::{
     sample_channel, trainer_loop, SnapshotCell, TrainerConfig,
@@ -117,6 +118,7 @@ fn main() {
                 KernelKind::Rbf,
                 TrainerConfig::default(),
                 BatcherConfig::default(),
+                RecencyConfig::default(),
             )
             .expect("online replay");
             black_box(report.hit_ratio());

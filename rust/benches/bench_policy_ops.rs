@@ -4,10 +4,10 @@
 
 use h_svm_lru::bench_support::{banner, black_box, Bencher};
 use h_svm_lru::cache::registry::{make_policy, POLICY_NAMES};
-use h_svm_lru::cache::sharded::{shard_of, ShardedCache};
-use h_svm_lru::cache::{AccessContext, BlockCache};
+use h_svm_lru::cache::sharded::shard_of;
+use h_svm_lru::cache::{AccessContext, BlockCache, CacheBuilder};
 use h_svm_lru::hdfs::BlockId;
-use h_svm_lru::sim::parallel::run_sharded;
+use h_svm_lru::sim::parallel::{run_fanout, FanoutOptions};
 use h_svm_lru::sim::SimTime;
 
 /// Baseline perf trajectory point: 1-shard vs 8-shard throughput with 8
@@ -26,17 +26,27 @@ fn bench_sharded() {
             &format!("lru x{shards} shard(s), {WORKERS} threads"),
             OPS_PER_WORKER * WORKERS as u64,
             || {
-                let cache = ShardedCache::from_registry("lru", shards, 64).unwrap();
-                run_sharded(WORKERS, |w| {
-                    // Each worker walks its own slice of the keyspace so the
-                    // stream is identical regardless of the shard count.
-                    for t in 0..OPS_PER_WORKER {
-                        let b = BlockId((w as u64 * 7919 + t * 31) % WORKING_SET);
-                        let ctx = AccessContext::simple(SimTime(t), 1)
-                            .with_prediction(shard_of(b, 2) == 0);
-                        black_box(cache.access_or_insert(b, &ctx));
-                    }
-                });
+                let cache = CacheBuilder::new()
+                    .policy("lru")
+                    .shards(shards)
+                    .capacity(64)
+                    .build()
+                    .expect("lru cache");
+                run_fanout(
+                    WORKERS,
+                    |w| {
+                        // Each worker walks its own slice of the keyspace so
+                        // the stream is identical regardless of the shard
+                        // count.
+                        for t in 0..OPS_PER_WORKER {
+                            let b = BlockId((w as u64 * 7919 + t * 31) % WORKING_SET);
+                            let ctx = AccessContext::simple(SimTime(t), 1)
+                                .with_prediction(shard_of(b, 2) == 0);
+                            black_box(cache.access_or_insert(b, &ctx));
+                        }
+                    },
+                    FanoutOptions::new(),
+                );
             },
         );
         println!("{}", res.report());

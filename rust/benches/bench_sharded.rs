@@ -12,6 +12,12 @@
 //!    miss-storm scenario replays an all-cold query stream through both
 //!    topologies.
 //!
+//! 3. **Locked LRU touches on hits.** Even a 100%-hit workload used to
+//!    take the shard lock on every access just to move the block in the
+//!    recency order. `ReadHandle` resolves hits against the seqlock
+//!    read-view and batches the touches, so the warm-cache scenario's
+//!    8-thread per-op wall must stay near its 1-thread wall.
+//!
 //! Plus the 1-vs-8-shard replay throughput baseline carried over from
 //! `bench_policy_ops`.
 //!
@@ -23,11 +29,11 @@ use std::sync::Mutex;
 
 use h_svm_lru::bench_support::{banner, black_box, write_json, Bencher};
 use h_svm_lru::cache::sharded::shard_of;
-use h_svm_lru::cache::{AccessContext, ShardedCache};
+use h_svm_lru::cache::{AccessContext, CacheBuilder, RecencyConfig, ShardedCache};
 use h_svm_lru::coordinator::batcher::{BatcherConfig, PredictionBatcher, ShardBatcher};
 use h_svm_lru::hdfs::BlockId;
 use h_svm_lru::runtime::{RustBackend, SvmBackend};
-use h_svm_lru::sim::parallel::{run_sharded, run_sharded_with_monitor};
+use h_svm_lru::sim::parallel::{run_fanout, FanoutOptions};
 use h_svm_lru::sim::SimTime;
 use h_svm_lru::svm::features::{FeatureVec, N_FEATURES};
 use h_svm_lru::svm::kernel::{KernelKind, KernelParams};
@@ -36,6 +42,18 @@ use h_svm_lru::util::rng::Pcg64;
 
 const WORKERS: usize = 8;
 const WORKING_SET: u64 = 256;
+
+/// An `n`-shard lru cache of `capacity` size-1 blocks with the given
+/// recency-buffer config — every scenario below goes through the builder.
+fn lru_cache(shards: usize, capacity: u64, recency: RecencyConfig) -> ShardedCache {
+    CacheBuilder::new()
+        .policy("lru")
+        .shards(shards)
+        .capacity(capacity)
+        .recency(recency)
+        .build()
+        .expect("lru cache")
+}
 
 /// One worker's deterministic slice of the replay stream (identical
 /// regardless of the shard count, like `bench_policy_ops`).
@@ -59,8 +77,8 @@ fn bench_replay_shards(
             &format!("replay lru {shards} shard(s), {WORKERS} threads"),
             ops * WORKERS as u64,
             || {
-                let cache = ShardedCache::from_registry("lru", shards, 64).unwrap();
-                run_sharded(WORKERS, |w| replay_worker(&cache, w, ops));
+                let cache = lru_cache(shards, 64, RecencyConfig::immediate());
+                run_fanout(WORKERS, |w| replay_worker(&cache, w, ops), FanoutOptions::new());
             },
         );
         println!("{}", res.report());
@@ -80,8 +98,8 @@ fn bench_reader_contention(
 ) {
     banner("reader contention — stats()/used() during the 8-thread replay");
     // Cost of one merged lock-free snapshot, uncontended.
-    let cache = ShardedCache::from_registry("lru", 8, 64).unwrap();
-    run_sharded(WORKERS, |w| replay_worker(&cache, w, 1000));
+    let cache = lru_cache(8, 64, RecencyConfig::immediate());
+    run_fanout(WORKERS, |w| replay_worker(&cache, w, 1000), FanoutOptions::new());
     const READS: u64 = 100_000;
     let res = bench.run_per_op("stats snapshot read (merged, 8 shards)", READS, || {
         for _ in 0..READS {
@@ -102,38 +120,44 @@ fn bench_reader_contention(
             &format!("replay 8 shards + {readers} stats readers"),
             ops * WORKERS as u64,
             || {
-                let cache = ShardedCache::from_registry("lru", 8, 64).unwrap();
+                let cache = lru_cache(8, 64, RecencyConfig::immediate());
                 if readers == 0 {
-                    run_sharded(WORKERS, |w| replay_worker(&cache, w, ops));
-                } else {
-                    let (_, snapshots) = run_sharded_with_monitor(
+                    run_fanout(
                         WORKERS,
                         |w| replay_worker(&cache, w, ops),
-                        |done: &std::sync::atomic::AtomicBool| {
-                            std::thread::scope(|scope| {
-                                let handles: Vec<_> = (0..readers)
-                                    .map(|_| {
-                                        scope.spawn(move || {
-                                            let mut n = 0u64;
-                                            while !done
-                                                .load(std::sync::atomic::Ordering::Acquire)
-                                            {
-                                                black_box(cache.stats());
-                                                black_box(cache.used());
-                                                n += 1;
-                                            }
-                                            n
-                                        })
-                                    })
-                                    .collect();
-                                handles
-                                    .into_iter()
-                                    .map(|h| h.join().expect("reader"))
-                                    .sum::<u64>()
-                            })
-                        },
+                        FanoutOptions::new(),
                     );
-                    black_box(snapshots);
+                } else {
+                    let report = run_fanout(
+                        WORKERS,
+                        |w| replay_worker(&cache, w, ops),
+                        FanoutOptions::new().monitor(
+                            |done: &std::sync::atomic::AtomicBool| {
+                                std::thread::scope(|scope| {
+                                    let handles: Vec<_> = (0..readers)
+                                        .map(|_| {
+                                            scope.spawn(move || {
+                                                let mut n = 0u64;
+                                                while !done
+                                                    .load(std::sync::atomic::Ordering::Acquire)
+                                                {
+                                                    black_box(cache.stats());
+                                                    black_box(cache.used());
+                                                    n += 1;
+                                                }
+                                                n
+                                            })
+                                        })
+                                        .collect();
+                                    handles
+                                        .into_iter()
+                                        .map(|h| h.join().expect("reader"))
+                                        .sum::<u64>()
+                                })
+                            },
+                        ),
+                    );
+                    black_box(report.monitor.expect("monitor configured"));
                 }
             },
         );
@@ -144,6 +168,63 @@ fn bench_reader_contention(
     println!(
         "\n4-reader slowdown over 0-reader: {:.2}x (lock-free readers must not serialize writers)",
         walls[1].as_secs_f64() / walls[0].as_secs_f64().max(1e-12)
+    );
+}
+
+/// Worker loop of the hit-path scaling scenario: every access lands on a
+/// resident block, so a [`h_svm_lru::cache::ReadHandle`] resolves it from
+/// the seqlock read-view and only takes the shard lock to drain its
+/// recency buffer (never, at batch 1, it drains inline under the lock).
+fn hit_worker(cache: &ShardedCache, w: usize, ops: u64) {
+    let mut handle = cache.read_handle();
+    for t in 0..ops {
+        let b = BlockId((w as u64 * 7919 + t * 31) % WORKING_SET);
+        let ctx = AccessContext::simple(SimTime(t), 1).with_prediction(shard_of(b, 2) == 0);
+        black_box(handle.access_or_insert(b, &ctx));
+    }
+}
+
+fn bench_hit_path_scaling(
+    bench: &Bencher,
+    ops: u64,
+    results: &mut Vec<h_svm_lru::bench_support::BenchResult>,
+) {
+    banner("lock-free hit path — warm 8-shard cache, batched recency readers");
+    // The cache holds the whole working set, so after the single-threaded
+    // warm-up every access is a hit. At batch 1 each hit still drains its
+    // recency update under the shard lock (the bit-exact legacy path); at
+    // batch 64 hits run lock-free and only every 64th access takes the
+    // lock, so the 8-thread wall per op should stay near the 1-thread wall
+    // (near-linear reader scaling).
+    let mut per_op = Vec::new();
+    for batch in [1usize, 64] {
+        let recency =
+            if batch == 1 { RecencyConfig::immediate() } else { RecencyConfig::default().with_batch(batch) };
+        for threads in [1usize, WORKERS] {
+            let res = bench.run_per_op(
+                &format!("warm hit replay 8 shards, {threads} thread(s), recency batch {batch}"),
+                ops * threads as u64,
+                || {
+                    let cache = lru_cache(8, WORKING_SET, recency);
+                    for b in 0..WORKING_SET {
+                        let ctx = AccessContext::simple(SimTime(b), 1)
+                            .with_prediction(shard_of(BlockId(b), 2) == 0);
+                        black_box(cache.access_or_insert(BlockId(b), &ctx));
+                    }
+                    run_fanout(threads, |w| hit_worker(&cache, w, ops), FanoutOptions::new());
+                },
+            );
+            println!("{}", res.report());
+            per_op.push(res.mean.as_secs_f64());
+            results.push(res);
+        }
+    }
+    // per_op = [batch1/1t, batch1/8t, batch64/1t, batch64/8t].
+    println!(
+        "\n8-thread per-op slowdown over 1-thread: batch 1 {:.2}x, batch 64 {:.2}x \
+         (batched recency must keep the hot hit path near-linear)",
+        per_op[1] / per_op[0].max(1e-12),
+        per_op[3] / per_op[2].max(1e-12),
     );
 }
 
@@ -190,16 +271,20 @@ fn bench_miss_storm(
             let mut backend = RustBackend::new(KernelKind::Linear);
             backend.import_model(model.clone()).expect("import");
             let global = Mutex::new((PredictionBatcher::new(64), backend));
-            run_sharded(WORKERS, |w| {
-                for i in 0..queries {
-                    // Unique block per query: every lookup is cold.
-                    let block = BlockId(w as u64 * queries + i);
-                    let f = query_features(w, i);
-                    let mut g = global.lock().expect("global batcher");
-                    let (batcher, backend) = &mut *g;
-                    black_box(batcher.predict(backend, block, 0, f).expect("predict"));
-                }
-            });
+            run_fanout(
+                WORKERS,
+                |w| {
+                    for i in 0..queries {
+                        // Unique block per query: every lookup is cold.
+                        let block = BlockId(w as u64 * queries + i);
+                        let f = query_features(w, i);
+                        let mut g = global.lock().expect("global batcher");
+                        let (batcher, backend) = &mut *g;
+                        black_box(batcher.predict(backend, block, 0, f).expect("predict"));
+                    }
+                },
+                FanoutOptions::new(),
+            );
         },
     );
     println!("{}", res.report());
@@ -212,20 +297,24 @@ fn bench_miss_storm(
         &format!("miss storm per-shard batchers, {WORKERS} workers"),
         total,
         || {
-            run_sharded(WORKERS, |w| {
-                let mut backend = RustBackend::new(KernelKind::Linear);
-                backend.import_model(model.clone()).expect("import");
-                let mut batcher = ShardBatcher::new(BatcherConfig::default());
-                for i in 0..queries {
-                    let block = BlockId(w as u64 * queries + i);
-                    let f = query_features(w, i);
-                    black_box(
-                        batcher
-                            .predict(&mut backend, block, 0, f, SimTime(i))
-                            .expect("predict"),
-                    );
-                }
-            });
+            run_fanout(
+                WORKERS,
+                |w| {
+                    let mut backend = RustBackend::new(KernelKind::Linear);
+                    backend.import_model(model.clone()).expect("import");
+                    let mut batcher = ShardBatcher::new(BatcherConfig::default());
+                    for i in 0..queries {
+                        let block = BlockId(w as u64 * queries + i);
+                        let f = query_features(w, i);
+                        black_box(
+                            batcher
+                                .predict(&mut backend, block, 0, f, SimTime(i))
+                                .expect("predict"),
+                        );
+                    }
+                },
+                FanoutOptions::new(),
+            );
         },
     );
     println!("{}", res.report());
@@ -249,6 +338,7 @@ fn main() {
 
     bench_replay_shards(&bench, ops, &mut results);
     bench_reader_contention(&bench, ops, &mut results);
+    bench_hit_path_scaling(&bench, ops, &mut results);
     bench_miss_storm(&bench, queries, &mut results);
 
     if json {

@@ -1,0 +1,381 @@
+//! One-stop cache construction.
+//!
+//! `CacheBuilder` replaces the constructor sprawl that accreted on the
+//! cache front — `ShardedCache::{new, with_admission, from_registry,
+//! from_registry_with_admission}` and `BlockCache::with_admission` — with
+//! a single builder covering every axis those constructors hard-coded:
+//!
+//! * eviction policy, by registry name or by factory closure;
+//! * admission policy, by registry name or by factory closure;
+//! * shard count and total capacity;
+//! * an optional recompute-cost tie-break wrapper ([`CostAware`]);
+//! * an optional [`MetricsRegistry`] hookup (construction-time gauges);
+//! * the recency-batching knobs of the lock-free read path
+//!   ([`RecencyConfig`], `cache::read_path`).
+//!
+//! The old constructors survive one PR as `#[deprecated]` shims; the
+//! parity tests in rust/tests/property_sharded.rs pin them to the builder
+//! under `#[allow(deprecated)]`.
+//!
+//! ```
+//! use h_svm_lru::cache::CacheBuilder;
+//!
+//! let cache = CacheBuilder::new()
+//!     .policy("h-svm-lru")
+//!     .admission("tinylfu")
+//!     .shards(8)
+//!     .capacity(1 << 20)
+//!     .build()
+//!     .unwrap();
+//! assert_eq!(cache.n_shards(), 8);
+//! assert_eq!(cache.policy_name(), "h-svm-lru");
+//! ```
+
+use crate::obs::MetricsRegistry;
+
+use super::admission::{make_admission, AdmissionPolicy};
+use super::cost_aware::CostAware;
+use super::read_path::RecencyConfig;
+use super::registry::make_policy;
+use super::{BlockCache, CachePolicy, ShardedCache};
+
+/// What can go wrong assembling a cache from builder state.
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum CacheBuildError {
+    /// Neither [`CacheBuilder::policy`] nor [`CacheBuilder::policy_with`]
+    /// was called.
+    #[error("no eviction policy configured (call policy() or policy_with())")]
+    MissingPolicy,
+    /// The policy name is not in the registry.
+    #[error("unknown eviction policy {0:?}")]
+    UnknownPolicy(String),
+    /// The admission name is not in the registry.
+    #[error("unknown admission policy {0:?}")]
+    UnknownAdmission(String),
+    /// The shard count was set to zero.
+    #[error("cache needs at least one shard")]
+    ZeroShards,
+    /// The recency batch was set to zero (a drain could never trigger).
+    #[error("recency batch must be >= 1")]
+    ZeroRecencyBatch,
+    /// [`CacheBuilder::build_block_cache`] with a multi-shard config.
+    #[error("build_block_cache requires exactly one shard (got {0})")]
+    MultiShardBlockCache(usize),
+}
+
+enum PolicySource {
+    Name(String),
+    Factory(Box<dyn Fn() -> Box<dyn CachePolicy>>),
+}
+
+enum AdmissionSource {
+    Name(String),
+    Factory(Box<dyn Fn() -> Box<dyn AdmissionPolicy>>),
+}
+
+/// Builder for [`BlockCache`] and [`ShardedCache`] — see the module docs.
+///
+/// The lifetime ties an optional borrowed [`MetricsRegistry`] to the
+/// builder; plain constructions (`CacheBuilder::new()...build()`) never
+/// notice it.
+pub struct CacheBuilder<'a> {
+    policy: Option<PolicySource>,
+    admission: AdmissionSource,
+    shards: usize,
+    capacity: u64,
+    cost_window: Option<usize>,
+    recency: RecencyConfig,
+    metrics: Option<&'a MetricsRegistry>,
+}
+
+impl Default for CacheBuilder<'_> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<'a> CacheBuilder<'a> {
+    /// A builder with the behavior-preserving defaults: 1 shard, capacity
+    /// 0, `always` admission, no cost wrapper, immediate recency drains.
+    pub fn new() -> Self {
+        CacheBuilder {
+            policy: None,
+            admission: AdmissionSource::Name("always".to_string()),
+            shards: 1,
+            capacity: 0,
+            cost_window: None,
+            recency: RecencyConfig::default(),
+            metrics: None,
+        }
+    }
+
+    /// Eviction policy by registry name (e.g. "lru", "h-svm-lru").
+    pub fn policy(mut self, name: &str) -> Self {
+        self.policy = Some(PolicySource::Name(name.to_string()));
+        self
+    }
+
+    /// Eviction policy by factory — called once per shard, for policies
+    /// that need non-registry construction (custom windows, test doubles).
+    pub fn policy_with(mut self, make: impl Fn() -> Box<dyn CachePolicy> + 'static) -> Self {
+        self.policy = Some(PolicySource::Factory(Box::new(make)));
+        self
+    }
+
+    /// Admission policy by registry name ("always" / "tinylfu" / "ghost" /
+    /// "svm"). The default is "always" (no gate).
+    pub fn admission(mut self, name: &str) -> Self {
+        self.admission = AdmissionSource::Name(name.to_string());
+        self
+    }
+
+    /// Admission policy by factory — called once per shard.
+    pub fn admission_with(
+        mut self,
+        make: impl Fn() -> Box<dyn AdmissionPolicy> + 'static,
+    ) -> Self {
+        self.admission = AdmissionSource::Factory(Box::new(make));
+        self
+    }
+
+    /// Number of independently locked shards (>= 1; default 1).
+    pub fn shards(mut self, n: usize) -> Self {
+        self.shards = n;
+        self
+    }
+
+    /// Total capacity in bytes, split across shards.
+    pub fn capacity(mut self, bytes: u64) -> Self {
+        self.capacity = bytes;
+        self
+    }
+
+    /// Wrap every shard's policy in the recompute-cost tie-break
+    /// ([`CostAware`]) with candidate window `k` (>= 1). With uniform
+    /// costs the wrapper is bit-identical to the base policy.
+    pub fn cost_aware(mut self, k: usize) -> Self {
+        self.cost_window = Some(k.max(1));
+        self
+    }
+
+    /// Recency-batching knobs for the lock-free read path. The default
+    /// ([`RecencyConfig::immediate`]) is bit-identical to the locked path.
+    pub fn recency(mut self, cfg: RecencyConfig) -> Self {
+        self.recency = cfg;
+        self
+    }
+
+    /// Export construction facts (capacity, shard count, recency knobs) as
+    /// gauges on `registry` at build time. A disabled registry is a no-op.
+    pub fn metrics(mut self, registry: &'a MetricsRegistry) -> Self {
+        self.metrics = Some(registry);
+        self
+    }
+
+    fn validate(&self) -> Result<(), CacheBuildError> {
+        if self.policy.is_none() {
+            return Err(CacheBuildError::MissingPolicy);
+        }
+        if self.shards == 0 {
+            return Err(CacheBuildError::ZeroShards);
+        }
+        if self.recency.batch == 0 {
+            return Err(CacheBuildError::ZeroRecencyBatch);
+        }
+        Ok(())
+    }
+
+    fn make_policy(&self) -> Result<Box<dyn CachePolicy>, CacheBuildError> {
+        let base = match self.policy.as_ref().expect("validated") {
+            PolicySource::Name(name) => make_policy(name)
+                .ok_or_else(|| CacheBuildError::UnknownPolicy(name.clone()))?,
+            PolicySource::Factory(make) => make(),
+        };
+        Ok(match self.cost_window {
+            Some(k) => Box::new(CostAware::new(base, "cost-aware").with_window(k)),
+            None => base,
+        })
+    }
+
+    fn make_admission(&self) -> Result<Box<dyn AdmissionPolicy>, CacheBuildError> {
+        match &self.admission {
+            AdmissionSource::Name(name) => make_admission(name)
+                .ok_or_else(|| CacheBuildError::UnknownAdmission(name.clone())),
+            AdmissionSource::Factory(make) => Ok(make()),
+        }
+    }
+
+    fn export_gauges(&self) {
+        if let Some(registry) = self.metrics {
+            let v = self.capacity;
+            registry.gauge("cache_capacity_bytes", move || v);
+            let v = self.shards as u64;
+            registry.gauge("cache_shards", move || v);
+            let v = self.recency.batch as u64;
+            registry.gauge("cache_recency_batch", move || v);
+            let v = self.recency.drain_cadence.micros();
+            registry.gauge("cache_recency_drain_cadence_us", move || v);
+        }
+    }
+
+    /// Assemble a [`ShardedCache`].
+    pub fn build(self) -> Result<ShardedCache, CacheBuildError> {
+        self.validate()?;
+        let policies = (0..self.shards)
+            .map(|_| self.make_policy())
+            .collect::<Result<Vec<_>, _>>()?;
+        let admissions = (0..self.shards)
+            .map(|_| self.make_admission())
+            .collect::<Result<Vec<_>, _>>()?;
+        self.export_gauges();
+        Ok(ShardedCache::assemble(policies, admissions, self.capacity, self.recency))
+    }
+
+    /// Assemble a bare single-shard [`BlockCache`] (unit tests, hot-path
+    /// benches, per-node caches that do their own locking).
+    pub fn build_block_cache(self) -> Result<BlockCache, CacheBuildError> {
+        self.validate()?;
+        if self.shards != 1 {
+            return Err(CacheBuildError::MultiShardBlockCache(self.shards));
+        }
+        let policy = self.make_policy()?;
+        let admission = self.make_admission()?;
+        self.export_gauges();
+        Ok(BlockCache::assemble(policy, admission, self.capacity))
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::super::lru::Lru;
+    use super::*;
+    use crate::cache::admission::AlwaysAdmit;
+    use crate::cache::AccessContext;
+    use crate::hdfs::BlockId;
+    use crate::sim::{SimDuration, SimTime};
+
+    #[test]
+    fn builds_from_registry_names() {
+        let cache = CacheBuilder::new()
+            .policy("h-svm-lru")
+            .admission("tinylfu")
+            .shards(2)
+            .capacity(8)
+            .build()
+            .unwrap();
+        assert_eq!(cache.n_shards(), 2);
+        assert_eq!(cache.capacity(), 8);
+        assert_eq!(cache.policy_name(), "h-svm-lru");
+        assert_eq!(cache.admission_name(), "tinylfu");
+    }
+
+    #[test]
+    fn builds_from_factories() {
+        let cache = CacheBuilder::new()
+            .policy_with(|| Box::new(Lru::new()))
+            .admission_with(|| Box::new(AlwaysAdmit))
+            .shards(3)
+            .capacity(9)
+            .build()
+            .unwrap();
+        assert_eq!(cache.n_shards(), 3);
+        assert_eq!(cache.policy_name(), "lru");
+        assert_eq!(cache.admission_name(), "always");
+    }
+
+    #[test]
+    fn rejects_unknown_names_and_bad_knobs() {
+        let err = CacheBuilder::new().policy("nonsense").capacity(8).build().unwrap_err();
+        assert_eq!(err, CacheBuildError::UnknownPolicy("nonsense".to_string()));
+        let err = CacheBuilder::new()
+            .policy("lru")
+            .admission("nonsense")
+            .capacity(8)
+            .build()
+            .unwrap_err();
+        assert_eq!(err, CacheBuildError::UnknownAdmission("nonsense".to_string()));
+        let err = CacheBuilder::new().capacity(8).build().unwrap_err();
+        assert_eq!(err, CacheBuildError::MissingPolicy);
+        let err = CacheBuilder::new().policy("lru").shards(0).build().unwrap_err();
+        assert_eq!(err, CacheBuildError::ZeroShards);
+        let err = CacheBuilder::new()
+            .policy("lru")
+            .recency(RecencyConfig { batch: 0, drain_cadence: SimDuration::ZERO })
+            .build()
+            .unwrap_err();
+        assert_eq!(err, CacheBuildError::ZeroRecencyBatch);
+        let err =
+            CacheBuilder::new().policy("lru").shards(2).build_block_cache().unwrap_err();
+        assert_eq!(err, CacheBuildError::MultiShardBlockCache(2));
+        assert!(err.to_string().contains("exactly one shard"));
+    }
+
+    #[test]
+    fn block_cache_variant_matches_sharded_single_shard() {
+        let mut bare = CacheBuilder::new()
+            .policy("lru")
+            .capacity(3)
+            .build_block_cache()
+            .unwrap();
+        let sharded = CacheBuilder::new().policy("lru").capacity(3).build().unwrap();
+        for t in 0..100u64 {
+            let b = BlockId((t * 7 + t % 5) % 9);
+            let ctx = AccessContext::simple(SimTime(t), 1);
+            assert_eq!(bare.access_or_insert(b, &ctx), sharded.access_or_insert(b, &ctx));
+        }
+        assert_eq!(bare.cached_blocks(), sharded.cached_blocks());
+    }
+
+    #[test]
+    fn cost_wrapper_knob_prefers_cheap_victims() {
+        let mut cache = CacheBuilder::new()
+            .policy("lru")
+            .cost_aware(4)
+            .capacity(3)
+            .build_block_cache()
+            .unwrap();
+        assert_eq!(cache.policy_name(), "cost-aware");
+        let ctx = |t: u64, cost: f64| {
+            AccessContext::simple(SimTime(t), 1).with_recompute_cost(cost)
+        };
+        cache.access_or_insert(BlockId(1), &ctx(1, 45.0));
+        cache.access_or_insert(BlockId(2), &ctx(2, 0.0));
+        cache.access_or_insert(BlockId(3), &ctx(3, 45.0));
+        let o = cache.access_or_insert(BlockId(4), &ctx(4, 45.0));
+        assert_eq!(o.evicted, vec![BlockId(2)], "cheap block evicted before older ones");
+    }
+
+    #[test]
+    fn metrics_knob_exports_construction_gauges() {
+        let registry = MetricsRegistry::new();
+        let _cache = CacheBuilder::new()
+            .policy("lru")
+            .shards(4)
+            .capacity(64)
+            .recency(RecencyConfig::default().with_batch(8))
+            .metrics(&registry)
+            .build()
+            .unwrap();
+        let gauges = registry.gauge_values();
+        let get = |name: &str| {
+            gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap()
+        };
+        assert_eq!(get("cache_capacity_bytes"), 64);
+        assert_eq!(get("cache_shards"), 4);
+        assert_eq!(get("cache_recency_batch"), 8);
+        assert_eq!(get("cache_recency_drain_cadence_us"), 0);
+    }
+
+    #[test]
+    fn recency_knob_threads_into_the_cache() {
+        let cache = CacheBuilder::new()
+            .policy("lru")
+            .capacity(4)
+            .recency(RecencyConfig::default().with_batch(16))
+            .build()
+            .unwrap();
+        assert_eq!(cache.recency_config().batch, 16);
+        let default = CacheBuilder::new().policy("lru").capacity(4).build().unwrap();
+        assert_eq!(default.recency_config(), RecencyConfig::default());
+    }
+}

@@ -38,6 +38,9 @@
 pub mod admission;
 /// Cache-affinity-aware caching benefit policy.
 pub mod affinity_aware;
+/// One-stop cache construction (`CacheBuilder`) replacing the constructor
+/// sprawl on `BlockCache`/`ShardedCache`.
+pub mod builder;
 /// Modified ARC: recent/frequent lists with ghost histories.
 pub mod arc;
 /// AutoCache-style probability score with high/low watermarks.
@@ -62,6 +65,8 @@ pub mod lfu_f;
 pub mod lru;
 /// Slab-backed intrusive doubly-linked list used by the ordered policies.
 pub mod order_list;
+/// Lock-free membership read path + recency batching (seqlock read-view).
+pub mod read_path;
 /// Name → policy constructor registry (`POLICY_NAMES` / `make_policy`).
 pub mod registry;
 /// Lock-free per-shard statistics (seqlock snapshots).
@@ -74,8 +79,10 @@ pub mod slru_k;
 pub mod wsclock;
 
 pub use admission::{AdmissionPolicy, AdmissionStats, AlwaysAdmit};
+pub use builder::{CacheBuildError, CacheBuilder};
+pub use read_path::{Probe, ReadView, RecencyConfig};
 pub use shard_stats::{AtomicShardStats, ShardSnapshot};
-pub use sharded::{shard_of, ShardStats, ShardedCache};
+pub use sharded::{shard_of, ReadHandle, ShardStats, ShardedCache};
 
 use crate::util::fasthash::IdHashMap;
 
@@ -283,11 +290,25 @@ pub struct BlockCache {
 impl BlockCache {
     /// A cache of `capacity` bytes with the default admit-everything gate.
     pub fn new(policy: Box<dyn CachePolicy>, capacity: u64) -> Self {
-        Self::with_admission(policy, Box::new(AlwaysAdmit), capacity)
+        Self::assemble(policy, Box::new(AlwaysAdmit), capacity)
     }
 
     /// A cache whose inserts are gated by `admission`.
+    #[deprecated(
+        since = "0.10.0",
+        note = "use cache::CacheBuilder::new().policy_with(..).admission_with(..).build_block_cache() instead"
+    )]
     pub fn with_admission(
+        policy: Box<dyn CachePolicy>,
+        admission: Box<dyn AdmissionPolicy>,
+        capacity: u64,
+    ) -> Self {
+        Self::assemble(policy, admission, capacity)
+    }
+
+    /// Non-deprecated assembly point shared by [`BlockCache::new`], the
+    /// deprecated shims and [`builder::CacheBuilder`].
+    pub(crate) fn assemble(
         policy: Box<dyn CachePolicy>,
         admission: Box<dyn AdmissionPolicy>,
         capacity: u64,
@@ -357,6 +378,32 @@ impl BlockCache {
         let mut v: Vec<BlockId> = self.sizes.keys().copied().collect();
         v.sort_unstable();
         v
+    }
+
+    /// All cached block ids in hash order — the allocation-light feed for
+    /// read-view rebuilds (`cache::read_path`), which do not care about
+    /// order. Diagnostics should prefer [`BlockCache::cached_blocks`].
+    pub fn blocks_unordered(&self) -> impl Iterator<Item = BlockId> + '_ {
+        self.sizes.keys().copied()
+    }
+
+    /// Apply one *buffered* access to a block that resolved as a hit on
+    /// the lock-free read path: the recency/admission bookkeeping of
+    /// [`BlockCache::access_or_insert`]'s hit arm, decoupled from hit
+    /// counting (which already happened at read time — see
+    /// [`shard_stats::AtomicShardStats::record_lockfree_hit`]).
+    ///
+    /// Returns false (and does nothing) when the block is no longer
+    /// resident — a concurrent mutator evicted it between the probe and
+    /// this drain, so the stale recency update is dropped.
+    pub fn touch(&mut self, block: BlockId, ctx: &AccessContext) -> bool {
+        if !self.sizes.contains_key(&block) {
+            return false;
+        }
+        self.admission.on_access(block, ctx);
+        self.policy.on_hit(block, ctx);
+        debug_assert_eq!(self.policy.len(), self.sizes.len());
+        true
     }
 
     /// The full access path: hit (policy notified) or miss + insertion with
@@ -496,6 +543,17 @@ mod tests {
         AccessContext::simple(SimTime(t), size)
     }
 
+    /// LRU behind the named admission gate, via the builder (the
+    /// non-deprecated construction path).
+    fn gated_lru(admission: &str, capacity: u64) -> BlockCache {
+        CacheBuilder::new()
+            .policy_with(|| Box::new(Lru::new()))
+            .admission(admission)
+            .capacity(capacity)
+            .build_block_cache()
+            .unwrap()
+    }
+
     #[test]
     fn hit_miss_and_eviction_accounting() {
         let mut cache = BlockCache::new(Box::new(Lru::new()), 300);
@@ -533,11 +591,7 @@ mod tests {
 
     #[test]
     fn admission_gate_refuses_and_counts() {
-        let mut cache = BlockCache::with_admission(
-            Box::new(Lru::new()),
-            admission::make_admission("ghost").unwrap(),
-            300,
-        );
+        let mut cache = gated_lru("ghost", 300);
         assert_eq!(cache.admission_name(), "ghost");
         // First sighting: probation, not cached.
         let o = cache.access_or_insert(BlockId(1), &ctx(1, 100));
@@ -554,11 +608,7 @@ mod tests {
 
     #[test]
     fn tinylfu_duel_protects_the_hot_set() {
-        let mut cache = BlockCache::with_admission(
-            Box::new(Lru::new()),
-            admission::make_admission("tinylfu").unwrap(),
-            2,
-        );
+        let mut cache = gated_lru("tinylfu", 2);
         // Two hot blocks, re-accessed: high estimated frequency.
         for t in 0..6u64 {
             cache.access_or_insert(BlockId(t % 2), &ctx(t, 1));
@@ -573,11 +623,7 @@ mod tests {
 
     #[test]
     fn tinylfu_duels_every_victim_of_a_multi_eviction_insert() {
-        let mut cache = BlockCache::with_admission(
-            Box::new(Lru::new()),
-            admission::make_admission("tinylfu").unwrap(),
-            4,
-        );
+        let mut cache = gated_lru("tinylfu", 4);
         // X: hot, size 2 (insert + 3 more accesses). Y: cold, size 2.
         cache.access_or_insert(BlockId(1), &ctx(1, 2)); // X
         cache.access_or_insert(BlockId(2), &ctx(2, 2)); // Y
@@ -611,11 +657,7 @@ mod tests {
 
         // TinyLFU: the victim the newcomer dueled (and beat) is an
         // admission-duel eviction.
-        let mut cache = BlockCache::with_admission(
-            Box::new(Lru::new()),
-            admission::make_admission("tinylfu").unwrap(),
-            1,
-        );
+        let mut cache = gated_lru("tinylfu", 1);
         cache.access_or_insert(BlockId(1), &ctx(1, 1));
         // Seen twice -> estimate 2 beats the resident's 1.
         cache.access_or_insert(BlockId(9), &ctx(2, 1));

@@ -1,0 +1,469 @@
+//! Lock-free membership view of a shard's entry table, plus the
+//! recency-batching configuration and drain discipline built on it.
+//!
+//! This generalizes the seqlock split of [`super::shard_stats`] from
+//! counters to *membership*: a hit can resolve "is this block resident?"
+//! without touching the shard `Mutex`, push its access into a per-handle
+//! bounded recency buffer, and let a later drain pass apply the buffered
+//! [`CachePolicy::on_hit`](super::CachePolicy::on_hit) updates to the
+//! `OrderList` in batches under the lock. The read-mostly workloads the
+//! paper targets (hot HDFS blocks re-read across MapReduce waves) stop
+//! serializing on the shard lock for recency bookkeeping.
+//!
+//! ## The protocol
+//!
+//! [`ReadView`] is a fixed-size power-of-two open-addressing table of
+//! `AtomicU64` slots (no `unsafe`, facade atomics only — the repo lint
+//! keeps it that way). Encoding per slot: `0` = empty, `1` = tombstone,
+//! anything else is `block.0 + 2`. Writers — always the thread holding the
+//! owning shard's `Mutex`, the same single-writer discipline the stats
+//! seqlock uses — mirror every residency change:
+//!
+//! * **insert**: store the code into the first empty-or-tombstone slot of
+//!   the block's probe chain. A single-slot publish; no seqlock bump.
+//! * **remove**: overwrite the block's slot with the tombstone. Probe
+//!   chains stay intact because an empty slot is never created in place —
+//!   readers skip tombstones.
+//! * **rebuild** (tombstone compaction / saturation exit): the only
+//!   multi-slot write, bracketed by the seqlock word exactly like a stats
+//!   write section. Readers that overlap a rebuild retry.
+//!
+//! Readers bracket a bounded probe with the seqlock word: an even,
+//! unchanged `seq` around the probe means no rebuild raced it; the
+//! individual slot loads are relaxed and rely on per-location coherence.
+//! A racy single-slot publish can make a reader miss a block inserted
+//! concurrently (or see one removed concurrently) — both linearize to a
+//! legal point inside the overlap, and a "miss" verdict only ever demotes
+//! the access to the exact locked path, so the view can be conservative
+//! but never corrupting. When the resident set outgrows the table the view
+//! sets a `saturated` flag and every probe answers [`Probe::Fallback`]
+//! until a rebuild finds the population small enough again.
+//!
+//! The full protocol is modeled by loom in rust/tests/loom_protocols.rs
+//! and documented in docs/CONCURRENCY.md.
+
+use std::hash::Hasher;
+
+use crate::hdfs::BlockId;
+use crate::sim::{SimDuration, SimTime};
+use crate::util::fasthash::IdHasher;
+use crate::util::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
+use crate::util::sync::hint;
+
+/// Slot value of a never-used slot (probe chains end here).
+const EMPTY: u64 = 0;
+/// Slot value of a removed entry (probe chains continue through it).
+const TOMBSTONE: u64 = 1;
+/// Slot codes are `block.0 + CODE_BASE`.
+const CODE_BASE: u64 = 2;
+
+/// Recency-batching knobs for the lock-free read path.
+///
+/// The default — batch size 1, no cadence — drains every buffered access
+/// immediately and is bit-identical to the fully locked hit path: the
+/// policy sees the exact same event sequence, and the merged stats are
+/// equal (property-tested in rust/tests/property_read_path.rs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecencyConfig {
+    /// Buffered accesses per shard before a drain is forced (>= 1).
+    pub batch: usize,
+    /// Simulated-time drain cadence: a non-zero duration drains a shard's
+    /// buffer whenever the incoming access is at least this much newer
+    /// than the shard's last drain. Zero disables the cadence trigger.
+    pub drain_cadence: SimDuration,
+}
+
+impl Default for RecencyConfig {
+    fn default() -> Self {
+        RecencyConfig { batch: 1, drain_cadence: SimDuration::ZERO }
+    }
+}
+
+impl RecencyConfig {
+    /// Behavior-preserving default: drain every access immediately.
+    pub fn immediate() -> Self {
+        Self::default()
+    }
+
+    /// Buffer up to `batch` accesses per shard (builder style).
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        assert!(batch >= 1, "recency batch must be >= 1");
+        self.batch = batch;
+        self
+    }
+
+    /// Drain on a simulated-time cadence (builder style).
+    pub fn with_drain_cadence(mut self, cadence: SimDuration) -> Self {
+        self.drain_cadence = cadence;
+        self
+    }
+
+    /// Whether this configuration ever leaves an access buffered.
+    pub fn is_buffered(&self) -> bool {
+        self.batch > 1
+    }
+}
+
+/// Verdict of a lock-free membership probe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Probe {
+    /// The block is resident; the access may take the lock-free hit path.
+    Hit,
+    /// The block is not resident; take the locked miss path.
+    Miss,
+    /// The view cannot answer (table saturated); take the locked path.
+    Fallback,
+}
+
+/// Home slot of a block: full Fibonacci id mix, masked to the table.
+/// Distinct from [`super::sharded::shard_of`]'s high bits, so blocks that
+/// collide on a shard still spread across that shard's view.
+fn home_of(block: BlockId, mask: usize) -> usize {
+    let mut h = IdHasher::default();
+    h.write_u64(block.0);
+    (h.finish() as usize) & mask
+}
+
+/// Lock-free membership view of one shard's entry table.
+///
+/// Single-writer discipline: every mutator (`insert` / `remove` /
+/// `rebuild`) may only be called by a thread holding the owning shard's
+/// `Mutex`. Probes are unrestricted.
+#[derive(Debug)]
+pub struct ReadView {
+    /// Seqlock word bracketing rebuilds (the only multi-slot writes).
+    seq: AtomicU64,
+    /// Open-addressing table; length is a power of two.
+    slots: Vec<AtomicU64>,
+    mask: usize,
+    /// Live entries — single-writer, read by the maintenance heuristics.
+    resident: AtomicU64,
+    /// Tombstoned slots awaiting compaction — single-writer.
+    tombstones: AtomicU64,
+    /// When set, probes answer [`Probe::Fallback`]: the resident set does
+    /// not fit the table with a sane load factor, so the locked path (which
+    /// is always exact) serves every access. Cleared by a rebuild that
+    /// finds the population back under the threshold.
+    saturated: AtomicBool,
+}
+
+impl ReadView {
+    /// A view with at least `min_slots` slots (rounded up to a power of
+    /// two, floor 16).
+    pub fn with_slots(min_slots: usize) -> Self {
+        let n = min_slots.max(16).next_power_of_two();
+        ReadView {
+            seq: AtomicU64::new(0),
+            slots: (0..n).map(|_| AtomicU64::new(EMPTY)).collect(),
+            mask: n - 1,
+            resident: AtomicU64::new(0),
+            tombstones: AtomicU64::new(0),
+            saturated: AtomicBool::new(false),
+        }
+    }
+
+    /// Table size for a shard of `capacity_bytes`. Unit-size blocks (the
+    /// replay traces) fill at most `capacity` entries, so double that for
+    /// probe headroom; clamp so byte-denominated capacities (where block
+    /// counts are far below byte counts) cannot demand absurd tables —
+    /// overflow just saturates into the exact locked path.
+    pub fn slots_for_capacity(capacity_bytes: u64) -> usize {
+        let want = capacity_bytes.saturating_mul(2).clamp(16, 65_536);
+        (want as usize).next_power_of_two()
+    }
+
+    /// Number of slots (always a power of two).
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Whether probes currently answer [`Probe::Fallback`].
+    pub fn is_saturated(&self) -> bool {
+        self.saturated.load(Ordering::Relaxed)
+    }
+
+    /// Lock-free membership probe. Never takes a lock; spins only while a
+    /// rebuild (constant-bounded work under the shard lock) is in flight.
+    pub fn probe(&self, block: BlockId) -> Probe {
+        let code = block.0.wrapping_add(CODE_BASE);
+        if code < CODE_BASE {
+            return Probe::Fallback; // id collides with a sentinel code
+        }
+        loop {
+            // Acquire: pairs with the rebuild's Release close, so the slot
+            // loads below observe every store of the rebuild that
+            // published this even value.
+            let s1 = self.seq.load(Ordering::Acquire);
+            if s1 & 1 == 1 {
+                hint::spin_loop();
+                continue;
+            }
+            if self.saturated.load(Ordering::Relaxed) {
+                return Probe::Fallback;
+            }
+            let home = home_of(block, self.mask);
+            let mut verdict = Probe::Miss;
+            for i in 0..self.slots.len() {
+                let v = self.slots[(home + i) & self.mask].load(Ordering::Relaxed);
+                if v == EMPTY {
+                    break;
+                }
+                if v == code {
+                    verdict = Probe::Hit;
+                    break;
+                }
+                // Tombstone or another block: keep probing.
+            }
+            // Acquire fence: orders the slot loads before the `seq`
+            // re-check — if no rebuild opened in between, every load came
+            // from a table no rebuild was mutating.
+            fence(Ordering::Acquire);
+            if self.seq.load(Ordering::Relaxed) == s1 {
+                return verdict;
+            }
+            hint::spin_loop();
+        }
+    }
+
+    /// Mirror a residency insert (caller holds the shard lock; `block`
+    /// must not already be in the view). No-op once saturated.
+    pub fn insert(&self, block: BlockId) {
+        if self.is_saturated() {
+            return;
+        }
+        let code = block.0.wrapping_add(CODE_BASE);
+        let resident = self.resident.load(Ordering::Relaxed);
+        // Saturate before the table gets slow or full: live entries past
+        // 3/4 load leave too little empty-slot headroom for probes.
+        if code < CODE_BASE || (resident + 1) * 4 > self.slots.len() as u64 * 3 {
+            self.saturated.store(true, Ordering::Relaxed);
+            return;
+        }
+        let home = home_of(block, self.mask);
+        for i in 0..self.slots.len() {
+            let slot = &self.slots[(home + i) & self.mask];
+            let v = slot.load(Ordering::Relaxed);
+            debug_assert_ne!(v, code, "read-view insert of a present block");
+            if v == EMPTY || v == TOMBSTONE {
+                if v == TOMBSTONE {
+                    self.tombstones.fetch_sub(1, Ordering::Relaxed);
+                }
+                // Release: a reader that observes the code also observes
+                // everything the locked mutation published before it.
+                slot.store(code, Ordering::Release);
+                self.resident.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+        // No reusable slot on the whole chain (tombstone-free full table
+        // is excluded by the load check, so this is unreachable in
+        // practice) — fail safe.
+        self.saturated.store(true, Ordering::Relaxed);
+    }
+
+    /// Mirror a residency removal (caller holds the shard lock). No-op
+    /// once saturated or when `block` is not in the view.
+    pub fn remove(&self, block: BlockId) {
+        if self.is_saturated() {
+            return;
+        }
+        let code = block.0.wrapping_add(CODE_BASE);
+        if code < CODE_BASE {
+            return;
+        }
+        let home = home_of(block, self.mask);
+        for i in 0..self.slots.len() {
+            let slot = &self.slots[(home + i) & self.mask];
+            let v = slot.load(Ordering::Relaxed);
+            if v == EMPTY {
+                return; // not present (saturation may have skipped it)
+            }
+            if v == code {
+                // Tombstone, not empty: probe chains through this slot
+                // must keep walking, so readers skip it but never stop.
+                slot.store(TOMBSTONE, Ordering::Release);
+                self.resident.fetch_sub(1, Ordering::Relaxed);
+                self.tombstones.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    }
+
+    /// Whether tombstones have accumulated enough to warrant a rebuild
+    /// (they lengthen every probe chain), or the view is saturated and a
+    /// compaction might fit the population again.
+    pub fn needs_rebuild(&self) -> bool {
+        let tombstones = self.tombstones.load(Ordering::Relaxed);
+        tombstones * 4 > self.slots.len() as u64 || self.is_saturated()
+    }
+
+    /// Rebuild the table from the true resident set (caller holds the
+    /// shard lock). The only multi-slot write: bracketed by the seqlock
+    /// word, so overlapping probes retry instead of observing a
+    /// half-compacted table. Clears saturation when the population fits.
+    pub fn rebuild(&self, blocks: impl Iterator<Item = BlockId>) {
+        // AcqRel open: pins the slot stores below after the odd store —
+        // a reader that saw an even `seq` cannot have raced this rebuild.
+        let prev = self.seq.fetch_add(1, Ordering::AcqRel);
+        debug_assert_eq!(prev & 1, 0, "nested/concurrent read-view rebuild");
+        for slot in &self.slots {
+            slot.store(EMPTY, Ordering::Relaxed);
+        }
+        let mut count = 0u64;
+        let mut fits = true;
+        for block in blocks {
+            let code = block.0.wrapping_add(CODE_BASE);
+            if code < CODE_BASE || (count + 1) * 4 > self.slots.len() as u64 * 3 {
+                fits = false;
+                break;
+            }
+            let home = home_of(block, self.mask);
+            for i in 0..self.slots.len() {
+                let slot = &self.slots[(home + i) & self.mask];
+                if slot.load(Ordering::Relaxed) == EMPTY {
+                    slot.store(code, Ordering::Relaxed);
+                    count += 1;
+                    break;
+                }
+            }
+        }
+        self.resident.store(count, Ordering::Relaxed);
+        self.tombstones.store(0, Ordering::Relaxed);
+        self.saturated.store(!fits, Ordering::Relaxed);
+        // Release close: publishes every slot store before the even value.
+        let prev = self.seq.fetch_add(1, Ordering::Release);
+        debug_assert_eq!(prev & 1, 1, "read-view rebuild closed twice");
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_hits_inserted_and_misses_removed() {
+        let v = ReadView::with_slots(16);
+        assert_eq!(v.probe(BlockId(7)), Probe::Miss);
+        v.insert(BlockId(7));
+        v.insert(BlockId(23)); // likely chains with 7 on small tables
+        assert_eq!(v.probe(BlockId(7)), Probe::Hit);
+        assert_eq!(v.probe(BlockId(23)), Probe::Hit);
+        assert_eq!(v.probe(BlockId(8)), Probe::Miss);
+        v.remove(BlockId(7));
+        assert_eq!(v.probe(BlockId(7)), Probe::Miss);
+        assert_eq!(v.probe(BlockId(23)), Probe::Hit, "chains walk through tombstones");
+    }
+
+    #[test]
+    fn sentinel_colliding_ids_fall_back() {
+        let v = ReadView::with_slots(16);
+        // u64::MAX - 1 and u64::MAX encode onto the sentinels; the view
+        // must refuse to answer rather than corrupt the table.
+        v.insert(BlockId(u64::MAX));
+        assert_eq!(v.probe(BlockId(u64::MAX)), Probe::Fallback);
+        assert!(v.is_saturated());
+    }
+
+    #[test]
+    fn saturation_falls_back_and_rebuild_recovers() {
+        let v = ReadView::with_slots(16);
+        for i in 0..13u64 {
+            v.insert(BlockId(i)); // 13 of 16 slots crosses 3/4 load
+        }
+        assert!(v.is_saturated());
+        assert_eq!(v.probe(BlockId(0)), Probe::Fallback);
+        assert!(v.needs_rebuild());
+        // The true resident set shrank (evictions went through the locked
+        // path while saturated): a rebuild fits again.
+        v.rebuild((0..4u64).map(BlockId));
+        assert!(!v.is_saturated());
+        assert_eq!(v.probe(BlockId(3)), Probe::Hit);
+        assert_eq!(v.probe(BlockId(9)), Probe::Miss);
+    }
+
+    #[test]
+    fn churn_accumulates_tombstones_then_rebuild_compacts() {
+        let v = ReadView::with_slots(32);
+        for i in 0..200u64 {
+            v.insert(BlockId(i));
+            v.remove(BlockId(i));
+            if v.needs_rebuild() {
+                v.rebuild(std::iter::empty());
+            }
+            assert!(!v.is_saturated(), "constant population must never saturate (i={i})");
+        }
+        assert_eq!(v.probe(BlockId(199)), Probe::Miss);
+    }
+
+    #[test]
+    fn slots_for_capacity_is_clamped_and_pow2() {
+        assert_eq!(ReadView::slots_for_capacity(0), 16);
+        assert_eq!(ReadView::slots_for_capacity(64), 128);
+        assert_eq!(ReadView::slots_for_capacity(u64::MAX), 65_536);
+        let v = ReadView::with_slots(ReadView::slots_for_capacity(100));
+        assert_eq!(v.slots(), 256);
+    }
+
+    #[test]
+    fn recency_config_defaults_are_immediate() {
+        let cfg = RecencyConfig::default();
+        assert_eq!(cfg.batch, 1);
+        assert_eq!(cfg.drain_cadence, SimDuration::ZERO);
+        assert!(!cfg.is_buffered());
+        assert_eq!(cfg, RecencyConfig::immediate());
+        let cfg = cfg.with_batch(8).with_drain_cadence(SimDuration::from_micros(2_000));
+        assert!(cfg.is_buffered());
+        assert_eq!(cfg.batch, 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "recency batch must be >= 1")]
+    fn zero_batch_is_rejected() {
+        let _ = RecencyConfig::default().with_batch(0);
+    }
+
+    /// Real-thread stress: one mutator (lock-holder stand-in) churns while
+    /// readers probe. Readers must never deadlock, never observe a torn
+    /// rebuild (asserted inside `probe` by construction), and a block that
+    /// is resident for the whole run must always probe Hit-or-Fallback.
+    #[test]
+    fn concurrent_probes_survive_churn_and_rebuilds() {
+        let v = ReadView::with_slots(64);
+        v.insert(BlockId(1_000)); // pinned resident for the whole run
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let v = &v;
+            let stop = &stop;
+            let readers: Vec<_> = (0..3)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut probes = 0u64;
+                        while !stop.load(Ordering::Acquire) {
+                            assert_ne!(
+                                v.probe(BlockId(1_000)),
+                                Probe::Miss,
+                                "pinned resident block reported missing"
+                            );
+                            let _ = v.probe(BlockId(2));
+                            probes += 1;
+                        }
+                        probes
+                    })
+                })
+                .collect();
+            for round in 0..2_000u64 {
+                let b = BlockId(round % 40);
+                v.insert(b);
+                v.remove(b);
+                if v.needs_rebuild() {
+                    v.rebuild(std::iter::once(BlockId(1_000)));
+                }
+            }
+            stop.store(true, Ordering::Release);
+            for r in readers {
+                assert!(r.join().unwrap() > 0);
+            }
+        });
+        assert_eq!(v.probe(BlockId(1_000)), Probe::Hit);
+    }
+}

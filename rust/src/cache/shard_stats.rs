@@ -112,6 +112,12 @@ pub struct AtomicShardStats {
     rejected: AtomicU64,
     used: AtomicU64,
     blocks: AtomicU64,
+    /// Hits resolved on the lock-free read path (`cache::read_path`),
+    /// counted at *read* time. Deliberately outside the seqlock's
+    /// single-writer discipline: many reader threads bump it with a relaxed
+    /// RMW, and [`AtomicShardStats::snapshot`] folds it into both `hits`
+    /// and `requests`, preserving `hits + misses == requests` exactly.
+    lockfree_hits: AtomicU64,
 }
 
 impl Default for AtomicShardStats {
@@ -137,7 +143,18 @@ impl AtomicShardStats {
             rejected: AtomicU64::new(0),
             used: AtomicU64::new(0),
             blocks: AtomicU64::new(0),
+            lockfree_hits: AtomicU64::new(0),
         }
+    }
+
+    /// Count one hit resolved on the lock-free read path. Unlike every
+    /// other mutator this needs **no** write section and no shard lock:
+    /// the counter is a multi-writer relaxed RMW that snapshots fold into
+    /// `hits`/`requests` at read time, so a buffered hit is visible in the
+    /// merged totals the moment it happens — not when its recency update
+    /// drains (property-tested in rust/tests/property_read_path.rs).
+    pub fn record_lockfree_hit(&self) {
+        self.lockfree_hits.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Open a write section. The caller MUST hold the owning shard's lock
@@ -165,7 +182,7 @@ impl AtomicShardStats {
                 hint::spin_loop();
                 continue;
             }
-            let snap = ShardSnapshot {
+            let mut snap = ShardSnapshot {
                 stats: ShardStats {
                     requests: self.requests.load(Ordering::Relaxed),
                     hits: self.hits.load(Ordering::Relaxed),
@@ -178,12 +195,19 @@ impl AtomicShardStats {
                 used: self.used.load(Ordering::Relaxed),
                 blocks: self.blocks.load(Ordering::Relaxed),
             };
+            // Read-path hits live outside the seqlock (multi-writer RMW):
+            // one load, folded into both sides of `hits + misses ==
+            // requests`, so the invariant holds for any interleaving with
+            // concurrent lock-free hits.
+            let lf = self.lockfree_hits.load(Ordering::Relaxed);
             // Acquire fence: orders the counter loads before the `seq`
             // re-check — if no write section opened in between, the loads
             // all came from the same even-sequence state (the re-check
             // load itself can then be Relaxed).
             fence(Ordering::Acquire);
             if self.seq.load(Ordering::Relaxed) == s1 {
+                snap.stats.hits += lf;
+                snap.stats.requests += lf;
                 return snap;
             }
             hint::spin_loop();
@@ -235,7 +259,9 @@ impl StatsWrite<'_> {
     }
 
     /// Zero the access counters (occupancy mirrors are left alone — the
-    /// cached contents survive a stats reset).
+    /// cached contents survive a stats reset). Callers must be quiescent
+    /// with respect to lock-free readers, exactly like every other stats
+    /// reset: a read-path hit racing the reset may survive it.
     pub fn reset_counters(&mut self) {
         self.stats.requests.store(0, Ordering::Relaxed);
         self.stats.hits.store(0, Ordering::Relaxed);
@@ -244,6 +270,7 @@ impl StatsWrite<'_> {
         self.stats.insertions.store(0, Ordering::Relaxed);
         self.stats.admitted.store(0, Ordering::Relaxed);
         self.stats.rejected.store(0, Ordering::Relaxed);
+        self.stats.lockfree_hits.store(0, Ordering::Relaxed);
     }
 }
 
@@ -320,6 +347,27 @@ mod tests {
         assert_eq!(snap.stats, ShardStats::default());
         assert_eq!(snap.used, 7, "reset must keep contents mirrors");
         assert_eq!(snap.blocks, 3);
+    }
+
+    #[test]
+    fn lockfree_hits_fold_into_both_sides_of_the_invariant() {
+        let block = AtomicShardStats::new();
+        {
+            let mut w = block.write();
+            w.record_request(false, true, 0);
+        }
+        block.record_lockfree_hit();
+        block.record_lockfree_hit();
+        let s = block.stats();
+        assert_eq!(s.requests, 3, "a read-path hit is a request at read time");
+        assert_eq!(s.hits, 2);
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits + s.misses, s.requests);
+        {
+            let mut w = block.write();
+            w.reset_counters();
+        }
+        assert_eq!(block.stats(), ShardStats::default(), "reset clears read-path hits too");
     }
 
     /// One writer thread, many reader threads: every snapshot must be

@@ -21,18 +21,32 @@
 //!   (written under the lock, read without it): `stats()`, `stats_of()`,
 //!   `used()`, `len()` and `hit_ratio()` never acquire a shard lock and
 //!   never serialize the replay writers (see `cache::shard_stats`).
+//! * **Lock-free hit path.** Each shard also carries a [`ReadView`] —
+//!   a seqlock-bracketed mirror of its entry table, maintained by the
+//!   mutators under the shard lock. A [`ReadHandle`] resolves hits
+//!   against the view without locking, counts them at read time
+//!   ([`AtomicShardStats::record_lockfree_hit`]) and buffers the recency
+//!   updates per [`RecencyConfig`]; drains apply them in batches under
+//!   the lock (see `cache::read_path` and docs/CONCURRENCY.md). The
+//!   default config (batch 1, immediate drain) is bit-identical to the
+//!   fully locked path.
 //! * **Exact capacity split.** Total capacity divides across shards with
 //!   the remainder going to the first shards, so the shard capacities sum
 //!   to the configured total and the multi-shard occupancy invariant
 //!   `used() <= capacity()` holds by construction.
+//!
+//! Construction goes through [`super::builder::CacheBuilder`]; the direct
+//! constructors below survive one PR as `#[deprecated]` shims.
 
 use std::hash::Hasher;
 use std::sync::Mutex;
 
 use crate::hdfs::BlockId;
+use crate::sim::{SimDuration, SimTime};
 use crate::util::fasthash::IdHasher;
 
 use super::admission::{make_admission, AdmissionPolicy, AlwaysAdmit};
+use super::read_path::{Probe, ReadView, RecencyConfig};
 use super::registry::make_policy;
 pub use super::shard_stats::{AtomicShardStats, ShardSnapshot, ShardStats};
 use super::{AccessContext, AccessOutcome, BlockCache, CachePolicy};
@@ -54,14 +68,23 @@ pub fn shard_of(block: BlockId, n_shards: usize) -> usize {
 /// All methods take `&self`: the per-shard `Mutex` provides interior
 /// mutability, which is what lets trace replay share one `ShardedCache`
 /// across scoped worker threads without `unsafe`. Counters live beside
-/// (not under) each lock in an [`AtomicShardStats`] block, so the stats
-/// read path is entirely lock-free.
+/// (not under) each lock in an [`AtomicShardStats`] block, and residency
+/// beside it in a [`ReadView`], so both the stats read path and the hit
+/// membership probe are entirely lock-free.
 pub struct ShardedCache {
     shards: Vec<Mutex<BlockCache>>,
     /// One seqlock stats block per shard, indexed like `shards`. Written
     /// only while holding the same index's `Mutex` (the single-writer
     /// discipline the seqlock requires); read from anywhere, lock-free.
+    /// Exception: the read-path hit counter inside is a multi-writer
+    /// relaxed RMW (see [`AtomicShardStats::record_lockfree_hit`]).
     stats: Vec<AtomicShardStats>,
+    /// One lock-free membership view per shard, same indexing and the
+    /// same single-writer discipline as `stats`: mutated only under the
+    /// shard `Mutex`, probed from anywhere.
+    views: Vec<ReadView>,
+    /// Recency-batching knobs handed to [`ShardedCache::read_handle`].
+    recency: RecencyConfig,
     capacity: u64,
     /// Captured at construction (every shard wraps the same policy /
     /// admission type) so the name getters never take a shard lock.
@@ -73,48 +96,39 @@ impl ShardedCache {
     /// Build from one policy instance per shard (the shard count is
     /// `policies.len()`). Total capacity is split evenly with the remainder
     /// on the first shards so the per-shard capacities sum exactly.
+    #[deprecated(
+        since = "0.10.0",
+        note = "use cache::CacheBuilder::new().policy_with(..).shards(..).capacity(..).build()"
+    )]
     pub fn new(policies: Vec<Box<dyn CachePolicy>>, total_capacity: u64) -> Self {
         let admissions = policies
             .iter()
             .map(|_| Box::new(AlwaysAdmit) as Box<dyn AdmissionPolicy>)
             .collect();
-        Self::with_admission(policies, admissions, total_capacity)
+        Self::assemble(policies, admissions, total_capacity, RecencyConfig::default())
     }
 
     /// Build with one admission-policy instance per shard (paired with
     /// `policies` by index). Per-shard admission state lives behind the
     /// shard's own lock, so the hot path stays lock-free across shards.
+    #[deprecated(
+        since = "0.10.0",
+        note = "use cache::CacheBuilder::new().policy_with(..).admission_with(..).build()"
+    )]
     pub fn with_admission(
         policies: Vec<Box<dyn CachePolicy>>,
         admissions: Vec<Box<dyn AdmissionPolicy>>,
         total_capacity: u64,
     ) -> Self {
-        assert!(!policies.is_empty(), "sharded cache needs at least one shard");
-        assert_eq!(
-            policies.len(),
-            admissions.len(),
-            "one admission policy per shard"
-        );
-        let policy_name = policies[0].name();
-        let admission_name = admissions[0].name();
-        let n = policies.len() as u64;
-        let base = total_capacity / n;
-        let rem = total_capacity % n;
-        let stats = (0..policies.len()).map(|_| AtomicShardStats::new()).collect();
-        let shards = policies
-            .into_iter()
-            .zip(admissions)
-            .enumerate()
-            .map(|(i, (policy, admission))| {
-                let cap = base + u64::from((i as u64) < rem);
-                Mutex::new(BlockCache::with_admission(policy, admission, cap))
-            })
-            .collect();
-        ShardedCache { shards, stats, capacity: total_capacity, policy_name, admission_name }
+        Self::assemble(policies, admissions, total_capacity, RecencyConfig::default())
     }
 
     /// Build `n_shards` shards of the registry policy `name` (None for an
     /// unknown policy name).
+    #[deprecated(
+        since = "0.10.0",
+        note = "use cache::CacheBuilder::new().policy(name).shards(..).capacity(..).build()"
+    )]
     pub fn from_registry(name: &str, n_shards: usize, total_capacity: u64) -> Option<Self> {
         Self::from_registry_with_admission(name, "always", n_shards, total_capacity)
     }
@@ -122,6 +136,10 @@ impl ShardedCache {
     /// Build `n_shards` shards of the registry policy `name`, each guarded
     /// by its own instance of the registry admission policy `admission`
     /// (None when either name is unknown).
+    #[deprecated(
+        since = "0.10.0",
+        note = "use cache::CacheBuilder::new().policy(name).admission(name).build()"
+    )]
     pub fn from_registry_with_admission(
         name: &str,
         admission: &str,
@@ -133,7 +151,50 @@ impl ShardedCache {
         let admissions = (0..n)
             .map(|_| make_admission(admission))
             .collect::<Option<Vec<_>>>()?;
-        Some(Self::with_admission(policies, admissions, total_capacity))
+        Some(Self::assemble(policies, admissions, total_capacity, RecencyConfig::default()))
+    }
+
+    /// Non-deprecated assembly point shared by the deprecated shims and
+    /// [`super::builder::CacheBuilder`].
+    pub(crate) fn assemble(
+        policies: Vec<Box<dyn CachePolicy>>,
+        admissions: Vec<Box<dyn AdmissionPolicy>>,
+        total_capacity: u64,
+        recency: RecencyConfig,
+    ) -> Self {
+        assert!(!policies.is_empty(), "sharded cache needs at least one shard");
+        assert_eq!(
+            policies.len(),
+            admissions.len(),
+            "one admission policy per shard"
+        );
+        assert!(recency.batch >= 1, "recency batch must be >= 1");
+        let policy_name = policies[0].name();
+        let admission_name = admissions[0].name();
+        let n = policies.len() as u64;
+        let base = total_capacity / n;
+        let rem = total_capacity % n;
+        let stats = (0..policies.len()).map(|_| AtomicShardStats::new()).collect();
+        let mut views = Vec::with_capacity(policies.len());
+        let shards = policies
+            .into_iter()
+            .zip(admissions)
+            .enumerate()
+            .map(|(i, (policy, admission))| {
+                let cap = base + u64::from((i as u64) < rem);
+                views.push(ReadView::with_slots(ReadView::slots_for_capacity(cap)));
+                Mutex::new(BlockCache::assemble(policy, admission, cap))
+            })
+            .collect();
+        ShardedCache {
+            shards,
+            stats,
+            views,
+            recency,
+            capacity: total_capacity,
+            policy_name,
+            admission_name,
+        }
     }
 
     /// Number of shards (policy instances).
@@ -162,6 +223,51 @@ impl ShardedCache {
         self.admission_name
     }
 
+    /// The recency-batching knobs this cache was built with (the config
+    /// [`ShardedCache::read_handle`] hands to new handles).
+    pub fn recency_config(&self) -> RecencyConfig {
+        self.recency
+    }
+
+    /// A per-thread handle onto the lock-free hit path, configured with
+    /// the cache's [`RecencyConfig`]. One handle per replay worker; the
+    /// handle drains its buffered accesses on drop.
+    pub fn read_handle(&self) -> ReadHandle<'_> {
+        ReadHandle::new(self, self.recency)
+    }
+
+    /// Mirror one mutation's residency changes into the shard's
+    /// [`ReadView`] (caller holds the shard lock — the view's
+    /// single-writer discipline). Also runs the maintenance heuristics:
+    /// tombstone compaction, and saturation recovery with hysteresis
+    /// (rebuild only when the true population is back under half the
+    /// table, well below the 3/4 saturation bound, so a population
+    /// hovering at the threshold cannot thrash rebuilds).
+    fn sync_view(
+        &self,
+        idx: usize,
+        cache: &BlockCache,
+        inserted: Option<BlockId>,
+        evicted: &[BlockId],
+    ) {
+        let view = &self.views[idx];
+        if view.is_saturated() {
+            if (cache.len() + 1) * 2 <= view.slots() {
+                view.rebuild(cache.blocks_unordered());
+            }
+            return;
+        }
+        for &b in evicted {
+            view.remove(b);
+        }
+        if let Some(b) = inserted {
+            view.insert(b);
+        }
+        if view.needs_rebuild() {
+            view.rebuild(cache.blocks_unordered());
+        }
+    }
+
     /// The full access path on the owning shard: hit (policy notified) or
     /// miss + insertion with evictions as needed. Stats land in the
     /// shard's atomic block inside one seqlock write section, while the
@@ -170,6 +276,10 @@ impl ShardedCache {
         let idx = self.shard_of(block);
         let mut cache = self.lock_shard(idx);
         let outcome = cache.access_or_insert(block, ctx);
+        if !outcome.hit {
+            let inserted = outcome.inserted.then_some(block);
+            self.sync_view(idx, &cache, inserted, &outcome.evicted);
+        }
         let a = cache.admission_stats();
         let mut w = self.stats[idx].write();
         w.record_request(outcome.hit, outcome.inserted, outcome.evicted.len() as u64);
@@ -188,6 +298,7 @@ impl ShardedCache {
         let mut cache = self.lock_shard(idx);
         let evicted = cache.insert(block, ctx);
         let inserted = cache.contains(block);
+        self.sync_view(idx, &cache, inserted.then_some(block), &evicted);
         let a = cache.admission_stats();
         let mut w = self.stats[idx].write();
         w.record_request(false, inserted, evicted.len() as u64);
@@ -204,6 +315,7 @@ impl ShardedCache {
         let mut cache = self.lock_shard(idx);
         let removed = cache.remove(block);
         if removed {
+            self.sync_view(idx, &cache, None, &[block]);
             let mut w = self.stats[idx].write();
             w.set_occupancy(cache.used(), cache.len() as u64);
         }
@@ -213,6 +325,13 @@ impl ShardedCache {
     /// Whether `block` is currently cached (locks only its shard).
     pub fn contains(&self, block: BlockId) -> bool {
         self.lock_shard(self.shard_of(block)).contains(block)
+    }
+
+    /// Lock-free membership probe against the shard's [`ReadView`] —
+    /// [`Probe::Hit`] only when the view can prove residency; anything
+    /// else must take the (exact) locked path.
+    pub fn probe(&self, block: BlockId) -> Probe {
+        self.views[self.shard_of(block)].probe(block)
     }
 
     /// Bytes cached across all shards — lock-free (occupancy mirrors in
@@ -299,8 +418,128 @@ impl ShardedCache {
     }
 }
 
+/// A per-thread handle onto the lock-free hit path of a [`ShardedCache`].
+///
+/// `access_or_insert` first probes the shard's [`ReadView`]: a proven hit
+/// is counted at read time (exact merged stats, no lock) and its recency
+/// update is pushed into a per-shard bounded buffer. The buffer drains —
+/// applying [`BlockCache::touch`] for each entry under the shard lock —
+/// on three triggers:
+///
+/// 1. **fill**: the shard's buffer reached [`RecencyConfig::batch`];
+/// 2. **mutation**: any access that must take the locked path (miss,
+///    fallback, explicit insert/remove) drains that shard first, so the
+///    policy observes this handle's accesses in program order;
+/// 3. **cadence**: an incoming access at least
+///    [`RecencyConfig::drain_cadence`] of simulated time past the shard's
+///    last drain forces one (bounds recency staleness on hit-only runs).
+///
+/// Dropping (or [`ReadHandle::flush`]ing) the handle drains everything.
+/// With the default config (batch 1) every access drains immediately and
+/// the handle is bit-identical to calling the cache directly. When a
+/// shard is driven by exactly one handle (the replay-worker topology),
+/// the drained event sequence equals the unbatched one for *any* batch
+/// size — drains preserve per-handle program order and nothing else
+/// touches the shard (property-tested in rust/tests/property_read_path.rs).
+pub struct ReadHandle<'a> {
+    cache: &'a ShardedCache,
+    cfg: RecencyConfig,
+    /// Per-shard buffered hit accesses, applied on drain.
+    buffers: Vec<Vec<(BlockId, AccessContext)>>,
+    /// Per-shard simulated time of the last drain (cadence trigger).
+    last_drain: Vec<SimTime>,
+}
+
+impl<'a> ReadHandle<'a> {
+    fn new(cache: &'a ShardedCache, cfg: RecencyConfig) -> Self {
+        assert!(cfg.batch >= 1, "recency batch must be >= 1");
+        let n = cache.n_shards();
+        ReadHandle {
+            cache,
+            cfg,
+            buffers: (0..n).map(|_| Vec::with_capacity(cfg.batch)).collect(),
+            last_drain: vec![SimTime::ZERO; n],
+        }
+    }
+
+    /// The recency configuration this handle drains under.
+    pub fn config(&self) -> RecencyConfig {
+        self.cfg
+    }
+
+    /// Buffered (not yet drained) accesses across all shards.
+    pub fn pending(&self) -> usize {
+        self.buffers.iter().map(Vec::len).sum()
+    }
+
+    /// The full access path, resolving hits lock-free where the view
+    /// allows. Outcome-compatible with [`ShardedCache::access_or_insert`].
+    pub fn access_or_insert(&mut self, block: BlockId, ctx: &AccessContext) -> AccessOutcome {
+        let idx = self.cache.shard_of(block);
+        if self.cfg.drain_cadence > SimDuration::ZERO
+            && !self.buffers[idx].is_empty()
+            && self.last_drain[idx] + self.cfg.drain_cadence <= ctx.time
+        {
+            self.drain_shard(idx);
+        }
+        if self.cache.views[idx].probe(block) == Probe::Hit {
+            // Count the hit NOW — snapshots fold it into hits+requests —
+            // and buffer only the recency bookkeeping.
+            self.cache.stats[idx].record_lockfree_hit();
+            self.buffers[idx].push((block, ctx.clone()));
+            if self.buffers[idx].len() >= self.cfg.batch {
+                self.drain_shard(idx);
+            }
+            return AccessOutcome {
+                hit: true,
+                evicted: Vec::new(),
+                causes: Vec::new(),
+                scan_steps: 0,
+                inserted: true,
+            };
+        }
+        // Miss or fallback: drain first (program order for the policy),
+        // then take the exact locked path.
+        self.drain_shard(idx);
+        self.cache.access_or_insert(block, ctx)
+    }
+
+    /// Drain every shard's buffer (also runs on drop).
+    pub fn flush(&mut self) {
+        for idx in 0..self.buffers.len() {
+            self.drain_shard(idx);
+        }
+    }
+
+    /// Apply one shard's buffered accesses to the policy, in buffer
+    /// (= program) order, under the shard lock. Entries whose block was
+    /// evicted since the probe are dropped by [`BlockCache::touch`] —
+    /// their hit was already counted at read time, where it linearized.
+    fn drain_shard(&mut self, idx: usize) {
+        if self.buffers[idx].is_empty() {
+            return;
+        }
+        let mut cache = self.cache.lock_shard(idx);
+        let mut latest = self.last_drain[idx];
+        for (block, ctx) in self.buffers[idx].drain(..) {
+            if ctx.time > latest {
+                latest = ctx.time;
+            }
+            cache.touch(block, &ctx);
+        }
+        self.last_drain[idx] = latest;
+    }
+}
+
+impl Drop for ReadHandle<'_> {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::super::builder::CacheBuilder;
     use super::super::lru::Lru;
     use super::*;
     use crate::sim::SimTime;
@@ -309,14 +548,20 @@ mod tests {
         AccessContext::simple(SimTime(t), size)
     }
 
-    fn lru_shards(n: usize) -> Vec<Box<dyn CachePolicy>> {
-        (0..n).map(|_| Box::new(Lru::new()) as Box<dyn CachePolicy>).collect()
+    /// `n` LRU shards of `cap` total bytes, via the builder.
+    fn lru_cache(n: usize, cap: u64) -> ShardedCache {
+        CacheBuilder::new()
+            .policy_with(|| Box::new(Lru::new()))
+            .shards(n)
+            .capacity(cap)
+            .build()
+            .unwrap()
     }
 
     #[test]
     fn single_shard_matches_bare_block_cache() {
         let mut bare = BlockCache::new(Box::new(Lru::new()), 3);
-        let sharded = ShardedCache::new(lru_shards(1), 3);
+        let sharded = lru_cache(1, 3);
         for t in 0..200u64 {
             let b = BlockId((t * 7 + t % 5) % 11);
             let c = ctx(t, 1);
@@ -330,7 +575,7 @@ mod tests {
 
     #[test]
     fn capacity_splits_exactly() {
-        let sharded = ShardedCache::new(lru_shards(3), 10);
+        let sharded = lru_cache(3, 10);
         assert_eq!(sharded.capacity(), 10);
         // Fill the whole keyspace; occupancy can never exceed the total.
         for t in 0..500u64 {
@@ -346,7 +591,7 @@ mod tests {
 
     #[test]
     fn routing_is_stable_and_partitioned() {
-        let sharded = ShardedCache::new(lru_shards(4), 64);
+        let sharded = lru_cache(4, 64);
         for id in 0..256u64 {
             let b = BlockId(id);
             let s = sharded.shard_of(b);
@@ -361,7 +606,7 @@ mod tests {
 
     #[test]
     fn stats_merge_counts_all_shards() {
-        let sharded = ShardedCache::new(lru_shards(2), 4);
+        let sharded = lru_cache(2, 4);
         for t in 0..10u64 {
             sharded.access_or_insert(BlockId(t % 3), &ctx(t, 1));
         }
@@ -381,36 +626,28 @@ mod tests {
 
     #[test]
     fn remove_and_contains_route_consistently() {
-        let sharded = ShardedCache::new(lru_shards(4), 16);
+        let sharded = lru_cache(4, 16);
         sharded.access_or_insert(BlockId(9), &ctx(0, 1));
         assert!(sharded.contains(BlockId(9)));
+        assert_eq!(sharded.probe(BlockId(9)), Probe::Hit);
         assert!(sharded.remove(BlockId(9)));
         assert!(!sharded.remove(BlockId(9)));
         assert!(!sharded.contains(BlockId(9)));
+        assert_eq!(sharded.probe(BlockId(9)), Probe::Miss);
         assert_eq!(sharded.used(), 0);
-    }
-
-    #[test]
-    fn registry_constructor_rejects_unknown_policy() {
-        assert!(ShardedCache::from_registry("nonsense", 2, 8).is_none());
-        let c = ShardedCache::from_registry("h-svm-lru", 2, 8).unwrap();
-        assert_eq!(c.n_shards(), 2);
-        assert_eq!(c.policy_name(), "h-svm-lru");
-        assert_eq!(c.admission_name(), "always");
-    }
-
-    #[test]
-    fn registry_constructor_rejects_unknown_admission() {
-        assert!(ShardedCache::from_registry_with_admission("lru", "nonsense", 2, 8).is_none());
-        let c = ShardedCache::from_registry_with_admission("lru", "tinylfu", 2, 8).unwrap();
-        assert_eq!(c.admission_name(), "tinylfu");
     }
 
     #[test]
     fn admission_counters_flow_into_merged_stats() {
         // Ghost probation: every first sighting is refused, the second
         // admits — both outcomes must show up in the merged counters.
-        let c = ShardedCache::from_registry_with_admission("lru", "ghost", 2, 8).unwrap();
+        let c = CacheBuilder::new()
+            .policy("lru")
+            .admission("ghost")
+            .shards(2)
+            .capacity(8)
+            .build()
+            .unwrap();
         for round in 0..2u64 {
             for id in 0..6u64 {
                 c.access_or_insert(BlockId(id), &ctx(round * 6 + id, 1));
@@ -435,7 +672,13 @@ mod tests {
         // The names are captured at construction: they must be readable
         // even while every shard lock (including shard 0's) is held — the
         // pre-fix implementation deadlocked here.
-        let c = ShardedCache::from_registry_with_admission("h-svm-lru", "tinylfu", 2, 8).unwrap();
+        let c = CacheBuilder::new()
+            .policy("h-svm-lru")
+            .admission("tinylfu")
+            .shards(2)
+            .capacity(8)
+            .build()
+            .unwrap();
         let guards: Vec<_> = c.shards.iter().map(|s| s.lock().unwrap()).collect();
         assert_eq!(c.policy_name(), "h-svm-lru");
         assert_eq!(c.admission_name(), "tinylfu");
@@ -447,7 +690,7 @@ mod tests {
         // The acceptance criterion of the lock split: every counter read
         // must work while every shard Mutex is held by someone else. The
         // pre-split implementation deadlocked on the first stats() call.
-        let c = ShardedCache::from_registry("lru", 4, 16).unwrap();
+        let c = lru_cache(4, 16);
         for t in 0..32u64 {
             c.access_or_insert(BlockId(t % 8), &ctx(t, 1));
         }
@@ -467,8 +710,20 @@ mod tests {
     }
 
     #[test]
+    fn membership_probe_never_takes_a_shard_lock() {
+        // Same criterion for the read path: the probe must answer while
+        // every shard Mutex is held.
+        let c = lru_cache(4, 16);
+        c.access_or_insert(BlockId(3), &ctx(0, 1));
+        let guards: Vec<_> = c.shards.iter().map(|s| s.lock().unwrap()).collect();
+        assert_eq!(c.probe(BlockId(3)), Probe::Hit);
+        assert_eq!(c.probe(BlockId(99)), Probe::Miss);
+        drop(guards);
+    }
+
+    #[test]
     fn snapshot_couples_counters_and_occupancy() {
-        let c = ShardedCache::from_registry("lru", 1, 4).unwrap();
+        let c = lru_cache(1, 4);
         for t in 0..6u64 {
             c.access_or_insert(BlockId(t), &ctx(t, 1));
         }
@@ -488,7 +743,7 @@ mod tests {
         // Each worker replays only blocks that route to its shard; totals
         // must equal the sequential sum (the no-data-races smoke test).
         let n = 4usize;
-        let sharded = ShardedCache::new(lru_shards(n), 8 * n as u64);
+        let sharded = lru_cache(n, 8 * n as u64);
         let ids: Vec<BlockId> = (0..400u64).map(BlockId).collect();
         std::thread::scope(|scope| {
             for w in 0..n {
@@ -507,5 +762,150 @@ mod tests {
         assert_eq!(stats.requests, 400);
         assert_eq!(stats.hits + stats.misses, 400);
         assert!(sharded.used() <= sharded.capacity());
+    }
+
+    #[test]
+    fn view_tracks_residency_through_evictions() {
+        let c = lru_cache(1, 3);
+        for t in 0..3u64 {
+            c.access_or_insert(BlockId(t), &ctx(t, 1));
+        }
+        // Block 3 evicts the LRU block 0; the view must follow.
+        c.access_or_insert(BlockId(3), &ctx(3, 1));
+        assert_eq!(c.probe(BlockId(0)), Probe::Miss);
+        for id in 1..4u64 {
+            assert_eq!(c.probe(BlockId(id)), Probe::Hit, "block {id}");
+        }
+    }
+
+    #[test]
+    fn read_handle_batch_1_is_bit_identical_to_direct_calls() {
+        let direct = lru_cache(2, 6);
+        let handled = lru_cache(2, 6);
+        let mut handle = handled.read_handle();
+        assert_eq!(handle.config(), RecencyConfig::default());
+        for t in 0..400u64 {
+            let b = BlockId((t * 13 + t % 7) % 17);
+            let c = ctx(t, 1);
+            let a = direct.access_or_insert(b, &c);
+            let h = handle.access_or_insert(b, &c);
+            assert_eq!(a, h, "outcome divergence at t={t}");
+            assert_eq!(handle.pending(), 0, "batch=1 must drain immediately");
+        }
+        drop(handle);
+        assert_eq!(direct.stats(), handled.stats());
+        assert_eq!(direct.cached_blocks(), handled.cached_blocks());
+    }
+
+    #[test]
+    fn read_handle_batched_buffers_hits_and_counts_them_at_read_time() {
+        let c = CacheBuilder::new()
+            .policy_with(|| Box::new(Lru::new()))
+            .capacity(4)
+            .recency(RecencyConfig::default().with_batch(64))
+            .build()
+            .unwrap();
+        let mut handle = c.read_handle();
+        for t in 0..4u64 {
+            handle.access_or_insert(BlockId(t), &ctx(t, 1));
+        }
+        // Three hits: buffered (no drain at batch 64) yet counted already.
+        for t in 4..7u64 {
+            let o = handle.access_or_insert(BlockId(t - 4), &ctx(t, 1));
+            assert!(o.hit);
+        }
+        assert_eq!(handle.pending(), 3, "hits buffered, not drained");
+        let s = c.stats();
+        assert_eq!(s.hits, 3, "buffered hits count at read time");
+        assert_eq!(s.requests, 7);
+        assert_eq!(s.hits + s.misses, s.requests);
+        // A miss on the same shard drains before mutating.
+        handle.access_or_insert(BlockId(100), &ctx(7, 1));
+        assert_eq!(handle.pending(), 0);
+        drop(handle);
+        assert_eq!(c.stats().requests, 8);
+    }
+
+    #[test]
+    fn read_handle_cadence_drains_on_simulated_time() {
+        let c = CacheBuilder::new()
+            .policy_with(|| Box::new(Lru::new()))
+            .capacity(4)
+            .recency(
+                RecencyConfig::default()
+                    .with_batch(1_000)
+                    .with_drain_cadence(SimDuration::from_micros(10)),
+            )
+            .build()
+            .unwrap();
+        let mut handle = c.read_handle();
+        handle.access_or_insert(BlockId(0), &ctx(0, 1)); // miss: inserts
+        assert!(handle.access_or_insert(BlockId(0), &ctx(1, 1)).hit);
+        assert_eq!(handle.pending(), 1);
+        // Two micros later: within cadence, still buffered.
+        assert!(handle.access_or_insert(BlockId(0), &ctx(3, 1)).hit);
+        assert_eq!(handle.pending(), 2);
+        // Past the cadence: the incoming access drains the stale buffer
+        // first, then buffers itself.
+        assert!(handle.access_or_insert(BlockId(0), &ctx(30, 1)).hit);
+        assert_eq!(handle.pending(), 1);
+        handle.flush();
+        assert_eq!(handle.pending(), 0);
+        assert_eq!(c.stats().hits, 3);
+    }
+
+    #[test]
+    fn read_handle_equivalent_to_unbatched_for_any_batch_when_single_threaded() {
+        // One handle drives the whole cache (the one-worker-per-shard
+        // replay topology collapsed to one thread): for ANY batch size the
+        // drained event order equals program order, so contents and stats
+        // match the unbatched run exactly.
+        for batch in [1usize, 4, 32, 1_024] {
+            let reference = lru_cache(2, 6);
+            let batched = CacheBuilder::new()
+                .policy_with(|| Box::new(Lru::new()))
+                .shards(2)
+                .capacity(6)
+                .recency(RecencyConfig::default().with_batch(batch))
+                .build()
+                .unwrap();
+            let mut handle = batched.read_handle();
+            for t in 0..600u64 {
+                let b = BlockId((t * 13 + t % 7) % 17);
+                let c = ctx(t, 1);
+                reference.access_or_insert(b, &c);
+                handle.access_or_insert(b, &c);
+            }
+            drop(handle);
+            assert_eq!(reference.stats(), batched.stats(), "batch={batch}");
+            assert_eq!(
+                reference.cached_blocks(),
+                batched.cached_blocks(),
+                "batch={batch}"
+            );
+        }
+    }
+
+    #[test]
+    fn saturated_view_falls_back_to_the_exact_locked_path() {
+        // A capacity far past the table clamp saturates the view (the
+        // locked path stays exact); the handle must keep working and the
+        // view must answer Fallback, never a wrong verdict.
+        let c = CacheBuilder::new()
+            .policy_with(|| Box::new(Lru::new()))
+            .capacity(200_000)
+            .build()
+            .unwrap();
+        let mut handle = c.read_handle();
+        for t in 0..120_000u64 {
+            handle.access_or_insert(BlockId(t % 110_000), &ctx(t, 1));
+        }
+        drop(handle);
+        assert!(c.views[0].is_saturated(), "population over the table clamp");
+        assert_eq!(c.probe(BlockId(0)), Probe::Fallback);
+        let s = c.stats();
+        assert_eq!(s.requests, 120_000);
+        assert_eq!(s.hits + s.misses, s.requests);
+        assert_eq!(s.hits, 10_000, "second pass over 0..10_000 hits via the locked path");
     }
 }

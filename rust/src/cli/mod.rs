@@ -67,6 +67,8 @@ impl Cli {
             "--admission",
             "--batch-queue",
             "--batch-deadline-ms",
+            "--recency-batch",
+            "--recency-drain-cadence-ms",
             "--readers",
             "--jobs",
             "--baseline",
@@ -164,6 +166,33 @@ impl Cli {
     pub fn batch_deadline_ms(&self, fallback: u64) -> Result<u64> {
         match self.flag("batch-deadline-ms") {
             Some(s) => s.parse().context("bad --batch-deadline-ms"),
+            None => Ok(fallback),
+        }
+    }
+
+    /// Recency updates buffered per replay worker before a batched drain
+    /// under the shard lock (`--recency-batch`, default `fallback`).
+    /// 1 = drain every access immediately (the legacy, bit-exact
+    /// behaviour).
+    pub fn recency_batch(&self, fallback: usize) -> Result<usize> {
+        match self.flag("recency-batch") {
+            Some(s) => {
+                let v: usize = s.parse().context("bad --recency-batch")?;
+                if v == 0 {
+                    bail!("--recency-batch must be >= 1");
+                }
+                Ok(v)
+            }
+            None => Ok(fallback),
+        }
+    }
+
+    /// Drain cadence of the recency buffers in simulated (request-clock)
+    /// milliseconds (`--recency-drain-cadence-ms`, default `fallback`;
+    /// 0 = no cadence-triggered drains).
+    pub fn recency_drain_cadence_ms(&self, fallback: u64) -> Result<u64> {
+        match self.flag("recency-drain-cadence-ms") {
+            Some(s) => s.parse().context("bad --recency-drain-cadence-ms"),
             None => Ok(fallback),
         }
     }
@@ -311,6 +340,15 @@ FLAGS
   --batch-deadline-ms MS   flush deadline of the cold-query queue, in
                            simulated (request-clock) milliseconds
                            (default 2; `simulate`/`online`)
+  --recency-batch N        recency updates buffered per replay worker
+                           before a batched drain under the shard lock
+                           (default 1 = immediate, bit-exact legacy
+                           behaviour; `sharded`/`online`/`dag`)
+  --recency-drain-cadence-ms MS
+                           drain cadence of the recency buffers, in
+                           simulated (request-clock) milliseconds
+                           (default 0 = fill-triggered drains only;
+                           `sharded`/`online`/`dag`)
   --readers N              concurrent stats() reader threads during the
                            `sharded` replay (default 0)
   --jobs N                 concurrent DAG jobs for `dag` (default 3)
@@ -413,6 +451,20 @@ mod tests {
         assert!(parse(&["online", "--batch-queue", "0"]).batch_queue(1).is_err());
         assert!(parse(&["online", "--batch-queue", "x"]).batch_queue(1).is_err());
         assert!(parse(&["online", "--batch-deadline-ms", "-1"]).batch_deadline_ms(2).is_err());
+    }
+
+    #[test]
+    fn recency_flags_parse_and_validate() {
+        let cli = parse(&["sharded", "--recency-batch", "64", "--recency-drain-cadence-ms", "5"]);
+        assert_eq!(cli.recency_batch(1).unwrap(), 64);
+        assert_eq!(cli.recency_drain_cadence_ms(0).unwrap(), 5);
+        assert_eq!(parse(&["sharded"]).recency_batch(1).unwrap(), 1);
+        assert_eq!(parse(&["sharded"]).recency_drain_cadence_ms(0).unwrap(), 0);
+        assert!(parse(&["sharded", "--recency-batch", "0"]).recency_batch(1).is_err());
+        assert!(parse(&["sharded", "--recency-batch", "x"]).recency_batch(1).is_err());
+        assert!(parse(&["sharded", "--recency-drain-cadence-ms", "-1"])
+            .recency_drain_cadence_ms(0)
+            .is_err());
     }
 
     #[test]

@@ -81,6 +81,15 @@ pub struct ClusterConfig {
     /// deterministic): the oldest deferred query never waits longer than
     /// this for its batch.
     pub cache_batch_deadline_ms: u64,
+    /// Lock-free-hit recency updates buffered per replay worker before a
+    /// batched drain under the shard lock (see `cache::read_path`). 1 =
+    /// drain every hit immediately (the legacy locked-hit behaviour).
+    pub cache_recency_batch: usize,
+    /// Cadence drain of the recency buffers in **simulated** milliseconds
+    /// (request-clock time, deterministic): a non-empty buffer older than
+    /// this drains on the next access. 0 disables the cadence (drains are
+    /// fill- and mutation-driven only).
+    pub cache_recency_drain_cadence_ms: u64,
     /// Map container memory (mapreduce.map.memory.mb) — bounds map slots.
     pub map_memory_mb: u64,
     /// Reduce container memory (mapreduce.reduce.memory.mb).
@@ -111,6 +120,8 @@ impl Default for ClusterConfig {
             cache_admission: "always".into(),
             cache_batch_queue: 1,
             cache_batch_deadline_ms: 2,
+            cache_recency_batch: 1,
+            cache_recency_drain_cadence_ms: 0,
             map_memory_mb: 1024,
             reduce_memory_mb: 2048,
             node_memory_mb: 16 * 1024,
@@ -143,6 +154,16 @@ impl ClusterConfig {
         self.cache_capacity_per_node / self.block_size.max(1)
     }
 
+    /// The recency-batching knobs as a [`crate::cache::RecencyConfig`]
+    /// (cadence converted from simulated milliseconds to microseconds).
+    pub fn recency_config(&self) -> crate::cache::RecencyConfig {
+        crate::cache::RecencyConfig::default()
+            .with_batch(self.cache_recency_batch.max(1))
+            .with_drain_cadence(crate::sim::SimDuration::from_micros(
+                self.cache_recency_drain_cadence_ms.saturating_mul(1000),
+            ))
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.datanodes == 0 {
             bail!("datanodes must be > 0");
@@ -169,6 +190,9 @@ impl ClusterConfig {
         }
         if self.cache_batch_queue == 0 {
             bail!("cache_batch_queue must be > 0");
+        }
+        if self.cache_recency_batch == 0 {
+            bail!("cache_recency_batch must be > 0");
         }
         if self.disk.read_bandwidth_bps <= 0.0
             || self.network.bandwidth_bps <= 0.0
@@ -218,6 +242,18 @@ impl ClusterConfig {
                 bail!("cluster.cache_batch_deadline_ms must be >= 0, got {v}");
             }
             self.cache_batch_deadline_ms = v as u64;
+        }
+        if let Some(v) = doc.get_i64("cluster.cache_recency_batch") {
+            if v <= 0 {
+                bail!("cluster.cache_recency_batch must be positive, got {v}");
+            }
+            self.cache_recency_batch = v as usize;
+        }
+        if let Some(v) = doc.get_i64("cluster.cache_recency_drain_cadence_ms") {
+            if v < 0 {
+                bail!("cluster.cache_recency_drain_cadence_ms must be >= 0, got {v}");
+            }
+            self.cache_recency_drain_cadence_ms = v as u64;
         }
         if let Some(v) = doc.get_i64("cluster.map_memory_mb") {
             self.map_memory_mb = v as u64;
@@ -440,6 +476,32 @@ kernel = "linear"
         let doc = toml::Document::parse("[cluster]\ncache_batch_queue = -1").unwrap();
         assert!(ClusterConfig::default().apply_toml(&doc).is_err());
         let doc = toml::Document::parse("[cluster]\ncache_batch_deadline_ms = -3").unwrap();
+        assert!(ClusterConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn recency_knobs_validated_and_overridable() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.cache_recency_batch, 1, "default = legacy immediate drain");
+        assert_eq!(c.cache_recency_drain_cadence_ms, 0);
+        assert!(!c.recency_config().is_buffered(), "defaults are behavior-preserving");
+        let c = ClusterConfig { cache_recency_batch: 0, ..Default::default() };
+        assert!(c.validate().is_err());
+        let doc = toml::Document::parse(
+            "[cluster]\ncache_recency_batch = 64\ncache_recency_drain_cadence_ms = 5",
+        )
+        .unwrap();
+        let mut c = ClusterConfig::default();
+        c.apply_toml(&doc).unwrap();
+        assert_eq!(c.cache_recency_batch, 64);
+        assert_eq!(c.cache_recency_drain_cadence_ms, 5);
+        let rc = c.recency_config();
+        assert_eq!(rc.batch, 64);
+        assert_eq!(rc.drain_cadence, crate::sim::SimDuration::from_micros(5000));
+        let doc = toml::Document::parse("[cluster]\ncache_recency_batch = -1").unwrap();
+        assert!(ClusterConfig::default().apply_toml(&doc).is_err());
+        let doc =
+            toml::Document::parse("[cluster]\ncache_recency_drain_cadence_ms = -3").unwrap();
         assert!(ClusterConfig::default().apply_toml(&doc).is_err());
     }
 

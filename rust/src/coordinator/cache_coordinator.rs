@@ -29,9 +29,7 @@ use crate::util::fasthash::IdHashMap;
 
 use anyhow::Result;
 
-use crate::cache::admission::make_admission;
-use crate::cache::registry::make_policy;
-use crate::cache::{AccessContext, CacheAffinity, ShardStats, ShardedCache};
+use crate::cache::{AccessContext, CacheAffinity, CacheBuilder, ShardStats, ShardedCache};
 use crate::hdfs::{
     classify, service_time, BlockId, BlockKind, BlockLocation, DataNodeId, ReadSource,
 };
@@ -157,25 +155,14 @@ impl CacheCoordinator {
                 let admission = cluster.cfg.cache_admission.as_str();
                 let caches = (0..cluster.cfg.datanodes)
                     .map(|_| {
-                        let policies = (0..shards)
-                            .map(|_| {
-                                make_policy(policy).ok_or_else(|| {
-                                    anyhow::anyhow!("unknown policy {policy:?}")
-                                })
-                            })
-                            .collect::<Result<Vec<_>>>()?;
-                        let admissions = (0..shards)
-                            .map(|_| {
-                                make_admission(admission).ok_or_else(|| {
-                                    anyhow::anyhow!("unknown admission policy {admission:?}")
-                                })
-                            })
-                            .collect::<Result<Vec<_>>>()?;
-                        Ok(ShardedCache::with_admission(
-                            policies,
-                            admissions,
-                            cluster.cfg.cache_capacity_per_node,
-                        ))
+                        CacheBuilder::new()
+                            .policy(policy)
+                            .admission(admission)
+                            .shards(shards)
+                            .capacity(cluster.cfg.cache_capacity_per_node)
+                            .recency(cluster.cfg.recency_config())
+                            .build()
+                            .map_err(anyhow::Error::from)
                     })
                     .collect::<Result<Vec<_>>>()?;
                 // The SVM must score requests when either the eviction

@@ -450,7 +450,7 @@ pub struct TrainerReport {
 /// published.
 ///
 /// Run it on a scoped thread next to the shard workers (see
-/// [`crate::sim::parallel::run_sharded_with_background`]) or a detached
+/// [`crate::sim::parallel::FanoutOptions::background`]) or a detached
 /// `std::thread` for long-lived deployments.
 pub fn trainer_loop(
     rx: Receiver<LabeledSample>,

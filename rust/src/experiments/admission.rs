@@ -16,7 +16,7 @@ use crate::svm::KernelKind;
 use crate::util::table::{fmt_f, Table};
 use crate::workload::BlockRequest;
 
-use super::sharded_replay::{classify_trace, run_with_admission, ShardedReplayReport};
+use super::sharded_replay::{classify_trace, replay, ReplayOptions, ShardedReplayReport};
 
 /// One eviction policy's replays across every admission policy, in
 /// [`AdmissionSweep::admissions`] order.
@@ -74,7 +74,10 @@ pub fn run_matrix(
     for &policy in policies {
         let cells = admissions
             .iter()
-            .map(|&adm| run_with_admission(policy, adm, shards, capacity, trace, &classes))
+            .map(|&adm| {
+                let opts = ReplayOptions::new().admission(adm).classes(&classes);
+                Ok(replay(policy, shards, capacity, trace, &opts)?.report)
+            })
             .collect::<Result<Vec<_>>>()?;
         rows.push(AdmissionRow { policy: policy.to_string(), cells });
     }
@@ -205,9 +208,15 @@ mod tests {
     fn always_column_matches_plain_replay() {
         let trace = fig3_trace(BLOCK, 5);
         let classes = classify_trace(&trace, KernelKind::Rbf, 64).unwrap();
-        let plain =
-            super::super::sharded_replay::run_with_classes("lru", 2, 8 * BLOCK, &trace, &classes)
-                .unwrap();
+        let plain = replay(
+            "lru",
+            2,
+            8 * BLOCK,
+            &trace,
+            &ReplayOptions::new().classes(&classes),
+        )
+        .unwrap()
+        .report;
         let sweep =
             run_matrix("fig3", &["lru"], &["always"], 2, 8 * BLOCK, &trace).unwrap();
         let cell = &sweep.rows[0].cells[0];

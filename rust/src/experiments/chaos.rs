@@ -33,7 +33,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{Context, Result};
 
 use crate::cache::sharded::{shard_of, ShardStats, ShardedCache};
-use crate::cache::AccessContext;
+use crate::cache::{AccessContext, CacheBuilder, RecencyConfig};
 use crate::coordinator::batcher::{BatcherConfig, BatcherProbe, BreakerConfig, ShardBatcher};
 use crate::coordinator::online::{
     sample_channel, trainer_loop_resilient, SampleSender, SnapshotBackend, SnapshotCell,
@@ -42,7 +42,7 @@ use crate::coordinator::online::{
 use crate::coordinator::TrainingPipeline;
 use crate::obs::{merge_series, MetricsRegistry, WindowAccum, WindowSeries};
 use crate::runtime::{RustBackend, SvmBackend};
-use crate::sim::parallel::{run_sharded, run_sharded_with_background};
+use crate::sim::parallel::{run_fanout, FanoutOptions, FanoutReport};
 use crate::sim::{FaultEvent, FaultInjector, FaultPlan, FaultWindow, FaultyBackend, SimDuration};
 use crate::svm::features::BlockStatsTracker;
 use crate::svm::KernelKind;
@@ -55,6 +55,25 @@ use super::online_sharded::{pretrain_model, SAMPLE_CHANNEL_BOUND};
 /// back within this absolute gap of the pre-outage hit ratio counts as
 /// recovered.
 pub const RECOVERY_GAP: f64 = 0.10;
+
+/// Cache construction of both chaos arms: registry policy, no admission,
+/// the caller's recency batching (the serving arm threads its `recency`
+/// knob here; the trainer arm faults the classifier path only, so its
+/// cache front stays at the behavior-preserving default).
+fn chaos_cache(
+    policy: &str,
+    shards: usize,
+    capacity: u64,
+    recency: RecencyConfig,
+) -> Result<ShardedCache> {
+    CacheBuilder::new()
+        .policy(policy)
+        .shards(shards.max(1))
+        .capacity(capacity)
+        .recency(recency)
+        .build()
+        .with_context(|| format!("building {shards}-shard {policy:?} cache"))
+}
 
 /// The default chaos script for a serving replay over `trace`: one
 /// classifier outage across 30–55% of the trace's simulated span and one
@@ -150,6 +169,10 @@ fn phase_hit(windows: &[(u64, WindowAccum)], mut keep: impl FnMut(u64) -> bool) 
 ///
 /// With an all-clear plan and the breaker disabled this is bit-identical
 /// to the fault-free frozen replay ([`super::online_sharded::run_online`]).
+/// `recency` sets the cache's lock-free hit batching: merged hit/miss
+/// totals are exact for any batch (hits count at read time), so a chaos
+/// replay under buffered recency reports the same stats as the immediate
+/// one — property-tested in rust/tests/property_read_path.rs.
 #[allow(clippy::too_many_arguments)] // the chaos replay's full knob surface
 pub fn run_serving_chaos(
     policy: &str,
@@ -161,11 +184,11 @@ pub fn run_serving_chaos(
     injector: &FaultInjector,
     registry: &MetricsRegistry,
     window_us: u64,
+    recency: RecencyConfig,
 ) -> Result<ServingChaosReport> {
     let model = pretrain_model(trace, kernel)?
         .context("chaos serving arm needs a two-class trace to pretrain the classifier")?;
-    let cache = ShardedCache::from_registry(policy, shards, capacity)
-        .with_context(|| format!("unknown policy {policy:?}"))?;
+    let cache = chaos_cache(policy, shards, capacity, recency)?;
     let n = cache.n_shards();
     let mut partitions: Vec<Vec<usize>> = vec![Vec::new(); n];
     for (i, req) in trace.iter().enumerate() {
@@ -191,6 +214,9 @@ pub fn run_serving_chaos(
             FaultyBackend::new(SnapshotBackend::new(Arc::clone(&cell)), injector.clone());
         let mut shard_batcher = ShardBatcher::with_probe(batcher_cfg, batch_probe.clone());
         let mut windows = WindowSeries::new(window_us);
+        // Lock-free hit front: membership resolves against the shard's
+        // read view, recency updates drain in batches per `recency`.
+        let mut handle = cache.read_handle();
         for &i in &partitions[w] {
             let req = &trace[i];
             let features = tracker.features(
@@ -222,7 +248,7 @@ pub fn run_serving_chaos(
                 predicted_reuse: predicted,
                 recompute_cost: req.recompute_cost,
             };
-            let outcome = cache.access_or_insert(req.block, &ctx);
+            let outcome = handle.access_or_insert(req.block, &ctx);
             tracker.record_access(req.block, 0, req.time);
             let win = windows.at(req.time);
             win.requests += 1;
@@ -233,9 +259,11 @@ pub fn run_serving_chaos(
         // stranded queue and accounts it, keeping the conservation
         // invariant cold == flushed + dropped.
         let _ = shard_batcher.flush(&mut backend);
+        // Flush buffered recency before reading this shard's final state.
+        drop(handle);
         (cache.stats_of(w), windows.finish())
     };
-    let per_worker = run_sharded(n, worker);
+    let per_worker = run_fanout(n, worker, FanoutOptions::new()).into_workers();
 
     let mut stats = ShardStats::default();
     let mut window_parts = Vec::with_capacity(per_worker.len());
@@ -316,8 +344,7 @@ pub fn run_trainer_chaos(
     injector: &FaultInjector,
     registry: &MetricsRegistry,
 ) -> Result<TrainerChaosReport> {
-    let cache = ShardedCache::from_registry(policy, shards, capacity)
-        .with_context(|| format!("unknown policy {policy:?}"))?;
+    let cache = chaos_cache(policy, shards, capacity, RecencyConfig::default())?;
     let n = cache.n_shards();
     let mut partitions: Vec<Vec<usize>> = vec![Vec::new(); n];
     for (i, req) in trace.iter().enumerate() {
@@ -380,28 +407,35 @@ pub fn run_trainer_chaos(
 
     let trainer_cell = Arc::clone(&cell);
     let trainer_injector = injector.clone();
-    let (per_worker, trainer) = run_sharded_with_background(
+    let FanoutReport { workers, background, .. } = run_fanout(
         n,
         worker,
-        move || {
-            let mut backend = RustBackend::new(kernel);
-            let mut pipeline = TrainingPipeline::new(cfg.min_samples, cfg.retrain_interval);
-            trainer_loop_resilient(
-                rx,
-                &mut backend,
-                &mut pipeline,
-                &trainer_cell,
-                Some(&trainer_injector),
-            )
-        },
-        || {
-            master.lock().expect("sender mutex poisoned").take();
-        },
+        FanoutOptions::new()
+            .background(
+                move || {
+                    let mut backend = RustBackend::new(kernel);
+                    let mut pipeline =
+                        TrainingPipeline::new(cfg.min_samples, cfg.retrain_interval);
+                    trainer_loop_resilient(
+                        rx,
+                        &mut backend,
+                        &mut pipeline,
+                        &trainer_cell,
+                        Some(&trainer_injector),
+                    )
+                },
+                || {
+                    master.lock().expect("sender mutex poisoned").take();
+                },
+            ),
     );
-    let trainer = trainer.context("resilient background trainer failed")?;
+    let trainer = background
+        .expect("background configured")
+        .context("resilient background trainer failed")?;
 
     let mut stats = ShardStats::default();
-    for shard_stats in per_worker {
+    for shard_stats in workers {
+        let shard_stats = shard_stats.expect("panicked worker in a non-resilient run");
         stats.merge(&shard_stats);
     }
     // End-of-run trainer facts, readable at export time. The staleness
@@ -482,6 +516,7 @@ mod tests {
                 KernelKind::Rbf,
                 TrainerConfig::default(),
                 BatcherConfig::default(),
+                crate::cache::RecencyConfig::default(),
             )
             .unwrap();
             let injector = FaultInjector::new(FaultPlan::all_clear(5));
@@ -495,6 +530,7 @@ mod tests {
                 &injector,
                 &MetricsRegistry::disabled(),
                 DEFAULT_WINDOW_US,
+                crate::cache::RecencyConfig::default(),
             )
             .unwrap();
             assert_eq!(chaos.stats, baseline.stats, "{shards}-shard all-clear parity");
@@ -521,6 +557,7 @@ mod tests {
                 &injector,
                 &MetricsRegistry::disabled(),
                 DEFAULT_WINDOW_US,
+                crate::cache::RecencyConfig::default(),
             )
             .unwrap()
         };
@@ -557,6 +594,7 @@ mod tests {
             &svm_injector,
             &MetricsRegistry::disabled(),
             DEFAULT_WINDOW_US,
+            crate::cache::RecencyConfig::default(),
         )
         .unwrap();
         let lru_injector = FaultInjector::new(plan);
@@ -570,6 +608,7 @@ mod tests {
             &lru_injector,
             &MetricsRegistry::disabled(),
             DEFAULT_WINDOW_US,
+            crate::cache::RecencyConfig::default(),
         )
         .unwrap();
         // Under classifier outage H-SVM-LRU degrades to the unclassified

@@ -28,10 +28,10 @@
 
 use std::collections::{HashMap, HashSet};
 
-use anyhow::{anyhow, Result};
+use anyhow::{Context, Result};
 
 use crate::cache::sharded::{shard_of, ShardStats, ShardedCache};
-use crate::cache::{AccessContext, CacheAffinity, EvictCause};
+use crate::cache::{AccessContext, CacheAffinity, CacheBuilder, EvictCause};
 use crate::config::ClusterConfig;
 use crate::hdfs::topology::Placement;
 use crate::hdfs::{reader, BlockId, BlockKind, DataNodeId, ReadSource};
@@ -507,8 +507,13 @@ fn run_dag_pass_inner(
     observe: Option<(&MetricsRegistry, ObsConfig)>,
     chaos: Option<&DagChaos<'_>>,
 ) -> Result<(DagReport, Vec<BlockRequest>, Option<(WindowSeries, Vec<PendingEvict>)>)> {
-    let cache = ShardedCache::from_registry(policy, shards, capacity)
-        .ok_or_else(|| anyhow!("unknown policy {policy:?}"))?;
+    let cache = CacheBuilder::new()
+        .policy(policy)
+        .shards(shards.max(1))
+        .capacity(capacity)
+        .recency(cfg.recency_config())
+        .build()
+        .with_context(|| format!("building {shards}-shard {policy:?} cache"))?;
     let mut svc = DagBlockService::new(cfg, cache, classes.to_vec());
     if let Some((registry, obs_cfg)) = observe {
         svc.enable_obs(registry, obs_cfg);

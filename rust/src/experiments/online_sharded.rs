@@ -26,7 +26,7 @@
 //! [`TrainerMode::Frozen`] is the control arm: the identical worker path
 //! with the trainer disabled and a single pre-trained snapshot published
 //! up front. It is bit-identical to the classify-once replay
-//! (`run_with_classes`) — the parity is property-tested in
+//! ([`super::sharded_replay::replay`]) — the parity is property-tested in
 //! rust/tests/property_online.rs and smoke-checked by `repro online
 //! --smoke` in CI.
 
@@ -36,7 +36,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::cache::sharded::{shard_of, ShardStats, ShardedCache};
-use crate::cache::{AccessContext, EvictCause};
+use crate::cache::{AccessContext, CacheBuilder, EvictCause, RecencyConfig};
 use crate::coordinator::batcher::{BatcherConfig, BatcherObs, BatcherProbe, ShardBatcher};
 use crate::coordinator::online::{
     sample_channel, trainer_loop, SampleSender, SnapshotBackend, SnapshotCell, TrainerConfig,
@@ -49,7 +49,7 @@ use crate::obs::{
     ObsConfig, RunObservations, WindowSeries,
 };
 use crate::runtime::{RustBackend, SvmBackend};
-use crate::sim::parallel::{run_sharded, run_sharded_with_background};
+use crate::sim::parallel::{run_fanout, FanoutOptions, FanoutReport};
 use crate::svm::features::{BlockStatsTracker, FeatureVec};
 use crate::svm::smo::SmoModel;
 use crate::svm::KernelKind;
@@ -176,6 +176,23 @@ impl OnlineReplayReport {
 /// dataset construction, same `RustBackend` training path. `None` when
 /// the trace is single-class — then the frozen arm replays unclassified,
 /// matching classify-once's all-`None` predictions.
+/// Shared cache construction of both online drivers: registry policy, no
+/// admission, the caller's recency batching.
+fn build_cache(
+    policy: &str,
+    shards: usize,
+    capacity: u64,
+    recency: RecencyConfig,
+) -> Result<ShardedCache> {
+    CacheBuilder::new()
+        .policy(policy)
+        .shards(shards.max(1))
+        .capacity(capacity)
+        .recency(recency)
+        .build()
+        .with_context(|| format!("building {shards}-shard {policy:?} cache"))
+}
+
 pub fn pretrain_model(trace: &[BlockRequest], kernel: KernelKind) -> Result<Option<SmoModel>> {
     let (_, dataset) = trace_dataset(trace);
     if dataset.n_positive() == 0 || dataset.n_positive() == dataset.len() {
@@ -191,7 +208,9 @@ pub fn pretrain_model(trace: &[BlockRequest], kernel: KernelKind) -> Result<Opti
 /// protocol). `cfg` sets the online trainer's cadence; ignored when
 /// frozen. `batcher` bounds each worker's cold-query queue — the default
 /// (`queue_depth` 1) flushes every cold query inline and keeps the frozen
-/// arm bit-identical to the classify-once path.
+/// arm bit-identical to the classify-once path. `recency` sets the cache's
+/// lock-free hit batching ([`RecencyConfig`]); the default (batch 1,
+/// immediate drain) is behavior-preserving.
 #[allow(clippy::too_many_arguments)] // the replay's full knob surface
 pub fn run_online(
     policy: &str,
@@ -202,12 +221,15 @@ pub fn run_online(
     kernel: KernelKind,
     cfg: TrainerConfig,
     batcher: BatcherConfig,
+    recency: RecencyConfig,
 ) -> Result<OnlineReplayReport> {
     let pretrained = match mode {
         TrainerMode::Frozen => pretrain_model(trace, kernel)?,
         TrainerMode::Online => None,
     };
-    run_online_with(policy, shards, capacity, trace, mode, kernel, cfg, batcher, pretrained)
+    run_online_with(
+        policy, shards, capacity, trace, mode, kernel, cfg, batcher, recency, pretrained,
+    )
 }
 
 /// [`run_online`] with the frozen arm's pretrained model supplied by the
@@ -226,10 +248,10 @@ fn run_online_with(
     kernel: KernelKind,
     cfg: TrainerConfig,
     batcher: BatcherConfig,
+    recency: RecencyConfig,
     pretrained: Option<SmoModel>,
 ) -> Result<OnlineReplayReport> {
-    let cache = ShardedCache::from_registry(policy, shards, capacity)
-        .with_context(|| format!("unknown policy {policy:?}"))?;
+    let cache = build_cache(policy, shards, capacity, recency)?;
     let n = cache.n_shards();
     let mut partitions: Vec<Vec<usize>> = vec![Vec::new(); n];
     for (i, req) in trace.iter().enumerate() {
@@ -267,6 +289,9 @@ fn run_online_with(
         // stall another shard (the miss-storm fix).
         let mut backend = SnapshotBackend::new(Arc::clone(&cell));
         let mut shard_batcher = ShardBatcher::with_probe(batcher, batch_probe.clone());
+        // Lock-free hit front: membership resolves against the shard's
+        // read view, recency updates drain in batches per `recency`.
+        let mut handle = cache.read_handle();
         for &i in &partitions[w] {
             let req = &trace[i];
             let features = tracker.features(
@@ -306,7 +331,7 @@ fn run_online_with(
                 predicted_reuse: predicted,
                 recompute_cost: req.recompute_cost,
             };
-            cache.access_or_insert(req.block, &ctx);
+            handle.access_or_insert(req.block, &ctx);
             tracker.record_access(req.block, 0, req.time);
         }
         // Drain whatever the deadline never reached, so every cold query
@@ -314,6 +339,8 @@ fn run_online_with(
         if backend.is_trained() {
             let _ = shard_batcher.flush(&mut backend);
         }
+        // Flush buffered recency before reading this shard's final state.
+        drop(handle);
         (cache.stats_of(w), backend.refreshes())
     };
 
@@ -321,26 +348,34 @@ fn run_online_with(
     let (per_worker, trainer) = match mode {
         TrainerMode::Frozen => {
             drop(rx);
-            let per_worker = run_sharded(n, worker);
+            let per_worker = run_fanout(n, worker, FanoutOptions::new()).into_workers();
             let trainer =
                 TrainerReport { final_version: cell.version(), ..TrainerReport::default() };
             (per_worker, trainer)
         }
         TrainerMode::Online => {
             let trainer_cell = Arc::clone(&cell);
-            let (per_worker, trainer) = run_sharded_with_background(
+            let FanoutReport { workers, background, .. } = run_fanout(
                 n,
                 worker,
-                move || {
-                    let mut backend = RustBackend::new(kernel);
-                    let mut pipeline =
-                        TrainingPipeline::new(cfg.min_samples, cfg.retrain_interval);
-                    trainer_loop(rx, &mut backend, &mut pipeline, &trainer_cell)
-                },
-                || {
-                    master.lock().expect("sender mutex poisoned").take();
-                },
+                FanoutOptions::new()
+                    .background(
+                        move || {
+                            let mut backend = RustBackend::new(kernel);
+                            let mut pipeline =
+                                TrainingPipeline::new(cfg.min_samples, cfg.retrain_interval);
+                            trainer_loop(rx, &mut backend, &mut pipeline, &trainer_cell)
+                        },
+                        || {
+                            master.lock().expect("sender mutex poisoned").take();
+                        },
+                    ),
             );
+            let per_worker: Vec<_> = workers
+                .into_iter()
+                .map(|r| r.expect("panicked worker in a non-resilient run"))
+                .collect();
+            let trainer = background.expect("background configured");
             (per_worker, trainer.context("background trainer failed")?)
         }
     };
@@ -381,7 +416,7 @@ fn run_online_with(
 /// the fresh version, which is the moment it affects that shard's
 /// predictions. The audit ring's `score` is 0.0 on this path: the batcher
 /// front answers classes, not margins (the classify-once path of
-/// [`super::sharded_replay::run_observed`] records real decision scores).
+/// [`super::sharded_replay::drive`] records real decision scores).
 // disallowed_methods: wall time + prediction latency are Volatile (log-only)
 // metrics — see clippy.toml and rust/tests/lint_invariants.rs.
 #[allow(clippy::too_many_arguments, clippy::disallowed_methods)]
@@ -394,6 +429,7 @@ pub fn run_online_observed(
     kernel: KernelKind,
     cfg: TrainerConfig,
     batcher: BatcherConfig,
+    recency: RecencyConfig,
     registry: &MetricsRegistry,
     obs_cfg: ObsConfig,
 ) -> Result<(OnlineReplayReport, RunObservations)> {
@@ -401,8 +437,7 @@ pub fn run_online_observed(
         TrainerMode::Frozen => pretrain_model(trace, kernel)?,
         TrainerMode::Online => None,
     };
-    let cache = ShardedCache::from_registry(policy, shards, capacity)
-        .with_context(|| format!("unknown policy {policy:?}"))?;
+    let cache = build_cache(policy, shards, capacity, recency)?;
     let n = cache.n_shards();
     let mut partitions: Vec<Vec<usize>> = vec![Vec::new(); n];
     for (i, req) in trace.iter().enumerate() {
@@ -434,6 +469,8 @@ pub fn run_online_observed(
         let mut backend = SnapshotBackend::new(Arc::clone(&cell));
         let mut shard_batcher = ShardBatcher::with_probe(batcher, batch_probe.clone());
         shard_batcher.set_obs(BatcherObs::register(registry, n, w));
+        // Lock-free hit front, exactly as in the unobserved driver.
+        let mut handle = cache.read_handle();
         let mut windows = WindowSeries::new(obs_cfg.window_us);
         let mut audit = EvictionAudit::new(obs_cfg.audit_every, obs_cfg.audit_cap);
         // Victim ground truth: the victim's most recent request on this
@@ -484,7 +521,7 @@ pub fn run_online_observed(
                 predicted_reuse: predicted,
                 recompute_cost: req.recompute_cost,
             };
-            let outcome = cache.access_or_insert(req.block, &ctx);
+            let outcome = handle.access_or_insert(req.block, &ctx);
             tracker.record_access(req.block, 0, req.time);
             if !outcome.hit {
                 scan_hist.record(w, u64::from(outcome.scan_steps));
@@ -525,6 +562,8 @@ pub fn run_online_observed(
         if backend.is_trained() {
             let _ = shard_batcher.flush(&mut backend);
         }
+        // Flush buffered recency before reading this shard's final state.
+        drop(handle);
         (cache.stats_of(w), backend.refreshes(), windows.finish(), audit)
     };
 
@@ -532,26 +571,34 @@ pub fn run_online_observed(
     let (per_worker, trainer) = match mode {
         TrainerMode::Frozen => {
             drop(rx);
-            let per_worker = run_sharded(n, worker);
+            let per_worker = run_fanout(n, worker, FanoutOptions::new()).into_workers();
             let trainer =
                 TrainerReport { final_version: cell.version(), ..TrainerReport::default() };
             (per_worker, trainer)
         }
         TrainerMode::Online => {
             let trainer_cell = Arc::clone(&cell);
-            let (per_worker, trainer) = run_sharded_with_background(
+            let FanoutReport { workers, background, .. } = run_fanout(
                 n,
                 worker,
-                move || {
-                    let mut backend = RustBackend::new(kernel);
-                    let mut pipeline =
-                        TrainingPipeline::new(cfg.min_samples, cfg.retrain_interval);
-                    trainer_loop(rx, &mut backend, &mut pipeline, &trainer_cell)
-                },
-                || {
-                    master.lock().expect("sender mutex poisoned").take();
-                },
+                FanoutOptions::new()
+                    .background(
+                        move || {
+                            let mut backend = RustBackend::new(kernel);
+                            let mut pipeline =
+                                TrainingPipeline::new(cfg.min_samples, cfg.retrain_interval);
+                            trainer_loop(rx, &mut backend, &mut pipeline, &trainer_cell)
+                        },
+                        || {
+                            master.lock().expect("sender mutex poisoned").take();
+                        },
+                    ),
             );
+            let per_worker: Vec<_> = workers
+                .into_iter()
+                .map(|r| r.expect("panicked worker in a non-resilient run"))
+                .collect();
+            let trainer = background.expect("background configured");
             (per_worker, trainer.context("background trainer failed")?)
         }
     };
@@ -610,6 +657,7 @@ pub fn run_matrix(
     kernel: KernelKind,
     cfg: TrainerConfig,
     batcher: BatcherConfig,
+    recency: RecencyConfig,
 ) -> Result<Vec<OnlineReplayReport>> {
     // The frozen model depends only on (trace, kernel): train it once for
     // the whole matrix instead of once per frozen cell.
@@ -623,7 +671,7 @@ pub fn run_matrix(
                     TrainerMode::Online => None,
                 };
                 reports.push(run_online_with(
-                    policy, shards, capacity, trace, mode, kernel, cfg, batcher, model,
+                    policy, shards, capacity, trace, mode, kernel, cfg, batcher, recency, model,
                 )?);
             }
         }
@@ -671,7 +719,7 @@ pub fn render(reports: &[OnlineReplayReport]) -> Table {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::experiments::sharded_replay::{classify_trace, run_with_classes};
+    use crate::experiments::sharded_replay::{classify_trace, replay, ReplayOptions};
     use crate::util::bytes::MB;
     use crate::workload::fig3_trace;
 
@@ -680,32 +728,45 @@ mod tests {
     /// The acceptance criterion's control arm: frozen-mode replay is
     /// bit-identical to the classify-once path, for 1 and 8 shards —
     /// including through the per-shard batcher front (default depth 1
-    /// flushes every cold query inline).
+    /// flushes every cold query inline) and under buffered recency
+    /// (one worker per shard keeps drained order = program order).
     #[test]
     fn frozen_matches_classify_once() {
         let trace = fig3_trace(BLOCK, 5);
         let classes = classify_trace(&trace, KernelKind::Rbf, 64).unwrap();
         for shards in [1usize, 8] {
-            let baseline =
-                run_with_classes("h-svm-lru", shards, 8 * BLOCK, &trace, &classes).unwrap();
-            let frozen = run_online(
+            let baseline = replay(
                 "h-svm-lru",
                 shards,
                 8 * BLOCK,
                 &trace,
-                TrainerMode::Frozen,
-                KernelKind::Rbf,
-                TrainerConfig::default(),
-                BatcherConfig::default(),
+                &ReplayOptions::new().classes(&classes),
             )
-            .unwrap();
-            assert_eq!(frozen.stats, baseline.stats, "{shards}-shard frozen parity");
-            assert_eq!(frozen.per_shard, baseline.per_shard);
-            assert_eq!(frozen.samples_sent, 0, "frozen workers never emit");
-            assert_eq!(frozen.trainer.publishes, 0);
-            assert_eq!(frozen.trainer.final_version, 1, "one pretrained snapshot");
-            assert_eq!(frozen.cold.deferred, 0, "depth 1 never defers");
-            assert!(frozen.cold.flushes > 0, "predictions ran through the batchers");
+            .unwrap()
+            .report;
+            for recency in
+                [RecencyConfig::default(), RecencyConfig::default().with_batch(16)]
+            {
+                let frozen = run_online(
+                    "h-svm-lru",
+                    shards,
+                    8 * BLOCK,
+                    &trace,
+                    TrainerMode::Frozen,
+                    KernelKind::Rbf,
+                    TrainerConfig::default(),
+                    BatcherConfig::default(),
+                    recency,
+                )
+                .unwrap();
+                assert_eq!(frozen.stats, baseline.stats, "{shards}-shard frozen parity");
+                assert_eq!(frozen.per_shard, baseline.per_shard);
+                assert_eq!(frozen.samples_sent, 0, "frozen workers never emit");
+                assert_eq!(frozen.trainer.publishes, 0);
+                assert_eq!(frozen.trainer.final_version, 1, "one pretrained snapshot");
+                assert_eq!(frozen.cold.deferred, 0, "depth 1 never defers");
+                assert!(frozen.cold.flushes > 0, "predictions ran through the batchers");
+            }
         }
     }
 
@@ -721,6 +782,7 @@ mod tests {
             KernelKind::Rbf,
             TrainerConfig::default(),
             BatcherConfig::default(),
+            RecencyConfig::default(),
         )
         .unwrap();
         assert_eq!(report.stats.requests, trace.len() as u64);
@@ -757,6 +819,7 @@ mod tests {
             KernelKind::Rbf,
             TrainerConfig::default(),
             batcher,
+            RecencyConfig::default(),
         )
         .unwrap();
         assert_eq!(report.stats.requests, trace.len() as u64);
@@ -786,6 +849,7 @@ mod tests {
             KernelKind::Rbf,
             TrainerConfig::default(),
             BatcherConfig::default(),
+            RecencyConfig::default(),
         )
         .unwrap();
         let registry = MetricsRegistry::new();
@@ -798,6 +862,7 @@ mod tests {
             KernelKind::Rbf,
             TrainerConfig::default(),
             BatcherConfig::default(),
+            RecencyConfig::default(),
             &registry,
             ObsConfig::default(),
         )
@@ -846,6 +911,7 @@ mod tests {
             KernelKind::Rbf,
             TrainerConfig::default(),
             BatcherConfig::default(),
+            RecencyConfig::default(),
         )
         .unwrap();
         assert_eq!(reports.len(), 2 * 2 * 2);
@@ -868,6 +934,7 @@ mod tests {
             KernelKind::Rbf,
             TrainerConfig::default(),
             BatcherConfig::default(),
+            RecencyConfig::default(),
         );
         assert!(r.is_err());
     }

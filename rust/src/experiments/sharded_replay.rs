@@ -12,9 +12,27 @@
 //!    plain `Vec<Option<bool>>`.
 //! 2. **Replay (shard-parallel).** Partition request indices by
 //!    `shard_of(block, n)` and hand each shard's slice — in original trace
-//!    order — to its own scoped worker. Workers touch only their shard's
-//!    lock, so with one shard the replay is bit-identical to the sequential
-//!    path (property-tested in rust/tests/property_sharded.rs).
+//!    order — to its own scoped worker. Each worker drives the cache
+//!    through a [`ReadHandle`]: hits resolve against the lock-free read
+//!    view and recency updates drain in batches per the cache's
+//!    [`RecencyConfig`] (`cache::read_path`). With one shard — and with
+//!    the default immediate-drain config at any shard count — the replay
+//!    is bit-identical to the sequential locked path (property-tested in
+//!    rust/tests/property_sharded.rs and rust/tests/property_read_path.rs).
+//!
+//! One options-struct API ([`ReplayOptions`]) replaces the former
+//! `run_with_classes` / `run_with_admission` / `run_observed` /
+//! `replay_on_shards` / `replay_on_shards_observed` /
+//! `replay_with_stats_readers` sprawl:
+//!
+//! | old entry point              | now |
+//! |------------------------------|-----|
+//! | `run_with_classes(p,s,c,t,cl)` | `replay(p,s,c,t, &ReplayOptions::new().classes(cl))` |
+//! | `run_with_admission(.., adm, ..)` | `…​.admission(adm)` |
+//! | `run_observed(.., kernel, batch, reg, cfg)` | `…​.classify(kernel, batch).observe(reg, cfg)` |
+//! | `replay_on_shards(cache, t, cl)` | `drive(cache, t, &ReplayOptions::new().classes(cl))` |
+//! | `replay_on_shards_observed(..)` | `drive` with `.scored(..).observe(..)` |
+//! | `replay_with_stats_readers(.., n)` | `drive` with `.readers(n)` |
 
 use std::time::{Duration, Instant};
 
@@ -22,15 +40,16 @@ use anyhow::{Context, Result};
 
 use crate::util::sync::atomic::{AtomicBool, Ordering};
 
-use crate::cache::sharded::{shard_of, ShardStats, ShardedCache};
-use crate::cache::{AccessContext, EvictCause};
+use crate::cache::read_path::RecencyConfig;
+use crate::cache::sharded::{shard_of, ReadHandle, ShardStats, ShardedCache};
+use crate::cache::{AccessContext, CacheBuilder, EvictCause};
 use crate::hdfs::BlockId;
 use crate::obs::{
     merge_audits, merge_series, AuditEntry, EvictionAudit, MetricClass, MetricsRegistry,
     ObsConfig, RunObservations, WindowSeries,
 };
 use crate::runtime::{RustBackend, SvmBackend};
-use crate::sim::parallel::{run_sharded, run_sharded_with_monitor};
+use crate::sim::parallel::{run_fanout, FanoutOptions};
 use crate::svm::features::{BlockStatsTracker, FeatureVec};
 use crate::svm::KernelKind;
 use crate::util::fasthash::IdHashMap;
@@ -65,6 +84,141 @@ impl ShardedReplayReport {
     pub fn hit_ratio(&self) -> f64 {
         self.stats.hit_ratio()
     }
+}
+
+/// What concurrent lock-free stats readers observed during a replay (the
+/// [`ReplayOptions::readers`] knob).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StatsReaderReport {
+    /// Concurrent reader threads that ran during the replay.
+    pub readers: usize,
+    /// Merged-stats snapshots taken across all readers while the shard
+    /// workers were replaying.
+    pub snapshots: u64,
+    /// Snapshots that violated an internal-consistency invariant
+    /// (`hits + misses == requests`, `used <= capacity`, per-shard
+    /// coupling). Must be 0 — the seqlock guarantees it.
+    pub inconsistencies: u64,
+}
+
+/// Where a replay's per-request SVM predictions come from.
+#[derive(Clone, Copy, Default)]
+pub enum Predictions<'a> {
+    /// No predictions (pure baseline policies).
+    #[default]
+    None,
+    /// Precomputed boolean classes, index-aligned with the trace.
+    Classes(&'a [Option<bool>]),
+    /// Precomputed features + raw decision scores (classes are
+    /// `score > 0.0`) — what the audit ring records.
+    Scored {
+        /// Per-request pre-access feature vectors.
+        features: &'a [FeatureVec],
+        /// Per-request decision scores (`None` = untrainable trace).
+        scores: &'a [Option<f32>],
+    },
+    /// Run the single-threaded classifier pass ([`classify_trace_scored`])
+    /// before the replay, keeping features + scores for the audit ring.
+    Classify {
+        /// SVM kernel for the SMO backend.
+        kernel: KernelKind,
+        /// Batch size of the scoring pass.
+        batch: usize,
+    },
+}
+
+/// Options for [`replay`] / [`drive`] — one struct instead of a driver
+/// variant per combination. The default replays without predictions,
+/// telemetry or readers, with immediate recency drains: exactly the old
+/// `run_with_classes(policy, …, &[])`.
+#[derive(Clone, Copy, Default)]
+pub struct ReplayOptions<'a> {
+    /// Admission policy in front of every shard ([`replay`] only —
+    /// [`drive`] replays whatever cache it is given).
+    pub admission: Option<&'a str>,
+    /// Per-request prediction source.
+    pub predictions: Predictions<'a>,
+    /// Telemetry: per-worker window series + eviction audit merged into a
+    /// [`RunObservations`], plus registry histograms for eviction scan
+    /// work and access latency. Never perturbs cache behavior.
+    pub observe: Option<(&'a MetricsRegistry, ObsConfig)>,
+    /// Concurrent lock-free stats readers hammering `stats()` / `used()` /
+    /// `snapshot_of()` for the whole replay (0 = none).
+    pub readers: usize,
+    /// Contain worker panics ([`FanoutOptions::resilient`]): surviving
+    /// shards report, a panicked shard keeps its counters as of the
+    /// panic.
+    pub resilient: bool,
+    /// Recency-batching knobs for the cache [`replay`] builds
+    /// ([`drive`] uses the cache's own config).
+    pub recency: RecencyConfig,
+}
+
+impl<'a> ReplayOptions<'a> {
+    /// The behavior-preserving defaults (see the struct docs).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admission policy by registry name ([`replay`] only).
+    pub fn admission(mut self, name: &'a str) -> Self {
+        self.admission = Some(name);
+        self
+    }
+
+    /// Attach precomputed per-request classes.
+    pub fn classes(mut self, classes: &'a [Option<bool>]) -> Self {
+        self.predictions = Predictions::Classes(classes);
+        self
+    }
+
+    /// Attach precomputed features + decision scores.
+    pub fn scored(mut self, features: &'a [FeatureVec], scores: &'a [Option<f32>]) -> Self {
+        self.predictions = Predictions::Scored { features, scores };
+        self
+    }
+
+    /// Run the classifier pass before replaying.
+    pub fn classify(mut self, kernel: KernelKind, batch: usize) -> Self {
+        self.predictions = Predictions::Classify { kernel, batch };
+        self
+    }
+
+    /// Attach the telemetry layer.
+    pub fn observe(mut self, registry: &'a MetricsRegistry, cfg: ObsConfig) -> Self {
+        self.observe = Some((registry, cfg));
+        self
+    }
+
+    /// Run `n` concurrent lock-free stats readers during the replay.
+    pub fn readers(mut self, n: usize) -> Self {
+        self.readers = n;
+        self
+    }
+
+    /// Contain worker panics instead of propagating them.
+    pub fn resilient(mut self, contained: bool) -> Self {
+        self.resilient = contained;
+        self
+    }
+
+    /// Recency-batching knobs for the cache [`replay`] builds.
+    pub fn recency(mut self, cfg: RecencyConfig) -> Self {
+        self.recency = cfg;
+        self
+    }
+}
+
+/// Everything one replay produced: the report plus whatever optional
+/// layers [`ReplayOptions`] enabled.
+#[derive(Debug)]
+pub struct ReplayOutcome {
+    /// Merged + per-shard counters and replay wall time.
+    pub report: ShardedReplayReport,
+    /// Telemetry, when [`ReplayOptions::observe`] was set.
+    pub observations: Option<RunObservations>,
+    /// Reader consistency report, when [`ReplayOptions::readers`] > 0.
+    pub readers: Option<StatsReaderReport>,
 }
 
 /// The feature pass shared by every trace classifier: walk `trace` once
@@ -150,102 +304,119 @@ fn partition_by_shard(trace: &[BlockRequest], n: usize) -> Vec<Vec<usize>> {
     partitions
 }
 
-/// Replay one shard's request indices against the shared cache.
+/// The per-request [`AccessContext`] of a trace replay.
+fn request_ctx(req: &BlockRequest, predicted: Option<bool>) -> AccessContext {
+    AccessContext {
+        time: req.time,
+        size: req.size,
+        kind: req.kind,
+        file: req.block.0, // trace blocks are their own files
+        file_width: 1,
+        file_complete: false,
+        affinity: req.affinity,
+        predicted_reuse: predicted,
+        recompute_cost: req.recompute_cost,
+    }
+}
+
+/// Replay one shard's request indices through a worker's [`ReadHandle`].
 fn replay_slice(
-    cache: &ShardedCache,
+    handle: &mut ReadHandle<'_>,
     trace: &[BlockRequest],
     classes: &[Option<bool>],
     indices: &[usize],
 ) {
     for &i in indices {
         let req = &trace[i];
-        let ctx = AccessContext {
-            time: req.time,
-            size: req.size,
-            kind: req.kind,
-            file: req.block.0, // trace blocks are their own files
-            file_width: 1,
-            file_complete: false,
-            affinity: req.affinity,
-            predicted_reuse: classes.get(i).copied().flatten(),
-            recompute_cost: req.recompute_cost,
-        };
-        cache.access_or_insert(req.block, &ctx);
+        let ctx = request_ctx(req, classes.get(i).copied().flatten());
+        handle.access_or_insert(req.block, &ctx);
     }
 }
 
-/// Phase 2: replay `trace` against `cache`, one scoped worker per shard.
-/// `classes[i]` is the prediction attached to request `i` (pass an empty
-/// slice to replay without predictions). Each worker sees its shard's
-/// requests in original trace order.
-pub fn replay_on_shards(
-    cache: &ShardedCache,
-    trace: &[BlockRequest],
-    classes: &[Option<bool>],
-) -> Vec<ShardStats> {
-    let n = cache.n_shards();
-    let partitions = partition_by_shard(trace, n);
-    run_sharded(n, |w| {
-        replay_slice(cache, trace, classes, &partitions[w]);
-        cache.stats_of(w)
-    })
-}
-
-/// [`replay_on_shards`] with the telemetry layer attached: each worker
-/// keeps its own [`WindowSeries`] + [`EvictionAudit`] (merged
-/// deterministically at the end) and records eviction scan work /
-/// access latency into per-shard registry histograms. Cache behavior is
-/// identical to the plain replay — observation reads the
-/// [`crate::cache::AccessOutcome`] the access already returns.
+/// Phase 2 against a caller-built cache: replay `trace`, one scoped worker
+/// per shard, each driving the cache through its own [`ReadHandle`]
+/// (draining per the cache's [`RecencyConfig`]). [`ReplayOptions`] selects
+/// the optional layers; `admission` and `recency` are construction knobs
+/// and ignored here — see [`replay`] for the cache-building entry point.
 ///
-/// Ground truth for the confusion counts comes from each worker's
-/// last-access map: a block's requests all route to one shard, and an
-/// eviction happens after the victim's last access and before its next
-/// request, so `reused_later` of the victim's most recent request IS
-/// "was it requested again after this eviction".
-// Wall-clock exception: access latency is a Volatile (log-only) metric —
-// see clippy.toml and rust/tests/lint_invariants.rs.
+/// Telemetry notes (the `observe` layer): each worker keeps its own
+/// window series + audit ring, merged deterministically at the end;
+/// eviction scan work and access latency go into per-shard registry
+/// histograms. Ground truth for the confusion counts comes from each
+/// worker's last-access map: a block's requests all route to one shard,
+/// and an eviction happens after the victim's last access and before its
+/// next request, so `reused_later` of the victim's most recent request IS
+/// "was it requested again after this eviction". Observation never
+/// perturbs the cache — it reads the [`crate::cache::AccessOutcome`] the
+/// access already returns.
+// Wall-clock exception: replay wall time and access latency are
+// reporting-only / Volatile metrics — see clippy.toml and
+// rust/tests/lint_invariants.rs.
 #[allow(clippy::disallowed_methods)]
-pub fn replay_on_shards_observed(
+pub fn drive(
     cache: &ShardedCache,
     trace: &[BlockRequest],
-    features: &[FeatureVec],
-    scores: &[Option<f32>],
-    registry: &MetricsRegistry,
-    cfg: ObsConfig,
-) -> (Vec<ShardStats>, RunObservations) {
+    opts: &ReplayOptions<'_>,
+) -> Result<ReplayOutcome> {
     let n = cache.n_shards();
     let partitions = partition_by_shard(trace, n);
-    let scan_hist = registry.histogram("evict.scan_steps", MetricClass::Deterministic, n);
-    let access_ns = registry.histogram("replay.access_ns", MetricClass::Volatile, n);
-    let results = run_sharded(n, |w| {
+
+    // Resolve the prediction source into (features, scores, classes)
+    // slices; the classifier pass (if requested) runs before the timed
+    // replay phase, exactly like the old two-phase drivers.
+    let computed: Option<(Vec<FeatureVec>, Vec<Option<f32>>)> = match opts.predictions {
+        Predictions::Classify { kernel, batch } => {
+            Some(classify_trace_scored(trace, kernel, batch)?)
+        }
+        _ => None,
+    };
+    let (features, scores): (&[FeatureVec], &[Option<f32>]) = match (&opts.predictions, &computed)
+    {
+        (Predictions::Scored { features, scores }, _) => (features, scores),
+        (Predictions::Classify { .. }, Some((f, s))) => (f.as_slice(), s.as_slice()),
+        _ => (&[], &[]),
+    };
+    let derived: Vec<Option<bool>>;
+    let classes: &[Option<bool>] = match opts.predictions {
+        Predictions::Classes(classes) => classes,
+        Predictions::None => &[],
+        _ => {
+            derived = scores.iter().map(|s| s.map(|v| v > 0.0)).collect();
+            &derived
+        }
+    };
+
+    let hists = opts.observe.map(|(registry, _)| {
+        (
+            registry.histogram("evict.scan_steps", MetricClass::Deterministic, n),
+            registry.histogram("replay.access_ns", MetricClass::Volatile, n),
+        )
+    });
+
+    let worker = |w: usize| {
+        let mut handle = cache.read_handle();
+        let (Some((scan_hist, access_ns)), Some((_, cfg))) = (&hists, opts.observe) else {
+            replay_slice(&mut handle, trace, classes, &partitions[w]);
+            return None;
+        };
         let mut windows = WindowSeries::new(cfg.window_us);
         let mut audit = EvictionAudit::new(cfg.audit_every, cfg.audit_cap);
         let mut last: IdHashMap<BlockId, usize> = IdHashMap::default();
         for &i in &partitions[w] {
             let req = &trace[i];
-            let predicted_here = scores.get(i).copied().flatten().map(|s| s > 0.0);
-            let ctx = AccessContext {
-                time: req.time,
-                size: req.size,
-                kind: req.kind,
-                file: req.block.0,
-                file_width: 1,
-                file_complete: false,
-                affinity: req.affinity,
-                predicted_reuse: predicted_here,
-                recompute_cost: req.recompute_cost,
-            };
+            let ctx = request_ctx(req, classes.get(i).copied().flatten());
             let t0 = access_ns.is_active().then(Instant::now);
-            let outcome = cache.access_or_insert(req.block, &ctx);
+            let outcome = handle.access_or_insert(req.block, &ctx);
             if let Some(t0) = t0 {
                 access_ns.record(w, t0.elapsed().as_nanos() as u64);
             }
             if !outcome.hit {
                 scan_hist.record(w, u64::from(outcome.scan_steps));
             }
-            // This worker is shard w's only writer, so the lock-free
-            // snapshot it reads back is its own deterministic state.
+            // This worker is shard w's only writer (buffered hits count at
+            // read time, mutations drain under its own lock), so the
+            // lock-free snapshot it reads back is its own deterministic
+            // state.
             let occupancy = cache.snapshot_of(w).blocks;
             let win = windows.at(req.time);
             win.requests += 1;
@@ -260,7 +431,7 @@ pub fn replay_on_shards_observed(
                 }
                 if let Some(li) = last.remove(victim) {
                     let actual = trace[li].reused_later;
-                    let predicted = scores.get(li).copied().flatten().map(|s| s > 0.0);
+                    let predicted = classes.get(li).copied().flatten();
                     match predicted {
                         Some(true) if actual => win.tp += 1,
                         Some(true) => win.fp += 1,
@@ -281,194 +452,128 @@ pub fn replay_on_shards_observed(
             }
             last.insert(req.block, i);
         }
-        (cache.stats_of(w), windows.finish(), audit)
-    });
-    let mut per_shard = Vec::with_capacity(n);
-    let mut window_parts = Vec::with_capacity(n);
-    let mut audit_parts = Vec::with_capacity(n);
-    for (stats, windows, audit) in results {
-        per_shard.push(stats);
-        window_parts.push(windows);
-        audit_parts.push(audit);
+        Some((windows.finish(), audit))
+    };
+
+    let t0 = Instant::now();
+    let (slots, readers) = if opts.readers > 0 {
+        let n_readers = opts.readers;
+        let monitor = |done: &AtomicBool| {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..n_readers)
+                    .map(|_| {
+                        scope.spawn(move || {
+                            let mut snapshots = 0u64;
+                            let mut inconsistencies = 0u64;
+                            let mut last_requests = 0u64;
+                            // do-while: at least one snapshot even when the
+                            // replay finishes before the reader's first pass.
+                            loop {
+                                let merged = cache.stats();
+                                let mut ok = merged.hits + merged.misses == merged.requests
+                                    && cache.used() <= cache.capacity()
+                                    && merged.requests >= last_requests;
+                                last_requests = merged.requests;
+                                for s in 0..n {
+                                    let snap = cache.snapshot_of(s);
+                                    ok &= snap.stats.hits + snap.stats.misses
+                                        == snap.stats.requests;
+                                }
+                                snapshots += 1;
+                                inconsistencies += u64::from(!ok);
+                                // Acquire: pairs with the harness's Release
+                                // store; the workers' final counters precede
+                                // this last observation.
+                                if done.load(Ordering::Acquire) {
+                                    break;
+                                }
+                                std::thread::yield_now();
+                            }
+                            (snapshots, inconsistencies)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("stats reader panicked"))
+                    .fold((0u64, 0u64), |acc, (s, i)| (acc.0 + s, acc.1 + i))
+            })
+        };
+        let rep = run_fanout(
+            n,
+            &worker,
+            FanoutOptions::new().monitor(monitor).resilient(opts.resilient),
+        );
+        let (snapshots, inconsistencies) = rep.monitor.expect("monitor configured");
+        (
+            rep.workers,
+            Some(StatsReaderReport { readers: n_readers, snapshots, inconsistencies }),
+        )
+    } else {
+        let rep = run_fanout(n, &worker, FanoutOptions::new().resilient(opts.resilient));
+        (rep.workers, None)
+    };
+    let wall = t0.elapsed();
+
+    // Per-shard counters read post-join: shard w's stats have exactly one
+    // writer (its worker), so this equals what the worker saw at its end.
+    let per_shard: Vec<ShardStats> = (0..n).map(|w| cache.stats_of(w)).collect();
+    let mut stats = ShardStats::default();
+    for s in &per_shard {
+        stats.merge(s);
     }
-    let (audit, audit_seen) = merge_audits(audit_parts);
-    (
-        per_shard,
+
+    let observations = opts.observe.map(|(_, cfg)| {
+        let mut window_parts = Vec::with_capacity(n);
+        let mut audit_parts = Vec::with_capacity(n);
+        for slot in slots.into_iter().flatten().flatten() {
+            let (windows, audit) = slot;
+            window_parts.push(windows);
+            audit_parts.push(audit);
+        }
+        let (audit, audit_seen) = merge_audits(audit_parts);
         RunObservations {
             windows: merge_series(window_parts),
             audit,
             audit_seen,
             audit_every: cfg.audit_every.max(1),
-        },
-    )
-}
+        }
+    });
 
-/// Full observed pipeline for one configuration: classify once (keeping
-/// features + scores for the audit ring), replay with telemetry, report.
-// disallowed_methods: replay wall time is reporting-only (Volatile class).
-#[allow(clippy::too_many_arguments, clippy::disallowed_methods)]
-pub fn run_observed(
-    policy: &str,
-    admission: &str,
-    shards: usize,
-    capacity: u64,
-    trace: &[BlockRequest],
-    kernel: KernelKind,
-    batch: usize,
-    registry: &MetricsRegistry,
-    cfg: ObsConfig,
-) -> Result<(ShardedReplayReport, RunObservations)> {
-    let (features, scores) = classify_trace_scored(trace, kernel, batch)?;
-    let cache = ShardedCache::from_registry_with_admission(policy, admission, shards, capacity)
-        .with_context(|| format!("unknown policy {policy:?} or admission {admission:?}"))?;
-    let t0 = Instant::now();
-    let (per_shard, obs) =
-        replay_on_shards_observed(&cache, trace, &features, &scores, registry, cfg);
-    let wall = t0.elapsed();
-    let mut stats = ShardStats::default();
-    for s in &per_shard {
-        stats.merge(s);
-    }
-    Ok((
-        ShardedReplayReport {
-            policy: policy.to_string(),
-            admission: admission.to_string(),
-            shards: cache.n_shards(),
+    Ok(ReplayOutcome {
+        report: ShardedReplayReport {
+            policy: cache.policy_name().to_string(),
+            admission: cache.admission_name().to_string(),
+            shards: n,
             stats,
             per_shard,
             wall,
         },
-        obs,
-    ))
-}
-
-/// What concurrent lock-free stats readers observed during a replay (see
-/// [`replay_with_stats_readers`]).
-#[derive(Debug, Clone, Copy, Default)]
-pub struct StatsReaderReport {
-    /// Concurrent reader threads that ran during the replay.
-    pub readers: usize,
-    /// Merged-stats snapshots taken across all readers while the shard
-    /// workers were replaying.
-    pub snapshots: u64,
-    /// Snapshots that violated an internal-consistency invariant
-    /// (`hits + misses == requests`, `used <= capacity`, per-shard
-    /// coupling). Must be 0 — the seqlock guarantees it.
-    pub inconsistencies: u64,
-}
-
-/// [`replay_on_shards`] with `n_readers` concurrent reader threads
-/// hammering the lock-free stats path (`stats()`, `used()`,
-/// `snapshot_of()`) for the whole duration of the replay. Readers check
-/// every snapshot for internal consistency; with the seqlock stats block
-/// they never serialize the shard workers (benchmarked in
-/// `bench_sharded`'s reader-contention scenario).
-pub fn replay_with_stats_readers(
-    cache: &ShardedCache,
-    trace: &[BlockRequest],
-    classes: &[Option<bool>],
-    n_readers: usize,
-) -> (Vec<ShardStats>, StatsReaderReport) {
-    if n_readers == 0 {
-        return (replay_on_shards(cache, trace, classes), StatsReaderReport::default());
-    }
-    let n = cache.n_shards();
-    let partitions = partition_by_shard(trace, n);
-    let worker = |w: usize| {
-        replay_slice(cache, trace, classes, &partitions[w]);
-        cache.stats_of(w)
-    };
-    let monitor = |done: &AtomicBool| {
-        std::thread::scope(|scope| {
-            let handles: Vec<_> = (0..n_readers)
-                .map(|_| {
-                    scope.spawn(move || {
-                        let mut snapshots = 0u64;
-                        let mut inconsistencies = 0u64;
-                        let mut last_requests = 0u64;
-                        // do-while: at least one snapshot even when the
-                        // replay finishes before the reader's first pass.
-                        loop {
-                            let merged = cache.stats();
-                            let mut ok = merged.hits + merged.misses == merged.requests
-                                && cache.used() <= cache.capacity()
-                                && merged.requests >= last_requests;
-                            last_requests = merged.requests;
-                            for s in 0..n {
-                                let snap = cache.snapshot_of(s);
-                                ok &= snap.stats.hits + snap.stats.misses
-                                    == snap.stats.requests;
-                            }
-                            snapshots += 1;
-                            inconsistencies += u64::from(!ok);
-                            // Acquire: pairs with the harness's Release
-                            // store; the workers' final counters precede
-                            // this last observation.
-                            if done.load(Ordering::Acquire) {
-                                break;
-                            }
-                            std::thread::yield_now();
-                        }
-                        (snapshots, inconsistencies)
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("stats reader panicked"))
-                .fold((0u64, 0u64), |acc, (s, i)| (acc.0 + s, acc.1 + i))
-        })
-    };
-    let (per_shard, (snapshots, inconsistencies)) =
-        run_sharded_with_monitor(n, worker, monitor);
-    (
-        per_shard,
-        StatsReaderReport { readers: n_readers, snapshots, inconsistencies },
-    )
-}
-
-/// Replay `trace` with precomputed predictions on a fresh `shards`-way
-/// cache and report merged + per-shard stats with the replay wall time.
-pub fn run_with_classes(
-    policy: &str,
-    shards: usize,
-    capacity: u64,
-    trace: &[BlockRequest],
-    classes: &[Option<bool>],
-) -> Result<ShardedReplayReport> {
-    run_with_admission(policy, "always", shards, capacity, trace, classes)
-}
-
-/// Like [`run_with_classes`] but with an admission policy from
-/// `cache::admission` in front of every shard (the `repro admission`
-/// sweep path; `"always"` is exactly [`run_with_classes`]).
-// disallowed_methods: replay wall time is reporting-only (Volatile class).
-#[allow(clippy::disallowed_methods)]
-pub fn run_with_admission(
-    policy: &str,
-    admission: &str,
-    shards: usize,
-    capacity: u64,
-    trace: &[BlockRequest],
-    classes: &[Option<bool>],
-) -> Result<ShardedReplayReport> {
-    let cache = ShardedCache::from_registry_with_admission(policy, admission, shards, capacity)
-        .with_context(|| format!("unknown policy {policy:?} or admission {admission:?}"))?;
-    let t0 = Instant::now();
-    let per_shard = replay_on_shards(&cache, trace, classes);
-    let wall = t0.elapsed();
-    let mut stats = ShardStats::default();
-    for s in &per_shard {
-        stats.merge(s);
-    }
-    Ok(ShardedReplayReport {
-        policy: policy.to_string(),
-        admission: admission.to_string(),
-        shards: cache.n_shards(),
-        stats,
-        per_shard,
-        wall,
+        observations,
+        readers,
     })
+}
+
+/// Build a `shards`-way cache of the registry policy `policy` (honoring
+/// [`ReplayOptions::admission`] and [`ReplayOptions::recency`]) and
+/// [`drive`] `trace` against it.
+pub fn replay(
+    policy: &str,
+    shards: usize,
+    capacity: u64,
+    trace: &[BlockRequest],
+    opts: &ReplayOptions<'_>,
+) -> Result<ReplayOutcome> {
+    let admission = opts.admission.unwrap_or("always");
+    let cache = CacheBuilder::new()
+        .policy(policy)
+        .admission(admission)
+        .shards(shards.max(1))
+        .capacity(capacity)
+        .recency(opts.recency)
+        .build()
+        .with_context(|| format!("building {shards}-shard {policy:?}/{admission:?} cache"))?;
+    drive(&cache, trace, opts)
 }
 
 /// Full pipeline for one shard count: classify once, then replay.
@@ -479,7 +584,14 @@ pub fn run(
     trace: &[BlockRequest],
 ) -> Result<ShardedReplayReport> {
     let classes = classify_trace(trace, KernelKind::Rbf, 64)?;
-    run_with_classes(policy, shards, capacity, trace, &classes)
+    let outcome = replay(
+        policy,
+        shards,
+        capacity,
+        trace,
+        &ReplayOptions::new().classes(&classes),
+    )?;
+    Ok(outcome.report)
 }
 
 /// Sweep several shard counts over the same trace. The classifier pass
@@ -494,7 +606,11 @@ pub fn run_sweep(
     let classes = classify_trace(trace, KernelKind::Rbf, 64)?;
     shard_counts
         .iter()
-        .map(|&n| run_with_classes(policy, n, capacity, trace, &classes))
+        .map(|&n| {
+            let outcome =
+                replay(policy, n, capacity, trace, &ReplayOptions::new().classes(&classes))?;
+            Ok(outcome.report)
+        })
         .collect()
 }
 
@@ -528,6 +644,55 @@ mod tests {
     use crate::util::bytes::MB;
     use crate::workload::fig3_trace;
 
+    // One-line parity wrappers re-expressing the removed driver names over
+    // the options API — the legacy tests below run against these, pinning
+    // the collapsed entry points to the old contracts.
+    fn run_with_classes(
+        policy: &str,
+        shards: usize,
+        capacity: u64,
+        trace: &[BlockRequest],
+        classes: &[Option<bool>],
+    ) -> Result<ShardedReplayReport> {
+        Ok(replay(policy, shards, capacity, trace, &ReplayOptions::new().classes(classes))?
+            .report)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_observed(
+        policy: &str,
+        admission: &str,
+        shards: usize,
+        capacity: u64,
+        trace: &[BlockRequest],
+        kernel: KernelKind,
+        batch: usize,
+        registry: &MetricsRegistry,
+        cfg: ObsConfig,
+    ) -> Result<(ShardedReplayReport, RunObservations)> {
+        let opts = ReplayOptions::new()
+            .admission(admission)
+            .classify(kernel, batch)
+            .observe(registry, cfg);
+        let out = replay(policy, shards, capacity, trace, &opts)?;
+        Ok((out.report, out.observations.expect("observe configured")))
+    }
+
+    fn replay_with_stats_readers(
+        cache: &ShardedCache,
+        trace: &[BlockRequest],
+        classes: &[Option<bool>],
+        n_readers: usize,
+    ) -> (Vec<ShardStats>, StatsReaderReport) {
+        let opts = ReplayOptions::new().classes(classes).readers(n_readers);
+        let out = drive(cache, trace, &opts).expect("no classifier pass to fail");
+        (out.report.per_shard, out.readers.unwrap_or_default())
+    }
+
+    fn lru_cache(shards: usize, capacity: u64) -> ShardedCache {
+        CacheBuilder::new().policy("lru").shards(shards).capacity(capacity).build().unwrap()
+    }
+
     #[test]
     fn classifier_pass_labels_every_request() {
         let trace = fig3_trace(64 * MB, 3);
@@ -543,20 +708,14 @@ mod tests {
     fn one_shard_replay_matches_sequential_replay() {
         let trace = fig3_trace(64 * MB, 5);
         let classes = classify_trace(&trace, KernelKind::Rbf, 64).unwrap();
-        // Sequential ground truth.
-        let seq = ShardedCache::from_registry("h-svm-lru", 1, 8 * 64 * MB).unwrap();
+        // Sequential ground truth: the locked path, no read handle.
+        let seq = CacheBuilder::new()
+            .policy("h-svm-lru")
+            .capacity(8 * 64 * MB)
+            .build()
+            .unwrap();
         for (i, req) in trace.iter().enumerate() {
-            let ctx = AccessContext {
-                time: req.time,
-                size: req.size,
-                kind: req.kind,
-                file: req.block.0,
-                file_width: 1,
-                file_complete: false,
-                affinity: req.affinity,
-                predicted_reuse: classes[i],
-                recompute_cost: req.recompute_cost,
-            };
+            let ctx = request_ctx(req, classes[i]);
             seq.access_or_insert(req.block, &ctx);
         }
         let report = run("h-svm-lru", 1, 8 * 64 * MB, &trace).unwrap();
@@ -587,6 +746,9 @@ mod tests {
     fn unknown_policy_errors() {
         let trace = fig3_trace(64 * MB, 3);
         assert!(run("nonsense", 2, 8 * 64 * MB, &trace).is_err());
+        let err = replay("lru", 2, 8 * MB, &trace, &ReplayOptions::new().admission("nope"))
+            .unwrap_err();
+        assert!(err.to_string().contains("cache"), "{err}");
     }
 
     #[test]
@@ -670,7 +832,7 @@ mod tests {
     #[test]
     fn stats_readers_see_only_consistent_snapshots() {
         let trace = fig3_trace(64 * MB, 9);
-        let cache = ShardedCache::from_registry("lru", 4, 8 * 64 * MB).unwrap();
+        let cache = lru_cache(4, 8 * 64 * MB);
         let (per_shard, report) = replay_with_stats_readers(&cache, &trace, &[], 2);
         assert_eq!(report.readers, 2);
         assert!(report.snapshots > 0, "readers must have observed the replay");
@@ -682,10 +844,39 @@ mod tests {
         assert_eq!(merged, cache.stats());
         assert_eq!(merged.requests, trace.len() as u64);
         // Reader-free path is the plain replay.
-        let cache2 = ShardedCache::from_registry("lru", 4, 8 * 64 * MB).unwrap();
+        let cache2 = lru_cache(4, 8 * 64 * MB);
         let (plain, none) = replay_with_stats_readers(&cache2, &trace, &[], 0);
         assert_eq!(none.readers, 0);
         assert_eq!(none.snapshots, 0);
         assert_eq!(plain, per_shard, "readers must not perturb the replay");
+    }
+
+    #[test]
+    fn batched_recency_replay_matches_immediate_replay() {
+        // One worker per shard + buffered drains: the drained event order
+        // equals each worker's program order, so any batch size reproduces
+        // the immediate-drain replay exactly — stats AND contents.
+        let trace = fig3_trace(64 * MB, 13);
+        let baseline = run_with_classes("lru", 4, 8 * 64 * MB, &trace, &[]).unwrap();
+        for batch in [8usize, 256] {
+            let opts = ReplayOptions::new()
+                .recency(RecencyConfig::default().with_batch(batch));
+            let out = replay("lru", 4, 8 * 64 * MB, &trace, &opts).unwrap();
+            assert_eq!(out.report.stats, baseline.stats, "batch={batch}");
+            assert_eq!(out.report.per_shard, baseline.per_shard, "batch={batch}");
+        }
+    }
+
+    #[test]
+    fn resilient_drive_survives_a_poisoned_replay() {
+        // Resilience is plumbed through to the fan-out: a replay against a
+        // healthy cache with resilient=true behaves exactly like the
+        // plain one (there is nothing to contain).
+        let trace = fig3_trace(64 * MB, 6);
+        let cache = lru_cache(2, 8 * 64 * MB);
+        let out = drive(&cache, &trace, &ReplayOptions::new().resilient(true)).unwrap();
+        assert_eq!(out.report.stats.requests, trace.len() as u64);
+        assert!(out.observations.is_none());
+        assert!(out.readers.is_none());
     }
 }

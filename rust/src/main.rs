@@ -157,12 +157,13 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         "sharded" => {
-            use h_svm_lru::experiments::sharded_replay;
+            use h_svm_lru::experiments::sharded_replay::{self, ReplayOptions};
             use h_svm_lru::util::bytes::MB;
             let max_shards = cli.shards(8)?;
             let blocks: u64 =
                 cli.flag("cache-blocks").map(|s| s.parse()).transpose()?.unwrap_or(8);
             let policy = cli.policy("h-svm-lru")?;
+            let recency = recency_config(&cli)?;
             let block_size = 64 * MB;
             let trace = h_svm_lru::workload::fig3_trace(block_size, cli.seed()?);
             let counts = doubling_shard_counts(max_shards);
@@ -170,16 +171,12 @@ fn run(args: &[String]) -> Result<()> {
             // predictions depend on neither the shard count nor readers.
             let classes =
                 sharded_replay::classify_trace(&trace, h_svm_lru::svm::KernelKind::Rbf, 64)?;
+            let opts = ReplayOptions::new().classes(&classes).recency(recency);
             let reports = counts
                 .iter()
                 .map(|&n| {
-                    sharded_replay::run_with_classes(
-                        &policy,
-                        n,
-                        blocks * block_size,
-                        &trace,
-                        &classes,
-                    )
+                    Ok(sharded_replay::replay(&policy, n, blocks * block_size, &trace, &opts)?
+                        .report)
                 })
                 .collect::<Result<Vec<_>>>()?;
             emit(
@@ -204,17 +201,20 @@ fn run(args: &[String]) -> Result<()> {
                 use h_svm_lru::obs::{MetricsRegistry, ObsConfig};
                 let registry = MetricsRegistry::new();
                 let obs_cfg = ObsConfig::default();
-                let (report, obs) = sharded_replay::run_observed(
+                let out = sharded_replay::replay(
                     &policy,
-                    "always",
                     max_shards,
                     blocks * block_size,
                     &trace,
-                    h_svm_lru::svm::KernelKind::Rbf,
-                    64,
-                    &registry,
-                    obs_cfg,
+                    &ReplayOptions::new()
+                        .classify(h_svm_lru::svm::KernelKind::Rbf, 64)
+                        .observe(&registry, obs_cfg)
+                        .recency(recency),
                 )?;
+                let report = out.report;
+                let obs = out
+                    .observations
+                    .ok_or_else(|| anyhow::anyhow!("observed replay produced no windows"))?;
                 let mut doc = obs.into_doc(obs_cfg.window_us);
                 doc.meta_str("cmd", "sharded");
                 doc.meta_str("policy", policy.as_str());
@@ -227,27 +227,21 @@ fn run(args: &[String]) -> Result<()> {
             // count with N threads hammering the lock-free stats path.
             let readers = cli.readers(0)?;
             if readers > 0 {
-                use h_svm_lru::cache::ShardedCache;
-                let cache =
-                    ShardedCache::from_registry(&policy, max_shards, blocks * block_size)
-                        .ok_or_else(|| {
-                            anyhow::anyhow!("unknown policy {policy:?} for the reader arm")
-                        })?;
-                // Wall-clock exception: replay wall time is printed, never
-                // exported — see clippy.toml and rust/tests/lint_invariants.rs.
-                #[allow(clippy::disallowed_methods)]
-                let t0 = std::time::Instant::now();
-                let (_, rr) = sharded_replay::replay_with_stats_readers(
-                    &cache, &trace, &classes, readers,
-                );
-                let wall = t0.elapsed();
+                let out = sharded_replay::replay(
+                    &policy,
+                    max_shards,
+                    blocks * block_size,
+                    &trace,
+                    &opts.readers(readers),
+                )?;
+                let rr = out.readers.unwrap_or_default();
                 println!(
                     "\n{} stats reader(s) during the {max_shards}-shard replay: \
                      {} consistent snapshots, {} inconsistencies, replay wall {:.2} ms",
                     rr.readers,
                     rr.snapshots,
                     rr.inconsistencies,
-                    wall.as_secs_f64() * 1e3,
+                    out.report.wall.as_secs_f64() * 1e3,
                 );
                 anyhow::ensure!(
                     rr.inconsistencies == 0,
@@ -312,7 +306,7 @@ fn run(args: &[String]) -> Result<()> {
             use h_svm_lru::coordinator::batcher::BatcherConfig;
             use h_svm_lru::coordinator::online::TrainerConfig;
             use h_svm_lru::experiments::online_sharded::{self, TrainerMode};
-            use h_svm_lru::experiments::sharded_replay;
+            use h_svm_lru::experiments::sharded_replay::{self, ReplayOptions};
             use h_svm_lru::svm::KernelKind;
             use h_svm_lru::util::bytes::MB;
 
@@ -332,6 +326,7 @@ fn run(args: &[String]) -> Result<()> {
             let blocks: u64 =
                 cli.flag("cache-blocks").map(|s| s.parse()).transpose()?.unwrap_or(8);
             let policy = cli.policy("h-svm-lru")?;
+            let recency = recency_config(&cli)?;
             let smoke = cli.switch("smoke");
             let seed = cli.seed()?;
             let block_size = 64 * MB;
@@ -383,6 +378,7 @@ fn run(args: &[String]) -> Result<()> {
                     kernel,
                     trainer_cfg,
                     batcher_cfg,
+                    recency,
                 )?;
                 emit(
                     &format!(
@@ -433,9 +429,14 @@ fn run(args: &[String]) -> Result<()> {
                         "online replay on {name} never published a snapshot"
                     );
                     let classes = sharded_replay::classify_trace(trace, kernel, 64)?;
-                    let baseline = sharded_replay::run_with_classes(
-                        &policy, max_shards, capacity, trace, &classes,
-                    )?;
+                    let baseline = sharded_replay::replay(
+                        &policy,
+                        max_shards,
+                        capacity,
+                        trace,
+                        &ReplayOptions::new().classes(&classes).recency(recency),
+                    )?
+                    .report;
                     let frozen = reports
                         .iter()
                         .find(|r| {
@@ -479,6 +480,7 @@ fn run(args: &[String]) -> Result<()> {
                     kernel,
                     trainer_cfg,
                     batcher_cfg,
+                    recency,
                     &registry,
                     obs_cfg,
                 )?;
@@ -501,7 +503,12 @@ fn run(args: &[String]) -> Result<()> {
             let svm_cfg = cli.svm_config()?;
             let kernel = KernelKind::from_name(&svm_cfg.kernel)
                 .ok_or_else(|| anyhow::anyhow!("bad kernel name {:?}", svm_cfg.kernel))?;
-            let (cluster_cfg, _) = h_svm_lru::config::load(cli.flag("config"))?;
+            let (mut cluster_cfg, _) = h_svm_lru::config::load(cli.flag("config"))?;
+            cluster_cfg.cache_recency_batch =
+                cli.recency_batch(cluster_cfg.cache_recency_batch)?;
+            cluster_cfg.cache_recency_drain_cadence_ms =
+                cli.recency_drain_cadence_ms(cluster_cfg.cache_recency_drain_cadence_ms)?;
+            cluster_cfg.validate()?;
             let seed = cli.seed()?;
             let shards = cli.shards(4)?;
             let smoke = cli.switch("smoke");
@@ -646,14 +653,15 @@ fn run(args: &[String]) -> Result<()> {
             let registry = MetricsRegistry::with_enabled(cli.flag("metrics-out").is_some());
             let svm_injector = FaultInjector::new(plan.clone());
             svm_injector.register_gauges(&registry, "faults");
+            let recency = recency_config(&cli)?;
             let svm = chaos::run_serving_chaos(
                 &policy, shards, capacity, &trace, kernel, breaker, &svm_injector,
-                &registry, DEFAULT_WINDOW_US,
+                &registry, DEFAULT_WINDOW_US, recency,
             )?;
             let lru_injector = FaultInjector::new(plan.clone());
             let lru = chaos::run_serving_chaos(
                 "lru", shards, capacity, &trace, kernel, breaker, &lru_injector,
-                &MetricsRegistry::disabled(), DEFAULT_WINDOW_US,
+                &MetricsRegistry::disabled(), DEFAULT_WINDOW_US, recency,
             )?;
             let reports = [svm, lru];
             emit(
@@ -882,6 +890,20 @@ fn emit_metrics(
     doc.write_jsonl(registry, path)?;
     println!("\nmetrics: wrote {path} (render with `repro report {path}`)");
     Ok(())
+}
+
+/// Replay-worker recency-buffer config from `--recency-batch` /
+/// `--recency-drain-cadence-ms`. The defaults (batch 1, no cadence) keep
+/// every access draining immediately — the bit-exact legacy behaviour —
+/// and the cadence is simulated (request-clock) time, so seeded runs stay
+/// deterministic. Shared by the `sharded` and `online` subcommands; `dag`
+/// threads the same flags through its `ClusterConfig`.
+fn recency_config(cli: &Cli) -> Result<h_svm_lru::cache::RecencyConfig> {
+    Ok(h_svm_lru::cache::RecencyConfig::default()
+        .with_batch(cli.recency_batch(1)?)
+        .with_drain_cadence(h_svm_lru::sim::SimDuration::from_micros(
+            cli.recency_drain_cadence_ms(0)?.saturating_mul(1000),
+        )))
 }
 
 /// Doubling shard sweep, always ending on the requested count (so

@@ -14,6 +14,6 @@ pub mod time;
 
 pub use engine::Engine;
 pub use faults::{BackendFate, FaultEvent, FaultInjector, FaultPlan, FaultWindow, FaultyBackend};
-pub use parallel::{run_sharded, run_sharded_resilient};
+pub use parallel::{run_fanout, FanoutOptions, FanoutReport};
 pub use resource::Resource;
 pub use time::{SimDuration, SimTime};

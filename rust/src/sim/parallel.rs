@@ -4,161 +4,198 @@
 //! time), but *replay* workloads — a fixed request stream partitioned by
 //! cache shard — are embarrassingly parallel: each worker touches exactly
 //! one shard of a [`crate::cache::ShardedCache`]. This module provides the
-//! one primitive that needs: run N workers on `std::thread::scope` and
-//! collect their results in worker order. No `unsafe`, no detached threads;
-//! the borrow checker proves the workers cannot outlive the borrowed state.
+//! one primitive that needs: [`run_fanout`] runs N workers on
+//! `std::thread::scope` and collects their results in worker order, with
+//! the orthogonal extras the replay drivers grew — a background task (the
+//! online-learning trainer loop), a polling monitor (lock-free stats
+//! readers), panic containment (chaos sweeps) — selected per call through
+//! [`FanoutOptions`] instead of four near-duplicate entry points. No
+//! `unsafe`, no detached threads; the borrow checker proves the workers
+//! cannot outlive the borrowed state.
+//!
+//! The removed entry points map onto options like this:
+//!
+//! | old entry point              | options |
+//! |------------------------------|---------|
+//! | `run_sharded`                | `FanoutOptions::new()` |
+//! | `run_sharded_resilient`      | `.resilient(true)` |
+//! | `run_sharded_with_background`| `.background(task, finish)` |
+//! | `run_sharded_with_monitor`   | `.monitor(task)` |
 
-/// Run `worker(0..n_workers)` concurrently on scoped threads and return the
-/// results in worker order. `n_workers == 1` runs inline (no thread spawn),
-/// which keeps the single-shard path identical to a plain loop.
+use crate::util::sync::atomic::{AtomicBool, Ordering};
+
+/// Closure type of the absent background task (concrete, so
+/// [`FanoutOptions::new`] needs no type annotations).
+pub type NoBackground = fn();
+/// Closure type of the absent background-finish hook.
+pub type NoFinish = fn();
+/// Closure type of the absent monitor.
+pub type NoMonitor = fn(&AtomicBool);
+
+/// What to run alongside the shard workers of a [`run_fanout`] call.
 ///
-/// Panics propagate: a panicking worker fails the whole call, like the
-/// sequential loop it replaces would.
-pub fn run_sharded<R, F>(n_workers: usize, worker: F) -> Vec<R>
-where
-    R: Send,
-    F: Fn(usize) -> R + Sync,
-{
-    assert!(n_workers > 0, "run_sharded with zero workers");
-    if n_workers == 1 {
-        return vec![worker(0)];
+/// Starts empty (plain fan-out) and grows by builder calls; `background`
+/// and `monitor` change the option's type parameters, which is why the
+/// absent defaults are concrete `fn` types.
+pub struct FanoutOptions<G, D, M> {
+    background: Option<(G, D)>,
+    monitor: Option<M>,
+    resilient: bool,
+}
+
+impl FanoutOptions<NoBackground, NoFinish, NoMonitor> {
+    /// Plain fan-out: no background task, no monitor, panics propagate.
+    pub fn new() -> Self {
+        FanoutOptions { background: None, monitor: None, resilient: false }
     }
-    std::thread::scope(|scope| {
-        let worker = &worker;
-        let handles: Vec<_> = (0..n_workers)
-            .map(|i| scope.spawn(move || worker(i)))
-            .collect();
-        handles
+}
+
+impl Default for FanoutOptions<NoBackground, NoFinish, NoMonitor> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<G, D, M> FanoutOptions<G, D, M> {
+    /// Run `task` on the same scope as the workers and keep its result.
+    ///
+    /// `finish` runs after every worker has joined and *before* `task` is
+    /// joined — the place to drop the channel sender whose disconnect
+    /// tells a consumer loop to drain and exit. Forgetting to close the
+    /// channel in `finish` deadlocks the join, exactly like the
+    /// equivalent hand-rolled scope would. The online-learning replay is
+    /// the motivating shape: shard workers replay the trace while the
+    /// task runs the trainer loop consuming the sample channel they feed.
+    pub fn background<G2, D2>(self, task: G2, finish: D2) -> FanoutOptions<G2, D2, M> {
+        FanoutOptions {
+            background: Some((task, finish)),
+            monitor: self.monitor,
+            resilient: self.resilient,
+        }
+    }
+
+    /// Run a polling monitor on the same scope as the workers and keep
+    /// its result.
+    ///
+    /// The monitor receives a `done` flag that flips to `true` (Release)
+    /// once every worker has joined; it is expected to loop — observing
+    /// shared state like lock-free cache stats — until the flag is set,
+    /// then return. The flag is set even when a worker panics, so the
+    /// monitor always terminates.
+    pub fn monitor<M2>(self, task: M2) -> FanoutOptions<G, D, M2> {
+        FanoutOptions {
+            background: self.background,
+            monitor: Some(task),
+            resilient: self.resilient,
+        }
+    }
+
+    /// Contain worker panics instead of propagating them: a panicked
+    /// worker's slot comes back as `None` in
+    /// [`FanoutReport::workers`] and the other shards' results survive —
+    /// the graceful-degradation mode for chaos runs and other best-effort
+    /// sweeps.
+    pub fn resilient(mut self, contained: bool) -> Self {
+        self.resilient = contained;
+        self
+    }
+}
+
+/// Everything a [`run_fanout`] call produced.
+#[derive(Debug)]
+pub struct FanoutReport<R, B, M> {
+    /// Per-worker results in worker order. `None` marks a panicked worker,
+    /// which can only happen under [`FanoutOptions::resilient`] — without
+    /// it the panic resumes on the caller instead.
+    pub workers: Vec<Option<R>>,
+    /// The background task's result, when one was configured.
+    pub background: Option<B>,
+    /// The monitor's result, when one was configured.
+    pub monitor: Option<M>,
+}
+
+impl<R, B, M> FanoutReport<R, B, M> {
+    /// Unwrap the per-worker results of a non-resilient run.
+    ///
+    /// Panics on a `None` slot — impossible unless the run was
+    /// [`FanoutOptions::resilient`], where the caller must inspect
+    /// [`FanoutReport::workers`] itself.
+    pub fn into_workers(self) -> Vec<R> {
+        self.workers
             .into_iter()
-            .map(|h| h.join().expect("shard worker panicked"))
+            .map(|r| r.expect("panicked worker slot in a resilient run"))
             .collect()
-    })
+    }
 }
 
-/// Run `worker(0..n_workers)` concurrently on scoped threads, **containing
-/// panics**: each worker's result comes back as `Some(R)`, or `None` if
-/// that worker panicked, instead of aborting the whole call. Partial
-/// per-shard results survive a single bad shard — the graceful-degradation
-/// variant of [`run_sharded`] for chaos runs and other best-effort sweeps.
+/// Run `worker(0..n_workers)` concurrently on scoped threads — plus
+/// whatever [`FanoutOptions`] selects — and return the results in worker
+/// order.
 ///
-/// Unlike [`run_sharded`], a single worker still runs on its own scoped
-/// thread: a panic must be caught at the thread boundary (no
-/// `catch_unwind`, no `unsafe`), so the inline fast path is not available.
-pub fn run_sharded_resilient<R, F>(n_workers: usize, worker: F) -> Vec<Option<R>>
-where
-    R: Send,
-    F: Fn(usize) -> R + Sync,
-{
-    assert!(n_workers > 0, "run_sharded_resilient with zero workers");
-    std::thread::scope(|scope| {
-        let worker = &worker;
-        let handles: Vec<_> = (0..n_workers)
-            .map(|i| scope.spawn(move || worker(i)))
-            .collect();
-        handles.into_iter().map(|h| h.join().ok()).collect()
-    })
-}
-
-/// Run `worker(0..n_workers)` concurrently *plus* one background task on
-/// the same scope, and return `(worker results, background result)`.
-///
-/// The online-learning replay is the motivating shape: shard workers
-/// replay the trace while the background task runs the trainer loop,
-/// consuming the sample channel the workers feed. `finish` runs after
-/// every worker has joined and *before* the background task is joined —
-/// the place to drop the channel sender whose disconnect tells the
-/// background loop to drain and exit. Forgetting to close the channel in
-/// `finish` deadlocks the join, exactly like the equivalent hand-rolled
-/// scope would.
-///
-/// Panics propagate from workers and background task alike.
-pub fn run_sharded_with_background<R, B, F, G, D>(
+/// A plain single-worker call (no background, no monitor, no resilience)
+/// runs inline with no thread spawn, which keeps the single-shard path
+/// identical to a plain loop. Worker panics propagate (resuming the
+/// original panic payload) unless [`FanoutOptions::resilient`] contains
+/// them; background-task and monitor panics always propagate, after every
+/// worker has joined.
+pub fn run_fanout<R, B, M, F, G, D, MO>(
     n_workers: usize,
     worker: F,
-    background: G,
-    finish: D,
-) -> (Vec<R>, B)
+    opts: FanoutOptions<G, D, MO>,
+) -> FanoutReport<R, B, M>
 where
     R: Send,
     B: Send,
+    M: Send,
     F: Fn(usize) -> R + Sync,
     G: FnOnce() -> B + Send,
     D: FnOnce(),
+    MO: FnOnce(&AtomicBool) -> M + Send,
 {
-    assert!(n_workers > 0, "run_sharded_with_background with zero workers");
-    std::thread::scope(|scope| {
-        let bg = scope.spawn(background);
-        let worker = &worker;
-        let handles: Vec<_> = (0..n_workers)
-            .map(|i| scope.spawn(move || worker(i)))
-            .collect();
-        // Join every worker BEFORE propagating any panic: `finish` must
-        // run even on worker failure, or the background task would never
-        // see its shutdown signal and the scope would deadlock.
-        let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
-        finish();
-        let b = bg.join().expect("background task panicked");
-        let results: Vec<R> = joined
-            .into_iter()
-            .map(|r| match r {
-                Ok(v) => v,
-                Err(p) => std::panic::resume_unwind(p),
-            })
-            .collect();
-        (results, b)
-    })
-}
-
-/// Run `worker(0..n_workers)` concurrently *plus* one polling monitor on
-/// the same scope, and return `(worker results, monitor result)`.
-///
-/// The monitor receives a `done` flag that flips to `true` (Release) once
-/// every worker has joined; it is expected to loop — observing shared
-/// state like lock-free cache stats — until the flag is set, then return.
-/// The reader-contention replay is the motivating shape: shard workers
-/// hammer a [`crate::cache::ShardedCache`] while the monitor loops
-/// `stats()` / `used()`, which must never serialize the workers.
-///
-/// Panics propagate from workers and monitor alike; the flag is set even
-/// when a worker panics, so the monitor always terminates.
-pub fn run_sharded_with_monitor<R, M, F, G>(
-    n_workers: usize,
-    worker: F,
-    monitor: G,
-) -> (Vec<R>, M)
-where
-    R: Send,
-    M: Send,
-    F: Fn(usize) -> R + Sync,
-    G: FnOnce(&crate::util::sync::atomic::AtomicBool) -> M + Send,
-{
-    use crate::util::sync::atomic::{AtomicBool, Ordering};
-
-    assert!(n_workers > 0, "run_sharded_with_monitor with zero workers");
+    assert!(n_workers > 0, "run_fanout with zero workers");
+    let FanoutOptions { background, monitor, resilient } = opts;
+    if n_workers == 1 && background.is_none() && monitor.is_none() && !resilient {
+        // Inline fast path. Resilient runs are excluded: a panic must be
+        // caught at a thread boundary (no `catch_unwind`, no `unsafe`).
+        return FanoutReport { workers: vec![Some(worker(0))], background: None, monitor: None };
+    }
     let done = AtomicBool::new(false);
     std::thread::scope(|scope| {
         let done = &done;
-        let mon = scope.spawn(move || monitor(done));
+        let (bg, finish) = match background {
+            Some((task, finish)) => (Some(scope.spawn(task)), Some(finish)),
+            None => (None, None),
+        };
+        let mon = monitor.map(|task| scope.spawn(move || task(done)));
         let worker = &worker;
         let handles: Vec<_> = (0..n_workers)
             .map(|i| scope.spawn(move || worker(i)))
             .collect();
-        // Join every worker BEFORE propagating any panic: the monitor must
-        // see its stop signal even on worker failure, or the scope would
-        // never finish joining it.
+        // Join every worker BEFORE propagating any panic: the shutdown
+        // hooks below must run even on worker failure, or a background
+        // task / monitor would never see its stop signal and the scope
+        // would deadlock.
         let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+        if let Some(finish) = finish {
+            finish();
+        }
         // Release: pairs with the monitor's Acquire poll so everything the
         // workers wrote happens-before the monitor's final observation.
         done.store(true, Ordering::Release);
-        let m = mon.join().expect("monitor panicked");
-        let results: Vec<R> = joined
-            .into_iter()
-            .map(|r| match r {
-                Ok(v) => v,
-                Err(p) => std::panic::resume_unwind(p),
-            })
-            .collect();
-        (results, m)
+        let background = bg.map(|h| h.join().expect("background task panicked"));
+        let monitor = mon.map(|h| h.join().expect("monitor panicked"));
+        let workers: Vec<Option<R>> = if resilient {
+            joined.into_iter().map(|r| r.ok()).collect()
+        } else {
+            joined
+                .into_iter()
+                .map(|r| match r {
+                    Ok(v) => Some(v),
+                    Err(p) => std::panic::resume_unwind(p),
+                })
+                .collect()
+        };
+        FanoutReport { workers, background, monitor }
     })
 }
 
@@ -167,6 +204,41 @@ mod tests {
     use super::*;
     use crate::util::sync::atomic::{AtomicBool, AtomicU64, Ordering};
     use crate::util::sync::hint;
+
+    // One-line parity wrappers re-expressing the four removed entry points
+    // over `run_fanout` — the legacy tests below run against these, pinning
+    // the collapsed API to the old contracts.
+    fn run_sharded<R: Send>(n: usize, worker: impl Fn(usize) -> R + Sync) -> Vec<R> {
+        run_fanout(n, worker, FanoutOptions::new()).into_workers()
+    }
+
+    fn run_sharded_resilient<R: Send>(
+        n: usize,
+        worker: impl Fn(usize) -> R + Sync,
+    ) -> Vec<Option<R>> {
+        run_fanout(n, worker, FanoutOptions::new().resilient(true)).workers
+    }
+
+    fn run_sharded_with_background<R: Send, B: Send>(
+        n: usize,
+        worker: impl Fn(usize) -> R + Sync,
+        background: impl FnOnce() -> B + Send,
+        finish: impl FnOnce(),
+    ) -> (Vec<R>, B) {
+        let mut report = run_fanout(n, worker, FanoutOptions::new().background(background, finish));
+        let b = report.background.take().expect("background configured");
+        (report.into_workers(), b)
+    }
+
+    fn run_sharded_with_monitor<R: Send, M: Send>(
+        n: usize,
+        worker: impl Fn(usize) -> R + Sync,
+        monitor: impl FnOnce(&AtomicBool) -> M + Send,
+    ) -> (Vec<R>, M) {
+        let mut report = run_fanout(n, worker, FanoutOptions::new().monitor(monitor));
+        let m = report.monitor.take().expect("monitor configured");
+        (report.into_workers(), m)
+    }
 
     #[test]
     fn results_come_back_in_worker_order() {
@@ -236,8 +308,8 @@ mod tests {
             },
             |done: &AtomicBool| {
                 let mut polls = 0u64;
-                // Acquire: pairs with run_sharded_with_monitor's Release
-                // store, so worker writes precede the final poll.
+                // Acquire: pairs with run_fanout's Release store, so
+                // worker writes precede the final poll.
                 while !done.load(Ordering::Acquire) {
                     let p = progress.load(Ordering::Relaxed);
                     assert!(p <= 4000);
@@ -293,13 +365,51 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "shard worker panicked")]
-    fn worker_panic_propagates() {
+    #[should_panic(expected = "boom")]
+    fn worker_panic_propagates_with_its_original_payload() {
         run_sharded(2, |i| {
             if i == 1 {
                 panic!("boom");
             }
             i
         });
+    }
+
+    #[test]
+    fn background_and_monitor_compose_on_one_scope() {
+        // The collapse's new capability: both extras at once. The monitor
+        // watches progress while the background task consumes the channel.
+        let (tx, rx) = std::sync::mpsc::sync_channel::<u64>(16);
+        let master = std::sync::Mutex::new(Some(tx));
+        let progress = AtomicU64::new(0);
+        let report = run_fanout(
+            2,
+            |w| {
+                let tx = master.lock().unwrap().as_ref().unwrap().clone();
+                for k in 0..5u64 {
+                    tx.send(k).unwrap();
+                    progress.fetch_add(1, Ordering::Relaxed);
+                }
+                w
+            },
+            FanoutOptions::new()
+                .background(
+                    move || rx.iter().sum::<u64>(),
+                    || {
+                        master.lock().unwrap().take();
+                    },
+                )
+                .monitor(|done: &AtomicBool| {
+                    let mut polls = 0u64;
+                    while !done.load(Ordering::Acquire) {
+                        assert!(progress.load(Ordering::Relaxed) <= 10);
+                        polls += 1;
+                    }
+                    polls
+                }),
+        );
+        assert_eq!(report.workers, vec![Some(0), Some(1)]);
+        assert_eq!(report.background, Some(20), "both workers sent 0..5");
+        assert!(report.monitor.unwrap() > 0);
     }
 }

@@ -75,6 +75,9 @@ const THREADS: Rule = Rule {
         // protocols exhaustively.
         "src/cache/shard_stats.rs",
         "src/obs/histogram.rs",
+        // The read-view membership table: same pattern — a real-thread
+        // churn/rebuild stress test next to the loom model (protocol 5).
+        "src/cache/read_path.rs",
     ],
 };
 
@@ -94,8 +97,6 @@ const WALL_CLOCK: Rule = Rule {
         // Replay wall time + throughput reporting (Volatile class).
         "src/experiments/sharded_replay.rs",
         "src/experiments/online_sharded.rs",
-        // The CLI's elapsed-time banner.
-        "src/main.rs",
         // The bench harness: timing is its whole job; bench output is
         // never part of the deterministic export.
         "src/bench_support/mod.rs",
@@ -418,6 +419,18 @@ fn allow_list_suppresses_only_the_vetted_file() {
     assert!(!scan_planted("allowed_a", "src/obs/rogue.rs", content, &ATOMICS).is_empty());
     // …and clean at the facade path.
     assert!(scan_planted("allowed_b", "src/util/sync.rs", content, &ATOMICS).is_empty());
+}
+
+#[test]
+fn read_path_thread_exemption_is_scoped_to_that_file() {
+    // The read-view stress test's `std::thread::scope` is vetted at its
+    // own path only — a sibling module cannot ride on the entry.
+    let content = "fn stress() { std::thread::scope(|_| {}); }\n";
+    assert!(scan_planted("readpath_a", "src/cache/read_path.rs", content, &THREADS).is_empty());
+    assert_eq!(
+        scan_planted("readpath_b", "src/cache/read_path2.rs", content, &THREADS),
+        ["src/cache/read_path2.rs:1 `std::thread`"]
+    );
 }
 
 // ---------------------------------------------------------------------

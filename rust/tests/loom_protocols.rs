@@ -19,6 +19,12 @@
 //! 4. [`BatcherProbe`]: cold-query counters shared by concurrent shard
 //!    batchers conserve `cold == flushed + dropped` at quiescence with
 //!    `deferred <= cold`.
+//! 5. [`ReadView`] (the lock-free membership table behind the batched
+//!    recency hit path): probes racing the single lock-holding writer's
+//!    insert / remove / rebuild never observe a torn table — a block
+//!    resident throughout is never reported `Miss`, a block never
+//!    inserted is never reported `Hit`, and the seqlock retry makes
+//!    every probe linearize against rebuilds.
 //!
 //! Run with:
 //! `RUSTFLAGS="--cfg loom" LOOM_MAX_PREEMPTIONS=3 cargo test --release --test loom_protocols`
@@ -28,6 +34,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use h_svm_lru::cache::read_path::{Probe, ReadView};
 use h_svm_lru::cache::shard_stats::AtomicShardStats;
 use h_svm_lru::coordinator::batcher::{BatcherConfig, BatcherProbe, ShardBatcher};
 use h_svm_lru::coordinator::online::SnapshotCell;
@@ -292,5 +299,47 @@ fn probe_counters_conserve_cold_queries() {
         );
         assert_eq!(probe.flushes(), 2);
         assert_eq!(probe.flushes_by_fill(), 2);
+    });
+}
+
+/// Protocol 5 — the read-view seqlock. One writer (standing in for the
+/// shard-lock holder: mutators are single-writer by construction) inserts
+/// a block, rebuilds the table and removes the block again, while the
+/// main thread probes concurrently. In every interleaving:
+///
+/// * the pinned block — resident before the writer starts and kept by the
+///   rebuild — must never probe `Miss` (a racy publish may conservatively
+///   demote to the locked path, but the view is never *wrong* about it);
+/// * a block that is never inserted must never probe `Hit`;
+/// * the churned block may probe either way mid-flight (both linearize),
+///   but the final state after the join is exact.
+#[test]
+fn read_view_probes_survive_insert_remove_and_rebuild() {
+    const PINNED: BlockId = BlockId(1_000);
+    const CHURNED: BlockId = BlockId(2);
+    const ABSENT: BlockId = BlockId(3);
+    loom::model(|| {
+        let view = Arc::new(ReadView::with_slots(16));
+        view.insert(PINNED); // happens-before the writer via spawn
+        let writer = {
+            let view = Arc::clone(&view);
+            loom::thread::spawn(move || {
+                view.insert(CHURNED);
+                // The only multi-slot write: seqlock-bracketed compaction.
+                view.rebuild([PINNED, CHURNED].into_iter());
+                view.remove(CHURNED);
+            })
+        };
+
+        // Concurrent probes: retried across rebuilds by the seqlock.
+        assert_ne!(view.probe(PINNED), Probe::Miss, "pinned block reported missing");
+        assert_ne!(view.probe(ABSENT), Probe::Hit, "phantom block reported resident");
+        let _ = view.probe(CHURNED); // any verdict linearizes; must not hang
+
+        writer.join().unwrap();
+        assert!(!view.is_saturated(), "tiny population must never saturate");
+        assert_eq!(view.probe(PINNED), Probe::Hit);
+        assert_eq!(view.probe(CHURNED), Probe::Miss);
+        assert_eq!(view.probe(ABSENT), Probe::Miss);
     });
 }

@@ -5,10 +5,10 @@
 //! every (policy, admission) pairing preserves the cache invariants.
 
 use h_svm_lru::cache::admission::{
-    make_admission, Doorkeeper, FrequencySketch, GhostProbation, ADMISSION_NAMES,
+    Doorkeeper, FrequencySketch, GhostProbation, ADMISSION_NAMES,
 };
 use h_svm_lru::cache::registry::{make_policy, POLICY_NAMES};
-use h_svm_lru::cache::{AccessContext, AdmissionPolicy, BlockCache, ShardedCache};
+use h_svm_lru::cache::{AccessContext, AdmissionPolicy, BlockCache, CacheBuilder};
 use h_svm_lru::hdfs::BlockId;
 use h_svm_lru::sim::SimTime;
 use h_svm_lru::testkit::{forall, CacheOpsGen, Config, Gen, VecU64Gen};
@@ -113,11 +113,12 @@ fn always_admission_is_bit_identical_for_every_policy() {
             &gen,
             |(ops, cap)| {
                 let mut bare = BlockCache::new(make_policy(policy).unwrap(), *cap);
-                let mut gated = BlockCache::with_admission(
-                    make_policy(policy).unwrap(),
-                    make_admission("always").unwrap(),
-                    *cap,
-                );
+                let mut gated = CacheBuilder::new()
+                    .policy(policy)
+                    .admission("always")
+                    .capacity(*cap)
+                    .build_block_cache()
+                    .unwrap();
                 for (t, (key, reuse)) in ops.iter().enumerate() {
                     let c = ctx(t as u64, *reuse);
                     let a = bare.access_or_insert(BlockId(*key), &c);
@@ -191,9 +192,13 @@ fn every_policy_admission_pairing_preserves_invariants() {
                 },
                 &gen,
                 |(ops, cap)| {
-                    let front =
-                        ShardedCache::from_registry_with_admission(policy, admission, 2, *cap)
-                            .unwrap();
+                    let front = CacheBuilder::new()
+                        .policy(policy)
+                        .admission(admission)
+                        .shards(2)
+                        .capacity(*cap)
+                        .build()
+                        .unwrap();
                     for (t, (key, reuse)) in ops.iter().enumerate() {
                         front.access_or_insert(BlockId(*key), &ctx(t as u64, *reuse));
                         if front.used() > front.capacity() {

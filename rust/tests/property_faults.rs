@@ -10,6 +10,7 @@ use h_svm_lru::coordinator::{
     BatcherConfig, BatcherProbe, BreakerConfig, BreakerState, ShardBatcher, TrainerConfig,
 };
 use h_svm_lru::experiments::chaos::{breaker_for_trace, default_serving_plan, run_serving_chaos};
+use h_svm_lru::cache::RecencyConfig;
 use h_svm_lru::experiments::online_sharded::{run_online, TrainerMode};
 use h_svm_lru::hdfs::BlockId;
 use h_svm_lru::obs::{MetricsRegistry, RunObservations, DEFAULT_WINDOW_US};
@@ -244,6 +245,7 @@ fn all_clear_plan_with_breaker_off_is_bit_identical_to_fault_free() {
                 KernelKind::Rbf,
                 TrainerConfig::default(),
                 BatcherConfig::default(),
+                RecencyConfig::default(),
             )
             .expect("fault-free frozen replay");
             let injector = FaultInjector::new(FaultPlan::all_clear(seed));
@@ -258,6 +260,7 @@ fn all_clear_plan_with_breaker_off_is_bit_identical_to_fault_free() {
                 &injector,
                 &registry,
                 DEFAULT_WINDOW_US,
+                RecencyConfig::default(),
             )
             .expect("all-clear chaos replay");
             assert_eq!(
@@ -293,6 +296,7 @@ fn same_seed_chaos_runs_export_byte_identical_jsonl() {
                 &injector,
                 &registry,
                 DEFAULT_WINDOW_US,
+                RecencyConfig::default(),
             )
             .expect("chaos replay");
             let obs = RunObservations {

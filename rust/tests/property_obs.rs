@@ -4,7 +4,7 @@
 //! same-seed observed runs export byte-identical metrics JSONL.
 
 use h_svm_lru::cache::EvictCause;
-use h_svm_lru::experiments::sharded_replay::{run_observed, ShardedReplayReport};
+use h_svm_lru::experiments::sharded_replay::{replay, ReplayOptions, ShardedReplayReport};
 use h_svm_lru::hdfs::BlockId;
 use h_svm_lru::obs::{
     merge_audits, AuditEntry, EvictionAudit, LogHistogram, MetricsRegistry, ObsConfig,
@@ -66,19 +66,16 @@ fn observed(
 ) -> (MetricsRegistry, ShardedReplayReport, RunObservations) {
     let trace = fig3_trace(64 * MB, 11);
     let registry = MetricsRegistry::new();
-    let (report, obs) = run_observed(
+    let out = replay(
         "h-svm-lru",
-        "always",
         shards,
         8 * 64 * MB,
         &trace,
-        KernelKind::Rbf,
-        64,
-        &registry,
-        cfg,
+        &ReplayOptions::new().classify(KernelKind::Rbf, 64).observe(&registry, cfg),
     )
     .expect("observed replay");
-    (registry, report, obs)
+    let obs = out.observations.expect("observe was configured");
+    (registry, out.report, obs)
 }
 
 /// The acceptance criterion: two same-seed observed runs must export

@@ -14,12 +14,12 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier};
 
-use h_svm_lru::cache::sharded::{shard_of, ShardStats, ShardedCache};
-use h_svm_lru::cache::{AccessContext, CacheAffinity};
+use h_svm_lru::cache::sharded::{shard_of, ShardStats};
+use h_svm_lru::cache::{AccessContext, CacheAffinity, CacheBuilder, RecencyConfig};
 use h_svm_lru::coordinator::batcher::BatcherConfig;
 use h_svm_lru::coordinator::online::{SnapshotCell, SnapshotReader, TrainerConfig};
 use h_svm_lru::experiments::online_sharded::{run_online, TrainerMode as Mode};
-use h_svm_lru::experiments::sharded_replay::{classify_trace, run_with_classes};
+use h_svm_lru::experiments::sharded_replay::{classify_trace, replay, ReplayOptions};
 use h_svm_lru::hdfs::{BlockId, BlockKind};
 use h_svm_lru::sim::SimTime;
 use h_svm_lru::svm::features::N_FEATURES;
@@ -126,6 +126,7 @@ fn online_without_publishes_matches_frozen_and_classify_once() {
             KernelKind::Rbf,
             TrainerConfig::default(),
             BatcherConfig::default(),
+            RecencyConfig::default(),
         )
         .unwrap();
         assert_eq!(online.trainer.publishes, 0, "single class must not train");
@@ -146,13 +147,22 @@ fn online_without_publishes_matches_frozen_and_classify_once() {
             KernelKind::Rbf,
             TrainerConfig::default(),
             BatcherConfig::default(),
+            RecencyConfig::default(),
         )
         .unwrap();
         assert_eq!(frozen.trainer.final_version, 0, "nothing to pretrain on");
 
         let classes = classify_trace(&trace, KernelKind::Rbf, 64).unwrap();
         assert!(classes.iter().all(|c| c.is_none()));
-        let baseline = run_with_classes("h-svm-lru", shards, capacity, &trace, &classes).unwrap();
+        let baseline = replay(
+            "h-svm-lru",
+            shards,
+            capacity,
+            &trace,
+            &ReplayOptions::new().classes(&classes),
+        )
+        .unwrap()
+        .report;
 
         assert_eq!(online.stats, baseline.stats, "{shards}-shard online parity");
         assert_eq!(online.per_shard, baseline.per_shard);
@@ -177,7 +187,13 @@ fn insert_path_counts_rejections_as_misses_and_merges_exactly() {
     // miss path (`ShardedCache::insert`) concurrently and check the
     // accounting end to end.
     let n = 4usize;
-    let cache = ShardedCache::from_registry_with_admission("lru", "ghost", n, 64).unwrap();
+    let cache = CacheBuilder::new()
+        .policy("lru")
+        .admission("ghost")
+        .shards(n)
+        .capacity(64)
+        .build()
+        .unwrap();
     let blocks: Vec<BlockId> = (0..120u64).map(BlockId).collect();
     let ctx_of = |t: u64| AccessContext::simple(SimTime(t), 1);
 

@@ -17,7 +17,7 @@ use std::collections::{BTreeMap, HashMap, VecDeque};
 use h_svm_lru::cache::admission::{AdmissionPolicy, GhostProbation};
 use h_svm_lru::cache::order_list::{OrderHandle, OrderList};
 use h_svm_lru::cache::registry::make_policy;
-use h_svm_lru::cache::{AccessContext, BlockCache, CachePolicy};
+use h_svm_lru::cache::{AccessContext, BlockCache, CacheBuilder, CachePolicy};
 use h_svm_lru::hdfs::BlockId;
 use h_svm_lru::sim::SimTime;
 use h_svm_lru::util::fasthash::IdHashMap;
@@ -591,16 +591,20 @@ fn ghost_admission_matches_stamped_reference() {
     for seed in 0..6u64 {
         let capacity = 32;
         assert_trace_parity(
-            BlockCache::with_admission(
-                registry_policy("lru"),
-                Box::new(GhostProbation::new(capacity)),
-                24,
-            ),
-            BlockCache::with_admission(
-                Box::<RefLru>::default(),
-                Box::new(RefGhostProbation { ghost: RefGhostLru::new(capacity) }),
-                24,
-            ),
+            CacheBuilder::new()
+                .policy("lru")
+                .admission_with(move || Box::new(GhostProbation::new(capacity)))
+                .capacity(24)
+                .build_block_cache()
+                .expect("gated lru"),
+            CacheBuilder::new()
+                .policy_with(|| Box::<RefLru>::default())
+                .admission_with(move || {
+                    Box::new(RefGhostProbation { ghost: RefGhostLru::new(capacity) })
+                })
+                .capacity(24)
+                .build_block_cache()
+                .expect("gated reference lru"),
             seed,
         );
     }

@@ -1,12 +1,15 @@
 //! Property tests for the sharded cache front: shard-count-1 parity with
-//! the bare wrapped policy, multi-shard capacity/accounting invariants, and
-//! sequential-vs-parallel replay equivalence.
+//! the bare wrapped policy, multi-shard capacity/accounting invariants,
+//! sequential-vs-parallel replay equivalence, and the designated parity
+//! pins for the `#[deprecated]` constructor shims (`ShardedCache::{new,
+//! with_admission, from_registry, from_registry_with_admission}`,
+//! `BlockCache::with_admission`) against [`CacheBuilder`].
 
 use h_svm_lru::cache::registry::{make_policy, POLICY_NAMES};
 use h_svm_lru::cache::sharded::{shard_of, ShardStats, ShardedCache};
-use h_svm_lru::cache::{AccessContext, BlockCache};
+use h_svm_lru::cache::{AccessContext, BlockCache, CacheBuilder};
 use h_svm_lru::hdfs::BlockId;
-use h_svm_lru::sim::parallel::{run_sharded, run_sharded_with_monitor};
+use h_svm_lru::sim::parallel::{run_fanout, FanoutOptions};
 use h_svm_lru::sim::SimTime;
 use h_svm_lru::testkit::{forall, CacheOpsGen, Config};
 
@@ -15,8 +18,12 @@ fn ctx(t: u64, reuse: bool) -> AccessContext {
 }
 
 fn sharded(policy: &str, shards: usize, capacity: u64) -> ShardedCache {
-    ShardedCache::from_registry(policy, shards, capacity)
-        .unwrap_or_else(|| panic!("{policy} missing from registry"))
+    CacheBuilder::new()
+        .policy(policy)
+        .shards(shards)
+        .capacity(capacity)
+        .build()
+        .unwrap_or_else(|e| panic!("{policy} cache: {e}"))
 }
 
 /// Shards = 1 must behave identically to the bare wrapped policy: same hit
@@ -133,13 +140,18 @@ fn parallel_shard_replay_matches_sequential_replay() {
                 for (i, (key, _)) in ops.iter().enumerate() {
                     parts[shard_of(BlockId(*key), shards)].push(i);
                 }
-                let per_shard: Vec<ShardStats> = run_sharded(shards, |w| {
-                    for &i in &parts[w] {
-                        let (key, reuse) = ops[i];
-                        parallel.access_or_insert(BlockId(key), &ctx(i as u64, reuse));
-                    }
-                    parallel.stats_of(w)
-                });
+                let per_shard: Vec<ShardStats> = run_fanout(
+                    shards,
+                    |w| {
+                        for &i in &parts[w] {
+                            let (key, reuse) = ops[i];
+                            parallel.access_or_insert(BlockId(key), &ctx(i as u64, reuse));
+                        }
+                        parallel.stats_of(w)
+                    },
+                    FanoutOptions::new(),
+                )
+                .into_workers();
 
                 let mut merged = ShardStats::default();
                 for s in &per_shard {
@@ -197,7 +209,7 @@ fn concurrent_stats_readers_stay_consistent_with_writers() {
         parts[shard_of(BlockId(*key), shards)].push(i);
     }
     let concurrent_ref = &concurrent;
-    let (per_shard, reader_stats) = run_sharded_with_monitor(
+    let report = run_fanout(
         shards,
         |w| {
             for &i in &parts[w] {
@@ -206,7 +218,7 @@ fn concurrent_stats_readers_stay_consistent_with_writers() {
             }
             concurrent_ref.stats_of(w)
         },
-        |done: &std::sync::atomic::AtomicBool| {
+        FanoutOptions::new().monitor(|done: &std::sync::atomic::AtomicBool| {
             std::thread::scope(|scope| {
                 let readers: Vec<_> = (0..3)
                     .map(|_| {
@@ -258,8 +270,11 @@ fn concurrent_stats_readers_stay_consistent_with_writers() {
                     .map(|h| h.join().expect("stats reader panicked"))
                     .sum::<u64>()
             })
-        },
+        }),
     );
+    let reader_stats = report.monitor.expect("monitor configured");
+    let per_shard: Vec<ShardStats> =
+        report.workers.into_iter().map(|r| r.expect("worker panicked")).collect();
     assert!(reader_stats > 0, "readers must have snapshotted mid-replay");
 
     let mut merged = ShardStats::default();
@@ -275,6 +290,87 @@ fn concurrent_stats_readers_stay_consistent_with_writers() {
     );
     assert_eq!(concurrent.cached_blocks(), sequential.cached_blocks());
     assert_eq!(concurrent.used(), sequential.used());
+}
+
+/// The one-PR deprecation contract: every `#[deprecated]` constructor
+/// shim must stay bit-identical to its `CacheBuilder` replacement until
+/// the shims are dropped. This file is the designated home of those pins;
+/// everywhere else `#[allow(deprecated)]` is a lint violation.
+#[test]
+#[allow(deprecated)]
+fn deprecated_sharded_constructor_shims_match_the_builder() {
+    use h_svm_lru::cache::admission::make_admission;
+
+    let ops: Vec<(u64, bool)> =
+        (0..600u64).map(|t| ((t * 7919 + t % 13) % 48, t % 2 == 0)).collect();
+    let drive = |cache: &ShardedCache| {
+        for (t, (key, reuse)) in ops.iter().enumerate() {
+            cache.access_or_insert(BlockId(*key), &ctx(t as u64, *reuse));
+        }
+        (cache.stats(), cache.cached_blocks(), cache.used())
+    };
+
+    let old = ShardedCache::from_registry("h-svm-lru", 4, 16).expect("registry policy");
+    assert_eq!(drive(&old), drive(&sharded("h-svm-lru", 4, 16)), "from_registry");
+
+    let old = ShardedCache::from_registry_with_admission("lru", "tinylfu", 2, 12)
+        .expect("registry names");
+    let new = CacheBuilder::new()
+        .policy("lru")
+        .admission("tinylfu")
+        .shards(2)
+        .capacity(12)
+        .build()
+        .unwrap();
+    assert_eq!(drive(&old), drive(&new), "from_registry_with_admission");
+
+    let policies = || (0..3).map(|_| make_policy("lru").unwrap()).collect::<Vec<_>>();
+    let old = ShardedCache::new(policies(), 9);
+    let new = CacheBuilder::new()
+        .policy_with(|| make_policy("lru").unwrap())
+        .shards(3)
+        .capacity(9)
+        .build()
+        .unwrap();
+    assert_eq!(drive(&old), drive(&new), "ShardedCache::new");
+
+    let admissions = (0..3).map(|_| make_admission("ghost").unwrap()).collect::<Vec<_>>();
+    let old = ShardedCache::with_admission(policies(), admissions, 9);
+    let new = CacheBuilder::new()
+        .policy_with(|| make_policy("lru").unwrap())
+        .admission_with(|| make_admission("ghost").unwrap())
+        .shards(3)
+        .capacity(9)
+        .build()
+        .unwrap();
+    assert_eq!(drive(&old), drive(&new), "ShardedCache::with_admission");
+}
+
+/// Same contract for the single-shard front: the deprecated
+/// `BlockCache::with_admission` must match `build_block_cache`.
+#[test]
+#[allow(deprecated)]
+fn deprecated_block_cache_shim_matches_the_builder() {
+    use h_svm_lru::cache::admission::make_admission;
+
+    let mut old = BlockCache::with_admission(
+        make_policy("lru").unwrap(),
+        make_admission("tinylfu").unwrap(),
+        8,
+    );
+    let mut new = CacheBuilder::new()
+        .policy("lru")
+        .admission("tinylfu")
+        .capacity(8)
+        .build_block_cache()
+        .unwrap();
+    for t in 0..600u64 {
+        let key = BlockId((t * 7919 + t % 13) % 48);
+        let c = ctx(t, t % 2 == 0);
+        assert_eq!(old.access_or_insert(key, &c), new.access_or_insert(key, &c));
+    }
+    assert_eq!(old.cached_blocks(), new.cached_blocks());
+    assert_eq!(old.used(), new.used());
 }
 
 /// The shard router: total (every block routed), stable, in range, and
